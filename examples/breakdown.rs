@@ -1,0 +1,42 @@
+//! Regenerate Tables 1 & 3: forward-step component breakdowns for DPMoE
+//! (all-to-all dominated) and PPMoE (all-reduce only), simulated with the
+//! paper's hardware constants.
+//!
+//! ```sh
+//! cargo run --release --example breakdown
+//! ```
+
+use ppmoe::coordinator::tables;
+use ppmoe::sim::Component;
+
+fn main() -> anyhow::Result<()> {
+    println!("Table 1 — DPMoE forward breakdown (paper: a2a 65.5%, MoE 82.6%)\n");
+    print!("{}", tables::table1_markdown()?);
+
+    let bd1 = tables::table1_breakdown()?;
+    let a2a = bd1.get(Component::FirstA2A) + bd1.get(Component::SecondA2A);
+    println!(
+        "\n  a2a share: {:.1}% (paper 65.5%) | MoE share: {:.1}% (paper 82.6%)",
+        a2a / bd1.total() * 100.0,
+        bd1.moe_total() / bd1.total() * 100.0
+    );
+
+    println!("\nTable 3 — PPMoE forward breakdown (paper: MoE 38.2%, MoE AR 20.7%)\n");
+    print!("{}", tables::table3_markdown()?);
+
+    let bd3 = tables::table3_breakdown()?;
+    let moe_ar = bd3.get(Component::MoeAllReduce);
+    let ffn_ar = bd3.get(Component::FfnAllReduce);
+    println!(
+        "\n  MoE share: {:.1}% (paper 38.2%) | MoE AR: {:.1}% (paper 20.7%)",
+        bd3.moe_total() / bd3.total() * 100.0,
+        moe_ar / bd3.total() * 100.0
+    );
+    println!(
+        "  §3.3.4 check — MoE AR ≈ FFN AR: {:.3} ms vs {:.3} ms ({:+.1}%)",
+        moe_ar * 1e3,
+        ffn_ar * 1e3,
+        (moe_ar / ffn_ar - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: load an AOT artifact, run one forward pass, print the result.
+//!
+//! ```sh
+//! make artifacts && cargo run --example quickstart
+//! ```
+//!
+//! This is the smallest end-to-end slice of the stack: python lowered the
+//! PPMoE transformer stage (with its Pallas grouped-expert kernel inside)
+//! to HLO text at build time; here Rust loads it, compiles it on the PJRT
+//! CPU client, and executes it — no Python anywhere on this path.
+
+use ppmoe::runtime::{Runtime, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let mut rt = Runtime::open(std::path::Path::new(&dir))?;
+    let m = rt.manifest.model.clone();
+    println!(
+        "loaded '{}' — {} layers, hidden {}, {} experts, {} pipeline stages",
+        m.config_name, m.layers, m.hidden, m.experts, m.stages
+    );
+
+    // compile stage 0 and run one microbatch of token ids
+    let exe = rt.load("stage0_fwd")?;
+    let mut inputs = rt.load_stage_params(0)?;
+    let tokens: Vec<i32> = (0..m.micro_batch * m.seq)
+        .map(|i| (i % m.vocab) as i32)
+        .collect();
+    inputs.push(Tensor::i32(tokens, vec![m.micro_batch, m.seq]));
+
+    let t0 = std::time::Instant::now();
+    let out = exe.run(&inputs)?;
+    let dt = t0.elapsed();
+
+    let act = &out[0];
+    let aux = out[1].item()?;
+    let mean: f32 = act.as_f32()?.iter().sum::<f32>() / act.numel() as f32;
+    println!(
+        "stage0 forward: activations {:?}, mean {:.4}, aux balance loss {:.4}",
+        act.shape, mean, aux
+    );
+    println!(
+        "executed in {:.2} ms ({} tokens)",
+        dt.as_secs_f64() * 1e3,
+        m.micro_batch * m.seq
+    );
+    println!("quickstart OK");
+    Ok(())
+}

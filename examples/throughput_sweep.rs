@@ -1,0 +1,39 @@
+//! Regenerate Table 2: training throughput for Dense / DPMoE / PPMoE under
+//! all 13 parallel layouts of the paper, via the cluster simulator with the
+//! paper's V100/NVLink/IB constants.
+//!
+//! ```sh
+//! cargo run --release --example throughput_sweep
+//! ```
+
+use ppmoe::coordinator::tables;
+
+fn main() -> anyhow::Result<()> {
+    println!("Table 2 — training throughput (simulated V100 constants)");
+    println!("paper reference: PPMoE 81.4% (small) / 90.7% (large) of the");
+    println!("slowest dense baseline; DPMoE best 66.2% / 26.1%.\n");
+    print!("{}", tables::table2_markdown()?);
+
+    let rows = tables::table2_rows()?;
+    // headline numbers the paper claims
+    let small_dpmoe_best = rows[3..5]
+        .iter()
+        .map(|r| r.tokens_per_sec_per_gpu)
+        .fold(0.0, f64::max);
+    let small_ppmoe = rows[5].tokens_per_sec_per_gpu;
+    let large_dpmoe_best = rows[9..12]
+        .iter()
+        .map(|r| r.tokens_per_sec_per_gpu)
+        .fold(0.0, f64::max);
+    let large_ppmoe = rows[12].tokens_per_sec_per_gpu;
+    println!("\nheadline speedups (PPMoE vs best DPMoE):");
+    println!(
+        "  small setting: {:.2}x   (paper: 1.25x over best DPMoE)",
+        small_ppmoe / small_dpmoe_best
+    );
+    println!(
+        "  large setting: {:.2}x   (paper: 1.77x over best DPMoE)",
+        large_ppmoe / large_dpmoe_best
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Real TP×EP MoE layer execution (§3.3.2–3.3.4): R rank threads, each with
+//! its own PJRT runtime and local experts, identical gating everywhere,
+//! combined by an in-process all-reduce — then verified against the
+//! monolithic single-rank artifact.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example tp_expert_parallel
+//! ```
+//!
+//! Prints a real-execution Table-3-style component breakdown: per-rank
+//! exec (gating + index-slice + grouped expert FFN, inside HLO) vs the
+//! combining all-reduce (in Rust).
+
+use ppmoe::coordinator::Args;
+use ppmoe::tp::run_tp_moe;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let seed = args.get_usize("seed", 0)? as u64;
+    let iters = args.get_usize("iters", 5)?;
+
+    println!("TP×EP MoE layer — real execution over rank threads\n");
+    let mut total_exec = 0.0;
+    let mut total_ar = 0.0;
+    let mut worst_err = 0.0f32;
+    for i in 0..iters {
+        let r = run_tp_moe(&dir, seed + i as u64)?;
+        let exec: f64 =
+            r.rank_timings.iter().map(|t| t.exec_seconds).sum::<f64>()
+                / r.rank_timings.len() as f64;
+        let ar: f64 = r
+            .rank_timings
+            .iter()
+            .map(|t| t.allreduce_seconds)
+            .sum::<f64>()
+            / r.rank_timings.len() as f64;
+        total_exec += exec;
+        total_ar += ar;
+        worst_err = worst_err.max(r.max_abs_err);
+        println!(
+            "run {i}: exec {:.2} ms | all-reduce {:.2} ms | max err {:.2e} | aux {:.3}",
+            exec * 1e3,
+            ar * 1e3,
+            r.max_abs_err,
+            r.aux
+        );
+    }
+    let exec = total_exec / iters as f64;
+    let ar = total_ar / iters as f64;
+    println!("\nmean per-rank breakdown over {iters} runs:");
+    println!(
+        "  expert exec (gating + slice + grouped FFN): {:.2} ms ({:.1}%)",
+        exec * 1e3,
+        exec / (exec + ar) * 100.0
+    );
+    println!(
+        "  combining all-reduce:                        {:.2} ms ({:.1}%)",
+        ar * 1e3,
+        ar / (exec + ar) * 100.0
+    );
+    println!("  worst numerics error vs monolithic: {worst_err:.2e}");
+    anyhow::ensure!(worst_err < 1e-3, "numerics check failed");
+    println!("\nTP×EP decomposition verified: partial outputs all-reduce to");
+    println!("the monolithic MoE layer exactly (the paper's §3.3.2 claim).");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! End-to-end driver (Fig. 5 analogue): real 1F1B pipeline training of the
+//! PPMoE transformer on a synthetic corpus, logging the loss curve.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example train_ppmoe -- \
+//!     --steps 200 --micro 4 --lr 1e-3
+//! ```
+//!
+//! All layers compose here: Pallas grouped-expert kernels (L1) inside the
+//! JAX-lowered stage artifacts (L2), executed by the Rust 1F1B coordinator
+//! (L3) with stage threads, channel p2p links, gradient accumulation and
+//! fused Adam. The loss curve is written to `loss_curve.csv` for
+//! EXPERIMENTS.md.
+
+use std::io::Write;
+
+use ppmoe::coordinator::Args;
+use ppmoe::pipeline::Schedule;
+use ppmoe::trainer::{train, TrainerCfg};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = TrainerCfg {
+        artifacts: args.get("artifacts").unwrap_or("artifacts").into(),
+        steps: args.get_usize("steps", 200)?,
+        num_micro: args.get_usize("micro", 4)?,
+        lr: args.get_f32("lr", 1e-3)?,
+        seed: args.get_usize("seed", 0)? as u64,
+        log_every: args.get_usize("log-every", 10)?,
+        grad_clip: Some(1.0),
+        schedule: if args.has_flag("gpipe") {
+            Schedule::GPipe
+        } else {
+            Schedule::OneFOneB
+        },
+        warmup_steps: args.get_usize("warmup", 10)?,
+        checkpoint_dir: args.get("checkpoint").map(Into::into),
+    };
+    eprintln!(
+        "training: {} steps × {} microbatches, lr {}, schedule {:?}",
+        cfg.steps, cfg.num_micro, cfg.lr, cfg.schedule
+    );
+
+    let report = train(&cfg)?;
+
+    // write the loss curve (Fig. 5 analogue)
+    let out = args.get("out").unwrap_or("loss_curve.csv");
+    let mut f = std::fs::File::create(out)?;
+    writeln!(f, "step,loss,tokens,seconds")?;
+    for s in &report.steps {
+        writeln!(f, "{},{},{},{}", s.step, s.loss, s.tokens, s.seconds)?;
+    }
+
+    let n = report.steps.len();
+    let early = report.mean_loss(0..(n / 10).max(1));
+    let late = report.mean_loss(n - (n / 10).max(1)..n);
+    println!("\n=== Fig. 5 analogue: convergence ===");
+    println!("steps:            {n}");
+    println!("initial loss:     {early:.4} (mean of first decile)");
+    println!("final loss:       {late:.4} (mean of last decile)");
+    println!("improvement:      {:.1}%", (1.0 - late / early) * 100.0);
+    println!("throughput:       {:.0} tokens/s", report.tokens_per_sec);
+    println!("loss curve:       {out}");
+    for (s, t) in report.stage_timers.iter().enumerate() {
+        println!("stage {s}: {:.1}s busy — breakdown:", t.total());
+        for (name, secs, share) in t.rows() {
+            println!("    {name:<10} {secs:>8.2}s  {:>5.1}%", share * 100.0);
+        }
+    }
+    anyhow::ensure!(late < early, "loss did not decrease");
+    println!("convergence check PASSED (loss decreased)");
+    Ok(())
+}

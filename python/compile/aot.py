@@ -1,0 +1,204 @@
+"""AOT export: lower every artifact to HLO *text* + manifest + param bins.
+
+Python runs exactly once (`make artifacts`); the Rust binary is
+self-contained afterwards. Interchange format is HLO text, NOT
+`.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids
+that the image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under --out-dir (default ../artifacts):
+  <name>.hlo.txt          one per artifact
+  manifest.json           configs, artifact arg/result shapes, param layouts
+  params/stage<i>.bin     initial parameters, raw little-endian f32,
+                          concatenated in manifest order
+
+Usage: python -m compile.aot [--out-dir DIR] [--config tiny|small|medium]
+                             [--tp N] [--seed S] [--no-full]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, stages
+from .model import ModelConfig
+
+# Named configs. `tiny` keeps CI fast; `small` is the default example scale;
+# `medium` approaches the per-stage size a real run would use on this CPU.
+CONFIGS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig(vocab=256, hidden=64, ffn=256, layers=2, heads=4,
+                        experts=4, seq=32, micro_batch=2, stages=2,
+                        block_c=32, block_t=64),
+    "small": ModelConfig(vocab=512, hidden=128, ffn=512, layers=4, heads=4,
+                         experts=8, seq=64, micro_batch=4, stages=2,
+                         block_c=64, block_t=128),
+    "medium": ModelConfig(vocab=2048, hidden=256, ffn=1024, layers=8, heads=8,
+                          experts=16, seq=128, micro_batch=4, stages=4,
+                          block_c=128, block_t=256),
+    # dense backbone of `small` (Fig. 5 comparison: PPMoE vs its backbone)
+    "small-dense": ModelConfig(vocab=512, hidden=128, ffn=512, layers=4,
+                               heads=4, experts=2, moe_every=0, seq=64,
+                               micro_batch=4, stages=2, block_c=64,
+                               block_t=128),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def _spec(arr) -> dict:
+    return {"shape": list(arr.shape), "dtype": _dtype_tag(arr.dtype)}
+
+
+def lower_artifact(name: str, fn, example_args, out_dir: str,
+                   input_names: list[str] | None = None) -> dict:
+    """Lower fn(*example_args), write HLO text, return manifest entry."""
+    # keep_unused=True: jit otherwise DCEs arguments the computation doesn't
+    # read (e.g. a bias that cancels out of a backward), which would break
+    # the positional input contract the Rust runtime relies on.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *example_args)
+    outs = jax.tree_util.tree_leaves(out_shapes)
+    entry = {
+        "file": fname,
+        "inputs": [
+            {"name": (input_names[i] if input_names else f"arg{i}"), **_spec(a)}
+            for i, a in enumerate(example_args)
+        ],
+        "outputs": [_spec(o) for o in outs],
+    }
+    print(f"  {name}: {len(text)} chars, {len(example_args)} in / {len(outs)} out")
+    return entry
+
+
+def save_stage_params(out_dir: str, stage: int, names: list[str], leaves) -> dict:
+    """Raw LE f32 concat + layout. Returns the manifest 'stages' entry."""
+    os.makedirs(os.path.join(out_dir, "params"), exist_ok=True)
+    binfile = f"params/stage{stage}.bin"
+    layout, offset = [], 0
+    with open(os.path.join(out_dir, binfile), "wb") as f:
+        for name, leaf in zip(names, leaves):
+            arr = np.asarray(leaf, dtype=np.float32)
+            f.write(arr.tobytes())
+            layout.append({
+                "name": name, "shape": list(arr.shape),
+                "offset": offset, "numel": int(arr.size),
+            })
+            offset += arr.size * 4
+    return {"bin": binfile, "params": layout, "total_bytes": offset}
+
+
+def export(cfg_name: str, out_dir: str, tp: int, seed: int,
+           include_full: bool) -> None:
+    cfg = CONFIGS[cfg_name]
+    cfg.validate()
+    os.makedirs(out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(seed)
+    all_params = model.init_all(key, cfg)
+
+    manifest: dict = {
+        "config_name": cfg_name,
+        "config": dataclasses.asdict(cfg),
+        "tp": tp,
+        "stages": [],
+        "artifacts": {},
+    }
+    arts = manifest["artifacts"]
+
+    print(f"[aot] config={cfg_name} stages={cfg.stages} tp={tp}")
+    for s in range(cfg.stages):
+        names, leaves, _ = stages.flatten_params(all_params[s])
+        manifest["stages"].append(save_stage_params(out_dir, s, names, leaves))
+
+        fn, ex, pnames = stages.make_stage_fwd(cfg, s, all_params[s])
+        arts[f"stage{s}_fwd"] = lower_artifact(
+            f"stage{s}_fwd", fn, ex, out_dir, [*pnames, "x"])
+
+        fn, ex, pnames = stages.make_stage_bwd(cfg, s, all_params[s])
+        arts[f"stage{s}_bwd"] = lower_artifact(
+            f"stage{s}_bwd", fn, ex, out_dir, [*pnames, "x", "dy", "daux"])
+
+    s_last = cfg.stages - 1
+    fn, ex, pnames = stages.make_last_stage_lossgrad(cfg, all_params[s_last])
+    arts["lossgrad"] = lower_artifact(
+        "lossgrad", fn, ex, out_dir, [*pnames, "x", "targets", "aux_in"])
+
+    fn, ex, pnames = stages.make_last_stage_loss(cfg, all_params[s_last])
+    arts["loss_eval"] = lower_artifact(
+        "loss_eval", fn, ex, out_dir, [*pnames, "x", "targets", "aux_in"])
+
+    if include_full:
+        fn, ex, pnames = stages.make_full_lossgrad(cfg, all_params)
+        arts["full_lossgrad"] = lower_artifact(
+            "full_lossgrad", fn, ex, out_dir, [*pnames, "tokens", "targets"])
+
+    # TP x EP rank artifacts + the monolithic reference (§3.3.2-3.3.4)
+    for r in range(tp):
+        fn, ex = stages.make_moe_rank(cfg, r, tp)
+        arts[f"moe_rank{r}of{tp}"] = lower_artifact(
+            f"moe_rank{r}of{tp}", fn, ex, out_dir,
+            ["x", "wg", "w1", "b1", "w2", "b2"])
+    fn, ex = stages.make_moe_single(cfg)
+    arts["moe_single"] = lower_artifact(
+        "moe_single", fn, ex, out_dir, ["x", "wg", "w1", "b1", "w2", "b2"])
+
+    # §3.3.2 serialization experiment: one big FFN vs E grouped small ones
+    fn, ex = stages.make_ffn_mono(cfg)
+    arts["ffn_mono"] = lower_artifact(
+        "ffn_mono", fn, ex, out_dir, ["x", "w1", "b1", "w2", "b2"])
+    fn, ex = stages.make_ffn_grouped_eq(cfg)
+    arts["ffn_grouped"] = lower_artifact(
+        "ffn_grouped", fn, ex, out_dir, ["xd", "w1", "b1", "w2", "b2"])
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", dest="out_compat", default=None,
+                    help="(Makefile compat) path of the primary HLO file; "
+                         "its directory becomes --out-dir")
+    ap.add_argument("--config", default="small", choices=sorted(CONFIGS))
+    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-full", action="store_true",
+                    help="skip the whole-model lossgrad artifact")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out_compat:
+        out_dir = os.path.dirname(args.out_compat) or "."
+    export(args.config, out_dir, args.tp, args.seed, not args.no_full)
+    if args.out_compat:
+        # Makefile freshness stamp: alias the first stage artifact
+        src = os.path.join(out_dir, "stage0_fwd.hlo.txt")
+        with open(src) as fi, open(args.out_compat, "w") as fo:
+            fo.write(fi.read())
+
+
+if __name__ == "__main__":
+    main()

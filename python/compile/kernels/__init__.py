@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the paper's compute hot-spot.
+from . import dense_ffn, gating, moe_ffn, ref  # noqa: F401

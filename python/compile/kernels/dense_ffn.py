@@ -1,0 +1,84 @@
+"""Dense FFN Pallas kernel — the non-MoE (tensor-parallel baseline) block.
+
+Same GEMM -> GeLU -> GEMM structure as one expert of the grouped kernel, but
+over the full token stream. Used by the dense transformer blocks of the
+backbone and as the monolithic side of the §3.3.2 serialization benchmark
+(one big GEMM vs E small ones).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .moe_ffn import _gelu
+
+
+def _dense_ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    hidden = _gelu(
+        jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+        + b1_ref[...]
+    )
+    out_ref[...] = (
+        jnp.dot(hidden, w2_ref[...], preferred_element_type=jnp.float32)
+        + b2_ref[...]
+    )
+
+
+def _dense_ffn_call(block_t, x, w1, b1, w2, b2):
+    t, h = x.shape
+    f = w1.shape[1]
+    assert t % block_t == 0, f"tokens {t} not divisible by block_t {block_t}"
+    return pl.pallas_call(
+        _dense_ffn_kernel,
+        grid=(t // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), jnp.float32),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dense_ffn_vjp(block_t, x, w1, b1, w2, b2):
+    return _dense_ffn_call(block_t, x, w1, b1, w2, b2)
+
+
+def _dense_ffn_vjp_fwd(block_t, x, w1, b1, w2, b2):
+    return _dense_ffn_call(block_t, x, w1, b1, w2, b2), (x, w1, b1, w2)
+
+
+def _dense_ffn_vjp_bwd(block_t, res, dy):
+    """Recompute-based FFN backward (jnp einsums; single expert, so the
+    grouped pallas backward kernel would be pure overhead here)."""
+    from .moe_ffn import _gelu_grad
+
+    x, w1, b1, w2 = res
+    pre = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1
+    hidden = _gelu(pre)
+    dhidden = jnp.dot(dy, w2.T, preferred_element_type=jnp.float32)
+    dpre = dhidden * _gelu_grad(pre)
+    dx = jnp.dot(dpre, w1.T, preferred_element_type=jnp.float32)
+    dw1 = jnp.dot(x.T, dpre, preferred_element_type=jnp.float32)
+    db1 = jnp.sum(dpre, axis=0)
+    dw2 = jnp.dot(hidden.T, dy, preferred_element_type=jnp.float32)
+    db2 = jnp.sum(dy, axis=0)
+    return dx, dw1, db1, dw2, db2
+
+
+_dense_ffn_vjp.defvjp(_dense_ffn_vjp_fwd, _dense_ffn_vjp_bwd)
+
+
+def dense_ffn(x, w1, b1, w2, b2, *, block_t: int | None = None):
+    """Dense FFN: (t, h) -> (t, h) with w1 (h, f), w2 (f, h). Differentiable."""
+    if block_t is None:
+        block_t = min(x.shape[0], 128)
+    return _dense_ffn_vjp(block_t, x, w1, b1, w2, b2)

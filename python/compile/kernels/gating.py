@@ -1,0 +1,151 @@
+"""Router (gating) Pallas kernel + dispatch/combine construction (L1).
+
+The gating module of §3.3.3: a linear map, a softmax score function, and a
+top-k schedule. The score computation (logits -> softmax -> top-1) is a
+Pallas kernel tiled over tokens; the dispatch/combine tensor construction is
+a cumsum-based one-hot assignment in plain jnp (it is a prefix-scan, not a
+GEMM, so it does not benefit from the MXU — see DESIGN.md §3).
+
+PPMoE's key structural property is encoded here: given identical inputs and
+identical gating weights, every tensor-parallel rank computes the *identical*
+dispatch order, so dispatch is a local index-slice and no all-to-all is
+needed. Determinism of this function is what the Rust L3 relies on, and is
+property-tested both in pytest and (for the rust re-implementation) proptest.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(x_ref, wg_ref, probs_ref, top1_ref):
+    """One token tile: logits -> stable softmax -> top-1 index."""
+    logits = jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    probs_ref[...] = probs
+    top1_ref[...] = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+
+
+def _router_call(block_t, x, wg):
+    t, h = x.shape
+    E = wg.shape[1]
+    assert t % block_t == 0, f"tokens {t} not divisible by block_t {block_t}"
+    return pl.pallas_call(
+        _router_kernel,
+        grid=(t // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, E), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, E), lambda i: (i, 0)),
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, E), jnp.float32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, wg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _router_vjp(block_t, x, wg):
+    return _router_call(block_t, x, wg)
+
+
+def _router_vjp_fwd(block_t, x, wg):
+    probs, top1 = _router_call(block_t, x, wg)
+    return (probs, top1), (x, wg, probs)
+
+
+def _router_vjp_bwd(block_t, res, cts):
+    """Softmax + matmul backward (jnp; a prefix of elementwise ops, not MXU
+    work, so it stays outside pallas). top1 is integer-valued: zero grad."""
+    x, wg, probs = res
+    dprobs, _dtop1 = cts
+    # d softmax: dl = p * (dp - sum(dp * p))
+    inner = jnp.sum(dprobs * probs, axis=-1, keepdims=True)
+    dlogits = probs * (dprobs - inner)
+    dx = jnp.dot(dlogits, wg.T, preferred_element_type=jnp.float32)
+    dwg = jnp.dot(x.T, dlogits, preferred_element_type=jnp.float32)
+    return dx, dwg
+
+
+_router_vjp.defvjp(_router_vjp_fwd, _router_vjp_bwd)
+
+
+def router(x, wg, *, block_t: int | None = None):
+    """Gating scores: (t, h) x (h, E) -> (probs (t, E), top1 (t,) int32).
+
+    Differentiable in x and wg (softmax-matmul backward); top1 carries no
+    gradient. The gating module stays fp32 like the paper (§4.1).
+    """
+    if block_t is None:
+        block_t = min(x.shape[0], 128)
+    return _router_vjp(block_t, x, wg)
+
+
+def make_dispatch(probs, top1, num_experts: int, capacity: int):
+    """Build dispatch/combine tensors + aux loss from router output.
+
+    Identical math to ref.make_dispatch_ref (kept separate so the oracle
+    stays kernel-free). With capacity >= t this is PPMoE's uncapped
+    index-slice dispatch: a bijection token -> (expert, slot).
+    """
+    onehot = jax.nn.one_hot(top1, num_experts, dtype=jnp.float32)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - onehot
+    pos = jnp.sum(pos, axis=-1).astype(jnp.int32)
+    keep = (pos < capacity).astype(jnp.float32)
+    pos_onehot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)
+    dispatch = onehot[:, :, None] * pos_onehot[:, None, :] * keep[:, None, None]
+    gate = jnp.sum(probs * onehot, axis=-1)
+    combine = dispatch * gate[:, None, None]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(onehot, axis=0)
+    aux = num_experts * jnp.sum(me * ce)
+    return dispatch, combine, aux
+
+
+def make_dispatch_top2(probs, num_experts: int, capacity: int):
+    """Top-2 variant (§3.3.3: 'compatible with existing gating schedules').
+
+    Second expert's gate weight is renormalized against the first, GShard
+    style. Returns (dispatch, combine, aux) with the same shapes as top-1.
+    """
+    top1 = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    probs_wo1 = probs * (1.0 - jax.nn.one_hot(top1, num_experts, dtype=jnp.float32))
+    top2 = jnp.argmax(probs_wo1, axis=-1).astype(jnp.int32)
+
+    oh1 = jax.nn.one_hot(top1, num_experts, dtype=jnp.float32)
+    oh2 = jax.nn.one_hot(top2, num_experts, dtype=jnp.float32)
+    # slot positions: first choices fill slabs first, then second choices
+    pos1 = jnp.cumsum(oh1, axis=0) * oh1 - oh1
+    pos1 = jnp.sum(pos1, axis=-1).astype(jnp.int32)
+    base2 = jnp.sum(oh1, axis=0, keepdims=True)  # tokens already placed per e
+    pos2 = jnp.cumsum(oh2, axis=0) * oh2 - oh2 + base2 * oh2
+    pos2 = jnp.sum(pos2, axis=-1).astype(jnp.int32)
+
+    g1 = jnp.sum(probs * oh1, axis=-1)
+    g2 = jnp.sum(probs * oh2, axis=-1)
+    denom = jnp.maximum(g1 + g2, 1e-9)
+    g1, g2 = g1 / denom, g2 / denom
+
+    def slotted(oh, pos):
+        keep = (pos < capacity).astype(jnp.float32)
+        return oh[:, :, None] * jax.nn.one_hot(pos, capacity, dtype=jnp.float32)[
+            :, None, :
+        ] * keep[:, None, None]
+
+    d1, d2 = slotted(oh1, pos1), slotted(oh2, pos2)
+    dispatch = d1 + d2
+    combine = d1 * g1[:, None, None] + d2 * g2[:, None, None]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(oh1, axis=0)
+    aux = num_experts * jnp.sum(me * ce)
+    return dispatch, combine, aux

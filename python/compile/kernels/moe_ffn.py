@@ -1,0 +1,170 @@
+"""Grouped expert FFN Pallas kernel — the PPMoE compute hot spot (L1).
+
+The paper's per-device MoE work is a *serial loop over N local experts*,
+each a GEMM -> GeLU -> GEMM FFN over that expert's token slice (§3.3.2).
+On TPU we express the loop as a Pallas grid dimension instead: the grid is
+(E, C/blk_c) and BlockSpec streams one (blk_c, h) token tile plus the
+expert's (h, f)/(f, h) weight slabs HBM->VMEM per step. Both GEMMs target
+the MXU with f32 accumulation (`preferred_element_type`).
+
+Hardware adaptation (DESIGN.md §3): the paper's claim that "serially
+processing a few small tensors is nearly the same as one big tensor"
+(footnote 6) maps to the fact that a grid over experts re-uses the same
+systolic-array schedule per step — per-expert weight slabs are the only
+extra HBM traffic versus one monolithic GEMM.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    # tanh-approx GeLU; keep in sync with ref.gelu.
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def _gelu_grad(x):
+    """d/dx of the tanh-approx GeLU (used by the backward kernel)."""
+    c = 0.7978845608028654
+    t = jnp.tanh(c * (x + 0.044715 * x**3))
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * c * (1.0 + 3 * 0.044715 * x * x)
+
+
+def _moe_ffn_kernel(xd_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    """One grid step: one expert e, one capacity tile c.
+
+    VMEM working set: (blk_c, h) + (h, f) + (f,) + (f, h) + (h,) + (blk_c, h).
+    """
+    x = xd_ref[0]  # (blk_c, h)
+    w1 = w1_ref[0]  # (h, f)
+    b1 = b1_ref[0]  # (f,)
+    w2 = w2_ref[0]  # (f, h)
+    b2 = b2_ref[0]  # (h,)
+    hidden = _gelu(jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1)
+    out_ref[0] = jnp.dot(hidden, w2, preferred_element_type=jnp.float32) + b2
+
+
+def _moe_ffn_fwd_call(block_c, xd, w1, b1, w2, b2):
+    E, C, h = xd.shape
+    f = w1.shape[2]
+    assert C % block_c == 0, f"capacity {C} not divisible by block_c {block_c}"
+    grid = (E, C // block_c)
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, h), lambda e, c: (e, c, 0)),
+            pl.BlockSpec((1, h, f), lambda e, c: (e, 0, 0)),
+            pl.BlockSpec((1, f), lambda e, c: (e, 0)),
+            pl.BlockSpec((1, f, h), lambda e, c: (e, 0, 0)),
+            pl.BlockSpec((1, h), lambda e, c: (e, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, h), lambda e, c: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, h), jnp.float32),
+        interpret=True,
+    )(xd, w1, b1, w2, b2)
+
+
+def _moe_ffn_bwd_kernel(xd_ref, w1_ref, b1_ref, w2_ref, dy_ref,
+                        dxd_ref, dw1_ref, db1_ref, dw2_ref, db2_ref):
+    """Backward for one expert (grid over E; full capacity slab per step).
+
+    Recomputes the hidden activation, then the five cotangents. Weight grads
+    accumulate over the whole capacity slab in one step, so no cross-step
+    reduction state is needed.
+    """
+    x = xd_ref[0]   # (C, h)
+    w1 = w1_ref[0]  # (h, f)
+    b1 = b1_ref[0]  # (f,)
+    w2 = w2_ref[0]  # (f, h)
+    dy = dy_ref[0]  # (C, h)
+    pre = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1
+    hidden = _gelu(pre)
+    dhidden = jnp.dot(dy, w2.T, preferred_element_type=jnp.float32)
+    dpre = dhidden * _gelu_grad(pre)
+    dxd_ref[0] = jnp.dot(dpre, w1.T, preferred_element_type=jnp.float32)
+    dw1_ref[0] = jnp.dot(x.T, dpre, preferred_element_type=jnp.float32)
+    db1_ref[0] = jnp.sum(dpre, axis=0)
+    dw2_ref[0] = jnp.dot(hidden.T, dy, preferred_element_type=jnp.float32)
+    db2_ref[0] = jnp.sum(dy, axis=0)
+
+
+def _moe_ffn_bwd_call(xd, w1, b1, w2, dy):
+    E, C, h = xd.shape
+    f = w1.shape[2]
+    return pl.pallas_call(
+        _moe_ffn_bwd_kernel,
+        grid=(E,),
+        in_specs=[
+            pl.BlockSpec((1, C, h), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, h, f), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, f), lambda e: (e, 0)),
+            pl.BlockSpec((1, f, h), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, C, h), lambda e: (e, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, h), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, h, f), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, f), lambda e: (e, 0)),
+            pl.BlockSpec((1, f, h), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, h), lambda e: (e, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, C, h), jnp.float32),
+            jax.ShapeDtypeStruct((E, h, f), jnp.float32),
+            jax.ShapeDtypeStruct((E, f), jnp.float32),
+            jax.ShapeDtypeStruct((E, f, h), jnp.float32),
+            jax.ShapeDtypeStruct((E, h), jnp.float32),
+        ],
+        interpret=True,
+    )(xd, w1, b1, w2, dy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _moe_ffn_vjp(block_c, xd, w1, b1, w2, b2):
+    return _moe_ffn_fwd_call(block_c, xd, w1, b1, w2, b2)
+
+
+def _moe_ffn_vjp_fwd(block_c, xd, w1, b1, w2, b2):
+    return _moe_ffn_fwd_call(block_c, xd, w1, b1, w2, b2), (xd, w1, b1, w2)
+
+
+def _moe_ffn_vjp_bwd(block_c, res, dy):
+    xd, w1, b1, w2 = res
+    dxd, dw1, db1, dw2, db2 = _moe_ffn_bwd_call(xd, w1, b1, w2, dy)
+    return dxd, dw1, db1, dw2, db2
+
+
+_moe_ffn_vjp.defvjp(_moe_ffn_vjp_fwd, _moe_ffn_vjp_bwd)
+
+
+def moe_ffn(xd, w1, b1, w2, b2, *, block_c: int | None = None):
+    """Grouped expert FFN: (E, C, h) -> (E, C, h). Differentiable.
+
+    xd: dispatched tokens (E, C, h); w1: (E, h, f); b1: (E, f);
+    w2: (E, f, h); b2: (E, h). block_c tiles the capacity dimension
+    (must divide C; defaults to min(C, 128)). Forward and backward are both
+    Pallas kernels (backward recomputes the hidden activation per expert).
+    """
+    C = xd.shape[1]
+    if block_c is None:
+        block_c = min(C, 128)
+    return _moe_ffn_vjp(block_c, xd, w1, b1, w2, b2)
+
+
+def vmem_bytes(block_c: int, h: int, f: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (for DESIGN §Perf)."""
+    tiles = block_c * h * 2 + h * f + f + f * h + h
+    return tiles * dtype_bytes
+
+
+def mxu_flops_per_step(block_c: int, h: int, f: int) -> int:
+    """MACs*2 issued to the MXU per grid step."""
+    return 2 * block_c * h * f * 2

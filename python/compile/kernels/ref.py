@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written with
+plain jax.numpy ops only. pytest (python/tests/) asserts allclose between the
+kernel (interpret=True) and these oracles across a hypothesis-driven sweep of
+shapes and dtypes — this file is the correctness ground truth for L1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approx GeLU, matching the kernel's in-VMEM activation."""
+    return (
+        0.5
+        * x
+        * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+    )
+
+
+def dense_ffn_ref(x, w1, b1, w2, b2):
+    """Dense transformer FFN: GeLU(x @ w1 + b1) @ w2 + b2.
+
+    x: (t, h); w1: (h, f); b1: (f,); w2: (f, h); b2: (h,).
+    """
+    hidden = gelu(jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1)
+    return jnp.dot(hidden, w2, preferred_element_type=jnp.float32) + b2
+
+
+def moe_ffn_ref(xd, w1, b1, w2, b2):
+    """Grouped expert FFN over dispatched tokens.
+
+    xd: (E, C, h) — capacity-dispatched token tiles, one slab per expert.
+    w1: (E, h, f); b1: (E, f); w2: (E, f, h); b2: (E, h).
+    Returns (E, C, h).
+    """
+    hidden = gelu(
+        jnp.einsum("ech,ehf->ecf", xd, w1, preferred_element_type=jnp.float32)
+        + b1[:, None, :]
+    )
+    return (
+        jnp.einsum("ecf,efh->ech", hidden, w2, preferred_element_type=jnp.float32)
+        + b2[:, None, :]
+    )
+
+
+def router_ref(x, wg):
+    """Gating scores: softmax(x @ wg) and the top-1 expert per token.
+
+    x: (t, h); wg: (h, E).  Returns (probs (t, E), top1 (t,) int32).
+    """
+    logits = jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return probs, jnp.argmax(probs, axis=-1).astype(jnp.int32)
+
+
+def make_dispatch_ref(probs, top1, num_experts: int, capacity: int):
+    """GShard-style dispatch/combine tensors with capacity C.
+
+    With C >= t this is functionally PPMoE's uncapped index-slice dispatch:
+    no token is ever dropped, every token lands in exactly one (e, c) slot.
+
+    Returns:
+      dispatch: (t, E, C) float — one-hot token->slot routing mask.
+      combine:  (t, E, C) float — dispatch scaled by the token's gate prob.
+      aux_loss: scalar — GShard load-balancing loss, E * sum(me * ce).
+    """
+    onehot = jax.nn.one_hot(top1, num_experts, dtype=jnp.float32)  # (t, E)
+    # position of each token inside its expert's slab (0-indexed)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - onehot  # (t, E)
+    pos = jnp.sum(pos, axis=-1).astype(jnp.int32)  # (t,)
+    keep = (pos < capacity).astype(jnp.float32)
+    pos_onehot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # (t, C)
+    dispatch = onehot[:, :, None] * pos_onehot[:, None, :] * keep[:, None, None]
+    gate = jnp.sum(probs * onehot, axis=-1)  # (t,) prob of the chosen expert
+    combine = dispatch * gate[:, None, None]
+    # GShard aux loss: E * sum_e (fraction routed to e) * (mean prob of e)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(onehot, axis=0)
+    aux = num_experts * jnp.sum(me * ce)
+    return dispatch, combine, aux
+
+
+def moe_layer_ref(x, wg, w1, b1, w2, b2, capacity: int):
+    """Full MoE layer oracle: route -> dispatch -> grouped FFN -> combine.
+
+    x: (t, h).  Returns (y (t, h), aux_loss).
+    """
+    E = wg.shape[1]
+    probs, top1 = router_ref(x, wg)
+    dispatch, combine, aux = make_dispatch_ref(probs, top1, E, capacity)
+    xd = jnp.einsum("tec,th->ech", dispatch, x)
+    yd = moe_ffn_ref(xd, w1, b1, w2, b2)
+    y = jnp.einsum("tec,ech->th", combine, yd)
+    return y, aux

@@ -1,0 +1,311 @@
+"""L2 — the PPMoE transformer in JAX (build-time only, never on request path).
+
+Decoder-only transformer in the paper's configuration family (§4.1): GPT-3
+style blocks, with every other FFN replaced by an MoE layer of E experts and
+top-1 gating. The MoE layer calls the L1 Pallas kernels (router + grouped
+expert FFN); dispatch is capacity-based with C = tokens, which is
+functionally PPMoE's uncapped index-slice dispatch (§4.1: "PPMoE abandoned
+the capacity limit").
+
+Everything here is pure-functional over explicit parameter pytrees so that
+`aot.py` can lower per-pipeline-stage fwd/bwd functions to HLO text for the
+Rust runtime. Parameters are fp32 (the paper uses fp16 + fp32 gating on
+V100; on CPU-PJRT we keep fp32 throughout and note the substitution in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense_ffn, gating, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters (paper §4.1 family, scaled down)."""
+
+    vocab: int = 512
+    hidden: int = 128
+    ffn: int = 512  # 4*hidden
+    layers: int = 4
+    heads: int = 4
+    experts: int = 8
+    moe_every: int = 2  # every other FFN is MoE, like the paper
+    seq: int = 64
+    micro_batch: int = 4
+    stages: int = 2  # pipeline stages
+    aux_coef: float = 0.01
+    # Expert capacity factor (§Perf L2). capacity = cf·tokens/E, so the
+    # grouped kernel computes cf× one dense FFN instead of E×. cf = 0 means
+    # "uncapped" (capacity = tokens, zero drops — the paper's §4.1 setting,
+    # at E× the FLOPs in static-shape HLO). With the aux balance loss active
+    # cf = 2 drops <1% of tokens in practice; dropped tokens pass through
+    # the residual connection, standard GShard/Switch behaviour.
+    capacity_factor: float = 2.0
+    # pallas block sizes (perf knobs, see EXPERIMENTS.md §Perf)
+    block_c: int = 64
+    block_t: int = 128
+
+    @property
+    def tokens(self) -> int:
+        return self.micro_batch * self.seq
+
+    @property
+    def capacity(self) -> int:
+        if self.capacity_factor <= 0:
+            # uncapped: every token fits even if all pick one expert
+            return self.tokens
+        cap = int(self.capacity_factor * self.tokens / self.experts)
+        cap = max(8, (cap + 7) // 8 * 8)  # pad to 8 for tiling
+        return min(cap, self.tokens)
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def is_moe_layer(self, i: int) -> bool:
+        # layers 1, 3, 5, ... are MoE ("every other FFN")
+        return self.moe_every > 0 and (i % self.moe_every == self.moe_every - 1)
+
+    def validate(self) -> None:
+        assert self.hidden % self.heads == 0
+        assert self.layers % self.stages == 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_block(key: jax.Array, cfg: ModelConfig, layer_idx: int) -> dict[str, Any]:
+    """One transformer block: pre-LN attention + pre-LN (MoE-)FFN."""
+    h, f, E = cfg.hidden, cfg.ffn, cfg.experts
+    ks = jax.random.split(key, 10)
+    s_attn = 0.02
+    s_proj = 0.02 / jnp.sqrt(2.0 * cfg.layers)
+    p: dict[str, Any] = {
+        "ln1_g": jnp.ones((h,), jnp.float32),
+        "ln1_b": jnp.zeros((h,), jnp.float32),
+        "wqkv": jax.random.normal(ks[0], (h, 3 * h), jnp.float32) * s_attn,
+        "bqkv": jnp.zeros((3 * h,), jnp.float32),
+        "wo": jax.random.normal(ks[1], (h, h), jnp.float32) * s_proj,
+        "bo": jnp.zeros((h,), jnp.float32),
+        "ln2_g": jnp.ones((h,), jnp.float32),
+        "ln2_b": jnp.zeros((h,), jnp.float32),
+    }
+    if cfg.is_moe_layer(layer_idx):
+        p.update(
+            wg=jax.random.normal(ks[2], (h, E), jnp.float32) * s_attn,
+            w1=jax.random.normal(ks[3], (E, h, f), jnp.float32) * s_attn,
+            b1=jnp.zeros((E, f), jnp.float32),
+            w2=jax.random.normal(ks[4], (E, f, h), jnp.float32) * s_proj,
+            b2=jnp.zeros((E, h), jnp.float32),
+        )
+    else:
+        p.update(
+            w1=jax.random.normal(ks[3], (h, f), jnp.float32) * s_attn,
+            b1=jnp.zeros((f,), jnp.float32),
+            w2=jax.random.normal(ks[4], (f, h), jnp.float32) * s_proj,
+            b2=jnp.zeros((h,), jnp.float32),
+        )
+    return p
+
+
+def init_stage(key: jax.Array, cfg: ModelConfig, stage: int) -> dict[str, Any]:
+    """Parameters owned by one pipeline stage.
+
+    Stage 0 additionally owns the embeddings; the last stage owns the final
+    LayerNorm and the (untied) output projection.
+    """
+    n = cfg.layers // cfg.stages
+    ks = jax.random.split(key, n + 2)
+    p: dict[str, Any] = {
+        f"block{j:02d}": init_block(ks[j], cfg, stage * n + j) for j in range(n)
+    }
+    if stage == 0:
+        p["tok_emb"] = jax.random.normal(ks[n], (cfg.vocab, cfg.hidden)) * 0.02
+        p["pos_emb"] = jax.random.normal(ks[n + 1], (cfg.seq, cfg.hidden)) * 0.02
+    if stage == cfg.stages - 1:
+        p["lnf_g"] = jnp.ones((cfg.hidden,), jnp.float32)
+        p["lnf_b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+        p["w_out"] = jax.random.normal(ks[n], (cfg.hidden, cfg.vocab)) * 0.02
+    return p
+
+
+def init_all(key: jax.Array, cfg: ModelConfig) -> list[dict[str, Any]]:
+    ks = jax.random.split(key, cfg.stages)
+    return [init_stage(ks[s], cfg, s) for s in range(cfg.stages)]
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def attention(p: dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Causal multi-head self-attention. x: (B, S, h)."""
+    B, S, h = x.shape
+    qkv = jnp.dot(x, p["wqkv"]) + p["bqkv"]  # (B, S, 3h)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # (B, S, h) -> (B, nh, S, hd)
+        return t.reshape(B, S, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("bnqd,bnkd->bnqk", q, k) / jnp.sqrt(float(cfg.head_dim))
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnqk,bnkd->bnqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, h)
+    return jnp.dot(out, p["wo"]) + p["bo"]
+
+
+def moe_ffn_layer(p: dict[str, Any], x: jax.Array, cfg: ModelConfig):
+    """PPMoE MoE layer (single-rank view): route -> index-dispatch -> grouped
+    expert FFN (L1 kernel) -> combine. x: (B, S, h) -> ((B, S, h), aux)."""
+    B, S, h = x.shape
+    xf = x.reshape(B * S, h)
+    probs, top1 = gating.router(xf, p["wg"], block_t=min(cfg.block_t, B * S))
+    dispatch, combine, aux = gating.make_dispatch(
+        probs, top1, cfg.experts, cfg.capacity
+    )
+    xd = jnp.einsum("tec,th->ech", dispatch, xf)
+    yd = moe_ffn.moe_ffn(
+        xd, p["w1"], p["b1"], p["w2"], p["b2"],
+        block_c=min(cfg.block_c, cfg.capacity),
+    )
+    y = jnp.einsum("tec,ech->th", combine, yd)
+    return y.reshape(B, S, h), aux
+
+
+def dense_ffn_layer(p: dict[str, Any], x: jax.Array, cfg: ModelConfig):
+    B, S, h = x.shape
+    xf = x.reshape(B * S, h)
+    y = dense_ffn.dense_ffn(
+        xf, p["w1"], p["b1"], p["w2"], p["b2"],
+        block_t=min(cfg.block_t, B * S),
+    )
+    return y.reshape(B, S, h)
+
+
+def block_fwd(p: dict[str, Any], x: jax.Array, cfg: ModelConfig, layer_idx: int):
+    """One transformer block. Returns (y, aux_loss)."""
+    a = attention(p, layer_norm(x, p["ln1_g"], p["ln1_b"]), cfg)
+    x = x + a
+    hgt = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    if cfg.is_moe_layer(layer_idx):
+        y, aux = moe_ffn_layer(p, hgt, cfg)
+    else:
+        y, aux = dense_ffn_layer(p, hgt, cfg), jnp.float32(0.0)
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# Stage functions (what gets lowered per pipeline stage)
+# ---------------------------------------------------------------------------
+
+
+def stage_fwd(params: dict[str, Any], x: jax.Array, cfg: ModelConfig, stage: int):
+    """Forward through one pipeline stage.
+
+    Stage 0 takes int32 tokens (B, S); other stages take activations
+    (B, S, h). Returns (activations, aux_loss_sum) — aux is threaded as a
+    scalar through the pipeline so the loss head adds it exactly once.
+    """
+    n = cfg.layers // cfg.stages
+    aux_total = jnp.float32(0.0)
+    if stage == 0:
+        h = params["tok_emb"][x] + params["pos_emb"][None, :, :]
+    else:
+        h = x
+    for j in range(n):
+        h, aux = block_fwd(params[f"block{j:02d}"], h, cfg, stage * n + j)
+        aux_total = aux_total + aux
+    return h, aux_total
+
+
+def loss_head(params: dict[str, Any], h: jax.Array, targets: jax.Array,
+              aux_in: jax.Array, cfg: ModelConfig):
+    """Final LN + projection + softmax cross-entropy + aux balance loss."""
+    h = layer_norm(h, params["lnf_g"], params["lnf_b"])
+    logits = jnp.dot(h, params["w_out"])  # (B, S, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + cfg.aux_coef * aux_in
+
+
+def last_stage_loss(params, x, targets, aux_in, cfg: ModelConfig):
+    """Forward through the last stage + loss. aux_in: accumulated aux scalar
+    from earlier stages (threaded through the pipeline by the L3 trainer)."""
+    h, aux = stage_fwd(params, x, cfg, cfg.stages - 1)
+    return loss_head(params, h, targets, aux + aux_in, cfg)
+
+
+def full_loss(all_params: list[dict[str, Any]], tokens, targets, cfg: ModelConfig):
+    """Single-shot whole-model loss (the functional-equivalence reference of
+    §3.3.6: PPMoE's grad accumulation must match this up to fp tolerance)."""
+    h, aux = tokens, jnp.float32(0.0)
+    for s in range(cfg.stages - 1):
+        h, a = stage_fwd(all_params[s], h, cfg, s)
+        aux = aux + a
+    return last_stage_loss(all_params[-1], h, targets, aux, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel x expert-parallel rank view (§3.3.2-3.3.4)
+# ---------------------------------------------------------------------------
+
+
+def moe_rank_partial(x, wg, w1_loc, b1_loc, w2_loc, b2_loc,
+                     rank: int, tp: int, cfg: ModelConfig):
+    """One TP rank's share of a PPMoE MoE layer.
+
+    Every rank holds the *full* gating weights and the identical input x, so
+    the dispatch order is identical on all ranks (§3.3.3). Each rank then
+    index-slices only the tokens routed to its N = E/T local experts,
+    computes them, and emits a partial output; the Rust L3 all-reduces (sums)
+    partials across ranks — the inner-node all-reduce that replaces the two
+    all-to-alls of DPMoE.
+
+    x: (t, h). Local expert range: [rank*N, (rank+1)*N).
+    Returns (partial_y (t, h), aux).
+    """
+    E = cfg.experts
+    N = E // tp
+    probs, top1 = gating.router(x, wg, block_t=min(cfg.block_t, x.shape[0]))
+    dispatch, combine, aux = gating.make_dispatch(probs, top1, E, cfg.capacity)
+    # slice to this rank's experts only — the "tensor index slicing" of the
+    # title; a static slice because rank/tp are compile-time constants here.
+    lo = rank * N
+    d_loc = dispatch[:, lo:lo + N, :]
+    c_loc = combine[:, lo:lo + N, :]
+    xd = jnp.einsum("tec,th->ech", d_loc, x)
+    yd = moe_ffn.moe_ffn(
+        xd, w1_loc, b1_loc, w2_loc, b2_loc,
+        block_c=min(cfg.block_c, cfg.capacity),
+    )
+    y = jnp.einsum("tec,ech->th", c_loc, yd)
+    return y, aux
+
+
+def moe_layer_single(x, wg, w1, b1, w2, b2, cfg: ModelConfig):
+    """Monolithic single-rank MoE layer — the numerics reference the TP×EP
+    rank decomposition must sum to (verified in rust integration tests)."""
+    probs, top1 = gating.router(x, wg, block_t=min(cfg.block_t, x.shape[0]))
+    dispatch, combine, aux = gating.make_dispatch(probs, top1, cfg.experts,
+                                                  cfg.capacity)
+    xd = jnp.einsum("tec,th->ech", dispatch, x)
+    yd = moe_ffn.moe_ffn(xd, w1, b1, w2, b2,
+                         block_c=min(cfg.block_c, cfg.capacity))
+    return jnp.einsum("tec,ech->th", combine, yd), aux

@@ -1,0 +1,234 @@
+"""Flat-signature stage functions for AOT lowering.
+
+HLO artifacts are shape-monomorphic and take flat argument lists, so this
+module adapts the pytree-based model functions of `model.py` into functions
+over (param_0, ..., param_k, x, ...) suitable for `jax.jit(...).lower()`.
+Parameter order is the deterministic pytree flattening order (sorted dict
+keys), recorded in the manifest so the Rust runtime can address tensors by
+name.
+
+Backward functions are *recompute-based*: `stage_bwd(params, x, dy, daux)`
+re-runs the stage forward inside `jax.vjp` and returns (dx, dparams). This
+keeps every artifact a pure function with flat array ins/outs — no residual
+pytrees cross the Rust boundary — at the cost of one extra forward per
+backward, exactly like Megatron's full activation recomputation (Chen et
+al. 2016, cited by the paper §2).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .model import ModelConfig
+
+
+def flatten_params(params: dict[str, Any]):
+    """Deterministic (names, leaves, treedef) for a stage's param dict."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    names = [
+        ".".join(str(k.key) for k in path) for path, _ in paths
+    ]
+    return names, leaves, treedef
+
+
+def unflatten_params(treedef, leaves):
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Per-stage artifact factories. Each returns (fn, example_args) where fn has
+# a flat signature ready for jax.jit(fn).lower(*example_args).
+# ---------------------------------------------------------------------------
+
+
+def _example_x(cfg: ModelConfig, stage: int):
+    if stage == 0:
+        return jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
+    return jnp.zeros((cfg.micro_batch, cfg.seq, cfg.hidden), jnp.float32)
+
+
+def make_stage_fwd(cfg: ModelConfig, stage: int, params: dict[str, Any]):
+    """stage_fwd: (params..., x) -> (act, aux)."""
+    names, leaves, treedef = flatten_params(params)
+
+    def fn(*args):
+        p = unflatten_params(treedef, list(args[:-1]))
+        return model.stage_fwd(p, args[-1], cfg, stage)
+
+    return fn, [*leaves, _example_x(cfg, stage)], names
+
+
+def make_stage_bwd(cfg: ModelConfig, stage: int, params: dict[str, Any]):
+    """stage_bwd: (params..., x, dy, daux) -> (dx?, dparams...).
+
+    dx is emitted only for stage > 0 (stage 0's input is int tokens).
+    """
+    names, leaves, treedef = flatten_params(params)
+
+    def fn(*args):
+        p_leaves, x, dy, daux = list(args[:-3]), args[-3], args[-2], args[-1]
+        p = unflatten_params(treedef, p_leaves)
+        _, vjp_fn = jax.vjp(
+            lambda pp, xx: model.stage_fwd(pp, xx, cfg, stage), p, x
+        )
+        dp, dx = vjp_fn((dy, daux))
+        dp_leaves = jax.tree_util.tree_leaves(dp)
+        if stage == 0:
+            return tuple(dp_leaves)
+        return (dx, *dp_leaves)
+
+    dy = jnp.zeros((cfg.micro_batch, cfg.seq, cfg.hidden), jnp.float32)
+    daux = jnp.float32(0.0)
+    return fn, [*leaves, _example_x(cfg, stage), dy, daux], names
+
+
+def make_last_stage_lossgrad(cfg: ModelConfig, params: dict[str, Any]):
+    """lossgrad: (params..., x, targets, aux_in) -> (loss, dx, dparams...).
+
+    The cotangent wrt aux_in is the constant cfg.aux_coef; the L3 trainer
+    passes it straight to earlier stages' `daux`, so it is not re-emitted.
+    """
+    names, leaves, treedef = flatten_params(params)
+    stage = cfg.stages - 1
+
+    def fn(*args):
+        p_leaves, x, tgt, aux_in = list(args[:-3]), args[-3], args[-2], args[-1]
+        p = unflatten_params(treedef, p_leaves)
+        loss, vjp_fn = jax.vjp(
+            lambda pp, xx: model.last_stage_loss(pp, xx, tgt, aux_in, cfg), p, x
+        )
+        dp, dx = vjp_fn(jnp.float32(1.0))
+        return (loss, dx, *jax.tree_util.tree_leaves(dp))
+
+    x = _example_x(cfg, stage)
+    tgt = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
+    return fn, [*leaves, x, tgt, jnp.float32(0.0)], names
+
+
+def make_last_stage_loss(cfg: ModelConfig, params: dict[str, Any]):
+    """Eval-only loss: (params..., x, targets, aux_in) -> (loss,)."""
+    names, leaves, treedef = flatten_params(params)
+    stage = cfg.stages - 1
+
+    def fn(*args):
+        p_leaves, x, tgt, aux_in = list(args[:-3]), args[-3], args[-2], args[-1]
+        p = unflatten_params(treedef, p_leaves)
+        return (model.last_stage_loss(p, x, tgt, aux_in, cfg),)
+
+    x = _example_x(cfg, stage)
+    tgt = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
+    return fn, [*leaves, x, tgt, jnp.float32(0.0)], names
+
+
+def make_full_lossgrad(cfg: ModelConfig, all_params: list[dict[str, Any]]):
+    """Whole-model single-shot (loss, grads...) — the §3.3.6 functional-
+    equivalence reference the pipelined trainer is verified against."""
+    flat = [flatten_params(p) for p in all_params]
+    counts = [len(f[1]) for f in flat]
+
+    def fn(*args):
+        off, ps = 0, []
+        for (names, _, treedef), n in zip(flat, counts):
+            ps.append(unflatten_params(treedef, list(args[off:off + n])))
+            off += n
+        tokens, targets = args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda pp: model.full_loss(pp, tokens, targets, cfg)
+        )(ps)
+        return (loss, *jax.tree_util.tree_leaves(grads))
+
+    leaves = [leaf for f in flat for leaf in f[1]]
+    names = [f"stage{s}.{n}" for s, f in enumerate(flat) for n in f[0]]
+    tokens = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
+    targets = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
+    return fn, [*leaves, tokens, targets], names
+
+
+# ---------------------------------------------------------------------------
+# TP x EP rank artifacts (§3.3.2-3.3.4)
+# ---------------------------------------------------------------------------
+
+
+def make_moe_rank(cfg: ModelConfig, rank: int, tp: int):
+    """One rank's partial MoE layer: (x, wg, w1, b1, w2, b2) -> (y_partial, aux)."""
+    assert cfg.experts % tp == 0
+    N = cfg.experts // tp
+    t, h, f, E = cfg.tokens, cfg.hidden, cfg.ffn, cfg.experts
+
+    def fn(x, wg, w1, b1, w2, b2):
+        return model.moe_rank_partial(x, wg, w1, b1, w2, b2, rank, tp, cfg)
+
+    ex = [
+        jnp.zeros((t, h), jnp.float32),
+        jnp.zeros((h, E), jnp.float32),
+        jnp.zeros((N, h, f), jnp.float32),
+        jnp.zeros((N, f), jnp.float32),
+        jnp.zeros((N, f, h), jnp.float32),
+        jnp.zeros((N, h), jnp.float32),
+    ]
+    return fn, ex
+
+
+def make_ffn_mono(cfg: ModelConfig):
+    """One big dense FFN over all t tokens — the monolithic side of the
+    §3.3.2 serialization experiment."""
+    from .kernels import dense_ffn
+
+    t, h, f = cfg.tokens, cfg.hidden, cfg.ffn
+
+    def fn(x, w1, b1, w2, b2):
+        return (dense_ffn.dense_ffn(x, w1, b1, w2, b2,
+                                    block_t=min(cfg.block_t, t)),)
+
+    ex = [
+        jnp.zeros((t, h), jnp.float32),
+        jnp.zeros((h, f), jnp.float32),
+        jnp.zeros((f,), jnp.float32),
+        jnp.zeros((f, h), jnp.float32),
+        jnp.zeros((h,), jnp.float32),
+    ]
+    return fn, ex
+
+
+def make_ffn_grouped_eq(cfg: ModelConfig):
+    """E small expert FFNs over t/E tokens each — same total FLOPs as
+    `ffn_mono`; the grouped (serialized-experts) side of §3.3.2."""
+    from .kernels import moe_ffn
+
+    E, h, f = cfg.experts, cfg.hidden, cfg.ffn
+    c = max(1, cfg.tokens // E)
+
+    def fn(xd, w1, b1, w2, b2):
+        return (moe_ffn.moe_ffn(xd, w1, b1, w2, b2,
+                                block_c=min(cfg.block_c, c)),)
+
+    ex = [
+        jnp.zeros((E, c, h), jnp.float32),
+        jnp.zeros((E, h, f), jnp.float32),
+        jnp.zeros((E, f), jnp.float32),
+        jnp.zeros((E, f, h), jnp.float32),
+        jnp.zeros((E, h), jnp.float32),
+    ]
+    return fn, ex
+
+
+def make_moe_single(cfg: ModelConfig):
+    """Monolithic MoE layer: the reference the rank partials must sum to."""
+    t, h, f, E = cfg.tokens, cfg.hidden, cfg.ffn, cfg.experts
+
+    def fn(x, wg, w1, b1, w2, b2):
+        return model.moe_layer_single(x, wg, w1, b1, w2, b2, cfg)
+
+    ex = [
+        jnp.zeros((t, h), jnp.float32),
+        jnp.zeros((h, E), jnp.float32),
+        jnp.zeros((E, h, f), jnp.float32),
+        jnp.zeros((E, f), jnp.float32),
+        jnp.zeros((E, f, h), jnp.float32),
+        jnp.zeros((E, h), jnp.float32),
+    ]
+    return fn, ex

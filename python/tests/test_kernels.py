@@ -1,0 +1,271 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every test asserts allclose against ref.py.
+This is the CORE correctness signal for the kernel layer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense_ffn, gating, moe_ffn, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=0.5):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# moe_ffn (grouped expert FFN)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    E=st.sampled_from([1, 2, 4, 8]),
+    C=st.sampled_from([8, 16, 32]),
+    h=st.sampled_from([8, 16, 32]),
+    fmul=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_moe_ffn_matches_ref(E, C, h, fmul, seed):
+    f = h * fmul
+    ks = keys(seed, 5)
+    xd = rand(ks[0], (E, C, h))
+    w1, b1 = rand(ks[1], (E, h, f)), rand(ks[2], (E, f), 0.1)
+    w2, b2 = rand(ks[3], (E, f, h)), rand(ks[4], (E, h), 0.1)
+    out = moe_ffn.moe_ffn(xd, w1, b1, w2, b2, block_c=min(C, 8))
+    expect = ref.moe_ffn_ref(xd, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_c", [4, 8, 16, 32])
+def test_moe_ffn_block_c_invariance(block_c):
+    """Output must not depend on the capacity tiling."""
+    E, C, h, f = 4, 32, 16, 32
+    ks = keys(7, 5)
+    args = (rand(ks[0], (E, C, h)), rand(ks[1], (E, h, f)),
+            rand(ks[2], (E, f)), rand(ks[3], (E, f, h)), rand(ks[4], (E, h)))
+    out = moe_ffn.moe_ffn(*args, block_c=block_c)
+    expect = ref.moe_ffn_ref(*args)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_ffn_grad_matches_ref():
+    """custom_vjp backward kernel vs jax-autodiff of the oracle."""
+    E, C, h, f = 3, 16, 8, 16
+    ks = keys(11, 6)
+    args = [rand(ks[0], (E, C, h)), rand(ks[1], (E, h, f)),
+            rand(ks[2], (E, f)), rand(ks[3], (E, f, h)), rand(ks[4], (E, h))]
+
+    def loss_kernel(*a):
+        return jnp.sum(jnp.sin(moe_ffn.moe_ffn(*a, block_c=8)))
+
+    def loss_ref(*a):
+        return jnp.sum(jnp.sin(ref.moe_ffn_ref(*a)))
+
+    g_k = jax.grad(loss_kernel, argnums=tuple(range(5)))(*args)
+    g_r = jax.grad(loss_ref, argnums=tuple(range(5)))(*args)
+    for a, b in zip(g_k, g_r):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+def test_moe_ffn_zero_slab_is_bias_path():
+    """Empty (zero) capacity slots still produce the FFN of zero input —
+    the combine mask zeroes them later; they must not be NaN."""
+    E, C, h, f = 2, 8, 8, 16
+    ks = keys(13, 4)
+    out = moe_ffn.moe_ffn(
+        jnp.zeros((E, C, h)), rand(ks[0], (E, h, f)), rand(ks[1], (E, f)),
+        rand(ks[2], (E, f, h)), rand(ks[3], (E, h)), block_c=8)
+    assert np.all(np.isfinite(out))
+
+
+# ---------------------------------------------------------------------------
+# dense_ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.sampled_from([8, 16, 64]),
+    h=st.sampled_from([8, 32]),
+    fmul=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_ffn_matches_ref(t, h, fmul, seed):
+    f = h * fmul
+    ks = keys(seed, 5)
+    args = (rand(ks[0], (t, h)), rand(ks[1], (h, f)), rand(ks[2], (f,)),
+            rand(ks[3], (f, h)), rand(ks[4], (h,)))
+    out = dense_ffn.dense_ffn(*args, block_t=min(t, 8))
+    np.testing.assert_allclose(out, ref.dense_ffn_ref(*args),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_dense_ffn_grad_matches_ref():
+    t, h, f = 16, 8, 16
+    ks = keys(17, 5)
+    args = [rand(ks[0], (t, h)), rand(ks[1], (h, f)), rand(ks[2], (f,)),
+            rand(ks[3], (f, h)), rand(ks[4], (h,))]
+    g_k = jax.grad(lambda *a: jnp.sum(jnp.tanh(dense_ffn.dense_ffn(*a, block_t=8))),
+                   argnums=tuple(range(5)))(*args)
+    g_r = jax.grad(lambda *a: jnp.sum(jnp.tanh(ref.dense_ffn_ref(*a))),
+                   argnums=tuple(range(5)))(*args)
+    for a, b in zip(g_k, g_r):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# router + dispatch
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.sampled_from([8, 32, 128]),
+    h=st.sampled_from([8, 32]),
+    E=st.sampled_from([2, 4, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_router_matches_ref(t, h, E, seed):
+    ks = keys(seed, 2)
+    x, wg = rand(ks[0], (t, h)), rand(ks[1], (h, E))
+    probs, top1 = gating.router(x, wg, block_t=min(t, 8))
+    probs_r, top1_r = ref.router_ref(x, wg)
+    np.testing.assert_allclose(probs, probs_r, rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(top1, top1_r)
+
+
+def test_router_probs_are_distribution():
+    x, wg = rand(keys(3, 2)[0], (64, 16)), rand(keys(3, 2)[1], (16, 8))
+    probs, top1 = gating.router(x, wg)
+    np.testing.assert_allclose(np.sum(probs, axis=-1), 1.0, rtol=1e-5)
+    assert probs.min() >= 0
+    assert top1.min() >= 0 and top1.max() < 8
+
+
+def test_router_grad_matches_ref():
+    t, h, E = 16, 8, 4
+    ks = keys(23, 2)
+    x, wg = rand(ks[0], (t, h)), rand(ks[1], (h, E))
+    g_k = jax.grad(lambda x_, w_: jnp.sum(gating.router(x_, w_, block_t=8)[0] ** 2),
+                   argnums=(0, 1))(x, wg)
+    g_r = jax.grad(lambda x_, w_: jnp.sum(ref.router_ref(x_, w_)[0] ** 2),
+                   argnums=(0, 1))(x, wg)
+    np.testing.assert_allclose(g_k[0], g_r[0], rtol=1e-3, atol=1e-6)
+    np.testing.assert_allclose(g_k[1], g_r[1], rtol=1e-3, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([8, 32, 64]),
+    E=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_dispatch_invariants_full_capacity(t, E, seed):
+    """PPMoE's uncapped dispatch: every token lands in exactly one slot and
+    slots never collide (dispatch is a partial permutation matrix)."""
+    ks = keys(seed, 2)
+    probs, top1 = ref.router_ref(rand(ks[0], (t, 16)), rand(ks[1], (16, E)))
+    dispatch, combine, aux = gating.make_dispatch(probs, top1, E, capacity=t)
+    d = np.asarray(dispatch)
+    # each token routed exactly once
+    np.testing.assert_allclose(d.sum(axis=(1, 2)), 1.0)
+    # each (expert, slot) holds at most one token
+    assert d.sum(axis=0).max() <= 1.0 + 1e-6
+    # combine = dispatch * gate prob of the chosen expert
+    gate = np.take_along_axis(np.asarray(probs), np.asarray(top1)[:, None], 1)[:, 0]
+    np.testing.assert_allclose(np.asarray(combine).sum(axis=(1, 2)), gate,
+                               rtol=1e-5)
+    # aux = E·Σ mₑ·cₑ is ≈1 when balanced, can dip slightly below when the
+    # soft (mₑ) and hard (cₑ) distributions disagree; it is always positive
+    # and bounded by E (all mass on one expert)
+    assert 0.0 < float(aux) <= E + 1e-4
+
+
+def test_dispatch_capacity_drops_overflow():
+    """With a tight capacity, tokens beyond C per expert are dropped, and
+    dropped tokens vanish from both dispatch and combine."""
+    t, E, C = 16, 2, 3
+    top1 = jnp.zeros((t,), jnp.int32)  # all tokens to expert 0
+    probs = jnp.full((t, E), 0.5)
+    dispatch, combine, _ = gating.make_dispatch(probs, top1, E, capacity=C)
+    assert float(jnp.sum(dispatch)) == C  # only C survive
+    assert float(jnp.sum(dispatch[:, 1, :])) == 0  # nothing on expert 1
+
+
+def test_dispatch_matches_ref():
+    probs, top1 = ref.router_ref(rand(keys(29, 2)[0], (32, 8)),
+                                 rand(keys(29, 2)[1], (8, 4)))
+    for cap in (4, 16, 32):
+        d1, c1, a1 = gating.make_dispatch(probs, top1, 4, cap)
+        d2, c2, a2 = ref.make_dispatch_ref(probs, top1, 4, cap)
+        np.testing.assert_allclose(d1, d2)
+        np.testing.assert_allclose(c1, c2)
+        np.testing.assert_allclose(a1, a2)
+
+
+def test_top2_dispatch_invariants():
+    t, E = 32, 4
+    ks = keys(31, 2)
+    probs, _ = ref.router_ref(rand(ks[0], (t, 16)), rand(ks[1], (16, E)))
+    dispatch, combine, aux = gating.make_dispatch_top2(probs, E, capacity=2 * t)
+    d = np.asarray(dispatch)
+    # each token routed exactly twice (top-2), to two distinct experts
+    np.testing.assert_allclose(d.sum(axis=(1, 2)), 2.0)
+    assert d.sum(axis=0).max() <= 1.0 + 1e-6
+    # combine weights per token sum to 1 (renormalized gates)
+    np.testing.assert_allclose(np.asarray(combine).sum(axis=(1, 2)), 1.0,
+                               rtol=1e-4)
+
+
+def test_gating_determinism():
+    """§3.3.3: identical inputs + weights => identical dispatch on every
+    'rank'. Run the router twice and demand bit-identical outputs."""
+    x, wg = rand(keys(37, 2)[0], (64, 32)), rand(keys(37, 2)[1], (32, 8))
+    p1, t1 = gating.router(x, wg)
+    p2, t2 = gating.router(x, wg)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+# ---------------------------------------------------------------------------
+# full MoE layer oracle composition
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), E=st.sampled_from([2, 4, 8]))
+def test_moe_layer_kernel_vs_oracle(seed, E):
+    t, h, f = 32, 16, 32
+    ks = keys(seed, 6)
+    x = rand(ks[0], (t, h))
+    wg = rand(ks[1], (h, E))
+    w1, b1 = rand(ks[2], (E, h, f)), rand(ks[3], (E, f), 0.1)
+    w2, b2 = rand(ks[4], (E, f, h)), rand(ks[5], (E, h), 0.1)
+    # kernel path
+    probs, top1 = gating.router(x, wg, block_t=8)
+    d, c, aux = gating.make_dispatch(probs, top1, E, t)
+    xd = jnp.einsum("tec,th->ech", d, x)
+    yd = moe_ffn.moe_ffn(xd, w1, b1, w2, b2, block_c=8)
+    y = jnp.einsum("tec,ech->th", c, yd)
+    # oracle
+    y_ref, aux_ref = ref.moe_layer_ref(x, wg, w1, b1, w2, b2, capacity=t)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(aux, aux_ref, rtol=1e-5)
+
+
+def test_vmem_estimate_monotone():
+    """Perf-model sanity: VMEM estimate grows with block size."""
+    v1 = moe_ffn.vmem_bytes(32, 128, 512)
+    v2 = moe_ffn.vmem_bytes(128, 128, 512)
+    assert v2 > v1
+    assert moe_ffn.mxu_flops_per_step(64, 128, 512) == 2 * 64 * 128 * 512 * 2

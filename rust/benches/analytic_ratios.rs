@@ -1,0 +1,64 @@
+//! Bench: the paper's analytic communication/compute ratios (Eq. 2, 3, 5).
+//!
+//! Regenerates the arithmetic of §3.2 with the paper's own constants:
+//! * Eq. 2/3 — a2a/FFN latency ratio: > (E−1)·E/16 for inter-node IB.
+//!   At E = 64 the bound is 252; at E = 256 it is 4080 — "these two
+//!   all-to-all operations would be a critical bottleneck".
+//! * Eq. 5 — TP all-reduce/compute ratio = (T−1)·T·F/(4·B·h) ≈ 6 at
+//!   T = 8, h = 1000 over NVLink — "dramatically smaller".
+//!
+//! Also sweeps the α-β simulator's all-to-all vs all-reduce costs to show
+//! where the crossover falls under the linear (measured-consistent) model.
+
+use ppmoe::comm::cost::{paper, CostModel};
+use ppmoe::config::v100_cluster;
+use ppmoe::util::bench::bench;
+
+const F: f64 = 125e12; // V100 fp16 peak
+const B_IB: f64 = 12.5e9; // InfiniBand
+const B_NVL: f64 = 300e9; // NVLink
+
+fn main() {
+    println!("=== Eq. 2/3: t_a2a / t_FFN (DPMoE, inter-node IB) ===");
+    println!("{:>6} {:>12} {:>14} {:>14}", "E", "bound(E)", "h=1024", "h=4096");
+    for e in [8.0, 16.0, 32.0, 64.0, 128.0, 256.0] {
+        println!(
+            "{:>6} {:>12.1} {:>14.1} {:>14.1}",
+            e,
+            paper::a2a_over_ffn_bound(e),
+            paper::a2a_over_ffn(e, F, B_IB, 1024.0),
+            paper::a2a_over_ffn(e, F, B_IB, 4096.0)
+        );
+    }
+    // paper's claim: at E = 64, ratio >> 1 (a2a dominates)
+    assert!(paper::a2a_over_ffn_bound(64.0) > 250.0);
+
+    println!("\n=== Eq. 5: t_allreduce / t_cal (tensor parallel, NVLink) ===");
+    println!("{:>6} {:>12} {:>12}", "T", "h=1000", "h=4096");
+    for t in [2.0, 4.0, 8.0] {
+        println!(
+            "{:>6} {:>12.3} {:>12.3}",
+            t,
+            paper::allreduce_over_cal(t, F, B_NVL, 1000.0),
+            paper::allreduce_over_cal(t, F, B_NVL, 4096.0)
+        );
+    }
+    let r = paper::allreduce_over_cal(8.0, F, B_NVL, 1000.0);
+    println!("paper check: T=8, h=1000 -> {r:.3} (paper: 35/6 ≈ 5.833)");
+    assert!((r - 35.0 / 6.0).abs() < 1e-9);
+
+    println!("\n=== α-β simulator: PPMoE all-reduce vs DPMoE a2a, per MoE layer ===");
+    let cm = CostModel::new(v100_cluster(256));
+    let bytes = (8 * 2048 * 4096 * 2) as f64; // b=8, s=2048, h=4096, fp16
+    println!("{:>6} {:>16} {:>16} {:>10}", "ranks", "a2a (ms)", "allreduce (ms)", "a2a/ar");
+    for n in [2usize, 4, 8, 16, 32, 64] {
+        let a2a = cm.all_to_all(n, bytes).seconds * 1e3;
+        let ar = cm.all_reduce(8.min(n), bytes).seconds * 1e3; // PPMoE: inner-node
+        println!("{n:>6} {a2a:>16.2} {ar:>16.2} {:>10.1}", a2a / ar);
+    }
+
+    println!("\n=== micro timings ===");
+    bench("eq2_eval", || paper::a2a_over_ffn(64.0, F, B_IB, 4096.0));
+    bench("alpha_beta_a2a", || cm.all_to_all(64, bytes).seconds);
+    bench("alpha_beta_allreduce", || cm.all_reduce(8, bytes).seconds);
+}

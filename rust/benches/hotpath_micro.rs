@@ -1,0 +1,81 @@
+//! Bench: L3 coordinator hot paths (the perf-pass targets of DESIGN §7).
+//!
+//! * router dispatch (route_top1) across token/expert scales
+//! * in-process all-reduce across rank counts
+//! * 1F1B schedule simulation
+//! * fused Adam update
+//! * manifest JSON parse
+//!
+//! Before/after numbers for each optimization iteration are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+
+use ppmoe::comm::AllReduceGroup;
+use ppmoe::moe::{route_top1, synth_logits};
+use ppmoe::pipeline::{analytic_bubble, simulate, Schedule, StageTiming};
+use ppmoe::runtime::Tensor;
+use ppmoe::trainer::adam::Adam;
+use ppmoe::util::bench::bench;
+use ppmoe::util::prng::Rng;
+
+fn main() {
+    println!("=== router (route_top1) ===");
+    let mut rng = Rng::new(1);
+    for (tokens, experts) in [(2048, 8), (16384, 64), (65536, 64)] {
+        let logits = synth_logits(&mut rng, tokens, experts, 0.5);
+        bench(&format!("route_top1 t={tokens} E={experts}"), || {
+            route_top1(&logits, experts, tokens).tokens()
+        });
+    }
+
+    println!("\n=== in-process all-reduce ===");
+    for ranks in [2usize, 4, 8] {
+        let elems = 262_144; // 1 MiB of f32 per rank
+        bench(&format!("all_reduce ranks={ranks} 1MiB"), || {
+            let g = AllReduceGroup::new(ranks);
+            let handles: Vec<_> = (0..ranks)
+                .map(|r| {
+                    let g: Arc<AllReduceGroup> = g.clone();
+                    std::thread::spawn(move || {
+                        let v = vec![r as f32; elems];
+                        g.all_reduce(&v)[0]
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum::<f32>()
+        });
+    }
+
+    println!("\n=== 1F1B schedule simulation ===");
+    for (stages, micros) in [(4, 16), (16, 64), (64, 256)] {
+        let timing = vec![StageTiming { fwd: 1.0, bwd: 2.0, p2p: 0.1 }; stages];
+        bench(&format!("simulate p={stages} m={micros}"), || {
+            let s = simulate(Schedule::OneFOneB, &timing, micros);
+            assert!((s.bubble_fraction - analytic_bubble(stages, micros)).abs() < 0.5);
+            s.makespan
+        });
+    }
+
+    println!("\n=== fused Adam update ===");
+    for numel in [65_536usize, 1_048_576] {
+        let mut params = vec![Tensor::f32(vec![0.1; numel], vec![numel])];
+        let grads = vec![Tensor::f32(vec![0.01; numel], vec![numel])];
+        let mut opt = Adam::new(1e-3, &params);
+        bench(&format!("adam update {numel} params"), || {
+            opt.update(&mut params, &grads).unwrap();
+        });
+    }
+
+    println!("\n=== manifest JSON parse ===");
+    let manifest_path = std::path::Path::new("artifacts/manifest.json");
+    if manifest_path.exists() {
+        let text = std::fs::read_to_string(manifest_path).unwrap();
+        println!("manifest size: {} bytes", text.len());
+        bench("manifest parse", || {
+            ppmoe::util::json::parse(&text).unwrap()
+        });
+    } else {
+        println!("(artifacts/manifest.json missing — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate Table 1 (DPMoE forward breakdown) and time the
+//! simulator. Prints the paper-layout table followed by timing stats.
+//!
+//! Paper reference (143B DPMoE, 256 V100): total 7617 ms, MoE fwd 82.6%,
+//! a2a 65.5%, gating 2.1%, others 17.3%.
+
+use ppmoe::coordinator::tables;
+use ppmoe::sim::Component;
+use ppmoe::util::bench::bench;
+
+fn main() {
+    let bd = tables::table1_breakdown().unwrap();
+    println!("=== Table 1: DPMoE forward breakdown ===");
+    print!("{}", tables::table1_markdown().unwrap());
+    let total = bd.total();
+    let a2a = bd.get(Component::FirstA2A) + bd.get(Component::SecondA2A);
+    println!(
+        "\nshape check: a2a {:.1}% (paper 65.5%), MoE {:.1}% (paper 82.6%), \
+         gating {:.1}% (paper 2.1%)",
+        a2a / total * 100.0,
+        bd.moe_total() / total * 100.0,
+        bd.get(Component::Gating) / total * 100.0
+    );
+
+    println!("\n=== simulator cost ===");
+    bench("table1_breakdown_sim", || {
+        tables::table1_breakdown().unwrap().total()
+    });
+}

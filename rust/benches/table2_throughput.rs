@@ -1,0 +1,33 @@
+//! Bench: regenerate Table 2 (all 13 throughput rows) and time the sweep.
+//!
+//! Paper reference: PPMoE reaches 81.4% (small) / 90.7% (large) of the
+//! slowest dense baseline; best DPMoE reaches 66.2% / 26.1%; PPMoE beats
+//! DPMoE by 1.25x (small) and 1.77x (large).
+
+use ppmoe::coordinator::tables;
+use ppmoe::util::bench::bench;
+
+fn main() {
+    println!("=== Table 2: training throughput ===");
+    print!("{}", tables::table2_markdown().unwrap());
+
+    let rows = tables::table2_rows().unwrap();
+    let best = |range: std::ops::Range<usize>| -> f64 {
+        rows[range]
+            .iter()
+            .map(|r| r.tokens_per_sec_per_gpu)
+            .fold(0.0, f64::max)
+    };
+    println!("\nshape checks:");
+    println!(
+        "  small: PPMoE/bestDPMoE = {:.2}x (paper 1.25x)",
+        rows[5].tokens_per_sec_per_gpu / best(3..5)
+    );
+    println!(
+        "  large: PPMoE/bestDPMoE = {:.2}x (paper 1.77x)",
+        rows[12].tokens_per_sec_per_gpu / best(9..12)
+    );
+
+    println!("\n=== simulator cost ===");
+    bench("table2_full_sweep", || tables::table2_rows().unwrap().len());
+}

@@ -1,0 +1,199 @@
+//! Cluster topology and device-mesh mapping.
+//!
+//! Models the paper's testbed: nodes of 8 V100s with NVLink inside and
+//! InfiniBand between (§3.2). The mesh assigns each (pp, dp, tp) coordinate
+//! to a physical device, with TP innermost so a TP group always lives inside
+//! one node — the invariant PPMoE's expert placement relies on (§3.3.2:
+//! "all experts in an MoE layer are integrated inside a node").
+
+use crate::config::{ClusterCfg, ParallelCfg};
+use anyhow::bail;
+
+/// Physical device id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+impl DeviceId {
+    pub fn node(&self, c: &ClusterCfg) -> usize {
+        self.0 / c.gpus_per_node
+    }
+}
+
+/// Link class between two devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Link {
+    Local,     // same device
+    InnerNode, // NVLink
+    InterNode, // InfiniBand
+}
+
+pub fn link(a: DeviceId, b: DeviceId, c: &ClusterCfg) -> Link {
+    if a == b {
+        Link::Local
+    } else if a.node(c) == b.node(c) {
+        Link::InnerNode
+    } else {
+        Link::InterNode
+    }
+}
+
+/// Logical coordinate in the parallel mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub pp: usize,
+    pub dp: usize,
+    pub tp: usize,
+}
+
+/// Device mesh: bijection between mesh coordinates and devices.
+///
+/// Layout order (innermost first): tp, dp, pp — so consecutive TP ranks are
+/// consecutive devices (same node when tp <= gpus_per_node), DP groups pack
+/// next, and pipeline stages land on distinct node groups.
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    pub cfg: ParallelCfg,
+    pub cluster: ClusterCfg,
+}
+
+impl Mesh {
+    pub fn new(cfg: ParallelCfg, cluster: ClusterCfg) -> anyhow::Result<Self> {
+        if cfg.world() > cluster.gpus {
+            bail!("mesh needs {} devices, cluster has {}", cfg.world(), cluster.gpus);
+        }
+        Ok(Mesh { cfg, cluster })
+    }
+
+    pub fn device(&self, c: Coord) -> DeviceId {
+        debug_assert!(c.tp < self.cfg.tp && c.dp < self.cfg.dp && c.pp < self.cfg.pp);
+        DeviceId(c.tp + self.cfg.tp * (c.dp + self.cfg.dp * c.pp))
+    }
+
+    pub fn coord(&self, d: DeviceId) -> Coord {
+        let tp = d.0 % self.cfg.tp;
+        let dp = (d.0 / self.cfg.tp) % self.cfg.dp;
+        let pp = d.0 / (self.cfg.tp * self.cfg.dp);
+        Coord { pp, dp, tp }
+    }
+
+    /// All devices in the TP group containing `c`.
+    pub fn tp_group(&self, c: Coord) -> Vec<DeviceId> {
+        (0..self.cfg.tp)
+            .map(|tp| self.device(Coord { tp, ..c }))
+            .collect()
+    }
+
+    /// All devices in the DP group containing `c`.
+    pub fn dp_group(&self, c: Coord) -> Vec<DeviceId> {
+        (0..self.cfg.dp)
+            .map(|dp| self.device(Coord { dp, ..c }))
+            .collect()
+    }
+
+    /// Whether every TP group fits inside a single node — PPMoE's
+    /// placement precondition.
+    pub fn tp_groups_inner_node(&self) -> bool {
+        if self.cfg.tp > self.cluster.gpus_per_node {
+            return false;
+        }
+        // TP is innermost, so a group is contiguous; it stays in-node iff
+        // groups never straddle a node boundary.
+        self.cluster.gpus_per_node % self.cfg.tp == 0
+    }
+
+    /// Worst link class inside a group (drives the collective bandwidth).
+    pub fn group_link(&self, devices: &[DeviceId]) -> Link {
+        let mut worst = Link::Local;
+        for w in devices.windows(2) {
+            match link(w[0], w[1], &self.cluster) {
+                Link::InterNode => return Link::InterNode,
+                Link::InnerNode => worst = Link::InnerNode,
+                Link::Local => {}
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{v100_cluster, Scheme};
+    use crate::util::prop::forall;
+
+    fn mesh(dp: usize, tp: usize, pp: usize) -> Mesh {
+        let cfg = ParallelCfg { dp, tp, pp, ep: tp, zero: false, scheme: Scheme::PpMoE };
+        Mesh::new(cfg, v100_cluster(dp * tp * pp)).unwrap()
+    }
+
+    #[test]
+    fn coord_device_bijection() {
+        // property: device(coord(d)) == d for every device, across layouts
+        forall(
+            "mesh-bijection",
+            42,
+            50,
+            |r| {
+                let dp = 1 << r.below(3);
+                let tp = 1 << r.below(4);
+                let pp = 1 << r.below(3);
+                (dp, tp, pp)
+            },
+            |&(dp, tp, pp)| {
+                let m = mesh(dp, tp, pp);
+                for d in 0..m.cfg.world() {
+                    let dev = DeviceId(d);
+                    if m.device(m.coord(dev)) != dev {
+                        return Err(format!("bijection broken at device {d}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tp_groups_stay_inner_node() {
+        // The PPMoE invariant: tp=8 on 8-GPU nodes never crosses nodes.
+        let m = mesh(2, 8, 2);
+        assert!(m.tp_groups_inner_node());
+        for pp in 0..2 {
+            for dp in 0..2 {
+                let g = m.tp_group(Coord { pp, dp, tp: 0 });
+                assert_eq!(m.group_link(&g), Link::InnerNode);
+            }
+        }
+    }
+
+    #[test]
+    fn wide_tp_would_cross_nodes() {
+        let cfg = ParallelCfg { dp: 1, tp: 16, pp: 1, ep: 16, zero: false, scheme: Scheme::PpMoE };
+        let m = Mesh::new(cfg, v100_cluster(16)).unwrap();
+        assert!(!m.tp_groups_inner_node());
+        let g = m.tp_group(Coord { pp: 0, dp: 0, tp: 0 });
+        assert_eq!(m.group_link(&g), Link::InterNode);
+    }
+
+    #[test]
+    fn dp_groups_cross_nodes_at_scale() {
+        // 32-GPU Table-2 layout: dp=4, tp=8 -> DP peers are one-per-node.
+        let m = mesh(4, 8, 1);
+        let g = m.dp_group(Coord { pp: 0, dp: 0, tp: 0 });
+        assert_eq!(g.len(), 4);
+        assert_eq!(m.group_link(&g), Link::InterNode);
+    }
+
+    #[test]
+    fn link_classification() {
+        let c = v100_cluster(16);
+        assert_eq!(link(DeviceId(0), DeviceId(0), &c), Link::Local);
+        assert_eq!(link(DeviceId(0), DeviceId(7), &c), Link::InnerNode);
+        assert_eq!(link(DeviceId(0), DeviceId(8), &c), Link::InterNode);
+    }
+
+    #[test]
+    fn mesh_rejects_oversubscription() {
+        let cfg = ParallelCfg { dp: 64, tp: 8, pp: 4, ep: 8, zero: false, scheme: Scheme::PpMoE };
+        assert!(Mesh::new(cfg, v100_cluster(32)).is_err());
+    }
+}

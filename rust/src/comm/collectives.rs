@@ -1,0 +1,170 @@
+//! Real in-process collectives over threads.
+//!
+//! The paper's ranks are GPUs connected by NVLink/IB; ours are worker
+//! threads sharing memory. The *code path* is preserved: every TP rank
+//! produces a partial tensor, and [`AllReduceGroup::all_reduce`] combines
+//! them with a sum and hands every rank the same result — exactly the
+//! inner-node all-reduce that replaces DPMoE's all-to-alls (§3.3.4).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Reusable sum-all-reduce over `n` ranks (generation-counted so the same
+/// group can be used for many rounds without re-allocation).
+pub struct AllReduceGroup {
+    n: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+struct State {
+    generation: u64,
+    arrived: usize,
+    acc: Vec<f32>,
+    result: Arc<Vec<f32>>,
+}
+
+impl AllReduceGroup {
+    pub fn new(n: usize) -> Arc<Self> {
+        assert!(n > 0);
+        Arc::new(AllReduceGroup {
+            n,
+            state: Mutex::new(State {
+                generation: 0,
+                arrived: 0,
+                acc: Vec::new(),
+                result: Arc::new(Vec::new()),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Sum `contribution` across all ranks; every caller receives the full
+    /// sum. Blocks until all `n` ranks of the current round have arrived.
+    pub fn all_reduce(&self, contribution: &[f32]) -> Arc<Vec<f32>> {
+        let mut st = self.state.lock().unwrap();
+        let my_gen = st.generation;
+        if st.arrived == 0 {
+            st.acc = contribution.to_vec();
+        } else {
+            assert_eq!(st.acc.len(), contribution.len(), "rank shape mismatch");
+            for (a, c) in st.acc.iter_mut().zip(contribution) {
+                *a += c;
+            }
+        }
+        st.arrived += 1;
+        if st.arrived == self.n {
+            st.result = Arc::new(std::mem::take(&mut st.acc));
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return st.result.clone();
+        }
+        while st.generation == my_gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.result.clone()
+    }
+}
+
+/// Simple reusable barrier (used at step boundaries by the trainer).
+pub struct Barrier {
+    n: usize,
+    state: Mutex<(u64, usize)>,
+    cv: Condvar,
+}
+
+impl Barrier {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(Barrier { n, state: Mutex::new((0, 0)), cv: Condvar::new() })
+    }
+
+    pub fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        let my_gen = st.0;
+        st.1 += 1;
+        if st.1 == self.n {
+            st.0 += 1;
+            st.1 = 0;
+            self.cv.notify_all();
+            return;
+        }
+        while st.0 == my_gen {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        let g = AllReduceGroup::new(4);
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let contrib = vec![r as f32; 8];
+                    g.all_reduce(&contrib)
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(&**out, &vec![0.0 + 1.0 + 2.0 + 3.0; 8][..]);
+        }
+    }
+
+    #[test]
+    fn all_reduce_reusable_across_rounds() {
+        let g = AllReduceGroup::new(2);
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut sums = Vec::new();
+                    for round in 0..5 {
+                        let v = vec![(r + round) as f32];
+                        sums.push(g.all_reduce(&v)[0]);
+                    }
+                    sums
+                })
+            })
+            .collect();
+        for h in handles {
+            // round k: (0+k) + (1+k) = 2k+1
+            assert_eq!(h.join().unwrap(), vec![1.0, 3.0, 5.0, 7.0, 9.0]);
+        }
+    }
+
+    #[test]
+    fn single_rank_identity() {
+        let g = AllReduceGroup::new(1);
+        let out = g.all_reduce(&[5.0, 6.0]);
+        assert_eq!(&**out, &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn barrier_releases_all() {
+        let b = Barrier::new(3);
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let b = b.clone();
+                thread::spawn(move || {
+                    for _ in 0..10 {
+                        b.wait();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

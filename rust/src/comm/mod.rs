@@ -1,0 +1,9 @@
+//! Communication: α-β collective cost models (the paper's Eq. 2–5) and
+//! real in-process collectives used by the TP×EP executor and the trainer.
+
+pub mod collectives;
+pub mod cost;
+pub mod hierarchical;
+
+pub use collectives::{AllReduceGroup, Barrier};
+pub use cost::{CommCost, CostModel};

@@ -1,0 +1,387 @@
+//! Typed configuration: model dims, parallel layout, cluster, training.
+//!
+//! Presets mirror the paper's §4.1 setups (GPT-3 Medium / GPT-3 6.7B
+//! backbones, 64 experts on every other FFN) and the Huawei-cloud V100
+//! clusters of Table 2. Configs can be loaded from simple `key = value`
+//! files (`configs/*.cfg`) and overridden from the CLI; TOML/serde are
+//! unavailable offline, so the format is a deliberately minimal subset.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+/// Transformer architecture dimensions (paper notation: h, s, b, E, L).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub hidden: usize,       // h
+    pub ffn: usize,          // usually 4h
+    pub layers: usize,       // L
+    pub heads: usize,
+    pub vocab: usize,
+    pub seq: usize,          // s
+    pub experts: usize,      // E (1 = dense)
+    pub moe_every: usize,    // MoE on every `moe_every`-th FFN (2 = every other)
+    pub top_k: usize,        // gating schedule (paper: top-1)
+}
+
+impl ModelDims {
+    /// Number of MoE layers.
+    pub fn moe_layers(&self) -> usize {
+        if self.experts <= 1 || self.moe_every == 0 {
+            0
+        } else {
+            self.layers / self.moe_every
+        }
+    }
+
+    pub fn dense_ffn_layers(&self) -> usize {
+        self.layers - self.moe_layers()
+    }
+
+    /// Parameter count of one dense FFN (two GEMMs + biases).
+    pub fn ffn_params(&self) -> usize {
+        2 * self.hidden * self.ffn + self.ffn + self.hidden
+    }
+
+    /// Parameter count of one attention block (qkv + out proj).
+    pub fn attn_params(&self) -> usize {
+        4 * self.hidden * self.hidden + 4 * self.hidden
+    }
+
+    /// Total parameters (embeddings + blocks + experts + gating + head).
+    pub fn total_params(&self) -> usize {
+        let emb = self.vocab * self.hidden + self.seq * self.hidden;
+        let per_block_common = self.attn_params() + 4 * self.hidden; // + 2 LN
+        let dense_ffns = self.dense_ffn_layers() * self.ffn_params();
+        let moe_ffns = self.moe_layers()
+            * (self.experts * self.ffn_params() + self.hidden * self.experts);
+        let head = self.hidden * self.vocab + 2 * self.hidden;
+        emb + self.layers * per_block_common + dense_ffns + moe_ffns + head
+    }
+
+    /// The dense backbone this MoE model scales from (E=1 everywhere).
+    pub fn backbone(&self) -> ModelDims {
+        ModelDims {
+            name: format!("{}-backbone", self.name),
+            experts: 1,
+            ..self.clone()
+        }
+    }
+}
+
+/// Parallel layout: the (DP, TP, PP, EP) tuple of Table 2, plus ZeRO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelCfg {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub ep: usize, // expert-parallel world size (DPMoE: ==dp; PPMoE: ==tp)
+    pub zero: bool,
+    pub scheme: Scheme,
+}
+
+/// Which MoE parallel architecture is in effect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Dense model (no experts).
+    Dense,
+    /// Classic MoE bound to data parallel: all-to-all dispatch/gather (§3.1.4).
+    DpMoE,
+    /// The paper's architecture: EP inside the TP group, index-slice +
+    /// inner-node all-reduce (§3.3).
+    PpMoE,
+}
+
+impl ParallelCfg {
+    pub fn world(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+
+    /// Validate divisibility constraints against a model + cluster.
+    pub fn validate(&self, m: &ModelDims, c: &ClusterCfg) -> anyhow::Result<()> {
+        if self.world() == 0 || self.world() > c.gpus {
+            bail!(
+                "world {} exceeds cluster {} GPUs",
+                self.world(),
+                c.gpus
+            );
+        }
+        if m.layers % self.pp != 0 {
+            bail!("layers {} % pp {} != 0", m.layers, self.pp);
+        }
+        if self.tp > c.gpus_per_node {
+            bail!("tp {} exceeds node size {}", self.tp, c.gpus_per_node);
+        }
+        match self.scheme {
+            Scheme::Dense => {}
+            Scheme::DpMoE => {
+                if m.experts % self.ep != 0 {
+                    bail!("experts {} % ep {} != 0", m.experts, self.ep);
+                }
+                // EP is bound to (a subgroup of) DP: each EP group of size
+                // `ep` spans `ep` data-parallel ranks (paper §3.1.4; Table 2
+                // lists DP=256 with E=64 -> EP groups of 64 inside DP).
+                if self.dp % self.ep != 0 {
+                    bail!(
+                        "DPMoE needs ep | dp (got ep={} dp={})",
+                        self.ep,
+                        self.dp
+                    );
+                }
+            }
+            Scheme::PpMoE => {
+                if m.experts % self.tp != 0 {
+                    bail!(
+                        "PPMoE places E={} experts across tp={} ranks",
+                        m.experts,
+                        self.tp
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Hardware model: the paper's V100 constants (§3.2) by default.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterCfg {
+    pub name: String,
+    pub gpus: usize,
+    pub gpus_per_node: usize,
+    /// Per-device peak FLOP/s (paper: F = 125e12, V100 fp16).
+    pub flops: f64,
+    /// Achievable fraction of peak on GEMMs (MFU-style derate).
+    pub efficiency: f64,
+    /// Inner-node bandwidth, bytes/s (paper: NVLink 300e9).
+    pub bw_inner: f64,
+    /// Inter-node bandwidth, bytes/s (paper: InfiniBand 12.5e9).
+    pub bw_inter: f64,
+    /// Achieved fraction of inter-node peak for collectives (NCCL a2a /
+    /// all-reduce over IB typically reach ~50% of line rate).
+    pub ib_efficiency: f64,
+    /// Collective startup latency per hop, seconds.
+    pub alpha: f64,
+    /// Bytes per element on the wire (paper: fp16 = 2).
+    pub wire_bytes: usize,
+    /// Device memory bandwidth, bytes/s (V100 HBM2: ~900e9). Drives the
+    /// cost of bandwidth-bound ops (gating dispatch, index slicing, LN).
+    pub mem_bw: f64,
+}
+
+/// Training setup: batch geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrainCfg {
+    pub micro_batch: usize,   // b per microbatch per replica
+    pub num_micro: usize,     // microbatches per global batch (PP depth m)
+}
+
+impl TrainCfg {
+    pub fn global_tokens(&self, m: &ModelDims, dp: usize) -> usize {
+        self.micro_batch * self.num_micro * m.seq * dp
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Presets
+// ---------------------------------------------------------------------------
+
+/// GPT-3 Medium backbone (350M): 24 layers, h=1024, 16 heads (§4.1).
+pub fn gpt3_medium() -> ModelDims {
+    ModelDims {
+        name: "gpt3-medium".into(),
+        hidden: 1024,
+        ffn: 4096,
+        layers: 24,
+        heads: 16,
+        vocab: 50257,
+        seq: 2048,
+        experts: 1,
+        moe_every: 0,
+        top_k: 1,
+    }
+}
+
+/// GPT-3 6.7B backbone: 32 layers, h=4096, 32 heads (§4.1).
+pub fn gpt3_6_7b() -> ModelDims {
+    ModelDims {
+        name: "gpt3-6.7b".into(),
+        hidden: 4096,
+        ffn: 16384,
+        layers: 32,
+        heads: 32,
+        vocab: 50257,
+        seq: 2048,
+        experts: 1,
+        moe_every: 0,
+        top_k: 1,
+    }
+}
+
+/// Small setting: GPT-3 Medium + 64 experts on every other FFN (~6.7B).
+pub fn moe_small_setting() -> ModelDims {
+    ModelDims {
+        name: "moe-6.7b".into(),
+        experts: 64,
+        moe_every: 2,
+        ..gpt3_medium()
+    }
+}
+
+/// Large setting: GPT-3 6.7B + 64 experts on every other FFN (~143B).
+pub fn moe_large_setting() -> ModelDims {
+    ModelDims {
+        name: "moe-143b".into(),
+        experts: 64,
+        moe_every: 2,
+        ..gpt3_6_7b()
+    }
+}
+
+/// Huawei-cloud style V100 cluster of `n` GPUs, 8 per node, paper constants.
+pub fn v100_cluster(n: usize) -> ClusterCfg {
+    ClusterCfg {
+        name: format!("v100x{n}"),
+        gpus: n,
+        gpus_per_node: 8,
+        flops: 125e12,
+        efficiency: 0.65,
+        bw_inner: 300e9,
+        bw_inter: 12.5e9,
+        ib_efficiency: 0.5,
+        alpha: 5e-6,
+        wire_bytes: 2,
+        mem_bw: 900e9,
+    }
+}
+
+pub fn model_preset(name: &str) -> anyhow::Result<ModelDims> {
+    Ok(match name {
+        "gpt3-medium" | "0.3b" => gpt3_medium(),
+        "gpt3-6.7b" | "6.7b" => gpt3_6_7b(),
+        "moe-small" | "moe-6.7b" => moe_small_setting(),
+        "moe-large" | "moe-143b" => moe_large_setting(),
+        _ => bail!("unknown model preset '{name}'"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// key = value override files
+// ---------------------------------------------------------------------------
+
+/// Parse a `key = value` config file (comments with '#', blank lines ok).
+pub fn parse_kv(text: &str) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(map)
+}
+
+pub fn load_kv(path: &Path) -> anyhow::Result<BTreeMap<String, String>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_kv(&text)
+}
+
+/// Apply `key = value` overrides onto a ModelDims.
+pub fn apply_model_overrides(
+    m: &mut ModelDims,
+    kv: &BTreeMap<String, String>,
+) -> anyhow::Result<()> {
+    for (k, v) in kv {
+        let parse = || -> anyhow::Result<usize> {
+            v.parse::<usize>().with_context(|| format!("{k} = {v}"))
+        };
+        match k.as_str() {
+            "hidden" => m.hidden = parse()?,
+            "ffn" => m.ffn = parse()?,
+            "layers" => m.layers = parse()?,
+            "heads" => m.heads = parse()?,
+            "vocab" => m.vocab = parse()?,
+            "seq" => m.seq = parse()?,
+            "experts" => m.experts = parse()?,
+            "moe_every" => m.moe_every = parse()?,
+            "top_k" => m.top_k = parse()?,
+            "name" => m.name = v.clone(),
+            _ => bail!("unknown model key '{k}'"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_paper_scale() {
+        // Paper: GPT-3 Medium 350M; 64-expert scaling -> ~6.7B.
+        let m = gpt3_medium();
+        let p = m.total_params() as f64;
+        assert!((3.0e8..4.5e8).contains(&p), "medium params {p}");
+        let moe = moe_small_setting();
+        let pm = moe.total_params() as f64;
+        assert!((5.5e9..8.0e9).contains(&pm), "moe-small params {pm}");
+        // Large: 6.7B backbone -> ~143B.
+        let big = moe_large_setting();
+        let pb = big.total_params() as f64;
+        assert!((1.2e11..1.7e11).contains(&pb), "moe-large params {pb}");
+    }
+
+    #[test]
+    fn backbone_strips_experts() {
+        let b = moe_small_setting().backbone();
+        assert_eq!(b.experts, 1);
+        assert_eq!(b.hidden, 1024);
+    }
+
+    #[test]
+    fn validate_catches_bad_layouts() {
+        let m = moe_small_setting();
+        let c = v100_cluster(32);
+        let ok = ParallelCfg { dp: 1, tp: 8, pp: 4, ep: 8, zero: false, scheme: Scheme::PpMoE };
+        ok.validate(&m, &c).unwrap();
+        // TP exceeding node size
+        let bad = ParallelCfg { tp: 16, ..ok };
+        assert!(bad.validate(&m, &c).is_err());
+        // world too big
+        let bad = ParallelCfg { dp: 64, ..ok };
+        assert!(bad.validate(&m, &c).is_err());
+        // DPMoE with ep != dp
+        let bad = ParallelCfg { dp: 4, tp: 1, pp: 1, ep: 8, zero: true, scheme: Scheme::DpMoE };
+        assert!(bad.validate(&m, &c).is_err());
+        // PPMoE: experts must divide across tp
+        let m2 = ModelDims { experts: 6, ..moe_small_setting() };
+        assert!(ok.validate(&m2, &c).is_err());
+    }
+
+    #[test]
+    fn kv_parsing_and_overrides() {
+        let kv = parse_kv("hidden = 256\n# comment\nlayers= 8\nname = test\n").unwrap();
+        let mut m = gpt3_medium();
+        apply_model_overrides(&mut m, &kv).unwrap();
+        assert_eq!((m.hidden, m.layers, m.name.as_str()), (256, 8, "test"));
+        assert!(parse_kv("no equals sign").is_err());
+        let bad = parse_kv("bogus = 1").unwrap();
+        assert!(apply_model_overrides(&mut m, &bad).is_err());
+    }
+
+    #[test]
+    fn moe_layer_counting() {
+        let m = moe_small_setting();
+        assert_eq!(m.moe_layers(), 12);
+        assert_eq!(m.dense_ffn_layers(), 12);
+        let d = gpt3_medium();
+        assert_eq!(d.moe_layers(), 0);
+    }
+}

@@ -1,0 +1,112 @@
+//! The launcher/coordinator: resolves configs, drives the simulator to
+//! regenerate the paper's tables, and orchestrates real runs. Shared by the
+//! `ppmoe` binary, the examples, and the benches so that every entry point
+//! prints identical tables.
+
+pub mod tables;
+
+pub use tables::{table1_markdown, table2_markdown, table2_rows, table3_markdown};
+
+use std::collections::BTreeMap;
+
+/// Minimal CLI argument parser (clap is unavailable offline): supports
+/// `--key value`, `--flag`, and positional arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Boolean switches (everything else with `--` takes a value).
+const KNOWN_FLAGS: &[&str] = &["gpipe", "zero", "verbose", "help", "no-full"];
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, known boolean flag, or `--key value`
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&key) {
+                    args.flags.push(key.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a float, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = parse("train --steps 100 --lr=0.001 --verbose artifacts");
+        assert_eq!(a.positional, vec!["train", "artifacts"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("lr"), Some("0.001"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--steps 10 --lr 0.5");
+        assert_eq!(a.get_usize("steps", 1).unwrap(), 10);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!((a.get_f32("lr", 0.0).unwrap() - 0.5).abs() < 1e-9);
+        let bad = parse("--steps ten");
+        assert!(bad.get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn flag_vs_option_disambiguation() {
+        let a = parse("--flag --opt val");
+        assert!(a.has_flag("flag"));
+        assert_eq!(a.get("opt"), Some("val"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Regenerate the paper's tables from the simulator.
+//!
+//! Every table/figure of the evaluation section has a generator here; the
+//! examples and benches call these so all entry points agree. Absolute
+//! numbers differ from the authors' testbed (we simulate their V100/IB
+//! constants); the reproduction target is the *shape*: who wins, component
+//! shares, and the speed-ratio ordering.
+
+use crate::config::{
+    gpt3_6_7b, gpt3_medium, moe_large_setting, moe_small_setting, v100_cluster,
+    ModelDims, ParallelCfg, Scheme, TrainCfg,
+};
+use crate::metrics::{markdown_table, ms, pct};
+use crate::model::Batch;
+use crate::sim::{Breakdown, Component, Simulator};
+
+/// One row of Table 2.
+#[derive(Debug, Clone)]
+pub struct ThroughputRow {
+    pub model: String,
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub experts: usize,
+    pub zero: bool,
+    pub gpus: usize,
+    pub tokens_per_sec_per_gpu: f64,
+    pub speed_ratio: Option<f64>, // vs the slowest dense baseline
+}
+
+/// The batch geometry used across the Table 2 sweep (paper: adaptive; we fix
+/// one setting so rows are comparable — see EXPERIMENTS.md).
+pub const SWEEP_TC: TrainCfg = TrainCfg { micro_batch: 8, num_micro: 32 };
+
+/// Global microbatch budget per step: every Table-2 row processes the same
+/// global batch (micro_batch × GLOBAL_MICROS × seq tokens), so DP rows get
+/// num_micro = GLOBAL_MICROS/dp and PP rows pipeline the full budget. This
+/// mirrors the paper's fixed-global-batch comparison.
+pub const GLOBAL_MICROS: usize = 256;
+
+/// Per-layout TrainCfg holding the global batch constant.
+pub fn sweep_tc(dp: usize) -> TrainCfg {
+    TrainCfg { micro_batch: 8, num_micro: (GLOBAL_MICROS / dp).max(1) }
+}
+
+/// Build a layout; DPMoE's EP group is min(dp, E) ranks (the paper's EP=64
+/// column with DP=256 means EP groups of 64 inside DP).
+pub fn cfg(
+    dp: usize,
+    tp: usize,
+    pp: usize,
+    zero: bool,
+    scheme: Scheme,
+    experts: usize,
+) -> ParallelCfg {
+    let ep = match scheme {
+        Scheme::DpMoE => dp.min(experts),
+        Scheme::PpMoE => tp,
+        Scheme::Dense => 1,
+    };
+    ParallelCfg { dp, tp, pp, ep, zero, scheme }
+}
+
+fn run(m: &ModelDims, p: ParallelCfg, gpus: usize) -> anyhow::Result<f64> {
+    let sim = Simulator::new(m.clone(), p, v100_cluster(gpus))?;
+    Ok(sim.step(sweep_tc(p.dp)).tokens_per_sec_per_gpu)
+}
+
+/// All 13 rows of Table 2, in the paper's order.
+pub fn table2_rows() -> anyhow::Result<Vec<ThroughputRow>> {
+    let d03 = gpt3_medium();
+    let d67 = gpt3_6_7b();
+    let m67 = moe_small_setting();
+    let m143 = moe_large_setting();
+
+    // (model, dp, tp, pp, zero, scheme, gpus)
+    type Row = (ModelDims, usize, usize, usize, bool, Scheme, usize);
+    let spec: Vec<Row> = vec![
+        (d03.clone(), 1, 8, 4, false, Scheme::Dense, 32),
+        (d03.clone(), 4, 8, 1, true, Scheme::Dense, 32),
+        (d03.clone(), 32, 1, 1, true, Scheme::Dense, 32),
+        (m67.clone(), 32, 1, 1, true, Scheme::DpMoE, 32),
+        (m67.clone(), 4, 8, 1, true, Scheme::DpMoE, 32),
+        (m67.clone(), 1, 8, 4, false, Scheme::PpMoE, 32),
+        (d67.clone(), 1, 8, 16, false, Scheme::Dense, 128),
+        (d67.clone(), 16, 8, 1, true, Scheme::Dense, 128),
+        (d67.clone(), 128, 1, 1, true, Scheme::Dense, 128),
+        (m143.clone(), 256, 1, 1, true, Scheme::DpMoE, 256),
+        (m143.clone(), 128, 2, 1, true, Scheme::DpMoE, 256),
+        (m143.clone(), 32, 8, 1, true, Scheme::DpMoE, 256),
+        (m143.clone(), 1, 8, 16, false, Scheme::PpMoE, 128),
+    ];
+
+    let mut rows = Vec::new();
+    for (m, dp, tp, pp, zero, scheme, gpus) in &spec {
+        let p = cfg(*dp, *tp, *pp, *zero, *scheme, m.experts);
+        let tput = run(m, p, *gpus)?;
+        rows.push(ThroughputRow {
+            model: m.name.clone(),
+            dp: *dp,
+            tp: *tp,
+            pp: *pp,
+            experts: m.experts,
+            zero: *zero,
+            gpus: *gpus,
+            tokens_per_sec_per_gpu: tput,
+            speed_ratio: None,
+        });
+    }
+
+    // speed ratio vs the SLOWEST dense baseline of the matching backbone
+    // (paper: "we take the slowest ones as baselines")
+    let base_small = rows[..3]
+        .iter()
+        .map(|r| r.tokens_per_sec_per_gpu)
+        .fold(f64::INFINITY, f64::min);
+    let base_large = rows[6..9]
+        .iter()
+        .map(|r| r.tokens_per_sec_per_gpu)
+        .fold(f64::INFINITY, f64::min);
+    for (i, row) in rows.iter_mut().enumerate() {
+        let base = if i < 6 { base_small } else { base_large };
+        if row.experts > 1 {
+            row.speed_ratio = Some(row.tokens_per_sec_per_gpu / base);
+        }
+    }
+    Ok(rows)
+}
+
+/// Render Table 2 as markdown.
+pub fn table2_markdown() -> anyhow::Result<String> {
+    let rows = table2_rows()?;
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.dp.to_string(),
+                r.tp.to_string(),
+                r.pp.to_string(),
+                r.experts.to_string(),
+                if r.zero { "yes" } else { "no" }.into(),
+                format!("{} V100", r.gpus),
+                format!("{:.0}", r.tokens_per_sec_per_gpu),
+                r.speed_ratio
+                    .map(|s| pct(s))
+                    .unwrap_or_else(|| "-".into()),
+            ]
+        })
+        .collect();
+    Ok(markdown_table(
+        &["Model", "DP", "TP", "PP", "E", "ZeRO", "Cluster", "Tput (tok/s/GPU)", "Speed Ratio"],
+        &body,
+    ))
+}
+
+/// Table 1: component breakdown of a DPMoE forward step (large setting,
+/// DP=EP=256, the paper's 6.7B-to-143B configuration).
+pub fn table1_breakdown() -> anyhow::Result<Breakdown> {
+    let sim = Simulator::new(
+        moe_large_setting(),
+        cfg(256, 1, 1, true, Scheme::DpMoE, 64),
+        v100_cluster(256),
+    )?;
+    Ok(sim.full_forward(Batch { b: SWEEP_TC.micro_batch, s: 2048 }))
+}
+
+/// Table 3: component breakdown of a PPMoE forward step (small setting).
+pub fn table3_breakdown() -> anyhow::Result<Breakdown> {
+    let sim = Simulator::new(
+        moe_small_setting(),
+        cfg(1, 8, 4, false, Scheme::PpMoE, 64),
+        v100_cluster(32),
+    )?;
+    Ok(sim.full_forward(Batch { b: SWEEP_TC.micro_batch, s: 2048 }))
+}
+
+/// Render Table 1 in the paper's column layout.
+pub fn table1_markdown() -> anyhow::Result<String> {
+    let bd = table1_breakdown()?;
+    let total = bd.total();
+    let a2a1 = bd.get(Component::FirstA2A);
+    let a2a2 = bd.get(Component::SecondA2A);
+    let gating = bd.get(Component::Gating);
+    let moe = bd.moe_total();
+    let others = total - moe;
+    let row = |t: f64| vec![ms(t), pct(t / total)];
+    let cols = vec![
+        ("Total Fwd.", total),
+        ("MoE Fwd.", moe),
+        ("1st all-to-all", a2a1),
+        ("2nd all-to-all", a2a2),
+        ("Gating", gating),
+        ("Others", others),
+    ];
+    let headers: Vec<&str> = std::iter::once("").chain(cols.iter().map(|c| c.0)).collect();
+    let mut ms_row = vec!["Elapsed (ms)".to_string()];
+    let mut pc_row = vec!["Percentage".to_string()];
+    for (_, t) in &cols {
+        let r = row(*t);
+        ms_row.push(r[0].clone());
+        pc_row.push(r[1].clone());
+    }
+    Ok(markdown_table(&headers, &[ms_row, pc_row]))
+}
+
+/// Render Table 3 in the paper's column layout.
+pub fn table3_markdown() -> anyhow::Result<String> {
+    let bd = table3_breakdown()?;
+    let total = bd.total();
+    let cols = vec![
+        ("Total Fwd.", total),
+        ("MoE Fwd.", bd.moe_total()),
+        ("Gating", bd.get(Component::Gating)),
+        ("Exp. Calc.", bd.get(Component::ExpertCalc)),
+        ("MoE AR.", bd.get(Component::MoeAllReduce)),
+        ("FFN Fwd.", bd.get(Component::DenseFfn) + bd.get(Component::FfnAllReduce)),
+        ("FFN AR.", bd.get(Component::FfnAllReduce)),
+    ];
+    let headers: Vec<&str> = std::iter::once("").chain(cols.iter().map(|c| c.0)).collect();
+    let mut ms_row = vec!["Elapsed (ms)".to_string()];
+    let mut pc_row = vec!["Percentage".to_string()];
+    for (_, t) in &cols {
+        ms_row.push(ms(*t));
+        pc_row.push(pct(*t / total));
+    }
+    Ok(markdown_table(&headers, &[ms_row, pc_row]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_13_rows_in_paper_order() {
+        let rows = table2_rows().unwrap();
+        assert_eq!(rows.len(), 13);
+        assert!(rows[0].model.contains("medium"));
+        assert!(rows[12].model.contains("143b"));
+        // dense rows have no speed ratio; MoE rows do
+        assert!(rows[0].speed_ratio.is_none());
+        assert!(rows[3].speed_ratio.is_some());
+    }
+
+    #[test]
+    fn table2_ppmoe_wins_its_setting() {
+        let rows = table2_rows().unwrap();
+        // small setting: PPMoE (row 5) beats both DPMoE rows (3, 4)
+        assert!(rows[5].tokens_per_sec_per_gpu > rows[3].tokens_per_sec_per_gpu);
+        assert!(rows[5].tokens_per_sec_per_gpu > rows[4].tokens_per_sec_per_gpu);
+        // large setting: PPMoE (row 12) beats all DPMoE rows (9-11)
+        for i in 9..12 {
+            assert!(
+                rows[12].tokens_per_sec_per_gpu > rows[i].tokens_per_sec_per_gpu,
+                "row 12 vs row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn table2_ppmoe_speed_ratio_high() {
+        let rows = table2_rows().unwrap();
+        // paper: 81.4% (small), 90.7% (large); shape target: > 60%
+        assert!(rows[5].speed_ratio.unwrap() > 0.6, "{:?}", rows[5].speed_ratio);
+        assert!(rows[12].speed_ratio.unwrap() > 0.6, "{:?}", rows[12].speed_ratio);
+    }
+
+    #[test]
+    fn markdown_tables_render() {
+        let t1 = table1_markdown().unwrap();
+        assert!(t1.contains("1st all-to-all"));
+        let t2 = table2_markdown().unwrap();
+        assert!(t2.lines().count() == 15); // header + sep + 13 rows
+        let t3 = table3_markdown().unwrap();
+        assert!(t3.contains("MoE AR."));
+    }
+}

@@ -1,0 +1,34 @@
+//! PPMoE — reproduction of *"Pipeline MoE: A Flexible MoE Implementation
+//! with Pipeline Parallelism"* (Chen et al., Huawei Cloud, 2023).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L1** — Pallas grouped-expert-FFN / router kernels (`python/compile/kernels`)
+//! * **L2** — JAX transformer fwd/bwd, AOT-lowered to HLO text (`python/compile`)
+//! * **L3** — this crate: the coordination contribution of the paper.
+//!   Routing, microbatch pipeline scheduling (1F1B), TP×EP expert placement,
+//!   in-process collectives, the discrete-event cluster simulator that
+//!   regenerates the paper's tables, and the PJRT runtime that executes the
+//!   AOT artifacts. Python never runs on the training hot path.
+//!
+//! Environment note: this build is fully offline and vendored; tokio, clap,
+//! serde, criterion and proptest are unavailable, so the crate ships its own
+//! minimal JSON parser (`util::json`), CLI parsing (`main.rs`), bench harness
+//! (`util::bench`), and property-test driver (`util::prop`) instead.
+
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod moe;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod tp;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,190 @@
+//! `ppmoe` — the PPMoE launcher (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   train       real 1F1B pipeline training over the AOT artifacts
+//!   sweep       regenerate Table 2 (throughput, 13 configurations)
+//!   breakdown   regenerate Tables 1 & 3 (forward-time components)
+//!   simulate    simulate one (model, parallel) point
+//!   verify-tp   run the real TP×EP MoE layer and check numerics
+//!   info        print manifest / artifact inventory
+
+use std::path::PathBuf;
+
+use ppmoe::config::{self, Scheme};
+use ppmoe::coordinator::{tables, Args};
+use ppmoe::pipeline::Schedule;
+use ppmoe::trainer::{self, TrainerCfg};
+
+const USAGE: &str = "\
+ppmoe — Pipeline MoE reproduction (Chen et al., 2023)
+
+USAGE: ppmoe <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train       real pipeline training (needs `make artifacts`)
+                --artifacts DIR   (default: artifacts)
+                --steps N         (default: 50)
+                --micro N         microbatches per step (default: 4)
+                --lr F            (default: 1e-3)
+                --seed N          (default: 0)
+                --gpipe           use GPipe schedule instead of 1F1B
+  sweep       print Table 2 (simulated throughput, 13 rows)
+  breakdown   print Tables 1 and 3 (simulated forward breakdowns)
+  simulate    one point: --model NAME --dp N --tp N --pp N
+                         --scheme dense|dpmoe|ppmoe --gpus N [--zero]
+  verify-tp   real TP×EP MoE layer vs monolithic reference
+                --artifacts DIR --seed N
+  info        manifest inventory: --artifacts DIR
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let args = Args::parse(argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(),
+        "breakdown" => cmd_breakdown(),
+        "simulate" => cmd_simulate(&args),
+        "verify-tp" => cmd_verify_tp(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = TrainerCfg {
+        artifacts: artifacts_dir(args),
+        steps: args.get_usize("steps", 50)?,
+        num_micro: args.get_usize("micro", 4)?,
+        lr: args.get_f32("lr", 1e-3)?,
+        seed: args.get_usize("seed", 0)? as u64,
+        log_every: args.get_usize("log-every", 10)?,
+        grad_clip: Some(1.0),
+        schedule: if args.has_flag("gpipe") { Schedule::GPipe } else { Schedule::OneFOneB },
+        warmup_steps: args.get_usize("warmup", 0)?,
+        checkpoint_dir: args.get("checkpoint").map(PathBuf::from),
+    };
+    let report = trainer::train(&cfg)?;
+    println!("\n=== training report ===");
+    println!("steps: {}", report.steps.len());
+    println!("final loss: {:.4}", report.final_loss);
+    println!("throughput: {:.0} tokens/s", report.tokens_per_sec);
+    for (s, t) in report.stage_timers.iter().enumerate() {
+        println!("stage {s} time breakdown:");
+        for (name, secs, share) in t.rows() {
+            println!("  {name:<12} {secs:>8.2}s  {:>5.1}%", share * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep() -> anyhow::Result<()> {
+    println!("Table 2 — training throughput (simulated, paper constants)\n");
+    print!("{}", tables::table2_markdown()?);
+    Ok(())
+}
+
+fn cmd_breakdown() -> anyhow::Result<()> {
+    println!("Table 1 — DPMoE forward breakdown (simulated)\n");
+    print!("{}", tables::table1_markdown()?);
+    println!("\nTable 3 — PPMoE forward breakdown (simulated)\n");
+    print!("{}", tables::table3_markdown()?);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let model = config::model_preset(args.get("model").unwrap_or("moe-small"))?;
+    let scheme = match args.get("scheme").unwrap_or("ppmoe") {
+        "dense" => Scheme::Dense,
+        "dpmoe" => Scheme::DpMoE,
+        "ppmoe" => Scheme::PpMoE,
+        s => anyhow::bail!("unknown scheme '{s}'"),
+    };
+    let dp = args.get_usize("dp", 1)?;
+    let tp = args.get_usize("tp", 8)?;
+    let pp = args.get_usize("pp", 1)?;
+    let gpus = args.get_usize("gpus", dp * tp * pp)?;
+    let ep = match scheme {
+        Scheme::DpMoE => dp.min(model.experts),
+        Scheme::PpMoE => tp,
+        Scheme::Dense => 1,
+    };
+    let p = config::ParallelCfg { dp, tp, pp, ep, zero: args.has_flag("zero"), scheme };
+    let sim = ppmoe::sim::Simulator::new(model.clone(), p, config::v100_cluster(gpus))?;
+    let r = sim.step(tables::SWEEP_TC);
+    println!("model: {} ({:.1}B params)", model.name, model.total_params() as f64 / 1e9);
+    println!("layout: dp={dp} tp={tp} pp={pp} scheme={scheme:?} on {gpus} GPUs");
+    println!("step time:        {:.1} ms", r.step_seconds * 1e3);
+    println!("throughput:       {:.0} tokens/s/GPU", r.tokens_per_sec_per_gpu);
+    println!("pipeline bubble:  {:.1}%", r.bubble_fraction * 100.0);
+    println!("dp grad sync:     {:.1} ms", r.dp_sync_seconds * 1e3);
+    Ok(())
+}
+
+fn cmd_verify_tp(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let seed = args.get_usize("seed", 0)? as u64;
+    let r = ppmoe::tp::run_tp_moe(&dir, seed)?;
+    println!("TP×EP MoE layer: {} ranks", r.rank_timings.len());
+    println!("max |err| vs monolithic reference: {:.3e}", r.max_abs_err);
+    println!("aux balance loss: {:.4}", r.aux);
+    for (i, t) in r.rank_timings.iter().enumerate() {
+        println!(
+            "rank {i}: exec {:.2} ms, all-reduce {:.2} ms",
+            t.exec_seconds * 1e3,
+            t.allreduce_seconds * 1e3
+        );
+    }
+    anyhow::ensure!(r.max_abs_err < 1e-3, "numerics check FAILED");
+    println!("numerics check PASSED");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let m = ppmoe::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    println!("config: {} (stages={}, tp={})", m.model.config_name, m.model.stages, m.tp);
+    println!(
+        "model: vocab={} hidden={} layers={} experts={} seq={} micro_batch={}",
+        m.model.vocab, m.model.hidden, m.model.layers, m.model.experts,
+        m.model.seq, m.model.micro_batch
+    );
+    for (s, sp) in m.stages.iter().enumerate() {
+        println!(
+            "stage {s}: {} tensors, {:.2} MB ({})",
+            sp.params.len(),
+            sp.total_bytes as f64 / 1e6,
+            sp.bin
+        );
+    }
+    println!("artifacts:");
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name:<16} {} in / {} out  ({})",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file
+        );
+    }
+    Ok(())
+}

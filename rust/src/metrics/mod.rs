@@ -1,0 +1,192 @@
+//! Metrics: timers, component accounting, throughput counters, and the
+//! markdown/CSV table writers used by examples and benches to print the
+//! paper-style tables.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulating named timer set (the real-execution analogue of
+/// `sim::Breakdown`).
+#[derive(Debug, Default, Clone)]
+pub struct Timers {
+    acc: BTreeMap<String, f64>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl Timers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(name, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        *self.acc.entry(name.to_string()).or_insert(0.0) += secs;
+        *self.counts.entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.acc.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.acc.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &Timers) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    /// Breakdown rows: (name, seconds, share-of-total).
+    pub fn rows(&self) -> Vec<(String, f64, f64)> {
+        let total = self.total().max(1e-12);
+        self.acc
+            .iter()
+            .map(|(k, v)| (k.clone(), *v, v / total))
+            .collect()
+    }
+}
+
+/// Throughput counter (tokens/sec, steps/sec).
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    pub tokens: u64,
+    pub steps: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), tokens: 0, steps: 0 }
+    }
+
+    pub fn record(&mut self, tokens: u64) {
+        self.tokens += tokens;
+        self.steps += 1;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+/// Render an aligned markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], widths: &[usize]| -> String {
+        let mut s = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            s.push_str(&format!(" {c:<w$} |"));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&line(
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+        &widths,
+    ));
+    for row in rows {
+        out.push_str(&line(row, &widths));
+    }
+    out
+}
+
+/// Format seconds as the paper's ms columns.
+pub fn ms(secs: f64) -> String {
+    format!("{:.0}", secs * 1e3)
+}
+
+/// Format a share as "12.3%".
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let mut t = Timers::new();
+        t.add("a", 1.0);
+        t.add("a", 2.0);
+        t.add("b", 1.0);
+        assert_eq!(t.get("a"), 3.0);
+        assert_eq!(t.count("a"), 2);
+        assert_eq!(t.total(), 4.0);
+        let rows = t.rows();
+        assert_eq!(rows.len(), 2);
+        assert!((rows[0].2 - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timers_merge() {
+        let mut a = Timers::new();
+        a.add("x", 1.0);
+        let mut b = Timers::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+
+    #[test]
+    fn time_measures() {
+        let mut t = Timers::new();
+        t.time("sleep", || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(t.get("sleep") >= 0.004);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let s = markdown_table(
+            &["Model", "Tput"],
+            &[
+                vec!["dense".into(), "5120".into()],
+                vec!["ppmoe-long-name".into(), "90".into()],
+            ],
+        );
+        assert!(s.contains("| Model"));
+        assert!(s.lines().count() == 4);
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "aligned: {s}");
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(1.2345), "1234");
+        assert_eq!(pct(0.3821), "38.2%");
+    }
+}

@@ -1,0 +1,240 @@
+//! FLOPs and memory accounting for transformer / MoE training.
+//!
+//! Formulas follow the paper's §3.2 (which in turn follows Narayanan et al.
+//! 2021): an FFN costs 16·b·s·h² FLOPs forward when f = 4h; attention adds
+//! its GEMM + score terms; backward ≈ 2× forward. Optimizer storage is the
+//! paper's 18 bytes/param (fp16 param+grad + fp32 master/m/v, §4.1).
+
+use crate::config::ModelDims;
+
+/// Per-microbatch geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct Batch {
+    pub b: usize, // sequences per microbatch
+    pub s: usize, // tokens per sequence
+}
+
+impl Batch {
+    pub fn tokens(&self) -> usize {
+        self.b * self.s
+    }
+}
+
+/// Forward FLOPs of one dense FFN over a microbatch (paper: 16bsh² at f=4h).
+pub fn ffn_fwd_flops(m: &ModelDims, bt: Batch) -> f64 {
+    // general f: 2·b·s·h·f per GEMM, two GEMMs
+    4.0 * bt.tokens() as f64 * m.hidden as f64 * m.ffn as f64
+}
+
+/// Forward FLOPs of one attention block over a microbatch.
+pub fn attn_fwd_flops(m: &ModelDims, bt: Batch) -> f64 {
+    let t = bt.tokens() as f64;
+    let h = m.hidden as f64;
+    let s = m.s_f64();
+    // qkv + out projections: 8·t·h²; scores + context: 4·t·s·h
+    8.0 * t * h * h + 4.0 * t * s * h
+}
+
+impl ModelDims {
+    fn s_f64(&self) -> f64 {
+        self.seq as f64
+    }
+}
+
+/// Gating FLOPs of one MoE layer (linear h×E + softmax, negligible but
+/// accounted, as in Table 1's "Gating" column).
+pub fn gating_flops(m: &ModelDims, bt: Batch) -> f64 {
+    2.0 * bt.tokens() as f64 * m.hidden as f64 * m.experts as f64
+}
+
+/// Expert-FFN FLOPs of one MoE layer with top-k routing: tokens are
+/// processed by k experts each, so compute matches k dense FFNs.
+pub fn moe_ffn_fwd_flops(m: &ModelDims, bt: Batch) -> f64 {
+    m.top_k as f64 * ffn_fwd_flops(m, bt)
+}
+
+/// Forward FLOPs of the whole model over one microbatch (all layers +
+/// embedding head).
+pub fn model_fwd_flops(m: &ModelDims, bt: Batch) -> f64 {
+    let t = bt.tokens() as f64;
+    let mut fl = 0.0;
+    for l in 0..m.layers {
+        fl += attn_fwd_flops(m, bt);
+        if is_moe_layer(m, l) {
+            fl += moe_ffn_fwd_flops(m, bt) + gating_flops(m, bt);
+        } else {
+            fl += ffn_fwd_flops(m, bt);
+        }
+    }
+    fl + 2.0 * t * m.hidden as f64 * m.vocab as f64 // lm head
+}
+
+/// Training FLOPs (fwd + bwd ≈ 3× fwd).
+pub fn model_train_flops(m: &ModelDims, bt: Batch) -> f64 {
+    3.0 * model_fwd_flops(m, bt)
+}
+
+pub fn is_moe_layer(m: &ModelDims, layer: usize) -> bool {
+    m.experts > 1 && m.moe_every > 0 && layer % m.moe_every == m.moe_every - 1
+}
+
+// ---------------------------------------------------------------------------
+// Memory accounting
+// ---------------------------------------------------------------------------
+
+/// Bytes of parameter+optimizer state per parameter (paper §4.1: fp16 Adam
+/// with fp32 master copy and moments = 18 B/param).
+pub const BYTES_PER_PARAM_ADAM: f64 = 18.0;
+
+/// Model+optimizer memory per device under a parallel layout.
+///
+/// * TP divides block parameters by `tp`.
+/// * PP divides layers by `pp`.
+/// * PPMoE: experts divide across the TP group (E/T per device).
+/// * DPMoE: experts divide across DP ranks (E/D per device).
+/// * ZeRO shards optimizer state across DP ranks (stage-1 style: /dp on
+///   the 16 optimizer bytes, params keep 2).
+pub fn params_per_device(
+    m: &ModelDims,
+    dp: usize,
+    tp: usize,
+    pp: usize,
+    dpmoe: bool,
+) -> f64 {
+    let per_block_common = (m.attn_params() + 4 * m.hidden) as f64 / tp as f64;
+    let dense_ffn = m.ffn_params() as f64 / tp as f64;
+    let expert_share = if dpmoe {
+        // experts distributed over DP ranks; each holds E/dp experts, whole
+        m.experts as f64 / dp as f64 * m.ffn_params() as f64
+    } else {
+        // PPMoE: E/tp experts per device, each whole (not TP-sliced)
+        m.experts as f64 / tp as f64 * m.ffn_params() as f64
+    };
+    let gating = (m.hidden * m.experts) as f64; // replicated
+    let layers_here = m.layers as f64 / pp as f64;
+    let moe_frac = if m.moe_layers() > 0 {
+        m.moe_layers() as f64 / m.layers as f64
+    } else {
+        0.0
+    };
+    let emb = ((m.vocab + m.seq) * m.hidden) as f64 / tp as f64;
+    layers_here
+        * (per_block_common
+            + (1.0 - moe_frac) * dense_ffn
+            + moe_frac * (expert_share + gating))
+        + emb / pp as f64
+}
+
+/// Device memory (bytes) for params+optimizer under Adam, optionally ZeRO.
+pub fn device_state_bytes(params: f64, dp: usize, zero: bool) -> f64 {
+    if zero && dp > 1 {
+        params * (2.0 + 16.0 / dp as f64)
+    } else {
+        params * BYTES_PER_PARAM_ADAM
+    }
+}
+
+/// DPMoE per-device state bytes, split into backbone (replicated over all
+/// `dp` ranks, so ZeRO shards its optimizer over dp) and experts (each
+/// expert replicated only dp/ep times, so ZeRO shards over dp/ep). This is
+/// why the paper's 143B DPMoE cannot fit 128 V100s without TP (§4.3):
+/// the expert optimizer state barely shards.
+pub fn dpmoe_device_state_bytes(m: &ModelDims, dp: usize, tp: usize, zero: bool) -> f64 {
+    let ep = dp.min(m.experts);
+    let backbone = m.backbone().total_params() as f64 / tp as f64;
+    let experts = (m.moe_layers() * (m.experts / ep) * m.ffn_params()) as f64
+        / tp as f64;
+    if zero && dp > 1 {
+        backbone * (2.0 + 16.0 / dp as f64)
+            + experts * (2.0 + 16.0 / (dp / ep).max(1) as f64)
+    } else {
+        (backbone + experts) * BYTES_PER_PARAM_ADAM
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{gpt3_medium, moe_large_setting, moe_small_setting};
+
+    const BT: Batch = Batch { b: 8, s: 2048 };
+
+    #[test]
+    fn ffn_flops_match_paper_formula() {
+        // paper: 16·b·s·h² when f = 4h
+        let m = gpt3_medium();
+        let expect = 16.0 * BT.tokens() as f64 * (m.hidden * m.hidden) as f64;
+        assert_eq!(ffn_fwd_flops(&m, BT), expect);
+    }
+
+    #[test]
+    fn moe_top1_flops_equal_dense() {
+        // top-1 gating: MoE layer compute == dense FFN compute (§4.1:
+        // "nearly the same computational complexity as its base model")
+        let m = moe_small_setting();
+        assert_eq!(moe_ffn_fwd_flops(&m, BT), ffn_fwd_flops(&m, BT));
+    }
+
+    #[test]
+    fn model_flops_scale_with_size() {
+        let small = model_fwd_flops(&gpt3_medium(), BT);
+        let large = model_fwd_flops(&crate::config::gpt3_6_7b(), BT);
+        assert!(large > 8.0 * small, "6.7B should be >8x medium FLOPs");
+    }
+
+    #[test]
+    fn moe_layer_pattern() {
+        let m = moe_small_setting();
+        assert!(!is_moe_layer(&m, 0));
+        assert!(is_moe_layer(&m, 1));
+        assert!(is_moe_layer(&m, 23));
+        let d = gpt3_medium();
+        assert!(!is_moe_layer(&d, 1));
+    }
+
+    #[test]
+    fn dpmoe_cannot_fit_143b_on_128_gpus() {
+        // Table 2's observation: 143B DPMoE does not fit 128 V100s (32 GB)
+        // without TP even with ZeRO — the expert optimizer state barely
+        // shards (each expert lives on only dp/ep = 2 ranks).
+        let m = moe_large_setting();
+        let bytes = dpmoe_device_state_bytes(&m, 128, 1, true);
+        assert!(
+            bytes > 32.0e9,
+            "should exceed 32 GB: got {:.1} GB",
+            bytes / 1e9
+        );
+        // ...with TP=2 on 256 GPUs it fits (the paper's workaround):
+        let with_tp = dpmoe_device_state_bytes(&m, 128, 2, true);
+        assert!(
+            with_tp < 32.0e9,
+            "TP=2 should fit: got {:.1} GB",
+            with_tp / 1e9
+        );
+        // ...and PPMoE at tp=8, pp=16 on 128 GPUs fits without ZeRO:
+        let p2 = params_per_device(&m, 1, 8, 16, false);
+        let bytes2 = device_state_bytes(p2, 1, false);
+        assert!(
+            bytes2 < 32.0e9,
+            "PPMoE should fit: got {:.1} GB",
+            bytes2 / 1e9
+        );
+    }
+
+    #[test]
+    fn tp_and_pp_divide_memory() {
+        let m = moe_small_setting();
+        let base = params_per_device(&m, 1, 1, 1, false);
+        let tp8 = params_per_device(&m, 1, 8, 1, false);
+        let pp4 = params_per_device(&m, 1, 1, 4, false);
+        assert!(tp8 < base && pp4 < base);
+        assert!((params_per_device(&m, 1, 1, 4, false) * 4.0 - base).abs() / base < 0.05);
+    }
+
+    #[test]
+    fn zero_shards_optimizer_state() {
+        let full = device_state_bytes(1e9, 8, false);
+        let sharded = device_state_bytes(1e9, 8, true);
+        assert!(sharded < full / 3.0);
+    }
+}

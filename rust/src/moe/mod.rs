@@ -1,0 +1,266 @@
+//! Rust-side MoE routing: the coordinator's view of gating and dispatch.
+//!
+//! The numeric gating lives in the HLO artifacts (L1/L2); this module is the
+//! L3 twin used for (a) the DPMoE-vs-PPMoE dispatch *plans* the simulator
+//! executes, (b) expert-load statistics and balance metrics, and (c) a
+//! CPU-side reference router whose decisions are bit-deterministic, mirroring
+//! the §3.3.3 property that identical inputs yield identical dispatch on
+//! every TP rank.
+
+use crate::util::prng::Rng;
+
+/// Top-1 routing decision for a batch of tokens.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub expert: Vec<u32>,   // chosen expert per token
+    pub gate: Vec<f32>,     // gate probability of the chosen expert
+    pub slot: Vec<u32>,     // position within the expert's capacity slab
+    pub dropped: Vec<bool>, // true if the token overflowed capacity
+    pub num_experts: usize,
+    pub capacity: usize,
+}
+
+/// Softmax + top-1 over raw logits, then slot assignment with capacity.
+///
+/// Deterministic: tokens scan in order; ties break to the lowest expert id,
+/// matching `jnp.argmax`. With `capacity >= tokens` nothing is dropped —
+/// PPMoE's uncapped dispatch (§4.1).
+pub fn route_top1(logits: &[f32], num_experts: usize, capacity: usize) -> Routing {
+    assert!(num_experts > 0 && logits.len() % num_experts == 0);
+    let tokens = logits.len() / num_experts;
+    let mut expert = Vec::with_capacity(tokens);
+    let mut gate = Vec::with_capacity(tokens);
+    let mut slot = vec![0u32; tokens];
+    let mut dropped = vec![false; tokens];
+    let mut fill = vec![0u32; num_experts];
+
+    for t in 0..tokens {
+        let row = &logits[t * num_experts..(t + 1) * num_experts];
+        // single-pass online softmax (flash-style running max + rescaled
+        // sum) fused with argmax — one sweep over the row instead of three
+        // (§Perf L3 iteration 3; ~1.6x on the route_top1 hot loop)
+        let mut m = f32::NEG_INFINITY;
+        let mut denom = 0.0f32;
+        let mut best = 0usize;
+        for (e, &v) in row.iter().enumerate() {
+            if v > m {
+                denom = denom * (m - v).exp() + 1.0;
+                m = v;
+                best = e;
+            } else {
+                denom += (v - m).exp();
+            }
+        }
+        expert.push(best as u32);
+        gate.push(1.0 / denom); // exp(best - m) == exp(0) == 1
+        let pos = fill[best];
+        if (pos as usize) < capacity {
+            slot[t] = pos;
+            fill[best] += 1;
+        } else {
+            dropped[t] = true;
+        }
+    }
+    Routing { expert, gate, slot, dropped, num_experts, capacity }
+}
+
+impl Routing {
+    pub fn tokens(&self) -> usize {
+        self.expert.len()
+    }
+
+    /// Tokens per expert (post-capacity).
+    pub fn load(&self) -> Vec<usize> {
+        let mut l = vec![0usize; self.num_experts];
+        for (e, d) in self.expert.iter().zip(&self.dropped) {
+            if !d {
+                l[*e as usize] += 1;
+            }
+        }
+        l
+    }
+
+    /// GShard aux balance loss over the *decisions* (uses assignment
+    /// fractions for both factors; the probability factor lives in HLO).
+    pub fn balance_loss(&self) -> f64 {
+        let t = self.tokens().max(1) as f64;
+        let e = self.num_experts as f64;
+        let mut acc = 0.0;
+        for l in self.load() {
+            let frac = l as f64 / t;
+            acc += frac * frac;
+        }
+        e * acc
+    }
+
+    pub fn drop_fraction(&self) -> f64 {
+        self.dropped.iter().filter(|d| **d).count() as f64 / self.tokens().max(1) as f64
+    }
+
+    /// Max-load / mean-load imbalance factor (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let load = self.load();
+        let max = *load.iter().max().unwrap_or(&0) as f64;
+        let mean = self.tokens() as f64 / self.num_experts as f64;
+        if mean == 0.0 {
+            0.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Dispatch plan: what traffic a routing decision induces under a scheme.
+/// This is what distinguishes DPMoE from PPMoE on the wire (§3.2 vs §3.3.4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DispatchPlan {
+    /// Bytes each rank must exchange via all-to-all (DPMoE) per direction.
+    pub a2a_bytes_per_rank: f64,
+    /// Bytes of the combining all-reduce (PPMoE) per rank.
+    pub allreduce_bytes: f64,
+    /// Number of collective operations on the MoE layer's critical path.
+    pub collective_ops: usize,
+}
+
+/// DPMoE: two all-to-alls of the full hidden activations (§3.1.4).
+pub fn dpmoe_plan(tokens: usize, hidden: usize, wire_bytes: usize) -> DispatchPlan {
+    DispatchPlan {
+        a2a_bytes_per_rank: (tokens * hidden * wire_bytes) as f64,
+        allreduce_bytes: 0.0,
+        collective_ops: 2,
+    }
+}
+
+/// PPMoE: dispatch is a local index-slice (zero wire bytes); combining is a
+/// single inner-node all-reduce of the output activations (§3.3.4).
+pub fn ppmoe_plan(tokens: usize, hidden: usize, wire_bytes: usize) -> DispatchPlan {
+    DispatchPlan {
+        a2a_bytes_per_rank: 0.0,
+        allreduce_bytes: (tokens * hidden * wire_bytes) as f64,
+        collective_ops: 1,
+    }
+}
+
+/// Generate synthetic router logits with a controllable skew: `skew = 0`
+/// gives uniform expert preference; larger values concentrate tokens on few
+/// experts (used by failure-injection tests and the imbalance bench).
+pub fn synth_logits(rng: &mut Rng, tokens: usize, num_experts: usize, skew: f64) -> Vec<f32> {
+    let mut logits = Vec::with_capacity(tokens * num_experts);
+    for _ in 0..tokens {
+        for e in 0..num_experts {
+            let bias = if e == 0 { skew } else { 0.0 };
+            logits.push((rng.normal() + bias) as f32);
+        }
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn routing_basic_invariants() {
+        forall(
+            "routing-invariants",
+            7,
+            60,
+            |r| {
+                let tokens = r.range(1, 128);
+                let experts = 1 << r.below(5);
+                let skew = r.f64() * 3.0;
+                let logits = synth_logits(r, tokens, experts, skew);
+                (tokens, experts, logits)
+            },
+            |(tokens, experts, logits)| {
+                let rt = route_top1(logits, *experts, *tokens); // full capacity
+                if rt.tokens() != *tokens {
+                    return Err("token count".into());
+                }
+                // every token kept, gate in (0, 1], expert in range
+                if rt.dropped.iter().any(|d| *d) {
+                    return Err("dropped at full capacity".into());
+                }
+                for (e, g) in rt.expert.iter().zip(&rt.gate) {
+                    if *e as usize >= *experts {
+                        return Err("expert out of range".into());
+                    }
+                    if !(*g > 0.0 && *g <= 1.0) {
+                        return Err(format!("gate {g}"));
+                    }
+                }
+                // slots within an expert are unique
+                let mut seen = std::collections::HashSet::new();
+                for t in 0..*tokens {
+                    if !seen.insert((rt.expert[t], rt.slot[t])) {
+                        return Err("slot collision".into());
+                    }
+                }
+                // load sums to token count
+                if rt.load().iter().sum::<usize>() != *tokens {
+                    return Err("load sum".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn capacity_drops_overflow_only() {
+        // all tokens prefer expert 0; capacity 3 keeps exactly 3
+        let logits: Vec<f32> = (0..10).flat_map(|_| vec![5.0, 0.0]).collect();
+        let rt = route_top1(&logits, 2, 3);
+        assert_eq!(rt.load(), vec![3, 0]);
+        assert_eq!(rt.dropped.iter().filter(|d| **d).count(), 7);
+        assert!((rt.drop_fraction() - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_routing() {
+        // §3.3.3: identical logits => identical dispatch, run-to-run
+        let mut r = Rng::new(3);
+        let logits = synth_logits(&mut r, 64, 8, 0.5);
+        let a = route_top1(&logits, 8, 64);
+        let b = route_top1(&logits, 8, 64);
+        assert_eq!(a.expert, b.expert);
+        assert_eq!(a.slot, b.slot);
+    }
+
+    #[test]
+    fn skew_increases_imbalance() {
+        let mut r = Rng::new(5);
+        let l0 = synth_logits(&mut r, 512, 8, 0.0);
+        let l5 = synth_logits(&mut r, 512, 8, 5.0);
+        let bal = route_top1(&l0, 8, 512).imbalance();
+        let skewed = route_top1(&l5, 8, 512).imbalance();
+        assert!(skewed > 2.0 * bal, "skewed {skewed} vs bal {bal}");
+    }
+
+    #[test]
+    fn balance_loss_minimized_when_uniform() {
+        // perfectly balanced: loss == 1; all-on-one: loss == E
+        let logits: Vec<f32> = (0..8).flat_map(|t| {
+            let mut row = vec![0.0f32; 4];
+            row[t % 4] = 10.0;
+            row
+        }).collect();
+        let rt = route_top1(&logits, 4, 8);
+        assert!((rt.balance_loss() - 1.0).abs() < 1e-9);
+        let all_one: Vec<f32> = (0..8).flat_map(|_| vec![10.0, 0.0, 0.0, 0.0]).collect();
+        let rt1 = route_top1(&all_one, 4, 8);
+        assert!((rt1.balance_loss() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plans_encode_the_papers_tradeoff() {
+        let dp = dpmoe_plan(16384, 1024, 2);
+        let pp = ppmoe_plan(16384, 1024, 2);
+        assert_eq!(dp.collective_ops, 2);
+        assert_eq!(pp.collective_ops, 1);
+        assert!(dp.a2a_bytes_per_rank > 0.0 && pp.a2a_bytes_per_rank == 0.0);
+        // PPMoE's only wire cost equals the activation all-reduce TP
+        // already pays — same byte count as one a2a direction.
+        assert_eq!(pp.allreduce_bytes, dp.a2a_bytes_per_rank);
+    }
+}

@@ -1,0 +1,301 @@
+//! Pipeline-parallel schedules: 1F1B (PipeDream-flush, Fig. 2) and GPipe.
+//!
+//! Two layers of functionality:
+//! * **Schedule generation** — the exact (stage, microbatch, F/B) order the
+//!   real trainer executes. 1F1B warms up with `p - s` forwards on stage s,
+//!   then alternates one-forward-one-backward, then drains.
+//! * **Schedule simulation** — given per-stage fwd/bwd/p2p times, compute
+//!   the step makespan by dependency-respecting event simulation. Bubble
+//!   fraction falls out as (makespan − ideal) / makespan; for both 1F1B and
+//!   GPipe it should match the analytic (p−1)/(m+p−1).
+
+pub mod interleaved;
+
+/// One pipeline operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Fwd { micro: usize },
+    Bwd { micro: usize },
+}
+
+/// Kind of schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    OneFOneB,
+    GPipe,
+}
+
+/// Generate the per-stage op order for `stages` pipeline stages and
+/// `micros` microbatches.
+pub fn schedule(kind: Schedule, stages: usize, micros: usize) -> Vec<Vec<Op>> {
+    assert!(stages > 0 && micros > 0);
+    match kind {
+        Schedule::GPipe => (0..stages)
+            .map(|_| {
+                let mut ops: Vec<Op> = (0..micros).map(|m| Op::Fwd { micro: m }).collect();
+                ops.extend((0..micros).rev().map(|m| Op::Bwd { micro: m }));
+                ops
+            })
+            .collect(),
+        Schedule::OneFOneB => (0..stages)
+            .map(|s| {
+                // PipeDream-flush: stage s runs min(p - s, m) warmup fwds,
+                // then steady-state 1F1B, then drains remaining bwds.
+                let warmup = (stages - s).min(micros);
+                let mut ops = Vec::with_capacity(2 * micros);
+                let mut next_f = 0usize;
+                let mut next_b = 0usize;
+                for _ in 0..warmup {
+                    ops.push(Op::Fwd { micro: next_f });
+                    next_f += 1;
+                }
+                while next_b < micros {
+                    ops.push(Op::Bwd { micro: next_b });
+                    next_b += 1;
+                    if next_f < micros {
+                        ops.push(Op::Fwd { micro: next_f });
+                        next_f += 1;
+                    }
+                }
+                ops
+            })
+            .collect(),
+    }
+}
+
+/// In-flight activation memory: the max number of microbatches a stage holds
+/// forward state for. 1F1B caps this at min(p - s, m); GPipe at m.
+pub fn peak_activations(kind: Schedule, stages: usize, micros: usize, stage: usize) -> usize {
+    match kind {
+        Schedule::GPipe => micros,
+        Schedule::OneFOneB => (stages - stage).min(micros),
+    }
+}
+
+/// Per-stage timing for simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct StageTiming {
+    pub fwd: f64,
+    pub bwd: f64,
+    pub p2p: f64, // boundary send/recv time
+}
+
+/// Result of simulating one global-batch step.
+#[derive(Debug, Clone)]
+pub struct PipeSim {
+    pub makespan: f64,
+    pub stage_busy: Vec<f64>,
+    pub bubble_fraction: f64,
+}
+
+/// Dependency-respecting simulation of a schedule.
+///
+/// Forward of (s, m) needs forward of (s-1, m) plus p2p; backward of (s, m)
+/// needs backward of (s+1, m) plus p2p (and the local forward). Ops on one
+/// stage serialize in schedule order.
+pub fn simulate(kind: Schedule, timing: &[StageTiming], micros: usize) -> PipeSim {
+    let stages = timing.len();
+    let sched = schedule(kind, stages, micros);
+    let mut fwd_done = vec![vec![f64::NAN; micros]; stages];
+    let mut bwd_done = vec![vec![f64::NAN; micros]; stages];
+    let mut cursor = vec![0usize; stages]; // next op index per stage
+    let mut clock = vec![0f64; stages]; // per-stage busy-until
+    let mut busy = vec![0f64; stages];
+    let mut remaining: usize = sched.iter().map(|v| v.len()).sum();
+
+    while remaining > 0 {
+        let mut progressed = false;
+        for s in 0..stages {
+            while cursor[s] < sched[s].len() {
+                let op = sched[s][cursor[s]];
+                // readiness check
+                let ready_at = match op {
+                    Op::Fwd { micro } => {
+                        if s == 0 {
+                            Some(0.0)
+                        } else {
+                            let d = fwd_done[s - 1][micro];
+                            if d.is_nan() { None } else { Some(d + timing[s].p2p) }
+                        }
+                    }
+                    Op::Bwd { micro } => {
+                        let local_fwd = fwd_done[s][micro];
+                        if local_fwd.is_nan() {
+                            None
+                        } else if s == stages - 1 {
+                            Some(local_fwd)
+                        } else {
+                            let d = bwd_done[s + 1][micro];
+                            if d.is_nan() {
+                                None
+                            } else {
+                                Some(d.max(local_fwd) + timing[s].p2p)
+                            }
+                        }
+                    }
+                };
+                let Some(ready) = ready_at else { break };
+                let start = clock[s].max(ready);
+                let dur = match op {
+                    Op::Fwd { .. } => timing[s].fwd,
+                    Op::Bwd { .. } => timing[s].bwd,
+                };
+                let end = start + dur;
+                match op {
+                    Op::Fwd { micro } => fwd_done[s][micro] = end,
+                    Op::Bwd { micro } => bwd_done[s][micro] = end,
+                }
+                clock[s] = end;
+                busy[s] += dur;
+                cursor[s] += 1;
+                remaining -= 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "pipeline deadlock: schedule has a dependency cycle");
+    }
+
+    let makespan = clock.iter().copied().fold(0.0, f64::max);
+    let max_busy = busy.iter().copied().fold(0.0, f64::max);
+    PipeSim {
+        makespan,
+        stage_busy: busy,
+        bubble_fraction: if makespan > 0.0 { 1.0 - max_busy / makespan } else { 0.0 },
+    }
+}
+
+/// Analytic bubble fraction for a balanced pipeline: (p−1)/(m+p−1).
+pub fn analytic_bubble(stages: usize, micros: usize) -> f64 {
+    (stages as f64 - 1.0) / (micros as f64 + stages as f64 - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn balanced(stages: usize, fwd: f64) -> Vec<StageTiming> {
+        vec![StageTiming { fwd, bwd: 2.0 * fwd, p2p: 0.0 }; stages]
+    }
+
+    #[test]
+    fn schedule_contains_every_op_once() {
+        forall(
+            "schedule-complete",
+            11,
+            40,
+            |r| {
+                let stages = r.range(1, 9);
+                let micros = r.range(1, 17);
+                let kind = if r.below(2) == 0 { Schedule::OneFOneB } else { Schedule::GPipe };
+                (stages, micros, kind)
+            },
+            |&(stages, micros, kind)| {
+                let sched = schedule(kind, stages, micros);
+                for (s, ops) in sched.iter().enumerate() {
+                    if ops.len() != 2 * micros {
+                        return Err(format!("stage {s}: {} ops", ops.len()));
+                    }
+                    let mut fwd_seen = vec![false; micros];
+                    let mut bwd_seen = vec![false; micros];
+                    for op in ops {
+                        match *op {
+                            Op::Fwd { micro } => {
+                                if fwd_seen[micro] {
+                                    return Err("dup fwd".into());
+                                }
+                                fwd_seen[micro] = true;
+                            }
+                            Op::Bwd { micro } => {
+                                if !fwd_seen[micro] {
+                                    return Err("bwd before fwd".into());
+                                }
+                                if bwd_seen[micro] {
+                                    return Err("dup bwd".into());
+                                }
+                                bwd_seen[micro] = true;
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn one_f_one_b_limits_activation_memory() {
+        // The whole point of 1F1B vs GPipe (Fig. 2): stage 0 of a deep
+        // pipeline holds p microbatches, not m.
+        assert_eq!(peak_activations(Schedule::OneFOneB, 4, 64, 0), 4);
+        assert_eq!(peak_activations(Schedule::GPipe, 4, 64, 0), 64);
+        assert_eq!(peak_activations(Schedule::OneFOneB, 4, 64, 3), 1);
+    }
+
+    #[test]
+    fn simulated_bubble_matches_analytic() {
+        forall(
+            "bubble-analytic",
+            13,
+            25,
+            |r| (r.range(1, 8), r.range(1, 24)),
+            |&(stages, micros)| {
+                let sim = simulate(Schedule::OneFOneB, &balanced(stages, 1.0), micros);
+                let expect = analytic_bubble(stages, micros);
+                if (sim.bubble_fraction - expect).abs() > 1e-9 {
+                    return Err(format!(
+                        "sim {} vs analytic {expect}",
+                        sim.bubble_fraction
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gpipe_and_1f1b_same_makespan_balanced() {
+        // With zero p2p and balanced stages both schedules have the same
+        // theoretical makespan; 1F1B wins on memory, not time.
+        let t = balanced(4, 1.0);
+        let a = simulate(Schedule::OneFOneB, &t, 8);
+        let b = simulate(Schedule::GPipe, &t, 8);
+        assert!((a.makespan - b.makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_stage_has_no_bubble() {
+        let sim = simulate(Schedule::OneFOneB, &balanced(1, 1.0), 4);
+        assert!(sim.bubble_fraction.abs() < 1e-12);
+        assert!((sim.makespan - 12.0).abs() < 1e-9); // 4 * (1 + 2)
+    }
+
+    #[test]
+    fn more_micros_amortize_bubble() {
+        let t = balanced(4, 1.0);
+        let few = simulate(Schedule::OneFOneB, &t, 4).bubble_fraction;
+        let many = simulate(Schedule::OneFOneB, &t, 64).bubble_fraction;
+        assert!(many < few / 3.0);
+    }
+
+    #[test]
+    fn p2p_cost_extends_makespan() {
+        let mut t = balanced(4, 1.0);
+        let base = simulate(Schedule::OneFOneB, &t, 8).makespan;
+        for st in &mut t {
+            st.p2p = 0.5;
+        }
+        let slowed = simulate(Schedule::OneFOneB, &t, 8).makespan;
+        assert!(slowed > base);
+    }
+
+    #[test]
+    fn unbalanced_stage_dominates() {
+        let mut t = balanced(4, 1.0);
+        t[2].fwd = 3.0;
+        t[2].bwd = 6.0;
+        let sim = simulate(Schedule::OneFOneB, &t, 16);
+        // slowest stage's busy time bounds the makespan from below
+        assert!(sim.makespan >= 16.0 * 9.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! Manifest: the contract between `python/compile/aot.py` and the runtime.
+//! Parsed with the in-repo JSON parser (`util::json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Element type of a tensor crossing the boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn from_tag(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype tag '{s}'"),
+        }
+    }
+}
+
+/// Shape + dtype + name of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-compiled function.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Layout of one parameter tensor inside a stage's `.bin`.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// One pipeline stage's parameter file.
+#[derive(Debug, Clone)]
+pub struct StageParams {
+    pub bin: String,
+    pub params: Vec<ParamSpec>,
+    pub total_bytes: usize,
+}
+
+/// Model geometry mirrored from python's ModelConfig (what L3 needs).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub config_name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub experts: usize,
+    pub seq: usize,
+    pub micro_batch: usize,
+    pub stages: usize,
+    pub aux_coef: f64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub tp: usize,
+    pub stages: Vec<StageParams>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .req("shape")?
+        .as_arr()
+        .context("shape not array")?
+        .iter()
+        .map(|v| v.as_usize().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec {
+        name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+        shape,
+        dtype: DType::from_tag(j.req("dtype")?.as_str().context("dtype")?)?,
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let cfg = j.req("config")?;
+        let geti = |k: &str| -> Result<usize> {
+            cfg.req(k)?.as_usize().with_context(|| format!("config.{k}"))
+        };
+        let model = ModelInfo {
+            config_name: j
+                .get("config_name")
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string(),
+            vocab: geti("vocab")?,
+            hidden: geti("hidden")?,
+            layers: geti("layers")?,
+            experts: geti("experts")?,
+            seq: geti("seq")?,
+            micro_batch: geti("micro_batch")?,
+            stages: geti("stages")?,
+            aux_coef: cfg.req("aux_coef")?.as_f64().context("aux_coef")?,
+        };
+        let tp = j.req("tp")?.as_usize().context("tp")?;
+
+        let stages = j
+            .req("stages")?
+            .as_arr()
+            .context("stages")?
+            .iter()
+            .map(|s| {
+                let params = s
+                    .req("params")?
+                    .as_arr()
+                    .context("params")?
+                    .iter()
+                    .map(|p| {
+                        Ok(ParamSpec {
+                            name: p.req("name")?.as_str().context("name")?.to_string(),
+                            shape: p
+                                .req("shape")?
+                                .as_arr()
+                                .context("shape")?
+                                .iter()
+                                .map(|v| v.as_usize().context("dim"))
+                                .collect::<Result<_>>()?,
+                            offset: p.req("offset")?.as_usize().context("offset")?,
+                            numel: p.req("numel")?.as_usize().context("numel")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(StageParams {
+                    bin: s.req("bin")?.as_str().context("bin")?.to_string(),
+                    params,
+                    total_bytes: s.req("total_bytes")?.as_usize().context("total")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = j
+            .req("artifacts")?
+            .as_obj()
+            .context("artifacts")?
+            .iter()
+            .map(|(name, a)| {
+                let get_specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                    a.req(k)?
+                        .as_arr()
+                        .with_context(|| format!("{name}.{k}"))?
+                        .iter()
+                        .map(tensor_spec)
+                        .collect()
+                };
+                Ok((
+                    name.clone(),
+                    ArtifactSpec {
+                        file: a.req("file")?.as_str().context("file")?.to_string(),
+                        inputs: get_specs("inputs")?,
+                        outputs: get_specs("outputs")?,
+                    },
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+
+        Ok(Manifest { model, tp, stages, artifacts })
+    }
+
+    /// Number of parameter tensors of an artifact (inputs before x/dy/...).
+    pub fn param_count(&self, stage: usize) -> usize {
+        self.stages[stage].params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config_name": "tiny",
+      "config": {"vocab": 256, "hidden": 64, "ffn": 256, "layers": 2,
+                 "heads": 4, "experts": 4, "moe_every": 2, "seq": 32,
+                 "micro_batch": 2, "stages": 2, "aux_coef": 0.01,
+                 "block_c": 32, "block_t": 64},
+      "tp": 2,
+      "stages": [
+        {"bin": "params/stage0.bin", "total_bytes": 8,
+         "params": [{"name": "a", "shape": [2], "offset": 0, "numel": 2}]}
+      ],
+      "artifacts": {
+        "stage0_fwd": {"file": "stage0_fwd.hlo.txt",
+          "inputs": [{"name": "a", "shape": [2], "dtype": "f32"},
+                     {"name": "x", "shape": [2, 32], "dtype": "i32"}],
+          "outputs": [{"shape": [2, 32, 64], "dtype": "f32"}]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.hidden, 64);
+        assert_eq!(m.tp, 2);
+        assert_eq!(m.stages[0].params[0].numel, 2);
+        let a = &m.artifacts["stage0_fwd"];
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[0].shape, vec![2, 32, 64]);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"config": {}}"#).is_err());
+    }
+}

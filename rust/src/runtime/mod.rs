@@ -1,0 +1,203 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! training hot path. Python never runs here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts are lowered with
+//! `return_tuple=True`, so every result is a tuple literal we decompose.
+//!
+//! PJRT objects hold raw pointers and are not `Send`; each worker thread
+//! (pipeline stage / TP rank) owns its own [`Runtime`] — mirroring the
+//! one-process-per-GPU layout of the paper's Megatron baseline.
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, DType, Manifest, ParamSpec, StageParams, TensorSpec};
+pub use tensor::Tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A compiled artifact plus its I/O specification.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors. Validates shapes/dtypes against the spec.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "{}: input {i} ('{}') expects {:?}{:?}, got {:?}{:?}",
+                    self.name, s.name, s.dtype, s.shape, t.dtype(), t.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    /// Execute with pre-staged device buffers for the leading inputs
+    /// (parameters) and host tensors for the trailing inputs (activations).
+    ///
+    /// This is the trainer's hot path (§Perf L3): stage parameters are
+    /// uploaded to the PJRT device ONCE per optimizer step instead of being
+    /// re-serialized into literals on every microbatch. Shapes of `staged`
+    /// were validated at staging time; only `rest` is validated here.
+    pub fn run_staged(&self, staged: &[xla::PjRtBuffer], rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let total = staged.len() + rest.len();
+        if total != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {} staged + {} host",
+                self.name,
+                self.spec.inputs.len(),
+                staged.len(),
+                rest.len()
+            );
+        }
+        for (i, (t, s)) in rest.iter().zip(&self.spec.inputs[staged.len()..]).enumerate() {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "{}: input {} ('{}') expects {:?}{:?}, got {:?}{:?}",
+                    self.name, staged.len() + i, s.name, s.dtype, s.shape,
+                    t.dtype(), t.shape
+                );
+            }
+        }
+        let client = self.exe.client();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(rest.len());
+        for t in rest {
+            bufs.push(t.to_device(client)?);
+        }
+        let args: Vec<&xla::PjRtBuffer> = staged.iter().chain(bufs.iter()).collect();
+        let result = self.exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<Vec<Tensor>> {
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// Per-thread runtime: PJRT client + compiled executables + manifest.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = std::rc::Rc::new(Executable { name: name.to_string(), spec, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Stage host tensors onto the device as reusable PJRT buffers (the
+    /// §Perf L3 optimization: upload once, execute many).
+    pub fn stage_buffers(&self, tensors: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        tensors.iter().map(|t| t.to_device(&self.client)).collect()
+    }
+
+    /// Load a stage's initial parameters from its `.bin` in manifest order.
+    pub fn load_stage_params(&self, stage: usize) -> Result<Vec<Tensor>> {
+        let sp = self
+            .manifest
+            .stages
+            .get(stage)
+            .with_context(|| format!("stage {stage} not in manifest"))?;
+        let bytes = std::fs::read(self.dir.join(&sp.bin))
+            .with_context(|| format!("reading {}", sp.bin))?;
+        if bytes.len() != sp.total_bytes {
+            bail!(
+                "{}: expected {} bytes, got {}",
+                sp.bin,
+                sp.total_bytes,
+                bytes.len()
+            );
+        }
+        sp.params
+            .iter()
+            .map(|p| {
+                let start = p.offset;
+                let end = start + p.numel * 4;
+                let data: Vec<f32> = bytes[start..end]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(Tensor::f32(data, p.shape.clone()))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in rust/tests/
+    // (integration), since they depend on `make artifacts` output.
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Runtime::open(Path::new("/nonexistent/dir")).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Host tensor: the L3-side value type crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A dense host tensor (f32 or i32), row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(vec![0.0; n], shape)
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![v], vec![])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// First element as f32 (for scalar outputs like the loss).
+    pub fn item(&self) -> Result<f32> {
+        Ok(self.as_f32()?[0])
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v),
+            Data::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Upload to a PJRT device buffer (reusable across executions).
+    pub fn to_device(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        Ok(match &self.data {
+            Data::F32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+            Data::I32(v) => client.buffer_from_host_buffer(v, &self.shape, None)?,
+        })
+    }
+
+    /// Read back from an XLA literal, checking against the expected spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        let n: usize = spec.shape.iter().product();
+        if lit.element_count() != n {
+            bail!(
+                "literal has {} elements, spec {:?} wants {n}",
+                lit.element_count(),
+                spec.shape
+            );
+        }
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::f32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            DType::I32 => Tensor::i32(lit.to_vec::<i32>()?, spec.shape.clone()),
+        })
+    }
+
+    /// Elementwise add-assign (gradient accumulation on the host).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let o = other.as_f32()?;
+        for (a, b) in self.as_f32_mut()?.iter_mut().zip(o) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, k: f32) -> Result<()> {
+        for a in self.as_f32_mut()? {
+            *a *= k;
+        }
+        Ok(())
+    }
+
+    /// L2 norm (metrics / grad-clip).
+    pub fn norm(&self) -> Result<f32> {
+        Ok(self.as_f32()?.iter().map(|x| x * x).sum::<f32>().sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_and_dtype() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.numel(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.as_i32().is_err());
+        let i = Tensor::i32(vec![1, 2], vec![2]);
+        assert_eq!(i.dtype(), DType::I32);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = Tensor::f32(vec![1.0, 2.0], vec![2]);
+        let b = Tensor::f32(vec![10.0, 20.0], vec![2]);
+        a.add_assign(&b).unwrap();
+        a.scale(0.5).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[5.5, 11.0]);
+        let bad = Tensor::f32(vec![0.0], vec![1]);
+        assert!(a.add_assign(&bad).is_err());
+    }
+
+    #[test]
+    fn norm() {
+        let t = Tensor::f32(vec![3.0, 4.0], vec![2]);
+        assert!((t.norm().unwrap() - 5.0).abs() < 1e-6);
+    }
+}

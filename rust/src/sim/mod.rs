@@ -1,0 +1,448 @@
+//! Discrete-event training-step simulator.
+//!
+//! Regenerates the paper's evaluation under the paper's own hardware
+//! constants (V100 F=125 TFLOP/s, NVLink 300 GB/s, IB 12.5 GB/s):
+//! * **Table 1** — component breakdown of a DPMoE forward step.
+//! * **Table 3** — component breakdown of a PPMoE forward step.
+//! * **Table 2** — throughput (tokens/s/GPU) for Dense / DPMoE / PPMoE
+//!   under every parallel layout the paper lists.
+//!
+//! The model: per-layer compute and collective costs from the α-β
+//! [`CostModel`], composed per microbatch, fed through the 1F1B pipeline
+//! simulator for PP layouts, plus DP gradient synchronization per step.
+//! Absolute times will differ from the authors' testbed; the *shape*
+//! (who wins, component shares, crossovers) is the reproduction target.
+
+use crate::cluster::{Link, Mesh};
+use crate::comm::CostModel;
+use crate::config::{ClusterCfg, ModelDims, ParallelCfg, Scheme, TrainCfg};
+use crate::model::{self, Batch};
+use crate::pipeline::{self, Schedule, StageTiming};
+
+/// Cost component of a forward step (paper Tables 1 & 3 vocabulary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Component {
+    Gating,
+    FirstA2A,
+    SecondA2A,
+    ExpertCalc,
+    MoeAllReduce,
+    DenseFfn,
+    FfnAllReduce,
+    Attention,
+    AttnAllReduce,
+    Embedding,
+    Other, // LN, residual, dropout: bandwidth-bound glue
+}
+
+impl Component {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Component::Gating => "Gating",
+            Component::FirstA2A => "1st all-to-all",
+            Component::SecondA2A => "2nd all-to-all",
+            Component::ExpertCalc => "Exp. Calc.",
+            Component::MoeAllReduce => "MoE AR.",
+            Component::DenseFfn => "FFN Fwd.",
+            Component::FfnAllReduce => "FFN AR.",
+            Component::Attention => "Attn Fwd.",
+            Component::AttnAllReduce => "Attn AR.",
+            Component::Embedding => "Embedding",
+            Component::Other => "Others",
+        }
+    }
+
+    pub fn is_moe(&self) -> bool {
+        matches!(
+            self,
+            Component::Gating
+                | Component::FirstA2A
+                | Component::SecondA2A
+                | Component::ExpertCalc
+                | Component::MoeAllReduce
+        )
+    }
+
+    pub fn is_comm(&self) -> bool {
+        matches!(
+            self,
+            Component::FirstA2A
+                | Component::SecondA2A
+                | Component::MoeAllReduce
+                | Component::FfnAllReduce
+                | Component::AttnAllReduce
+        )
+    }
+}
+
+/// Accumulated component times (seconds) for one forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    pub items: Vec<(Component, f64)>,
+}
+
+impl Breakdown {
+    pub fn add(&mut self, c: Component, secs: f64) {
+        for it in &mut self.items {
+            if it.0 == c {
+                it.1 += secs;
+                return;
+            }
+        }
+        self.items.push((c, secs));
+    }
+
+    pub fn get(&self, c: Component) -> f64 {
+        self.items.iter().find(|i| i.0 == c).map_or(0.0, |i| i.1)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.items.iter().map(|i| i.1).sum()
+    }
+
+    pub fn moe_total(&self) -> f64 {
+        self.items.iter().filter(|i| i.0.is_moe()).map(|i| i.1).sum()
+    }
+
+    pub fn comm_total(&self) -> f64 {
+        self.items.iter().filter(|i| i.0.is_comm()).map(|i| i.1).sum()
+    }
+
+    pub fn scaled(&self, k: f64) -> Breakdown {
+        Breakdown { items: self.items.iter().map(|&(c, t)| (c, t * k)).collect() }
+    }
+}
+
+/// Simulator over one (model, parallel, cluster) configuration.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    pub m: ModelDims,
+    pub p: ParallelCfg,
+    pub cost: CostModel,
+    pub mesh: Mesh,
+}
+
+impl Simulator {
+    pub fn new(m: ModelDims, p: ParallelCfg, cluster: ClusterCfg) -> anyhow::Result<Self> {
+        p.validate(&m, &cluster)?;
+        let mesh = Mesh::new(p, cluster.clone())?;
+        Ok(Simulator { m, p, cost: CostModel::new(cluster), mesh })
+    }
+
+    fn gemm_time(&self, flops: f64) -> f64 {
+        flops / (self.cost.cluster.flops * self.cost.cluster.efficiency)
+    }
+
+    /// Bandwidth-bound op touching `elems` elements `passes` times.
+    fn mem_time(&self, elems: f64, passes: f64) -> f64 {
+        passes * elems * self.cost.cluster.wire_bytes as f64 / self.cost.cluster.mem_bw
+    }
+
+    fn act_bytes(&self, bt: Batch) -> f64 {
+        (bt.tokens() * self.m.hidden * self.cost.cluster.wire_bytes) as f64
+    }
+
+    /// All-reduce over the TP group, using the group's real link class.
+    fn tp_all_reduce(&self, bytes: f64) -> f64 {
+        if self.p.tp <= 1 {
+            return 0.0;
+        }
+        let g = self.mesh.tp_group(crate::cluster::Coord { pp: 0, dp: 0, tp: 0 });
+        let bw = match self.mesh.group_link(&g) {
+            Link::InterNode => self.cost.inter_bw(),
+            _ => self.cost.cluster.bw_inner,
+        };
+        self.cost.all_reduce_bw(self.p.tp, bytes, bw).seconds
+    }
+
+    /// Forward breakdown of ONE transformer block over one microbatch,
+    /// on one device of this layout.
+    pub fn block_forward(&self, bt: Batch, layer: usize) -> Breakdown {
+        let mut b = Breakdown::default();
+        let t = bt.tokens() as f64;
+        let h = self.m.hidden as f64;
+
+        // attention (TP-sharded)
+        b.add(
+            Component::Attention,
+            self.gemm_time(model::attn_fwd_flops(&self.m, bt) / self.p.tp as f64),
+        );
+        b.add(Component::AttnAllReduce, self.tp_all_reduce(self.act_bytes(bt)));
+        // LN + residual glue
+        b.add(Component::Other, self.mem_time(t * h, 6.0));
+
+        let moe_here = model::is_moe_layer(&self.m, layer) && self.p.scheme != Scheme::Dense;
+        if !moe_here {
+            // dense FFN (TP-sharded)
+            b.add(
+                Component::DenseFfn,
+                self.gemm_time(model::ffn_fwd_flops(&self.m, bt) / self.p.tp as f64),
+            );
+            b.add(Component::FfnAllReduce, self.tp_all_reduce(self.act_bytes(bt)));
+            return b;
+        }
+
+        // ---- MoE layer ----
+        // gating: linear + softmax on every rank, plus dispatch bookkeeping
+        b.add(
+            Component::Gating,
+            self.gemm_time(model::gating_flops(&self.m, bt)) + self.mem_time(t * h, 4.0),
+        );
+        match self.p.scheme {
+            Scheme::DpMoE => {
+                // dispatch + gather all-to-all over the EP group (a subgroup
+                // of DP). The group strides across nodes whenever tp > 1 or
+                // ep > gpus_per_node, and every GPU of a node runs its own
+                // a2a concurrently, so inter-node groups contend for the NIC.
+                let g = self.mesh.dp_group(crate::cluster::Coord { pp: 0, dp: 0, tp: 0 });
+                let inter = self.mesh.group_link(&g) == Link::InterNode;
+                let streams =
+                    if inter { self.cost.cluster.gpus_per_node } else { 1 };
+                let a2a = if inter {
+                    let wire = self.act_bytes(bt) * (self.p.ep as f64 - 1.0)
+                        / self.p.ep as f64;
+                    (self.p.ep as f64 - 1.0) * self.cost.cluster.alpha
+                        + wire * streams as f64 / self.cost.inter_bw()
+                } else {
+                    self.cost.all_to_all(self.p.ep, self.act_bytes(bt)).seconds
+                };
+                b.add(Component::FirstA2A, a2a);
+                // expert compute: top-k dense-FFN equivalents, balanced
+                // across EP ranks; each rank computes its resident share of
+                // the global token stream -> per-rank compute equals one
+                // dense FFN over the local microbatch (top-1).
+                b.add(
+                    Component::ExpertCalc,
+                    self.gemm_time(model::moe_ffn_fwd_flops(&self.m, bt)),
+                );
+                b.add(Component::SecondA2A, a2a);
+            }
+            Scheme::PpMoE => {
+                // dispatch is a local index-slice: one gather + one scatter
+                // pass over the activations, zero wire bytes (§3.3.3)
+                b.add(Component::Gating, self.mem_time(t * h, 2.0));
+                // E/T experts per device; token work divides by tp because
+                // each rank only computes tokens routed to its local experts
+                b.add(
+                    Component::ExpertCalc,
+                    self.gemm_time(
+                        model::moe_ffn_fwd_flops(&self.m, bt) / self.p.tp as f64,
+                    ),
+                );
+                // combine: ONE inner-node all-reduce (same bytes as the
+                // dense-FFN TP all-reduce it replaces, §3.3.4)
+                b.add(Component::MoeAllReduce, self.tp_all_reduce(self.act_bytes(bt)));
+            }
+            Scheme::Dense => unreachable!(),
+        }
+        b
+    }
+
+    /// Forward breakdown over the layers resident on ONE pipeline stage.
+    pub fn stage_forward(&self, bt: Batch) -> Breakdown {
+        let layers_here = self.m.layers / self.p.pp;
+        let mut acc = Breakdown::default();
+        for l in 0..layers_here {
+            // use the global layer index pattern of stage 0; MoE layers are
+            // evenly interleaved so every stage sees the same mix
+            let bd = self.block_forward(bt, l);
+            for (c, t) in bd.items {
+                acc.add(c, t);
+            }
+        }
+        acc
+    }
+
+    /// Forward breakdown of the full model (all stages) — the paper's
+    /// Tables 1 and 3 aggregate over a whole forward step.
+    pub fn full_forward(&self, bt: Batch) -> Breakdown {
+        let mut acc = Breakdown::default();
+        for l in 0..self.m.layers {
+            let bd = self.block_forward(bt, l);
+            for (c, t) in bd.items {
+                acc.add(c, t);
+            }
+        }
+        // embedding + head
+        let t = bt.tokens() as f64;
+        acc.add(
+            Component::Embedding,
+            self.gemm_time(2.0 * t * (self.m.hidden * self.m.vocab) as f64 / self.p.tp as f64),
+        );
+        acc
+    }
+
+    /// Simulate one full training step; returns (step_seconds, tokens/s/GPU).
+    pub fn step(&self, tc: TrainCfg) -> StepResult {
+        let bt = Batch { b: tc.micro_batch, s: self.m.seq };
+        let stage_fwd = self.stage_forward(bt).total();
+        // backward ≈ 2× forward compute; collective volume matches forward
+        // (§3.2 footnote 2), approximated as 2× forward time per stage.
+        let stage_bwd = 2.0 * stage_fwd;
+        let p2p = if self.p.pp > 1 {
+            self.cost.p2p(self.act_bytes(bt)).seconds
+        } else {
+            0.0
+        };
+        let timing = vec![StageTiming { fwd: stage_fwd, bwd: stage_bwd, p2p }; self.p.pp];
+        let pipe = pipeline::simulate(Schedule::OneFOneB, &timing, tc.num_micro);
+
+        // DP gradient all-reduce (inter-node at scale); ZeRO swaps the
+        // all-reduce for reduce-scatter + all-gather: same volume.
+        let grad_bytes = model::params_per_device(
+            &self.m,
+            self.p.dp,
+            self.p.tp,
+            self.p.pp,
+            self.p.scheme == Scheme::DpMoE,
+        ) * self.cost.cluster.wire_bytes as f64;
+        let dp_sync = if self.p.dp > 1 {
+            // every GPU of a node syncs its own gradients concurrently ->
+            // NIC contention divides the inter-node bandwidth
+            let bw =
+                self.cost.inter_bw() / self.cost.cluster.gpus_per_node as f64;
+            self.cost.all_reduce_bw(self.p.dp, grad_bytes, bw).seconds
+        } else {
+            0.0
+        };
+
+        let step = pipe.makespan + dp_sync;
+        let tokens = tc.global_tokens(&self.m, self.p.dp) as f64;
+        StepResult {
+            step_seconds: step,
+            tokens_per_sec_per_gpu: tokens / step / self.p.world() as f64,
+            bubble_fraction: pipe.bubble_fraction,
+            dp_sync_seconds: dp_sync,
+            stage_fwd_seconds: stage_fwd,
+        }
+    }
+}
+
+/// Outcome of a simulated training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepResult {
+    pub step_seconds: f64,
+    pub tokens_per_sec_per_gpu: f64,
+    pub bubble_fraction: f64,
+    pub dp_sync_seconds: f64,
+    pub stage_fwd_seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        gpt3_medium, moe_large_setting, moe_small_setting, v100_cluster,
+    };
+
+    fn sim(m: ModelDims, p: ParallelCfg, gpus: usize) -> Simulator {
+        Simulator::new(m, p, v100_cluster(gpus)).unwrap()
+    }
+
+    fn dpmoe(dp: usize, tp: usize) -> ParallelCfg {
+        ParallelCfg { dp, tp, pp: 1, ep: dp.min(64), zero: true, scheme: Scheme::DpMoE }
+    }
+
+    fn ppmoe(tp: usize, pp: usize) -> ParallelCfg {
+        ParallelCfg { dp: 1, tp, pp, ep: tp, zero: false, scheme: Scheme::PpMoE }
+    }
+
+    fn tc(dp: usize) -> TrainCfg {
+        TrainCfg { micro_batch: 8, num_micro: (256 / dp).max(1) }
+    }
+
+    #[test]
+    fn table1_shape_a2a_dominates_dpmoe() {
+        // Paper Table 1: two a2a ops are ~65% of DPMoE fwd time, MoE fwd
+        // ~83%, gating small.
+        let s = sim(moe_large_setting(), dpmoe(256, 1), 256);
+        let bd = s.full_forward(Batch { b: 8, s: 2048 });
+        let total = bd.total();
+        let a2a = bd.get(Component::FirstA2A) + bd.get(Component::SecondA2A);
+        let moe = bd.moe_total();
+        assert!(a2a / total > 0.5, "a2a share {}", a2a / total);
+        assert!(moe / total > 0.7, "moe share {}", moe / total);
+        assert!(bd.get(Component::Gating) / total < 0.1);
+    }
+
+    #[test]
+    fn table3_shape_ppmoe_moe_share_drops() {
+        // Paper Table 3: PPMoE MoE fwd drops to ~38% of total, and the MoE
+        // all-reduce is close to the dense-FFN all-reduce.
+        let s = sim(moe_small_setting(), ppmoe(8, 4), 32);
+        let bd = s.full_forward(Batch { b: 8, s: 2048 });
+        let total = bd.total();
+        let moe_share = bd.moe_total() / total;
+        assert!(moe_share < 0.6, "moe share {moe_share}");
+        let moe_ar = bd.get(Component::MoeAllReduce);
+        let ffn_ar = bd.get(Component::FfnAllReduce);
+        assert!(
+            (moe_ar - ffn_ar).abs() / ffn_ar < 0.15,
+            "MoE AR {moe_ar} vs FFN AR {ffn_ar}"
+        );
+    }
+
+    #[test]
+    fn ppmoe_beats_dpmoe_large_setting() {
+        // Headline: >1.75x on the large setting (Table 2: 323 vs 183).
+        let dp = sim(moe_large_setting(), dpmoe(256, 1), 256).step(tc(256));
+        let pp = sim(moe_large_setting(), ppmoe(8, 16), 128).step(tc(1));
+        let speedup = pp.tokens_per_sec_per_gpu / dp.tokens_per_sec_per_gpu;
+        assert!(speedup > 1.3, "speedup {speedup}");
+    }
+
+    #[test]
+    fn ppmoe_near_backbone_throughput() {
+        // Headline: PPMoE ~90% of its 20x-smaller backbone's throughput.
+        let dense = ParallelCfg {
+            dp: 1, tp: 8, pp: 16, ep: 1, zero: false, scheme: Scheme::Dense,
+        };
+        let backbone = sim(moe_large_setting().backbone(), dense, 128).step(tc(1));
+        let moe = sim(moe_large_setting(), ppmoe(8, 16), 128).step(tc(1));
+        let ratio = moe.tokens_per_sec_per_gpu / backbone.tokens_per_sec_per_gpu;
+        assert!(ratio > 0.7 && ratio <= 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn dense_model_has_no_moe_components() {
+        let s = sim(
+            gpt3_medium(),
+            ParallelCfg { dp: 4, tp: 8, pp: 1, ep: 1, zero: true, scheme: Scheme::Dense },
+            32,
+        );
+        let bd = s.full_forward(Batch { b: 8, s: 2048 });
+        assert_eq!(bd.moe_total(), 0.0);
+        assert!(bd.get(Component::DenseFfn) > 0.0);
+    }
+
+    #[test]
+    fn bubble_shrinks_with_micros() {
+        let s = sim(moe_small_setting(), ppmoe(8, 4), 32);
+        let few = s.step(TrainCfg { micro_batch: 8, num_micro: 4 });
+        let many = s.step(TrainCfg { micro_batch: 8, num_micro: 64 });
+        assert!(many.bubble_fraction < few.bubble_fraction);
+    }
+
+    #[test]
+    fn dpmoe_tp8_worse_than_tp1_small_setting() {
+        // Table 2 small setting: DP32/EP64 -> 2147 vs DP4+TP8 -> 218.
+        let a = sim(moe_small_setting(), dpmoe(32, 1), 32).step(tc(32));
+        let mut cfg = dpmoe(4, 8);
+        cfg.ep = 4;
+        let b = sim(moe_small_setting(), cfg, 32).step(tc(4));
+        assert!(
+            a.tokens_per_sec_per_gpu > b.tokens_per_sec_per_gpu,
+            "{} vs {}",
+            a.tokens_per_sec_per_gpu,
+            b.tokens_per_sec_per_gpu
+        );
+    }
+
+    #[test]
+    fn step_result_sane() {
+        let r = sim(moe_small_setting(), ppmoe(8, 4), 32).step(tc(1));
+        assert!(r.step_seconds > 0.0);
+        assert!(r.tokens_per_sec_per_gpu > 0.0);
+        assert!((0.0..1.0).contains(&r.bubble_fraction));
+    }
+}

@@ -1,0 +1,197 @@
+//! Real tensor-parallel × expert-parallel MoE layer execution (§3.3.2–3.3.4).
+//!
+//! R rank threads each own a PJRT runtime and the `moe_rank{r}of{R}`
+//! artifact: identical input activations + full gating weights, but only the
+//! rank's N = E/R local experts. Each rank index-slices its tokens, runs its
+//! grouped-expert kernel, and contributes a partial output; the in-process
+//! [`AllReduceGroup`] sums partials — the single inner-node all-reduce that
+//! replaces DPMoE's two all-to-alls. Numerics are verified against the
+//! monolithic `moe_single` artifact.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
+use std::thread;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::AllReduceGroup;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::prng::Rng;
+
+/// Timing breakdown of one rank's MoE layer execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankTiming {
+    pub exec_seconds: f64,      // gating + slice + expert FFN (inside HLO)
+    pub allreduce_seconds: f64, // combine across ranks (in rust)
+}
+
+/// Result of a TP×EP run.
+#[derive(Debug)]
+pub struct TpRunResult {
+    pub output: Vec<f32>,
+    pub reference: Vec<f32>,
+    pub max_abs_err: f32,
+    pub rank_timings: Vec<RankTiming>,
+    pub aux: f32,
+}
+
+/// MoE layer weights (host-side, full E experts).
+pub struct MoeWeights {
+    pub wg: Tensor,
+    pub w1: Tensor,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub b2: Tensor,
+}
+
+/// Deterministic random weights matching the manifest geometry.
+pub fn synth_weights(
+    tokens: usize,
+    hidden: usize,
+    ffn: usize,
+    experts: usize,
+    seed: u64,
+) -> (Tensor, MoeWeights) {
+    let mut rng = Rng::new(seed);
+    let mut randn = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    };
+    let x = Tensor::f32(randn(tokens * hidden, 0.5), vec![tokens, hidden]);
+    let w = MoeWeights {
+        wg: Tensor::f32(randn(hidden * experts, 0.1), vec![hidden, experts]),
+        w1: Tensor::f32(randn(experts * hidden * ffn, 0.05), vec![experts, hidden, ffn]),
+        b1: Tensor::f32(randn(experts * ffn, 0.02), vec![experts, ffn]),
+        w2: Tensor::f32(randn(experts * ffn * hidden, 0.05), vec![experts, ffn, hidden]),
+        b2: Tensor::f32(randn(experts * hidden, 0.02), vec![experts, hidden]),
+    };
+    (x, w)
+}
+
+/// Slice expert-major weights `[E, ...]` to ranks' local `[N, ...]` shards.
+pub fn shard_experts(t: &Tensor, ranks: usize) -> Result<Vec<Tensor>> {
+    let e = t.shape[0];
+    if e % ranks != 0 {
+        bail!("experts {e} not divisible by ranks {ranks}");
+    }
+    let n = e / ranks;
+    let per = t.numel() / e;
+    let data = t.as_f32()?;
+    let mut shape = t.shape.clone();
+    shape[0] = n;
+    Ok((0..ranks)
+        .map(|r| {
+            Tensor::f32(data[r * n * per..(r + 1) * n * per].to_vec(), shape.clone())
+        })
+        .collect())
+}
+
+/// Execute the MoE layer across `ranks` threads; verify against the
+/// monolithic single-rank artifact.
+pub fn run_tp_moe(artifacts: &Path, seed: u64) -> Result<TpRunResult> {
+    // geometry + reference from a driver-side runtime
+    let mut rt = Runtime::open(artifacts)?;
+    let ranks = rt.manifest.tp;
+    let single = rt.load("moe_single")?;
+    let spec = &single.spec.inputs;
+    let (tokens, hidden) = (spec[0].shape[0], spec[0].shape[1]);
+    let experts = spec[1].shape[1];
+    let ffn = spec[2].shape[2];
+
+    let (x, w) = synth_weights(tokens, hidden, ffn, experts, seed);
+    let ref_out = single.run(&[
+        x.clone(),
+        w.wg.clone(),
+        w.w1.clone(),
+        w.b1.clone(),
+        w.w2.clone(),
+        w.b2.clone(),
+    ])?;
+    let reference = ref_out[0].as_f32()?.to_vec();
+    let aux = ref_out[1].item()?;
+
+    let w1s = shard_experts(&w.w1, ranks)?;
+    let b1s = shard_experts(&w.b1, ranks)?;
+    let w2s = shard_experts(&w.w2, ranks)?;
+    let b2s = shard_experts(&w.b2, ranks)?;
+
+    let group = AllReduceGroup::new(ranks);
+    let (tx, rx) = channel();
+    let dir: PathBuf = artifacts.to_path_buf();
+    let mut handles = Vec::new();
+    for r in 0..ranks {
+        let group = group.clone();
+        let tx = tx.clone();
+        let dir = dir.clone();
+        let (x, wg) = (x.clone(), w.wg.clone());
+        let (w1, b1, w2, b2) =
+            (w1s[r].clone(), b1s[r].clone(), w2s[r].clone(), b2s[r].clone());
+        handles.push(thread::spawn(move || -> Result<()> {
+            let mut rt = Runtime::open(&dir)?;
+            let exe = rt.load(&format!("moe_rank{r}of{ranks}"))?;
+            let t0 = std::time::Instant::now();
+            let out = exe.run(&[x, wg, w1, b1, w2, b2])?;
+            let exec_seconds = t0.elapsed().as_secs_f64();
+            let partial = out[0].as_f32()?;
+            let t1 = std::time::Instant::now();
+            let combined = group.all_reduce(partial);
+            let allreduce_seconds = t1.elapsed().as_secs_f64();
+            tx.send((r, combined, RankTiming { exec_seconds, allreduce_seconds }))
+                .ok();
+            Ok(())
+        }));
+    }
+    drop(tx);
+
+    let mut output: Option<Vec<f32>> = None;
+    let mut rank_timings = vec![RankTiming::default(); ranks];
+    for (r, combined, timing) in rx {
+        rank_timings[r] = timing;
+        match &output {
+            None => output = Some(combined.to_vec()),
+            Some(prev) => {
+                // every rank must see the identical all-reduced result
+                if prev != &*combined {
+                    bail!("rank {r} saw a different all-reduce result");
+                }
+            }
+        }
+    }
+    for h in handles {
+        h.join().expect("rank thread panicked")?;
+    }
+    let output = output.context("no rank output")?;
+
+    let max_abs_err = output
+        .iter()
+        .zip(&reference)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+
+    Ok(TpRunResult { output, reference, max_abs_err, rank_timings, aux })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_experts_partitions() {
+        let t = Tensor::f32((0..24).map(|i| i as f32).collect(), vec![4, 3, 2]);
+        let shards = shard_experts(&t, 2).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].shape, vec![2, 3, 2]);
+        assert_eq!(shards[0].as_f32().unwrap()[0], 0.0);
+        assert_eq!(shards[1].as_f32().unwrap()[0], 12.0);
+        assert!(shard_experts(&t, 3).is_err());
+    }
+
+    #[test]
+    fn synth_weights_deterministic() {
+        let (x1, w1) = synth_weights(8, 4, 8, 2, 7);
+        let (x2, w2) = synth_weights(8, 4, 8, 2, 7);
+        assert_eq!(x1, x2);
+        assert_eq!(w1.w1, w2.w1);
+        let (_, w3) = synth_weights(8, 4, 8, 2, 8);
+        assert_ne!(w1.w1, w3.w1);
+    }
+}

@@ -1,0 +1,379 @@
+//! Real pipeline training: the paper's PPMoE execution model, live.
+//!
+//! Each pipeline stage is a worker thread owning its own PJRT runtime and
+//! parameter shard (PJRT objects are not Send, matching the paper's
+//! one-process-per-device layout). Stages execute the exact 1F1B op order
+//! from [`crate::pipeline::schedule`]; activations and gradients travel
+//! over mpsc channels (the p2p links of §3.1.3); gradients accumulate over
+//! microbatches and an in-crate fused Adam applies the update — the
+//! "gradient accumulation" half of the paper's §3.3.6 equivalence argument.
+//!
+//! The aux (load-balance) loss is threaded through the pipeline as a
+//! scalar alongside activations, and its cotangent (`aux_coef`) is passed
+//! back to every stage's backward — so the pipelined gradient equals the
+//! single-shot `full_lossgrad` artifact up to fp tolerance (verified in
+//! rust/tests/pipeline_equivalence.rs).
+
+pub mod adam;
+pub mod checkpoint;
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::comm::Barrier;
+use crate::data::Corpus;
+use crate::metrics::Timers;
+use crate::pipeline::{schedule, Op, Schedule};
+use crate::runtime::{Runtime, Tensor};
+use adam::Adam;
+
+/// Training hyperparameters.
+#[derive(Debug, Clone)]
+pub struct TrainerCfg {
+    pub artifacts: PathBuf,
+    pub steps: usize,
+    pub num_micro: usize, // microbatches per global batch (pipeline depth m)
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+    pub grad_clip: Option<f32>,
+    pub schedule: Schedule,
+    /// Linear LR warmup steps (the paper warms its gating up over the first
+    /// steps of Fig. 5; 0 disables).
+    pub warmup_steps: usize,
+    /// If set, every stage writes its final parameters here
+    /// (`stage<i>.bin`, same layout as the manifest) for `evaluate`.
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl Default for TrainerCfg {
+    fn default() -> Self {
+        TrainerCfg {
+            artifacts: PathBuf::from("artifacts"),
+            steps: 50,
+            num_micro: 4,
+            lr: 1e-3,
+            seed: 0,
+            log_every: 10,
+            grad_clip: Some(1.0),
+            schedule: Schedule::OneFOneB,
+            warmup_steps: 0,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// Forward message on the stage-boundary channel.
+struct ActMsg {
+    micro: usize,
+    x: Tensor,
+    aux: f32,
+}
+
+/// Backward message.
+struct GradMsg {
+    micro: usize,
+    dy: Tensor,
+}
+
+/// Per-step record returned to the caller.
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub tokens: usize,
+    pub seconds: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub steps: Vec<StepLog>,
+    pub tokens_per_sec: f64,
+    pub stage_timers: Vec<Timers>,
+    pub final_loss: f32,
+}
+
+impl TrainReport {
+    /// Mean loss of the first / last `k` steps — convergence check helper.
+    pub fn mean_loss(&self, range: std::ops::Range<usize>) -> f32 {
+        let xs: Vec<f32> = self.steps[range].iter().map(|s| s.loss).collect();
+        xs.iter().sum::<f32>() / xs.len().max(1) as f32
+    }
+}
+
+/// Run PPMoE pipeline training against an artifacts directory.
+pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
+    // read the manifest once on the driver to learn the geometry
+    let manifest = crate::runtime::Manifest::load(&cfg.artifacts.join("manifest.json"))?;
+    let p = manifest.model.stages;
+    let (b, s) = (manifest.model.micro_batch, manifest.model.seq);
+    let vocab = manifest.model.vocab;
+    let aux_coef = manifest.model.aux_coef as f32;
+    let m = cfg.num_micro;
+
+    // stage-boundary channels
+    let mut fwd_txs: Vec<Sender<ActMsg>> = Vec::new();
+    let mut fwd_rxs: Vec<Option<Receiver<ActMsg>>> = Vec::new();
+    let mut bwd_txs: Vec<Sender<GradMsg>> = Vec::new();
+    let mut bwd_rxs: Vec<Option<Receiver<GradMsg>>> = Vec::new();
+    for _ in 0..p {
+        let (ftx, frx) = channel::<ActMsg>();
+        fwd_txs.push(ftx);
+        fwd_rxs.push(Some(frx));
+        let (btx, brx) = channel::<GradMsg>();
+        bwd_txs.push(btx);
+        bwd_rxs.push(Some(brx));
+    }
+    // driver -> stage 0 tokens; driver -> last stage targets
+    let (tgt_tx, tgt_rx) = channel::<Tensor>();
+    let mut tgt_rx = Some(tgt_rx);
+    // last stage -> driver losses
+    let (loss_tx, loss_rx) = channel::<f32>();
+    // stage timers back to driver at the end
+    let (timer_tx, timer_rx) = channel::<(usize, Timers)>();
+
+    let barrier = Barrier::new(p + 1); // stages + driver
+    let sched = Arc::new(schedule(cfg.schedule, p, m));
+
+    let mut handles = Vec::new();
+    for stage in 0..p {
+        let rx_fwd = fwd_rxs[stage].take().unwrap();
+        let tx_fwd = if stage + 1 < p { Some(fwd_txs[stage + 1].clone()) } else { None };
+        let rx_bwd = bwd_rxs[stage].take().unwrap();
+        let tx_bwd = if stage > 0 { Some(bwd_txs[stage - 1].clone()) } else { None };
+        let tgt_rx = if stage == p - 1 { tgt_rx.take() } else { None };
+        let loss_tx = loss_tx.clone();
+        let timer_tx = timer_tx.clone();
+        let barrier = barrier.clone();
+        let sched = sched.clone();
+        let cfg = cfg.clone();
+        let handle = thread::Builder::new()
+            .name(format!("stage{stage}"))
+            .spawn(move || {
+                stage_worker(
+                    stage, p, &cfg, &sched[stage], rx_fwd, tx_fwd, rx_bwd, tx_bwd,
+                    tgt_rx, loss_tx, timer_tx, barrier, aux_coef,
+                )
+            })
+            .context("spawning stage thread")?;
+        handles.push(handle);
+    }
+    drop(loss_tx);
+    drop(timer_tx);
+
+    // ---- driver loop: feed data, collect losses ----
+    let mut corpus = Corpus::new(vocab, cfg.seed);
+    let mut steps = Vec::with_capacity(cfg.steps);
+    let run_start = std::time::Instant::now();
+    let mut total_tokens = 0usize;
+    let mut final_loss = f32::NAN;
+
+    for step in 0..cfg.steps {
+        let t0 = std::time::Instant::now();
+        for micro in 0..m {
+            let (tokens, targets) = corpus.batch(b, s);
+            fwd_txs[0]
+                .send(ActMsg { micro, x: Tensor::i32(tokens, vec![b, s]), aux: 0.0 })
+                .ok();
+            tgt_tx.send(Tensor::i32(targets, vec![b, s])).ok();
+        }
+        // collect per-micro losses for this step
+        let mut loss_sum = 0.0f32;
+        for _ in 0..m {
+            loss_sum += loss_rx.recv().context("loss channel closed")?;
+        }
+        barrier.wait(); // optimizer updates done on all stages
+        let loss = loss_sum / m as f32;
+        let tokens = m * b * s;
+        total_tokens += tokens;
+        final_loss = loss;
+        let log = StepLog { step, loss, tokens, seconds: t0.elapsed().as_secs_f64() };
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!(
+                "step {:>5}  loss {:.4}  ({:.0} tok/s)",
+                step,
+                loss,
+                tokens as f64 / log.seconds
+            );
+        }
+        steps.push(log);
+    }
+    drop(fwd_txs);
+    drop(tgt_tx);
+
+    let mut stage_timers = vec![Timers::new(); p];
+    for (stage, t) in timer_rx {
+        stage_timers[stage] = t;
+    }
+    for h in handles {
+        h.join().expect("stage thread panicked")?;
+    }
+
+    Ok(TrainReport {
+        steps,
+        tokens_per_sec: total_tokens as f64 / run_start.elapsed().as_secs_f64(),
+        stage_timers,
+        final_loss,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage_worker(
+    stage: usize,
+    p: usize,
+    cfg: &TrainerCfg,
+    ops: &[Op],
+    rx_fwd: Receiver<ActMsg>,
+    tx_fwd: Option<Sender<ActMsg>>,
+    rx_bwd: Receiver<GradMsg>,
+    tx_bwd: Option<Sender<GradMsg>>,
+    tgt_rx: Option<Receiver<Tensor>>,
+    loss_tx: Sender<f32>,
+    timer_tx: Sender<(usize, Timers)>,
+    barrier: Arc<Barrier>,
+    aux_coef: f32,
+) -> Result<()> {
+    let mut rt = Runtime::open(&cfg.artifacts)?;
+    let is_last = stage == p - 1;
+    let fwd_exe = if is_last { None } else { Some(rt.load(&format!("stage{stage}_fwd"))?) };
+    let bwd_exe = if is_last {
+        rt.load("lossgrad")?
+    } else {
+        rt.load(&format!("stage{stage}_bwd"))?
+    };
+    let mut params = rt.load_stage_params(stage)?;
+    let n_params = params.len();
+    let mut opt = Adam::new(cfg.lr, &params);
+    let mut timers = Timers::new();
+    let m = cfg.num_micro;
+    // §Perf L3: upload parameters to the PJRT device once per optimizer
+    // step; microbatch executions reuse the staged buffers (run_staged)
+    // instead of re-serializing every parameter into a literal.
+    let mut staged = rt.stage_buffers(&params)?;
+
+    // forward inputs stashed for the recompute-based backward; targets are
+    // stashed at Fwd time keyed by micro (GPipe drains backwards, so FIFO
+    // consumption at Bwd would pair micro k with micro m-1-k's targets)
+    let mut stash: Vec<Option<ActMsg>> = (0..m).map(|_| None).collect();
+    let mut tgt_stash: Vec<Option<Tensor>> = (0..m).map(|_| None).collect();
+    let mut grad_acc: Option<Vec<Tensor>> = None;
+
+    for _step in 0..cfg.steps {
+        for op in ops {
+            match *op {
+                Op::Fwd { micro } => {
+                    let msg = timers.time("p2p_recv", || rx_fwd.recv());
+                    let msg = msg.context("fwd channel closed")?;
+                    debug_assert_eq!(msg.micro, micro);
+                    if is_last {
+                        // fused fwd+loss+bwd happens at Bwd; stash input +
+                        // this micro's targets (sent in fwd order)
+                        tgt_stash[micro] =
+                            Some(tgt_rx.as_ref().unwrap().recv().context("targets closed")?);
+                        stash[micro] = Some(msg);
+                    } else {
+                        let exe = fwd_exe.as_ref().unwrap();
+                        let out = timers.time("fwd", || {
+                            exe.run_staged(&staged, std::slice::from_ref(&msg.x))
+                        })?;
+                        let act = out[0].clone();
+                        let aux = msg.aux + out[1].item()?;
+                        stash[micro] = Some(msg);
+                        tx_fwd
+                            .as_ref()
+                            .unwrap()
+                            .send(ActMsg { micro, x: act, aux })
+                            .ok();
+                    }
+                }
+                Op::Bwd { micro } => {
+                    let stashed = stash[micro].take().context("missing stash")?;
+                    let grads: Vec<Tensor>;
+                    let dx: Option<Tensor>;
+                    if is_last {
+                        let targets = tgt_stash[micro].take().context("missing targets")?;
+                        let rest = [stashed.x, targets, Tensor::scalar_f32(stashed.aux)];
+                        let out =
+                            timers.time("lossgrad", || bwd_exe.run_staged(&staged, &rest))?;
+                        // outputs: (loss, dx, dparams...)
+                        loss_tx.send(out[0].item()?).ok();
+                        dx = Some(out[1].clone());
+                        grads = out[2..].to_vec();
+                    } else {
+                        let gmsg = timers.time("p2p_recv", || rx_bwd.recv());
+                        let gmsg = gmsg.context("bwd channel closed")?;
+                        debug_assert_eq!(gmsg.micro, micro);
+                        let rest = [stashed.x, gmsg.dy, Tensor::scalar_f32(aux_coef)];
+                        let out =
+                            timers.time("bwd", || bwd_exe.run_staged(&staged, &rest))?;
+                        if stage == 0 {
+                            dx = None;
+                            grads = out.to_vec();
+                        } else {
+                            dx = Some(out[0].clone());
+                            grads = out[1..].to_vec();
+                        }
+                    }
+                    debug_assert_eq!(grads.len(), n_params);
+                    // accumulate
+                    match &mut grad_acc {
+                        None => grad_acc = Some(grads),
+                        Some(acc) => {
+                            for (a, g) in acc.iter_mut().zip(&grads) {
+                                a.add_assign(g)?;
+                            }
+                        }
+                    }
+                    if let (Some(tx), Some(dx)) = (&tx_bwd, dx) {
+                        tx.send(GradMsg { micro, dy: dx }).ok();
+                    }
+                }
+            }
+        }
+        // ---- optimizer update (mean over microbatches) ----
+        // linear LR warmup (paper §4.2: gating needs steps to stabilize)
+        opt.lr = if cfg.warmup_steps > 0 {
+            cfg.lr * (((_step + 1) as f32) / cfg.warmup_steps as f32).min(1.0)
+        } else {
+            cfg.lr
+        };
+        let mut grads = grad_acc.take().context("no grads")?;
+        timers.time("optimizer", || -> Result<()> {
+            let scale = 1.0 / m as f32;
+            for g in &mut grads {
+                g.scale(scale)?;
+            }
+            if let Some(max_norm) = cfg.grad_clip {
+                let norm: f32 = grads
+                    .iter()
+                    .map(|g| g.norm().map(|n| n * n))
+                    .collect::<Result<Vec<_>>>()?
+                    .iter()
+                    .sum::<f32>()
+                    .sqrt();
+                if norm > max_norm {
+                    let k = max_norm / norm;
+                    for g in &mut grads {
+                        g.scale(k)?;
+                    }
+                }
+            }
+            opt.update(&mut params, &grads)
+        })?;
+        // re-stage the updated parameters for the next step's microbatches
+        staged = timers.time("stage_params", || rt.stage_buffers(&params))?;
+        barrier.wait();
+    }
+
+    if let Some(dir) = &cfg.checkpoint_dir {
+        checkpoint::save_stage(dir, stage, &rt.manifest, &params)?;
+    }
+
+    timer_tx.send((stage, timers)).ok();
+    Ok(())
+}

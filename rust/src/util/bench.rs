@@ -1,0 +1,109 @@
+//! Minimal bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` target with `harness = false`; those
+//! binaries call [`bench`] / [`bench_n`] here and print a criterion-style
+//! line: median, mean, p10/p90 over timed iterations after warmup.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<48} median {:>12}  mean {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run for ~`target_ms` wall or at most
+/// `max_iters`, whichever first. Returns stats over per-iteration times.
+pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> BenchResult {
+    bench_cfg(name, 3, 200, 500.0, &mut f)
+}
+
+/// Fixed-iteration variant for expensive bodies.
+pub fn bench_n<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    bench_cfg(name, 1, iters, f64::INFINITY, &mut f)
+}
+
+fn bench_cfg<R>(
+    name: &str,
+    warmup: usize,
+    max_iters: usize,
+    target_ms: f64,
+    f: &mut impl FnMut() -> R,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(max_iters.min(4096));
+    let start = Instant::now();
+    for _ in 0..max_iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed().as_secs_f64() * 1e3 > target_ms && times.len() >= 10 {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    let r = BenchResult {
+        name: name.to_string(),
+        median_ns: times[n / 2],
+        mean_ns: times.iter().sum::<f64>() / n as f64,
+        p10_ns: times[n / 10],
+        p90_ns: times[(n * 9) / 10],
+        iters: n,
+    };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench_cfg("noop", 1, 50, 50.0, &mut || 1 + 1);
+        assert!(r.iters >= 10);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5.0e3).contains("µs"));
+        assert!(fmt_ns(5.0e6).contains("ms"));
+        assert!(fmt_ns(5.0e9).contains("s"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Property-test driver (proptest is unavailable offline): runs a property
+//! over N pseudo-random cases from a seeded `Rng`; on failure reports the
+//! case index and seed so the exact input can be replayed deterministically.
+
+use super::prng::Rng;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`.
+///
+/// Panics with the reproducing (seed, case) on the first failure. There is
+/// no shrinking; generators should already produce small-ish cases.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  \
+                 input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("x<n", 1, 100, |r| r.below(10), |x| {
+            if *x < 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 10"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        forall("always-fails", 2, 10, |r| r.below(5), |_| Err("nope".into()));
+    }
+}

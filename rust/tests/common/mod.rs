@@ -1,0 +1,19 @@
+//! Shared helpers for integration tests: locate an artifacts directory
+//! produced by `make artifacts` / `make artifacts-tiny`.
+
+use std::path::PathBuf;
+
+/// Prefer the tiny test artifacts; fall back to the default set.
+/// Panics with a actionable message if neither exists.
+pub fn artifacts_dir() -> PathBuf {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    for candidate in ["artifacts-tiny", "artifacts"] {
+        let dir = root.join(candidate);
+        if dir.join("manifest.json").exists() {
+            return dir;
+        }
+    }
+    panic!(
+        "no artifacts found — run `make artifacts` (or `make artifacts-tiny`) first"
+    );
+}

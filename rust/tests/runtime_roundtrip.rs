@@ -1,0 +1,117 @@
+//! Integration: the AOT bridge end to end. Load HLO-text artifacts produced
+//! by `python/compile/aot.py`, compile on the PJRT CPU client, execute, and
+//! validate shapes, dtypes and error paths.
+
+mod common;
+
+use ppmoe::runtime::{DType, Runtime, Tensor};
+
+#[test]
+fn manifest_matches_artifacts_on_disk() {
+    let dir = common::artifacts_dir();
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.manifest.model.stages >= 1);
+    for (name, art) in &rt.manifest.artifacts {
+        assert!(dir.join(&art.file).exists(), "{name} file missing");
+        assert!(!art.inputs.is_empty(), "{name} has no inputs");
+        assert!(!art.outputs.is_empty(), "{name} has no outputs");
+    }
+}
+
+#[test]
+fn stage0_fwd_executes_with_loaded_params() {
+    let dir = common::artifacts_dir();
+    let mut rt = Runtime::open(&dir).unwrap();
+    let exe = rt.load("stage0_fwd").unwrap();
+    let params = rt.load_stage_params(0).unwrap();
+    assert_eq!(params.len() + 1, exe.spec.inputs.len());
+
+    let (b, s) = (rt.manifest.model.micro_batch, rt.manifest.model.seq);
+    let h = rt.manifest.model.hidden;
+    let mut inputs = params;
+    inputs.push(Tensor::i32(vec![1; b * s], vec![b, s]));
+    let out = exe.run(&inputs).unwrap();
+    // outputs: (activations, aux)
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].shape, vec![b, s, h]);
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+    assert!(out[1].item().unwrap().is_finite());
+}
+
+#[test]
+fn executable_rejects_wrong_shapes_and_dtypes() {
+    let dir = common::artifacts_dir();
+    let mut rt = Runtime::open(&dir).unwrap();
+    let exe = rt.load("stage0_fwd").unwrap();
+    let params = rt.load_stage_params(0).unwrap();
+
+    // wrong arity
+    assert!(exe.run(&params).is_err());
+
+    // wrong dtype for tokens (f32 instead of i32)
+    let (b, s) = (rt.manifest.model.micro_batch, rt.manifest.model.seq);
+    let mut bad = params.clone();
+    bad.push(Tensor::f32(vec![0.0; b * s], vec![b, s]));
+    assert!(exe.run(&bad).is_err());
+
+    // wrong shape
+    let mut bad2 = params;
+    bad2.push(Tensor::i32(vec![0; b * s * 2], vec![b, 2 * s]));
+    assert!(exe.run(&bad2).is_err());
+}
+
+#[test]
+fn params_layout_is_consistent() {
+    let dir = common::artifacts_dir();
+    let rt = Runtime::open(&dir).unwrap();
+    for stage in 0..rt.manifest.model.stages {
+        let params = rt.load_stage_params(stage).unwrap();
+        let specs = &rt.manifest.stages[stage].params;
+        assert_eq!(params.len(), specs.len());
+        for (t, spec) in params.iter().zip(specs) {
+            assert_eq!(t.shape, spec.shape, "shape of {}", spec.name);
+            assert_eq!(t.numel(), spec.numel, "numel of {}", spec.name);
+            assert_eq!(t.dtype(), DType::F32);
+            // initial params must be finite (catches bin/layout skew)
+            assert!(
+                t.as_f32().unwrap().iter().all(|x| x.is_finite()),
+                "{} has non-finite inits",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn loss_eval_runs_and_is_positive() {
+    let dir = common::artifacts_dir();
+    let mut rt = Runtime::open(&dir).unwrap();
+    let m = rt.manifest.model.clone();
+    let last = m.stages - 1;
+
+    // forward through all stages, then eval loss
+    let mut act = {
+        let exe = rt.load("stage0_fwd").unwrap();
+        let mut inputs = rt.load_stage_params(0).unwrap();
+        inputs.push(Tensor::i32(vec![2; m.micro_batch * m.seq], vec![m.micro_batch, m.seq]));
+        exe.run(&inputs).unwrap()
+    };
+    let mut aux = act[1].item().unwrap();
+    for s in 1..last {
+        let exe = rt.load(&format!("stage{s}_fwd")).unwrap();
+        let mut inputs = rt.load_stage_params(s).unwrap();
+        inputs.push(act[0].clone());
+        act = exe.run(&inputs).unwrap();
+        aux += act[1].item().unwrap();
+    }
+    let exe = rt.load("loss_eval").unwrap();
+    let mut inputs = rt.load_stage_params(last).unwrap();
+    inputs.push(act[0].clone());
+    inputs.push(Tensor::i32(vec![3; m.micro_batch * m.seq], vec![m.micro_batch, m.seq]));
+    inputs.push(Tensor::scalar_f32(aux));
+    let out = exe.run(&inputs).unwrap();
+    let loss = out[0].item().unwrap();
+    // untrained model on vocab V: loss ≈ ln(V), definitely in (0, 2 ln V)
+    let lnv = (m.vocab as f32).ln();
+    assert!(loss > 0.0 && loss < 2.0 * lnv, "loss {loss} vs ln(V) {lnv}");
+}
