@@ -1,70 +1,130 @@
 //! Bench: L3 coordinator hot paths (the perf-pass targets of DESIGN §7).
 //!
 //! * router dispatch (route_top1) across token/expert scales
-//! * in-process all-reduce across rank counts
-//! * 1F1B schedule simulation
-//! * fused Adam update
-//! * manifest JSON parse
+//! * in-process all-reduce: legacy single-accumulator vs chunked
+//!   reduce-scatter + all-gather, across rank counts
+//! * PJRT boundary: per-microbatch literal serialization vs device-resident
+//!   staged-buffer reuse with pooled readback
+//! * grad-clip + Adam: the old three-pass sweep vs the fused single pass
+//! * 1F1B schedule simulation, manifest JSON parse
 //!
-//! Before/after numbers for each optimization iteration are recorded in
-//! EXPERIMENTS.md §Perf.
+//! Besides the human-readable lines, results are written to
+//! `BENCH_hotpath.json` (component -> ns/op stats) so successive PRs can
+//! diff hot-path trajectories mechanically. Before/after pairs share a
+//! prefix: e.g. `all_reduce/legacy r=4` vs `all_reduce/chunked r=4`.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use ppmoe::comm::AllReduceGroup;
+use ppmoe::comm::{Algo, AllReduceGroup};
 use ppmoe::moe::{route_top1, synth_logits};
 use ppmoe::pipeline::{analytic_bubble, simulate, Schedule, StageTiming};
 use ppmoe::runtime::Tensor;
-use ppmoe::trainer::adam::Adam;
-use ppmoe::util::bench::bench;
+use ppmoe::trainer::adam::{global_grad_norm, Adam};
+use ppmoe::util::bench::{bench, BenchResult};
+use ppmoe::util::json::Json;
 use ppmoe::util::prng::Rng;
 
 fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+
     println!("=== router (route_top1) ===");
     let mut rng = Rng::new(1);
     for (tokens, experts) in [(2048, 8), (16384, 64), (65536, 64)] {
         let logits = synth_logits(&mut rng, tokens, experts, 0.5);
-        bench(&format!("route_top1 t={tokens} E={experts}"), || {
+        results.push(bench(&format!("route_top1 t={tokens} E={experts}"), || {
             route_top1(&logits, experts, tokens).tokens()
-        });
+        }));
     }
 
-    println!("\n=== in-process all-reduce ===");
+    println!("\n=== in-process all-reduce (legacy vs chunked) ===");
+    let elems = 262_144; // 1 MiB of f32 per rank
     for ranks in [2usize, 4, 8] {
-        let elems = 262_144; // 1 MiB of f32 per rank
-        bench(&format!("all_reduce ranks={ranks} 1MiB"), || {
-            let g = AllReduceGroup::new(ranks);
-            let handles: Vec<_> = (0..ranks)
-                .map(|r| {
-                    let g: Arc<AllReduceGroup> = g.clone();
-                    std::thread::spawn(move || {
-                        let v = vec![r as f32; elems];
-                        g.all_reduce(&v)[0]
+        for algo in [Algo::Legacy, Algo::Chunked] {
+            let tag = match algo {
+                Algo::Legacy => "legacy",
+                Algo::Chunked => "chunked",
+            };
+            results.push(bench(&format!("all_reduce/{tag} r={ranks} 1MiB"), || {
+                let g = AllReduceGroup::with_algo(ranks, algo);
+                let handles: Vec<_> = (0..ranks)
+                    .map(|r| {
+                        let g: Arc<AllReduceGroup> = g.clone();
+                        std::thread::spawn(move || {
+                            let v = vec![r as f32; elems];
+                            g.all_reduce_as(r, &v)[0]
+                        })
                     })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).sum::<f32>()
-        });
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum::<f32>()
+            }));
+        }
+    }
+
+    println!("\n=== PJRT boundary (per-micro serialize vs device-resident) ===");
+    {
+        let client = xla::PjRtClient::cpu().expect("stub cpu client");
+        let act = Tensor::f32(vec![0.5; elems], vec![elems]);
+        // before: what the pre-device-resident trainer did per microbatch —
+        // serialize the host tensor to a literal on the way in, and
+        // materialize a fresh Vec from the result literal on the way out
+        results.push(bench("boundary/legacy_roundtrip 1MiB", || {
+            let lit = act.to_literal().unwrap();
+            lit.to_vec::<f32>().unwrap().len()
+        }));
+        // after: the input buffer was uploaded once at Fwd and stashed
+        // (zero-copy at Bwd); the only boundary work left is reading the
+        // outgoing payload into a recycled slab
+        let staged = act.to_device(&client).unwrap();
+        let mut slab: Vec<f32> = Vec::with_capacity(elems);
+        results.push(bench("boundary/staged_reuse 1MiB", || {
+            staged.copy_into(&mut slab).unwrap();
+            slab.len()
+        }));
     }
 
     println!("\n=== 1F1B schedule simulation ===");
     for (stages, micros) in [(4, 16), (16, 64), (64, 256)] {
         let timing = vec![StageTiming { fwd: 1.0, bwd: 2.0, p2p: 0.1 }; stages];
-        bench(&format!("simulate p={stages} m={micros}"), || {
+        results.push(bench(&format!("simulate p={stages} m={micros}"), || {
             let s = simulate(Schedule::OneFOneB, &timing, micros);
             assert!((s.bubble_fraction - analytic_bubble(stages, micros)).abs() < 0.5);
             s.makespan
-        });
+        }));
     }
 
-    println!("\n=== fused Adam update ===");
+    println!("\n=== grad-clip + Adam (three passes vs fused sweep) ===");
     for numel in [65_536usize, 1_048_576] {
-        let mut params = vec![Tensor::f32(vec![0.1; numel], vec![numel])];
         let grads = vec![Tensor::f32(vec![0.01; numel], vec![numel])];
+        let mean = 1.0 / 4.0f32; // microbatch mean
+        let max_norm = 1.0f32;
+        // before: scale grads in place, norm the scaled copy, scale again
+        // by the clip ratio, then the Adam pass (what the trainer did)
+        let mut params = vec![Tensor::f32(vec![0.1; numel], vec![numel])];
         let mut opt = Adam::new(1e-3, &params);
-        bench(&format!("adam update {numel} params"), || {
-            opt.update(&mut params, &grads).unwrap();
-        });
+        results.push(bench(&format!("optimizer/three_pass {numel}"), || {
+            let mut g = grads.clone(); // the old path consumed its grads
+            for t in &mut g {
+                t.scale(mean).unwrap();
+            }
+            let norm = global_grad_norm(&g).unwrap();
+            if norm > max_norm {
+                let k = max_norm / norm;
+                for t in &mut g {
+                    t.scale(k).unwrap();
+                }
+            }
+            opt.update(&mut params, &g).unwrap();
+        }));
+        // after: one read-only norm pass, then one fused sweep with the
+        // mean and clip ratio folded in; grads are never copied or written
+        let mut params = vec![Tensor::f32(vec![0.1; numel], vec![numel])];
+        let mut opt = Adam::new(1e-3, &params);
+        results.push(bench(&format!("optimizer/fused_sweep {numel}"), || {
+            let norm = global_grad_norm(&grads).unwrap() * mean;
+            let gscale = if norm > max_norm { mean * max_norm / norm } else { mean };
+            opt.fused_update(&mut params, &grads, gscale).unwrap();
+        }));
     }
 
     println!("\n=== manifest JSON parse ===");
@@ -72,10 +132,35 @@ fn main() {
     if manifest_path.exists() {
         let text = std::fs::read_to_string(manifest_path).unwrap();
         println!("manifest size: {} bytes", text.len());
-        bench("manifest parse", || {
+        results.push(bench("manifest parse", || {
             ppmoe::util::json::parse(&text).unwrap()
-        });
+        }));
     } else {
         println!("(artifacts/manifest.json missing — run `make artifacts`)");
+    }
+
+    write_json(&results);
+}
+
+/// Emit `BENCH_hotpath.json`: component name -> ns/op stats.
+fn write_json(results: &[BenchResult]) {
+    let mut components = BTreeMap::new();
+    for r in results {
+        let mut stats = BTreeMap::new();
+        stats.insert("median_ns".to_string(), Json::Num(r.median_ns));
+        stats.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+        stats.insert("p10_ns".to_string(), Json::Num(r.p10_ns));
+        stats.insert("p90_ns".to_string(), Json::Num(r.p90_ns));
+        stats.insert("iters".to_string(), Json::Num(r.iters as f64));
+        components.insert(r.name.clone(), Json::Obj(stats));
+    }
+    let doc = Json::Obj(BTreeMap::from([(
+        "components".to_string(),
+        Json::Obj(components),
+    )]));
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote {path} ({} components)", results.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 }

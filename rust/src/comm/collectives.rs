@@ -5,36 +5,125 @@
 //! produces a partial tensor, and [`AllReduceGroup::all_reduce`] combines
 //! them with a sum and hands every rank the same result — exactly the
 //! inner-node all-reduce that replaces DPMoE's all-to-alls (§3.3.4).
+//!
+//! ## Algorithm (docs/hotpath.md §Collectives)
+//!
+//! For `n > 2` ranks the group runs a **chunked reduce-scatter +
+//! all-gather**: each rank deposits its contribution into its own staging
+//! slot (uncontended lock), then reduces one disjoint segment of the
+//! vector over all ranks' slots, and the last rank to finish concatenates
+//! the segments. The reduction — the O(n·len) part that the previous
+//! implementation serialized under a single accumulator mutex — now runs
+//! in parallel across ranks, O(len) wall-clock. For `n ≤ 2` the legacy
+//! single-accumulator path is kept (each rank adds its full contribution
+//! in turn — with two ranks there is nothing to parallelize), upgraded to
+//! slot-ordered deposits and reused round storage.
+//!
+//! Both paths sum **in rank order** (slot 0, 1, …, n−1 per element), so:
+//! * chunked and legacy results are **bitwise identical** (same
+//!   per-element operation order; segmentation never splits an element's
+//!   sum) — property-tested below;
+//! * with [`AllReduceGroup::all_reduce_as`] (caller-stable ranks) the
+//!   result is bitwise reproducible across runs regardless of thread
+//!   scheduling. The plain [`AllReduceGroup::all_reduce`] assigns slots in
+//!   arrival order and is only deterministic per-rank-arrival-order.
+//!
+//! Staging slots, segment buffers, and (via retired-result reclaim) the
+//! gathered result are all reused across rounds: steady-state rounds
+//! allocate nothing once callers drop previous results before their next
+//! call.
 
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Reusable sum-all-reduce over `n` ranks (generation-counted so the same
-/// group can be used for many rounds without re-allocation).
-pub struct AllReduceGroup {
-    n: usize,
-    state: Mutex<State>,
-    cv: Condvar,
+/// Which reduction strategy a group uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// The pre-chunking code path: one shared accumulator, each rank adds
+    /// its full-length contribution in turn. Deposits are ordered by slot
+    /// (the seed version used arrival order), which makes the result
+    /// deterministic and bitwise-comparable to [`Algo::Chunked`]; the
+    /// accumulator and result storage are reused across rounds, so unlike
+    /// the seed there is no per-round allocation either. The O(n·len)
+    /// summation is still fully serialized — that is what chunking fixes.
+    Legacy,
+    /// Reduce-scatter + all-gather: rank r reduces segment r.
+    Chunked,
 }
 
-struct State {
+/// Reusable sum-all-reduce over `n` ranks (generation-counted so the same
+/// group can be used for many rounds without re-allocation).
+///
+/// One round = exactly `n` calls (one per rank). Do not mix
+/// [`AllReduceGroup::all_reduce`] and [`AllReduceGroup::all_reduce_as`]
+/// within a round, and do not call twice from the same rank in a round.
+pub struct AllReduceGroup {
+    n: usize,
+    algo: Algo,
+    state: Mutex<Round>,
+    cv: Condvar,
+    /// Per-rank deposit slots; only rank r writes stage[r], so these locks
+    /// never contend within a phase.
+    stage: Vec<Mutex<Vec<f32>>>,
+    /// Per-rank reduced segments (legacy uses only outseg[0]).
+    outseg: Vec<Mutex<Vec<f32>>>,
+}
+
+struct Round {
     generation: u64,
-    arrived: usize,
+    claimed: usize,
+    deposited: usize,
+    reduced: usize,
+    len: usize,
+    /// Per-round slot occupancy: catches a rank calling twice in one round
+    /// (which would otherwise overwrite a staging slot and corrupt the sum
+    /// silently, or deadlock the legacy turn-taking).
+    taken: Vec<bool>,
+    /// Legacy path's shared accumulator (unused by chunked).
     acc: Vec<f32>,
     result: Arc<Vec<f32>>,
+    /// Previous results whose storage is reclaimed once callers drop them.
+    retired: Vec<Arc<Vec<f32>>>,
+}
+
+/// Near-equal split of `len` into `n` segments: the first `len % n`
+/// segments get one extra element (handles lengths that don't divide).
+fn segment(slot: usize, len: usize, n: usize) -> (usize, usize) {
+    let base = len / n;
+    let rem = len % n;
+    let lo = slot * base + slot.min(rem);
+    let extra = usize::from(slot < rem);
+    (lo, lo + base + extra)
 }
 
 impl AllReduceGroup {
+    /// Default strategy: chunked for n > 2, legacy otherwise.
     pub fn new(n: usize) -> Arc<Self> {
+        let algo = if n > 2 { Algo::Chunked } else { Algo::Legacy };
+        Self::with_algo(n, algo)
+    }
+
+    /// Explicit strategy (benchmarks and the equivalence property test).
+    pub fn with_algo(n: usize, algo: Algo) -> Arc<Self> {
         assert!(n > 0);
         Arc::new(AllReduceGroup {
             n,
-            state: Mutex::new(State {
+            algo,
+            state: Mutex::new(Round {
                 generation: 0,
-                arrived: 0,
+                claimed: 0,
+                deposited: 0,
+                reduced: 0,
+                len: 0,
+                taken: vec![false; n],
                 acc: Vec::new(),
                 result: Arc::new(Vec::new()),
+                retired: Vec::new(),
             }),
             cv: Condvar::new(),
+            // legacy accumulates in `Round::acc`; the per-rank buffers are
+            // only populated by the chunked path
+            stage: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            outseg: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
         })
     }
 
@@ -42,32 +131,183 @@ impl AllReduceGroup {
         self.n
     }
 
+    pub fn algo(&self) -> Algo {
+        self.algo
+    }
+
     /// Sum `contribution` across all ranks; every caller receives the full
     /// sum. Blocks until all `n` ranks of the current round have arrived.
+    /// Slots are assigned in arrival order; use
+    /// [`AllReduceGroup::all_reduce_as`] for run-to-run bitwise
+    /// reproducibility.
     pub fn all_reduce(&self, contribution: &[f32]) -> Arc<Vec<f32>> {
+        let slot = {
+            let mut st = self.state.lock().unwrap();
+            let s = st.claimed;
+            assert!(s < self.n, "more than {} callers in one round", self.n);
+            st.claimed += 1;
+            s
+        };
+        self.round(slot, contribution)
+    }
+
+    /// Deterministic variant: the caller states its rank, which fixes both
+    /// its staging slot and its place in the per-element summation order —
+    /// the result is then independent of thread scheduling.
+    pub fn all_reduce_as(&self, rank: usize, contribution: &[f32]) -> Arc<Vec<f32>> {
+        assert!(rank < self.n, "rank {rank} out of {}", self.n);
+        {
+            // keep the arrival counter coherent so a later arrival-order
+            // caller in the same group would fail loudly, not corrupt
+            let mut st = self.state.lock().unwrap();
+            st.claimed += 1;
+        }
+        self.round(rank, contribution)
+    }
+
+    fn round(&self, slot: usize, contribution: &[f32]) -> Arc<Vec<f32>> {
+        {
+            // one call per rank per round — a duplicate must fail loudly
+            // here, before it can overwrite a staging slot (chunked) or
+            // stall the turn-taking (legacy)
+            let mut st = self.state.lock().unwrap();
+            assert!(
+                !st.taken[slot],
+                "rank {slot} called all-reduce twice in one round"
+            );
+            st.taken[slot] = true;
+        }
+        match self.algo {
+            Algo::Legacy => self.round_legacy(slot, contribution),
+            Algo::Chunked => self.round_chunked(slot, contribution),
+        }
+    }
+
+    /// Single shared accumulator, deposits serialized in slot order.
+    fn round_legacy(&self, slot: usize, contribution: &[f32]) -> Arc<Vec<f32>> {
         let mut st = self.state.lock().unwrap();
         let my_gen = st.generation;
-        if st.arrived == 0 {
-            st.acc = contribution.to_vec();
+        // wait for my turn: slot order = summation order (determinism);
+        // no caller can be a round ahead, so `deposited` is this round's
+        while st.deposited != slot {
+            st = self.cv.wait(st).unwrap();
+        }
+        if slot == 0 {
+            st.len = contribution.len();
+            st.acc.clear();
+            st.acc.extend_from_slice(contribution);
         } else {
-            assert_eq!(st.acc.len(), contribution.len(), "rank shape mismatch");
+            assert_eq!(st.len, contribution.len(), "rank shape mismatch");
             for (a, c) in st.acc.iter_mut().zip(contribution) {
                 *a += c;
             }
         }
-        st.arrived += 1;
-        if st.arrived == self.n {
-            st.result = Arc::new(std::mem::take(&mut st.acc));
-            st.arrived = 0;
-            st.generation += 1;
+        st.deposited += 1;
+        if st.deposited == self.n {
+            // the accumulator IS the result: swap it out against reclaimed
+            // (or fresh) storage for the next round — no copy, no alloc in
+            // steady state
+            let next_acc = reclaim(&mut st.retired).unwrap_or_default();
+            let result = Arc::new(std::mem::replace(&mut st.acc, next_acc));
+            self.finish_round(&mut st, result.clone());
+            return result;
+        }
+        self.cv.notify_all(); // wake the next slot's depositor
+        while st.generation == my_gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.result.clone()
+    }
+
+    /// Reduce-scatter + all-gather over per-rank staging slots.
+    fn round_chunked(&self, slot: usize, contribution: &[f32]) -> Arc<Vec<f32>> {
+        // ---- deposit (uncontended copy, outside the group lock) ----
+        {
+            let mut s = self.stage[slot].lock().unwrap();
+            s.clear();
+            s.extend_from_slice(contribution);
+        }
+        let mut st = self.state.lock().unwrap();
+        let my_gen = st.generation;
+        if st.deposited == 0 {
+            st.len = contribution.len();
+        } else {
+            assert_eq!(st.len, contribution.len(), "rank shape mismatch");
+        }
+        st.deposited += 1;
+        if st.deposited == self.n {
             self.cv.notify_all();
-            return st.result.clone();
+        }
+        while st.deposited < self.n && st.generation == my_gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        let len = st.len;
+        drop(st);
+
+        // ---- reduce my segment over all ranks, in slot order ----
+        let (lo, hi) = segment(slot, len, self.n);
+        {
+            // cleared unconditionally: a segment that is empty THIS round
+            // (len < n) must not leak a previous round's data into the
+            // gather below
+            let mut out = self.outseg[slot].lock().unwrap();
+            out.clear();
+            out.resize(hi - lo, 0.0);
+            if hi > lo {
+                // slot order fixes the per-element summation order
+                // (bitwise equality with the legacy path and across runs)
+                for slot_buf in &self.stage {
+                    let s = slot_buf.lock().unwrap();
+                    for (o, x) in out.iter_mut().zip(&s[lo..hi]) {
+                        *o += x;
+                    }
+                }
+            }
+        }
+
+        // ---- gather: last finisher concatenates segments in slot order ----
+        let mut st = self.state.lock().unwrap();
+        st.reduced += 1;
+        if st.reduced == self.n {
+            let mut buf = reclaim(&mut st.retired).unwrap_or_default();
+            buf.clear();
+            buf.reserve(len);
+            for seg in &self.outseg {
+                buf.extend_from_slice(&seg.lock().unwrap());
+            }
+            let result = Arc::new(buf);
+            self.finish_round(&mut st, result.clone());
+            return result;
         }
         while st.generation == my_gen {
             st = self.cv.wait(st).unwrap();
         }
         st.result.clone()
     }
+
+    /// Publish `result`, retire the previous round's storage for reuse,
+    /// reset counters and release every waiter.
+    fn finish_round(&self, st: &mut Round, result: Arc<Vec<f32>>) {
+        let prev = std::mem::replace(&mut st.result, result);
+        if st.retired.len() < 4 {
+            st.retired.push(prev);
+        }
+        st.claimed = 0;
+        st.deposited = 0;
+        st.reduced = 0;
+        for t in &mut st.taken {
+            *t = false;
+        }
+        st.generation += 1;
+        self.cv.notify_all();
+    }
+}
+
+/// Pull a reusable buffer out of the retired list: any result every caller
+/// has dropped can be unwrapped and its allocation recycled.
+fn reclaim(retired: &mut Vec<Arc<Vec<f32>>>) -> Option<Vec<f32>> {
+    let idx = retired.iter().position(|a| Arc::strong_count(a) == 1)?;
+    Arc::try_unwrap(retired.swap_remove(idx)).ok()
 }
 
 /// Simple reusable barrier (used at step boundaries by the trainer).
@@ -101,7 +341,31 @@ impl Barrier {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::forall;
     use std::thread;
+
+    /// Run one all-reduce round over `contribs` with the given algo,
+    /// assigning stable ranks; returns the (identical) result all ranks saw.
+    fn run_round(algo: Algo, contribs: &[Vec<f32>]) -> Vec<f32> {
+        let n = contribs.len();
+        let g = AllReduceGroup::with_algo(n, algo);
+        let handles: Vec<_> = contribs
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(r, c)| {
+                let g = g.clone();
+                thread::spawn(move || g.all_reduce_as(r, &c))
+            })
+            .collect();
+        let results: Vec<Arc<Vec<f32>>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results[1..] {
+            assert!(Arc::ptr_eq(&results[0], r) || **r == *results[0]);
+        }
+        results[0].to_vec()
+    }
 
     #[test]
     fn all_reduce_sums_across_ranks() {
@@ -148,6 +412,149 @@ mod tests {
         let g = AllReduceGroup::new(1);
         let out = g.all_reduce(&[5.0, 6.0]);
         assert_eq!(&**out, &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn chunked_many_rounds_reuse_buffers() {
+        // steady-state usage: results dropped between rounds -> the retired
+        // list feeds every assembly after warmup
+        let g = AllReduceGroup::with_algo(4, Algo::Chunked);
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut last = 0.0;
+                    for round in 0..50 {
+                        let v = vec![(r * round) as f32; 13];
+                        last = g.all_reduce_as(r, &v)[0];
+                    }
+                    last
+                })
+            })
+            .collect();
+        for h in handles {
+            // round 49: sum r*49 over r=0..4 = 6*49
+            assert_eq!(h.join().unwrap(), 294.0);
+        }
+    }
+
+    #[test]
+    fn reused_group_handles_shrinking_lengths() {
+        // regression: round lengths may shrink (or hit 0) on a reused
+        // group; segments that become empty must not leak the previous
+        // round's data into the gathered result
+        for algo in [Algo::Legacy, Algo::Chunked] {
+            let n = 4;
+            let lens = [13usize, 2, 0, 5];
+            let g = AllReduceGroup::with_algo(n, algo);
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let g = g.clone();
+                    thread::spawn(move || {
+                        let mut outs = Vec::new();
+                        for (round, len) in lens.into_iter().enumerate() {
+                            let v = vec![(r + round) as f32; len];
+                            outs.push(g.all_reduce_as(r, &v).to_vec());
+                        }
+                        outs
+                    })
+                })
+                .collect();
+            for h in handles {
+                let outs = h.join().unwrap();
+                for (round, (out, len)) in outs.iter().zip(lens).enumerate() {
+                    // sum over r of (r + round) = 6 + 4*round
+                    let expect = vec![(6 + 4 * round) as f32; len];
+                    assert_eq!(out, &expect, "{algo:?} round {round}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_bitwise_equals_legacy_property() {
+        // The §3.3.4-replacement invariant this PR's refactor must keep:
+        // chunked reduce-scatter + all-gather produces *bitwise* the same
+        // sums as the legacy single-accumulator path, across rank counts
+        // 1–8 and lengths that don't divide evenly by n.
+        forall(
+            "chunked-equals-legacy",
+            17,
+            30,
+            |r| {
+                let n = r.range(1, 9); // ranks 1..=8
+                // lengths biased toward non-multiples of n (incl. len < n)
+                let len = r.range(0, 67);
+                let mut rng = r.split();
+                let contribs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| {
+                        (0..len)
+                            .map(|_| (rng.f32() - 0.5) * 3.0)
+                            .collect()
+                    })
+                    .collect();
+                (n, len, contribs)
+            },
+            |(n, len, contribs)| {
+                let chunked = run_round(Algo::Chunked, contribs);
+                let legacy = run_round(Algo::Legacy, contribs);
+                // reference: per-element rank-order sum, computed serially
+                let mut reference = vec![0.0f32; *len];
+                for c in contribs {
+                    for (a, x) in reference.iter_mut().zip(c) {
+                        *a += x;
+                    }
+                }
+                if chunked != legacy {
+                    return Err(format!("chunked != legacy at n={n} len={len}"));
+                }
+                if chunked != reference {
+                    return Err(format!("chunked != rank-order reference at n={n} len={len}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn all_reduce_as_is_bitwise_reproducible() {
+        // identical contributions -> identical bits across independent
+        // groups and scheduling orders (this is what makes tp's output
+        // deterministic per seed at n > 2)
+        let mut rng = Rng::new(11);
+        let contribs: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..41).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect();
+        let a = run_round(Algo::Chunked, &contribs);
+        let b = run_round(Algo::Chunked, &contribs);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn segment_partition_is_exact() {
+        forall(
+            "segment-partition",
+            23,
+            60,
+            |r| (r.range(1, 9), r.range(0, 100)),
+            |&(n, len)| {
+                let mut covered = 0usize;
+                for s in 0..n {
+                    let (lo, hi) = segment(s, len, n);
+                    if lo != covered {
+                        return Err(format!("gap before segment {s}: {lo} vs {covered}"));
+                    }
+                    if hi < lo {
+                        return Err(format!("segment {s} inverted"));
+                    }
+                    covered = hi;
+                }
+                if covered != len {
+                    return Err(format!("covered {covered} != len {len}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -5,5 +5,5 @@ pub mod collectives;
 pub mod cost;
 pub mod hierarchical;
 
-pub use collectives::{AllReduceGroup, Barrier};
+pub use collectives::{Algo, AllReduceGroup, Barrier};
 pub use cost::{CommCost, CostModel};

@@ -31,6 +31,13 @@ impl Timers {
         *self.counts.entry(name.to_string()).or_insert(0) += 1;
     }
 
+    /// Record an event count with no time attached (e.g. slab pool
+    /// hit/miss accounting).
+    pub fn add_count(&mut self, name: &str, n: u64) {
+        self.acc.entry(name.to_string()).or_insert(0.0);
+        *self.counts.entry(name.to_string()).or_insert(0) += n;
+    }
+
     pub fn get(&self, name: &str) -> f64 {
         self.acc.get(name).copied().unwrap_or(0.0)
     }
@@ -148,6 +155,15 @@ mod tests {
         let rows = t.rows();
         assert_eq!(rows.len(), 2);
         assert!((rows[0].2 - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_count_tracks_events_without_time() {
+        let mut t = Timers::new();
+        t.add_count("slab_hit", 7);
+        t.add_count("slab_hit", 3);
+        assert_eq!(t.count("slab_hit"), 10);
+        assert_eq!(t.get("slab_hit"), 0.0);
     }
 
     #[test]

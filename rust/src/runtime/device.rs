@@ -1,0 +1,185 @@
+//! Device-resident tensors: PJRT buffers that stay on device between
+//! executions, with host readback only where a host value is actually
+//! needed (loss/aux scalars, p2p sends, gradient accumulation).
+//!
+//! This is the value type of the device-resident hot path (docs/hotpath.md):
+//! `Executable::run_device` returns these instead of eagerly materializing
+//! every output through `to_literal_sync` + `to_vec`. Readback helpers come
+//! in allocation-reusing form (`read_into*`) so steady-state microbatch
+//! loops perform no per-iteration allocation on the boundary.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+use super::tensor::Tensor;
+
+/// A tensor living on the PJRT device, tagged with the spec it was produced
+/// under (shape/dtype are validated once at production, not per access).
+#[derive(Debug)]
+pub struct DeviceTensor {
+    spec: TensorSpec,
+    buf: xla::PjRtBuffer,
+}
+
+impl DeviceTensor {
+    pub fn new(buf: xla::PjRtBuffer, spec: TensorSpec) -> DeviceTensor {
+        DeviceTensor { spec, buf }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.spec.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.spec.dtype
+    }
+
+    pub fn numel(&self) -> usize {
+        self.spec.shape.iter().product()
+    }
+
+    /// The underlying buffer, for feeding the next executable without any
+    /// host round-trip.
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+
+    /// Scalar readback (loss / aux coefficients): transfers one element,
+    /// not the tensor.
+    pub fn item(&self) -> Result<f32> {
+        if self.numel() != 1 {
+            bail!(
+                "item() on non-scalar device tensor '{}' (shape {:?})",
+                self.spec.name,
+                self.spec.shape
+            );
+        }
+        if self.spec.dtype != DType::F32 {
+            bail!("item() on non-f32 device tensor '{}'", self.spec.name);
+        }
+        Ok(self.buf.first_f32()?)
+    }
+
+    /// Full readback into a fresh host tensor (cold paths: checkpointing,
+    /// metrics, tests).
+    pub fn to_host(&self) -> Result<Tensor> {
+        let lit = self.buf.to_literal_sync()?;
+        Tensor::from_literal(&lit, &self.spec)
+    }
+
+    /// Readback into a caller-owned f32 vec (cleared first, allocation
+    /// reused) — the p2p-send path of the microbatch loop.
+    pub fn read_into_vec(&self, out: &mut Vec<f32>) -> Result<()> {
+        if self.spec.dtype != DType::F32 {
+            bail!("read_into_vec on non-f32 device tensor '{}'", self.spec.name);
+        }
+        self.buf.copy_into(out)?;
+        Ok(())
+    }
+
+    /// Readback into an existing host tensor of the same shape/dtype,
+    /// reusing its storage.
+    pub fn read_into(&self, out: &mut Tensor) -> Result<()> {
+        if out.shape != self.spec.shape || out.dtype() != self.spec.dtype {
+            bail!(
+                "read_into: device '{}' is {:?}{:?}, host is {:?}{:?}",
+                self.spec.name,
+                self.spec.dtype,
+                self.spec.shape,
+                out.dtype(),
+                out.shape
+            );
+        }
+        match self.spec.dtype {
+            DType::F32 => self.buf.copy_into(out.as_f32_vec_mut()?)?,
+            DType::I32 => bail!("read_into for i32 device tensors is not needed on the hot path"),
+        }
+        Ok(())
+    }
+
+    /// Accumulate this device tensor into a host accumulator
+    /// (`acc += self`), staging through a caller-owned scratch buffer so
+    /// the steady state allocates nothing. Gradient accumulation across
+    /// microbatches is the only caller.
+    pub fn add_into(&self, acc: &mut Tensor, scratch: &mut Vec<f32>) -> Result<()> {
+        if acc.shape != self.spec.shape {
+            bail!(
+                "add_into: device '{}' shape {:?} vs host {:?}",
+                self.spec.name,
+                self.spec.shape,
+                acc.shape
+            );
+        }
+        self.buf.copy_into(scratch)?;
+        for (a, g) in acc.as_f32_mut()?.iter_mut().zip(scratch.iter()) {
+            *a += g;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: Vec<usize>, dtype: DType) -> TensorSpec {
+        TensorSpec { name: name.into(), shape, dtype }
+    }
+
+    fn device(t: &Tensor, s: TensorSpec) -> DeviceTensor {
+        let client = xla::PjRtClient::cpu().unwrap();
+        DeviceTensor::new(t.to_device(&client).unwrap(), s)
+    }
+
+    #[test]
+    fn scalar_item_reads_one_element() {
+        let d = device(&Tensor::scalar_f32(3.25), spec("loss", vec![], DType::F32));
+        assert_eq!(d.item().unwrap(), 3.25);
+        let v = device(
+            &Tensor::f32(vec![1.0, 2.0], vec![2]),
+            spec("act", vec![2], DType::F32),
+        );
+        assert!(v.item().is_err());
+    }
+
+    #[test]
+    fn read_into_reuses_allocation() {
+        let d = device(
+            &Tensor::f32(vec![1.0, 2.0, 3.0], vec![3]),
+            spec("act", vec![3], DType::F32),
+        );
+        let mut out = Tensor::zeros(vec![3]);
+        d.read_into(&mut out).unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        // shape mismatch refuses
+        let mut bad = Tensor::zeros(vec![2]);
+        assert!(d.read_into(&mut bad).is_err());
+        // vec variant
+        let mut v = Vec::new();
+        d.read_into_vec(&mut v).unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn add_into_accumulates_through_scratch() {
+        let d = device(
+            &Tensor::f32(vec![1.0, 10.0], vec![2]),
+            spec("g", vec![2], DType::F32),
+        );
+        let mut acc = Tensor::f32(vec![0.5, 0.5], vec![2]);
+        let mut scratch = Vec::new();
+        d.add_into(&mut acc, &mut scratch).unwrap();
+        d.add_into(&mut acc, &mut scratch).unwrap();
+        assert_eq!(acc.as_f32().unwrap(), &[2.5, 20.5]);
+    }
+
+    #[test]
+    fn to_host_roundtrips() {
+        let t = Tensor::f32(vec![4.0, 5.0], vec![2]);
+        let d = device(&t, spec("x", vec![2], DType::F32));
+        assert_eq!(d.to_host().unwrap(), t);
+        assert_eq!(d.shape(), &[2]);
+        assert_eq!(d.dtype(), DType::F32);
+        assert_eq!(d.numel(), 2);
+    }
+}

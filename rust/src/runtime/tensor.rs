@@ -69,9 +69,37 @@ impl Tensor {
         }
     }
 
-    /// First element as f32 (for scalar outputs like the loss).
+    /// The single element of a one-element f32 tensor (scalar outputs like
+    /// the loss). Errors on empty or multi-element tensors instead of
+    /// panicking or silently truncating.
     pub fn item(&self) -> Result<f32> {
-        Ok(self.as_f32()?[0])
+        let v = self.as_f32()?;
+        match v {
+            [x] => Ok(*x),
+            [] => bail!("item() on empty tensor (shape {:?})", self.shape),
+            _ => bail!(
+                "item() on non-scalar tensor with {} elements (shape {:?})",
+                v.len(),
+                self.shape
+            ),
+        }
+    }
+
+    /// Mutable access to the underlying f32 storage (for allocation-reusing
+    /// readback into an existing tensor).
+    pub fn as_f32_vec_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Move the f32 storage out (slab recycling on the p2p edges).
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
     }
 
     /// Convert to an XLA literal with this tensor's shape.
@@ -164,5 +192,35 @@ mod tests {
     fn norm() {
         let t = Tensor::f32(vec![3.0, 4.0], vec![2]);
         assert!((t.norm().unwrap() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn item_scalar_ok() {
+        assert_eq!(Tensor::scalar_f32(2.5).item().unwrap(), 2.5);
+        // numel-1 tensors of any rank are scalars for readback purposes
+        assert_eq!(Tensor::f32(vec![7.0], vec![1, 1]).item().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn item_empty_errors_instead_of_panicking() {
+        let empty = Tensor::f32(vec![], vec![0]);
+        let err = empty.item().unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn item_non_scalar_errors() {
+        let t = Tensor::f32(vec![1.0, 2.0], vec![2]);
+        let err = t.item().unwrap_err().to_string();
+        assert!(err.contains("non-scalar"), "{err}");
+        // i32 tensors are not scalars either
+        assert!(Tensor::i32(vec![1], vec![1]).item().is_err());
+    }
+
+    #[test]
+    fn into_f32_moves_storage() {
+        let t = Tensor::f32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.into_f32().unwrap(), vec![1.0, 2.0]);
+        assert!(Tensor::i32(vec![1], vec![1]).into_f32().is_err());
     }
 }

@@ -129,11 +129,25 @@ pub fn run_tp_moe(artifacts: &Path, seed: u64) -> Result<TpRunResult> {
             let mut rt = Runtime::open(&dir)?;
             let exe = rt.load(&format!("moe_rank{r}of{ranks}"))?;
             let t0 = std::time::Instant::now();
-            let out = exe.run(&[x, wg, w1, b1, w2, b2])?;
+            // device-resident execution: outputs stay on device and only
+            // the partial that feeds the all-reduce is read back — the
+            // per-rank aux scalar is never transferred (the reference aux
+            // comes from the monolithic artifact on the driver)
+            let inputs = [&x, &wg, &w1, &b1, &w2, &b2];
+            let bufs = inputs
+                .iter()
+                .enumerate()
+                .map(|(i, t)| exe.upload_input(i, t))
+                .collect::<Result<Vec<_>>>()?;
+            let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+            let out = exe.run_device(&args)?;
+            let mut partial = Vec::with_capacity(out[0].numel());
+            out[0].read_into_vec(&mut partial)?;
             let exec_seconds = t0.elapsed().as_secs_f64();
-            let partial = out[0].as_f32()?;
             let t1 = std::time::Instant::now();
-            let combined = group.all_reduce(partial);
+            // rank-stable slots: the combined sum is bitwise reproducible
+            // across runs regardless of thread scheduling
+            let combined = group.all_reduce_as(r, &partial);
             let allreduce_seconds = t1.elapsed().as_secs_f64();
             tx.send((r, combined, RankTiming { exec_seconds, allreduce_seconds }))
                 .ok();

@@ -38,6 +38,25 @@ impl Adam {
 
     /// Apply one update in place. `grads[i]` must match `params[i]`'s shape.
     pub fn update(&mut self, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {
+        self.fused_update(params, grads, 1.0)
+    }
+
+    /// One optimizer step with the gradient multiplier folded into the
+    /// sweep: `p -= adam(g * gscale)`.
+    ///
+    /// `gscale` carries both the microbatch mean (1/m) and the grad-clip
+    /// factor, so the trainer's old three passes over every gradient
+    /// (scale by 1/m, scale by the clip ratio, then the Adam read) collapse
+    /// into this single pass — and the gradients themselves are left
+    /// untouched, which is what lets the trainer recycle them as slabs.
+    /// `fused_update(.., k)` is bitwise identical to scaling the grads by
+    /// `k` in place and then calling `update` (same f32 operation order).
+    pub fn fused_update(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        gscale: f32,
+    ) -> Result<()> {
         assert_eq!(params.len(), grads.len());
         self.step += 1;
         let t = self.step as f32;
@@ -52,9 +71,10 @@ impl Adam {
             let g = g.as_f32()?;
             let p = p.as_f32_mut()?;
             debug_assert_eq!(p.len(), g.len());
-            // fused loop: single pass over the four arrays
+            // fused loop: single pass over the four arrays, scale applied
+            // on the fly
             for i in 0..p.len() {
-                let gi = g[i];
+                let gi = g[i] * gscale;
                 m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
                 v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
                 p[i] -= lr_t * m[i] / (v[i].sqrt() + self.eps);
@@ -62,6 +82,20 @@ impl Adam {
         }
         Ok(())
     }
+}
+
+/// Global L2 norm over a gradient list, as one read-only pass (no
+/// intermediate scaling writes). `||k·g|| == k·||g||`, so callers clip
+/// against `scale * global_grad_norm(raw)` instead of materializing the
+/// scaled gradients first.
+pub fn global_grad_norm(grads: &[Tensor]) -> Result<f32> {
+    let mut sumsq = 0.0f32;
+    for g in grads {
+        for x in g.as_f32()? {
+            sumsq += x * x;
+        }
+    }
+    Ok(sumsq.sqrt())
 }
 
 #[cfg(test)]
@@ -110,5 +144,50 @@ mod tests {
         let g = vec![Tensor::zeros(vec![2])];
         opt.update(&mut params, &g).unwrap();
         assert_eq!(params[0].as_f32().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn fused_scale_matches_prescaled_grads_bitwise() {
+        // fused_update(.., k) must equal scale-then-update exactly — this
+        // is the trainer's clip+mean fold
+        let init = vec![
+            Tensor::f32(vec![0.3, -1.2, 7.0], vec![3]),
+            Tensor::f32(vec![2.0, -2.0], vec![2]),
+        ];
+        let grads = vec![
+            Tensor::f32(vec![0.5, -0.25, 3.0], vec![3]),
+            Tensor::f32(vec![-1.5, 0.75], vec![2]),
+        ];
+        let k = 0.125f32;
+
+        let mut fused_p = init.clone();
+        let mut fused_opt = Adam::new(0.01, &fused_p);
+        for _ in 0..5 {
+            fused_opt.fused_update(&mut fused_p, &grads, k).unwrap();
+        }
+
+        let mut ref_p = init;
+        let mut ref_opt = Adam::new(0.01, &ref_p);
+        let mut scaled = grads;
+        for g in &mut scaled {
+            g.scale(k).unwrap();
+        }
+        for _ in 0..5 {
+            ref_opt.update(&mut ref_p, &scaled).unwrap();
+        }
+
+        for (a, b) in fused_p.iter().zip(&ref_p) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn global_grad_norm_is_l2_over_all_tensors() {
+        let grads = vec![
+            Tensor::f32(vec![3.0], vec![1]),
+            Tensor::f32(vec![4.0], vec![1]),
+        ];
+        assert!((global_grad_norm(&grads).unwrap() - 5.0).abs() < 1e-6);
+        assert_eq!(global_grad_norm(&[]).unwrap(), 0.0);
     }
 }

@@ -13,9 +13,30 @@
 //! back to every stage's backward — so the pipelined gradient equals the
 //! single-shot `full_lossgrad` artifact up to fp tolerance (verified in
 //! rust/tests/pipeline_equivalence.rs).
+//!
+//! ## Device-resident microbatch loop (docs/hotpath.md)
+//!
+//! The steady-state loop crosses the PJRT boundary only where a host value
+//! is genuinely needed:
+//!
+//! * Each microbatch's input is uploaded **once** at forward time and the
+//!   device buffer is stashed; the backward pass reuses it instead of
+//!   re-serializing the activation (`Executable::run_staged_device`).
+//! * Executions return [`DeviceTensor`]s; only the loss/aux scalars and
+//!   the activation/gradient leaving the stage are read back — into
+//!   recycled slabs ([`pool::SlabPool`]) returned by the consumer, so the
+//!   p2p edges allocate nothing after warmup.
+//! * The constant `aux_coef` cotangent is staged once per run, gradients
+//!   accumulate host-side through a reused scratch buffer, and the
+//!   microbatch mean + grad-clip factor are folded into a single fused
+//!   Adam sweep ([`adam::Adam::fused_update`]) — one pass over each
+//!   parameter instead of three.
+//! * After the optimizer step, parameters are re-staged in place
+//!   ([`crate::runtime::Runtime::restage_buffers`]).
 
 pub mod adam;
 pub mod checkpoint;
+pub mod pool;
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -29,7 +50,8 @@ use crate::data::Corpus;
 use crate::metrics::Timers;
 use crate::pipeline::{schedule, Op, Schedule};
 use crate::runtime::{Runtime, Tensor};
-use adam::Adam;
+use adam::{global_grad_norm, Adam};
+use pool::{slab_pair, SlabPool, SlabReturn};
 
 /// Training hyperparameters.
 #[derive(Debug, Clone)]
@@ -106,6 +128,27 @@ impl TrainReport {
     }
 }
 
+/// A stage worker's channel ends: the p2p links plus their slab
+/// back-channels (None on pipeline boundaries that don't exist for this
+/// stage, or whose payloads aren't pooled — the driver's i32 token feeds).
+struct StageIo {
+    rx_fwd: Receiver<ActMsg>,
+    tx_fwd: Option<Sender<ActMsg>>,
+    rx_bwd: Receiver<GradMsg>,
+    tx_bwd: Option<Sender<GradMsg>>,
+    tgt_rx: Option<Receiver<Tensor>>,
+    loss_tx: Sender<f32>,
+    timer_tx: Sender<(usize, Timers)>,
+    /// Slabs for activations this stage sends forward.
+    act_pool: Option<SlabPool>,
+    /// Returns storage of activations received from upstream.
+    act_return: Option<SlabReturn>,
+    /// Slabs for gradients this stage sends backward.
+    grad_pool: Option<SlabPool>,
+    /// Returns storage of gradients received from downstream.
+    grad_return: Option<SlabReturn>,
+}
+
 /// Run PPMoE pipeline training against an artifacts directory.
 pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     // read the manifest once on the driver to learn the geometry
@@ -129,6 +172,21 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         bwd_txs.push(btx);
         bwd_rxs.push(Some(brx));
     }
+    // slab back-channels: one per f32 payload edge. Forward edge i -> i+1:
+    // pool at producer i, return at consumer i+1. Backward edge i+1 -> i:
+    // pool at producer i+1, return at consumer i.
+    let mut act_pools: Vec<Option<SlabPool>> = (0..p).map(|_| None).collect();
+    let mut act_returns: Vec<Option<SlabReturn>> = (0..p).map(|_| None).collect();
+    let mut grad_pools: Vec<Option<SlabPool>> = (0..p).map(|_| None).collect();
+    let mut grad_returns: Vec<Option<SlabReturn>> = (0..p).map(|_| None).collect();
+    for i in 0..p.saturating_sub(1) {
+        let (pool, ret) = slab_pair();
+        act_pools[i] = Some(pool);
+        act_returns[i + 1] = Some(ret);
+        let (pool, ret) = slab_pair();
+        grad_pools[i + 1] = Some(pool);
+        grad_returns[i] = Some(ret);
+    }
     // driver -> stage 0 tokens; driver -> last stage targets
     let (tgt_tx, tgt_rx) = channel::<Tensor>();
     let mut tgt_rx = Some(tgt_rx);
@@ -142,24 +200,25 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
 
     let mut handles = Vec::new();
     for stage in 0..p {
-        let rx_fwd = fwd_rxs[stage].take().unwrap();
-        let tx_fwd = if stage + 1 < p { Some(fwd_txs[stage + 1].clone()) } else { None };
-        let rx_bwd = bwd_rxs[stage].take().unwrap();
-        let tx_bwd = if stage > 0 { Some(bwd_txs[stage - 1].clone()) } else { None };
-        let tgt_rx = if stage == p - 1 { tgt_rx.take() } else { None };
-        let loss_tx = loss_tx.clone();
-        let timer_tx = timer_tx.clone();
+        let io = StageIo {
+            rx_fwd: fwd_rxs[stage].take().unwrap(),
+            tx_fwd: if stage + 1 < p { Some(fwd_txs[stage + 1].clone()) } else { None },
+            rx_bwd: bwd_rxs[stage].take().unwrap(),
+            tx_bwd: if stage > 0 { Some(bwd_txs[stage - 1].clone()) } else { None },
+            tgt_rx: if stage == p - 1 { tgt_rx.take() } else { None },
+            loss_tx: loss_tx.clone(),
+            timer_tx: timer_tx.clone(),
+            act_pool: act_pools[stage].take(),
+            act_return: act_returns[stage].take(),
+            grad_pool: grad_pools[stage].take(),
+            grad_return: grad_returns[stage].take(),
+        };
         let barrier = barrier.clone();
         let sched = sched.clone();
         let cfg = cfg.clone();
         let handle = thread::Builder::new()
             .name(format!("stage{stage}"))
-            .spawn(move || {
-                stage_worker(
-                    stage, p, &cfg, &sched[stage], rx_fwd, tx_fwd, rx_bwd, tx_bwd,
-                    tgt_rx, loss_tx, timer_tx, barrier, aux_coef,
-                )
-            })
+            .spawn(move || stage_worker(stage, p, &cfg, &sched[stage], io, barrier, aux_coef))
             .context("spawning stage thread")?;
         handles.push(handle);
     }
@@ -222,19 +281,21 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     })
 }
 
-#[allow(clippy::too_many_arguments)]
+/// A microbatch's forward-time state, stashed on device for its backward:
+/// the uploaded input buffer (reused, not re-serialized), the accumulated
+/// aux scalar, and — on the last stage — the uploaded targets.
+struct Stashed {
+    x: xla::PjRtBuffer,
+    aux: f32,
+    targets: Option<xla::PjRtBuffer>,
+}
+
 fn stage_worker(
     stage: usize,
     p: usize,
     cfg: &TrainerCfg,
     ops: &[Op],
-    rx_fwd: Receiver<ActMsg>,
-    tx_fwd: Option<Sender<ActMsg>>,
-    rx_bwd: Receiver<GradMsg>,
-    tx_bwd: Option<Sender<GradMsg>>,
-    tgt_rx: Option<Receiver<Tensor>>,
-    loss_tx: Sender<f32>,
-    timer_tx: Sender<(usize, Timers)>,
+    mut io: StageIo,
     barrier: Arc<Barrier>,
     aux_coef: f32,
 ) -> Result<()> {
@@ -252,39 +313,69 @@ fn stage_worker(
     let mut timers = Timers::new();
     let m = cfg.num_micro;
     // §Perf L3: upload parameters to the PJRT device once per optimizer
-    // step; microbatch executions reuse the staged buffers (run_staged)
-    // instead of re-serializing every parameter into a literal.
+    // step; microbatch executions reuse the staged buffers.
     let mut staged = rt.stage_buffers(&params)?;
+    // the aux cotangent is a run constant for non-last stages: stage it once
+    let aux_coef_buf = if is_last {
+        None
+    } else {
+        Some(bwd_exe.upload_input(n_params + 2, &Tensor::scalar_f32(aux_coef))?)
+    };
 
-    // forward inputs stashed for the recompute-based backward; targets are
+    // forward inputs stashed ON DEVICE for the backward; targets are
     // stashed at Fwd time keyed by micro (GPipe drains backwards, so FIFO
     // consumption at Bwd would pair micro k with micro m-1-k's targets)
-    let mut stash: Vec<Option<ActMsg>> = (0..m).map(|_| None).collect();
-    let mut tgt_stash: Vec<Option<Tensor>> = (0..m).map(|_| None).collect();
-    let mut grad_acc: Option<Vec<Tensor>> = None;
+    let mut stash: Vec<Option<Stashed>> = (0..m).map(|_| None).collect();
+    // gradient accumulator + readback scratch, allocated once and reused
+    // across every microbatch of every step
+    let mut grad_acc: Vec<Tensor> =
+        params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect();
+    let mut grad_scratch: Vec<f32> = Vec::new();
+    let mut accumulated = 0usize;
 
     for _step in 0..cfg.steps {
         for op in ops {
             match *op {
                 Op::Fwd { micro } => {
-                    let msg = timers.time("p2p_recv", || rx_fwd.recv());
+                    let msg = timers.time("p2p_recv", || io.rx_fwd.recv());
                     let msg = msg.context("fwd channel closed")?;
                     debug_assert_eq!(msg.micro, micro);
+                    // the executable whose input slot this microbatch's x
+                    // occupies: fwd for pipeline stages, the fused
+                    // fwd+loss+bwd for the last stage
+                    let exe = fwd_exe.as_ref().unwrap_or(&bwd_exe);
+                    let dev_x = timers.time("h2d", || exe.upload_input(n_params, &msg.x))?;
+                    // recycle the payload storage upstream (driver token
+                    // feeds are i32 and unpooled)
+                    if let (Some(ret), Ok(v)) = (&io.act_return, msg.x.into_f32()) {
+                        ret.put(v);
+                    }
                     if is_last {
-                        // fused fwd+loss+bwd happens at Bwd; stash input +
-                        // this micro's targets (sent in fwd order)
-                        tgt_stash[micro] =
-                            Some(tgt_rx.as_ref().unwrap().recv().context("targets closed")?);
-                        stash[micro] = Some(msg);
+                        // fused fwd+loss+bwd happens at Bwd; stash this
+                        // micro's uploaded input + targets (sent in fwd
+                        // order)
+                        let tgt =
+                            io.tgt_rx.as_ref().unwrap().recv().context("targets closed")?;
+                        let dev_tgt = timers
+                            .time("h2d", || bwd_exe.upload_input(n_params + 1, &tgt))?;
+                        stash[micro] =
+                            Some(Stashed { x: dev_x, aux: msg.aux, targets: Some(dev_tgt) });
                     } else {
                         let exe = fwd_exe.as_ref().unwrap();
-                        let out = timers.time("fwd", || {
-                            exe.run_staged(&staged, std::slice::from_ref(&msg.x))
-                        })?;
-                        let act = out[0].clone();
+                        let out = timers
+                            .time("fwd", || exe.run_staged_device(&staged, &[&dev_x]))?;
+                        // outputs: (activations, aux) — activations are read
+                        // back into a recycled slab only because the p2p
+                        // edge is a host channel; aux is a scalar readback
                         let aux = msg.aux + out[1].item()?;
-                        stash[micro] = Some(msg);
-                        tx_fwd
+                        let act = {
+                            let pool = io.act_pool.as_mut().unwrap();
+                            let mut slab = pool.take(out[0].numel());
+                            timers.time("d2h", || out[0].read_into_vec(&mut slab))?;
+                            Tensor::f32(slab, out[0].shape().to_vec())
+                        };
+                        stash[micro] = Some(Stashed { x: dev_x, aux: msg.aux, targets: None });
+                        io.tx_fwd
                             .as_ref()
                             .unwrap()
                             .send(ActMsg { micro, x: act, aux })
@@ -293,44 +384,66 @@ fn stage_worker(
                 }
                 Op::Bwd { micro } => {
                     let stashed = stash[micro].take().context("missing stash")?;
-                    let grads: Vec<Tensor>;
-                    let dx: Option<Tensor>;
+                    let out;
+                    let grads_at;
+                    let dx_at;
                     if is_last {
-                        let targets = tgt_stash[micro].take().context("missing targets")?;
-                        let rest = [stashed.x, targets, Tensor::scalar_f32(stashed.aux)];
-                        let out =
-                            timers.time("lossgrad", || bwd_exe.run_staged(&staged, &rest))?;
+                        let targets = stashed.targets.as_ref().unwrap();
+                        let aux_in = bwd_exe
+                            .upload_input(n_params + 2, &Tensor::scalar_f32(stashed.aux))?;
+                        out = timers.time("lossgrad", || {
+                            bwd_exe.run_staged_device(&staged, &[&stashed.x, targets, &aux_in])
+                        })?;
                         // outputs: (loss, dx, dparams...)
-                        loss_tx.send(out[0].item()?).ok();
-                        dx = Some(out[1].clone());
-                        grads = out[2..].to_vec();
+                        io.loss_tx.send(out[0].item()?).ok();
+                        dx_at = Some(1);
+                        grads_at = 2;
                     } else {
-                        let gmsg = timers.time("p2p_recv", || rx_bwd.recv());
+                        let gmsg = timers.time("p2p_recv", || io.rx_bwd.recv());
                         let gmsg = gmsg.context("bwd channel closed")?;
                         debug_assert_eq!(gmsg.micro, micro);
-                        let rest = [stashed.x, gmsg.dy, Tensor::scalar_f32(aux_coef)];
-                        let out =
-                            timers.time("bwd", || bwd_exe.run_staged(&staged, &rest))?;
+                        let dev_dy = timers
+                            .time("h2d", || bwd_exe.upload_input(n_params + 1, &gmsg.dy))?;
+                        if let (Some(ret), Ok(v)) = (&io.grad_return, gmsg.dy.into_f32()) {
+                            ret.put(v);
+                        }
+                        let aux_buf = aux_coef_buf.as_ref().unwrap();
+                        out = timers.time("bwd", || {
+                            bwd_exe.run_staged_device(&staged, &[&stashed.x, &dev_dy, aux_buf])
+                        })?;
                         if stage == 0 {
-                            dx = None;
-                            grads = out.to_vec();
+                            dx_at = None;
+                            grads_at = 0;
                         } else {
-                            dx = Some(out[0].clone());
-                            grads = out[1..].to_vec();
+                            dx_at = Some(0);
+                            grads_at = 1;
                         }
                     }
+                    let grads = &out[grads_at..];
                     debug_assert_eq!(grads.len(), n_params);
-                    // accumulate
-                    match &mut grad_acc {
-                        None => grad_acc = Some(grads),
-                        Some(acc) => {
-                            for (a, g) in acc.iter_mut().zip(&grads) {
-                                a.add_assign(g)?;
+                    // accumulate on host (the optimizer lives in L3); the
+                    // first microbatch overwrites, later ones add through
+                    // the reused scratch buffer
+                    timers.time("grad_acc", || -> Result<()> {
+                        for (acc, g) in grad_acc.iter_mut().zip(grads) {
+                            if accumulated == 0 {
+                                g.read_into(acc)?;
+                            } else {
+                                g.add_into(acc, &mut grad_scratch)?;
                             }
                         }
-                    }
-                    if let (Some(tx), Some(dx)) = (&tx_bwd, dx) {
-                        tx.send(GradMsg { micro, dy: dx }).ok();
+                        Ok(())
+                    })?;
+                    accumulated += 1;
+                    if let (Some(tx), Some(i)) = (&io.tx_bwd, dx_at) {
+                        let pool = io.grad_pool.as_mut().unwrap();
+                        let mut slab = pool.take(out[i].numel());
+                        timers.time("d2h", || out[i].read_into_vec(&mut slab))?;
+                        tx.send(GradMsg {
+                            micro,
+                            dy: Tensor::f32(slab, out[i].shape().to_vec()),
+                        })
+                        .ok();
                     }
                 }
             }
@@ -342,31 +455,24 @@ fn stage_worker(
         } else {
             cfg.lr
         };
-        let mut grads = grad_acc.take().context("no grads")?;
         timers.time("optimizer", || -> Result<()> {
-            let scale = 1.0 / m as f32;
-            for g in &mut grads {
-                g.scale(scale)?;
-            }
+            debug_assert_eq!(accumulated, m, "missing microbatch gradients");
+            // fold the microbatch mean and the clip ratio into one
+            // multiplier: ||s·g|| == s·||g||, so no scaled copy is ever
+            // materialized, and the fused sweep reads each gradient once
+            let mean = 1.0 / m as f32;
+            let mut gscale = mean;
             if let Some(max_norm) = cfg.grad_clip {
-                let norm: f32 = grads
-                    .iter()
-                    .map(|g| g.norm().map(|n| n * n))
-                    .collect::<Result<Vec<_>>>()?
-                    .iter()
-                    .sum::<f32>()
-                    .sqrt();
+                let norm = global_grad_norm(&grad_acc)? * mean;
                 if norm > max_norm {
-                    let k = max_norm / norm;
-                    for g in &mut grads {
-                        g.scale(k)?;
-                    }
+                    gscale *= max_norm / norm;
                 }
             }
-            opt.update(&mut params, &grads)
+            opt.fused_update(&mut params, &grad_acc, gscale)
         })?;
-        // re-stage the updated parameters for the next step's microbatches
-        staged = timers.time("stage_params", || rt.stage_buffers(&params))?;
+        accumulated = 0;
+        // re-stage the updated parameters in place for the next step
+        timers.time("stage_params", || rt.restage_buffers(&params, &mut staged))?;
         barrier.wait();
     }
 
@@ -374,6 +480,17 @@ fn stage_worker(
         checkpoint::save_stage(dir, stage, &rt.manifest, &params)?;
     }
 
-    timer_tx.send((stage, timers)).ok();
+    // slab economy: after warmup every p2p payload should come from the
+    // reclaim channel, not the allocator
+    if let Some(pool) = &io.act_pool {
+        timers.add_count("act_slab_hit", pool.hits);
+        timers.add_count("act_slab_miss", pool.misses);
+    }
+    if let Some(pool) = &io.grad_pool {
+        timers.add_count("grad_slab_hit", pool.hits);
+        timers.add_count("grad_slab_miss", pool.misses);
+    }
+
+    io.timer_tx.send((stage, timers)).ok();
     Ok(())
 }

@@ -1,0 +1,109 @@
+//! Per-edge slab pools: activation/gradient payloads are recycled across
+//! microbatches instead of being freshly allocated for every mpsc send.
+//!
+//! Each pipeline edge (the p2p link of §3.1.3) gets a back-channel
+//! carrying spent `Vec<f32>` storage from the consumer back to the
+//! producer. The producer reads the next payload *into* a reclaimed slab
+//! (`SlabPool::take`), the consumer uploads it to its device and returns
+//! the storage (`SlabReturn::put`). After the pipeline's warmup rounds the
+//! steady state sends zero fresh allocations over any edge.
+//!
+//! The channel pair is deliberately asymmetric: the pool (producer side)
+//! never blocks — if the consumer hasn't returned a slab yet (warmup, or a
+//! deep 1F1B in-flight window), `take` just allocates. Capacity converges
+//! on the schedule's peak in-flight count.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+/// Producer side: hands out payload buffers, preferring recycled storage.
+pub struct SlabPool {
+    reclaim: Receiver<Vec<f32>>,
+    /// Fresh allocations handed out (steady state: stops growing).
+    pub misses: u64,
+    /// Recycled slabs handed out.
+    pub hits: u64,
+}
+
+/// Consumer side: returns spent payload storage to the producer.
+#[derive(Clone)]
+pub struct SlabReturn {
+    tx: Sender<Vec<f32>>,
+}
+
+/// One edge's recycling pair.
+pub fn slab_pair() -> (SlabPool, SlabReturn) {
+    let (tx, rx) = channel();
+    (SlabPool { reclaim: rx, misses: 0, hits: 0 }, SlabReturn { tx })
+}
+
+impl SlabPool {
+    /// A cleared buffer with capacity for `len` elements — recycled if the
+    /// consumer has returned one, freshly allocated otherwise.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        match self.reclaim.try_recv() {
+            Ok(mut v) => {
+                self.hits += 1;
+                v.clear();
+                v.reserve(len);
+                v
+            }
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
+                self.misses += 1;
+                Vec::with_capacity(len)
+            }
+        }
+    }
+}
+
+impl SlabReturn {
+    /// Give storage back to the producer. A disconnected producer (shutdown
+    /// order) is fine — the storage is simply dropped.
+    pub fn put(&self, v: Vec<f32>) {
+        self.tx.send(v).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_returned_storage() {
+        let (mut pool, ret) = slab_pair();
+        let a = pool.take(16);
+        assert_eq!(pool.misses, 1);
+        let ptr = a.as_ptr();
+        ret.put(a);
+        let b = pool.take(8);
+        assert_eq!(pool.hits, 1);
+        assert_eq!(b.as_ptr(), ptr, "storage must be reused");
+        assert!(b.is_empty() && b.capacity() >= 8);
+    }
+
+    #[test]
+    fn empty_pool_allocates() {
+        let (mut pool, _ret) = slab_pair();
+        let v = pool.take(4);
+        assert!(v.capacity() >= 4);
+        assert_eq!((pool.hits, pool.misses), (0, 1));
+    }
+
+    #[test]
+    fn survives_disconnected_ends() {
+        let (mut pool, ret) = slab_pair();
+        drop(ret);
+        assert!(pool.take(4).capacity() >= 4); // no panic on disconnect
+        let (pool2, ret2) = slab_pair();
+        drop(pool2);
+        ret2.put(vec![1.0]); // no panic either
+    }
+
+    #[test]
+    fn grows_capacity_on_demand() {
+        let (mut pool, ret) = slab_pair();
+        ret.put(Vec::with_capacity(2));
+        let v = pool.take(64);
+        assert!(v.capacity() >= 64, "reserve must honor the larger request");
+        assert_eq!(pool.hits, 1);
+    }
+}

@@ -3,17 +3,35 @@
 
 use std::path::PathBuf;
 
-/// Prefer the tiny test artifacts; fall back to the default set.
-/// Panics with a actionable message if neither exists.
-pub fn artifacts_dir() -> PathBuf {
+/// Resolve the artifacts directory, or `None` (with a skip message) when
+/// this checkout has no artifacts — keeping `cargo test -q` green without
+/// the AOT toolchain.
+///
+/// Resolution order:
+/// 1. `PPMOE_ARTIFACTS` env var — explicit opt-in; panics if it points at
+///    a directory without a manifest (a misconfigured run should fail
+///    loudly, not silently skip).
+/// 2. `artifacts-tiny/`, then `artifacts/` under the repo root.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("PPMOE_ARTIFACTS") {
+        let dir = PathBuf::from(dir);
+        assert!(
+            dir.join("manifest.json").exists(),
+            "PPMOE_ARTIFACTS={} has no manifest.json — run `make artifacts`",
+            dir.display()
+        );
+        return Some(dir);
+    }
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     for candidate in ["artifacts-tiny", "artifacts"] {
         let dir = root.join(candidate);
         if dir.join("manifest.json").exists() {
-            return dir;
+            return Some(dir);
         }
     }
-    panic!(
-        "no artifacts found — run `make artifacts` (or `make artifacts-tiny`) first"
+    eprintln!(
+        "SKIP: no AOT artifacts found — run `make artifacts` (or set \
+         PPMOE_ARTIFACTS) to enable this integration test"
     );
+    None
 }

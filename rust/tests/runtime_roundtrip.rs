@@ -8,7 +8,7 @@ use ppmoe::runtime::{DType, Runtime, Tensor};
 
 #[test]
 fn manifest_matches_artifacts_on_disk() {
-    let dir = common::artifacts_dir();
+    let Some(dir) = common::artifacts_dir() else { return };
     let rt = Runtime::open(&dir).unwrap();
     assert!(rt.manifest.model.stages >= 1);
     for (name, art) in &rt.manifest.artifacts {
@@ -20,7 +20,7 @@ fn manifest_matches_artifacts_on_disk() {
 
 #[test]
 fn stage0_fwd_executes_with_loaded_params() {
-    let dir = common::artifacts_dir();
+    let Some(dir) = common::artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     let exe = rt.load("stage0_fwd").unwrap();
     let params = rt.load_stage_params(0).unwrap();
@@ -40,7 +40,7 @@ fn stage0_fwd_executes_with_loaded_params() {
 
 #[test]
 fn executable_rejects_wrong_shapes_and_dtypes() {
-    let dir = common::artifacts_dir();
+    let Some(dir) = common::artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     let exe = rt.load("stage0_fwd").unwrap();
     let params = rt.load_stage_params(0).unwrap();
@@ -62,7 +62,7 @@ fn executable_rejects_wrong_shapes_and_dtypes() {
 
 #[test]
 fn params_layout_is_consistent() {
-    let dir = common::artifacts_dir();
+    let Some(dir) = common::artifacts_dir() else { return };
     let rt = Runtime::open(&dir).unwrap();
     for stage in 0..rt.manifest.model.stages {
         let params = rt.load_stage_params(stage).unwrap();
@@ -84,7 +84,7 @@ fn params_layout_is_consistent() {
 
 #[test]
 fn loss_eval_runs_and_is_positive() {
-    let dir = common::artifacts_dir();
+    let Some(dir) = common::artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     let m = rt.manifest.model.clone();
     let last = m.stages - 1;

@@ -2,12 +2,14 @@
 
 mod common;
 
+use std::path::PathBuf;
+
 use ppmoe::pipeline::Schedule;
 use ppmoe::trainer::{train, TrainerCfg};
 
-fn base_cfg() -> TrainerCfg {
+fn base_cfg(artifacts: PathBuf) -> TrainerCfg {
     TrainerCfg {
-        artifacts: common::artifacts_dir(),
+        artifacts,
         steps: 12,
         num_micro: 2,
         lr: 3e-3,
@@ -22,7 +24,8 @@ fn base_cfg() -> TrainerCfg {
 
 #[test]
 fn trainer_runs_and_loss_decreases() {
-    let report = train(&base_cfg()).unwrap();
+    let Some(arts) = common::artifacts_dir() else { return };
+    let report = train(&base_cfg(arts)).unwrap();
     assert_eq!(report.steps.len(), 12);
     for s in &report.steps {
         assert!(s.loss.is_finite(), "step {} loss {}", s.step, s.loss);
@@ -39,8 +42,9 @@ fn trainer_runs_and_loss_decreases() {
 #[test]
 fn trainer_deterministic_across_runs() {
     // same seed + schedule => identical loss trajectory (bitwise)
-    let a = train(&base_cfg()).unwrap();
-    let b = train(&base_cfg()).unwrap();
+    let Some(arts) = common::artifacts_dir() else { return };
+    let a = train(&base_cfg(arts.clone())).unwrap();
+    let b = train(&base_cfg(arts)).unwrap();
     for (x, y) in a.steps.iter().zip(&b.steps) {
         assert_eq!(x.loss, y.loss, "step {}", x.step);
     }
@@ -49,7 +53,8 @@ fn trainer_deterministic_across_runs() {
 #[test]
 fn gpipe_schedule_matches_1f1b_losses() {
     // §3.1.3: schedules change overlap, not math — same grads, same losses.
-    let mut cfg = base_cfg();
+    let Some(arts) = common::artifacts_dir() else { return };
+    let mut cfg = base_cfg(arts);
     cfg.steps = 6;
     let one = train(&cfg).unwrap();
     cfg.schedule = Schedule::GPipe;
@@ -67,7 +72,8 @@ fn gpipe_schedule_matches_1f1b_losses() {
 
 #[test]
 fn more_microbatches_still_converge() {
-    let mut cfg = base_cfg();
+    let Some(arts) = common::artifacts_dir() else { return };
+    let mut cfg = base_cfg(arts);
     cfg.num_micro = 4;
     cfg.steps = 8;
     let report = train(&cfg).unwrap();
@@ -80,13 +86,13 @@ fn checkpoint_eval_improves_over_init() {
     // train briefly with checkpointing, then compare held-out validation
     // loss of the checkpoint vs the initial parameters (Fig. 5's
     // validation-loss panel, in miniature).
+    let Some(arts) = common::artifacts_dir() else { return };
     let ckpt = std::env::temp_dir().join(format!("pppmoe_ck_{}", std::process::id()));
-    let mut cfg = base_cfg();
+    let mut cfg = base_cfg(arts.clone());
     cfg.steps = 40; // enough to clear the early-training transient
     cfg.checkpoint_dir = Some(ckpt.clone());
     train(&cfg).unwrap();
 
-    let arts = common::artifacts_dir();
     // same language structure as training (seed 7), fresh stream (999)
     let init_loss =
         ppmoe::trainer::checkpoint::evaluate(&arts, None, 4, 7, 999).unwrap();
@@ -102,7 +108,8 @@ fn checkpoint_eval_improves_over_init() {
 #[test]
 fn warmup_scales_first_steps() {
     // with warmup the first update is tiny -> step-1 loss closer to step-0
-    let mut cfg = base_cfg();
+    let Some(arts) = common::artifacts_dir() else { return };
+    let mut cfg = base_cfg(arts);
     cfg.steps = 4;
     cfg.lr = 0.01;
     let no_warm = train(&cfg).unwrap();
@@ -119,7 +126,8 @@ fn warmup_scales_first_steps() {
 fn tp_ep_partials_match_monolithic() {
     // §3.3.2-3.3.4 in real execution: rank partials all-reduce to the
     // monolithic MoE layer's output.
-    let r = ppmoe::tp::run_tp_moe(&common::artifacts_dir(), 42).unwrap();
+    let Some(arts) = common::artifacts_dir() else { return };
+    let r = ppmoe::tp::run_tp_moe(&arts, 42).unwrap();
     assert!(
         r.max_abs_err < 1e-4,
         "TP decomposition err {}",
@@ -133,9 +141,10 @@ fn tp_ep_partials_match_monolithic() {
 
 #[test]
 fn tp_ep_deterministic_per_seed() {
-    let a = ppmoe::tp::run_tp_moe(&common::artifacts_dir(), 1).unwrap();
-    let b = ppmoe::tp::run_tp_moe(&common::artifacts_dir(), 1).unwrap();
+    let Some(arts) = common::artifacts_dir() else { return };
+    let a = ppmoe::tp::run_tp_moe(&arts, 1).unwrap();
+    let b = ppmoe::tp::run_tp_moe(&arts, 1).unwrap();
     assert_eq!(a.output, b.output);
-    let c = ppmoe::tp::run_tp_moe(&common::artifacts_dir(), 2).unwrap();
+    let c = ppmoe::tp::run_tp_moe(&arts, 2).unwrap();
     assert_ne!(a.output, c.output);
 }

@@ -1,0 +1,180 @@
+//! Vendored minimal `anyhow` (the build is fully offline — see the crate
+//! root docs of `ppmoe`). Implements exactly the API surface the repo uses:
+//!
+//! * [`Error`] — a context chain over an optional source error
+//! * [`Result<T>`] with the `Error` default
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`
+//! * `anyhow!`, `bail!`, `ensure!` macros
+//! * `{e}` prints the outermost message; `{e:#}` prints the full chain
+//!   separated by `": "` (matching real anyhow's alternate formatting)
+//!
+//! Not implemented (unused here): downcasting, backtraces, `Chain`
+//! iteration, `#[source]` attribute handling.
+
+use std::fmt;
+
+/// Error: a stack of human-readable context frames, outermost first.
+pub struct Error {
+    /// `frames[0]` is the most recently attached context (outermost).
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { frames: vec![m.to_string()] }
+    }
+
+    /// Attach an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.frames.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message (same as `{}` formatting).
+    pub fn to_string_outer(&self) -> &str {
+        &self.frames[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, "outer: cause: root"
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // mirrors anyhow's Debug: message plus a Caused by: list
+        write!(f, "{}", self.frames[0])?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in self.frames[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts via `?`. `Error` itself does NOT implement
+// `std::error::Error` (exactly like real anyhow), which is what keeps this
+// blanket impl coherent alongside the reflexive `From<Error>`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide fallible type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] from format args.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = io_fail().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("outer: "), "{full}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(3).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 5 {
+                bail!("five");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five");
+        assert_eq!(format!("{}", f(50).unwrap_err()), "too big: 50");
+        let e: Error = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+    }
+}

@@ -1,0 +1,443 @@
+//! Vendored stub of the `xla-rs` PJRT bindings.
+//!
+//! The container this repo builds in has no network and no PJRT shared
+//! library, so the real `xla` crate cannot be fetched or linked. This stub
+//! keeps the exact API shape `ppmoe::runtime` compiles against, with honest
+//! semantics for everything that does not require an XLA compiler:
+//!
+//! * **Literals and device buffers are real**: `Literal::vec1`, `reshape`,
+//!   `to_vec`, `buffer_from_host_buffer`, `to_literal_sync` all move bytes
+//!   exactly like the real bindings (host copies standing in for
+//!   host<->device DMA). The staging / readback hot paths in
+//!   `ppmoe::runtime` are therefore exercisable and benchmarkable.
+//! * **Compilation and execution are unavailable**: `HloModuleProto`
+//!   parsing stores the artifact text, `compile` succeeds (deferring, as
+//!   PJRT itself may), and `execute`/`execute_b` return
+//!   [`Error::BackendUnavailable`]. Every caller in `ppmoe` is gated
+//!   behind artifact presence, so `cargo test -q` never reaches execution
+//!   without a real toolchain.
+//!
+//! Mirroring real PJRT, none of the handle types are `Send`: each worker
+//! thread must own its client (enforced with a `PhantomData<Rc<()>>`).
+//!
+//! Contract note for `execute`/`execute_b` result shape: artifacts are
+//! lowered with `return_tuple=True`; following xla-rs, the result row
+//! holds a single tuple-shaped value (`result[0][0]`) which
+//! `to_literal_sync().to_tuple()` decomposes. `PjRtLoadedExecutable` here
+//! also exposes the per-element untupled row (`untuple_result`) that
+//! `ppmoe::runtime::Executable::run_device` relies on; a real-backend port
+//! supplies that via PJRT's `untuple_result` execute option.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Stub error type. Implements `std::error::Error`, so it converts into
+/// `anyhow::Error` through `?` exactly like the real crate's error.
+#[derive(Debug)]
+pub enum Error {
+    /// Execution (or another PJRT capability) needs the real backend.
+    BackendUnavailable(&'static str),
+    /// Shape/dtype misuse detected host-side.
+    Usage(String),
+    /// Underlying I/O failure (artifact file reads).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BackendUnavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real xla-rs/PJRT backend \
+                 (this offline build vendors a data-movement-only stub)"
+            ),
+            Error::Usage(m) => write!(f, "xla stub: {m}"),
+            Error::Io(e) => write!(f, "xla stub: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Marker making a type `!Send + !Sync` (PJRT handles are thread-affine).
+type NotSend = PhantomData<Rc<()>>;
+
+/// Element types that can cross the boundary.
+pub trait Element: Copy + Default + 'static {
+    fn dtype_tag() -> &'static str;
+    fn store(data: &[Self]) -> Storage;
+    fn load(s: &Storage) -> Result<&[Self]>;
+}
+
+/// Typed host storage backing literals and device buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+}
+
+impl Element for f32 {
+    fn dtype_tag() -> &'static str {
+        "f32"
+    }
+    fn store(data: &[f32]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+    fn load(s: &Storage) -> Result<&[f32]> {
+        match s {
+            Storage::F32(v) => Ok(v),
+            _ => Err(Error::Usage("literal is not f32".into())),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn dtype_tag() -> &'static str {
+        "i32"
+    }
+    fn store(data: &[i32]) -> Storage {
+        Storage::I32(data.to_vec())
+    }
+    fn load(s: &Storage) -> Result<&[i32]> {
+        match s {
+            Storage::I32(v) => Ok(v),
+            _ => Err(Error::Usage("literal is not i32".into())),
+        }
+    }
+}
+
+/// Host literal: typed data + dims, or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    kind: LiteralKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum LiteralKind {
+    Dense { data: Storage, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice (copies).
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        Literal {
+            kind: LiteralKind::Dense {
+                dims: vec![data.len() as i64],
+                data: T::store(data),
+            },
+        }
+    }
+
+    /// Tuple literal (what `return_tuple=True` artifacts produce).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { kind: LiteralKind::Tuple(elems) }
+    }
+
+    /// Reinterpret with new dims; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match &self.kind {
+            LiteralKind::Dense { data, .. } => {
+                let n: i64 = dims.iter().product();
+                if n as usize != data.len() {
+                    return Err(Error::Usage(format!(
+                        "reshape {:?} onto {} elements",
+                        dims,
+                        data.len()
+                    )));
+                }
+                Ok(Literal {
+                    kind: LiteralKind::Dense { data: data.clone(), dims: dims.to_vec() },
+                })
+            }
+            LiteralKind::Tuple(_) => Err(Error::Usage("cannot reshape a tuple".into())),
+        }
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.kind {
+            LiteralKind::Tuple(elems) => Ok(elems.clone()),
+            LiteralKind::Dense { .. } => {
+                Err(Error::Usage("literal is not a tuple".into()))
+            }
+        }
+    }
+
+    /// Number of scalar elements.
+    pub fn element_count(&self) -> usize {
+        match &self.kind {
+            LiteralKind::Dense { data, .. } => data.len(),
+            LiteralKind::Tuple(elems) => elems.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        match &self.kind {
+            LiteralKind::Dense { data, .. } => Ok(T::load(data)?.to_vec()),
+            LiteralKind::Tuple(_) => Err(Error::Usage("to_vec on a tuple".into())),
+        }
+    }
+
+    /// Copy out into a caller-owned buffer (cleared first) — the
+    /// allocation-free readback used by the device-resident hot path.
+    pub fn to_vec_into<T: Element>(&self, out: &mut Vec<T>) -> Result<()> {
+        match &self.kind {
+            LiteralKind::Dense { data, .. } => {
+                out.clear();
+                out.extend_from_slice(T::load(data)?);
+                Ok(())
+            }
+            LiteralKind::Tuple(_) => Err(Error::Usage("to_vec_into on a tuple".into())),
+        }
+    }
+
+    /// First element as f32 without materializing the full vector
+    /// (scalar loss/aux readback).
+    pub fn first_f32(&self) -> Result<f32> {
+        match &self.kind {
+            LiteralKind::Dense { data: Storage::F32(v), .. } => v
+                .first()
+                .copied()
+                .ok_or_else(|| Error::Usage("first_f32 on empty literal".into())),
+            _ => Err(Error::Usage("first_f32 on non-f32 literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module. The stub stores the artifact text verbatim.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: Rc<String>,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact. I/O errors surface here, so a missing or
+    /// unreadable artifact fails loudly even under the stub.
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(HloModuleProto { text: Rc::new(text) })
+    }
+}
+
+/// Computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle (thread-affine).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _not_send: NotSend,
+}
+
+impl PjRtClient {
+    /// The CPU client always constructs; capability errors surface at
+    /// execute time (mirroring PJRT's lazy behavior).
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _not_send: PhantomData })
+    }
+
+    /// "Compile" an artifact: defers to execute under the stub.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            _comp: comp.clone(),
+            client: PjRtClient { _not_send: PhantomData },
+        })
+    }
+
+    /// Upload host data to a device buffer (a real copy under the stub, a
+    /// host->device DMA under real PJRT).
+    pub fn buffer_from_host_buffer<T: Element>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::Usage(format!(
+                "buffer_from_host_buffer: dims {dims:?} vs {} elements",
+                data.len()
+            )));
+        }
+        Ok(PjRtBuffer {
+            data: T::store(data),
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            _not_send: PhantomData,
+        })
+    }
+}
+
+/// Device-resident buffer (thread-affine, like real PJRT buffers).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    data: Storage,
+    dims: Vec<i64>,
+    _not_send: NotSend,
+}
+
+impl PjRtBuffer {
+    /// Synchronous device->host readback.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal {
+            kind: LiteralKind::Dense { data: self.data.clone(), dims: self.dims.clone() },
+        })
+    }
+
+    /// Device->host readback into a caller-owned buffer (cleared first),
+    /// skipping the intermediate literal: the zero-allocation path.
+    pub fn copy_into<T: Element>(&self, out: &mut Vec<T>) -> Result<()> {
+        out.clear();
+        out.extend_from_slice(T::load(&self.data)?);
+        Ok(())
+    }
+
+    /// First element as f32 (scalar readback without a full transfer).
+    pub fn first_f32(&self) -> Result<f32> {
+        match &self.data {
+            Storage::F32(v) => v
+                .first()
+                .copied()
+                .ok_or_else(|| Error::Usage("first_f32 on empty buffer".into())),
+            _ => Err(Error::Usage("first_f32 on non-f32 buffer".into())),
+        }
+    }
+
+    /// On-device dims.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element count.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _comp: XlaComputation,
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Execute with host literals. Requires the real backend.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("execute"))
+    }
+
+    /// Execute with pre-staged device buffers. Requires the real backend.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("execute_b"))
+    }
+
+    /// Execute with device buffers, returning one buffer **per tuple
+    /// element** of the result (PJRT's `untuple_result=true`). This is the
+    /// device-resident path: outputs stay on device, no readback.
+    /// Requires the real backend.
+    pub fn execute_untupled(&self, _args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        Err(Error::BackendUnavailable("execute_untupled"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_literals_decompose() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32, 3.0])]);
+        assert_eq!(t.element_count(), 3);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![2.0, 3.0]);
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn buffer_staging_roundtrip() {
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client
+            .buffer_from_host_buffer(&[5.0f32, 6.0], &[2], None)
+            .unwrap();
+        assert_eq!(buf.dims(), &[2]);
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![5.0, 6.0]);
+        // allocation-free readback reuses the caller's vec
+        let mut out = Vec::with_capacity(2);
+        buf.copy_into(&mut out).unwrap();
+        assert_eq!(out, vec![5.0, 6.0]);
+        assert_eq!(buf.first_f32().unwrap(), 5.0);
+        // shape mismatch is a usage error
+        assert!(client
+            .buffer_from_host_buffer(&[1.0f32], &[2], None)
+            .is_err());
+    }
+
+    #[test]
+    fn execution_requires_real_backend() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: Rc::new("HloModule m".into()) };
+        let exe = client.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let lit = Literal::vec1(&[1.0f32]);
+        assert!(matches!(
+            exe.execute::<Literal>(&[lit]).unwrap_err(),
+            Error::BackendUnavailable(_)
+        ));
+        let buf = client.buffer_from_host_buffer(&[1.0f32], &[1], None).unwrap();
+        assert!(exe.execute_b(&[&buf]).is_err());
+        assert!(exe.execute_untupled(&[&buf]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_file_errors() {
+        assert!(HloModuleProto::from_text_file(Path::new("/nope/x.hlo.txt")).is_err());
+    }
+}
