@@ -1,0 +1,46 @@
+# PPMoE build entry points. Python runs exactly once (AOT export); the Rust
+# binary is self-contained afterwards. See README.md for the layer map.
+
+PY ?= python3
+CARGO ?= cargo
+
+.PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 build test bench doc clean
+
+all: artifacts build
+
+# Default artifacts: the `small` config into ./artifacts (what examples,
+# benches and `ppmoe train` look for by default).
+artifacts:
+	cd python && $(PY) -m compile.aot --config small --out-dir ../artifacts
+
+# CI-fast artifacts: the `tiny` config. Integration tests self-skip without
+# any artifacts and pick this directory up first (rust/tests/common).
+artifacts-tiny:
+	cd python && $(PY) -m compile.aot --config tiny --out-dir ../artifacts-tiny
+
+# Interleaved virtual-stage artifacts: tiny widths, 8 layers split into
+# 2 stages x 4 chunks. Enables the live interleaved-1F1B integration tests
+# (rust/tests/pipeline_equivalence.rs) and
+# `train_ppmoe --artifacts artifacts-tiny-v4 --virtual 4`.
+artifacts-tiny-v4:
+	cd python && $(PY) -m compile.aot --config tiny-deep --virtual 4 \
+	    --out-dir ../artifacts-tiny-v4
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Hot-path microbenches (writes BENCH_hotpath.json) + the Table 2 sweep
+# with its interleaved variant.
+bench:
+	$(CARGO) bench --bench hotpath_micro
+	$(CARGO) bench --bench table2_throughput
+
+doc:
+	$(CARGO) doc --no-deps
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts artifacts-tiny artifacts-tiny-v4

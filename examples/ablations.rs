@@ -1,4 +1,4 @@
-//! Ablation studies over the design choices DESIGN.md calls out.
+//! Ablation studies over the design choices EXPERIMENTS.md calls out.
 //!
 //! ```sh
 //! cargo run --release --example ablations
@@ -67,7 +67,8 @@ fn bubble_vs_micros() {
     println!("=== ablation 2: pipeline bubble (p=16 stages) ===");
     let timing = vec![StageTiming { fwd: 1.0, bwd: 2.0, p2p: 0.02 }; 16];
     let mut rows = Vec::new();
-    for m in [4usize, 16, 64, 256] {
+    // interleaved 1F1B needs m % p == 0, so sweep multiples of p = 16
+    for m in [16usize, 32, 64, 256] {
         let plain = simulate_interleaved(&timing, m, 1).bubble_fraction;
         let v2 = simulate_interleaved(&timing, m, 2).bubble_fraction;
         let v4 = simulate_interleaved(&timing, m, 4).bubble_fraction;

@@ -4,6 +4,9 @@
 //! ```sh
 //! make artifacts && cargo run --release --example train_ppmoe -- \
 //!     --steps 200 --micro 4 --lr 1e-3
+//! # interleaved virtual-stage 1F1B (artifacts exported with --virtual N):
+//! make artifacts-tiny-v4 && cargo run --release --example train_ppmoe -- \
+//!     --artifacts artifacts-tiny-v4 --micro 4 --virtual 4
 //! ```
 //!
 //! All layers compose here: Pallas grouped-expert kernels (L1) inside the
@@ -33,12 +36,21 @@ fn main() -> anyhow::Result<()> {
         } else {
             Schedule::OneFOneB
         },
+        virtual_stages: args.get_usize("virtual", 0)?,
         warmup_steps: args.get_usize("warmup", 10)?,
         checkpoint_dir: args.get("checkpoint").map(Into::into),
     };
     eprintln!(
-        "training: {} steps × {} microbatches, lr {}, schedule {:?}",
-        cfg.steps, cfg.num_micro, cfg.lr, cfg.schedule
+        "training: {} steps × {} microbatches, lr {}, schedule {:?}{}",
+        cfg.steps,
+        cfg.num_micro,
+        cfg.lr,
+        cfg.schedule,
+        if cfg.virtual_stages > 1 {
+            format!(", {} virtual chunks/stage", cfg.virtual_stages)
+        } else {
+            String::new()
+        }
     );
 
     let report = train(&cfg)?;

@@ -13,8 +13,12 @@ Outputs under --out-dir (default ../artifacts):
   params/stage<i>.bin     initial parameters, raw little-endian f32,
                           concatenated in manifest order
 
-Usage: python -m compile.aot [--out-dir DIR] [--config tiny|small|medium]
-                             [--tp N] [--seed S] [--no-full]
+Usage: python -m compile.aot [--out-dir DIR] [--config tiny|small|medium|...]
+                             [--tp N] [--seed S] [--virtual V] [--no-full]
+
+`--virtual V` exports each stage as V non-contiguous chunks (interleaved
+virtual-stage 1F1B): per-(stage, chunk) fwd/bwd artifacts plus a `chunks`
+manifest table; see docs/schedules.md.
 """
 from __future__ import annotations
 
@@ -37,6 +41,11 @@ CONFIGS: dict[str, ModelConfig] = {
     "tiny": ModelConfig(vocab=256, hidden=64, ffn=256, layers=2, heads=4,
                         experts=4, seq=32, micro_batch=2, stages=2,
                         block_c=32, block_t=64),
+    # tiny widths but 8 layers: divisible into 2 stages x {1, 2, 4} virtual
+    # chunks — the interleaved-1F1B test target (`make artifacts-tiny-v4`)
+    "tiny-deep": ModelConfig(vocab=256, hidden=64, ffn=256, layers=8, heads=4,
+                             experts=4, seq=32, micro_batch=2, stages=2,
+                             block_c=32, block_t=64),
     "small": ModelConfig(vocab=512, hidden=128, ffn=512, layers=4, heads=4,
                          experts=8, seq=64, micro_batch=4, stages=2,
                          block_c=64, block_t=128),
@@ -111,12 +120,13 @@ def save_stage_params(out_dir: str, stage: int, names: list[str], leaves) -> dic
 
 
 def export(cfg_name: str, out_dir: str, tp: int, seed: int,
-           include_full: bool) -> None:
+           include_full: bool, virtual: int = 1) -> None:
     cfg = CONFIGS[cfg_name]
+    if virtual != 1:
+        cfg = dataclasses.replace(cfg, virtual_stages=virtual)
     cfg.validate()
     os.makedirs(out_dir, exist_ok=True)
     key = jax.random.PRNGKey(seed)
-    all_params = model.init_all(key, cfg)
 
     manifest: dict = {
         "config_name": cfg_name,
@@ -126,31 +136,78 @@ def export(cfg_name: str, out_dir: str, tp: int, seed: int,
         "artifacts": {},
     }
     arts = manifest["artifacts"]
+    v = cfg.virtual_stages
 
-    print(f"[aot] config={cfg_name} stages={cfg.stages} tp={tp}")
-    for s in range(cfg.stages):
-        names, leaves, _ = stages.flatten_params(all_params[s])
-        manifest["stages"].append(save_stage_params(out_dir, s, names, leaves))
+    print(f"[aot] config={cfg_name} stages={cfg.stages} "
+          f"virtual={v} tp={tp}")
+    if v == 1:
+        # plain pipeline: per-stage artifacts, no "chunks" section (the
+        # Rust manifest synthesizes the single-chunk view)
+        all_params = model.init_all(key, cfg)
+        for s in range(cfg.stages):
+            names, leaves, _ = stages.flatten_params(all_params[s])
+            manifest["stages"].append(
+                save_stage_params(out_dir, s, names, leaves))
 
-        fn, ex, pnames = stages.make_stage_fwd(cfg, s, all_params[s])
-        arts[f"stage{s}_fwd"] = lower_artifact(
-            f"stage{s}_fwd", fn, ex, out_dir, [*pnames, "x"])
+            fn, ex, pnames = stages.make_stage_fwd(cfg, s, all_params[s])
+            arts[f"stage{s}_fwd"] = lower_artifact(
+                f"stage{s}_fwd", fn, ex, out_dir, [*pnames, "x"])
 
-        fn, ex, pnames = stages.make_stage_bwd(cfg, s, all_params[s])
-        arts[f"stage{s}_bwd"] = lower_artifact(
-            f"stage{s}_bwd", fn, ex, out_dir, [*pnames, "x", "dy", "daux"])
+            fn, ex, pnames = stages.make_stage_bwd(cfg, s, all_params[s])
+            arts[f"stage{s}_bwd"] = lower_artifact(
+                f"stage{s}_bwd", fn, ex, out_dir, [*pnames, "x", "dy", "daux"])
 
-    s_last = cfg.stages - 1
-    fn, ex, pnames = stages.make_last_stage_lossgrad(cfg, all_params[s_last])
+        s_last = cfg.stages - 1
+        last_params = all_params[s_last]
+    else:
+        # interleaved pipeline: per-(stage, chunk) artifacts plus the
+        # manifest "chunks" table; each stage's bin concatenates its
+        # chunks' params in chunk order, so chunk c addresses a contiguous
+        # sub-slice of the stage params (manifest.chunk_param_range)
+        chunk_params = model.init_all_chunks(key, cfg)
+        manifest["chunks"] = []
+        for s in range(cfg.stages):
+            names, leaves, chunk_meta = [], [], []
+            for c in range(v):
+                cn, cl, _ = stages.flatten_params(chunk_params[s][c])
+                names += [f"chunk{c}.{n}" for n in cn]
+                leaves += cl
+                is_loss = s == cfg.stages - 1 and c == v - 1
+                if is_loss:
+                    chunk_meta.append(
+                        {"fwd": None, "bwd": "lossgrad", "params": len(cn)})
+                else:
+                    fwd_name = f"stage{s}_chunk{c}_fwd"
+                    bwd_name = f"stage{s}_chunk{c}_bwd"
+                    chunk_meta.append(
+                        {"fwd": fwd_name, "bwd": bwd_name, "params": len(cn)})
+                    fn, ex, pnames = stages.make_chunk_fwd(
+                        cfg, s, c, chunk_params[s][c])
+                    arts[fwd_name] = lower_artifact(
+                        fwd_name, fn, ex, out_dir, [*pnames, "x"])
+                    fn, ex, pnames = stages.make_chunk_bwd(
+                        cfg, s, c, chunk_params[s][c])
+                    arts[bwd_name] = lower_artifact(
+                        bwd_name, fn, ex, out_dir,
+                        [*pnames, "x", "dy", "daux"])
+            manifest["stages"].append(
+                save_stage_params(out_dir, s, names, leaves))
+            manifest["chunks"].append(chunk_meta)
+        last_params = chunk_params[-1][-1]
+
+    fn, ex, pnames = stages.make_last_stage_lossgrad(cfg, last_params)
     arts["lossgrad"] = lower_artifact(
         "lossgrad", fn, ex, out_dir, [*pnames, "x", "targets", "aux_in"])
 
-    fn, ex, pnames = stages.make_last_stage_loss(cfg, all_params[s_last])
+    fn, ex, pnames = stages.make_last_stage_loss(cfg, last_params)
     arts["loss_eval"] = lower_artifact(
         "loss_eval", fn, ex, out_dir, [*pnames, "x", "targets", "aux_in"])
 
     if include_full:
-        fn, ex, pnames = stages.make_full_lossgrad(cfg, all_params)
+        if v == 1:
+            fn, ex, pnames = stages.make_full_lossgrad(cfg, all_params)
+        else:
+            fn, ex, pnames = stages.make_full_lossgrad_chunks(cfg, chunk_params)
         arts["full_lossgrad"] = lower_artifact(
             "full_lossgrad", fn, ex, out_dir, [*pnames, "tokens", "targets"])
 
@@ -186,16 +243,22 @@ def main() -> None:
     ap.add_argument("--config", default="small", choices=sorted(CONFIGS))
     ap.add_argument("--tp", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--virtual", type=int, default=1,
+                    help="interleaved 1F1B: virtual chunks per pipeline "
+                         "stage (layers must divide stages*virtual)")
     ap.add_argument("--no-full", action="store_true",
                     help="skip the whole-model lossgrad artifact")
     args = ap.parse_args()
     out_dir = args.out_dir
     if args.out_compat:
         out_dir = os.path.dirname(args.out_compat) or "."
-    export(args.config, out_dir, args.tp, args.seed, not args.no_full)
+    export(args.config, out_dir, args.tp, args.seed, not args.no_full,
+           virtual=args.virtual)
     if args.out_compat:
-        # Makefile freshness stamp: alias the first stage artifact
+        # Makefile freshness stamp: alias the first stage/chunk artifact
         src = os.path.join(out_dir, "stage0_fwd.hlo.txt")
+        if not os.path.exists(src):
+            src = os.path.join(out_dir, "stage0_chunk0_fwd.hlo.txt")
         with open(src) as fi, open(args.out_compat, "w") as fo:
             fo.write(fi.read())
 

@@ -4,7 +4,8 @@ The gating module of §3.3.3: a linear map, a softmax score function, and a
 top-k schedule. The score computation (logits -> softmax -> top-1) is a
 Pallas kernel tiled over tokens; the dispatch/combine tensor construction is
 a cumsum-based one-hot assignment in plain jnp (it is a prefix-scan, not a
-GEMM, so it does not benefit from the MXU — see DESIGN.md §3).
+GEMM, so it does not benefit from the MXU — see EXPERIMENTS.md
+§Serialization).
 
 PPMoE's key structural property is encoded here: given identical inputs and
 identical gating weights, every tensor-parallel rank computes the *identical*

@@ -7,7 +7,7 @@ On TPU we express the loop as a Pallas grid dimension instead: the grid is
 expert's (h, f)/(f, h) weight slabs HBM->VMEM per step. Both GEMMs target
 the MXU with f32 accumulation (`preferred_element_type`).
 
-Hardware adaptation (DESIGN.md §3): the paper's claim that "serially
+Hardware adaptation (EXPERIMENTS.md §Serialization): the paper's claim that "serially
 processing a few small tensors is nearly the same as one big tensor"
 (footnote 6) maps to the fact that a grid over experts re-uses the same
 systolic-array schedule per step — per-expert weight slabs are the only

@@ -11,7 +11,7 @@ Everything here is pure-functional over explicit parameter pytrees so that
 `aot.py` can lower per-pipeline-stage fwd/bwd functions to HLO text for the
 Rust runtime. Parameters are fp32 (the paper uses fp16 + fp32 gating on
 V100; on CPU-PJRT we keep fp32 throughout and note the substitution in
-DESIGN.md).
+EXPERIMENTS.md §Substitutions).
 """
 from __future__ import annotations
 
@@ -38,6 +38,12 @@ class ModelConfig:
     seq: int = 64
     micro_batch: int = 4
     stages: int = 2  # pipeline stages
+    # Interleaved virtual-stage 1F1B (Megatron-style): each physical stage
+    # holds this many NON-contiguous model chunks. Virtual stage
+    # V = chunk*stages + stage owns layers [V*n, (V+1)*n) with
+    # n = layers/(stages*virtual_stages); chunk c of the last stage feeds
+    # chunk c+1 of stage 0 (the wrap-around p2p edge). 1 = plain pipeline.
+    virtual_stages: int = 1
     aux_coef: float = 0.01
     # Expert capacity factor (§Perf L2). capacity = cf·tokens/E, so the
     # grouped kernel computes cf× one dense FFN instead of E×. cf = 0 means
@@ -71,9 +77,17 @@ class ModelConfig:
         # layers 1, 3, 5, ... are MoE ("every other FFN")
         return self.moe_every > 0 and (i % self.moe_every == self.moe_every - 1)
 
+    @property
+    def num_virtual(self) -> int:
+        """Total virtual stages in the ring: stages * virtual_stages."""
+        return self.stages * self.virtual_stages
+
     def validate(self) -> None:
         assert self.hidden % self.heads == 0
-        assert self.layers % self.stages == 0
+        assert self.layers % self.num_virtual == 0, (
+            f"layers ({self.layers}) must split evenly over "
+            f"{self.stages} stages x {self.virtual_stages} chunks"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -115,30 +129,57 @@ def init_block(key: jax.Array, cfg: ModelConfig, layer_idx: int) -> dict[str, An
     return p
 
 
-def init_stage(key: jax.Array, cfg: ModelConfig, stage: int) -> dict[str, Any]:
-    """Parameters owned by one pipeline stage.
+def init_chunk(key: jax.Array, cfg: ModelConfig, stage: int, chunk: int) -> dict[str, Any]:
+    """Parameters owned by one virtual chunk of a pipeline stage.
 
-    Stage 0 additionally owns the embeddings; the last stage owns the final
-    LayerNorm and the (untied) output projection.
+    Virtual stage 0 (= stage 0, chunk 0) additionally owns the embeddings;
+    the last virtual stage (= last stage, last chunk) owns the final
+    LayerNorm and the (untied) output projection. Block keys are local to
+    the chunk; the global layer index is recovered from the virtual-stage
+    arithmetic.
     """
-    n = cfg.layers // cfg.stages
+    n = cfg.layers // cfg.num_virtual
+    v_idx = chunk * cfg.stages + stage
     ks = jax.random.split(key, n + 2)
     p: dict[str, Any] = {
-        f"block{j:02d}": init_block(ks[j], cfg, stage * n + j) for j in range(n)
+        f"block{j:02d}": init_block(ks[j], cfg, v_idx * n + j) for j in range(n)
     }
-    if stage == 0:
+    if v_idx == 0:
         p["tok_emb"] = jax.random.normal(ks[n], (cfg.vocab, cfg.hidden)) * 0.02
         p["pos_emb"] = jax.random.normal(ks[n + 1], (cfg.seq, cfg.hidden)) * 0.02
-    if stage == cfg.stages - 1:
+    if v_idx == cfg.num_virtual - 1:
         p["lnf_g"] = jnp.ones((cfg.hidden,), jnp.float32)
         p["lnf_b"] = jnp.zeros((cfg.hidden,), jnp.float32)
         p["w_out"] = jax.random.normal(ks[n], (cfg.hidden, cfg.vocab)) * 0.02
     return p
 
 
+def init_stage(key: jax.Array, cfg: ModelConfig, stage: int) -> dict[str, Any]:
+    """Parameters owned by one pipeline stage (plain pipelines only —
+    chunked configs init per (stage, chunk) via `init_chunk`)."""
+    assert cfg.virtual_stages == 1
+    return init_chunk(key, cfg, stage, 0)
+
+
 def init_all(key: jax.Array, cfg: ModelConfig) -> list[dict[str, Any]]:
     ks = jax.random.split(key, cfg.stages)
     return [init_stage(ks[s], cfg, s) for s in range(cfg.stages)]
+
+
+def init_all_chunks(key: jax.Array, cfg: ModelConfig) -> list[list[dict[str, Any]]]:
+    """Per-(stage, chunk) parameters, indexed [stage][chunk].
+
+    Keys split per virtual stage in ring order, so `virtual_stages == 1`
+    reproduces `init_all` bitwise (jax.random.split(key, n) is a prefix of
+    the same-key split at larger n only when n matches — hence the split is
+    over exactly `num_virtual` keys, which equals `stages` at v = 1).
+    """
+    ks = jax.random.split(key, cfg.num_virtual)
+    return [
+        [init_chunk(ks[c * cfg.stages + s], cfg, s, c)
+         for c in range(cfg.virtual_stages)]
+        for s in range(cfg.stages)
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -216,23 +257,34 @@ def block_fwd(p: dict[str, Any], x: jax.Array, cfg: ModelConfig, layer_idx: int)
 # ---------------------------------------------------------------------------
 
 
-def stage_fwd(params: dict[str, Any], x: jax.Array, cfg: ModelConfig, stage: int):
-    """Forward through one pipeline stage.
+def chunk_fwd(params: dict[str, Any], x: jax.Array, cfg: ModelConfig,
+              stage: int, chunk: int):
+    """Forward through one virtual chunk of a pipeline stage.
 
-    Stage 0 takes int32 tokens (B, S); other stages take activations
-    (B, S, h). Returns (activations, aux_loss_sum) — aux is threaded as a
-    scalar through the pipeline so the loss head adds it exactly once.
+    Virtual stage 0 takes int32 tokens (B, S); every other chunk takes
+    activations (B, S, h) — including chunk c > 0 of stage 0, which
+    receives the wrap-around activations of chunk c−1 leaving the last
+    stage. Returns (activations, aux_loss_sum) — aux is threaded as a
+    scalar through the whole virtual ring so the loss head adds it exactly
+    once.
     """
-    n = cfg.layers // cfg.stages
+    n = cfg.layers // cfg.num_virtual
+    v_idx = chunk * cfg.stages + stage
     aux_total = jnp.float32(0.0)
-    if stage == 0:
+    if v_idx == 0:
         h = params["tok_emb"][x] + params["pos_emb"][None, :, :]
     else:
         h = x
     for j in range(n):
-        h, aux = block_fwd(params[f"block{j:02d}"], h, cfg, stage * n + j)
+        h, aux = block_fwd(params[f"block{j:02d}"], h, cfg, v_idx * n + j)
         aux_total = aux_total + aux
     return h, aux_total
+
+
+def stage_fwd(params: dict[str, Any], x: jax.Array, cfg: ModelConfig, stage: int):
+    """Forward through one pipeline stage — the single-chunk view
+    (`chunk_fwd` at chunk 0; identical at virtual_stages == 1)."""
+    return chunk_fwd(params, x, cfg, stage, 0)
 
 
 def loss_head(params: dict[str, Any], h: jax.Array, targets: jax.Array,
@@ -246,20 +298,31 @@ def loss_head(params: dict[str, Any], h: jax.Array, targets: jax.Array,
 
 
 def last_stage_loss(params, x, targets, aux_in, cfg: ModelConfig):
-    """Forward through the last stage + loss. aux_in: accumulated aux scalar
-    from earlier stages (threaded through the pipeline by the L3 trainer)."""
-    h, aux = stage_fwd(params, x, cfg, cfg.stages - 1)
+    """Forward through the last virtual chunk + loss. aux_in: accumulated
+    aux scalar from every earlier chunk in the ring (threaded through the
+    pipeline — wrap-around edges included — by the L3 trainer)."""
+    h, aux = chunk_fwd(params, x, cfg, cfg.stages - 1, cfg.virtual_stages - 1)
     return loss_head(params, h, targets, aux + aux_in, cfg)
+
+
+def full_loss_chunks(chunk_params: list[list[dict[str, Any]]], tokens, targets,
+                     cfg: ModelConfig):
+    """Single-shot whole-model loss over [stage][chunk] parameters: chain
+    the virtual ring in order (stage-inner, chunk-outer) and close with the
+    loss head — the §3.3.6 functional-equivalence reference for the
+    interleaved trainer."""
+    h, aux = tokens, jnp.float32(0.0)
+    for v_idx in range(cfg.num_virtual - 1):
+        s, c = v_idx % cfg.stages, v_idx // cfg.stages
+        h, a = chunk_fwd(chunk_params[s][c], h, cfg, s, c)
+        aux = aux + a
+    return last_stage_loss(chunk_params[-1][-1], h, targets, aux, cfg)
 
 
 def full_loss(all_params: list[dict[str, Any]], tokens, targets, cfg: ModelConfig):
     """Single-shot whole-model loss (the functional-equivalence reference of
     §3.3.6: PPMoE's grad accumulation must match this up to fp tolerance)."""
-    h, aux = tokens, jnp.float32(0.0)
-    for s in range(cfg.stages - 1):
-        h, a = stage_fwd(all_params[s], h, cfg, s)
-        aux = aux + a
-    return last_stage_loss(all_params[-1], h, targets, aux, cfg)
+    return full_loss_chunks([[p] for p in all_params], tokens, targets, cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -45,27 +45,43 @@ def unflatten_params(treedef, leaves):
 # ---------------------------------------------------------------------------
 
 
-def _example_x(cfg: ModelConfig, stage: int):
-    if stage == 0:
+def _example_chunk_x(cfg: ModelConfig, stage: int, chunk: int):
+    if stage == 0 and chunk == 0:
         return jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
     return jnp.zeros((cfg.micro_batch, cfg.seq, cfg.hidden), jnp.float32)
 
 
-def make_stage_fwd(cfg: ModelConfig, stage: int, params: dict[str, Any]):
-    """stage_fwd: (params..., x) -> (act, aux)."""
+def _example_x(cfg: ModelConfig, stage: int):
+    return _example_chunk_x(cfg, stage, 0)
+
+
+def make_chunk_fwd(cfg: ModelConfig, stage: int, chunk: int,
+                   params: dict[str, Any]):
+    """chunk_fwd: (params..., x) -> (act, aux).
+
+    Only virtual stage 0 (= stage 0, chunk 0) takes int tokens; chunk c > 0
+    of stage 0 takes the wrap-around activations from the last stage.
+    """
     names, leaves, treedef = flatten_params(params)
 
     def fn(*args):
         p = unflatten_params(treedef, list(args[:-1]))
-        return model.stage_fwd(p, args[-1], cfg, stage)
+        return model.chunk_fwd(p, args[-1], cfg, stage, chunk)
 
-    return fn, [*leaves, _example_x(cfg, stage)], names
+    return fn, [*leaves, _example_chunk_x(cfg, stage, chunk)], names
 
 
-def make_stage_bwd(cfg: ModelConfig, stage: int, params: dict[str, Any]):
-    """stage_bwd: (params..., x, dy, daux) -> (dx?, dparams...).
+def make_stage_fwd(cfg: ModelConfig, stage: int, params: dict[str, Any]):
+    """stage_fwd: (params..., x) -> (act, aux) — single-chunk view."""
+    return make_chunk_fwd(cfg, stage, 0, params)
 
-    dx is emitted only for stage > 0 (stage 0's input is int tokens).
+
+def make_chunk_bwd(cfg: ModelConfig, stage: int, chunk: int,
+                   params: dict[str, Any]):
+    """chunk_bwd: (params..., x, dy, daux) -> (dx?, dparams...).
+
+    dx is emitted for every virtual stage except 0 (whose input is int
+    tokens — nothing upstream consumes a cotangent for it).
     """
     names, leaves, treedef = flatten_params(params)
 
@@ -73,27 +89,33 @@ def make_stage_bwd(cfg: ModelConfig, stage: int, params: dict[str, Any]):
         p_leaves, x, dy, daux = list(args[:-3]), args[-3], args[-2], args[-1]
         p = unflatten_params(treedef, p_leaves)
         _, vjp_fn = jax.vjp(
-            lambda pp, xx: model.stage_fwd(pp, xx, cfg, stage), p, x
+            lambda pp, xx: model.chunk_fwd(pp, xx, cfg, stage, chunk), p, x
         )
         dp, dx = vjp_fn((dy, daux))
         dp_leaves = jax.tree_util.tree_leaves(dp)
-        if stage == 0:
+        if stage == 0 and chunk == 0:
             return tuple(dp_leaves)
         return (dx, *dp_leaves)
 
     dy = jnp.zeros((cfg.micro_batch, cfg.seq, cfg.hidden), jnp.float32)
     daux = jnp.float32(0.0)
-    return fn, [*leaves, _example_x(cfg, stage), dy, daux], names
+    return fn, [*leaves, _example_chunk_x(cfg, stage, chunk), dy, daux], names
+
+
+def make_stage_bwd(cfg: ModelConfig, stage: int, params: dict[str, Any]):
+    """stage_bwd: (params..., x, dy, daux) -> (dx?, dparams...)."""
+    return make_chunk_bwd(cfg, stage, 0, params)
 
 
 def make_last_stage_lossgrad(cfg: ModelConfig, params: dict[str, Any]):
     """lossgrad: (params..., x, targets, aux_in) -> (loss, dx, dparams...).
 
-    The cotangent wrt aux_in is the constant cfg.aux_coef; the L3 trainer
-    passes it straight to earlier stages' `daux`, so it is not re-emitted.
+    Covers the LAST VIRTUAL CHUNK (stage p−1, chunk v−1) — the whole last
+    stage when virtual_stages == 1. The cotangent wrt aux_in is the
+    constant cfg.aux_coef; the L3 trainer passes it straight to earlier
+    chunks' `daux`, so it is not re-emitted.
     """
     names, leaves, treedef = flatten_params(params)
-    stage = cfg.stages - 1
 
     def fn(*args):
         p_leaves, x, tgt, aux_in = list(args[:-3]), args[-3], args[-2], args[-1]
@@ -104,7 +126,7 @@ def make_last_stage_lossgrad(cfg: ModelConfig, params: dict[str, Any]):
         dp, dx = vjp_fn(jnp.float32(1.0))
         return (loss, dx, *jax.tree_util.tree_leaves(dp))
 
-    x = _example_x(cfg, stage)
+    x = _example_chunk_x(cfg, cfg.stages - 1, cfg.virtual_stages - 1)
     tgt = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
     return fn, [*leaves, x, tgt, jnp.float32(0.0)], names
 
@@ -112,14 +134,13 @@ def make_last_stage_lossgrad(cfg: ModelConfig, params: dict[str, Any]):
 def make_last_stage_loss(cfg: ModelConfig, params: dict[str, Any]):
     """Eval-only loss: (params..., x, targets, aux_in) -> (loss,)."""
     names, leaves, treedef = flatten_params(params)
-    stage = cfg.stages - 1
 
     def fn(*args):
         p_leaves, x, tgt, aux_in = list(args[:-3]), args[-3], args[-2], args[-1]
         p = unflatten_params(treedef, p_leaves)
         return (model.last_stage_loss(p, x, tgt, aux_in, cfg),)
 
-    x = _example_x(cfg, stage)
+    x = _example_chunk_x(cfg, cfg.stages - 1, cfg.virtual_stages - 1)
     tgt = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
     return fn, [*leaves, x, tgt, jnp.float32(0.0)], names
 
@@ -143,6 +164,43 @@ def make_full_lossgrad(cfg: ModelConfig, all_params: list[dict[str, Any]]):
 
     leaves = [leaf for f in flat for leaf in f[1]]
     names = [f"stage{s}.{n}" for s, f in enumerate(flat) for n in f[0]]
+    tokens = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
+    targets = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
+    return fn, [*leaves, tokens, targets], names
+
+
+def make_full_lossgrad_chunks(cfg: ModelConfig,
+                              chunk_params: list[list[dict[str, Any]]]):
+    """Whole-model single-shot (loss, grads...) over [stage][chunk]
+    parameters — the interleaved counterpart of `make_full_lossgrad`.
+    Inputs and emitted gradients are both in stage-major (stage, chunk)
+    order, matching the per-stage bin layout."""
+    S, V = cfg.stages, cfg.virtual_stages
+    flat = [[flatten_params(chunk_params[s][c]) for c in range(V)]
+            for s in range(S)]
+
+    def fn(*args):
+        off = 0
+        ps: list[list[Any]] = []
+        for s in range(S):
+            row = []
+            for c in range(V):
+                _, leaves, treedef = flat[s][c]
+                n = len(leaves)
+                row.append(unflatten_params(treedef, list(args[off:off + n])))
+                off += n
+            ps.append(row)
+        tokens, targets = args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda pp: model.full_loss_chunks(pp, tokens, targets, cfg)
+        )(ps)
+        return (loss, *jax.tree_util.tree_leaves(grads))
+
+    leaves = [leaf for row in flat for f in row for leaf in f[1]]
+    names = [
+        f"stage{s}.chunk{c}.{n}"
+        for s in range(S) for c in range(V) for n in flat[s][c][0]
+    ]
     tokens = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
     targets = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
     return fn, [*leaves, tokens, targets], names

@@ -158,3 +158,133 @@ def test_aot_export_tiny(tmp_path):
         for p in st_entry["params"]:
             assert p["offset"] == off
             off += p["numel"] * 4
+
+
+# ---------------------------------------------------------------------------
+# Interleaved virtual-stage chunking (docs/schedules.md)
+# ---------------------------------------------------------------------------
+
+CFG_V2 = ModelConfig(vocab=64, hidden=32, ffn=64, layers=4, heads=2,
+                     experts=4, seq=16, micro_batch=2, stages=2,
+                     virtual_stages=2, block_c=16, block_t=32)
+
+
+def test_init_chunks_v1_bitwise_matches_init_all():
+    """virtual_stages == 1: the chunked init is the plain init, bitwise."""
+    key = jax.random.PRNGKey(0)
+    plain = model.init_all(key, CFG)
+    chunked = model.init_all_chunks(key, CFG)
+    assert len(chunked) == CFG.stages and all(len(c) == 1 for c in chunked)
+    for s in range(CFG.stages):
+        pa = jax.tree_util.tree_leaves_with_path(plain[s])
+        pb = jax.tree_util.tree_leaves_with_path(chunked[s][0])
+        assert len(pa) == len(pb)
+        for (ka, a), (kb, b) in zip(pa, pb):
+            assert ka == kb
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunk_layer_partition():
+    """Chunks partition the layer range: virtual stage V = c*p + s owns
+    [V*n, (V+1)*n) — non-contiguous per physical stage."""
+    cfg = CFG_V2
+    n = cfg.layers // cfg.num_virtual
+    covered = []
+    for c in range(cfg.virtual_stages):
+        for s in range(cfg.stages):
+            v_idx = c * cfg.stages + s
+            covered += list(range(v_idx * n, (v_idx + 1) * n))
+    assert sorted(covered) == list(range(cfg.layers))
+    # stage 0 at v=2, p=2 owns layers {0} and {2} — not contiguous
+    s0 = [c * cfg.stages * n + 0 for c in range(cfg.virtual_stages)]
+    assert s0 == [0, 2]
+
+
+def test_chunk_ring_composition_equals_full_loss():
+    """Chaining chunk_fwd around the virtual ring (with the wrap-around
+    edges the live trainer implements as p2p channels) + the loss head
+    equals the single-shot full_loss_chunks."""
+    cfg = CFG_V2
+    cp = model.init_all_chunks(jax.random.PRNGKey(2), cfg)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    tokens = jax.random.randint(k1, (cfg.micro_batch, cfg.seq), 0, cfg.vocab)
+    targets = jax.random.randint(k2, (cfg.micro_batch, cfg.seq), 0, cfg.vocab)
+
+    h, aux = tokens, jnp.float32(0.0)
+    for v_idx in range(cfg.num_virtual - 1):
+        s, c = v_idx % cfg.stages, v_idx // cfg.stages
+        h, a = model.chunk_fwd(cp[s][c], h, cfg, s, c)
+        aux = aux + a
+    loss_ring = model.last_stage_loss(cp[-1][-1], h, targets, aux, cfg)
+    loss_full = model.full_loss_chunks(cp, tokens, targets, cfg)
+    np.testing.assert_allclose(float(loss_ring), float(loss_full), rtol=1e-6)
+
+
+def test_chunkwise_grads_equal_full_grads():
+    """Interleaved §3.3.6: manually chaining chunk vjps around the ring —
+    exactly what the interleaved trainer executes — must equal the
+    single-shot jax.grad of full_loss_chunks."""
+    cfg = CFG_V2
+    cp = model.init_all_chunks(jax.random.PRNGKey(2), cfg)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    tokens = jax.random.randint(k1, (cfg.micro_batch, cfg.seq), 0, cfg.vocab)
+    targets = jax.random.randint(k2, (cfg.micro_batch, cfg.seq), 0, cfg.vocab)
+
+    loss_full, g_full = jax.value_and_grad(
+        lambda ps: model.full_loss_chunks(ps, tokens, targets, cfg))(cp)
+
+    # forward sweep in ring order, stashing inputs
+    order = [(v % cfg.stages, v // cfg.stages) for v in range(cfg.num_virtual)]
+    xs, h, aux = [], tokens, jnp.float32(0.0)
+    for (s, c) in order[:-1]:
+        xs.append(h)
+        h, a = model.chunk_fwd(cp[s][c], h, cfg, s, c)
+        aux = aux + a
+    # loss chunk: fused fwd+loss vjp
+    (s_l, c_l) = order[-1]
+    loss, vjp_loss = jax.vjp(
+        lambda p, x: model.last_stage_loss(p, x, targets, aux, cfg),
+        cp[s_l][c_l], h)
+    np.testing.assert_allclose(float(loss), float(loss_full), rtol=1e-6)
+    dp_last, dh = vjp_loss(jnp.float32(1.0))
+    grads = {order[-1]: dp_last}
+    # backward sweep in reverse ring order, threading dy and the constant
+    # aux cotangent (the trainer's daux input)
+    for (s, c), x in zip(reversed(order[:-1]), reversed(xs)):
+        _, vjp_fn = jax.vjp(
+            lambda p, xx, s=s, c=c: model.chunk_fwd(p, xx, cfg, s, c),
+            cp[s][c], x)
+        dp, dh = vjp_fn((dh, jnp.float32(cfg.aux_coef)))
+        grads[(s, c)] = dp
+    for (s, c) in order:
+        for a, b in zip(jax.tree_util.tree_leaves(grads[(s, c)]),
+                        jax.tree_util.tree_leaves(g_full[s][c])):
+            np.testing.assert_allclose(a, b, rtol=5e-4, atol=1e-6)
+
+
+def test_aot_export_chunked(tmp_path):
+    """AOT smoke at virtual_stages = 2: per-chunk artifacts + chunks table."""
+    import json
+
+    from compile import aot
+    out = str(tmp_path / "arts_v2")
+    aot.export("tiny-deep", out, tp=2, seed=0, include_full=False, virtual=2)
+    with open(os.path.join(out, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["config"]["virtual_stages"] == 2
+    assert len(m["chunks"]) == 2 and all(len(c) == 2 for c in m["chunks"])
+    # chunk param counts partition each stage's param list
+    for st_entry, chunk_row in zip(m["stages"], m["chunks"]):
+        assert sum(c["params"] for c in chunk_row) == len(st_entry["params"])
+    # the loss chunk is fused into lossgrad; every other chunk has fwd+bwd
+    assert m["chunks"][-1][-1]["fwd"] is None
+    assert m["chunks"][-1][-1]["bwd"] == "lossgrad"
+    for name in ("stage0_chunk0_fwd", "stage0_chunk1_fwd", "stage1_chunk0_bwd",
+                 "lossgrad", "loss_eval"):
+        assert name in m["artifacts"], name
+        assert os.path.exists(os.path.join(out, m["artifacts"][name]["file"]))
+    # chunk 1 of stage 0 takes wrap-around ACTIVATIONS, not tokens
+    c1 = m["artifacts"]["stage0_chunk1_fwd"]
+    assert c1["inputs"][-1]["dtype"] == "f32"
+    c0 = m["artifacts"]["stage0_chunk0_fwd"]
+    assert c0["inputs"][-1]["dtype"] == "i32"

@@ -77,7 +77,8 @@ fn main() -> anyhow::Result<()> {
          per-step dynamic-slice overhead, so the measured ratio approaches\n\
          O(E)={e} here — an interpret-mode artifact, not a property of the\n\
          kernel: on TPU the (E, C/blk) grid is weight-stationary and each\n\
-         step still saturates the MXU (DESIGN.md §3, EXPERIMENTS.md §Perf).\n\
+         step still saturates the MXU (EXPERIMENTS.md §Serialization and\n\
+         §Perf knobs).\n\
          The honest CPU-side conclusion matches footnote 6's caveat: the\n\
          claim rests on well-optimized device kernels."
     );

@@ -1,4 +1,4 @@
-//! Bench: L3 coordinator hot paths (the perf-pass targets of DESIGN §7).
+//! Bench: L3 coordinator hot paths (the docs/hotpath.md components).
 //!
 //! * router dispatch (route_top1) across token/expert scales
 //! * in-process all-reduce: legacy single-accumulator vs chunked
@@ -18,6 +18,7 @@ use std::sync::Arc;
 
 use ppmoe::comm::{Algo, AllReduceGroup};
 use ppmoe::moe::{route_top1, synth_logits};
+use ppmoe::pipeline::interleaved::{interleaved_bubble, simulate_interleaved};
 use ppmoe::pipeline::{analytic_bubble, simulate, Schedule, StageTiming};
 use ppmoe::runtime::Tensor;
 use ppmoe::trainer::adam::{global_grad_norm, Adam};
@@ -91,6 +92,25 @@ fn main() {
             assert!((s.bubble_fraction - analytic_bubble(stages, micros)).abs() < 0.5);
             s.makespan
         }));
+    }
+
+    println!("\n=== interleaved schedule simulation (v virtual chunks) ===");
+    for (stages, micros, v) in [(4, 16, 2), (4, 16, 4), (16, 64, 4)] {
+        let timing = vec![StageTiming { fwd: 1.0, bwd: 2.0, p2p: 0.1 }; stages];
+        results.push(bench(
+            &format!("simulate/interleaved p={stages} m={micros} v={v}"),
+            || {
+                let s = simulate_interleaved(&timing, micros, v);
+                // (p−1)/(v·m+p−1) is the zero-p2p floor on balanced
+                // stages; with p2p > 0 the event sim of the real schedule
+                // may only ever sit at or above it
+                assert!(
+                    s.bubble_fraction + 1e-9 >= interleaved_bubble(stages, micros, v),
+                    "simulated bubble fell below the analytic floor"
+                );
+                s.makespan
+            },
+        ));
     }
 
     println!("\n=== grad-clip + Adam (three passes vs fused sweep) ===");

@@ -28,6 +28,16 @@ fn main() {
         rows[12].tokens_per_sec_per_gpu / best(9..12)
     );
 
+    println!("\n=== Table 2 variant: interleaved virtual-stage 1F1B ===");
+    print!("{}", tables::table2_interleaved_markdown().unwrap());
+    println!(
+        "(bubble shrinks as (p-1)/(m+p-1) -> (p-1)/(v*m+p-1); each microbatch\n\
+         pays the stage-boundary p2p cost v times — docs/schedules.md)"
+    );
+
     println!("\n=== simulator cost ===");
     bench("table2_full_sweep", || tables::table2_rows().unwrap().len());
+    bench("table2_interleaved_sweep", || {
+        tables::table2_interleaved_rows().unwrap().len()
+    });
 }

@@ -14,6 +14,7 @@ use anyhow::bail;
 pub struct DeviceId(pub usize);
 
 impl DeviceId {
+    /// Node index this device lives on.
     pub fn node(&self, c: &ClusterCfg) -> usize {
         self.0 / c.gpus_per_node
     }
@@ -22,11 +23,15 @@ impl DeviceId {
 /// Link class between two devices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Link {
-    Local,     // same device
-    InnerNode, // NVLink
-    InterNode, // InfiniBand
+    /// Same device.
+    Local,
+    /// Same node (NVLink).
+    InnerNode,
+    /// Across nodes (InfiniBand).
+    InterNode,
 }
 
+/// Classify the link between two devices.
 pub fn link(a: DeviceId, b: DeviceId, c: &ClusterCfg) -> Link {
     if a == b {
         Link::Local
@@ -40,8 +45,11 @@ pub fn link(a: DeviceId, b: DeviceId, c: &ClusterCfg) -> Link {
 /// Logical coordinate in the parallel mesh.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Coord {
+    /// Pipeline-stage index.
     pub pp: usize,
+    /// Data-parallel replica index.
     pub dp: usize,
+    /// Tensor-parallel rank index.
     pub tp: usize,
 }
 
@@ -52,11 +60,14 @@ pub struct Coord {
 /// next, and pipeline stages land on distinct node groups.
 #[derive(Debug, Clone)]
 pub struct Mesh {
+    /// Parallel layout being mapped.
     pub cfg: ParallelCfg,
+    /// Physical cluster description.
     pub cluster: ClusterCfg,
 }
 
 impl Mesh {
+    /// Build a mesh, checking the layout fits the cluster.
     pub fn new(cfg: ParallelCfg, cluster: ClusterCfg) -> anyhow::Result<Self> {
         if cfg.world() > cluster.gpus {
             bail!("mesh needs {} devices, cluster has {}", cfg.world(), cluster.gpus);
@@ -64,11 +75,13 @@ impl Mesh {
         Ok(Mesh { cfg, cluster })
     }
 
+    /// Physical device of a mesh coordinate.
     pub fn device(&self, c: Coord) -> DeviceId {
         debug_assert!(c.tp < self.cfg.tp && c.dp < self.cfg.dp && c.pp < self.cfg.pp);
         DeviceId(c.tp + self.cfg.tp * (c.dp + self.cfg.dp * c.pp))
     }
 
+    /// Mesh coordinate of a physical device.
     pub fn coord(&self, d: DeviceId) -> Coord {
         let tp = d.0 % self.cfg.tp;
         let dp = (d.0 / self.cfg.tp) % self.cfg.dp;

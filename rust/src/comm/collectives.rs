@@ -127,10 +127,12 @@ impl AllReduceGroup {
         })
     }
 
+    /// Participant count.
     pub fn ranks(&self) -> usize {
         self.n
     }
 
+    /// Which reduction algorithm this group runs.
     pub fn algo(&self) -> Algo {
         self.algo
     }
@@ -318,10 +320,12 @@ pub struct Barrier {
 }
 
 impl Barrier {
+    /// Reusable barrier over `n` participants.
     pub fn new(n: usize) -> Arc<Self> {
         Arc::new(Barrier { n, state: Mutex::new((0, 0)), cv: Condvar::new() })
     }
 
+    /// Block until all `n` participants arrive.
     pub fn wait(&self) {
         let mut st = self.state.lock().unwrap();
         let my_gen = st.0;

@@ -12,17 +12,21 @@ use crate::config::ClusterCfg;
 /// Cost (seconds) of a collective.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CommCost {
+    /// Wall-clock seconds.
     pub seconds: f64,
+    /// Total bytes crossing links.
     pub bytes_on_wire: f64,
 }
 
 /// α-β cost model over a cluster description.
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// Cluster constants the costs derive from.
     pub cluster: ClusterCfg,
 }
 
 impl CostModel {
+    /// Cost model over a cluster description.
     pub fn new(cluster: ClusterCfg) -> Self {
         CostModel { cluster }
     }

@@ -14,15 +14,25 @@ use anyhow::{bail, Context};
 /// Transformer architecture dimensions (paper notation: h, s, b, E, L).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelDims {
+    /// Preset name (for table rows).
     pub name: String,
+    /// Hidden width h.
     pub hidden: usize,       // h
+    /// FFN width (usually 4h).
     pub ffn: usize,          // usually 4h
+    /// Transformer layer count L.
     pub layers: usize,       // L
+    /// Attention heads.
     pub heads: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sequence length s.
     pub seq: usize,          // s
+    /// Expert count E (1 = dense).
     pub experts: usize,      // E (1 = dense)
+    /// MoE on every `moe_every`-th FFN (0 = never).
     pub moe_every: usize,    // MoE on every `moe_every`-th FFN (2 = every other)
+    /// Gating schedule (paper: top-1).
     pub top_k: usize,        // gating schedule (paper: top-1)
 }
 
@@ -36,6 +46,7 @@ impl ModelDims {
         }
     }
 
+    /// Number of non-MoE FFN layers.
     pub fn dense_ffn_layers(&self) -> usize {
         self.layers - self.moe_layers()
     }
@@ -74,11 +85,17 @@ impl ModelDims {
 /// Parallel layout: the (DP, TP, PP, EP) tuple of Table 2, plus ZeRO.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParallelCfg {
+    /// Data-parallel world size.
     pub dp: usize,
+    /// Tensor-parallel world size.
     pub tp: usize,
+    /// Pipeline-parallel world size.
     pub pp: usize,
+    /// Expert-parallel world size (DPMoE: ==dp; PPMoE: ==tp).
     pub ep: usize, // expert-parallel world size (DPMoE: ==dp; PPMoE: ==tp)
+    /// ZeRO optimizer-state sharding.
     pub zero: bool,
+    /// Which MoE architecture this layout runs.
     pub scheme: Scheme,
 }
 
@@ -95,6 +112,7 @@ pub enum Scheme {
 }
 
 impl ParallelCfg {
+    /// Total devices the layout occupies.
     pub fn world(&self) -> usize {
         self.dp * self.tp * self.pp
     }
@@ -148,8 +166,11 @@ impl ParallelCfg {
 /// Hardware model: the paper's V100 constants (§3.2) by default.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterCfg {
+    /// Cluster preset name.
     pub name: String,
+    /// Total GPU count.
     pub gpus: usize,
+    /// GPUs per node (8 on the paper testbed).
     pub gpus_per_node: usize,
     /// Per-device peak FLOP/s (paper: F = 125e12, V100 fp16).
     pub flops: f64,
@@ -174,11 +195,14 @@ pub struct ClusterCfg {
 /// Training setup: batch geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TrainCfg {
+    /// Sequences per microbatch per replica.
     pub micro_batch: usize,   // b per microbatch per replica
+    /// Microbatches per global batch (pipeline depth m).
     pub num_micro: usize,     // microbatches per global batch (PP depth m)
 }
 
 impl TrainCfg {
+    /// Tokens processed per global step across `dp` replicas.
     pub fn global_tokens(&self, m: &ModelDims, dp: usize) -> usize {
         self.micro_batch * self.num_micro * m.seq * dp
     }
@@ -257,6 +281,7 @@ pub fn v100_cluster(n: usize) -> ClusterCfg {
     }
 }
 
+/// Look up a model preset by name (for the CLI).
 pub fn model_preset(name: &str) -> anyhow::Result<ModelDims> {
     Ok(match name {
         "gpt3-medium" | "0.3b" => gpt3_medium(),
@@ -287,6 +312,7 @@ pub fn parse_kv(text: &str) -> anyhow::Result<BTreeMap<String, String>> {
     Ok(map)
 }
 
+/// Parse a `key = value` config file (offline substitute for toml).
 pub fn load_kv(path: &Path) -> anyhow::Result<BTreeMap<String, String>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;

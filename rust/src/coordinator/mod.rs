@@ -5,7 +5,10 @@
 
 pub mod tables;
 
-pub use tables::{table1_markdown, table2_markdown, table2_rows, table3_markdown};
+pub use tables::{
+    table1_markdown, table2_interleaved_markdown, table2_interleaved_rows, table2_markdown,
+    table2_rows, table3_markdown,
+};
 
 use std::collections::BTreeMap;
 
@@ -13,8 +16,11 @@ use std::collections::BTreeMap;
 /// `--key value`, `--flag`, and positional arguments.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Positional arguments in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Boolean `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -22,6 +28,7 @@ pub struct Args {
 const KNOWN_FLAGS: &[&str] = &["gpipe", "zero", "verbose", "help", "no-full"];
 
 impl Args {
+    /// Parse an argv iterator (without the program name).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
         let mut args = Args::default();
         let mut iter = argv.into_iter().peekable();
@@ -49,10 +56,12 @@ impl Args {
         args
     }
 
+    /// An option's raw value.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// An integer option with a default.
     pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -62,6 +71,7 @@ impl Args {
         }
     }
 
+    /// A float option with a default.
     pub fn get_f32(&self, key: &str, default: f32) -> anyhow::Result<f32> {
         match self.get(key) {
             None => Ok(default),
@@ -71,6 +81,7 @@ impl Args {
         }
     }
 
+    /// Whether a boolean flag was passed.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

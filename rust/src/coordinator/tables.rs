@@ -17,14 +17,23 @@ use crate::sim::{Breakdown, Component, Simulator};
 /// One row of Table 2.
 #[derive(Debug, Clone)]
 pub struct ThroughputRow {
+    /// Model preset name.
     pub model: String,
+    /// Data-parallel world size.
     pub dp: usize,
+    /// Tensor-parallel world size.
     pub tp: usize,
+    /// Pipeline-parallel world size.
     pub pp: usize,
+    /// Expert count E.
     pub experts: usize,
+    /// ZeRO sharding on.
     pub zero: bool,
+    /// Cluster size.
     pub gpus: usize,
+    /// Simulated throughput.
     pub tokens_per_sec_per_gpu: f64,
+    /// Versus the slowest dense baseline (None for dense rows).
     pub speed_ratio: Option<f64>, // vs the slowest dense baseline
 }
 
@@ -150,6 +159,50 @@ pub fn table2_markdown() -> anyhow::Result<String> {
         .collect();
     Ok(markdown_table(
         &["Model", "DP", "TP", "PP", "E", "ZeRO", "Cluster", "Tput (tok/s/GPU)", "Speed Ratio"],
+        &body,
+    ))
+}
+
+/// The interleaved variant of Table 2's PPMoE rows: both PPMoE layouts
+/// re-simulated with `v` ∈ {1, 2, 4} virtual chunks per stage (§3.3.5's
+/// Megatron-composition ablation, now on the same event simulation the
+/// live trainer's schedule comes from). Returns (model, pp, v, tput,
+/// bubble) tuples.
+pub fn table2_interleaved_rows() -> anyhow::Result<Vec<(String, usize, usize, f64, f64)>> {
+    let m67 = moe_small_setting();
+    let m143 = moe_large_setting();
+    let spec: Vec<(ModelDims, usize, usize, usize)> =
+        vec![(m67, 8, 4, 32), (m143, 8, 16, 128)];
+    let mut rows = Vec::new();
+    for (m, tp, pp, gpus) in &spec {
+        let p = cfg(1, *tp, *pp, false, Scheme::PpMoE, m.experts);
+        let sim = Simulator::new(m.clone(), p, v100_cluster(*gpus))?;
+        for v in [1usize, 2, 4] {
+            // num_micro from the fixed global batch is a multiple of every
+            // pp here, as the interleaved schedule requires
+            let r = sim.step_virtual(sweep_tc(1), v);
+            rows.push((m.name.clone(), *pp, v, r.tokens_per_sec_per_gpu, r.bubble_fraction));
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the interleaved Table 2 variant as markdown.
+pub fn table2_interleaved_markdown() -> anyhow::Result<String> {
+    let body: Vec<Vec<String>> = table2_interleaved_rows()?
+        .iter()
+        .map(|(model, pp, v, tput, bubble)| {
+            vec![
+                model.clone(),
+                pp.to_string(),
+                v.to_string(),
+                format!("{tput:.0}"),
+                pct(*bubble),
+            ]
+        })
+        .collect();
+    Ok(markdown_table(
+        &["Model", "PP", "v", "Tput (tok/s/GPU)", "Bubble"],
         &body,
     ))
 }

@@ -1,7 +1,7 @@
 //! Synthetic corpus generation (substitute for the paper's private corpus).
 //!
 //! Fig. 5 verifies convergence/stability, not corpus-specific quality, so
-//! any *learnable* distribution suffices (DESIGN.md §2). We generate a
+//! any *learnable* distribution suffices (EXPERIMENTS.md §Loss curve). We generate a
 //! Zipf-Markov token stream: a deterministic per-token successor table
 //! followed with probability `coherence`, otherwise a Zipf-distributed
 //! draw — giving the model both bigram structure to learn quickly and a
@@ -18,7 +18,9 @@ use crate::util::prng::Rng;
 /// which is what Fig. 5's MoE-below-dense gap demonstrates.
 #[derive(Debug, Clone)]
 pub struct Corpus {
+    /// Vocabulary size tokens draw from.
     pub vocab: usize,
+    /// Distinct successor-table domains (topic shift rate).
     pub domains: usize,
     coherence: f64,
     successor: Vec<u32>, // domains × vocab, row-major
@@ -29,14 +31,17 @@ pub struct Corpus {
 }
 
 impl Corpus {
+    /// Corpus with the default coherence/domain mix.
     pub fn new(vocab: usize, seed: u64) -> Corpus {
         Corpus::with_params(vocab, seed, 0.9, 8)
     }
 
+    /// Corpus with an explicit bigram-coherence probability.
     pub fn with_coherence(vocab: usize, seed: u64, coherence: f64) -> Corpus {
         Corpus::with_params(vocab, seed, coherence, 1)
     }
 
+    /// Fully parameterized corpus.
     pub fn with_params(vocab: usize, seed: u64, coherence: f64, domains: usize) -> Corpus {
         assert!(vocab >= 2 && domains >= 1);
         let mut rng = Rng::new(seed);

@@ -1,11 +1,12 @@
 //! PPMoE — reproduction of *"Pipeline MoE: A Flexible MoE Implementation
 //! with Pipeline Parallelism"* (Chen et al., Huawei Cloud, 2023).
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (see README.md):
 //! * **L1** — Pallas grouped-expert-FFN / router kernels (`python/compile/kernels`)
 //! * **L2** — JAX transformer fwd/bwd, AOT-lowered to HLO text (`python/compile`)
 //! * **L3** — this crate: the coordination contribution of the paper.
-//!   Routing, microbatch pipeline scheduling (1F1B), TP×EP expert placement,
+//!   Routing, microbatch pipeline scheduling (1F1B / GPipe / interleaved
+//!   virtual stages), TP×EP expert placement,
 //!   in-process collectives, the discrete-event cluster simulator that
 //!   regenerates the paper's tables, and the PJRT runtime that executes the
 //!   AOT artifacts. Python never runs on the training hot path.
@@ -14,6 +15,8 @@
 //! serde, criterion and proptest are unavailable, so the crate ships its own
 //! minimal JSON parser (`util::json`), CLI parsing (`main.rs`), bench harness
 //! (`util::bench`), and property-test driver (`util::prop`) instead.
+
+#![warn(missing_docs)]
 
 pub mod cluster;
 pub mod comm;

@@ -28,6 +28,9 @@ COMMANDS:
                 --lr F            (default: 1e-3)
                 --seed N          (default: 0)
                 --gpipe           use GPipe schedule instead of 1F1B
+                --virtual N       interleaved 1F1B with N virtual chunks per
+                                  stage (must match the artifacts' export;
+                                  default: follow the manifest)
   sweep       print Table 2 (simulated throughput, 13 rows)
   breakdown   print Tables 1 and 3 (simulated forward breakdowns)
   simulate    one point: --model NAME --dp N --tp N --pp N
@@ -81,6 +84,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         log_every: args.get_usize("log-every", 10)?,
         grad_clip: Some(1.0),
         schedule: if args.has_flag("gpipe") { Schedule::GPipe } else { Schedule::OneFOneB },
+        virtual_stages: args.get_usize("virtual", 0)?,
         warmup_steps: args.get_usize("warmup", 0)?,
         checkpoint_dir: args.get("checkpoint").map(PathBuf::from),
     };

@@ -14,6 +14,7 @@ pub struct Timers {
 }
 
 impl Timers {
+    /// Empty timer set.
     pub fn new() -> Self {
         Self::default()
     }
@@ -26,6 +27,7 @@ impl Timers {
         r
     }
 
+    /// Add seconds to a named bucket.
     pub fn add(&mut self, name: &str, secs: f64) {
         *self.acc.entry(name.to_string()).or_insert(0.0) += secs;
         *self.counts.entry(name.to_string()).or_insert(0) += 1;
@@ -38,18 +40,22 @@ impl Timers {
         *self.counts.entry(name.to_string()).or_insert(0) += n;
     }
 
+    /// A bucket's accumulated seconds.
     pub fn get(&self, name: &str) -> f64 {
         self.acc.get(name).copied().unwrap_or(0.0)
     }
 
+    /// A named counter's value.
     pub fn count(&self, name: &str) -> u64 {
         self.counts.get(name).copied().unwrap_or(0)
     }
 
+    /// Sum over all time buckets.
     pub fn total(&self) -> f64 {
         self.acc.values().sum()
     }
 
+    /// Fold another timer set's buckets into this one.
     pub fn merge(&mut self, other: &Timers) {
         for (k, v) in &other.acc {
             *self.acc.entry(k.clone()).or_insert(0.0) += v;
@@ -73,7 +79,9 @@ impl Timers {
 #[derive(Debug)]
 pub struct Throughput {
     start: Instant,
+    /// Tokens processed so far.
     pub tokens: u64,
+    /// Steps recorded so far.
     pub steps: u64,
 }
 
@@ -84,15 +92,18 @@ impl Default for Throughput {
 }
 
 impl Throughput {
+    /// Start counting now.
     pub fn new() -> Self {
         Throughput { start: Instant::now(), tokens: 0, steps: 0 }
     }
 
+    /// Record one step of `tokens`.
     pub fn record(&mut self, tokens: u64) {
         self.tokens += tokens;
         self.steps += 1;
     }
 
+    /// Throughput since construction.
     pub fn tokens_per_sec(&self) -> f64 {
         self.tokens as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
     }

@@ -10,11 +10,14 @@ use crate::config::ModelDims;
 /// Per-microbatch geometry.
 #[derive(Debug, Clone, Copy)]
 pub struct Batch {
+    /// Sequences per microbatch.
     pub b: usize, // sequences per microbatch
+    /// Tokens per sequence.
     pub s: usize, // tokens per sequence
 }
 
 impl Batch {
+    /// Tokens in the microbatch (b·s).
     pub fn tokens(&self) -> usize {
         self.b * self.s
     }
@@ -74,6 +77,7 @@ pub fn model_train_flops(m: &ModelDims, bt: Batch) -> f64 {
     3.0 * model_fwd_flops(m, bt)
 }
 
+/// Whether `layer` carries an MoE FFN under the preset cadence.
 pub fn is_moe_layer(m: &ModelDims, layer: usize) -> bool {
     m.experts > 1 && m.moe_every > 0 && layer % m.moe_every == m.moe_every - 1
 }

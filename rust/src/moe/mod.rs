@@ -12,11 +12,17 @@ use crate::util::prng::Rng;
 /// Top-1 routing decision for a batch of tokens.
 #[derive(Debug, Clone)]
 pub struct Routing {
+    /// Chosen expert per token.
     pub expert: Vec<u32>,   // chosen expert per token
+    /// Gate probability of the chosen expert.
     pub gate: Vec<f32>,     // gate probability of the chosen expert
+    /// Position within the expert's capacity slab.
     pub slot: Vec<u32>,     // position within the expert's capacity slab
+    /// True if the token overflowed capacity.
     pub dropped: Vec<bool>, // true if the token overflowed capacity
+    /// Expert count E.
     pub num_experts: usize,
+    /// Per-expert capacity C.
     pub capacity: usize,
 }
 
@@ -65,6 +71,7 @@ pub fn route_top1(logits: &[f32], num_experts: usize, capacity: usize) -> Routin
 }
 
 impl Routing {
+    /// Number of routed tokens.
     pub fn tokens(&self) -> usize {
         self.expert.len()
     }
@@ -93,6 +100,7 @@ impl Routing {
         e * acc
     }
 
+    /// Fraction of tokens dropped by the capacity limit.
     pub fn drop_fraction(&self) -> f64 {
         self.dropped.iter().filter(|d| **d).count() as f64 / self.tokens().max(1) as f64
     }

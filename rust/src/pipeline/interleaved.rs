@@ -4,30 +4,32 @@
 //! Each physical stage holds `v` non-contiguous model chunks ("virtual
 //! stages"), shrinking the bubble from (p−1)/(m+p−1) to (p−1)/(v·m+p−1) at
 //! the price of v× more p2p traffic. PPMoE composes with this unchanged
-//! (its MoE layers are stage-local); the ablation bench quantifies the
-//! bubble/traffic trade-off the paper's §3.3.5 leaves implicit.
+//! (its MoE layers are stage-local); since PR 2 the schedule here is the
+//! one the live trainer executes — [`simulate_interleaved`] runs the exact
+//! per-stage op order of [`super::schedule_virtual`] through the
+//! dependency-respecting event simulation, wrap-around chunk edges
+//! included, instead of the earlier flat v·m-microbatch approximation.
+//! See docs/schedules.md for the bubble algebra and the trade-off data.
 
-use super::{analytic_bubble, simulate, PipeSim, Schedule, StageTiming};
+use super::{analytic_bubble, simulate_virtual, PipeSim, Schedule, StageTiming};
 
 /// Analytic bubble fraction with `v` virtual chunks per stage.
 pub fn interleaved_bubble(stages: usize, micros: usize, v: usize) -> f64 {
     (stages as f64 - 1.0) / (v as f64 * micros as f64 + stages as f64 - 1.0)
 }
 
-/// Simulate interleaved 1F1B by expanding each microbatch into `v` chunk
-/// passes with 1/v of the per-stage work and v× the boundary traffic.
+/// Simulate interleaved 1F1B: `v` chunks per stage, each costing 1/v of the
+/// per-stage fwd/bwd time and one full p2p crossing per chunk boundary.
+///
+/// Requires `micros % stages == 0` when `v > 1` (the Megatron grouping
+/// constraint); `v = 1` is plain 1F1B on any geometry.
 pub fn simulate_interleaved(
     timing: &[StageTiming],
     micros: usize,
     v: usize,
 ) -> PipeSim {
     assert!(v >= 1);
-    let chunked: Vec<StageTiming> = timing
-        .iter()
-        .map(|t| StageTiming { fwd: t.fwd / v as f64, bwd: t.bwd / v as f64, p2p: t.p2p })
-        .collect();
-    // v chunks per microbatch behave like v·m microbatches of 1/v work
-    simulate(Schedule::OneFOneB, &chunked, micros * v)
+    simulate_virtual(Schedule::OneFOneB, timing, micros, v)
 }
 
 /// Extra p2p bytes factor of interleaving (v× boundary crossings).
@@ -38,6 +40,7 @@ pub fn interleaved_p2p_factor(v: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::simulate;
 
     fn balanced(stages: usize) -> Vec<StageTiming> {
         vec![StageTiming { fwd: 1.0, bwd: 2.0, p2p: 0.0 }; stages]
@@ -59,6 +62,27 @@ mod tests {
         assert!(b4 < b1 / 2.0, "b1={b1} b4={b4}");
         // matches the analytic form
         assert!((b4 - interleaved_bubble(8, 8, 4)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simulated_bubble_matches_analytic_across_v() {
+        // the acceptance bar: on balanced stages with free p2p the event
+        // simulation of the REAL schedule lands exactly on
+        // (p−1)/(v·m+p−1), for every v the live trainer supports
+        for stages in [2usize, 4, 6] {
+            for mult in [1usize, 2, 4] {
+                let micros = stages * mult;
+                for v in [1usize, 2, 4] {
+                    let sim = simulate_interleaved(&balanced(stages), micros, v);
+                    let expect = interleaved_bubble(stages, micros, v);
+                    assert!(
+                        (sim.bubble_fraction - expect).abs() < 1e-9,
+                        "p={stages} m={micros} v={v}: sim {} vs analytic {expect}",
+                        sim.bubble_fraction
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,70 +1,175 @@
-//! Pipeline-parallel schedules: 1F1B (PipeDream-flush, Fig. 2) and GPipe.
+//! Pipeline-parallel schedules: 1F1B (PipeDream-flush, Fig. 2), GPipe, and
+//! interleaved virtual-stage 1F1B (Megatron-LM; see [`interleaved`]).
 //!
 //! Two layers of functionality:
-//! * **Schedule generation** — the exact (stage, microbatch, F/B) order the
-//!   real trainer executes. 1F1B warms up with `p - s` forwards on stage s,
-//!   then alternates one-forward-one-backward, then drains.
+//! * **Schedule generation** — the exact (stage, microbatch, chunk, F/B)
+//!   order the real trainer executes. Every generator is chunk-aware: with
+//!   `v` virtual chunks per physical stage each microbatch crosses every
+//!   stage `v` times, and plain 1F1B/GPipe are the `v = 1` special case
+//!   (bitwise — see the `virtual_v1_*` tests).
 //! * **Schedule simulation** — given per-stage fwd/bwd/p2p times, compute
-//!   the step makespan by dependency-respecting event simulation. Bubble
-//!   fraction falls out as (makespan − ideal) / makespan; for both 1F1B and
-//!   GPipe it should match the analytic (p−1)/(m+p−1).
+//!   the step makespan by dependency-respecting event simulation over the
+//!   *real* interleaved dependency DAG (including the chunk wrap-around
+//!   edges stage p−1 → stage 0). Bubble fraction falls out as
+//!   (makespan − ideal) / makespan; for balanced stages it matches the
+//!   analytic (p−1)/(m+p−1), generalizing to (p−1)/(v·m+p−1) — see
+//!   docs/schedules.md for the algebra.
 
 pub mod interleaved;
 
-/// One pipeline operation.
+/// One pipeline operation: a forward or backward pass of one microbatch
+/// through one of the stage's virtual chunks (`chunk == 0` when the stage
+/// holds a single contiguous model slice).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Op {
-    Fwd { micro: usize },
-    Bwd { micro: usize },
+    /// Forward pass of `micro` through virtual chunk `chunk`.
+    Fwd {
+        /// Microbatch index within the global batch.
+        micro: usize,
+        /// Virtual chunk index on this stage (0 for plain schedules).
+        chunk: usize,
+    },
+    /// Backward pass of `micro` through virtual chunk `chunk`.
+    Bwd {
+        /// Microbatch index within the global batch.
+        micro: usize,
+        /// Virtual chunk index on this stage (0 for plain schedules).
+        chunk: usize,
+    },
+}
+
+impl Op {
+    /// The microbatch this op processes.
+    pub fn micro(&self) -> usize {
+        match *self {
+            Op::Fwd { micro, .. } | Op::Bwd { micro, .. } => micro,
+        }
+    }
+
+    /// The virtual chunk this op runs on.
+    pub fn chunk(&self) -> usize {
+        match *self {
+            Op::Fwd { chunk, .. } | Op::Bwd { chunk, .. } => chunk,
+        }
+    }
+
+    /// Whether this is a forward op.
+    pub fn is_fwd(&self) -> bool {
+        matches!(self, Op::Fwd { .. })
+    }
 }
 
 /// Kind of schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Schedule {
+    /// PipeDream-flush one-forward-one-backward.
     OneFOneB,
+    /// All forwards, then all backwards (higher activation memory).
     GPipe,
 }
 
+/// Virtual-microbatch index → (microbatch, chunk) for the interleaved
+/// forward order (Megatron-LM's grouping): units advance in groups of
+/// `stages · v`; within a group the first `stages` units belong to chunk 0,
+/// the next `stages` to chunk 1, and so on. This ordering is what makes the
+/// warmup formula below deadlock-free (verified by `simulate_virtual`,
+/// which panics on any dependency cycle, across the property tests).
+fn fwd_unit(k: usize, stages: usize, v: usize) -> (usize, usize) {
+    let group = k / (stages * v);
+    let r = k % (stages * v);
+    (group * stages + r % stages, r / stages)
+}
+
+/// Backward unit order: same grouping with the chunk index mirrored —
+/// the backward drains chunks last-to-first.
+fn bwd_unit(j: usize, stages: usize, v: usize) -> (usize, usize) {
+    let (micro, chunk) = fwd_unit(j, stages, v);
+    (micro, v - 1 - chunk)
+}
+
 /// Generate the per-stage op order for `stages` pipeline stages and
-/// `micros` microbatches.
+/// `micros` microbatches with a single chunk per stage (`v = 1`).
 pub fn schedule(kind: Schedule, stages: usize, micros: usize) -> Vec<Vec<Op>> {
-    assert!(stages > 0 && micros > 0);
-    match kind {
-        Schedule::GPipe => (0..stages)
-            .map(|_| {
-                let mut ops: Vec<Op> = (0..micros).map(|m| Op::Fwd { micro: m }).collect();
-                ops.extend((0..micros).rev().map(|m| Op::Bwd { micro: m }));
-                ops
-            })
-            .collect(),
-        Schedule::OneFOneB => (0..stages)
-            .map(|s| {
-                // PipeDream-flush: stage s runs min(p - s, m) warmup fwds,
-                // then steady-state 1F1B, then drains remaining bwds.
-                let warmup = (stages - s).min(micros);
-                let mut ops = Vec::with_capacity(2 * micros);
-                let mut next_f = 0usize;
-                let mut next_b = 0usize;
-                for _ in 0..warmup {
-                    ops.push(Op::Fwd { micro: next_f });
-                    next_f += 1;
-                }
-                while next_b < micros {
-                    ops.push(Op::Bwd { micro: next_b });
-                    next_b += 1;
-                    if next_f < micros {
-                        ops.push(Op::Fwd { micro: next_f });
-                        next_f += 1;
+    schedule_virtual(kind, stages, micros, 1)
+}
+
+/// Generate the per-stage op order with `v` virtual chunks per stage.
+///
+/// * `v = 1` reproduces the plain 1F1B / GPipe streams bitwise.
+/// * 1F1B with `v > 1` is Megatron-LM's interleaved schedule and requires
+///   `micros % stages == 0` (the grouping that keeps the wrap-around
+///   dependencies acyclic only tiles evenly).
+/// * GPipe with `v > 1` runs all `v·m` forwards in (chunk, micro) order and
+///   drains the backwards in exactly the reverse order.
+pub fn schedule_virtual(
+    kind: Schedule,
+    stages: usize,
+    micros: usize,
+    v: usize,
+) -> Vec<Vec<Op>> {
+    assert!(stages > 0 && micros > 0 && v > 0);
+    assert!(
+        v == 1 || micros % stages == 0,
+        "interleaved schedules require micros ({micros}) % stages ({stages}) == 0"
+    );
+    let total = micros * v;
+    (0..stages)
+        .map(|s| {
+            let mut ops = Vec::with_capacity(2 * total);
+            match kind {
+                Schedule::GPipe => {
+                    for chunk in 0..v {
+                        for micro in 0..micros {
+                            ops.push(Op::Fwd { micro, chunk });
+                        }
+                    }
+                    for chunk in (0..v).rev() {
+                        for micro in (0..micros).rev() {
+                            ops.push(Op::Bwd { micro, chunk });
+                        }
                     }
                 }
-                ops
-            })
-            .collect(),
-    }
+                Schedule::OneFOneB => {
+                    // Warmup depth: a stage must hold enough in-flight
+                    // forwards to cover the round trip to the pipeline tail
+                    // (2·(p−s−1)) plus one full revolution per extra chunk
+                    // ((v−1)·p). For v = 1 the plain PipeDream-flush depth
+                    // (p−s−1 warmups, then F/B pairs) suffices — and keeps
+                    // the v = 1 stream bitwise-identical to the historic
+                    // generator.
+                    let warm = if v == 1 {
+                        (stages - s - 1).min(total)
+                    } else {
+                        (2 * (stages - s - 1) + (v - 1) * stages).min(total)
+                    };
+                    for k in 0..warm {
+                        let (micro, chunk) = fwd_unit(k, stages, v);
+                        ops.push(Op::Fwd { micro, chunk });
+                    }
+                    let mut next_b = 0usize;
+                    for k in warm..total {
+                        let (micro, chunk) = fwd_unit(k, stages, v);
+                        ops.push(Op::Fwd { micro, chunk });
+                        let (micro, chunk) = bwd_unit(next_b, stages, v);
+                        ops.push(Op::Bwd { micro, chunk });
+                        next_b += 1;
+                    }
+                    while next_b < total {
+                        let (micro, chunk) = bwd_unit(next_b, stages, v);
+                        ops.push(Op::Bwd { micro, chunk });
+                        next_b += 1;
+                    }
+                }
+            }
+            ops
+        })
+        .collect()
 }
 
 /// In-flight activation memory: the max number of microbatches a stage holds
-/// forward state for. 1F1B caps this at min(p - s, m); GPipe at m.
+/// forward state for. 1F1B caps this at min(p - s, m); GPipe at m. (Plain
+/// `v = 1` closed forms; use [`peak_in_flight`] on a generated stream for
+/// the interleaved case.)
 pub fn peak_activations(kind: Schedule, stages: usize, micros: usize, stage: usize) -> usize {
     match kind {
         Schedule::GPipe => micros,
@@ -72,60 +177,118 @@ pub fn peak_activations(kind: Schedule, stages: usize, micros: usize, stage: usi
     }
 }
 
-/// Per-stage timing for simulation.
+/// Peak number of (micro, chunk) forward stashes a stage holds at once for
+/// a generated op stream — the chunk-aware generalization of
+/// [`peak_activations`], computed by scanning the stream.
+pub fn peak_in_flight(ops: &[Op]) -> usize {
+    let mut live = 0isize;
+    let mut peak = 0isize;
+    for op in ops {
+        match op {
+            Op::Fwd { .. } => live += 1,
+            Op::Bwd { .. } => live -= 1,
+        }
+        peak = peak.max(live);
+    }
+    peak.max(0) as usize
+}
+
+/// Per-stage timing for simulation. `fwd`/`bwd` are the FULL per-stage
+/// per-microbatch times; with `v` virtual chunks each chunk pass costs
+/// `fwd/v` (resp. `bwd/v`), while `p2p` is paid per boundary crossing —
+/// which is how interleaving's v× traffic cost enters the model.
 #[derive(Debug, Clone, Copy)]
 pub struct StageTiming {
+    /// Full-stage forward time per microbatch.
     pub fwd: f64,
+    /// Full-stage backward time per microbatch.
     pub bwd: f64,
-    pub p2p: f64, // boundary send/recv time
+    /// Boundary send/recv time per crossing.
+    pub p2p: f64,
 }
 
 /// Result of simulating one global-batch step.
 #[derive(Debug, Clone)]
 pub struct PipeSim {
+    /// Wall-clock length of the step.
     pub makespan: f64,
+    /// Per-stage busy time (compute only, no idle).
     pub stage_busy: Vec<f64>,
+    /// 1 − max(busy)/makespan: the pipeline-idle share of the step.
     pub bubble_fraction: f64,
 }
 
-/// Dependency-respecting simulation of a schedule.
-///
-/// Forward of (s, m) needs forward of (s-1, m) plus p2p; backward of (s, m)
-/// needs backward of (s+1, m) plus p2p (and the local forward). Ops on one
-/// stage serialize in schedule order.
+/// Dependency-respecting simulation of a `v = 1` schedule — see
+/// [`simulate_virtual`] for the general contract.
 pub fn simulate(kind: Schedule, timing: &[StageTiming], micros: usize) -> PipeSim {
+    simulate_virtual(kind, timing, micros, 1)
+}
+
+/// Dependency-respecting simulation of a chunk-aware schedule.
+///
+/// The dependency DAG is the real interleaved one:
+/// * forward of (s, µ, c) needs forward of (s−1, µ, c) plus p2p — or, on
+///   stage 0 with c > 0, the **wrap-around** forward of (p−1, µ, c−1);
+/// * backward of (s, µ, c) needs the local forward, plus backward of
+///   (s+1, µ, c) — or, on stage p−1 with c < v−1, the wrap-around backward
+///   of (0, µ, c+1); the loss chunk (p−1, v−1) is the backward root.
+///
+/// Ops on one stage serialize in schedule order. Panics on any dependency
+/// cycle, so a completed simulation doubles as a proof that the generated
+/// schedule is a valid topological order — the property the live trainer's
+/// executed op trace is checked against in rust/tests/pipeline_equivalence.
+pub fn simulate_virtual(
+    kind: Schedule,
+    timing: &[StageTiming],
+    micros: usize,
+    v: usize,
+) -> PipeSim {
     let stages = timing.len();
-    let sched = schedule(kind, stages, micros);
-    let mut fwd_done = vec![vec![f64::NAN; micros]; stages];
-    let mut bwd_done = vec![vec![f64::NAN; micros]; stages];
+    let sched = schedule_virtual(kind, stages, micros, v);
+    let vf = v as f64;
+    let mut fwd_done = vec![vec![f64::NAN; micros * v]; stages];
+    let mut bwd_done = vec![vec![f64::NAN; micros * v]; stages];
+    let idx = |micro: usize, chunk: usize| chunk * micros + micro;
     let mut cursor = vec![0usize; stages]; // next op index per stage
     let mut clock = vec![0f64; stages]; // per-stage busy-until
     let mut busy = vec![0f64; stages];
-    let mut remaining: usize = sched.iter().map(|v| v.len()).sum();
+    let mut remaining: usize = sched.iter().map(|ops| ops.len()).sum();
 
     while remaining > 0 {
         let mut progressed = false;
         for s in 0..stages {
             while cursor[s] < sched[s].len() {
                 let op = sched[s][cursor[s]];
-                // readiness check
+                // readiness check against the real dependency DAG
                 let ready_at = match op {
-                    Op::Fwd { micro } => {
-                        if s == 0 {
+                    Op::Fwd { micro, chunk } => {
+                        if s == 0 && chunk == 0 {
                             Some(0.0)
                         } else {
-                            let d = fwd_done[s - 1][micro];
+                            let d = if s > 0 {
+                                fwd_done[s - 1][idx(micro, chunk)]
+                            } else {
+                                // wrap edge: chunk c on stage 0 consumes
+                                // chunk c−1 leaving the last stage
+                                fwd_done[stages - 1][idx(micro, chunk - 1)]
+                            };
                             if d.is_nan() { None } else { Some(d + timing[s].p2p) }
                         }
                     }
-                    Op::Bwd { micro } => {
-                        let local_fwd = fwd_done[s][micro];
+                    Op::Bwd { micro, chunk } => {
+                        let local_fwd = fwd_done[s][idx(micro, chunk)];
                         if local_fwd.is_nan() {
                             None
-                        } else if s == stages - 1 {
-                            Some(local_fwd)
+                        } else if s == stages - 1 && chunk == v - 1 {
+                            Some(local_fwd) // loss chunk: backward root
                         } else {
-                            let d = bwd_done[s + 1][micro];
+                            let d = if s < stages - 1 {
+                                bwd_done[s + 1][idx(micro, chunk)]
+                            } else {
+                                // wrap edge: dy for chunk c on the last
+                                // stage comes from chunk c+1 on stage 0
+                                bwd_done[0][idx(micro, chunk + 1)]
+                            };
                             if d.is_nan() {
                                 None
                             } else {
@@ -137,13 +300,13 @@ pub fn simulate(kind: Schedule, timing: &[StageTiming], micros: usize) -> PipeSi
                 let Some(ready) = ready_at else { break };
                 let start = clock[s].max(ready);
                 let dur = match op {
-                    Op::Fwd { .. } => timing[s].fwd,
-                    Op::Bwd { .. } => timing[s].bwd,
+                    Op::Fwd { .. } => timing[s].fwd / vf,
+                    Op::Bwd { .. } => timing[s].bwd / vf,
                 };
                 let end = start + dur;
                 match op {
-                    Op::Fwd { micro } => fwd_done[s][micro] = end,
-                    Op::Bwd { micro } => bwd_done[s][micro] = end,
+                    Op::Fwd { micro, chunk } => fwd_done[s][idx(micro, chunk)] = end,
+                    Op::Bwd { micro, chunk } => bwd_done[s][idx(micro, chunk)] = end,
                 }
                 clock[s] = end;
                 busy[s] += dur;
@@ -186,37 +349,120 @@ mod tests {
             40,
             |r| {
                 let stages = r.range(1, 9);
-                let micros = r.range(1, 17);
+                let v = 1 + r.below(4);
+                let micros = stages * r.range(1, 5);
                 let kind = if r.below(2) == 0 { Schedule::OneFOneB } else { Schedule::GPipe };
-                (stages, micros, kind)
+                (stages, micros, v, kind)
             },
-            |&(stages, micros, kind)| {
-                let sched = schedule(kind, stages, micros);
+            |&(stages, micros, v, kind)| {
+                let sched = schedule_virtual(kind, stages, micros, v);
                 for (s, ops) in sched.iter().enumerate() {
-                    if ops.len() != 2 * micros {
+                    if ops.len() != 2 * micros * v {
                         return Err(format!("stage {s}: {} ops", ops.len()));
                     }
-                    let mut fwd_seen = vec![false; micros];
-                    let mut bwd_seen = vec![false; micros];
+                    let mut fwd_seen = vec![false; micros * v];
+                    let mut bwd_seen = vec![false; micros * v];
                     for op in ops {
+                        let i = op.chunk() * micros + op.micro();
                         match *op {
-                            Op::Fwd { micro } => {
-                                if fwd_seen[micro] {
+                            Op::Fwd { .. } => {
+                                if fwd_seen[i] {
                                     return Err("dup fwd".into());
                                 }
-                                fwd_seen[micro] = true;
+                                fwd_seen[i] = true;
                             }
-                            Op::Bwd { micro } => {
-                                if !fwd_seen[micro] {
+                            Op::Bwd { .. } => {
+                                if !fwd_seen[i] {
                                     return Err("bwd before fwd".into());
                                 }
-                                if bwd_seen[micro] {
+                                if bwd_seen[i] {
                                     return Err("dup bwd".into());
                                 }
-                                bwd_seen[micro] = true;
+                                bwd_seen[i] = true;
                             }
                         }
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn virtual_v1_is_bitwise_plain() {
+        // The historic plain generators, inlined as a reference: the
+        // chunk-aware generator at v = 1 must reproduce them op-for-op.
+        for stages in 1..8 {
+            for micros in 1..18 {
+                for kind in [Schedule::OneFOneB, Schedule::GPipe] {
+                    let plain: Vec<Vec<Op>> = (0..stages)
+                        .map(|s| match kind {
+                            Schedule::GPipe => {
+                                let mut ops: Vec<Op> = (0..micros)
+                                    .map(|m| Op::Fwd { micro: m, chunk: 0 })
+                                    .collect();
+                                ops.extend(
+                                    (0..micros).rev().map(|m| Op::Bwd { micro: m, chunk: 0 }),
+                                );
+                                ops
+                            }
+                            Schedule::OneFOneB => {
+                                let warmup = (stages - s).min(micros);
+                                let mut ops = Vec::with_capacity(2 * micros);
+                                let (mut next_f, mut next_b) = (0usize, 0usize);
+                                for _ in 0..warmup {
+                                    ops.push(Op::Fwd { micro: next_f, chunk: 0 });
+                                    next_f += 1;
+                                }
+                                while next_b < micros {
+                                    ops.push(Op::Bwd { micro: next_b, chunk: 0 });
+                                    next_b += 1;
+                                    if next_f < micros {
+                                        ops.push(Op::Fwd { micro: next_f, chunk: 0 });
+                                        next_f += 1;
+                                    }
+                                }
+                                ops
+                            }
+                        })
+                        .collect();
+                    assert_eq!(
+                        schedule_virtual(kind, stages, micros, 1),
+                        plain,
+                        "{kind:?} p={stages} m={micros}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_schedules_deadlock_free() {
+        // simulate_virtual panics on any dependency cycle; running it is
+        // the validity proof for the generated topological order.
+        forall(
+            "virtual-deadlock-free",
+            17,
+            60,
+            |r| {
+                let stages = r.range(1, 7);
+                let v = 1 + r.below(4);
+                let micros = stages * r.range(1, 5);
+                let kind = if r.below(2) == 0 { Schedule::OneFOneB } else { Schedule::GPipe };
+                // unbalanced timings + nonzero p2p: readiness order varies
+                let timing: Vec<StageTiming> = (0..stages)
+                    .map(|_| StageTiming {
+                        fwd: 0.1 + r.below(30) as f64 * 0.1,
+                        bwd: 0.1 + r.below(30) as f64 * 0.1,
+                        p2p: r.below(10) as f64 * 0.1,
+                    })
+                    .collect();
+                (kind, timing, micros, v)
+            },
+            |(kind, timing, micros, v)| {
+                let sim = simulate_virtual(*kind, timing, *micros, *v);
+                if !sim.makespan.is_finite() || sim.makespan <= 0.0 {
+                    return Err(format!("bad makespan {}", sim.makespan));
                 }
                 Ok(())
             },
@@ -230,6 +476,35 @@ mod tests {
         assert_eq!(peak_activations(Schedule::OneFOneB, 4, 64, 0), 4);
         assert_eq!(peak_activations(Schedule::GPipe, 4, 64, 0), 64);
         assert_eq!(peak_activations(Schedule::OneFOneB, 4, 64, 3), 1);
+    }
+
+    #[test]
+    fn peak_in_flight_matches_closed_form_at_v1() {
+        for stages in 1..6 {
+            for micros in 1..12 {
+                for kind in [Schedule::OneFOneB, Schedule::GPipe] {
+                    let sched = schedule_virtual(kind, stages, micros, 1);
+                    for (s, ops) in sched.iter().enumerate() {
+                        assert_eq!(
+                            peak_in_flight(ops),
+                            peak_activations(kind, stages, micros, s),
+                            "{kind:?} p={stages} m={micros} s={s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaving_trades_memory_for_bubble() {
+        // v = 2 on stage 0 holds more in-flight stashes than plain 1F1B
+        // (the (v−1)·p warmup term) but far fewer than GPipe.
+        let plain = peak_in_flight(&schedule_virtual(Schedule::OneFOneB, 4, 16, 1)[0]);
+        let inter = peak_in_flight(&schedule_virtual(Schedule::OneFOneB, 4, 16, 2)[0]);
+        let gpipe = peak_in_flight(&schedule_virtual(Schedule::GPipe, 4, 16, 2)[0]);
+        assert!(plain < inter, "plain {plain} vs interleaved {inter}");
+        assert!(inter < gpipe, "interleaved {inter} vs gpipe {gpipe}");
     }
 
     #[test]
@@ -297,5 +572,11 @@ mod tests {
         let sim = simulate(Schedule::OneFOneB, &t, 16);
         // slowest stage's busy time bounds the makespan from below
         assert!(sim.makespan >= 16.0 * 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "micros")]
+    fn interleaved_requires_divisible_micros() {
+        schedule_virtual(Schedule::OneFOneB, 4, 6, 2);
     }
 }

@@ -22,18 +22,22 @@ pub struct DeviceTensor {
 }
 
 impl DeviceTensor {
+    /// Wrap a device buffer with its output spec.
     pub fn new(buf: xla::PjRtBuffer, spec: TensorSpec) -> DeviceTensor {
         DeviceTensor { spec, buf }
     }
 
+    /// Row-major dimensions.
     pub fn shape(&self) -> &[usize] {
         &self.spec.shape
     }
 
+    /// Element type tag.
     pub fn dtype(&self) -> DType {
         self.spec.dtype
     }
 
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.spec.shape.iter().product()
     }

@@ -11,7 +11,9 @@ use crate::util::json::{parse, Json};
 /// Element type of a tensor crossing the boundary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -28,56 +30,105 @@ impl DType {
 /// Shape + dtype + name of one artifact input/output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor name (parameter path or artifact slot).
     pub name: String,
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 /// One AOT-compiled function.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// HLO text filename inside the artifacts dir.
     pub file: String,
+    /// Positional input specs.
     pub inputs: Vec<TensorSpec>,
+    /// Positional output specs.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// Layout of one parameter tensor inside a stage's `.bin`.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Parameter name (pytree path).
     pub name: String,
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Byte offset inside the stage bin.
     pub offset: usize,
+    /// Element count.
     pub numel: usize,
 }
 
 /// One pipeline stage's parameter file.
 #[derive(Debug, Clone)]
 pub struct StageParams {
+    /// Parameter bin path inside the artifacts dir.
     pub bin: String,
+    /// Per-tensor layout, in artifact input order.
     pub params: Vec<ParamSpec>,
+    /// Expected bin size.
     pub total_bytes: usize,
 }
 
 /// Model geometry mirrored from python's ModelConfig (what L3 needs).
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
+    /// Named export config.
     pub config_name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Hidden width.
     pub hidden: usize,
+    /// Transformer layer count.
     pub layers: usize,
+    /// Expert count E.
     pub experts: usize,
+    /// Sequence length.
     pub seq: usize,
+    /// Sequences per microbatch.
     pub micro_batch: usize,
+    /// Pipeline stage count p.
     pub stages: usize,
+    /// Virtual chunks per physical stage (interleaved 1F1B); 1 for plain
+    /// manifests, which predate the field.
+    pub virtual_stages: usize,
+    /// Load-balance loss coefficient.
     pub aux_coef: f64,
+}
+
+/// One virtual chunk of a pipeline stage: the artifacts that execute it and
+/// how many of the stage's parameter tensors it owns. Chunks partition the
+/// stage's parameter list *in order* — chunk c owns the contiguous run
+/// after chunks 0..c — so a chunk's params/grads/staged buffers are plain
+/// sub-slices of the stage-level vectors.
+#[derive(Debug, Clone)]
+pub struct ChunkSpec {
+    /// Forward artifact name; `None` for the loss chunk (last stage, last
+    /// chunk), whose forward is fused into `bwd` (the lossgrad artifact).
+    pub fwd: Option<String>,
+    /// Backward artifact name (`lossgrad` for the loss chunk).
+    pub bwd: String,
+    /// Number of parameter tensors this chunk owns.
+    pub params: usize,
 }
 
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model geometry.
     pub model: ModelInfo,
+    /// TP degree the rank artifacts were exported for.
     pub tp: usize,
+    /// Per-stage parameter files.
     pub stages: Vec<StageParams>,
+    /// Per-stage virtual chunks (`chunks[stage][chunk]`). Synthesized from
+    /// `stages` for plain manifests without a `chunks` section, so the
+    /// trainer can be uniformly chunk-aware.
+    pub chunks: Vec<Vec<ChunkSpec>>,
+    /// All AOT-compiled functions by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
@@ -97,12 +148,14 @@ fn tensor_spec(j: &Json) -> Result<TensorSpec> {
 }
 
 impl Manifest {
+    /// Read + parse a manifest.json.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         Manifest::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
         let cfg = j.req("config")?;
@@ -122,6 +175,11 @@ impl Manifest {
             seq: geti("seq")?,
             micro_batch: geti("micro_batch")?,
             stages: geti("stages")?,
+            // absent in manifests exported before interleaving existed
+            virtual_stages: cfg
+                .get("virtual_stages")
+                .and_then(Json::as_usize)
+                .unwrap_or(1),
             aux_coef: cfg.req("aux_coef")?.as_f64().context("aux_coef")?,
         };
         let tp = j.req("tp")?.as_usize().context("tp")?;
@@ -160,6 +218,70 @@ impl Manifest {
             })
             .collect::<Result<Vec<_>>>()?;
 
+        // per-stage chunk table: explicit for interleaved exports, a
+        // synthesized single-chunk-per-stage view otherwise
+        let chunks: Vec<Vec<ChunkSpec>> = match j.get("chunks") {
+            Some(cj) => cj
+                .as_arr()
+                .context("chunks")?
+                .iter()
+                .map(|stage_chunks| {
+                    stage_chunks
+                        .as_arr()
+                        .context("chunks[stage]")?
+                        .iter()
+                        .map(|c| {
+                            Ok(ChunkSpec {
+                                fwd: c
+                                    .get("fwd")
+                                    .and_then(Json::as_str)
+                                    .map(str::to_string),
+                                bwd: c.req("bwd")?.as_str().context("bwd")?.to_string(),
+                                params: c.req("params")?.as_usize().context("params")?,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => {
+                let p = stages.len();
+                stages
+                    .iter()
+                    .enumerate()
+                    .map(|(s, sp)| {
+                        vec![ChunkSpec {
+                            fwd: (s + 1 < p).then(|| format!("stage{s}_fwd")),
+                            bwd: if s + 1 == p {
+                                "lossgrad".to_string()
+                            } else {
+                                format!("stage{s}_bwd")
+                            },
+                            params: sp.params.len(),
+                        }]
+                    })
+                    .collect()
+            }
+        };
+        if chunks.len() != stages.len() {
+            bail!("chunks: {} stages vs {} param stages", chunks.len(), stages.len());
+        }
+        for (s, (cs, sp)) in chunks.iter().zip(&stages).enumerate() {
+            if cs.len() != model.virtual_stages {
+                bail!(
+                    "stage {s}: {} chunks vs virtual_stages {}",
+                    cs.len(),
+                    model.virtual_stages
+                );
+            }
+            let total: usize = cs.iter().map(|c| c.params).sum();
+            if total != sp.params.len() {
+                bail!(
+                    "stage {s}: chunk params sum {total} vs {} stage params",
+                    sp.params.len()
+                );
+            }
+        }
+
         let artifacts = j
             .req("artifacts")?
             .as_obj()
@@ -185,12 +307,20 @@ impl Manifest {
             })
             .collect::<Result<BTreeMap<_, _>>>()?;
 
-        Ok(Manifest { model, tp, stages, artifacts })
+        Ok(Manifest { model, tp, stages, chunks, artifacts })
     }
 
     /// Number of parameter tensors of an artifact (inputs before x/dy/...).
     pub fn param_count(&self, stage: usize) -> usize {
         self.stages[stage].params.len()
+    }
+
+    /// The contiguous range of `stage`'s parameter tensors owned by
+    /// `chunk` — an index range into `load_stage_params(stage)` (and into
+    /// the staged device buffers / gradient accumulators mirroring it).
+    pub fn chunk_param_range(&self, stage: usize, chunk: usize) -> std::ops::Range<usize> {
+        let lo: usize = self.chunks[stage][..chunk].iter().map(|c| c.params).sum();
+        lo..lo + self.chunks[stage][chunk].params
     }
 }
 
@@ -232,5 +362,65 @@ mod tests {
     fn rejects_missing_fields() {
         assert!(Manifest::parse("{}").is_err());
         assert!(Manifest::parse(r#"{"config": {}}"#).is_err());
+    }
+
+    #[test]
+    fn synthesizes_single_chunk_view_for_plain_manifests() {
+        // SAMPLE has no "chunks" section: one chunk per stage, last stage
+        // maps to the fused lossgrad artifact
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.virtual_stages, 1);
+        assert_eq!(m.chunks.len(), 1);
+        assert_eq!(m.chunks[0].len(), 1);
+        // the sample's single param stage is also the last stage
+        assert_eq!(m.chunks[0][0].fwd, None);
+        assert_eq!(m.chunks[0][0].bwd, "lossgrad");
+        assert_eq!(m.chunks[0][0].params, 1);
+        assert_eq!(m.chunk_param_range(0, 0), 0..1);
+    }
+
+    const CHUNKED: &str = r#"{
+      "config_name": "tiny-deep",
+      "config": {"vocab": 256, "hidden": 64, "ffn": 256, "layers": 8,
+                 "heads": 4, "experts": 4, "moe_every": 2, "seq": 32,
+                 "micro_batch": 2, "stages": 2, "virtual_stages": 2,
+                 "aux_coef": 0.01, "block_c": 32, "block_t": 64},
+      "tp": 1,
+      "stages": [
+        {"bin": "params/stage0.bin", "total_bytes": 16,
+         "params": [{"name": "chunk0.a", "shape": [2], "offset": 0, "numel": 2},
+                    {"name": "chunk1.b", "shape": [2], "offset": 8, "numel": 2}]},
+        {"bin": "params/stage1.bin", "total_bytes": 16,
+         "params": [{"name": "chunk0.c", "shape": [2], "offset": 0, "numel": 2},
+                    {"name": "chunk1.d", "shape": [2], "offset": 8, "numel": 2}]}
+      ],
+      "chunks": [
+        [{"fwd": "stage0_chunk0_fwd", "bwd": "stage0_chunk0_bwd", "params": 1},
+         {"fwd": "stage0_chunk1_fwd", "bwd": "stage0_chunk1_bwd", "params": 1}],
+        [{"fwd": "stage1_chunk0_fwd", "bwd": "stage1_chunk0_bwd", "params": 1},
+         {"fwd": null, "bwd": "lossgrad", "params": 1}]
+      ],
+      "artifacts": {}
+    }"#;
+
+    #[test]
+    fn parses_chunked_manifest() {
+        let m = Manifest::parse(CHUNKED).unwrap();
+        assert_eq!(m.model.virtual_stages, 2);
+        assert_eq!(m.chunks[0][0].fwd.as_deref(), Some("stage0_chunk0_fwd"));
+        assert_eq!(m.chunks[1][1].fwd, None);
+        assert_eq!(m.chunks[1][1].bwd, "lossgrad");
+        assert_eq!(m.chunk_param_range(1, 1), 1..2);
+    }
+
+    #[test]
+    fn rejects_inconsistent_chunk_tables() {
+        // chunk param counts must sum to the stage's param count
+        let bad = CHUNKED.replace(r#""bwd": "lossgrad", "params": 1"#,
+                                  r#""bwd": "lossgrad", "params": 3"#);
+        assert!(Manifest::parse(&bad).is_err());
+        // chunks-per-stage must match config.virtual_stages
+        let bad = CHUNKED.replace(r#""virtual_stages": 2,"#, r#""virtual_stages": 4,"#);
+        assert!(Manifest::parse(&bad).is_err());
     }
 }

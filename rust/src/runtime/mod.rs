@@ -15,7 +15,9 @@ pub mod manifest;
 pub mod tensor;
 
 pub use device::DeviceTensor;
-pub use manifest::{ArtifactSpec, DType, Manifest, ParamSpec, StageParams, TensorSpec};
+pub use manifest::{
+    ArtifactSpec, ChunkSpec, DType, Manifest, ParamSpec, StageParams, TensorSpec,
+};
 pub use tensor::Tensor;
 
 use std::collections::HashMap;
@@ -25,7 +27,9 @@ use anyhow::{bail, Context, Result};
 
 /// A compiled artifact plus its I/O specification.
 pub struct Executable {
+    /// Manifest artifact name.
     pub name: String,
+    /// I/O specification from the manifest.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -177,8 +181,11 @@ impl Executable {
 
 /// Per-thread runtime: PJRT client + compiled executables + manifest.
 pub struct Runtime {
+    /// PJRT client owning this thread's device.
     pub client: xla::PjRtClient,
+    /// Artifacts directory.
     pub dir: PathBuf,
+    /// Parsed manifest.json.
     pub manifest: Manifest,
     cache: HashMap<String, std::rc::Rc<Executable>>,
 }

@@ -7,40 +7,51 @@ use super::manifest::{DType, TensorSpec};
 /// A dense host tensor (f32 or i32), row-major.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Typed payload.
     pub data: Data,
 }
 
+/// Typed tensor payload.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Data {
+    /// Little-endian f32 payload.
     F32(Vec<f32>),
+    /// Little-endian i32 payload.
     I32(Vec<i32>),
 }
 
 impl Tensor {
+    /// f32 tensor from parts.
     pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
         Tensor { shape, data: Data::F32(data) }
     }
 
+    /// i32 tensor from parts.
     pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Tensor {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
         Tensor { shape, data: Data::I32(data) }
     }
 
+    /// All-zero f32 tensor.
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor::f32(vec![0.0; n], shape)
     }
 
+    /// Rank-0 f32 scalar.
     pub fn scalar_f32(v: f32) -> Tensor {
         Tensor::f32(vec![v], vec![])
     }
 
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Element type tag.
     pub fn dtype(&self) -> DType {
         match self.data {
             Data::F32(_) => DType::F32,
@@ -48,6 +59,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the f32 payload (errors on i32 tensors).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),
@@ -55,6 +67,7 @@ impl Tensor {
         }
     }
 
+    /// Mutably borrow the f32 payload.
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             Data::F32(v) => Ok(v),
@@ -62,6 +75,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the i32 payload (errors on f32 tensors).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             Data::I32(v) => Ok(v),

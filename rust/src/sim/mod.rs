@@ -22,20 +22,32 @@ use crate::pipeline::{self, Schedule, StageTiming};
 /// Cost component of a forward step (paper Tables 1 & 3 vocabulary).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Component {
+    /// Router softmax + top-k + dispatch construction.
     Gating,
+    /// DPMoE's first all-to-all (token dispatch).
     FirstA2A,
+    /// DPMoE's second all-to-all (token gather).
     SecondA2A,
+    /// Per-expert FFN compute.
     ExpertCalc,
+    /// PPMoE's inner-node all-reduce of rank partials.
     MoeAllReduce,
+    /// Dense-FFN compute.
     DenseFfn,
+    /// TP all-reduce after the dense FFN.
     FfnAllReduce,
+    /// Self-attention compute.
     Attention,
+    /// TP all-reduce after attention.
     AttnAllReduce,
+    /// Embedding + output-projection GEMMs.
     Embedding,
-    Other, // LN, residual, dropout: bandwidth-bound glue
+    /// LN, residual, dropout: bandwidth-bound glue.
+    Other,
 }
 
 impl Component {
+    /// The paper's row label for this component.
     pub fn label(&self) -> &'static str {
         match self {
             Component::Gating => "Gating",
@@ -52,6 +64,7 @@ impl Component {
         }
     }
 
+    /// Whether this is an MoE-specific component.
     pub fn is_moe(&self) -> bool {
         matches!(
             self,
@@ -63,6 +76,7 @@ impl Component {
         )
     }
 
+    /// Whether this is a communication component.
     pub fn is_comm(&self) -> bool {
         matches!(
             self,
@@ -78,10 +92,12 @@ impl Component {
 /// Accumulated component times (seconds) for one forward pass.
 #[derive(Debug, Clone, Default)]
 pub struct Breakdown {
+    /// (component, seconds) pairs in insertion order.
     pub items: Vec<(Component, f64)>,
 }
 
 impl Breakdown {
+    /// Accumulate seconds into a component.
     pub fn add(&mut self, c: Component, secs: f64) {
         for it in &mut self.items {
             if it.0 == c {
@@ -92,22 +108,27 @@ impl Breakdown {
         self.items.push((c, secs));
     }
 
+    /// One component's accumulated seconds.
     pub fn get(&self, c: Component) -> f64 {
         self.items.iter().find(|i| i.0 == c).map_or(0.0, |i| i.1)
     }
 
+    /// Sum over all components.
     pub fn total(&self) -> f64 {
         self.items.iter().map(|i| i.1).sum()
     }
 
+    /// Sum over MoE components.
     pub fn moe_total(&self) -> f64 {
         self.items.iter().filter(|i| i.0.is_moe()).map(|i| i.1).sum()
     }
 
+    /// Sum over communication components.
     pub fn comm_total(&self) -> f64 {
         self.items.iter().filter(|i| i.0.is_comm()).map(|i| i.1).sum()
     }
 
+    /// Every component scaled by `k` (used for bwd ≈ 2× fwd).
     pub fn scaled(&self, k: f64) -> Breakdown {
         Breakdown { items: self.items.iter().map(|&(c, t)| (c, t * k)).collect() }
     }
@@ -116,13 +137,18 @@ impl Breakdown {
 /// Simulator over one (model, parallel, cluster) configuration.
 #[derive(Debug, Clone)]
 pub struct Simulator {
+    /// Model dimensions.
     pub m: ModelDims,
+    /// Parallel layout.
     pub p: ParallelCfg,
+    /// Collective cost model.
     pub cost: CostModel,
+    /// Device mesh of the layout.
     pub mesh: Mesh,
 }
 
 impl Simulator {
+    /// Build a simulator for (model, layout) on a cluster.
     pub fn new(m: ModelDims, p: ParallelCfg, cluster: ClusterCfg) -> anyhow::Result<Self> {
         p.validate(&m, &cluster)?;
         let mesh = Mesh::new(p, cluster.clone())?;
@@ -274,6 +300,14 @@ impl Simulator {
 
     /// Simulate one full training step; returns (step_seconds, tokens/s/GPU).
     pub fn step(&self, tc: TrainCfg) -> StepResult {
+        self.step_virtual(tc, 1)
+    }
+
+    /// [`Simulator::step`] with `v` interleaved virtual chunks per pipeline
+    /// stage: the 1F1B event simulation runs the Megatron-style chunk-aware
+    /// schedule, so the bubble shrinks toward (p−1)/(v·m+p−1) while every
+    /// microbatch pays the stage-boundary p2p cost v times.
+    pub fn step_virtual(&self, tc: TrainCfg, v: usize) -> StepResult {
         let bt = Batch { b: tc.micro_batch, s: self.m.seq };
         let stage_fwd = self.stage_forward(bt).total();
         // backward ≈ 2× forward compute; collective volume matches forward
@@ -285,7 +319,7 @@ impl Simulator {
             0.0
         };
         let timing = vec![StageTiming { fwd: stage_fwd, bwd: stage_bwd, p2p }; self.p.pp];
-        let pipe = pipeline::simulate(Schedule::OneFOneB, &timing, tc.num_micro);
+        let pipe = pipeline::simulate_virtual(Schedule::OneFOneB, &timing, tc.num_micro, v);
 
         // DP gradient all-reduce (inter-node at scale); ZeRO swaps the
         // all-reduce for reduce-scatter + all-gather: same volume.
@@ -321,10 +355,15 @@ impl Simulator {
 /// Outcome of a simulated training step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepResult {
+    /// Wall-clock step length.
     pub step_seconds: f64,
+    /// Simulated throughput.
     pub tokens_per_sec_per_gpu: f64,
+    /// Pipeline-idle fraction of the step.
     pub bubble_fraction: f64,
+    /// DP gradient-sync share of the step.
     pub dp_sync_seconds: f64,
+    /// Per-stage forward compute time.
     pub stage_fwd_seconds: f64,
 }
 
@@ -421,6 +460,25 @@ mod tests {
         let few = s.step(TrainCfg { micro_batch: 8, num_micro: 4 });
         let many = s.step(TrainCfg { micro_batch: 8, num_micro: 64 });
         assert!(many.bubble_fraction < few.bubble_fraction);
+    }
+
+    #[test]
+    fn interleaving_shrinks_step_bubble_but_adds_p2p() {
+        // §3.3.5 composition: v chunks shrink the bubble at few micros but
+        // the extra boundary crossings keep the win sublinear
+        let s = sim(moe_small_setting(), ppmoe(8, 4), 32);
+        let tc = TrainCfg { micro_batch: 8, num_micro: 8 };
+        let v1 = s.step_virtual(tc, 1);
+        let v4 = s.step_virtual(tc, 4);
+        assert!(
+            v4.bubble_fraction < v1.bubble_fraction,
+            "v=4 bubble {} vs v=1 {}",
+            v4.bubble_fraction,
+            v1.bubble_fraction
+        );
+        // whether the bubble win survives the extra p2p is constant-
+        // dependent; what must hold is that both runs are sane
+        assert!(v4.step_seconds > 0.0 && v1.step_seconds > 0.0);
     }
 
     #[test]

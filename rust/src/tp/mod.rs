@@ -21,26 +21,38 @@ use crate::util::prng::Rng;
 /// Timing breakdown of one rank's MoE layer execution.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RankTiming {
+    /// Gating + slice + expert FFN (inside HLO).
     pub exec_seconds: f64,      // gating + slice + expert FFN (inside HLO)
+    /// Combine across ranks (in Rust).
     pub allreduce_seconds: f64, // combine across ranks (in rust)
 }
 
 /// Result of a TP×EP run.
 #[derive(Debug)]
 pub struct TpRunResult {
+    /// All-reduced sum of the rank partials.
     pub output: Vec<f32>,
+    /// Monolithic single-rank reference output.
     pub reference: Vec<f32>,
+    /// Max |output − reference| element error.
     pub max_abs_err: f32,
+    /// Per-rank timing breakdowns.
     pub rank_timings: Vec<RankTiming>,
+    /// Aux balance loss (identical on every rank).
     pub aux: f32,
 }
 
 /// MoE layer weights (host-side, full E experts).
 pub struct MoeWeights {
+    /// Full gating weights (replicated on every rank, §3.3.3).
     pub wg: Tensor,
+    /// First-GEMM weight slice (local experts).
     pub w1: Tensor,
+    /// First-GEMM bias slice.
     pub b1: Tensor,
+    /// Second-GEMM weight slice (local experts).
     pub w2: Tensor,
+    /// Second-GEMM bias slice.
     pub b2: Tensor,
 }
 

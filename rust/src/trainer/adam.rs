@@ -14,16 +14,22 @@ use crate::runtime::Tensor;
 /// Adam with bias correction (Kingma & Ba), β = (0.9, 0.95) like the paper.
 #[derive(Debug)]
 pub struct Adam {
+    /// Learning rate (mutable: the trainer applies LR warmup per step).
     pub lr: f32,
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator fuzz.
     pub eps: f32,
+    /// Completed update count (drives bias correction).
     pub step: u64,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
 }
 
 impl Adam {
+    /// Fresh optimizer state shaped like `params`.
     pub fn new(lr: f32, params: &[Tensor]) -> Adam {
         Adam {
             lr,

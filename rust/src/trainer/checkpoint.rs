@@ -85,6 +85,7 @@ pub fn evaluate(
         });
     }
 
+    let v = m.virtual_stages;
     let mut corpus = Corpus::new(m.vocab, structure_seed);
     corpus.reseed_stream(stream_seed);
     let mut total = 0.0f32;
@@ -92,16 +93,25 @@ pub fn evaluate(
         let (tokens, targets) = corpus.batch(m.micro_batch, m.seq);
         let mut x = Tensor::i32(tokens, vec![m.micro_batch, m.seq]);
         let mut aux = 0.0f32;
-        for s in 0..stages - 1 {
-            let exe = rt.load(&format!("stage{s}_fwd"))?;
-            let mut inputs = params[s].clone();
+        // chain the virtual stages in ring order: chunk c of stage p−1
+        // wraps around into chunk c+1 of stage 0
+        for vs in 0..stages * v - 1 {
+            let (s, c) = (vs % stages, vs / stages);
+            let name = rt.manifest.chunks[s][c]
+                .fwd
+                .clone()
+                .context("non-loss chunk missing fwd artifact")?;
+            let exe = rt.load(&name)?;
+            let range = rt.manifest.chunk_param_range(s, c);
+            let mut inputs = params[s][range].to_vec();
             inputs.push(x);
             let out = exe.run(&inputs)?;
             x = out[0].clone();
             aux += out[1].item()?;
         }
         let exe = rt.load("loss_eval")?;
-        let mut inputs = params[stages - 1].clone();
+        let range = rt.manifest.chunk_param_range(stages - 1, v - 1);
+        let mut inputs = params[stages - 1][range].to_vec();
         inputs.push(x);
         inputs.push(Tensor::i32(targets, vec![m.micro_batch, m.seq]));
         inputs.push(Tensor::scalar_f32(aux));
@@ -123,7 +133,8 @@ mod tests {
         Manifest {
             model: ModelInfo {
                 config_name: "t".into(), vocab: 4, hidden: 2, layers: 1,
-                experts: 1, seq: 2, micro_batch: 1, stages: 1, aux_coef: 0.0,
+                experts: 1, seq: 2, micro_batch: 1, stages: 1,
+                virtual_stages: 1, aux_coef: 0.0,
             },
             tp: 1,
             stages: vec![StageParams {
@@ -134,6 +145,11 @@ mod tests {
                     ParamSpec { name: "b".into(), shape: vec![2], offset: 16, numel: 2 },
                 ],
             }],
+            chunks: vec![vec![crate::runtime::manifest::ChunkSpec {
+                fwd: None,
+                bwd: "lossgrad".into(),
+                params: 2,
+            }]],
             artifacts: BTreeMap::new(),
         }
     }

@@ -2,17 +2,31 @@
 //!
 //! Each pipeline stage is a worker thread owning its own PJRT runtime and
 //! parameter shard (PJRT objects are not Send, matching the paper's
-//! one-process-per-device layout). Stages execute the exact 1F1B op order
-//! from [`crate::pipeline::schedule`]; activations and gradients travel
+//! one-process-per-device layout). Stages execute the exact chunk-aware op
+//! order from [`crate::pipeline::schedule_virtual`] — plain 1F1B/GPipe at
+//! `v = 1`, Megatron-style interleaved 1F1B when the artifacts carry
+//! `v > 1` virtual chunks per stage; activations and gradients travel
 //! over mpsc channels (the p2p links of §3.1.3); gradients accumulate over
 //! microbatches and an in-crate fused Adam applies the update — the
 //! "gradient accumulation" half of the paper's §3.3.6 equivalence argument.
 //!
+//! ## Interleaved virtual stages (docs/schedules.md)
+//!
+//! With `v` chunks the model is cut into `p·v` virtual stages; physical
+//! stage `s` owns the non-contiguous chunks `{c·p + s}`. Forward traffic
+//! for chunk `c` leaves stage `p−1` and **wraps around** to stage 0 as
+//! chunk `c+1`'s input (and the backward mirrors it), so each stage owns
+//! `v` fwd/bwd executables, `v` incoming p2p edges per direction (each with
+//! its own PR-1 slab pool), and a per-chunk activation stash. The loss
+//! chunk is (stage p−1, chunk v−1). Every microbatch now crosses the
+//! stage boundary ring `v` times — the bubble shrinks to
+//! (p−1)/(v·m+p−1) at the price of v× p2p traffic.
+//!
 //! The aux (load-balance) loss is threaded through the pipeline as a
-//! scalar alongside activations, and its cotangent (`aux_coef`) is passed
-//! back to every stage's backward — so the pipelined gradient equals the
-//! single-shot `full_lossgrad` artifact up to fp tolerance (verified in
-//! rust/tests/pipeline_equivalence.rs).
+//! scalar alongside activations — across wrap-around edges too — and its
+//! cotangent (`aux_coef`) is passed back to every chunk's backward, so the
+//! pipelined gradient equals the single-shot `full_lossgrad` artifact up
+//! to fp tolerance (verified in rust/tests/pipeline_equivalence.rs).
 //!
 //! ## Device-resident microbatch loop (docs/hotpath.md)
 //!
@@ -20,19 +34,24 @@
 //! is genuinely needed:
 //!
 //! * Each microbatch's input is uploaded **once** at forward time and the
-//!   device buffer is stashed; the backward pass reuses it instead of
-//!   re-serializing the activation (`Executable::run_staged_device`).
+//!   device buffer is stashed per (chunk, micro); the backward pass reuses
+//!   it instead of re-serializing the activation
+//!   (`Executable::run_staged_device`).
 //! * Executions return [`DeviceTensor`]s; only the loss/aux scalars and
 //!   the activation/gradient leaving the stage are read back — into
 //!   recycled slabs ([`pool::SlabPool`]) returned by the consumer, so the
 //!   p2p edges allocate nothing after warmup.
-//! * The constant `aux_coef` cotangent is staged once per run, gradients
-//!   accumulate host-side through a reused scratch buffer, and the
-//!   microbatch mean + grad-clip factor are folded into a single fused
+//! * The constant `aux_coef` cotangent is staged once per run per chunk,
+//!   gradients accumulate host-side through a reused scratch buffer, and
+//!   the microbatch mean + grad-clip factor are folded into a single fused
 //!   Adam sweep ([`adam::Adam::fused_update`]) — one pass over each
 //!   parameter instead of three.
 //! * After the optimizer step, parameters are re-staged in place
-//!   ([`crate::runtime::Runtime::restage_buffers`]).
+//!   ([`crate::runtime::Runtime::restage_buffers`]); chunk executables
+//!   address their parameters as sub-slices of the stage-level buffers
+//!   ([`crate::runtime::Manifest::chunk_param_range`]).
+//!
+//! [`DeviceTensor`]: crate::runtime::DeviceTensor
 
 pub mod adam;
 pub mod checkpoint;
@@ -43,12 +62,12 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::comm::Barrier;
 use crate::data::Corpus;
 use crate::metrics::Timers;
-use crate::pipeline::{schedule, Op, Schedule};
+use crate::pipeline::{schedule_virtual, Op, Schedule};
 use crate::runtime::{Runtime, Tensor};
 use adam::{global_grad_norm, Adam};
 use pool::{slab_pair, SlabPool, SlabReturn};
@@ -56,14 +75,26 @@ use pool::{slab_pair, SlabPool, SlabReturn};
 /// Training hyperparameters.
 #[derive(Debug, Clone)]
 pub struct TrainerCfg {
+    /// Artifacts directory produced by `make artifacts`.
     pub artifacts: PathBuf,
+    /// Optimizer steps to run.
     pub steps: usize,
-    pub num_micro: usize, // microbatches per global batch (pipeline depth m)
+    /// Microbatches per global batch (pipeline depth m).
+    pub num_micro: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Data seed.
     pub seed: u64,
+    /// Progress-log period in steps (0 silences).
     pub log_every: usize,
+    /// Global-norm gradient clip (None disables).
     pub grad_clip: Option<f32>,
+    /// Pipeline schedule kind.
     pub schedule: Schedule,
+    /// Virtual chunks per stage (`--virtual`): 0 follows the artifacts'
+    /// manifest (the chunk split is baked in at AOT time); a nonzero value
+    /// must match it and exists to make the intent explicit in scripts.
+    pub virtual_stages: usize,
     /// Linear LR warmup steps (the paper warms its gating up over the first
     /// steps of Fig. 5; 0 disables).
     pub warmup_steps: usize,
@@ -83,13 +114,14 @@ impl Default for TrainerCfg {
             log_every: 10,
             grad_clip: Some(1.0),
             schedule: Schedule::OneFOneB,
+            virtual_stages: 0,
             warmup_steps: 0,
             checkpoint_dir: None,
         }
     }
 }
 
-/// Forward message on the stage-boundary channel.
+/// Forward message on a (stage, chunk) boundary channel.
 struct ActMsg {
     micro: usize,
     x: Tensor,
@@ -105,19 +137,32 @@ struct GradMsg {
 /// Per-step record returned to the caller.
 #[derive(Debug, Clone)]
 pub struct StepLog {
+    /// Step index.
     pub step: usize,
+    /// Mean microbatch loss.
     pub loss: f32,
+    /// Tokens processed this step.
     pub tokens: usize,
+    /// Wall-clock step time.
     pub seconds: f64,
 }
 
 /// Result of a training run.
 #[derive(Debug)]
 pub struct TrainReport {
+    /// Per-step logs.
     pub steps: Vec<StepLog>,
+    /// Whole-run throughput.
     pub tokens_per_sec: f64,
+    /// Per-stage timer breakdowns.
     pub stage_timers: Vec<Timers>,
+    /// Loss of the final step.
     pub final_loss: f32,
+    /// The op order each stage actually executed during step 0 (recorded
+    /// *after* every blocking recv succeeded) — compared against
+    /// [`crate::pipeline::schedule_virtual`] and the event simulation in
+    /// rust/tests/pipeline_equivalence.rs.
+    pub executed_ops: Vec<Vec<Op>>,
 }
 
 impl TrainReport {
@@ -128,25 +173,57 @@ impl TrainReport {
     }
 }
 
-/// A stage worker's channel ends: the p2p links plus their slab
-/// back-channels (None on pipeline boundaries that don't exist for this
-/// stage, or whose payloads aren't pooled — the driver's i32 token feeds).
-struct StageIo {
+/// One virtual chunk's channel ends: its p2p links plus their slab
+/// back-channels (None on edges that don't exist for this chunk, or whose
+/// payloads aren't pooled — the driver's i32 token feed into (0, 0)).
+struct ChunkIo {
     rx_fwd: Receiver<ActMsg>,
     tx_fwd: Option<Sender<ActMsg>>,
-    rx_bwd: Receiver<GradMsg>,
+    /// None for the loss chunk (stage p−1, chunk v−1): its backward is
+    /// rooted in the loss, nothing sends dy to it.
+    rx_bwd: Option<Receiver<GradMsg>>,
     tx_bwd: Option<Sender<GradMsg>>,
-    tgt_rx: Option<Receiver<Tensor>>,
-    loss_tx: Sender<f32>,
-    timer_tx: Sender<(usize, Timers)>,
-    /// Slabs for activations this stage sends forward.
+    /// Slabs for activations this chunk sends forward.
     act_pool: Option<SlabPool>,
     /// Returns storage of activations received from upstream.
     act_return: Option<SlabReturn>,
-    /// Slabs for gradients this stage sends backward.
+    /// Slabs for gradients this chunk sends backward.
     grad_pool: Option<SlabPool>,
     /// Returns storage of gradients received from downstream.
     grad_return: Option<SlabReturn>,
+}
+
+/// A stage worker's channel ends: one [`ChunkIo`] per virtual chunk plus
+/// the stage-level driver links.
+struct StageIo {
+    chunks: Vec<ChunkIo>,
+    tgt_rx: Option<Receiver<Tensor>>,
+    loss_tx: Sender<f32>,
+    timer_tx: Sender<(usize, Timers, Vec<Op>)>,
+}
+
+/// The producer of (stage, chunk)'s forward input: upstream in the ring,
+/// or None for (0, 0) (fed by the driver).
+fn fwd_producer(s: usize, c: usize, p: usize) -> Option<(usize, usize)> {
+    if s > 0 {
+        Some((s - 1, c))
+    } else if c > 0 {
+        Some((p - 1, c - 1)) // wrap-around edge
+    } else {
+        None
+    }
+}
+
+/// Where (stage, chunk)'s forward output goes: downstream in the ring, or
+/// None for the loss chunk.
+fn fwd_consumer(s: usize, c: usize, p: usize, v: usize) -> Option<(usize, usize)> {
+    if s + 1 < p {
+        Some((s + 1, c))
+    } else if c + 1 < v {
+        Some((0, c + 1)) // wrap-around edge
+    } else {
+        None
+    }
 }
 
 /// Run PPMoE pipeline training against an artifacts directory.
@@ -154,71 +231,114 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     // read the manifest once on the driver to learn the geometry
     let manifest = crate::runtime::Manifest::load(&cfg.artifacts.join("manifest.json"))?;
     let p = manifest.model.stages;
+    let v = manifest.model.virtual_stages;
+    if cfg.virtual_stages != 0 && cfg.virtual_stages != v {
+        bail!(
+            "--virtual {} requested but the artifacts were exported with \
+             virtual_stages={v}; the chunk split is baked in at AOT time — \
+             re-export with `python -m compile.aot --virtual {}`",
+            cfg.virtual_stages,
+            cfg.virtual_stages
+        );
+    }
     let (b, s) = (manifest.model.micro_batch, manifest.model.seq);
     let vocab = manifest.model.vocab;
     let aux_coef = manifest.model.aux_coef as f32;
     let m = cfg.num_micro;
+    if v > 1 && m % p != 0 {
+        bail!("interleaved schedules need --micro ({m}) divisible by stages ({p})");
+    }
 
-    // stage-boundary channels
-    let mut fwd_txs: Vec<Sender<ActMsg>> = Vec::new();
-    let mut fwd_rxs: Vec<Option<Receiver<ActMsg>>> = Vec::new();
-    let mut bwd_txs: Vec<Sender<GradMsg>> = Vec::new();
-    let mut bwd_rxs: Vec<Option<Receiver<GradMsg>>> = Vec::new();
+    // (stage, chunk)-boundary channels
+    let mut fwd_txs: Vec<Vec<Sender<ActMsg>>> = Vec::new();
+    let mut fwd_rxs: Vec<Vec<Option<Receiver<ActMsg>>>> = Vec::new();
+    let mut bwd_txs: Vec<Vec<Sender<GradMsg>>> = Vec::new();
+    let mut bwd_rxs: Vec<Vec<Option<Receiver<GradMsg>>>> = Vec::new();
     for _ in 0..p {
-        let (ftx, frx) = channel::<ActMsg>();
-        fwd_txs.push(ftx);
-        fwd_rxs.push(Some(frx));
-        let (btx, brx) = channel::<GradMsg>();
-        bwd_txs.push(btx);
-        bwd_rxs.push(Some(brx));
+        let (mut ft, mut fr, mut bt, mut br) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..v {
+            let (ftx, frx) = channel::<ActMsg>();
+            ft.push(ftx);
+            fr.push(Some(frx));
+            let (btx, brx) = channel::<GradMsg>();
+            bt.push(btx);
+            br.push(Some(brx));
+        }
+        fwd_txs.push(ft);
+        fwd_rxs.push(fr);
+        bwd_txs.push(bt);
+        bwd_rxs.push(br);
     }
-    // slab back-channels: one per f32 payload edge. Forward edge i -> i+1:
-    // pool at producer i, return at consumer i+1. Backward edge i+1 -> i:
-    // pool at producer i+1, return at consumer i.
-    let mut act_pools: Vec<Option<SlabPool>> = (0..p).map(|_| None).collect();
-    let mut act_returns: Vec<Option<SlabReturn>> = (0..p).map(|_| None).collect();
-    let mut grad_pools: Vec<Option<SlabPool>> = (0..p).map(|_| None).collect();
-    let mut grad_returns: Vec<Option<SlabReturn>> = (0..p).map(|_| None).collect();
-    for i in 0..p.saturating_sub(1) {
-        let (pool, ret) = slab_pair();
-        act_pools[i] = Some(pool);
-        act_returns[i + 1] = Some(ret);
-        let (pool, ret) = slab_pair();
-        grad_pools[i + 1] = Some(pool);
-        grad_returns[i] = Some(ret);
+    // slab back-channels: one per f32 payload edge. A forward edge into
+    // (s, c) puts the pool at its producer and the return at (s, c); a
+    // backward edge into (s, c) puts the pool at its producer — the chunk
+    // downstream of (s, c) in the ring — and the return at (s, c). The
+    // driver's token feed into (0, 0) is i32 and unpooled.
+    let mut act_pools: Vec<Vec<Option<SlabPool>>> =
+        (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+    let mut act_returns: Vec<Vec<Option<SlabReturn>>> =
+        (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+    let mut grad_pools: Vec<Vec<Option<SlabPool>>> =
+        (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+    let mut grad_returns: Vec<Vec<Option<SlabReturn>>> =
+        (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+    for si in 0..p {
+        for ci in 0..v {
+            if let Some((ps, pc)) = fwd_producer(si, ci, p) {
+                let (pool, ret) = slab_pair();
+                act_pools[ps][pc] = Some(pool);
+                act_returns[si][ci] = Some(ret);
+            }
+            if let Some((ds, dc)) = fwd_consumer(si, ci, p, v) {
+                // (ds, dc) sends dy back to (si, ci)
+                let (pool, ret) = slab_pair();
+                grad_pools[ds][dc] = Some(pool);
+                grad_returns[si][ci] = Some(ret);
+            }
+        }
     }
-    // driver -> stage 0 tokens; driver -> last stage targets
+    // driver -> (0, 0) tokens; driver -> last stage targets
     let (tgt_tx, tgt_rx) = channel::<Tensor>();
     let mut tgt_rx = Some(tgt_rx);
-    // last stage -> driver losses
+    // loss chunk -> driver losses
     let (loss_tx, loss_rx) = channel::<f32>();
-    // stage timers back to driver at the end
-    let (timer_tx, timer_rx) = channel::<(usize, Timers)>();
+    // stage timers + executed-op traces back to driver at the end
+    let (timer_tx, timer_rx) = channel::<(usize, Timers, Vec<Op>)>();
 
     let barrier = Barrier::new(p + 1); // stages + driver
-    let sched = Arc::new(schedule(cfg.schedule, p, m));
+    let sched = Arc::new(schedule_virtual(cfg.schedule, p, m, v));
 
     let mut handles = Vec::new();
     for stage in 0..p {
+        let chunks = (0..v)
+            .map(|c| ChunkIo {
+                rx_fwd: fwd_rxs[stage][c].take().unwrap(),
+                tx_fwd: fwd_consumer(stage, c, p, v)
+                    .map(|(ds, dc)| fwd_txs[ds][dc].clone()),
+                rx_bwd: if fwd_consumer(stage, c, p, v).is_some() {
+                    bwd_rxs[stage][c].take()
+                } else {
+                    None
+                },
+                tx_bwd: fwd_producer(stage, c, p).map(|(ps, pc)| bwd_txs[ps][pc].clone()),
+                act_pool: act_pools[stage][c].take(),
+                act_return: act_returns[stage][c].take(),
+                grad_pool: grad_pools[stage][c].take(),
+                grad_return: grad_returns[stage][c].take(),
+            })
+            .collect();
         let io = StageIo {
-            rx_fwd: fwd_rxs[stage].take().unwrap(),
-            tx_fwd: if stage + 1 < p { Some(fwd_txs[stage + 1].clone()) } else { None },
-            rx_bwd: bwd_rxs[stage].take().unwrap(),
-            tx_bwd: if stage > 0 { Some(bwd_txs[stage - 1].clone()) } else { None },
+            chunks,
             tgt_rx: if stage == p - 1 { tgt_rx.take() } else { None },
             loss_tx: loss_tx.clone(),
             timer_tx: timer_tx.clone(),
-            act_pool: act_pools[stage].take(),
-            act_return: act_returns[stage].take(),
-            grad_pool: grad_pools[stage].take(),
-            grad_return: grad_returns[stage].take(),
         };
         let barrier = barrier.clone();
         let sched = sched.clone();
         let cfg = cfg.clone();
         let handle = thread::Builder::new()
             .name(format!("stage{stage}"))
-            .spawn(move || stage_worker(stage, p, &cfg, &sched[stage], io, barrier, aux_coef))
+            .spawn(move || stage_worker(stage, v, &cfg, &sched[stage], io, barrier, aux_coef))
             .context("spawning stage thread")?;
         handles.push(handle);
     }
@@ -236,7 +356,7 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         let t0 = std::time::Instant::now();
         for micro in 0..m {
             let (tokens, targets) = corpus.batch(b, s);
-            fwd_txs[0]
+            fwd_txs[0][0]
                 .send(ActMsg { micro, x: Tensor::i32(tokens, vec![b, s]), aux: 0.0 })
                 .ok();
             tgt_tx.send(Tensor::i32(targets, vec![b, s])).ok();
@@ -266,8 +386,10 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     drop(tgt_tx);
 
     let mut stage_timers = vec![Timers::new(); p];
-    for (stage, t) in timer_rx {
+    let mut executed_ops = vec![Vec::new(); p];
+    for (stage, t, trace) in timer_rx {
         stage_timers[stage] = t;
+        executed_ops[stage] = trace;
     }
     for h in handles {
         h.join().expect("stage thread panicked")?;
@@ -278,21 +400,23 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         tokens_per_sec: total_tokens as f64 / run_start.elapsed().as_secs_f64(),
         stage_timers,
         final_loss,
+        executed_ops,
     })
 }
 
-/// A microbatch's forward-time state, stashed on device for its backward:
-/// the uploaded input buffer (reused, not re-serialized), the accumulated
-/// aux scalar, and — on the last stage — the uploaded targets.
+/// A (chunk, micro)'s forward-time state, stashed on device for its
+/// backward: the uploaded input buffer (reused, not re-serialized), the
+/// accumulated aux scalar, and — on the loss chunk — the uploaded targets.
 struct Stashed {
     x: xla::PjRtBuffer,
     aux: f32,
     targets: Option<xla::PjRtBuffer>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn stage_worker(
     stage: usize,
-    p: usize,
+    v: usize,
     cfg: &TrainerCfg,
     ops: &[Op],
     mut io: StageIo,
@@ -300,118 +424,149 @@ fn stage_worker(
     aux_coef: f32,
 ) -> Result<()> {
     let mut rt = Runtime::open(&cfg.artifacts)?;
-    let is_last = stage == p - 1;
-    let fwd_exe = if is_last { None } else { Some(rt.load(&format!("stage{stage}_fwd"))?) };
-    let bwd_exe = if is_last {
-        rt.load("lossgrad")?
-    } else {
-        rt.load(&format!("stage{stage}_bwd"))?
-    };
+    let chunk_specs = rt.manifest.chunks[stage].clone();
+    let ranges: Vec<std::ops::Range<usize>> =
+        (0..v).map(|c| rt.manifest.chunk_param_range(stage, c)).collect();
+    // per-chunk executables: fwd for pipeline chunks, the fused
+    // fwd+loss+bwd for the loss chunk (whose `fwd` spec is None)
+    let mut fwd_exes = Vec::with_capacity(v);
+    let mut bwd_exes = Vec::with_capacity(v);
+    for spec in &chunk_specs {
+        fwd_exes.push(match &spec.fwd {
+            Some(name) => Some(rt.load(name)?),
+            None => None,
+        });
+        bwd_exes.push(rt.load(&spec.bwd)?);
+    }
     let mut params = rt.load_stage_params(stage)?;
-    let n_params = params.len();
     let mut opt = Adam::new(cfg.lr, &params);
     let mut timers = Timers::new();
     let m = cfg.num_micro;
     // §Perf L3: upload parameters to the PJRT device once per optimizer
-    // step; microbatch executions reuse the staged buffers.
+    // step; microbatch executions reuse the staged buffers, each chunk
+    // addressing its sub-slice.
     let mut staged = rt.stage_buffers(&params)?;
-    // the aux cotangent is a run constant for non-last stages: stage it once
-    let aux_coef_buf = if is_last {
-        None
-    } else {
-        Some(bwd_exe.upload_input(n_params + 2, &Tensor::scalar_f32(aux_coef))?)
-    };
+    // the aux cotangent is a run constant for non-loss chunks: stage it
+    // once per chunk executable
+    let mut aux_coef_bufs = Vec::with_capacity(v);
+    for c in 0..v {
+        aux_coef_bufs.push(if chunk_specs[c].fwd.is_none() {
+            None
+        } else {
+            let k = ranges[c].len();
+            Some(bwd_exes[c].upload_input(k + 2, &Tensor::scalar_f32(aux_coef))?)
+        });
+    }
 
-    // forward inputs stashed ON DEVICE for the backward; targets are
-    // stashed at Fwd time keyed by micro (GPipe drains backwards, so FIFO
-    // consumption at Bwd would pair micro k with micro m-1-k's targets)
-    let mut stash: Vec<Option<Stashed>> = (0..m).map(|_| None).collect();
+    // forward inputs stashed ON DEVICE for the backward, keyed by
+    // (chunk, micro); targets are stashed at Fwd time (GPipe drains
+    // backwards, so FIFO consumption at Bwd would mispair micros)
+    let mut stash: Vec<Vec<Option<Stashed>>> =
+        (0..v).map(|_| (0..m).map(|_| None).collect()).collect();
     // gradient accumulator + readback scratch, allocated once and reused
-    // across every microbatch of every step
+    // across every microbatch of every step; chunks own disjoint sub-slices
     let mut grad_acc: Vec<Tensor> =
         params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect();
     let mut grad_scratch: Vec<f32> = Vec::new();
-    let mut accumulated = 0usize;
+    let mut accumulated = vec![0usize; v];
+    // step-0 op trace for the live-vs-sim schedule check
+    let mut trace: Vec<Op> = Vec::new();
 
     for _step in 0..cfg.steps {
         for op in ops {
             match *op {
-                Op::Fwd { micro } => {
-                    let msg = timers.time("p2p_recv", || io.rx_fwd.recv());
+                Op::Fwd { micro, chunk } => {
+                    let is_loss = chunk_specs[chunk].fwd.is_none();
+                    let k = ranges[chunk].len();
+                    let cio = &mut io.chunks[chunk];
+                    let msg = timers.time("p2p_recv", || cio.rx_fwd.recv());
                     let msg = msg.context("fwd channel closed")?;
                     debug_assert_eq!(msg.micro, micro);
                     // the executable whose input slot this microbatch's x
-                    // occupies: fwd for pipeline stages, the fused
-                    // fwd+loss+bwd for the last stage
-                    let exe = fwd_exe.as_ref().unwrap_or(&bwd_exe);
-                    let dev_x = timers.time("h2d", || exe.upload_input(n_params, &msg.x))?;
+                    // occupies: fwd for pipeline chunks, the fused
+                    // fwd+loss+bwd for the loss chunk
+                    let exe = fwd_exes[chunk].as_ref().unwrap_or(&bwd_exes[chunk]);
+                    let dev_x = timers.time("h2d", || exe.upload_input(k, &msg.x))?;
                     // recycle the payload storage upstream (driver token
                     // feeds are i32 and unpooled)
-                    if let (Some(ret), Ok(v)) = (&io.act_return, msg.x.into_f32()) {
-                        ret.put(v);
+                    if let (Some(ret), Ok(vv)) = (&cio.act_return, msg.x.into_f32()) {
+                        ret.put(vv);
                     }
-                    if is_last {
+                    if is_loss {
                         // fused fwd+loss+bwd happens at Bwd; stash this
                         // micro's uploaded input + targets (sent in fwd
                         // order)
                         let tgt =
                             io.tgt_rx.as_ref().unwrap().recv().context("targets closed")?;
                         let dev_tgt = timers
-                            .time("h2d", || bwd_exe.upload_input(n_params + 1, &tgt))?;
-                        stash[micro] =
+                            .time("h2d", || bwd_exes[chunk].upload_input(k + 1, &tgt))?;
+                        stash[chunk][micro] =
                             Some(Stashed { x: dev_x, aux: msg.aux, targets: Some(dev_tgt) });
                     } else {
-                        let exe = fwd_exe.as_ref().unwrap();
-                        let out = timers
-                            .time("fwd", || exe.run_staged_device(&staged, &[&dev_x]))?;
+                        let exe = fwd_exes[chunk].as_ref().unwrap();
+                        let out = timers.time("fwd", || {
+                            exe.run_staged_device(&staged[ranges[chunk].clone()], &[&dev_x])
+                        })?;
                         // outputs: (activations, aux) — activations are read
                         // back into a recycled slab only because the p2p
                         // edge is a host channel; aux is a scalar readback
                         let aux = msg.aux + out[1].item()?;
                         let act = {
-                            let pool = io.act_pool.as_mut().unwrap();
+                            let pool = cio.act_pool.as_mut().unwrap();
                             let mut slab = pool.take(out[0].numel());
                             timers.time("d2h", || out[0].read_into_vec(&mut slab))?;
                             Tensor::f32(slab, out[0].shape().to_vec())
                         };
-                        stash[micro] = Some(Stashed { x: dev_x, aux: msg.aux, targets: None });
-                        io.tx_fwd
+                        stash[chunk][micro] =
+                            Some(Stashed { x: dev_x, aux: msg.aux, targets: None });
+                        cio.tx_fwd
                             .as_ref()
                             .unwrap()
                             .send(ActMsg { micro, x: act, aux })
                             .ok();
                     }
                 }
-                Op::Bwd { micro } => {
-                    let stashed = stash[micro].take().context("missing stash")?;
+                Op::Bwd { micro, chunk } => {
+                    let is_loss = chunk_specs[chunk].fwd.is_none();
+                    let k = ranges[chunk].len();
+                    let stashed = stash[chunk][micro].take().context("missing stash")?;
+                    let cio = &mut io.chunks[chunk];
                     let out;
                     let grads_at;
                     let dx_at;
-                    if is_last {
+                    if is_loss {
                         let targets = stashed.targets.as_ref().unwrap();
-                        let aux_in = bwd_exe
-                            .upload_input(n_params + 2, &Tensor::scalar_f32(stashed.aux))?;
+                        let aux_in = bwd_exes[chunk]
+                            .upload_input(k + 2, &Tensor::scalar_f32(stashed.aux))?;
                         out = timers.time("lossgrad", || {
-                            bwd_exe.run_staged_device(&staged, &[&stashed.x, targets, &aux_in])
+                            bwd_exes[chunk].run_staged_device(
+                                &staged[ranges[chunk].clone()],
+                                &[&stashed.x, targets, &aux_in],
+                            )
                         })?;
                         // outputs: (loss, dx, dparams...)
                         io.loss_tx.send(out[0].item()?).ok();
                         dx_at = Some(1);
                         grads_at = 2;
                     } else {
-                        let gmsg = timers.time("p2p_recv", || io.rx_bwd.recv());
+                        let gmsg =
+                            timers.time("p2p_recv", || cio.rx_bwd.as_ref().unwrap().recv());
                         let gmsg = gmsg.context("bwd channel closed")?;
                         debug_assert_eq!(gmsg.micro, micro);
                         let dev_dy = timers
-                            .time("h2d", || bwd_exe.upload_input(n_params + 1, &gmsg.dy))?;
-                        if let (Some(ret), Ok(v)) = (&io.grad_return, gmsg.dy.into_f32()) {
-                            ret.put(v);
+                            .time("h2d", || bwd_exes[chunk].upload_input(k + 1, &gmsg.dy))?;
+                        if let (Some(ret), Ok(vv)) = (&cio.grad_return, gmsg.dy.into_f32()) {
+                            ret.put(vv);
                         }
-                        let aux_buf = aux_coef_buf.as_ref().unwrap();
+                        let aux_buf = aux_coef_bufs[chunk].as_ref().unwrap();
                         out = timers.time("bwd", || {
-                            bwd_exe.run_staged_device(&staged, &[&stashed.x, &dev_dy, aux_buf])
+                            bwd_exes[chunk].run_staged_device(
+                                &staged[ranges[chunk].clone()],
+                                &[&stashed.x, &dev_dy, aux_buf],
+                            )
                         })?;
-                        if stage == 0 {
+                        if stage == 0 && chunk == 0 {
+                            // virtual stage 0 consumes int tokens: no dx
                             dx_at = None;
                             grads_at = 0;
                         } else {
@@ -420,13 +575,14 @@ fn stage_worker(
                         }
                     }
                     let grads = &out[grads_at..];
-                    debug_assert_eq!(grads.len(), n_params);
+                    debug_assert_eq!(grads.len(), k);
                     // accumulate on host (the optimizer lives in L3); the
-                    // first microbatch overwrites, later ones add through
-                    // the reused scratch buffer
+                    // chunk's first microbatch overwrites its sub-slice,
+                    // later ones add through the reused scratch buffer
                     timers.time("grad_acc", || -> Result<()> {
-                        for (acc, g) in grad_acc.iter_mut().zip(grads) {
-                            if accumulated == 0 {
+                        for (acc, g) in grad_acc[ranges[chunk].clone()].iter_mut().zip(grads)
+                        {
+                            if accumulated[chunk] == 0 {
                                 g.read_into(acc)?;
                             } else {
                                 g.add_into(acc, &mut grad_scratch)?;
@@ -434,9 +590,9 @@ fn stage_worker(
                         }
                         Ok(())
                     })?;
-                    accumulated += 1;
-                    if let (Some(tx), Some(i)) = (&io.tx_bwd, dx_at) {
-                        let pool = io.grad_pool.as_mut().unwrap();
+                    accumulated[chunk] += 1;
+                    if let (Some(tx), Some(i)) = (&cio.tx_bwd, dx_at) {
+                        let pool = cio.grad_pool.as_mut().unwrap();
                         let mut slab = pool.take(out[i].numel());
                         timers.time("d2h", || out[i].read_into_vec(&mut slab))?;
                         tx.send(GradMsg {
@@ -447,6 +603,11 @@ fn stage_worker(
                     }
                 }
             }
+            // record the op only once it fully executed (recvs included):
+            // this is the live order the schedule/sim tests compare against
+            if _step == 0 {
+                trace.push(*op);
+            }
         }
         // ---- optimizer update (mean over microbatches) ----
         // linear LR warmup (paper §4.2: gating needs steps to stabilize)
@@ -456,7 +617,10 @@ fn stage_worker(
             cfg.lr
         };
         timers.time("optimizer", || -> Result<()> {
-            debug_assert_eq!(accumulated, m, "missing microbatch gradients");
+            debug_assert!(
+                accumulated.iter().all(|&a| a == m),
+                "missing microbatch gradients: {accumulated:?}"
+            );
             // fold the microbatch mean and the clip ratio into one
             // multiplier: ||s·g|| == s·||g||, so no scaled copy is ever
             // materialized, and the fused sweep reads each gradient once
@@ -470,7 +634,7 @@ fn stage_worker(
             }
             opt.fused_update(&mut params, &grad_acc, gscale)
         })?;
-        accumulated = 0;
+        accumulated.iter_mut().for_each(|a| *a = 0);
         // re-stage the updated parameters in place for the next step
         timers.time("stage_params", || rt.restage_buffers(&params, &mut staged))?;
         barrier.wait();
@@ -482,15 +646,17 @@ fn stage_worker(
 
     // slab economy: after warmup every p2p payload should come from the
     // reclaim channel, not the allocator
-    if let Some(pool) = &io.act_pool {
-        timers.add_count("act_slab_hit", pool.hits);
-        timers.add_count("act_slab_miss", pool.misses);
-    }
-    if let Some(pool) = &io.grad_pool {
-        timers.add_count("grad_slab_hit", pool.hits);
-        timers.add_count("grad_slab_miss", pool.misses);
+    for cio in &io.chunks {
+        if let Some(pool) = &cio.act_pool {
+            timers.add_count("act_slab_hit", pool.hits);
+            timers.add_count("act_slab_miss", pool.misses);
+        }
+        if let Some(pool) = &cio.grad_pool {
+            timers.add_count("grad_slab_hit", pool.hits);
+            timers.add_count("grad_slab_miss", pool.misses);
+        }
     }
 
-    io.timer_tx.send((stage, timers)).ok();
+    io.timer_tx.send((stage, timers, trace)).ok();
     Ok(())
 }

@@ -9,15 +9,22 @@ use std::time::Instant;
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Component name (stable across PRs for diffing).
     pub name: String,
+    /// Median ns/op.
     pub median_ns: f64,
+    /// Mean ns/op.
     pub mean_ns: f64,
+    /// 10th-percentile ns/op.
     pub p10_ns: f64,
+    /// 90th-percentile ns/op.
     pub p90_ns: f64,
+    /// Timed iterations.
     pub iters: usize,
 }
 
 impl BenchResult {
+    /// Human-readable one-liner.
     pub fn print(&self) {
         println!(
             "{:<48} median {:>12}  mean {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
@@ -31,6 +38,7 @@ impl BenchResult {
     }
 }
 
+/// Format nanoseconds with an adaptive unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")

@@ -1,7 +1,8 @@
 //! Self-contained utilities replacing unavailable third-party crates:
 //! a JSON parser (serde_json), a deterministic PRNG (rand), a property-test
 //! driver (proptest) and a bench harness (criterion). Each is minimal but
-//! fully tested; see DESIGN.md for the substitution rationale.
+//! fully tested; see README.md §Offline build for the substitution
+//! rationale.
 
 pub mod bench;
 pub mod json;

@@ -17,6 +17,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seeded generator (SplitMix64-initialized xoshiro-style core).
     pub fn new(seed: u64) -> Self {
         let mut st = seed;
         Rng {
@@ -34,6 +35,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)

@@ -35,3 +35,33 @@ pub fn artifacts_dir() -> Option<PathBuf> {
     );
     None
 }
+
+/// Resolve an artifacts directory exported with interleaved chunks
+/// (`make artifacts-tiny-v4`), or `None` with a skip message.
+///
+/// Resolution order: `PPMOE_ARTIFACTS_CHUNKED` env var (panics without a
+/// manifest, like `PPMOE_ARTIFACTS`), then `artifacts-tiny-v4/` under the
+/// repo root.
+#[allow(dead_code)] // not every test binary links every helper
+pub fn chunked_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("PPMOE_ARTIFACTS_CHUNKED") {
+        let dir = PathBuf::from(dir);
+        assert!(
+            dir.join("manifest.json").exists(),
+            "PPMOE_ARTIFACTS_CHUNKED={} has no manifest.json — run \
+             `make artifacts-tiny-v4`",
+            dir.display()
+        );
+        return Some(dir);
+    }
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts-tiny-v4");
+    if dir.join("manifest.json").exists() {
+        return Some(dir);
+    }
+    eprintln!(
+        "SKIP: no interleaved AOT artifacts found — run `make \
+         artifacts-tiny-v4` (or set PPMOE_ARTIFACTS_CHUNKED) to enable \
+         this integration test"
+    );
+    None
+}
