@@ -39,6 +39,8 @@ fn main() -> anyhow::Result<()> {
         virtual_stages: args.get_usize("virtual", 0)?,
         warmup_steps: args.get_usize("warmup", 10)?,
         checkpoint_dir: args.get("checkpoint").map(Into::into),
+        resume_dir: args.get("resume").map(Into::into),
+        overlap_wrap_edges: !args.has_flag("no-overlap"),
     };
     eprintln!(
         "training: {} steps × {} microbatches, lr {}, schedule {:?}{}",

@@ -7,6 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Offline containers ship no hypothesis; skip this module (instead of
+# failing collection) so `pytest python/tests` stays runnable everywhere.
+# CI installs hypothesis and runs the full sweep.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import dense_ffn, gating, moe_ffn, ref

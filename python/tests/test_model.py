@@ -90,7 +90,14 @@ def test_tp_rank_partials_sum_to_single(params, tp):
 
 
 def test_loss_decreases_with_sgd(params, batch):
-    """Trainability smoke: a few full-batch SGD steps reduce the loss."""
+    """Trainability smoke: a few full-batch SGD steps reduce the loss.
+
+    lr = 0.1, not 0.5: at 0.5 this seed's trajectory overshoots (loss
+    4.165 -> 4.341 after 5 steps) — the historic seed failure both PR 1
+    and PR 2 shipped around. The test guards trainability, not a specific
+    step size; 0.1 converges with a wide margin (4.165 -> ~3.58) and is
+    robust across nearby seeds.
+    """
     tokens, targets = batch
     ps = params
     lossgrad = jax.jit(jax.value_and_grad(
@@ -98,7 +105,7 @@ def test_loss_decreases_with_sgd(params, batch):
     l0, _ = lossgrad(ps)
     for _ in range(5):
         l, g = lossgrad(ps)
-        ps = jax.tree_util.tree_map(lambda p, gg: p - 0.5 * gg, ps, g)
+        ps = jax.tree_util.tree_map(lambda p, gg: p - 0.1 * gg, ps, g)
     l1, _ = lossgrad(ps)
     assert float(l1) < float(l0)
 

@@ -21,7 +21,7 @@ use ppmoe::moe::{route_top1, synth_logits};
 use ppmoe::pipeline::interleaved::{interleaved_bubble, simulate_interleaved};
 use ppmoe::pipeline::{analytic_bubble, simulate, Schedule, StageTiming};
 use ppmoe::runtime::Tensor;
-use ppmoe::trainer::adam::{global_grad_norm, Adam};
+use ppmoe::trainer::adam::{global_grad_norm, sharded_group_step, Adam, ShardedAdam};
 use ppmoe::util::bench::{bench, BenchResult};
 use ppmoe::util::json::Json;
 use ppmoe::util::prng::Rng;
@@ -94,23 +94,44 @@ fn main() {
         }));
     }
 
-    println!("\n=== interleaved schedule simulation (v virtual chunks) ===");
-    for (stages, micros, v) in [(4, 16, 2), (4, 16, 4), (16, 64, 4)] {
-        let timing = vec![StageTiming { fwd: 1.0, bwd: 2.0, p2p: 0.1 }; stages];
-        results.push(bench(
-            &format!("simulate/interleaved p={stages} m={micros} v={v}"),
-            || {
-                let s = simulate_interleaved(&timing, micros, v);
-                // (p−1)/(v·m+p−1) is the zero-p2p floor on balanced
-                // stages; with p2p > 0 the event sim of the real schedule
-                // may only ever sit at or above it
-                assert!(
-                    s.bubble_fraction + 1e-9 >= interleaved_bubble(stages, micros, v),
-                    "simulated bubble fell below the analytic floor"
-                );
-                s.makespan
-            },
-        ));
+    println!("\n=== interleaved schedule simulation (--virtual sweep) ===");
+    // the v ∈ {1, 2, 4} sweep mirrors `train_ppmoe --virtual N`: same
+    // geometry, only the chunk count varies, so BENCH_hotpath.json rows
+    // diff directly against each other across PRs
+    for (stages, micros) in [(4usize, 16usize), (16, 64)] {
+        for v in [1usize, 2, 4] {
+            let timing = vec![StageTiming { fwd: 1.0, bwd: 2.0, p2p: 0.1 }; stages];
+            results.push(bench(
+                &format!("simulate/interleaved p={stages} m={micros} v={v}"),
+                || {
+                    let s = simulate_interleaved(&timing, micros, v);
+                    // (p−1)/(v·m+p−1) is the zero-p2p floor on balanced
+                    // stages; with p2p > 0 the event sim of the real
+                    // schedule may only ever sit at or above it
+                    assert!(
+                        s.bubble_fraction + 1e-9 >= interleaved_bubble(stages, micros, v),
+                        "simulated bubble fell below the analytic floor"
+                    );
+                    s.makespan
+                },
+            ));
+        }
+    }
+
+    println!("\n=== wrap-edge transfer pipeline (overlap off vs on) ===");
+    // the ring's wrap hop as a two-thread d2h → channel → h2d pipeline:
+    // window = 1 serializes every hop on the consumer's upload ack (the
+    // pre-overlap trainer behavior); window = 2 is the double-buffered
+    // staging the trainer now runs on wrap edges — the producer's next
+    // d2h proceeds while the consumer uploads the previous payload
+    for elems in [65_536usize, 262_144] {
+        let kib = elems * 4 / 1024;
+        results.push(bench(&format!("wrap_edge/serialized {kib}KiB x8"), || {
+            wrap_edge_hops(elems, 8, 1)
+        }));
+        results.push(bench(&format!("wrap_edge/overlapped {kib}KiB x8"), || {
+            wrap_edge_hops(elems, 8, 2)
+        }));
     }
 
     println!("\n=== grad-clip + Adam (three passes vs fused sweep) ===");
@@ -147,6 +168,43 @@ fn main() {
         }));
     }
 
+    println!("\n=== sharded optimizer (reduce-scatter + shard Adam + all-gather) ===");
+    // n = 1 is the live trainer's per-chunk path (bitwise the fused sweep,
+    // no collective); n > 1 adds the split-phase group round while each
+    // rank sweeps only 1/n of the moments
+    {
+        let numel = 262_144usize;
+        for n in [1usize, 2, 4] {
+            let mut rank_params: Vec<Vec<Tensor>> = (0..n)
+                .map(|_| vec![Tensor::f32(vec![0.1; numel], vec![numel])])
+                .collect();
+            let grads = vec![Tensor::f32(vec![0.01; numel], vec![numel])];
+            let mut opts: Vec<ShardedAdam> = (0..n)
+                .map(|r| ShardedAdam::new(1e-3, &rank_params[0], r, n))
+                .collect();
+            let group = AllReduceGroup::with_algo(n, Algo::Chunked);
+            results.push(bench(&format!("optimizer/sharded r={n} {numel}"), || {
+                if n == 1 {
+                    // inline, no thread fan-out: keeps the r=1 row directly
+                    // comparable to optimizer/fused_sweep (same thread, the
+                    // delta IS the single-rank collective round)
+                    sharded_group_step(&mut opts[0], &group, &mut rank_params[0], &grads, 0.25)
+                        .unwrap();
+                } else {
+                    std::thread::scope(|s| {
+                        for (opt, params) in opts.iter_mut().zip(rank_params.iter_mut()) {
+                            let group = group.clone();
+                            let grads = &grads;
+                            let _ = s.spawn(move || {
+                                sharded_group_step(opt, &group, params, grads, 0.25).unwrap()
+                            });
+                        }
+                    });
+                }
+            }));
+        }
+    }
+
     println!("\n=== manifest JSON parse ===");
     let manifest_path = std::path::Path::new("artifacts/manifest.json");
     if manifest_path.exists() {
@@ -160,6 +218,54 @@ fn main() {
     }
 
     write_json(&results);
+}
+
+/// One wrap-edge hop chain: a producer thread reads a device buffer back
+/// into a slab (d2h), sends it over an mpsc channel, and a consumer thread
+/// (its own PJRT client — buffers are thread-affine) uploads it (h2d) and
+/// returns the slab, which doubles as the ack. `window` bounds the
+/// in-flight payloads: 1 serializes every hop on the consumer's ack,
+/// 2 double-buffers — the producer's next d2h overlaps the consumer's
+/// current h2d, which is exactly the trainer's staged wrap-edge pipeline.
+fn wrap_edge_hops(elems: usize, hops: usize, window: usize) -> usize {
+    use std::sync::mpsc::channel;
+    let (tx, rx) = channel::<Vec<f32>>();
+    let (ack_tx, ack_rx) = channel::<Vec<f32>>();
+    let consumer = std::thread::spawn(move || {
+        let client = xla::PjRtClient::cpu().expect("stub cpu client");
+        let mut n = 0usize;
+        for v in rx {
+            let buf = client
+                .buffer_from_host_buffer(&v, &[v.len()], None)
+                .expect("h2d upload");
+            n += buf.element_count();
+            ack_tx.send(v).ok(); // slab return = ack
+        }
+        n
+    });
+    let producer = std::thread::spawn(move || {
+        let client = xla::PjRtClient::cpu().expect("stub cpu client");
+        let src = client
+            .buffer_from_host_buffer(&vec![1.0f32; elems], &[elems], None)
+            .expect("source buffer");
+        let mut slabs: Vec<Vec<f32>> =
+            (0..window).map(|_| Vec::with_capacity(elems)).collect();
+        let mut in_flight = 0usize;
+        for _ in 0..hops {
+            if in_flight == window {
+                slabs.push(ack_rx.recv().expect("ack"));
+                in_flight -= 1;
+            }
+            let mut slab = slabs.pop().expect("slab window");
+            src.copy_into(&mut slab).expect("d2h readback");
+            tx.send(slab).ok();
+            in_flight += 1;
+        }
+        drop(tx);
+        while ack_rx.recv().is_ok() {}
+    });
+    producer.join().unwrap();
+    consumer.join().unwrap()
 }
 
 /// Emit `BENCH_hotpath.json`: component name -> ns/op stats.

@@ -87,7 +87,13 @@ struct Round {
 
 /// Near-equal split of `len` into `n` segments: the first `len % n`
 /// segments get one extra element (handles lengths that don't divide).
-fn segment(slot: usize, len: usize, n: usize) -> (usize, usize) {
+///
+/// Public because it is the *sharding contract* shared by the chunked
+/// all-reduce and the sharded optimizer ([`crate::trainer::adam::ShardedAdam`]):
+/// rank r's reduce-scatter output is exactly the flat element range
+/// `segment(r, len, n)`, so the optimizer shard each rank owns is the shard
+/// its reduce-scatter phase already produces.
+pub fn segment(slot: usize, len: usize, n: usize) -> (usize, usize) {
     let base = len / n;
     let rem = len % n;
     let lo = slot * base + slot.min(rem);
@@ -167,6 +173,128 @@ impl AllReduceGroup {
         self.round(rank, contribution)
     }
 
+    /// Phase 1 of a split all-reduce round (the ZeRO-style sharded-optimizer
+    /// hop): deposit this rank's full-length contribution and return the
+    /// rank-order sum of **this rank's own segment**
+    /// ([`segment`]`(rank, len, n)`). Blocks until all `n` ranks have
+    /// deposited. Must be paired with exactly one
+    /// [`AllReduceGroup::all_gather_as`] from every rank before the next
+    /// round; do not mix with [`AllReduceGroup::all_reduce`] /
+    /// [`AllReduceGroup::all_reduce_as`] within a round.
+    ///
+    /// The per-element summation order is slot order — identical to both
+    /// all-reduce paths — so `reduce_scatter_as` followed by an unchanged
+    /// `all_gather_as` reproduces `all_reduce_as` **bitwise**
+    /// (property-tested below).
+    pub fn reduce_scatter_as(&self, rank: usize, contribution: &[f32]) -> Vec<f32> {
+        assert!(rank < self.n, "rank {rank} out of {}", self.n);
+        {
+            let mut st = self.state.lock().unwrap();
+            assert!(
+                !st.taken[rank],
+                "rank {rank} entered a collective twice in one round"
+            );
+            st.taken[rank] = true;
+            st.claimed += 1;
+        }
+        let len = self.deposit_and_wait(rank, contribution);
+        let mut out = Vec::new();
+        self.reduce_own_segment(rank, len, &mut out);
+        out
+    }
+
+    /// Shared deposit phase of the chunked and split-phase rounds: copy
+    /// `contribution` into this slot's staging buffer (uncontended lock),
+    /// then block until every rank of the round has deposited. Returns the
+    /// round's vector length.
+    fn deposit_and_wait(&self, slot: usize, contribution: &[f32]) -> usize {
+        {
+            let mut s = self.stage[slot].lock().unwrap();
+            s.clear();
+            s.extend_from_slice(contribution);
+        }
+        let mut st = self.state.lock().unwrap();
+        let my_gen = st.generation;
+        if st.deposited == 0 {
+            st.len = contribution.len();
+        } else {
+            assert_eq!(st.len, contribution.len(), "rank shape mismatch");
+        }
+        st.deposited += 1;
+        if st.deposited == self.n {
+            self.cv.notify_all();
+        }
+        while st.deposited < self.n && st.generation == my_gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.len
+    }
+
+    /// Shared reduce phase: sum segment `slot` of every rank's staged
+    /// contribution into `out` (cleared and resized first), **in slot
+    /// order** — the single definition of the per-element summation order
+    /// that makes chunked, legacy and split-phase results bitwise
+    /// identical. Clearing is unconditional: a segment that is empty THIS
+    /// round (len < n) must not leak a previous round's data downstream.
+    fn reduce_own_segment(&self, slot: usize, len: usize, out: &mut Vec<f32>) {
+        let (lo, hi) = segment(slot, len, self.n);
+        out.clear();
+        out.resize(hi - lo, 0.0);
+        if hi > lo {
+            for slot_buf in &self.stage {
+                let s = slot_buf.lock().unwrap();
+                for (o, x) in out.iter_mut().zip(&s[lo..hi]) {
+                    *o += x;
+                }
+            }
+        }
+    }
+
+    /// Phase 2 of a split round: deposit this rank's (possibly updated)
+    /// segment and receive the concatenation of every rank's segment in
+    /// slot order. In the sharded-optimizer step the segment deposited here
+    /// is the rank's **updated parameter shard**, so the gather broadcasts
+    /// fresh parameters to the whole group without the full gradient or
+    /// optimizer state ever materializing anywhere.
+    pub fn all_gather_as(&self, rank: usize, segment_data: &[f32]) -> Arc<Vec<f32>> {
+        assert!(rank < self.n, "rank {rank} out of {}", self.n);
+        {
+            let mut out = self.outseg[rank].lock().unwrap();
+            out.clear();
+            out.extend_from_slice(segment_data);
+        }
+        let mut st = self.state.lock().unwrap();
+        assert_eq!(
+            st.deposited, self.n,
+            "all_gather_as called outside a reduce-scatter round"
+        );
+        let (lo, hi) = segment(rank, st.len, self.n);
+        assert_eq!(
+            segment_data.len(),
+            hi - lo,
+            "rank {rank}: segment length {} vs expected {}",
+            segment_data.len(),
+            hi - lo
+        );
+        let my_gen = st.generation;
+        st.reduced += 1;
+        if st.reduced == self.n {
+            let mut buf = reclaim(&mut st.retired).unwrap_or_default();
+            buf.clear();
+            buf.reserve(st.len);
+            for seg in &self.outseg {
+                buf.extend_from_slice(&seg.lock().unwrap());
+            }
+            let result = Arc::new(buf);
+            self.finish_round(&mut st, result.clone());
+            return result;
+        }
+        while st.generation == my_gen {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.result.clone()
+    }
+
     fn round(&self, slot: usize, contribution: &[f32]) -> Arc<Vec<f32>> {
         {
             // one call per rank per round — a duplicate must fail loudly
@@ -221,54 +349,20 @@ impl AllReduceGroup {
         st.result.clone()
     }
 
-    /// Reduce-scatter + all-gather over per-rank staging slots.
+    /// Reduce-scatter + all-gather over per-rank staging slots
+    /// (deposit/reduce phases shared with [`AllReduceGroup::reduce_scatter_as`]).
     fn round_chunked(&self, slot: usize, contribution: &[f32]) -> Arc<Vec<f32>> {
-        // ---- deposit (uncontended copy, outside the group lock) ----
+        let len = self.deposit_and_wait(slot, contribution);
         {
-            let mut s = self.stage[slot].lock().unwrap();
-            s.clear();
-            s.extend_from_slice(contribution);
-        }
-        let mut st = self.state.lock().unwrap();
-        let my_gen = st.generation;
-        if st.deposited == 0 {
-            st.len = contribution.len();
-        } else {
-            assert_eq!(st.len, contribution.len(), "rank shape mismatch");
-        }
-        st.deposited += 1;
-        if st.deposited == self.n {
-            self.cv.notify_all();
-        }
-        while st.deposited < self.n && st.generation == my_gen {
-            st = self.cv.wait(st).unwrap();
-        }
-        let len = st.len;
-        drop(st);
-
-        // ---- reduce my segment over all ranks, in slot order ----
-        let (lo, hi) = segment(slot, len, self.n);
-        {
-            // cleared unconditionally: a segment that is empty THIS round
-            // (len < n) must not leak a previous round's data into the
-            // gather below
             let mut out = self.outseg[slot].lock().unwrap();
-            out.clear();
-            out.resize(hi - lo, 0.0);
-            if hi > lo {
-                // slot order fixes the per-element summation order
-                // (bitwise equality with the legacy path and across runs)
-                for slot_buf in &self.stage {
-                    let s = slot_buf.lock().unwrap();
-                    for (o, x) in out.iter_mut().zip(&s[lo..hi]) {
-                        *o += x;
-                    }
-                }
-            }
+            self.reduce_own_segment(slot, len, &mut out);
         }
 
         // ---- gather: last finisher concatenates segments in slot order ----
         let mut st = self.state.lock().unwrap();
+        // the round's generation cannot have advanced yet: `reduced`
+        // reaches n only after this very increment
+        let my_gen = st.generation;
         st.reduced += 1;
         if st.reduced == self.n {
             let mut buf = reclaim(&mut st.retired).unwrap_or_default();
@@ -518,6 +612,94 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn split_phase_equals_all_reduce_bitwise_property() {
+        // The sharded-optimizer invariant: reduce_scatter_as followed by an
+        // unchanged all_gather_as must reproduce all_reduce_as bitwise, for
+        // every rank count and for lengths that don't divide evenly
+        // (including len < n, where some segments are empty).
+        forall(
+            "split-phase-equals-all-reduce",
+            31,
+            30,
+            |r| {
+                let n = r.range(1, 9);
+                let len = r.range(0, 67);
+                let mut rng = r.split();
+                let contribs: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..len).map(|_| (rng.f32() - 0.5) * 3.0).collect())
+                    .collect();
+                (n, len, contribs)
+            },
+            |(n, len, contribs)| {
+                let reference = run_round(Algo::Chunked, contribs);
+                let g = AllReduceGroup::with_algo(*n, Algo::Chunked);
+                let handles: Vec<_> = contribs
+                    .iter()
+                    .cloned()
+                    .enumerate()
+                    .map(|(r, c)| {
+                        let g = g.clone();
+                        thread::spawn(move || {
+                            let seg = g.reduce_scatter_as(r, &c);
+                            g.all_gather_as(r, &seg).to_vec()
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    let got = h.join().unwrap();
+                    if got != reference {
+                        return Err(format!("split-phase != all_reduce at n={n} len={len}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn split_phase_reusable_and_carries_segment_edits() {
+        // Multiple rounds on one group, with the segment *modified* between
+        // the phases (exactly what the sharded optimizer does): the gather
+        // must broadcast the edited segments, and round state must reset.
+        let n = 3;
+        let g = AllReduceGroup::with_algo(n, Algo::Chunked);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut outs = Vec::new();
+                    for round in 0..4 {
+                        let contrib = vec![(r + round) as f32; 7];
+                        let mut seg = g.reduce_scatter_as(r, &contrib);
+                        for x in &mut seg {
+                            *x = -*x; // the "optimizer update"
+                        }
+                        outs.push(g.all_gather_as(r, &seg).to_vec());
+                    }
+                    outs
+                })
+            })
+            .collect();
+        for h in handles {
+            let outs = h.join().unwrap();
+            for (round, out) in outs.iter().enumerate() {
+                // sum over r of (r + round) = 3 + 3*round, negated
+                let expect = vec![-((3 + 3 * round) as f32); 7];
+                assert_eq!(out, &expect, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_split_phase_is_identity() {
+        let g = AllReduceGroup::with_algo(1, Algo::Chunked);
+        let seg = g.reduce_scatter_as(0, &[1.5, -2.0, 3.25]);
+        assert_eq!(seg, vec![1.5, -2.0, 3.25]);
+        let out = g.all_gather_as(0, &seg);
+        assert_eq!(&**out, &[1.5, -2.0, 3.25]);
     }
 
     #[test]

@@ -80,6 +80,16 @@ impl ModelDims {
             ..self.clone()
         }
     }
+
+    /// Bytes of Adam optimizer state under the paper's §4.1 mixed-precision
+    /// recipe: fp32 master weights + two fp32 moments = 12 B/param on top
+    /// of the fp16 weight + gradient (18 B/param total, the number the
+    /// paper quotes). This is the replicated footprint ZeRO-style sharding
+    /// divides — see [`ParallelCfg::optimizer_bytes_per_rank`] and
+    /// docs/hotpath.md §Sharded optimizer.
+    pub fn adam_state_bytes(&self) -> usize {
+        12 * self.total_params()
+    }
 }
 
 /// Parallel layout: the (DP, TP, PP, EP) tuple of Table 2, plus ZeRO.
@@ -115,6 +125,27 @@ impl ParallelCfg {
     /// Total devices the layout occupies.
     pub fn world(&self) -> usize {
         self.dp * self.tp * self.pp
+    }
+
+    /// Optimizer-state bytes a single rank holds. A rank's parameter slice
+    /// is already `total / (pp · tp)` — pipeline stages and TP ranks own
+    /// disjoint weights regardless of any optimizer sharding (treating the
+    /// TP split as even; replicated LayerNorm/bias state is negligible at
+    /// these scales). Without `zero` that slice's Adam state is replicated
+    /// across the `dp` data-parallel replicas; with `zero` it is sharded
+    /// dp-ways — each replica keeps only the contiguous
+    /// [`crate::comm::collectives::segment`] shard its reduce-scatter
+    /// phase produces ([`crate::trainer::adam::ShardedAdam`]). So `zero`
+    /// buys exactly a dp-fold drop, never the tp-fold the rank already had
+    /// from tensor parallelism.
+    pub fn optimizer_bytes_per_rank(&self, m: &ModelDims) -> usize {
+        let slice = m.adam_state_bytes() / (self.pp * self.tp).max(1);
+        if self.zero {
+            let dp = self.dp.max(1);
+            (slice + dp - 1) / dp
+        } else {
+            slice
+        }
     }
 
     /// Validate divisibility constraints against a model + cluster.
@@ -400,6 +431,27 @@ mod tests {
         assert!(parse_kv("no equals sign").is_err());
         let bad = parse_kv("bogus = 1").unwrap();
         assert!(apply_model_overrides(&mut m, &bad).is_err());
+    }
+
+    #[test]
+    fn optimizer_memory_math() {
+        let m = moe_small_setting();
+        // 12 B/param replicated (paper §4.1: fp32 master + two moments)
+        assert_eq!(m.adam_state_bytes(), 12 * m.total_params());
+        let base = ParallelCfg {
+            dp: 4, tp: 2, pp: 4, ep: 2, zero: false, scheme: Scheme::PpMoE,
+        };
+        // a rank's slice is 1/(pp·tp) of the model with or without ZeRO —
+        // TP ranks own disjoint weights already
+        let replicated = base.optimizer_bytes_per_rank(&m);
+        assert_eq!(replicated, m.adam_state_bytes() / 8);
+        // ZeRO shards the slice's state across exactly the dp replicas
+        let sharded = ParallelCfg { zero: true, ..base }.optimizer_bytes_per_rank(&m);
+        assert!(sharded <= replicated / 4 + 1, "{sharded} vs {replicated}");
+        assert!(sharded * 4 >= replicated, "shards must cover the state");
+        // tp alone must not be attributed to the zero knob
+        let tp1 = ParallelCfg { tp: 1, ..base }.optimizer_bytes_per_rank(&m);
+        assert_eq!(tp1, 2 * replicated);
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub struct Args {
 }
 
 /// Boolean switches (everything else with `--` takes a value).
-const KNOWN_FLAGS: &[&str] = &["gpipe", "zero", "verbose", "help", "no-full"];
+const KNOWN_FLAGS: &[&str] = &["gpipe", "zero", "verbose", "help", "no-full", "no-overlap"];
 
 impl Args {
     /// Parse an argv iterator (without the program name).

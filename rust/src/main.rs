@@ -31,6 +31,12 @@ COMMANDS:
                 --virtual N       interleaved 1F1B with N virtual chunks per
                                   stage (must match the artifacts' export;
                                   default: follow the manifest)
+                --checkpoint DIR  write params + sharded optimizer state
+                --resume DIR      resume from a --checkpoint dir (bitwise
+                                  continuation: data stream, Adam moments
+                                  and LR warmup all pick up mid-run)
+                --no-overlap      eager wrap-edge sends instead of the
+                                  staged d2h -> channel -> h2d pipeline
   sweep       print Table 2 (simulated throughput, 13 rows)
   breakdown   print Tables 1 and 3 (simulated forward breakdowns)
   simulate    one point: --model NAME --dp N --tp N --pp N
@@ -87,6 +93,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         virtual_stages: args.get_usize("virtual", 0)?,
         warmup_steps: args.get_usize("warmup", 0)?,
         checkpoint_dir: args.get("checkpoint").map(PathBuf::from),
+        resume_dir: args.get("resume").map(PathBuf::from),
+        overlap_wrap_edges: !args.has_flag("no-overlap"),
     };
     let report = trainer::train(&cfg)?;
     println!("\n=== training report ===");

@@ -59,6 +59,52 @@ impl Op {
     }
 }
 
+/// The (stage, chunk) producing the forward input of `(s, c)` in the
+/// virtual ring: upstream in the pipeline, or — for chunk `c > 0` on stage
+/// 0 — the **wrap-around** edge from chunk `c−1` leaving the last stage.
+/// `None` for (0, 0), which is fed by the driver.
+///
+/// This is the single source of truth for the ring topology: the live
+/// trainer wires its p2p channels from it and the schedule validators
+/// (tests/schedule_prop.rs) replay the same edges.
+pub fn fwd_producer(s: usize, c: usize, p: usize) -> Option<(usize, usize)> {
+    if s > 0 {
+        Some((s - 1, c))
+    } else if c > 0 {
+        Some((p - 1, c - 1)) // wrap-around edge
+    } else {
+        None
+    }
+}
+
+/// Where `(s, c)`'s forward output goes: downstream in the ring, the
+/// wrap-around edge into chunk `c+1` on stage 0, or `None` for the loss
+/// chunk (stage `p−1`, chunk `v−1`). The backward edges mirror these.
+pub fn fwd_consumer(s: usize, c: usize, p: usize, v: usize) -> Option<(usize, usize)> {
+    if s + 1 < p {
+        Some((s + 1, c))
+    } else if c + 1 < v {
+        Some((0, c + 1)) // wrap-around edge
+    } else {
+        None
+    }
+}
+
+/// Whether the forward edge **leaving** `(s, c)` is a wrap-around hop
+/// (last stage → stage 0, next chunk). These are the edges the trainer's
+/// overlapped d2h → channel → h2d staging applies to (docs/hotpath.md
+/// §Wrap-edge overlap).
+pub fn is_wrap_fwd(s: usize, c: usize, p: usize, v: usize) -> bool {
+    s + 1 >= p && c + 1 < v
+}
+
+/// Whether the backward edge leaving `(s, c)` (carrying `dy` to the chunk's
+/// forward producer) is a wrap-around hop (stage 0 → last stage, previous
+/// chunk).
+pub fn is_wrap_bwd(s: usize, c: usize) -> bool {
+    s == 0 && c > 0
+}
+
 /// Kind of schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Schedule {
@@ -578,5 +624,33 @@ mod tests {
     #[should_panic(expected = "micros")]
     fn interleaved_requires_divisible_micros() {
         schedule_virtual(Schedule::OneFOneB, 4, 6, 2);
+    }
+
+    #[test]
+    fn ring_topology_edges_are_consistent() {
+        // fwd_producer and fwd_consumer are inverses over the virtual ring,
+        // and the wrap predicates agree with where the edges actually land
+        for p in 1..5usize {
+            for v in 1..5usize {
+                for s in 0..p {
+                    for c in 0..v {
+                        if let Some((ds, dc)) = fwd_consumer(s, c, p, v) {
+                            assert_eq!(fwd_producer(ds, dc, p), Some((s, c)));
+                            assert_eq!(is_wrap_fwd(s, c, p, v), ds == 0 && dc == c + 1);
+                        } else {
+                            assert_eq!((s, c), (p - 1, v - 1), "only the loss chunk ends");
+                        }
+                        if let Some((ps, pc)) = fwd_producer(s, c, p) {
+                            assert_eq!(fwd_consumer(ps, pc, p, v), Some((s, c)));
+                            // the bwd edge (s, c) -> (ps, pc) wraps iff the
+                            // fwd edge it mirrors did
+                            assert_eq!(is_wrap_bwd(s, c), ps == p - 1 && pc + 1 == c);
+                        } else {
+                            assert_eq!((s, c), (0, 0), "only (0, 0) is driver-fed");
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -81,6 +81,17 @@ impl DeviceTensor {
         Ok(())
     }
 
+    /// Readback into a recycled slab, returning it wrapped as a host
+    /// [`Tensor`] with this tensor's shape — the d2h leg of the p2p
+    /// staging pipeline (d2h → channel → h2d). The caller supplies the
+    /// slab (usually from a [`crate::trainer::pool::SlabPool`]); its
+    /// storage travels through the channel and is recycled by the
+    /// consumer's `SlabReturn`.
+    pub fn read_to_tensor(&self, mut slab: Vec<f32>) -> Result<Tensor> {
+        self.read_into_vec(&mut slab)?;
+        Ok(Tensor::f32(slab, self.spec.shape.clone()))
+    }
+
     /// Readback into an existing host tensor of the same shape/dtype,
     /// reusing its storage.
     pub fn read_into(&self, out: &mut Tensor) -> Result<()> {
@@ -162,6 +173,20 @@ mod tests {
         let mut v = Vec::new();
         d.read_into_vec(&mut v).unwrap();
         assert_eq!(v, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn read_to_tensor_reuses_slab_storage() {
+        let d = device(
+            &Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]),
+            spec("act", vec![2, 2], DType::F32),
+        );
+        let slab = Vec::with_capacity(4);
+        let ptr = slab.as_ptr();
+        let t = d.read_to_tensor(slab).unwrap();
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.as_f32().unwrap().as_ptr(), ptr, "slab storage must be reused");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Fused Adam optimizer (host-side, fp32).
+//! Fused Adam optimizer (host-side, fp32) and its ZeRO-style sharded form.
 //!
 //! The paper trains with an fp16 Adam keeping fp32 master weights and
 //! moments (18 B/param, §4.1); on CPU-PJRT everything is already fp32, so
@@ -6,9 +6,28 @@
 //! Lives in L3 (not HLO) because each stage's parameters are a ragged list
 //! of differently-shaped tensors — shape-monomorphic HLO would need one
 //! artifact per shape for no benefit at this scale.
+//!
+//! ## Sharded state ([`ShardedAdam`], docs/hotpath.md §Sharded optimizer)
+//!
+//! Adam is elementwise, so its state partitions freely: rank r of an
+//! n-rank group keeps moments only for the contiguous flat element range
+//! [`crate::comm::collectives::segment`]`(r, numel, n)` of its (stage,
+//! chunk)'s parameters — exactly the shard the chunked all-reduce's
+//! reduce-scatter phase already produces. One data-parallel step
+//! ([`sharded_group_step`]) is then reduce-scatter the gradients → Adam on
+//! the owned shard → all-gather the updated parameters, and is **bitwise**
+//! identical to summing the gradients with `all_reduce_as` and running the
+//! monolithic [`Adam::fused_update`] on every rank (property-tested
+//! below): the per-element summation order and the per-element update
+//! arithmetic are unchanged, only their location moves. At n = 1 (the live
+//! trainer's current group size per stage) the shard is the whole chunk
+//! and the update degenerates to the plain fused sweep, bitwise.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
 
+use crate::comm::collectives::segment;
+use crate::comm::AllReduceGroup;
 use crate::runtime::Tensor;
 
 /// Adam with bias correction (Kingma & Ba), β = (0.9, 0.95) like the paper.
@@ -80,14 +99,27 @@ impl Adam {
             // fused loop: single pass over the four arrays, scale applied
             // on the fly
             for i in 0..p.len() {
-                let gi = g[i] * gscale;
-                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
-                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
-                p[i] -= lr_t * m[i] / (v[i].sqrt() + self.eps);
+                adam_elem(
+                    &mut m[i], &mut v[i], &mut p[i],
+                    g[i] * gscale,
+                    self.beta1, self.beta2, lr_t, self.eps,
+                );
             }
         }
         Ok(())
     }
+}
+
+/// The single definition of Adam's per-element update — every sweep in
+/// this module (monolithic [`Adam::fused_update`] and both sharded paths)
+/// funnels through it, so their bitwise agreement is structural, not a
+/// convention to maintain across copies.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn adam_elem(m: &mut f32, v: &mut f32, p: &mut f32, gi: f32, b1: f32, b2: f32, lr_t: f32, eps: f32) {
+    *m = b1 * *m + (1.0 - b1) * gi;
+    *v = b2 * *v + (1.0 - b2) * gi * gi;
+    *p -= lr_t * *m / (v.sqrt() + eps);
 }
 
 /// Global L2 norm over a gradient list, as one read-only pass (no
@@ -102,6 +134,286 @@ pub fn global_grad_norm(grads: &[Tensor]) -> Result<f32> {
         }
     }
     Ok(sumsq.sqrt())
+}
+
+/// Map a flat element range `[lo, hi)` onto a ragged tensor list: yields
+/// `(tensor_index, within-tensor element range)` covering exactly the
+/// overlap of `[lo, hi)` with each tensor's flat span, in order.
+fn flat_slices(sizes: &[usize], lo: usize, hi: usize) -> Vec<(usize, std::ops::Range<usize>)> {
+    let mut out = Vec::new();
+    let mut base = 0usize;
+    for (i, &n) in sizes.iter().enumerate() {
+        let t_lo = lo.max(base);
+        let t_hi = hi.min(base + n);
+        if t_lo < t_hi {
+            out.push((i, (t_lo - base)..(t_hi - base)));
+        }
+        base += n;
+    }
+    out
+}
+
+/// Where a sharded sweep reads its gradient elements from.
+#[derive(Clone, Copy)]
+enum GradSrc<'a> {
+    /// The trainer path: the chunk's ragged accumulated-gradient tensors.
+    Ragged(&'a [Tensor]),
+    /// The group path: this rank's flat reduce-scatter output.
+    Flat(&'a [f32]),
+}
+
+/// Adam whose state covers one contiguous **shard** of a flat parameter
+/// space — rank `r` of `n` owns [`segment`]`(r, numel, n)` of the (stage,
+/// chunk)'s concatenated parameters and keeps moments only for it
+/// (`8 B/param / n` instead of `8 B/param` replicated).
+///
+/// With `nranks = 1` the shard is the whole space and
+/// [`ShardedAdam::update_shard`] is **bitwise** identical to
+/// [`Adam::fused_update`] over the same tensors (same per-element f32
+/// operation order) — the live trainer's per-(stage, chunk) path. With
+/// `nranks > 1`, [`sharded_group_step`] drives the full data-parallel
+/// reduce-scatter → shard update → all-gather round.
+#[derive(Debug)]
+pub struct ShardedAdam {
+    /// Learning rate (mutable: the trainer applies LR warmup per step).
+    pub lr: f32,
+    /// First-moment decay.
+    pub beta1: f32,
+    /// Second-moment decay.
+    pub beta2: f32,
+    /// Denominator fuzz.
+    pub eps: f32,
+    /// Completed update count (drives bias correction; checkpointed).
+    pub step: u64,
+    rank: usize,
+    nranks: usize,
+    /// Per-tensor element counts of the full (chunk) parameter list.
+    sizes: Vec<usize>,
+    /// Owned flat range: `segment(rank, total, nranks)`.
+    lo: usize,
+    hi: usize,
+    /// First/second moments for the owned shard only (`hi - lo` elements).
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl ShardedAdam {
+    /// Fresh sharded state for rank `rank` of `nranks` over `params`
+    /// (the full chunk parameter list — every rank passes the same list).
+    pub fn new(lr: f32, params: &[Tensor], rank: usize, nranks: usize) -> ShardedAdam {
+        assert!(nranks > 0 && rank < nranks, "rank {rank} of {nranks}");
+        let sizes: Vec<usize> = params.iter().map(Tensor::numel).collect();
+        let total: usize = sizes.iter().sum();
+        let (lo, hi) = segment(rank, total, nranks);
+        ShardedAdam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.95, // the paper's β2 (§4.2)
+            eps: 1e-8,
+            step: 0,
+            rank,
+            nranks,
+            sizes,
+            lo,
+            hi,
+            m: vec![0.0; hi - lo],
+            v: vec![0.0; hi - lo],
+        }
+    }
+
+    /// This shard's rank within its group.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Group size the parameter space is sharded across.
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    /// Flat element count of the full (unsharded) parameter space.
+    pub fn total(&self) -> usize {
+        self.sizes.iter().sum()
+    }
+
+    /// The owned flat element range (`segment(rank, total, nranks)`).
+    pub fn owned(&self) -> std::ops::Range<usize> {
+        self.lo..self.hi
+    }
+
+    /// Checkpoint view: (step, first moments, second moments) of the shard.
+    pub fn state(&self) -> (u64, &[f32], &[f32]) {
+        (self.step, &self.m, &self.v)
+    }
+
+    /// Restore checkpointed shard state (shapes must match this shard).
+    pub fn restore_state(&mut self, step: u64, m: &[f32], v: &[f32]) -> Result<()> {
+        ensure!(
+            m.len() == self.m.len() && v.len() == self.v.len(),
+            "optimizer shard mismatch: {} moments vs owned range {}..{}",
+            m.len(),
+            self.lo,
+            self.hi
+        );
+        self.step = step;
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        Ok(())
+    }
+
+    fn check_tensors(&self, params: &[Tensor]) -> Result<()> {
+        ensure!(
+            params.len() == self.sizes.len(),
+            "sharded Adam built over {} tensors, given {}",
+            self.sizes.len(),
+            params.len()
+        );
+        for (p, &n) in params.iter().zip(&self.sizes) {
+            ensure!(p.numel() == n, "parameter tensor size changed: {} vs {n}", p.numel());
+        }
+        Ok(())
+    }
+
+    /// One optimizer step over the owned shard, reading gradients from the
+    /// full ragged `grads` list (the trainer's `grad_acc` sub-slice).
+    /// Elements outside the shard are untouched. Bitwise identical to
+    /// [`Adam::fused_update`] restricted to the shard's elements.
+    pub fn update_shard(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        gscale: f32,
+    ) -> Result<()> {
+        ensure!(grads.len() == params.len(), "params/grads length mismatch");
+        self.sweep(params, GradSrc::Ragged(grads), gscale)
+    }
+
+    /// One optimizer step over the owned shard, reading gradients from a
+    /// **flat** shard-sized slice — the reduce-scatter output of
+    /// [`crate::comm::AllReduceGroup::reduce_scatter_as`].
+    pub fn update_flat(
+        &mut self,
+        params: &mut [Tensor],
+        gshard: &[f32],
+        gscale: f32,
+    ) -> Result<()> {
+        ensure!(
+            gshard.len() == self.hi - self.lo,
+            "flat gradient shard: {} elements vs owned {}..{}",
+            gshard.len(),
+            self.lo,
+            self.hi
+        );
+        self.sweep(params, GradSrc::Flat(gshard), gscale)
+    }
+
+    /// The one sharded sweep both update entry points dispatch to: walk the
+    /// owned flat range over the ragged tensors, applying [`adam_elem`] per
+    /// element. `GradSrc` only decides where a gradient element is read
+    /// from — the arithmetic and its order exist once.
+    fn sweep(&mut self, params: &mut [Tensor], grads: GradSrc<'_>, gscale: f32) -> Result<()> {
+        self.check_tensors(params)?;
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let lr_t = self.lr * bc2.sqrt() / bc1;
+        let mut off = 0usize; // offset into the shard-local moment arrays
+        for (ti, r) in flat_slices(&self.sizes, self.lo, self.hi) {
+            // pick this segment's gradient slice once; the inner loop is
+            // dispatch-free either way
+            let gseg: &[f32] = match grads {
+                GradSrc::Ragged(gs) => &gs[ti].as_f32()?[r.clone()],
+                GradSrc::Flat(flat) => &flat[off..off + r.len()],
+            };
+            let p = params[ti].as_f32_mut()?;
+            for (k, i) in r.clone().enumerate() {
+                let j = off + k;
+                adam_elem(
+                    &mut self.m[j], &mut self.v[j], &mut p[i],
+                    gseg[k] * gscale,
+                    self.beta1, self.beta2, lr_t, self.eps,
+                );
+            }
+            off += r.len();
+        }
+        Ok(())
+    }
+
+    /// Copy the owned parameter shard into `out` (cleared first) — the
+    /// all-gather deposit of [`sharded_group_step`].
+    pub fn flatten_owned(&self, params: &[Tensor], out: &mut Vec<f32>) -> Result<()> {
+        self.check_tensors(params)?;
+        out.clear();
+        out.reserve(self.hi - self.lo);
+        for (ti, r) in flat_slices(&self.sizes, self.lo, self.hi) {
+            out.extend_from_slice(&params[ti].as_f32()?[r]);
+        }
+        Ok(())
+    }
+
+    /// Write a full flat parameter vector (the all-gather result) back into
+    /// the ragged tensor list.
+    pub fn scatter_full(&self, params: &mut [Tensor], full: &[f32]) -> Result<()> {
+        self.check_tensors(params)?;
+        ensure!(
+            full.len() == self.total(),
+            "gathered {} elements vs {} parameters",
+            full.len(),
+            self.total()
+        );
+        let mut base = 0usize;
+        for p in params.iter_mut() {
+            let dst = p.as_f32_mut()?;
+            dst.copy_from_slice(&full[base..base + dst.len()]);
+            base += dst.len();
+        }
+        Ok(())
+    }
+}
+
+/// One data-parallel **sharded optimizer step** over an
+/// [`AllReduceGroup`]: reduce-scatter this rank's local gradient
+/// contribution (rank-order per-element sums — bitwise the all-reduce
+/// result), run Adam on the owned parameter shard only, then all-gather
+/// every rank's updated shard so all replicas hold the new parameters.
+///
+/// Bitwise equivalent to `all_reduce_as` + [`Adam::fused_update`] on every
+/// rank, while each rank stores 1/n of the moments and never materializes
+/// the full summed gradient (property-tested below). Call from exactly `n`
+/// threads per step, like the underlying collective.
+pub fn sharded_group_step(
+    opt: &mut ShardedAdam,
+    group: &Arc<AllReduceGroup>,
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    gscale: f32,
+) -> Result<()> {
+    ensure!(
+        group.ranks() == opt.nranks(),
+        "group of {} ranks vs optimizer sharded {} ways",
+        group.ranks(),
+        opt.nranks()
+    );
+    // flatten this rank's local (unsummed) gradient contribution
+    let mut flat = Vec::with_capacity(opt.total());
+    for g in grads {
+        flat.extend_from_slice(g.as_f32()?);
+    }
+    ensure!(
+        flat.len() == opt.total(),
+        "gradients: {} elements vs {} parameters",
+        flat.len(),
+        opt.total()
+    );
+    let reduced = group.reduce_scatter_as(opt.rank(), &flat);
+    opt.update_flat(params, &reduced, gscale)?;
+    // broadcast updated parameters: gather every rank's fresh shard
+    let mut shard = Vec::new();
+    opt.flatten_owned(params, &mut shard)?;
+    let full = group.all_gather_as(opt.rank(), &shard);
+    opt.scatter_full(params, &full)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -195,5 +507,186 @@ mod tests {
         ];
         assert!((global_grad_norm(&grads).unwrap() - 5.0).abs() < 1e-6);
         assert_eq!(global_grad_norm(&[]).unwrap(), 0.0);
+    }
+
+    // ---------------- sharded Adam ----------------
+
+    use crate::comm::{Algo, AllReduceGroup};
+    use crate::util::prop::forall;
+
+    #[test]
+    fn flat_slices_partition_ragged_lists() {
+        // [3, 0, 4, 2] flat space of 9 elements
+        let sizes = [3usize, 0, 4, 2];
+        assert_eq!(flat_slices(&sizes, 0, 9), vec![(0, 0..3), (2, 0..4), (3, 0..2)]);
+        assert_eq!(flat_slices(&sizes, 2, 5), vec![(0, 2..3), (2, 0..2)]);
+        assert_eq!(flat_slices(&sizes, 7, 9), vec![(3, 0..2)]);
+        assert_eq!(flat_slices(&sizes, 4, 4), vec![]);
+    }
+
+    fn rand_tensors(rng: &mut crate::util::prng::Rng, n: usize, max_elems: usize) -> Vec<Tensor> {
+        (0..n)
+            .map(|_| {
+                let k = rng.below(max_elems + 1);
+                let data: Vec<f32> = (0..k).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                Tensor::f32(data, vec![k])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_rank_shard_is_bitwise_fused_update() {
+        // nranks = 1: the live trainer's per-chunk path must reproduce the
+        // monolithic fused sweep exactly, including with a fold-in gscale
+        let mut rng = crate::util::prng::Rng::new(5);
+        let init = rand_tensors(&mut rng, 3, 40);
+        let mut mono_p = init.clone();
+        let mut mono = Adam::new(0.02, &mono_p);
+        let mut shard_p = init;
+        let mut shard = ShardedAdam::new(0.02, &shard_p, 0, 1);
+        for step in 0..5 {
+            let grads = rand_tensors(&mut rng, 3, 40);
+            // re-size grads to match params (rand_tensors draws fresh sizes)
+            let grads: Vec<Tensor> = mono_p
+                .iter()
+                .zip(&grads)
+                .map(|(p, g)| {
+                    let mut d = g.as_f32().unwrap().to_vec();
+                    d.resize(p.numel(), 0.25);
+                    Tensor::f32(d, p.shape.clone())
+                })
+                .collect();
+            let gscale = 1.0 / (step + 1) as f32;
+            mono.fused_update(&mut mono_p, &grads, gscale).unwrap();
+            shard.update_shard(&mut shard_p, &grads, gscale).unwrap();
+        }
+        for (a, b) in mono_p.iter().zip(&shard_p) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn sharded_group_step_matches_monolithic_bitwise_property() {
+        // THE equivalence the trainer refactor rests on: for n ∈ {1, 2, 4}
+        // ranks and random ragged shapes, 5 steps of reduce-scatter →
+        // shard-Adam → all-gather leave every rank's parameters BITWISE
+        // equal to all-reduce-summed gradients + the legacy monolithic
+        // fused_update.
+        forall(
+            "sharded-adam-equals-fused",
+            41,
+            18,
+            |r| {
+                let n = [1usize, 2, 4][r.below(3)];
+                let ntensors = r.range(1, 4);
+                let mut rng = r.split();
+                let init = rand_tensors(&mut rng, ntensors, 30);
+                // per-step, per-rank local gradient contributions
+                let steps = 5;
+                let grads: Vec<Vec<Vec<Tensor>>> = (0..steps)
+                    .map(|_| {
+                        (0..n)
+                            .map(|_| {
+                                init.iter()
+                                    .map(|p| {
+                                        let d: Vec<f32> = (0..p.numel())
+                                            .map(|_| rng.f32() * 2.0 - 1.0)
+                                            .collect();
+                                        Tensor::f32(d, p.shape.clone())
+                                    })
+                                    .collect()
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let gscales: Vec<f32> =
+                    (0..steps).map(|_| 0.25 + rng.f32()).collect();
+                (n, init, grads, gscales)
+            },
+            |(n, init, grads, gscales)| {
+                let n = *n;
+                // ---- monolithic reference: rank-order summed grads ----
+                let mut ref_p = init.clone();
+                let mut ref_opt = Adam::new(0.01, &ref_p);
+                for (per_rank, gscale) in grads.iter().zip(gscales) {
+                    let summed: Vec<Tensor> = (0..init.len())
+                        .map(|ti| {
+                            let mut acc = vec![0.0f32; init[ti].numel()];
+                            for rank_grads in per_rank {
+                                for (a, x) in
+                                    acc.iter_mut().zip(rank_grads[ti].as_f32().unwrap())
+                                {
+                                    *a += x;
+                                }
+                            }
+                            Tensor::f32(acc, init[ti].shape.clone())
+                        })
+                        .collect();
+                    ref_opt.fused_update(&mut ref_p, &summed, *gscale).unwrap();
+                }
+                // ---- sharded group: n threads, each a DP replica ----
+                let group = AllReduceGroup::with_algo(n, Algo::Chunked);
+                let mut rank_params: Vec<Vec<Tensor>> =
+                    (0..n).map(|_| init.clone()).collect();
+                let mut opts: Vec<ShardedAdam> =
+                    (0..n).map(|r| ShardedAdam::new(0.01, init, r, n)).collect();
+                std::thread::scope(|s| {
+                    for (rank, (opt, params)) in
+                        opts.iter_mut().zip(rank_params.iter_mut()).enumerate()
+                    {
+                        let group = group.clone();
+                        let grads = &grads;
+                        let gscales = &gscales;
+                        let _ = s.spawn(move || {
+                            for (per_rank, gscale) in grads.iter().zip(gscales) {
+                                sharded_group_step(
+                                    opt,
+                                    &group,
+                                    params,
+                                    &per_rank[rank],
+                                    *gscale,
+                                )
+                                .unwrap();
+                            }
+                        });
+                    }
+                });
+                for (rank, params) in rank_params.iter().enumerate() {
+                    for (ti, (a, b)) in params.iter().zip(&ref_p).enumerate() {
+                        if a.as_f32().unwrap() != b.as_f32().unwrap() {
+                            return Err(format!(
+                                "rank {rank} tensor {ti} diverged from monolithic (n={n})"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shard_state_roundtrips_through_restore() {
+        let params = vec![Tensor::f32(vec![1.0; 10], vec![10])];
+        let grads = vec![Tensor::f32(vec![0.1; 10], vec![10])];
+        let mut a = ShardedAdam::new(0.01, &params, 1, 3);
+        let mut pa = params.clone();
+        a.update_shard(&mut pa, &grads, 1.0).unwrap();
+        let (step, m, v) = a.state();
+        let (m, v) = (m.to_vec(), v.to_vec());
+        let mut b = ShardedAdam::new(0.01, &params, 1, 3);
+        b.restore_state(step, &m, &v).unwrap();
+        let mut pb = pa.clone();
+        let mut pa2 = pa.clone();
+        a.update_shard(&mut pa2, &grads, 0.5).unwrap();
+        b.update_shard(&mut pb, &grads, 0.5).unwrap();
+        assert_eq!(pa2, pb);
+        // wrong-rank state refuses
+        let mut c = ShardedAdam::new(0.01, &params, 0, 2);
+        assert!(c.restore_state(step, &m, &v).is_err());
+        // owned range follows the collective's segment split
+        assert_eq!(ShardedAdam::new(0.01, &params, 0, 3).owned(), 0..4);
+        assert_eq!(ShardedAdam::new(0.01, &params, 1, 3).owned(), 4..7);
+        assert_eq!(ShardedAdam::new(0.01, &params, 2, 3).owned(), 7..10);
     }
 }

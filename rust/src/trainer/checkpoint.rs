@@ -2,6 +2,12 @@
 //!
 //! Each stage writes its parameters in the exact manifest `.bin` layout, so
 //! a checkpoint directory is a drop-in replacement for `artifacts/params/`.
+//! Alongside the parameters, a checkpoint carries the **sharded optimizer
+//! state** (`stage<i>.opt.bin`: per-chunk Adam moments + step counters,
+//! [`save_optimizer`]) and a tiny `train_state.json` (completed optimizer
+//! steps, [`save_train_state`]) so a resumed run replays the exact data
+//! stream position — together they make resumption **bitwise** equal to an
+//! uninterrupted run (rust/tests/trainer_and_tp.rs).
 //! `evaluate` runs the full forward chain + `loss_eval` artifact over
 //! held-out synthetic batches — the validation-loss half of Fig. 5.
 
@@ -9,6 +15,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::adam::ShardedAdam;
 use crate::data::Corpus;
 use crate::runtime::{Manifest, Runtime, Tensor};
 
@@ -58,6 +65,116 @@ pub fn load_stage(dir: &Path, stage: usize, manifest: &Manifest) -> Result<Vec<T
             Tensor::f32(data, p.shape.clone())
         })
         .collect())
+}
+
+/// Write one stage's sharded optimizer state as `<dir>/stage<i>.opt.bin`.
+///
+/// Layout (little-endian): `u64` chunk count, then per chunk `u64 step`,
+/// `u64 lo`, `u64 hi` (the shard's flat element range) followed by
+/// `hi − lo` f32 first moments and `hi − lo` f32 second moments. f32 bits
+/// round-trip exactly, so a resumed step is bitwise-equal to an
+/// uninterrupted one.
+pub fn save_optimizer(dir: &Path, stage: usize, opts: &[ShardedAdam]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&(opts.len() as u64).to_le_bytes());
+    for opt in opts {
+        let (step, m, v) = opt.state();
+        let owned = opt.owned();
+        bytes.extend_from_slice(&step.to_le_bytes());
+        bytes.extend_from_slice(&(owned.start as u64).to_le_bytes());
+        bytes.extend_from_slice(&(owned.end as u64).to_le_bytes());
+        for x in m {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        for x in v {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(dir.join(format!("stage{stage}.opt.bin")), bytes)
+        .with_context(|| format!("writing optimizer state for stage {stage}"))?;
+    Ok(())
+}
+
+/// Restore `<dir>/stage<i>.opt.bin` into freshly-constructed per-chunk
+/// optimizers. The shard layout (chunk count and each chunk's owned flat
+/// range) must match — a checkpoint from a different rank/group geometry
+/// fails loudly instead of silently mis-assigning moments.
+pub fn load_optimizer(dir: &Path, stage: usize, opts: &mut [ShardedAdam]) -> Result<()> {
+    fn take_u64(bytes: &[u8], cur: &mut usize) -> Result<u64> {
+        if *cur + 8 > bytes.len() {
+            bail!("truncated optimizer state at byte {cur}");
+        }
+        let v = u64::from_le_bytes(bytes[*cur..*cur + 8].try_into().unwrap());
+        *cur += 8;
+        Ok(v)
+    }
+    fn take_f32s(bytes: &[u8], cur: &mut usize, n: usize) -> Result<Vec<f32>> {
+        if *cur + 4 * n > bytes.len() {
+            bail!("truncated moment array at byte {cur}");
+        }
+        let out = bytes[*cur..*cur + 4 * n]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        *cur += 4 * n;
+        Ok(out)
+    }
+
+    let path = dir.join(format!("stage{stage}.opt.bin"));
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut cur = 0usize;
+    let chunks = take_u64(&bytes, &mut cur)? as usize;
+    if chunks != opts.len() {
+        bail!(
+            "{}: {} chunks in checkpoint vs {} optimizers",
+            path.display(),
+            chunks,
+            opts.len()
+        );
+    }
+    for opt in opts.iter_mut() {
+        let step = take_u64(&bytes, &mut cur)?;
+        let lo = take_u64(&bytes, &mut cur)? as usize;
+        let hi = take_u64(&bytes, &mut cur)? as usize;
+        if opt.owned() != (lo..hi) {
+            bail!(
+                "{}: checkpoint shard {lo}..{hi} vs optimizer shard {:?}",
+                path.display(),
+                opt.owned()
+            );
+        }
+        let n = hi - lo;
+        let m = take_f32s(&bytes, &mut cur, n)?;
+        let v = take_f32s(&bytes, &mut cur, n)?;
+        opt.restore_state(step, &m, &v)?;
+    }
+    if cur != bytes.len() {
+        bail!("{}: {} trailing bytes", path.display(), bytes.len() - cur);
+    }
+    Ok(())
+}
+
+/// Record how many optimizer steps the checkpoint covers
+/// (`<dir>/train_state.json`) so a resumed run can fast-forward the data
+/// stream to the exact position an uninterrupted run would be at.
+pub fn save_train_state(dir: &Path, steps: usize) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("train_state.json"), format!("{{\"steps\": {steps}}}\n"))
+        .context("writing train_state.json")?;
+    Ok(())
+}
+
+/// Completed-step count recorded by [`save_train_state`].
+pub fn load_train_state(dir: &Path) -> Result<usize> {
+    let path = dir.join("train_state.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = crate::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    j.req("steps")?
+        .as_usize()
+        .context("train_state.json: steps")
 }
 
 /// Validation loss over `batches` held-out batches.
@@ -166,6 +283,84 @@ mod tests {
         let loaded = load_stage(&dir, 0, &m).unwrap();
         assert_eq!(loaded, params);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn optimizer_state_roundtrip_resumes_bitwise() {
+        // The satellite contract, host-side: params + per-chunk sharded
+        // Adam moments round-trip through save/load, and one step taken
+        // after the round-trip is BITWISE equal to one taken without it.
+        let dir = std::env::temp_dir().join(format!("ppmoe_opt_{}", std::process::id()));
+        let m = fake_manifest(); // 2 tensors, treated as 2 chunks below
+        let mut params = vec![
+            Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]),
+            Tensor::f32(vec![5.0, 6.0], vec![2]),
+        ];
+        let grads = vec![
+            Tensor::f32(vec![0.5, -0.25, 0.125, 1.0], vec![2, 2]),
+            Tensor::f32(vec![-0.75, 0.375], vec![2]),
+        ];
+        // chunk 0 owns tensor 0, chunk 1 owns tensor 1 (single-rank shards)
+        let mut opts = vec![
+            ShardedAdam::new(0.05, &params[..1], 0, 1),
+            ShardedAdam::new(0.05, &params[1..], 0, 1),
+        ];
+        for _ in 0..3 {
+            opts[0].update_shard(&mut params[..1], &grads[..1], 0.5).unwrap();
+            opts[1].update_shard(&mut params[1..], &grads[1..], 0.5).unwrap();
+        }
+        save_stage(&dir, 0, &m, &params).unwrap();
+        save_optimizer(&dir, 0, &opts).unwrap();
+        save_train_state(&dir, 3).unwrap();
+
+        // uninterrupted continuation
+        let mut p_cont = params.clone();
+        opts[0].update_shard(&mut p_cont[..1], &grads[..1], 0.5).unwrap();
+        opts[1].update_shard(&mut p_cont[1..], &grads[1..], 0.5).unwrap();
+
+        // resumed continuation from disk
+        let mut p_res = load_stage(&dir, 0, &m).unwrap();
+        let mut opts_res = vec![
+            ShardedAdam::new(0.05, &p_res[..1], 0, 1),
+            ShardedAdam::new(0.05, &p_res[1..], 0, 1),
+        ];
+        load_optimizer(&dir, 0, &mut opts_res).unwrap();
+        assert_eq!(load_train_state(&dir).unwrap(), 3);
+        opts_res[0].update_shard(&mut p_res[..1], &grads[..1], 0.5).unwrap();
+        opts_res[1].update_shard(&mut p_res[1..], &grads[1..], 0.5).unwrap();
+
+        assert_eq!(p_cont, p_res, "resumed step must be bitwise-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn optimizer_load_rejects_mismatched_shards() {
+        let dir = std::env::temp_dir().join(format!("ppmoe_opt2_{}", std::process::id()));
+        let params = vec![Tensor::f32(vec![0.0; 10], vec![10])];
+        let opts = vec![ShardedAdam::new(0.01, &params, 0, 1)];
+        save_optimizer(&dir, 0, &opts).unwrap();
+        // wrong chunk count
+        let mut two = vec![
+            ShardedAdam::new(0.01, &params, 0, 1),
+            ShardedAdam::new(0.01, &params, 0, 1),
+        ];
+        assert!(load_optimizer(&dir, 0, &mut two).is_err());
+        // wrong shard geometry (rank 1 of 2 owns a different flat range)
+        let mut wrong = vec![ShardedAdam::new(0.01, &params, 1, 2)];
+        assert!(load_optimizer(&dir, 0, &mut wrong).is_err());
+        // missing stage file
+        let mut ok = vec![ShardedAdam::new(0.01, &params, 0, 1)];
+        assert!(load_optimizer(&dir, 7, &mut ok).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_state_roundtrip_and_missing() {
+        let dir = std::env::temp_dir().join(format!("ppmoe_ts_{}", std::process::id()));
+        save_train_state(&dir, 42).unwrap();
+        assert_eq!(load_train_state(&dir).unwrap(), 42);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(load_train_state(&dir).is_err());
     }
 
     #[test]

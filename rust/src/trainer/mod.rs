@@ -44,12 +44,45 @@
 //! * The constant `aux_coef` cotangent is staged once per run per chunk,
 //!   gradients accumulate host-side through a reused scratch buffer, and
 //!   the microbatch mean + grad-clip factor are folded into a single fused
-//!   Adam sweep ([`adam::Adam::fused_update`]) — one pass over each
-//!   parameter instead of three.
+//!   sweep per (stage, chunk) shard ([`adam::ShardedAdam::update_shard`])
+//!   — one pass over each parameter instead of three.
 //! * After the optimizer step, parameters are re-staged in place
 //!   ([`crate::runtime::Runtime::restage_buffers`]); chunk executables
 //!   address their parameters as sub-slices of the stage-level buffers
 //!   ([`crate::runtime::Manifest::chunk_param_range`]).
+//!
+//! ## Sharded per-chunk optimizer (docs/hotpath.md §Sharded optimizer)
+//!
+//! Optimizer state lives per (stage, chunk): each chunk owns a
+//! [`adam::ShardedAdam`] over its contiguous parameter sub-slice, shaped
+//! for rank r of the stage's (future) data-parallel `AllReduceGroup` —
+//! today each stage is a single replica, so every shard spans its whole
+//! chunk and the update is bitwise the historic monolithic fused sweep.
+//! The n-rank path (reduce-scatter grads → Adam on the owned shard →
+//! all-gather params, [`adam::sharded_group_step`]) is property-tested
+//! bitwise-equal against the monolithic reference, and the per-chunk
+//! moments are what checkpoints carry ([`checkpoint::save_optimizer`]) —
+//! which is also what makes resumption bitwise
+//! ([`TrainerCfg::resume_dir`]).
+//!
+//! ## Overlapped wrap-edge transfers (docs/hotpath.md §Wrap-edge overlap)
+//!
+//! The interleaved ring's wrap-around hops ((p−1, c) → (0, c+1) forward,
+//! (0, c) → (p−1, c−1) backward) are a staged d2h → channel → h2d
+//! pipeline: the producer issues the d2h readback into a pooled slab
+//! immediately after the producing execute, but defers the channel send to
+//! its next blocking point (the following op's recv, or the end of the
+//! step). Under an asynchronous PJRT backend the readback DMA then runs
+//! while the stage dispatches its next op — e.g. stage p−1's wrap readback
+//! overlaps its own loss-chunk backward, instead of serializing the ring.
+//! Wrap-edge slab pools are pre-seeded with two slabs
+//! ([`pool::SlabPool::prefill`]): one staged on the producer while the
+//! previous drains through the channel. The deferral never reorders a
+//! channel (single queue, FIFO flush) and every payload is flushed before
+//! the producer can block, so the schedule's dependency structure — and
+//! the loss trajectory — are unchanged bitwise
+//! (rust/tests/pipeline_equivalence.rs). `overlap_wrap_edges: false`
+//! restores eager sends for A/B timing (`--no-overlap`).
 //!
 //! [`DeviceTensor`]: crate::runtime::DeviceTensor
 
@@ -57,6 +90,7 @@ pub mod adam;
 pub mod checkpoint;
 pub mod pool;
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -67,9 +101,11 @@ use anyhow::{bail, Context, Result};
 use crate::comm::Barrier;
 use crate::data::Corpus;
 use crate::metrics::Timers;
-use crate::pipeline::{schedule_virtual, Op, Schedule};
+use crate::pipeline::{
+    fwd_consumer, fwd_producer, is_wrap_bwd, is_wrap_fwd, schedule_virtual, Op, Schedule,
+};
 use crate::runtime::{Runtime, Tensor};
-use adam::{global_grad_norm, Adam};
+use adam::{global_grad_norm, ShardedAdam};
 use pool::{slab_pair, SlabPool, SlabReturn};
 
 /// Training hyperparameters.
@@ -99,8 +135,20 @@ pub struct TrainerCfg {
     /// steps of Fig. 5; 0 disables).
     pub warmup_steps: usize,
     /// If set, every stage writes its final parameters here
-    /// (`stage<i>.bin`, same layout as the manifest) for `evaluate`.
+    /// (`stage<i>.bin`, same layout as the manifest) for `evaluate`, plus
+    /// its sharded optimizer state (`stage<i>.opt.bin`) and the completed
+    /// step count (`train_state.json`) so the run can be resumed.
     pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from a checkpoint directory previously written via
+    /// `checkpoint_dir`: parameters, per-chunk Adam moments and the data
+    /// stream position are all restored, making the resumed trajectory
+    /// bitwise-equal to an uninterrupted run.
+    pub resume_dir: Option<PathBuf>,
+    /// Stage the wrap-around-edge d2h readback and defer its channel send
+    /// to the next blocking point (overlapping the readback with the next
+    /// op's dispatch); `false` restores eager per-op sends (`--no-overlap`).
+    /// Either way the executed schedule and losses are bitwise identical.
+    pub overlap_wrap_edges: bool,
 }
 
 impl Default for TrainerCfg {
@@ -117,6 +165,8 @@ impl Default for TrainerCfg {
             virtual_stages: 0,
             warmup_steps: 0,
             checkpoint_dir: None,
+            resume_dir: None,
+            overlap_wrap_edges: true,
         }
     }
 }
@@ -202,27 +252,60 @@ struct StageIo {
     timer_tx: Sender<(usize, Timers, Vec<Op>)>,
 }
 
-/// The producer of (stage, chunk)'s forward input: upstream in the ring,
-/// or None for (0, 0) (fed by the driver).
-fn fwd_producer(s: usize, c: usize, p: usize) -> Option<(usize, usize)> {
-    if s > 0 {
-        Some((s - 1, c))
-    } else if c > 0 {
-        Some((p - 1, c - 1)) // wrap-around edge
-    } else {
-        None
-    }
+/// A wrap-edge payload whose d2h readback has been issued (performed
+/// synchronously under the vendored stub, an in-flight DMA under a real
+/// async PJRT backend) but whose channel send is deferred to the stage's
+/// next blocking point — the staged middle of the d2h → channel → h2d
+/// pipeline. At most one message is ever staged (flushes run at every op
+/// boundary), which with the pre-seeded pool slab makes the wrap edges
+/// double-buffered.
+enum StagedMsg {
+    /// A forward activation for the wrap edge (p−1, c) → (0, c+1).
+    Act {
+        /// Producing chunk (indexes the stage's [`ChunkIo`]).
+        chunk: usize,
+        /// Microbatch index.
+        micro: usize,
+        /// Payload (slab-backed).
+        x: Tensor,
+        /// Accumulated aux scalar travelling with it.
+        aux: f32,
+    },
+    /// A backward gradient for the wrap edge (0, c) → (p−1, c−1).
+    Grad {
+        /// Producing chunk.
+        chunk: usize,
+        /// Microbatch index.
+        micro: usize,
+        /// Payload (slab-backed).
+        dy: Tensor,
+    },
 }
 
-/// Where (stage, chunk)'s forward output goes: downstream in the ring, or
-/// None for the loss chunk.
-fn fwd_consumer(s: usize, c: usize, p: usize, v: usize) -> Option<(usize, usize)> {
-    if s + 1 < p {
-        Some((s + 1, c))
-    } else if c + 1 < v {
-        Some((0, c + 1)) // wrap-around edge
-    } else {
-        None
+/// Send every staged wrap-edge payload, in FIFO order. Called before any
+/// blocking recv and at the end of each step's op walk, so a staged
+/// payload can never participate in a deadlock: the producer flushes
+/// before it can block on anything downstream of the payload.
+fn flush_staged(pending: &mut VecDeque<StagedMsg>, chunks: &[ChunkIo]) {
+    while let Some(msg) = pending.pop_front() {
+        match msg {
+            StagedMsg::Act { chunk, micro, x, aux } => {
+                chunks[chunk]
+                    .tx_fwd
+                    .as_ref()
+                    .expect("staged act on a chunk without a forward edge")
+                    .send(ActMsg { micro, x, aux })
+                    .ok();
+            }
+            StagedMsg::Grad { chunk, micro, dy } => {
+                chunks[chunk]
+                    .tx_bwd
+                    .as_ref()
+                    .expect("staged grad on a chunk without a backward edge")
+                    .send(GradMsg { micro, dy })
+                    .ok();
+            }
+        }
     }
 }
 
@@ -248,6 +331,13 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     if v > 1 && m % p != 0 {
         bail!("interleaved schedules need --micro ({m}) divisible by stages ({p})");
     }
+    // resumption: the checkpointed step count positions the data stream and
+    // the LR warmup exactly where an uninterrupted run would be
+    let start_step = match &cfg.resume_dir {
+        Some(dir) => checkpoint::load_train_state(dir)
+            .context("resume checkpoint is missing train_state.json")?,
+        None => 0,
+    };
 
     // (stage, chunk)-boundary channels
     let mut fwd_txs: Vec<Vec<Sender<ActMsg>>> = Vec::new();
@@ -282,16 +372,27 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
     let mut grad_returns: Vec<Vec<Option<SlabReturn>>> =
         (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+    // wrap edges are double-buffered from the start: two pre-seeded slabs
+    // sized for the boundary activation, so one can sit staged on the
+    // producer while the other drains through the channel, with zero
+    // warmup misses (overlap off keeps the lazy warmup behavior)
+    let act_elems = b * s * manifest.model.hidden;
     for si in 0..p {
         for ci in 0..v {
             if let Some((ps, pc)) = fwd_producer(si, ci, p) {
-                let (pool, ret) = slab_pair();
+                let (mut pool, ret) = slab_pair();
+                if cfg.overlap_wrap_edges && is_wrap_fwd(ps, pc, p, v) {
+                    pool.prefill(2, act_elems);
+                }
                 act_pools[ps][pc] = Some(pool);
                 act_returns[si][ci] = Some(ret);
             }
             if let Some((ds, dc)) = fwd_consumer(si, ci, p, v) {
                 // (ds, dc) sends dy back to (si, ci)
-                let (pool, ret) = slab_pair();
+                let (mut pool, ret) = slab_pair();
+                if cfg.overlap_wrap_edges && is_wrap_bwd(ds, dc) {
+                    pool.prefill(2, act_elems);
+                }
                 grad_pools[ds][dc] = Some(pool);
                 grad_returns[si][ci] = Some(ret);
             }
@@ -338,7 +439,9 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         let cfg = cfg.clone();
         let handle = thread::Builder::new()
             .name(format!("stage{stage}"))
-            .spawn(move || stage_worker(stage, v, &cfg, &sched[stage], io, barrier, aux_coef))
+            .spawn(move || {
+                stage_worker(stage, v, &cfg, &sched[stage], io, barrier, aux_coef, start_step)
+            })
             .context("spawning stage thread")?;
         handles.push(handle);
     }
@@ -347,12 +450,18 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
 
     // ---- driver loop: feed data, collect losses ----
     let mut corpus = Corpus::new(vocab, cfg.seed);
+    // fast-forward a resumed stream to the batch the interrupted run would
+    // have drawn next (bitwise-identical data from here on)
+    for _ in 0..start_step * m {
+        corpus.batch(b, s);
+    }
     let mut steps = Vec::with_capacity(cfg.steps);
     let run_start = std::time::Instant::now();
     let mut total_tokens = 0usize;
     let mut final_loss = f32::NAN;
 
-    for step in 0..cfg.steps {
+    for local_step in 0..cfg.steps {
+        let step = start_step + local_step; // global step index
         let t0 = std::time::Instant::now();
         for micro in 0..m {
             let (tokens, targets) = corpus.batch(b, s);
@@ -394,6 +503,11 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     for h in handles {
         h.join().expect("stage thread panicked")?;
     }
+    if let Some(dir) = &cfg.checkpoint_dir {
+        // stages wrote params + optimizer state; the driver owns the step
+        // counter the resume path fast-forwards the corpus by
+        checkpoint::save_train_state(dir, start_step + cfg.steps)?;
+    }
 
     Ok(TrainReport {
         steps,
@@ -422,8 +536,11 @@ fn stage_worker(
     mut io: StageIo,
     barrier: Arc<Barrier>,
     aux_coef: f32,
+    start_step: usize,
 ) -> Result<()> {
     let mut rt = Runtime::open(&cfg.artifacts)?;
+    let p = rt.manifest.model.stages;
+    let overlap = cfg.overlap_wrap_edges;
     let chunk_specs = rt.manifest.chunks[stage].clone();
     let ranges: Vec<std::ops::Range<usize>> =
         (0..v).map(|c| rt.manifest.chunk_param_range(stage, c)).collect();
@@ -438,8 +555,20 @@ fn stage_worker(
         });
         bwd_exes.push(rt.load(&spec.bwd)?);
     }
-    let mut params = rt.load_stage_params(stage)?;
-    let mut opt = Adam::new(cfg.lr, &params);
+    // parameters: fresh from the artifacts, or restored from a checkpoint
+    let mut params = match &cfg.resume_dir {
+        Some(dir) => checkpoint::load_stage(dir, stage, &rt.manifest)?,
+        None => rt.load_stage_params(stage)?,
+    };
+    // per-(stage, chunk) sharded optimizer state: rank 0 of a one-replica
+    // group today, so each shard spans its whole chunk and the update is
+    // bitwise the historic stage-level fused sweep (see module docs)
+    let mut opts: Vec<ShardedAdam> = (0..v)
+        .map(|c| ShardedAdam::new(cfg.lr, &params[ranges[c].clone()], 0, 1))
+        .collect();
+    if let Some(dir) = &cfg.resume_dir {
+        checkpoint::load_optimizer(dir, stage, &mut opts)?;
+    }
     let mut timers = Timers::new();
     let m = cfg.num_micro;
     // §Perf L3: upload parameters to the PJRT device once per optimizer
@@ -471,9 +600,15 @@ fn stage_worker(
     let mut accumulated = vec![0usize; v];
     // step-0 op trace for the live-vs-sim schedule check
     let mut trace: Vec<Op> = Vec::new();
+    // staged wrap-edge payloads (d2h issued, send deferred — module docs);
+    // flushed at every op boundary, so at most one is ever in flight
+    let mut pending: VecDeque<StagedMsg> = VecDeque::new();
 
     for _step in 0..cfg.steps {
         for op in ops {
+            // release any staged wrap-edge payload before this op can
+            // block on a recv (deadlock-freedom of the deferral)
+            flush_staged(&mut pending, &io.chunks);
             match *op {
                 Op::Fwd { micro, chunk } => {
                     let is_loss = chunk_specs[chunk].fwd.is_none();
@@ -513,17 +648,24 @@ fn stage_worker(
                         let aux = msg.aux + out[1].item()?;
                         let act = {
                             let pool = cio.act_pool.as_mut().unwrap();
-                            let mut slab = pool.take(out[0].numel());
-                            timers.time("d2h", || out[0].read_into_vec(&mut slab))?;
-                            Tensor::f32(slab, out[0].shape().to_vec())
+                            let slab = pool.take(out[0].numel());
+                            timers.time("d2h", || out[0].read_to_tensor(slab))?
                         };
                         stash[chunk][micro] =
                             Some(Stashed { x: dev_x, aux: msg.aux, targets: None });
-                        cio.tx_fwd
-                            .as_ref()
-                            .unwrap()
-                            .send(ActMsg { micro, x: act, aux })
-                            .ok();
+                        if overlap && is_wrap_fwd(stage, chunk, p, v) {
+                            // wrap hop: d2h issued above, send deferred to
+                            // the next op boundary so the readback overlaps
+                            // this stage's next dispatch
+                            timers.add_count("wrap_staged", 1);
+                            pending.push_back(StagedMsg::Act { chunk, micro, x: act, aux });
+                        } else {
+                            cio.tx_fwd
+                                .as_ref()
+                                .unwrap()
+                                .send(ActMsg { micro, x: act, aux })
+                                .ok();
+                        }
                     }
                 }
                 Op::Bwd { micro, chunk } => {
@@ -591,15 +733,22 @@ fn stage_worker(
                         Ok(())
                     })?;
                     accumulated[chunk] += 1;
-                    if let (Some(tx), Some(i)) = (&cio.tx_bwd, dx_at) {
-                        let pool = cio.grad_pool.as_mut().unwrap();
-                        let mut slab = pool.take(out[i].numel());
-                        timers.time("d2h", || out[i].read_into_vec(&mut slab))?;
-                        tx.send(GradMsg {
-                            micro,
-                            dy: Tensor::f32(slab, out[i].shape().to_vec()),
-                        })
-                        .ok();
+                    if let Some(i) = dx_at {
+                        if cio.tx_bwd.is_some() {
+                            let pool = cio.grad_pool.as_mut().unwrap();
+                            let slab = pool.take(out[i].numel());
+                            let dy = timers.time("d2h", || out[i].read_to_tensor(slab))?;
+                            if overlap && is_wrap_bwd(stage, chunk) {
+                                timers.add_count("wrap_staged", 1);
+                                pending.push_back(StagedMsg::Grad { chunk, micro, dy });
+                            } else {
+                                cio.tx_bwd
+                                    .as_ref()
+                                    .unwrap()
+                                    .send(GradMsg { micro, dy })
+                                    .ok();
+                            }
+                        }
                     }
                 }
             }
@@ -609,10 +758,15 @@ fn stage_worker(
                 trace.push(*op);
             }
         }
+        // every staged wrap payload must be on the wire before the step
+        // boundary (downstream stages need it to finish their own walk)
+        flush_staged(&mut pending, &io.chunks);
         // ---- optimizer update (mean over microbatches) ----
-        // linear LR warmup (paper §4.2: gating needs steps to stabilize)
-        opt.lr = if cfg.warmup_steps > 0 {
-            cfg.lr * (((_step + 1) as f32) / cfg.warmup_steps as f32).min(1.0)
+        // linear LR warmup on the GLOBAL step, so resumed runs continue
+        // the ramp exactly (paper §4.2: gating needs steps to stabilize)
+        let gstep = start_step + _step;
+        let lr_now = if cfg.warmup_steps > 0 {
+            cfg.lr * (((gstep + 1) as f32) / cfg.warmup_steps as f32).min(1.0)
         } else {
             cfg.lr
         };
@@ -632,7 +786,15 @@ fn stage_worker(
                     gscale *= max_norm / norm;
                 }
             }
-            opt.fused_update(&mut params, &grad_acc, gscale)
+            // per-(stage, chunk) sharded sweep: each chunk's optimizer
+            // updates its contiguous parameter shard — bitwise the
+            // historic stage-level fused_update at one replica
+            for (c, opt) in opts.iter_mut().enumerate() {
+                opt.lr = lr_now;
+                let r = ranges[c].clone();
+                opt.update_shard(&mut params[r.clone()], &grad_acc[r], gscale)?;
+            }
+            Ok(())
         })?;
         accumulated.iter_mut().for_each(|a| *a = 0);
         // re-stage the updated parameters in place for the next step
@@ -642,6 +804,7 @@ fn stage_worker(
 
     if let Some(dir) = &cfg.checkpoint_dir {
         checkpoint::save_stage(dir, stage, &rt.manifest, &params)?;
+        checkpoint::save_optimizer(dir, stage, &opts)?;
     }
 
     // slab economy: after warmup every p2p payload should come from the

@@ -18,6 +18,9 @@ use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 /// Producer side: hands out payload buffers, preferring recycled storage.
 pub struct SlabPool {
     reclaim: Receiver<Vec<f32>>,
+    /// Producer-local pre-seeded slabs ([`SlabPool::prefill`]), consumed
+    /// before the reclaim channel is consulted.
+    prefilled: Vec<Vec<f32>>,
     /// Fresh allocations handed out (steady state: stops growing).
     pub misses: u64,
     /// Recycled slabs handed out.
@@ -33,13 +36,33 @@ pub struct SlabReturn {
 /// One edge's recycling pair.
 pub fn slab_pair() -> (SlabPool, SlabReturn) {
     let (tx, rx) = channel();
-    (SlabPool { reclaim: rx, misses: 0, hits: 0 }, SlabReturn { tx })
+    (
+        SlabPool { reclaim: rx, prefilled: Vec::new(), misses: 0, hits: 0 },
+        SlabReturn { tx },
+    )
 }
 
 impl SlabPool {
+    /// Pre-seed the pool with `count` producer-local slabs of `len`
+    /// capacity, served before the reclaim channel. Wrap-around edges use
+    /// `prefill(2, ..)` for **double buffering**: one slab can sit staged
+    /// on the producer (d2h issued, send deferred) while the previous one
+    /// drains through the channel — with zero warmup misses.
+    pub fn prefill(&mut self, count: usize, len: usize) {
+        for _ in 0..count {
+            self.prefilled.push(Vec::with_capacity(len));
+        }
+    }
+
     /// A cleared buffer with capacity for `len` elements — recycled if the
     /// consumer has returned one, freshly allocated otherwise.
     pub fn take(&mut self, len: usize) -> Vec<f32> {
+        if let Some(mut v) = self.prefilled.pop() {
+            self.hits += 1;
+            v.clear();
+            v.reserve(len);
+            return v;
+        }
         match self.reclaim.try_recv() {
             Ok(mut v) => {
                 self.hits += 1;
@@ -96,6 +119,23 @@ mod tests {
         let (pool2, ret2) = slab_pair();
         drop(pool2);
         ret2.put(vec![1.0]); // no panic either
+    }
+
+    #[test]
+    fn prefill_serves_before_allocating() {
+        let (mut pool, ret) = slab_pair();
+        pool.prefill(2, 16);
+        let a = pool.take(8);
+        let b = pool.take(8);
+        assert_eq!((pool.hits, pool.misses), (2, 0), "prefilled slabs are hits");
+        assert!(a.capacity() >= 16 && b.capacity() >= 16);
+        // once drained, the pool falls back to reclaim-or-allocate
+        ret.put(a);
+        let c = pool.take(8);
+        assert_eq!((pool.hits, pool.misses), (3, 0));
+        drop(c);
+        let _d = pool.take(8);
+        assert_eq!(pool.misses, 1);
     }
 
     #[test]

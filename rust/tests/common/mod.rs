@@ -1,7 +1,82 @@
 //! Shared helpers for integration tests: locate an artifacts directory
-//! produced by `make artifacts` / `make artifacts-tiny`.
+//! produced by `make artifacts` / `make artifacts-tiny`, and the
+//! independent schedule validator used by both the live-trainer
+//! equivalence tests and the schedule property sweep.
 
 use std::path::PathBuf;
+
+use ppmoe::pipeline::Op;
+
+/// Independent topological-order validator for a per-stage op stream under
+/// the REAL interleaved dependency DAG (wrap-around chunk edges included).
+/// Re-implements the readiness rules from scratch so the check does not
+/// lean on `pipeline::simulate_virtual`'s own bookkeeping. Returns an
+/// error describing the stall instead of panicking, so the property sweep
+/// (rust/tests/schedule_prop.rs) can report the failing shape.
+#[allow(dead_code)] // not every test binary links every helper
+pub fn check_topo_order(
+    sched: &[Vec<Op>],
+    p: usize,
+    micros: usize,
+    v: usize,
+) -> Result<(), String> {
+    use std::collections::HashSet;
+    let mut fwd_done: HashSet<(usize, usize, usize)> = HashSet::new();
+    let mut bwd_done: HashSet<(usize, usize, usize)> = HashSet::new();
+    let mut cursor = vec![0usize; p];
+    loop {
+        let mut progressed = false;
+        for s in 0..p {
+            while cursor[s] < sched[s].len() {
+                let op = sched[s][cursor[s]];
+                let ready = match op {
+                    Op::Fwd { micro, chunk } => {
+                        (s == 0 && chunk == 0)
+                            || (s > 0 && fwd_done.contains(&(s - 1, micro, chunk)))
+                            || (s == 0
+                                && chunk > 0
+                                && fwd_done.contains(&(p - 1, micro, chunk - 1)))
+                    }
+                    Op::Bwd { micro, chunk } => {
+                        fwd_done.contains(&(s, micro, chunk))
+                            && ((s == p - 1 && chunk == v - 1)
+                                || (s < p - 1 && bwd_done.contains(&(s + 1, micro, chunk)))
+                                || (s == p - 1
+                                    && chunk < v - 1
+                                    && bwd_done.contains(&(0, micro, chunk + 1))))
+                    }
+                };
+                if !ready {
+                    break;
+                }
+                match op {
+                    Op::Fwd { micro, chunk } => fwd_done.insert((s, micro, chunk)),
+                    Op::Bwd { micro, chunk } => bwd_done.insert((s, micro, chunk)),
+                };
+                cursor[s] += 1;
+                progressed = true;
+            }
+        }
+        if cursor.iter().enumerate().all(|(s, &c)| c == sched[s].len()) {
+            break;
+        }
+        if !progressed {
+            return Err(format!(
+                "op stream is not a valid topological order (stalled at {cursor:?}, \
+                 p={p} m={micros} v={v})"
+            ));
+        }
+    }
+    if fwd_done.len() != p * micros * v || bwd_done.len() != p * micros * v {
+        return Err(format!(
+            "op stream incomplete: {} fwd / {} bwd of {} expected",
+            fwd_done.len(),
+            bwd_done.len(),
+            p * micros * v
+        ));
+    }
+    Ok(())
+}
 
 /// Resolve the artifacts directory, or `None` (with a skip message) when
 /// this checkout has no artifacts — keeping `cargo test -q` green without
@@ -12,6 +87,7 @@ use std::path::PathBuf;
 ///    a directory without a manifest (a misconfigured run should fail
 ///    loudly, not silently skip).
 /// 2. `artifacts-tiny/`, then `artifacts/` under the repo root.
+#[allow(dead_code)] // not every test binary links every helper
 pub fn artifacts_dir() -> Option<PathBuf> {
     if let Ok(dir) = std::env::var("PPMOE_ARTIFACTS") {
         let dir = PathBuf::from(dir);

@@ -151,59 +151,12 @@ fn microbatch_grad_accumulation_linearity() {
 // Interleaved virtual-stage 1F1B: live trainer vs schedule vs simulation.
 // ---------------------------------------------------------------------------
 
-/// Independent topological-order validator for a per-stage op stream under
-/// the REAL interleaved dependency DAG (wrap-around chunk edges included).
-/// Re-implements the readiness rules from scratch so the check does not
-/// lean on `pipeline::simulate_virtual`'s own bookkeeping.
+/// Panicking wrapper around the shared independent validator
+/// (`common::check_topo_order`) — the property sweep in
+/// rust/tests/schedule_prop.rs drives the same checker over ~500 random
+/// shapes; here it guards the live trainer's executed streams.
 fn check_topo_order(sched: &[Vec<Op>], p: usize, micros: usize, v: usize) {
-    use std::collections::HashSet;
-    let mut fwd_done: HashSet<(usize, usize, usize)> = HashSet::new();
-    let mut bwd_done: HashSet<(usize, usize, usize)> = HashSet::new();
-    let mut cursor = vec![0usize; p];
-    loop {
-        let mut progressed = false;
-        for s in 0..p {
-            while cursor[s] < sched[s].len() {
-                let op = sched[s][cursor[s]];
-                let ready = match op {
-                    Op::Fwd { micro, chunk } => {
-                        (s == 0 && chunk == 0)
-                            || (s > 0 && fwd_done.contains(&(s - 1, micro, chunk)))
-                            || (s == 0
-                                && chunk > 0
-                                && fwd_done.contains(&(p - 1, micro, chunk - 1)))
-                    }
-                    Op::Bwd { micro, chunk } => {
-                        fwd_done.contains(&(s, micro, chunk))
-                            && ((s == p - 1 && chunk == v - 1)
-                                || (s < p - 1 && bwd_done.contains(&(s + 1, micro, chunk)))
-                                || (s == p - 1
-                                    && chunk < v - 1
-                                    && bwd_done.contains(&(0, micro, chunk + 1))))
-                    }
-                };
-                if !ready {
-                    break;
-                }
-                match op {
-                    Op::Fwd { micro, chunk } => fwd_done.insert((s, micro, chunk)),
-                    Op::Bwd { micro, chunk } => bwd_done.insert((s, micro, chunk)),
-                };
-                cursor[s] += 1;
-                progressed = true;
-            }
-        }
-        if cursor.iter().enumerate().all(|(s, &c)| c == sched[s].len()) {
-            break;
-        }
-        assert!(
-            progressed,
-            "op stream is not a valid topological order (stalled at {cursor:?}, \
-             p={p} m={micros} v={v})"
-        );
-    }
-    assert_eq!(fwd_done.len(), p * micros * v);
-    assert_eq!(bwd_done.len(), p * micros * v);
+    common::check_topo_order(sched, p, micros, v).unwrap();
 }
 
 #[test]
@@ -301,6 +254,41 @@ fn live_interleaved_op_order_matches_sim_order() {
     for s in &report.steps {
         assert!(s.loss.is_finite());
     }
+}
+
+#[test]
+fn wrap_edge_overlap_is_bitwise_invisible() {
+    // The staged d2h → channel → h2d wrap-edge pipeline changes WHEN a
+    // payload is sent, never what is computed: with overlap on vs off the
+    // executed op streams and the per-step losses must be bitwise equal.
+    let Some(dir) = common::chunked_artifacts_dir() else { return };
+    let manifest =
+        ppmoe::runtime::Manifest::load(&dir.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+    let mut cfg = TrainerCfg {
+        artifacts: dir,
+        steps: 4,
+        num_micro: 2 * p,
+        lr: 3e-3,
+        seed: 11,
+        log_every: 0,
+        overlap_wrap_edges: true,
+        ..Default::default()
+    };
+    let on = train(&cfg).unwrap();
+    cfg.overlap_wrap_edges = false;
+    let off = train(&cfg).unwrap();
+    assert_eq!(on.executed_ops, off.executed_ops, "overlap must not reorder ops");
+    for (a, b) in on.steps.iter().zip(&off.steps) {
+        assert_eq!(a.loss, b.loss, "step {}: overlap changed the math", a.step);
+    }
+    // with v > 1 chunks the wrap edges exist, so the overlap path must
+    // actually have staged payloads (visible in the stage timers)
+    let staged: u64 = on.stage_timers.iter().map(|t| t.count("wrap_staged")).sum();
+    assert!(staged > 0, "overlap run staged no wrap payloads");
+    let staged_off: u64 =
+        off.stage_timers.iter().map(|t| t.count("wrap_staged")).sum();
+    assert_eq!(staged_off, 0, "no-overlap run must send eagerly");
 }
 
 #[test]

@@ -20,6 +20,8 @@ fn base_cfg(artifacts: PathBuf) -> TrainerCfg {
         virtual_stages: 0,
         warmup_steps: 0,
         checkpoint_dir: None,
+        resume_dir: None,
+        overlap_wrap_edges: true,
     }
 }
 
@@ -104,6 +106,62 @@ fn checkpoint_eval_improves_over_init() {
         trained_loss < init_loss,
         "validation: trained {trained_loss} vs init {init_loss}"
     );
+}
+
+#[test]
+fn sharded_optimizer_checkpoint_resume_is_bitwise() {
+    // Interrupt-and-resume must be invisible: train 6 steps straight vs
+    // 4 steps -> checkpoint (params + per-chunk Adam moments + step count)
+    // -> resume 2 steps. Losses of the overlapping steps and the final
+    // parameters must be BITWISE equal — exercised on chunked artifacts so
+    // every stage carries several per-chunk optimizer shards.
+    let Some(arts) = common::chunked_artifacts_dir() else { return };
+    let manifest =
+        ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+    let pid = std::process::id();
+    let ck_full = std::env::temp_dir().join(format!("ppmoe_full_{pid}"));
+    let ck_mid = std::env::temp_dir().join(format!("ppmoe_mid_{pid}"));
+    let ck_res = std::env::temp_dir().join(format!("ppmoe_res_{pid}"));
+
+    let mut cfg = TrainerCfg {
+        artifacts: arts,
+        steps: 6,
+        num_micro: 2 * p,
+        lr: 3e-3,
+        seed: 7,
+        log_every: 0,
+        warmup_steps: 5, // exercise the global-step LR ramp across the resume
+        checkpoint_dir: Some(ck_full.clone()),
+        ..Default::default()
+    };
+    let full = train(&cfg).unwrap();
+
+    cfg.steps = 4;
+    cfg.checkpoint_dir = Some(ck_mid.clone());
+    let head = train(&cfg).unwrap();
+    for (a, b) in full.steps[..4].iter().zip(&head.steps) {
+        assert_eq!(a.loss, b.loss, "pre-checkpoint step {} diverged", a.step);
+    }
+
+    cfg.steps = 2;
+    cfg.resume_dir = Some(ck_mid.clone());
+    cfg.checkpoint_dir = Some(ck_res.clone());
+    let tail = train(&cfg).unwrap();
+    assert_eq!(tail.steps.len(), 2);
+    for (a, b) in full.steps[4..].iter().zip(&tail.steps) {
+        assert_eq!(a.step, b.step, "resumed run must continue global steps");
+        assert_eq!(a.loss, b.loss, "resumed step {} diverged", a.step);
+    }
+    // final checkpoints: identical parameters, stage by stage
+    for s in 0..p {
+        let a = ppmoe::trainer::checkpoint::load_stage(&ck_full, s, &manifest).unwrap();
+        let b = ppmoe::trainer::checkpoint::load_stage(&ck_res, s, &manifest).unwrap();
+        assert_eq!(a, b, "stage {s} parameters diverged after resume");
+    }
+    for d in [&ck_full, &ck_mid, &ck_res] {
+        std::fs::remove_dir_all(d).ok();
+    }
 }
 
 #[test]
