@@ -4,7 +4,8 @@
 PY ?= python3
 CARGO ?= cargo
 
-.PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 build test bench doc clean
+.PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 build test test-dp \
+        test-dp-py bench doc clean
 
 all: artifacts build
 
@@ -32,7 +33,19 @@ build:
 test:
 	$(CARGO) test -q
 
-# Hot-path microbenches (writes BENCH_hotpath.json) + the Table 2 sweep
+# The dp-equivalence slice: live --dp {2,4} training bitwise vs the dp = 1
+# summed-gradient reference (rust integration, self-skips without
+# artifacts) + the numpy ZeRO-1 sharded-Adam property (python, runs
+# everywhere). CI's python job runs the python half via test-dp-py.
+test-dp: test-dp-py
+	$(CARGO) test --test dp_equivalence -q
+
+test-dp-py:
+	$(PY) -m pytest python/tests/test_dp_equivalence.py -q
+
+# Hot-path microbenches (writes BENCH_hotpath.json: incl. the
+# dp_sync/{serialized,overlapped} dp={2,4} A/B rows and the
+# optimizer/zero1-live r={1,2,4} zero-alloc rows) + the Table 2 sweep
 # with its interleaved variant.
 bench:
 	$(CARGO) bench --bench hotpath_micro

@@ -41,15 +41,28 @@ fn main() -> anyhow::Result<()> {
         checkpoint_dir: args.get("checkpoint").map(Into::into),
         resume_dir: args.get("resume").map(Into::into),
         overlap_wrap_edges: !args.has_flag("no-overlap"),
+        dp: args.get_usize("dp", 1)?,
+        overlap_dp_sync: !args.has_flag("no-dp-overlap"),
+        emulate_dp: 0,
     };
     eprintln!(
-        "training: {} steps × {} microbatches, lr {}, schedule {:?}{}",
+        "training: {} steps × {} microbatches, lr {}, schedule {:?}{}{}",
         cfg.steps,
         cfg.num_micro,
         cfg.lr,
         cfg.schedule,
         if cfg.virtual_stages > 1 {
             format!(", {} virtual chunks/stage", cfg.virtual_stages)
+        } else {
+            String::new()
+        },
+        if cfg.dp > 1 {
+            format!(
+                ", {} dp replicas ({} micros each, {} grad sync)",
+                cfg.dp,
+                cfg.num_micro / cfg.dp,
+                if cfg.overlap_dp_sync { "overlapped" } else { "serialized" }
+            )
         } else {
             String::new()
         }
@@ -75,8 +88,15 @@ fn main() -> anyhow::Result<()> {
     println!("improvement:      {:.1}%", (1.0 - late / early) * 100.0);
     println!("throughput:       {:.0} tokens/s", report.tokens_per_sec);
     println!("loss curve:       {out}");
-    for (s, t) in report.stage_timers.iter().enumerate() {
-        println!("stage {s}: {:.1}s busy — breakdown:", t.total());
+    for (replica, stage, t) in report.worker_timers() {
+        if report.dp > 1 {
+            println!(
+                "replica {replica} stage {stage}: {:.1}s busy — breakdown:",
+                t.total()
+            );
+        } else {
+            println!("stage {stage}: {:.1}s busy — breakdown:", t.total());
+        }
         for (name, secs, share) in t.rows() {
             println!("    {name:<10} {secs:>8.2}s  {:>5.1}%", share * 100.0);
         }

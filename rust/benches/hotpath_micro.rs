@@ -5,7 +5,11 @@
 //!   reduce-scatter + all-gather, across rank counts
 //! * PJRT boundary: per-microbatch literal serialization vs device-resident
 //!   staged-buffer reuse with pooled readback
-//! * grad-clip + Adam: the old three-pass sweep vs the fused single pass
+//! * dp gradient sync: serialized step-end vs backward-overlapped bucket
+//!   workers, dp ∈ {2, 4} thread groups (the `--dp`/`--no-dp-overlap` A/B)
+//! * grad-clip + Adam: the old three-pass sweep vs the fused single pass;
+//!   the live ZeRO-1 round with reused scratch (asserts zero steady-state
+//!   allocations via pointer/capacity fingerprints)
 //! * 1F1B schedule simulation, manifest JSON parse
 //!
 //! Besides the human-readable lines, results are written to
@@ -21,7 +25,10 @@ use ppmoe::moe::{route_top1, synth_logits};
 use ppmoe::pipeline::interleaved::{interleaved_bubble, simulate_interleaved};
 use ppmoe::pipeline::{analytic_bubble, simulate, Schedule, StageTiming};
 use ppmoe::runtime::Tensor;
-use ppmoe::trainer::adam::{global_grad_norm, sharded_group_step, Adam, ShardedAdam};
+use ppmoe::trainer::adam::{
+    global_grad_norm, sharded_group_step, sharded_group_step_with, Adam, GroupStepScratch,
+    ShardedAdam,
+};
 use ppmoe::util::bench::{bench, BenchResult};
 use ppmoe::util::json::Json;
 use ppmoe::util::prng::Rng;
@@ -134,6 +141,25 @@ fn main() {
         }));
     }
 
+    println!("\n=== dp gradient sync (serialized vs backward-overlapped) ===");
+    // the trainer's `--dp` A/B, as a thread-group micro: each of dp rank
+    // threads "runs a backward" producing 4 chunk buckets in sequence,
+    // then reduce-scatters + all-gathers every bucket over the shared
+    // per-bucket groups. Serialized = compute, then sync (--no-dp-overlap);
+    // overlapped = each bucket handed to a sync worker the moment its
+    // compute finishes, so the collective runs under the remaining compute
+    // (the live bucket hook). Same collectives either way — only placement
+    // moves, which is exactly what the row pair measures.
+    for dp in [2usize, 4] {
+        let elems = 65_536; // per bucket
+        results.push(bench(&format!("dp_sync/serialized dp={dp}"), || {
+            dp_sync_step(dp, 4, elems, false)
+        }));
+        results.push(bench(&format!("dp_sync/overlapped dp={dp}"), || {
+            dp_sync_step(dp, 4, elems, true)
+        }));
+    }
+
     println!("\n=== grad-clip + Adam (three passes vs fused sweep) ===");
     for numel in [65_536usize, 1_048_576] {
         let grads = vec![Tensor::f32(vec![0.01; numel], vec![numel])];
@@ -205,6 +231,42 @@ fn main() {
         }
     }
 
+    println!("\n=== live ZeRO-1 step (zero-alloc scratch, r = dp ranks) ===");
+    // the trainer's steady-state optimizer round via the reused
+    // GroupStepScratch: after a warmup step, every buffer's pointer and
+    // capacity must be stable — the asserted "zero heap allocations in the
+    // sync path" acceptance gate. r=1 compares against optimizer/sharded
+    // (the delta is the scratch reuse); r>1 rows A/B against each other.
+    {
+        let numel = 262_144usize;
+        for n in [1usize, 2, 4] {
+            let mut rank_params: Vec<Vec<Tensor>> = (0..n)
+                .map(|_| vec![Tensor::f32(vec![0.1; numel], vec![numel])])
+                .collect();
+            let grads = vec![Tensor::f32(vec![0.01; numel], vec![numel])];
+            let mut opts: Vec<ShardedAdam> = (0..n)
+                .map(|r| ShardedAdam::new(1e-3, &rank_params[0], r, n))
+                .collect();
+            let mut scratches: Vec<GroupStepScratch> =
+                (0..n).map(|_| GroupStepScratch::new()).collect();
+            let group = AllReduceGroup::with_algo(n, Algo::Chunked);
+            // warmup: let every scratch reach steady-state capacity
+            run_zero1_round(&group, &mut opts, &mut rank_params, &grads, &mut scratches);
+            let fingerprints: Vec<_> = scratches.iter().map(scratch_fingerprint).collect();
+            results.push(bench(&format!("optimizer/zero1-live r={n} {numel}"), || {
+                run_zero1_round(&group, &mut opts, &mut rank_params, &grads, &mut scratches);
+            }));
+            // the acceptance assertion: steady-state sync allocated nothing
+            for (r, (s, fp)) in scratches.iter().zip(&fingerprints).enumerate() {
+                assert_eq!(
+                    &scratch_fingerprint(s),
+                    fp,
+                    "rank {r} of {n}: zero1-live scratch reallocated in steady state"
+                );
+            }
+        }
+    }
+
     println!("\n=== manifest JSON parse ===");
     let manifest_path = std::path::Path::new("artifacts/manifest.json");
     if manifest_path.exists() {
@@ -266,6 +328,125 @@ fn wrap_edge_hops(elems: usize, hops: usize, window: usize) -> usize {
     });
     producer.join().unwrap();
     consumer.join().unwrap()
+}
+
+/// A unit of "backward compute" standing in for one chunk's remaining
+/// backward ops: a few fused passes over the bucket-sized buffer.
+fn backward_spin(v: &mut [f32]) {
+    for _ in 0..4 {
+        for x in v.iter_mut() {
+            *x = *x * 0.999 + 0.001;
+        }
+    }
+}
+
+/// One dp gradient-sync step over `buckets` per-(stage, chunk) groups:
+/// every rank thread produces its buckets in sequence (compute spin), then
+/// reduce-scatters + all-gathers each one. `overlap = false` syncs after
+/// all compute (the trainer's `--no-dp-overlap`); `overlap = true` hands
+/// each bucket to a per-bucket sync worker the moment it is produced, so
+/// the collective overlaps the remaining compute (the live bucket hook).
+fn dp_sync_step(dp: usize, buckets: usize, elems: usize, overlap: bool) -> f32 {
+    use std::sync::mpsc::channel;
+    let groups: Vec<Arc<AllReduceGroup>> =
+        (0..buckets).map(|_| AllReduceGroup::with_algo(dp, Algo::Chunked)).collect();
+    let handles: Vec<_> = (0..dp)
+        .map(|rank| {
+            let groups = groups.clone();
+            std::thread::spawn(move || {
+                let mut work: Vec<Vec<f32>> =
+                    (0..buckets).map(|b| vec![(rank + b) as f32 * 1e-3; elems]).collect();
+                if overlap {
+                    // per-bucket sync workers, exactly the trainer's shape
+                    let mut txs = Vec::new();
+                    let mut rxs = Vec::new();
+                    let mut workers = Vec::new();
+                    for g in &groups {
+                        let (btx, brx) = channel::<Vec<f32>>();
+                        let (dtx, drx) = channel::<Vec<f32>>();
+                        let g = g.clone();
+                        workers.push(std::thread::spawn(move || {
+                            for flat in brx {
+                                let mut seg = Vec::new();
+                                g.reduce_scatter_into(rank, &flat, &mut seg);
+                                dtx.send(seg).ok();
+                            }
+                        }));
+                        txs.push(btx);
+                        rxs.push(drx);
+                    }
+                    for (b, w) in work.iter_mut().enumerate() {
+                        backward_spin(w);
+                        txs[b].send(std::mem::take(w)).ok();
+                    }
+                    let mut acc = 0.0f32;
+                    for (b, rx) in rxs.iter().enumerate() {
+                        let seg = rx.recv().expect("sync worker died");
+                        acc += groups[b].all_gather_as(rank, &seg)[0];
+                    }
+                    drop(txs);
+                    for w in workers {
+                        w.join().unwrap();
+                    }
+                    acc
+                } else {
+                    for w in work.iter_mut() {
+                        backward_spin(w);
+                    }
+                    let mut acc = 0.0f32;
+                    let mut seg = Vec::new();
+                    for (b, w) in work.iter().enumerate() {
+                        groups[b].reduce_scatter_into(rank, w, &mut seg);
+                        acc += groups[b].all_gather_as(rank, &seg)[0];
+                    }
+                    acc
+                }
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).sum()
+}
+
+/// One live ZeRO-1 optimizer round: every rank runs
+/// [`sharded_group_step_with`] over the shared group with its reused
+/// scratch (n = 1 inline, n > 1 as a thread fan-out like the trainer).
+fn run_zero1_round(
+    group: &Arc<AllReduceGroup>,
+    opts: &mut [ShardedAdam],
+    rank_params: &mut [Vec<Tensor>],
+    grads: &[Tensor],
+    scratches: &mut [GroupStepScratch],
+) {
+    if opts.len() == 1 {
+        sharded_group_step_with(
+            &mut opts[0], group, &mut rank_params[0], grads, 0.25, &mut scratches[0],
+        )
+        .unwrap();
+        return;
+    }
+    std::thread::scope(|s| {
+        for ((opt, params), scratch) in
+            opts.iter_mut().zip(rank_params.iter_mut()).zip(scratches.iter_mut())
+        {
+            let group = group.clone();
+            let _ = s.spawn(move || {
+                sharded_group_step_with(opt, &group, params, grads, 0.25, scratch).unwrap()
+            });
+        }
+    });
+}
+
+/// Pointer + capacity fingerprint of a scratch's buffers: equality across
+/// rounds proves the round performed zero heap allocations in these paths.
+fn scratch_fingerprint(s: &GroupStepScratch) -> (usize, usize, usize, usize, usize, usize) {
+    (
+        s.flat.as_ptr() as usize,
+        s.seg.as_ptr() as usize,
+        s.shard.as_ptr() as usize,
+        s.flat.capacity(),
+        s.seg.capacity(),
+        s.shard.capacity(),
+    )
 }
 
 /// Emit `BENCH_hotpath.json`: component name -> ns/op stats.

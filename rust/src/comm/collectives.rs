@@ -74,6 +74,11 @@ struct Round {
     deposited: usize,
     reduced: usize,
     len: usize,
+    /// Set by [`AllReduceGroup::poison`] when a participating thread fails
+    /// before completing its rounds: every current and future waiter
+    /// panics instead of blocking forever on a deposit that will never
+    /// come (collectives, unlike mpsc channels, have no disconnection).
+    poisoned: bool,
     /// Per-round slot occupancy: catches a rank calling twice in one round
     /// (which would otherwise overwrite a staging slot and corrupt the sum
     /// silently, or deadlock the legacy turn-taking).
@@ -120,6 +125,7 @@ impl AllReduceGroup {
                 deposited: 0,
                 reduced: 0,
                 len: 0,
+                poisoned: false,
                 taken: vec![false; n],
                 acc: Vec::new(),
                 result: Arc::new(Vec::new()),
@@ -138,6 +144,39 @@ impl AllReduceGroup {
         self.n
     }
 
+    /// Mark the group dead: a participating thread has failed and will
+    /// never deposit again. Every thread currently blocked in a phase of
+    /// this group — and every later caller — panics with a clear message
+    /// instead of waiting forever. Call from a rank's error path before it
+    /// unwinds (the dp trainer does this when a stage worker fails, so its
+    /// surviving replicas die loudly rather than deadlocking in a
+    /// collective whose peer is gone). Idempotent and safe to call from
+    /// several failing ranks.
+    pub fn poison(&self) {
+        let mut st = self.lock_state();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    /// Lock the round state, surviving std mutex poisoning: a waiter that
+    /// panicked via [`AllReduceGroup::check_poison`] held this lock, and
+    /// every later participant must still observe the `poisoned` flag (and
+    /// panic with ITS message) rather than an opaque `PoisonError` — and a
+    /// second failing rank's own `poison()` fan-out must not abort.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, Round> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Panic if a peer poisoned the group (checked on entry to every phase
+    /// and inside every wait loop).
+    fn check_poison(st: &Round) {
+        assert!(
+            !st.poisoned,
+            "collective group poisoned: a participating rank failed and \
+             will never complete this round"
+        );
+    }
+
     /// Which reduction algorithm this group runs.
     pub fn algo(&self) -> Algo {
         self.algo
@@ -150,7 +189,7 @@ impl AllReduceGroup {
     /// reproducibility.
     pub fn all_reduce(&self, contribution: &[f32]) -> Arc<Vec<f32>> {
         let slot = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             let s = st.claimed;
             assert!(s < self.n, "more than {} callers in one round", self.n);
             st.claimed += 1;
@@ -167,7 +206,7 @@ impl AllReduceGroup {
         {
             // keep the arrival counter coherent so a later arrival-order
             // caller in the same group would fail loudly, not corrupt
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             st.claimed += 1;
         }
         self.round(rank, contribution)
@@ -187,9 +226,23 @@ impl AllReduceGroup {
     /// `all_gather_as` reproduces `all_reduce_as` **bitwise**
     /// (property-tested below).
     pub fn reduce_scatter_as(&self, rank: usize, contribution: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.reduce_scatter_into(rank, contribution, &mut out);
+        out
+    }
+
+    /// Allocation-free [`AllReduceGroup::reduce_scatter_as`]: the rank's
+    /// summed segment is written into `out` (cleared and resized first —
+    /// any previous contents are irrelevant), so a caller that round-trips
+    /// the same buffer performs **zero heap allocations** per round once
+    /// `out`'s capacity has converged. This is the steady-state gradient
+    /// sync path of the dp trainer and of
+    /// [`crate::trainer::adam::sharded_group_step_with`]; bitwise identical
+    /// to the allocating variant (property-tested below).
+    pub fn reduce_scatter_into(&self, rank: usize, contribution: &[f32], out: &mut Vec<f32>) {
         assert!(rank < self.n, "rank {rank} out of {}", self.n);
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             assert!(
                 !st.taken[rank],
                 "rank {rank} entered a collective twice in one round"
@@ -198,9 +251,7 @@ impl AllReduceGroup {
             st.claimed += 1;
         }
         let len = self.deposit_and_wait(rank, contribution);
-        let mut out = Vec::new();
-        self.reduce_own_segment(rank, len, &mut out);
-        out
+        self.reduce_own_segment(rank, len, out);
     }
 
     /// Shared deposit phase of the chunked and split-phase rounds: copy
@@ -213,7 +264,8 @@ impl AllReduceGroup {
             s.clear();
             s.extend_from_slice(contribution);
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
+        Self::check_poison(&st);
         let my_gen = st.generation;
         if st.deposited == 0 {
             st.len = contribution.len();
@@ -225,7 +277,8 @@ impl AllReduceGroup {
             self.cv.notify_all();
         }
         while st.deposited < self.n && st.generation == my_gen {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            Self::check_poison(&st);
         }
         st.len
     }
@@ -263,7 +316,8 @@ impl AllReduceGroup {
             out.clear();
             out.extend_from_slice(segment_data);
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
+        Self::check_poison(&st);
         assert_eq!(
             st.deposited, self.n,
             "all_gather_as called outside a reduce-scatter round"
@@ -290,7 +344,8 @@ impl AllReduceGroup {
             return result;
         }
         while st.generation == my_gen {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            Self::check_poison(&st);
         }
         st.result.clone()
     }
@@ -300,7 +355,7 @@ impl AllReduceGroup {
             // one call per rank per round — a duplicate must fail loudly
             // here, before it can overwrite a staging slot (chunked) or
             // stall the turn-taking (legacy)
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.lock_state();
             assert!(
                 !st.taken[slot],
                 "rank {slot} called all-reduce twice in one round"
@@ -315,12 +370,14 @@ impl AllReduceGroup {
 
     /// Single shared accumulator, deposits serialized in slot order.
     fn round_legacy(&self, slot: usize, contribution: &[f32]) -> Arc<Vec<f32>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
+        Self::check_poison(&st);
         let my_gen = st.generation;
         // wait for my turn: slot order = summation order (determinism);
         // no caller can be a round ahead, so `deposited` is this round's
         while st.deposited != slot {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            Self::check_poison(&st);
         }
         if slot == 0 {
             st.len = contribution.len();
@@ -344,7 +401,8 @@ impl AllReduceGroup {
         }
         self.cv.notify_all(); // wake the next slot's depositor
         while st.generation == my_gen {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            Self::check_poison(&st);
         }
         st.result.clone()
     }
@@ -359,7 +417,7 @@ impl AllReduceGroup {
         }
 
         // ---- gather: last finisher concatenates segments in slot order ----
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         // the round's generation cannot have advanced yet: `reduced`
         // reaches n only after this very increment
         let my_gen = st.generation;
@@ -376,7 +434,8 @@ impl AllReduceGroup {
             return result;
         }
         while st.generation == my_gen {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            Self::check_poison(&st);
         }
         st.result.clone()
     }
@@ -409,19 +468,23 @@ fn reclaim(retired: &mut Vec<Arc<Vec<f32>>>) -> Option<Vec<f32>> {
 /// Simple reusable barrier (used at step boundaries by the trainer).
 pub struct Barrier {
     n: usize,
-    state: Mutex<(u64, usize)>,
+    /// (generation, arrived, poisoned).
+    state: Mutex<(u64, usize, bool)>,
     cv: Condvar,
 }
 
 impl Barrier {
     /// Reusable barrier over `n` participants.
     pub fn new(n: usize) -> Arc<Self> {
-        Arc::new(Barrier { n, state: Mutex::new((0, 0)), cv: Condvar::new() })
+        Arc::new(Barrier { n, state: Mutex::new((0, 0, false)), cv: Condvar::new() })
     }
 
-    /// Block until all `n` participants arrive.
+    /// Block until all `n` participants arrive. Panics if the barrier was
+    /// [`Barrier::poison`]ed — a participant died and the group can never
+    /// be complete again.
     pub fn wait(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
+        Self::check_poison(&st);
         let my_gen = st.0;
         st.1 += 1;
         if st.1 == self.n {
@@ -431,8 +494,31 @@ impl Barrier {
             return;
         }
         while st.0 == my_gen {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            Self::check_poison(&st);
         }
+    }
+
+    /// Mark the barrier dead: a participant failed and will never arrive,
+    /// so every current and future waiter — the trainer's driver included
+    /// — panics with a clear message instead of parking forever on a
+    /// generation that cannot complete. Idempotent.
+    pub fn poison(&self) {
+        let mut st = self.lock_state();
+        st.2 = true;
+        self.cv.notify_all();
+    }
+
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, (u64, usize, bool)> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn check_poison(st: &(u64, usize, bool)) {
+        assert!(
+            !st.2,
+            "barrier poisoned: a participant failed and the group can \
+             never be complete"
+        );
     }
 }
 
@@ -660,6 +746,70 @@ mod tests {
     }
 
     #[test]
+    fn reduce_scatter_into_equals_allocating_variant_property() {
+        // The zero-alloc sync-path invariant: reduce_scatter_into must be
+        // bitwise the allocating reduce_scatter_as, including when the
+        // caller's out buffer is reused across rounds while round lengths
+        // shrink/grow (stale contents and excess capacity must not leak).
+        forall(
+            "reduce-scatter-into-equals-as",
+            47,
+            25,
+            |r| {
+                let n = r.range(1, 7);
+                let rounds = r.range(1, 4);
+                let mut rng = r.split();
+                let per_round: Vec<Vec<Vec<f32>>> = (0..rounds)
+                    .map(|_| {
+                        let len = rng.below(53);
+                        (0..n)
+                            .map(|_| (0..len).map(|_| (rng.f32() - 0.5) * 3.0).collect())
+                            .collect()
+                    })
+                    .collect();
+                (n, per_round)
+            },
+            |(n, per_round)| {
+                let g_into = AllReduceGroup::with_algo(*n, Algo::Chunked);
+                let g_as = AllReduceGroup::with_algo(*n, Algo::Chunked);
+                let handles: Vec<_> = (0..*n)
+                    .map(|r| {
+                        let g_into = g_into.clone();
+                        let g_as = g_as.clone();
+                        let rounds: Vec<Vec<f32>> =
+                            per_round.iter().map(|c| c[r].clone()).collect();
+                        thread::spawn(move || {
+                            // seed the reused buffer with garbage so stale
+                            // contents would be caught
+                            let mut out = vec![f32::NAN; 7];
+                            let mut pairs = Vec::new();
+                            for c in &rounds {
+                                g_into.reduce_scatter_into(r, c, &mut out);
+                                g_into.all_gather_as(r, &out);
+                                let reference = g_as.reduce_scatter_as(r, c);
+                                g_as.all_gather_as(r, &reference);
+                                pairs.push((out.clone(), reference));
+                            }
+                            pairs
+                        })
+                    })
+                    .collect();
+                for (r, h) in handles.into_iter().enumerate() {
+                    for (round, (got, reference)) in h.join().unwrap().into_iter().enumerate()
+                    {
+                        if got != reference {
+                            return Err(format!(
+                                "rank {r} round {round}: into != as (n={n})"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn split_phase_reusable_and_carries_segment_edits() {
         // Multiple rounds on one group, with the segment *modified* between
         // the phases (exactly what the sharded optimizer does): the gather
@@ -741,6 +891,56 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn poison_releases_blocked_ranks_loudly() {
+        // a rank dies before depositing: without poison the peer would
+        // block forever inside deposit_and_wait; with it, the peer's
+        // collective call panics with a clear message instead
+        let g = AllReduceGroup::with_algo(2, Algo::Chunked);
+        let peer = {
+            let g = g.clone();
+            thread::spawn(move || {
+                let mut out = Vec::new();
+                g.reduce_scatter_into(0, &[1.0, 2.0], &mut out);
+            })
+        };
+        // give the peer time to park in the wait loop, then poison
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        g.poison();
+        let err = peer.join().unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("poisoned"), "unexpected panic payload: {msg}");
+        // later callers die immediately too
+        let g2 = g.clone();
+        let late = thread::spawn(move || g2.all_reduce_as(1, &[0.0]));
+        assert!(late.join().is_err());
+    }
+
+    #[test]
+    fn barrier_poison_releases_waiters() {
+        // a participant dies before arriving: waiters must panic loudly
+        // (driver included), not park on a generation that can't complete
+        let b = Barrier::new(3);
+        let waiters: Vec<_> = (0..2)
+            .map(|_| {
+                let b = b.clone();
+                thread::spawn(move || b.wait())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.poison();
+        for w in waiters {
+            assert!(w.join().is_err(), "poisoned barrier must release waiters");
+        }
+        // and later arrivals die immediately
+        let b2 = b.clone();
+        assert!(thread::spawn(move || b2.wait()).join().is_err());
     }
 
     #[test]

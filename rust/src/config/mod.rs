@@ -148,6 +148,22 @@ impl ParallelCfg {
         }
     }
 
+    /// Parameter-element volume one rank moves per step for data-parallel
+    /// gradient synchronization: 0 at dp = 1; otherwise the ring
+    /// reduce-scatter + all-gather volume `2·(dp−1)/dp` of the rank's
+    /// parameter slice `P/(pp·tp)`. The split-phase ZeRO-1 round moves the
+    /// same bytes as a plain gradient all-reduce — sharding the optimizer
+    /// trades memory, not wire traffic — which is why the live trainer's
+    /// `--dp` overlap (hiding this volume under the backward) is the lever
+    /// that matters. Multiply by `ClusterCfg::wire_bytes` for bytes.
+    pub fn dp_sync_param_volume(&self, m: &ModelDims) -> f64 {
+        if self.dp <= 1 {
+            return 0.0;
+        }
+        let slice = m.total_params() as f64 / (self.pp * self.tp).max(1) as f64;
+        2.0 * (self.dp as f64 - 1.0) / self.dp as f64 * slice
+    }
+
     /// Validate divisibility constraints against a model + cluster.
     pub fn validate(&self, m: &ModelDims, c: &ClusterCfg) -> anyhow::Result<()> {
         if self.world() == 0 || self.world() > c.gpus {
@@ -452,6 +468,24 @@ mod tests {
         // tp alone must not be attributed to the zero knob
         let tp1 = ParallelCfg { tp: 1, ..base }.optimizer_bytes_per_rank(&m);
         assert_eq!(tp1, 2 * replicated);
+    }
+
+    #[test]
+    fn dp_sync_volume_scales_with_replicas() {
+        let m = moe_small_setting();
+        let base = ParallelCfg {
+            dp: 1, tp: 2, pp: 4, ep: 2, zero: false, scheme: Scheme::PpMoE,
+        };
+        // no replicas, no sync
+        assert_eq!(base.dp_sync_param_volume(&m), 0.0);
+        // dp = 2: one slice's worth of elements over the wire (2·1/2)
+        let slice = m.total_params() as f64 / 8.0;
+        let v2 = ParallelCfg { dp: 2, ..base }.dp_sync_param_volume(&m);
+        assert!((v2 - slice).abs() < 1.0, "{v2} vs {slice}");
+        // volume grows toward 2·slice as dp → ∞, monotonically
+        let v4 = ParallelCfg { dp: 4, ..base }.dp_sync_param_volume(&m);
+        let v64 = ParallelCfg { dp: 64, ..base }.dp_sync_param_volume(&m);
+        assert!(v2 < v4 && v4 < v64 && v64 < 2.0 * slice);
     }
 
     #[test]

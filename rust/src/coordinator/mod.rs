@@ -25,7 +25,16 @@ pub struct Args {
 }
 
 /// Boolean switches (everything else with `--` takes a value).
-const KNOWN_FLAGS: &[&str] = &["gpipe", "zero", "verbose", "help", "no-full", "no-overlap"];
+const KNOWN_FLAGS: &[&str] = &[
+    "gpipe",
+    "zero",
+    "verbose",
+    "help",
+    "no-full",
+    "no-overlap",
+    "no-dp-overlap",
+    "overlap-dp",
+];
 
 impl Args {
     /// Parse an argv iterator (without the program name).

@@ -31,16 +31,26 @@ COMMANDS:
                 --virtual N       interleaved 1F1B with N virtual chunks per
                                   stage (must match the artifacts' export;
                                   default: follow the manifest)
-                --checkpoint DIR  write params + sharded optimizer state
+                --dp N            data-parallel replicas (live ZeRO-1:
+                                  bucketed reduce-scatter overlapped with
+                                  the backward; --micro is the GLOBAL
+                                  microbatch count, split across replicas)
+                --no-dp-overlap   serialize gradient sync to the step end
+                                  (A/B timing; bitwise-identical losses)
+                --checkpoint DIR  write params + per-rank sharded
+                                  optimizer state
                 --resume DIR      resume from a --checkpoint dir (bitwise
                                   continuation: data stream, Adam moments
-                                  and LR warmup all pick up mid-run)
+                                  and LR warmup all pick up mid-run; dp
+                                  must match the checkpoint)
                 --no-overlap      eager wrap-edge sends instead of the
                                   staged d2h -> channel -> h2d pipeline
   sweep       print Table 2 (simulated throughput, 13 rows)
   breakdown   print Tables 1 and 3 (simulated forward breakdowns)
   simulate    one point: --model NAME --dp N --tp N --pp N
                          --scheme dense|dpmoe|ppmoe --gpus N [--zero]
+                         [--overlap-dp]  model the backward-overlapped
+                                         dp gradient sync
   verify-tp   real TP×EP MoE layer vs monolithic reference
                 --artifacts DIR --seed N
   info        manifest inventory: --artifacts DIR
@@ -95,14 +105,21 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         checkpoint_dir: args.get("checkpoint").map(PathBuf::from),
         resume_dir: args.get("resume").map(PathBuf::from),
         overlap_wrap_edges: !args.has_flag("no-overlap"),
+        dp: args.get_usize("dp", 1)?,
+        overlap_dp_sync: !args.has_flag("no-dp-overlap"),
+        emulate_dp: 0,
     };
     let report = trainer::train(&cfg)?;
     println!("\n=== training report ===");
     println!("steps: {}", report.steps.len());
     println!("final loss: {:.4}", report.final_loss);
     println!("throughput: {:.0} tokens/s", report.tokens_per_sec);
-    for (s, t) in report.stage_timers.iter().enumerate() {
-        println!("stage {s} time breakdown:");
+    for (replica, stage, t) in report.worker_timers() {
+        if report.dp > 1 {
+            println!("replica {replica} stage {stage} time breakdown:");
+        } else {
+            println!("stage {stage} time breakdown:");
+        }
         for (name, secs, share) in t.rows() {
             println!("  {name:<12} {secs:>8.2}s  {:>5.1}%", share * 100.0);
         }
@@ -142,14 +159,27 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         Scheme::Dense => 1,
     };
     let p = config::ParallelCfg { dp, tp, pp, ep, zero: args.has_flag("zero"), scheme };
+    let overlap_dp = args.has_flag("overlap-dp");
     let sim = ppmoe::sim::Simulator::new(model.clone(), p, config::v100_cluster(gpus))?;
-    let r = sim.step(tables::SWEEP_TC);
+    let r = sim.step_virtual_dp(tables::SWEEP_TC, 1, overlap_dp);
     println!("model: {} ({:.1}B params)", model.name, model.total_params() as f64 / 1e9);
     println!("layout: dp={dp} tp={tp} pp={pp} scheme={scheme:?} on {gpus} GPUs");
     println!("step time:        {:.1} ms", r.step_seconds * 1e3);
     println!("throughput:       {:.0} tokens/s/GPU", r.tokens_per_sec_per_gpu);
     println!("pipeline bubble:  {:.1}%", r.bubble_fraction * 100.0);
-    println!("dp grad sync:     {:.1} ms", r.dp_sync_seconds * 1e3);
+    if overlap_dp {
+        println!(
+            "dp grad sync:     {:.1} ms exposed + {:.1} ms hidden under backward",
+            r.dp_sync_seconds * 1e3,
+            r.dp_sync_hidden_seconds * 1e3
+        );
+        println!(
+            "sync volume/rank: {:.1} M params/step",
+            p.dp_sync_param_volume(&model) / 1e6
+        );
+    } else {
+        println!("dp grad sync:     {:.1} ms", r.dp_sync_seconds * 1e3);
+    }
     Ok(())
 }
 

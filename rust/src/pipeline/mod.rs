@@ -223,6 +223,30 @@ pub fn peak_activations(kind: Schedule, stages: usize, micros: usize, stage: usi
     }
 }
 
+/// The **chunk-backward-complete boundary** of a per-stage op stream: for
+/// each of the `v` chunks, the op index whose execution finishes that
+/// chunk's gradient accumulation — i.e. the position of the chunk's *last*
+/// `Bwd` op. `None` for a chunk with no backward in the stream (never the
+/// case for the generated schedules, which carry every micro's F and B).
+///
+/// This is the hook the dp trainer's bucketed gradient sync keys off: the
+/// moment a stage executes op `chunk_grad_ready(ops, v)[c]`, chunk `c`'s
+/// accumulated gradient is final for the step and its bucket can be handed
+/// to the per-(stage, chunk) reduce-scatter worker while the remaining
+/// backward ops keep the stage busy (docs/hotpath.md §Data-parallel
+/// overlap). Under 1F1B the boundaries are spread across the drain tail —
+/// chunk v−1 completes first, chunk 0 last — which is what gives the
+/// overlap its window.
+pub fn chunk_grad_ready(ops: &[Op], v: usize) -> Vec<Option<usize>> {
+    let mut last = vec![None; v];
+    for (i, op) in ops.iter().enumerate() {
+        if let Op::Bwd { chunk, .. } = op {
+            last[*chunk] = Some(i);
+        }
+    }
+    last
+}
+
 /// Peak number of (micro, chunk) forward stashes a stage holds at once for
 /// a generated op stream — the chunk-aware generalization of
 /// [`peak_activations`], computed by scanning the stream.
@@ -262,6 +286,13 @@ pub struct PipeSim {
     pub stage_busy: Vec<f64>,
     /// 1 − max(busy)/makespan: the pipeline-idle share of the step.
     pub bubble_fraction: f64,
+    /// `chunk_bwd_done[s][c]`: when stage `s` finishes chunk `c`'s **last**
+    /// backward — the [`chunk_grad_ready`] boundary in simulated time. The
+    /// dp-overlap cost model ([`crate::sim::Simulator::step_virtual_dp`])
+    /// starts chunk `c`'s gradient reduce-scatter here, so
+    /// `makespan − chunk_bwd_done[s][c]` is the comm window the overlap can
+    /// hide for that bucket.
+    pub chunk_bwd_done: Vec<Vec<f64>>,
 }
 
 /// Dependency-respecting simulation of a `v = 1` schedule — see
@@ -366,10 +397,23 @@ pub fn simulate_virtual(
 
     let makespan = clock.iter().copied().fold(0.0, f64::max);
     let max_busy = busy.iter().copied().fold(0.0, f64::max);
+    // last-backward completion per (stage, chunk): the grad-ready boundary
+    let chunk_bwd_done = (0..stages)
+        .map(|s| {
+            (0..v)
+                .map(|c| {
+                    (0..micros)
+                        .map(|m| bwd_done[s][idx(m, c)])
+                        .fold(0.0, f64::max)
+                })
+                .collect()
+        })
+        .collect();
     PipeSim {
         makespan,
         stage_busy: busy,
         bubble_fraction: if makespan > 0.0 { 1.0 - max_busy / makespan } else { 0.0 },
+        chunk_bwd_done,
     }
 }
 
@@ -551,6 +595,83 @@ mod tests {
         let gpipe = peak_in_flight(&schedule_virtual(Schedule::GPipe, 4, 16, 2)[0]);
         assert!(plain < inter, "plain {plain} vs interleaved {inter}");
         assert!(inter < gpipe, "interleaved {inter} vs gpipe {gpipe}");
+    }
+
+    #[test]
+    fn chunk_grad_ready_marks_last_bwd_per_chunk() {
+        forall(
+            "chunk-grad-ready",
+            29,
+            40,
+            |r| {
+                let stages = r.range(1, 7);
+                let v = 1 + r.below(4);
+                let micros = stages * r.range(1, 5);
+                let kind = if r.below(2) == 0 { Schedule::OneFOneB } else { Schedule::GPipe };
+                (stages, micros, v, kind)
+            },
+            |&(stages, micros, v, kind)| {
+                for ops in &schedule_virtual(kind, stages, micros, v) {
+                    let ready = chunk_grad_ready(ops, v);
+                    if ready.len() != v {
+                        return Err(format!("{} entries for v={v}", ready.len()));
+                    }
+                    for (c, idx) in ready.iter().enumerate() {
+                        let Some(i) = idx else {
+                            return Err(format!("chunk {c} never completes"));
+                        };
+                        // the marked op is a Bwd of this chunk...
+                        match ops[*i] {
+                            Op::Bwd { chunk, .. } if chunk == c => {}
+                            other => return Err(format!("chunk {c} marks {other:?}")),
+                        }
+                        // ...and no later op touches the chunk's gradient
+                        for op in &ops[*i + 1..] {
+                            if let Op::Bwd { chunk, .. } = op {
+                                if *chunk == c {
+                                    return Err(format!("chunk {c}: bwd after ready"));
+                                }
+                            }
+                        }
+                        // exactly `micros` backwards accumulate before it
+                        let n = ops[..=*i]
+                            .iter()
+                            .filter(|o| matches!(o, Op::Bwd { chunk, .. } if *chunk == c))
+                            .count();
+                        if n != micros {
+                            return Err(format!("chunk {c}: {n} bwds at ready"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn chunk_bwd_done_spreads_across_the_drain() {
+        // 1F1B at v > 1: the loss-adjacent chunk finishes its gradient
+        // first and chunk 0 last — the window the dp overlap hides comm in.
+        // Every boundary lands strictly before the stage's makespan except
+        // the final chunk's, which ends the step.
+        let t = vec![StageTiming { fwd: 1.0, bwd: 2.0, p2p: 0.1 }; 4];
+        let sim = simulate_virtual(Schedule::OneFOneB, &t, 8, 2);
+        for s in 0..4 {
+            let done = &sim.chunk_bwd_done[s];
+            assert_eq!(done.len(), 2);
+            assert!(
+                done[1] < done[0],
+                "stage {s}: chunk 1 (nearer the loss) must complete first"
+            );
+            assert!(done[0] <= sim.makespan);
+            assert!(done[1] < sim.makespan);
+        }
+        // v = 1: one boundary per stage, at that stage's last op
+        let sim1 = simulate_virtual(Schedule::OneFOneB, &t, 8, 1);
+        for s in 0..4 {
+            assert_eq!(sim1.chunk_bwd_done[s].len(), 1);
+            assert!(sim1.chunk_bwd_done[s][0] > 0.0);
+        }
     }
 
     #[test]

@@ -306,8 +306,30 @@ impl Simulator {
     /// [`Simulator::step`] with `v` interleaved virtual chunks per pipeline
     /// stage: the 1F1B event simulation runs the Megatron-style chunk-aware
     /// schedule, so the bubble shrinks toward (p−1)/(v·m+p−1) while every
-    /// microbatch pays the stage-boundary p2p cost v times.
+    /// microbatch pays the stage-boundary p2p cost v times. The dp gradient
+    /// sync is serialized after the pipeline flush (the historic model) —
+    /// see [`Simulator::step_virtual_dp`] for the overlapped variant.
     pub fn step_virtual(&self, tc: TrainCfg, v: usize) -> StepResult {
+        self.step_virtual_dp(tc, v, false)
+    }
+
+    /// [`Simulator::step_virtual`] with an explicit dp-sync placement,
+    /// mirroring the live trainer's `--dp` / `--no-dp-overlap` pair:
+    ///
+    /// * `overlap_dp = false` — compute, then sync: the full
+    ///   reduce-scatter + all-gather volume lands after the pipeline flush
+    ///   (`step = makespan + dp_sync`).
+    /// * `overlap_dp = true` — bucketed sync under the backward: each of
+    ///   the `v` per-stage gradient buckets becomes eligible at its
+    ///   [`crate::pipeline::PipeSim::chunk_bwd_done`] boundary and drains
+    ///   through one per-stage comm channel; only the tail that outlives
+    ///   the pipeline flush is **exposed**
+    ///   (`step = makespan + exposed`, with
+    ///   [`StepResult::dp_sync_hidden_seconds`] reporting what the
+    ///   backward absorbed). Overlap can't hide comm when the per-step
+    ///   sync volume exceeds the backward-drain window — exactly the
+    ///   regime docs/hotpath.md §Data-parallel overlap describes.
+    pub fn step_virtual_dp(&self, tc: TrainCfg, v: usize, overlap_dp: bool) -> StepResult {
         let bt = Batch { b: tc.micro_batch, s: self.m.seq };
         let stage_fwd = self.stage_forward(bt).total();
         // backward ≈ 2× forward compute; collective volume matches forward
@@ -330,14 +352,38 @@ impl Simulator {
             self.p.pp,
             self.p.scheme == Scheme::DpMoE,
         ) * self.cost.cluster.wire_bytes as f64;
-        let dp_sync = if self.p.dp > 1 {
+        let (dp_sync, dp_hidden) = if self.p.dp > 1 {
             // every GPU of a node syncs its own gradients concurrently ->
             // NIC contention divides the inter-node bandwidth
             let bw =
                 self.cost.inter_bw() / self.cost.cluster.gpus_per_node as f64;
-            self.cost.all_reduce_bw(self.p.dp, grad_bytes, bw).seconds
+            let total = self.cost.all_reduce_bw(self.p.dp, grad_bytes, bw).seconds;
+            if overlap_dp {
+                // per-(stage, chunk) buckets of 1/v the volume, draining
+                // through one comm channel per stage in grad-ready order
+                let bucket = self
+                    .cost
+                    .all_reduce_bw(self.p.dp, grad_bytes / v as f64, bw)
+                    .seconds;
+                let mut exposed: f64 = 0.0;
+                for done in &pipe.chunk_bwd_done {
+                    let mut order: Vec<f64> = done.clone();
+                    order.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    let mut finish = 0.0f64;
+                    for t in order {
+                        finish = finish.max(t) + bucket;
+                    }
+                    exposed = exposed.max((finish - pipe.makespan).max(0.0));
+                }
+                // hidden = the bucketed comm the backward absorbed (the
+                // bucketed total v·bucket exceeds the monolithic collective
+                // by the extra per-bucket startup latencies)
+                (exposed, (v as f64 * bucket - exposed).max(0.0))
+            } else {
+                (total, 0.0)
+            }
         } else {
-            0.0
+            (0.0, 0.0)
         };
 
         let step = pipe.makespan + dp_sync;
@@ -347,6 +393,7 @@ impl Simulator {
             tokens_per_sec_per_gpu: tokens / step / self.p.world() as f64,
             bubble_fraction: pipe.bubble_fraction,
             dp_sync_seconds: dp_sync,
+            dp_sync_hidden_seconds: dp_hidden,
             stage_fwd_seconds: stage_fwd,
         }
     }
@@ -361,8 +408,13 @@ pub struct StepResult {
     pub tokens_per_sec_per_gpu: f64,
     /// Pipeline-idle fraction of the step.
     pub bubble_fraction: f64,
-    /// DP gradient-sync share of the step.
+    /// DP gradient-sync time **added to** the step: the full collective
+    /// when serialized, only the exposed tail when overlapped.
     pub dp_sync_seconds: f64,
+    /// DP gradient-sync time hidden under the backward pass (0 when
+    /// serialized or at dp = 1): `hidden + exposed` equals the total
+    /// bucketed collective cost (v per-chunk rounds).
+    pub dp_sync_hidden_seconds: f64,
     /// Per-stage forward compute time.
     pub stage_fwd_seconds: f64,
 }
@@ -502,5 +554,57 @@ mod tests {
         assert!(r.step_seconds > 0.0);
         assert!(r.tokens_per_sec_per_gpu > 0.0);
         assert!((0.0..1.0).contains(&r.bubble_fraction));
+    }
+
+    #[test]
+    fn dp_overlap_hides_sync_but_never_invents_time() {
+        // the backward-overlap model vs the serialized one, at dp > 1:
+        // overlapping can only shrink the step (exposed ≤ serialized
+        // total + the extra per-bucket startups), hides a positive amount
+        // whenever a drain window exists, and is a no-op at dp = 1
+        let m = moe_small_setting();
+        let p = ParallelCfg { dp: 4, tp: 2, pp: 4, ep: 2, zero: true, scheme: Scheme::PpMoE };
+        let s = sim(m.clone(), p, 32);
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        for v in [1usize, 2, 4] {
+            let serial = s.step_virtual_dp(tc, v, false);
+            let over = s.step_virtual_dp(tc, v, true);
+            assert!(serial.dp_sync_seconds > 0.0);
+            assert_eq!(serial.dp_sync_hidden_seconds, 0.0);
+            assert!(
+                over.step_seconds <= serial.step_seconds
+                    + serial.dp_sync_seconds, // bucketed startups bound
+                "v={v}: overlap {} vs serial {}",
+                over.step_seconds,
+                serial.step_seconds
+            );
+            assert!(over.dp_sync_hidden_seconds >= 0.0);
+            // throughput moves inversely with step time
+            assert!(over.tokens_per_sec_per_gpu >= serial.tokens_per_sec_per_gpu * 0.99);
+        }
+        // dp = 1: both placements are the bare pipeline
+        let one = ParallelCfg { dp: 1, ..p };
+        let s1 = sim(m, one, 8);
+        let a = s1.step_virtual_dp(tc, 1, false);
+        let b = s1.step_virtual_dp(tc, 1, true);
+        assert_eq!(a.step_seconds, b.step_seconds);
+        assert_eq!(a.dp_sync_seconds, 0.0);
+        assert_eq!(b.dp_sync_hidden_seconds, 0.0);
+    }
+
+    #[test]
+    fn dp_overlap_exposes_tail_when_comm_dominates() {
+        // when the sync volume dwarfs the backward-drain window the
+        // overlap cannot hide everything: the exposed tail must be
+        // positive (the "when overlap can't hide comm" regime)
+        let m = moe_large_setting();
+        let p = ParallelCfg { dp: 8, tp: 1, pp: 2, ep: 1, zero: true, scheme: Scheme::DpMoE };
+        let s = sim(m, p, 16);
+        let tc = TrainCfg { micro_batch: 1, num_micro: 2 };
+        let over = s.step_virtual_dp(tc, 1, true);
+        assert!(
+            over.dp_sync_seconds > 0.0,
+            "tiny batch + huge grads must expose a comm tail"
+        );
     }
 }

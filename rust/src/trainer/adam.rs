@@ -136,6 +136,37 @@ pub fn global_grad_norm(grads: &[Tensor]) -> Result<f32> {
     Ok(sumsq.sqrt())
 }
 
+/// Per-segment sums of squares over the **flat concatenation** of a ragged
+/// gradient list, split into `nseg` contiguous
+/// [`segment`]`(r, total, nseg)` ranges — the same sharding contract the
+/// collectives and [`ShardedAdam`] use.
+///
+/// This is the dp trainer's *canonical clip-norm decomposition*: rank r of
+/// a dp group computes `segmented_sumsq`-segment r locally from its
+/// reduce-scattered gradient shard, the per-(chunk, rank) partials are
+/// exchanged as scalars, and every rank combines them in the same fixed
+/// order — so the resulting norm (and therefore the clip factor) is
+/// bitwise identical on every rank, and to a single-process reference that
+/// calls this function on the full summed gradient. Each partial is
+/// accumulated left-to-right from 0.0 in f32, exactly like a rank's local
+/// loop over its shard.
+pub fn segmented_sumsq(grads: &[Tensor], nseg: usize) -> Result<Vec<f32>> {
+    let sizes: Vec<usize> = grads.iter().map(Tensor::numel).collect();
+    let total: usize = sizes.iter().sum();
+    let mut out = Vec::with_capacity(nseg);
+    for r in 0..nseg {
+        let (lo, hi) = segment(r, total, nseg);
+        let mut acc = 0.0f32;
+        for (ti, range) in flat_slices(&sizes, lo, hi) {
+            for x in &grads[ti].as_f32()?[range] {
+                acc += x * x;
+            }
+        }
+        out.push(acc);
+    }
+    Ok(out)
+}
+
 /// Map a flat element range `[lo, hi)` onto a ragged tensor list: yields
 /// `(tensor_index, within-tensor element range)` covering exactly the
 /// overlap of `[lo, hi)` with each tensor's flat span, in order.
@@ -389,29 +420,93 @@ pub fn sharded_group_step(
     grads: &[Tensor],
     gscale: f32,
 ) -> Result<()> {
+    sharded_group_step_with(opt, group, params, grads, gscale, &mut GroupStepScratch::new())
+}
+
+/// Reusable buffers for [`sharded_group_step_with`]: round-trip one scratch
+/// per (optimizer, group) across steps and the steady-state sync path
+/// performs **zero heap allocations** — every vector's capacity converges
+/// after the first step and is thereafter refilled in place (the bench's
+/// `optimizer/zero1-live` rows assert pointer/capacity stability).
+#[derive(Debug, Default)]
+pub struct GroupStepScratch {
+    /// Flattened local gradient contribution (`total` elements).
+    pub flat: Vec<f32>,
+    /// This rank's reduce-scattered summed gradient segment.
+    pub seg: Vec<f32>,
+    /// This rank's updated parameter shard (all-gather deposit).
+    pub shard: Vec<f32>,
+}
+
+impl GroupStepScratch {
+    /// Empty scratch; buffers grow to steady-state capacity on first use.
+    pub fn new() -> GroupStepScratch {
+        GroupStepScratch::default()
+    }
+}
+
+/// [`sharded_group_step`] with caller-owned scratch buffers: the same
+/// reduce-scatter → shard-Adam → all-gather round (bitwise identical — the
+/// collective is [`AllReduceGroup::reduce_scatter_into`], property-tested
+/// against the allocating variant), but allocation-free in steady state.
+pub fn sharded_group_step_with(
+    opt: &mut ShardedAdam,
+    group: &Arc<AllReduceGroup>,
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    gscale: f32,
+    scratch: &mut GroupStepScratch,
+) -> Result<()> {
     ensure!(
         group.ranks() == opt.nranks(),
         "group of {} ranks vs optimizer sharded {} ways",
         group.ranks(),
         opt.nranks()
     );
-    // flatten this rank's local (unsummed) gradient contribution
-    let mut flat = Vec::with_capacity(opt.total());
-    for g in grads {
-        flat.extend_from_slice(g.as_f32()?);
-    }
+    // flatten this rank's local (unsummed) gradient contribution into the
+    // reused buffer
+    flatten_grads(grads, &mut scratch.flat)?;
     ensure!(
-        flat.len() == opt.total(),
+        scratch.flat.len() == opt.total(),
         "gradients: {} elements vs {} parameters",
-        flat.len(),
+        scratch.flat.len(),
         opt.total()
     );
-    let reduced = group.reduce_scatter_as(opt.rank(), &flat);
-    opt.update_flat(params, &reduced, gscale)?;
-    // broadcast updated parameters: gather every rank's fresh shard
-    let mut shard = Vec::new();
-    opt.flatten_owned(params, &mut shard)?;
-    let full = group.all_gather_as(opt.rank(), &shard);
+    group.reduce_scatter_into(opt.rank(), &scratch.flat, &mut scratch.seg);
+    opt.update_flat(params, &scratch.seg, gscale)?;
+    gather_updated_params(opt, group, params, &mut scratch.shard)
+}
+
+/// Flatten a ragged gradient list into `out` (cleared first, capacity
+/// reused) in tensor order — the single definition of a group round's
+/// contribution layout, shared by [`sharded_group_step_with`] and the live
+/// trainer's bucket hook. The concatenation order is load-bearing for the
+/// bitwise dp-equivalence contract: it must match the flat element space
+/// [`ShardedAdam`] shards by [`segment`].
+pub fn flatten_grads(grads: &[Tensor], out: &mut Vec<f32>) -> Result<()> {
+    out.clear();
+    for g in grads {
+        out.extend_from_slice(g.as_f32()?);
+    }
+    Ok(())
+}
+
+/// Broadcast a rank's freshly-updated parameter shard to its group:
+/// flatten the owned shard into the reused `gather_buf`, all-gather every
+/// rank's segment, and write the slot-order concatenation back into the
+/// ragged tensors. This is the single definition of the group step's
+/// gather tail — shared by [`sharded_group_step_with`] and the live
+/// trainer's per-chunk ZeRO-1 update, so the broadcast arithmetic can
+/// never drift between them. Must be called inside the round opened by the
+/// matching reduce-scatter phase.
+pub fn gather_updated_params(
+    opt: &ShardedAdam,
+    group: &Arc<AllReduceGroup>,
+    params: &mut [Tensor],
+    gather_buf: &mut Vec<f32>,
+) -> Result<()> {
+    opt.flatten_owned(params, gather_buf)?;
+    let full = group.all_gather_as(opt.rank(), gather_buf);
     opt.scatter_full(params, &full)?;
     Ok(())
 }
@@ -663,6 +758,104 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn group_step_with_scratch_is_bitwise_and_alloc_stable() {
+        // the scratch variant must match the allocating step bitwise, and
+        // after one warmup step its buffers must never reallocate (pointer
+        // + capacity stability == zero heap allocations in steady state)
+        let n = 2;
+        let init = vec![
+            Tensor::f32(vec![0.1, -0.4, 2.0, 0.7, -1.1], vec![5]),
+            Tensor::f32(vec![1.5, -0.5, 0.25], vec![3]),
+        ];
+        let grads: Vec<Vec<Tensor>> = (0..n)
+            .map(|r| {
+                init.iter()
+                    .map(|p| {
+                        let d: Vec<f32> =
+                            (0..p.numel()).map(|i| (i as f32 + 1.0) * (r as f32 - 0.5)).collect();
+                        Tensor::f32(d, p.shape.clone())
+                    })
+                    .collect()
+            })
+            .collect();
+        let run = |use_scratch: bool| -> Vec<Vec<Tensor>> {
+            let group = AllReduceGroup::with_algo(n, Algo::Chunked);
+            let mut rank_params: Vec<Vec<Tensor>> = (0..n).map(|_| init.clone()).collect();
+            let mut opts: Vec<ShardedAdam> =
+                (0..n).map(|r| ShardedAdam::new(0.02, &init, r, n)).collect();
+            std::thread::scope(|s| {
+                for (rank, (opt, params)) in
+                    opts.iter_mut().zip(rank_params.iter_mut()).enumerate()
+                {
+                    let group = group.clone();
+                    let grads = &grads;
+                    let _ = s.spawn(move || {
+                        let mut scratch = GroupStepScratch::new();
+                        let mut stable_ptrs = None;
+                        for step in 0..6 {
+                            if use_scratch {
+                                sharded_group_step_with(
+                                    opt, &group, params, &grads[rank], 0.5, &mut scratch,
+                                )
+                                .unwrap();
+                                let ptrs = (
+                                    scratch.flat.as_ptr(),
+                                    scratch.seg.as_ptr(),
+                                    scratch.shard.as_ptr(),
+                                    scratch.flat.capacity(),
+                                    scratch.seg.capacity(),
+                                    scratch.shard.capacity(),
+                                );
+                                if step == 0 {
+                                    stable_ptrs = Some(ptrs);
+                                } else {
+                                    assert_eq!(
+                                        stable_ptrs,
+                                        Some(ptrs),
+                                        "rank {rank}: scratch reallocated after warmup"
+                                    );
+                                }
+                            } else {
+                                sharded_group_step(opt, &group, params, &grads[rank], 0.5)
+                                    .unwrap();
+                            }
+                        }
+                    });
+                }
+            });
+            rank_params
+        };
+        let with_scratch = run(true);
+        let reference = run(false);
+        assert_eq!(with_scratch, reference);
+    }
+
+    #[test]
+    fn segmented_sumsq_partitions_the_global_norm() {
+        let grads = vec![
+            Tensor::f32(vec![1.0, -2.0, 3.0], vec![3]),
+            Tensor::f32(vec![0.5, -0.5, 4.0, 0.0], vec![4]),
+        ];
+        // nseg = 1: one partial, accumulated in the exact order
+        // global_grad_norm walks — bitwise its square
+        let one = segmented_sumsq(&grads, 1).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].sqrt(), global_grad_norm(&grads).unwrap());
+        // segments follow the collective's `segment` split of the flat
+        // 7-element space: [0,3) [3,5) [5,7) at nseg = 3
+        let parts = segmented_sumsq(&grads, 3).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], 1.0f32 + 4.0 + 9.0);
+        assert_eq!(parts[1], 0.25f32 + 0.25);
+        assert_eq!(parts[2], 16.0f32 + 0.0);
+        // more segments than elements: trailing partials are empty sums
+        // (plus element 6, whose value is literally 0.0)
+        let many = segmented_sumsq(&grads, 9).unwrap();
+        assert_eq!(many.len(), 9);
+        assert_eq!(many.iter().filter(|&&x| x == 0.0).count(), 3);
     }
 
     #[test]

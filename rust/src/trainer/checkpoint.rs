@@ -67,7 +67,21 @@ pub fn load_stage(dir: &Path, stage: usize, manifest: &Manifest) -> Result<Vec<T
         .collect())
 }
 
-/// Write one stage's sharded optimizer state as `<dir>/stage<i>.opt.bin`.
+/// File name of one (stage, dp-rank)'s optimizer shard: rank 0 keeps the
+/// historic `stage<i>.opt.bin` (a dp = 1 checkpoint is byte-identical to a
+/// pre-dp one), higher ranks write `stage<i>.rank<r>.opt.bin`. Public so
+/// the trainer can pre-validate a resume directory on the driver before
+/// any worker thread spawns.
+pub fn optimizer_shard_file(stage: usize, rank: usize) -> String {
+    if rank == 0 {
+        format!("stage{stage}.opt.bin")
+    } else {
+        format!("stage{stage}.rank{rank}.opt.bin")
+    }
+}
+
+/// Write one stage's sharded optimizer state as `<dir>/stage<i>.opt.bin`
+/// (dp rank 0 / single replica — see [`save_optimizer_rank`]).
 ///
 /// Layout (little-endian): `u64` chunk count, then per chunk `u64 step`,
 /// `u64 lo`, `u64 hi` (the shard's flat element range) followed by
@@ -75,6 +89,20 @@ pub fn load_stage(dir: &Path, stage: usize, manifest: &Manifest) -> Result<Vec<T
 /// round-trip exactly, so a resumed step is bitwise-equal to an
 /// uninterrupted one.
 pub fn save_optimizer(dir: &Path, stage: usize, opts: &[ShardedAdam]) -> Result<()> {
+    save_optimizer_rank(dir, stage, 0, opts)
+}
+
+/// [`save_optimizer`] for one data-parallel rank: at dp > 1 every replica
+/// owns (and checkpoints) only its 1/dp moment shard per chunk, so a
+/// checkpoint directory carries `dp` files per stage and resuming restores
+/// each rank's shard to the replica that owns it — which is what keeps
+/// resumption bitwise at dp > 1 (rust/tests/dp_equivalence.rs).
+pub fn save_optimizer_rank(
+    dir: &Path,
+    stage: usize,
+    rank: usize,
+    opts: &[ShardedAdam],
+) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let mut bytes = Vec::new();
     bytes.extend_from_slice(&(opts.len() as u64).to_le_bytes());
@@ -91,16 +119,31 @@ pub fn save_optimizer(dir: &Path, stage: usize, opts: &[ShardedAdam]) -> Result<
             bytes.extend_from_slice(&x.to_le_bytes());
         }
     }
-    std::fs::write(dir.join(format!("stage{stage}.opt.bin")), bytes)
-        .with_context(|| format!("writing optimizer state for stage {stage}"))?;
+    std::fs::write(dir.join(optimizer_shard_file(stage, rank)), bytes)
+        .with_context(|| format!("writing optimizer state for stage {stage} rank {rank}"))?;
     Ok(())
 }
 
 /// Restore `<dir>/stage<i>.opt.bin` into freshly-constructed per-chunk
-/// optimizers. The shard layout (chunk count and each chunk's owned flat
-/// range) must match — a checkpoint from a different rank/group geometry
-/// fails loudly instead of silently mis-assigning moments.
+/// optimizers (dp rank 0 — see [`load_optimizer_rank`]). The shard layout
+/// (chunk count and each chunk's owned flat range) must match — a
+/// checkpoint from a different rank/group geometry fails loudly instead of
+/// silently mis-assigning moments.
 pub fn load_optimizer(dir: &Path, stage: usize, opts: &mut [ShardedAdam]) -> Result<()> {
+    load_optimizer_rank(dir, stage, 0, opts)
+}
+
+/// [`load_optimizer`] for one data-parallel rank: reads
+/// `stage<i>.rank<r>.opt.bin` (rank 0: the legacy `stage<i>.opt.bin`).
+/// The per-chunk `lo..hi` check doubles as a dp-geometry check — a dp = 2
+/// checkpoint loaded into a dp = 4 run owns different flat ranges and is
+/// rejected before any moment is mis-assigned.
+pub fn load_optimizer_rank(
+    dir: &Path,
+    stage: usize,
+    rank: usize,
+    opts: &mut [ShardedAdam],
+) -> Result<()> {
     fn take_u64(bytes: &[u8], cur: &mut usize) -> Result<u64> {
         if *cur + 8 > bytes.len() {
             bail!("truncated optimizer state at byte {cur}");
@@ -121,7 +164,7 @@ pub fn load_optimizer(dir: &Path, stage: usize, opts: &mut [ShardedAdam]) -> Res
         Ok(out)
     }
 
-    let path = dir.join(format!("stage{stage}.opt.bin"));
+    let path = dir.join(optimizer_shard_file(stage, rank));
     let bytes = std::fs::read(&path)
         .with_context(|| format!("reading {}", path.display()))?;
     let mut cur = 0usize;
@@ -156,25 +199,38 @@ pub fn load_optimizer(dir: &Path, stage: usize, opts: &mut [ShardedAdam]) -> Res
     Ok(())
 }
 
-/// Record how many optimizer steps the checkpoint covers
-/// (`<dir>/train_state.json`) so a resumed run can fast-forward the data
-/// stream to the exact position an uninterrupted run would be at.
-pub fn save_train_state(dir: &Path, steps: usize) -> Result<()> {
+/// Record how many optimizer steps the checkpoint covers and the
+/// data-parallel replica count it was taken at (`<dir>/train_state.json`)
+/// so a resumed run can fast-forward the data stream to the exact position
+/// an uninterrupted run would be at — and refuse to resume under a
+/// different dp (the optimizer shards and the per-replica data split both
+/// depend on it).
+pub fn save_train_state(dir: &Path, steps: usize, dp: usize) -> Result<()> {
     std::fs::create_dir_all(dir)?;
-    std::fs::write(dir.join("train_state.json"), format!("{{\"steps\": {steps}}}\n"))
-        .context("writing train_state.json")?;
+    std::fs::write(
+        dir.join("train_state.json"),
+        format!("{{\"steps\": {steps}, \"dp\": {dp}}}\n"),
+    )
+    .context("writing train_state.json")?;
     Ok(())
 }
 
-/// Completed-step count recorded by [`save_train_state`].
-pub fn load_train_state(dir: &Path) -> Result<usize> {
+/// `(steps, dp)` recorded by [`save_train_state`]. Pre-dp checkpoints
+/// (no `dp` key) load as dp = 1.
+pub fn load_train_state(dir: &Path) -> Result<(usize, usize)> {
     let path = dir.join("train_state.json");
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("reading {}", path.display()))?;
     let j = crate::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
-    j.req("steps")?
+    let steps = j
+        .req("steps")?
         .as_usize()
-        .context("train_state.json: steps")
+        .context("train_state.json: steps")?;
+    let dp = match j.get("dp") {
+        Some(v) => v.as_usize().context("train_state.json: dp")?,
+        None => 1,
+    };
+    Ok((steps, dp))
 }
 
 /// Validation loss over `batches` held-out batches.
@@ -311,7 +367,7 @@ mod tests {
         }
         save_stage(&dir, 0, &m, &params).unwrap();
         save_optimizer(&dir, 0, &opts).unwrap();
-        save_train_state(&dir, 3).unwrap();
+        save_train_state(&dir, 3, 1).unwrap();
 
         // uninterrupted continuation
         let mut p_cont = params.clone();
@@ -325,7 +381,7 @@ mod tests {
             ShardedAdam::new(0.05, &p_res[1..], 0, 1),
         ];
         load_optimizer(&dir, 0, &mut opts_res).unwrap();
-        assert_eq!(load_train_state(&dir).unwrap(), 3);
+        assert_eq!(load_train_state(&dir).unwrap(), (3, 1));
         opts_res[0].update_shard(&mut p_res[..1], &grads[..1], 0.5).unwrap();
         opts_res[1].update_shard(&mut p_res[1..], &grads[1..], 0.5).unwrap();
 
@@ -357,10 +413,49 @@ mod tests {
     #[test]
     fn train_state_roundtrip_and_missing() {
         let dir = std::env::temp_dir().join(format!("ppmoe_ts_{}", std::process::id()));
-        save_train_state(&dir, 42).unwrap();
-        assert_eq!(load_train_state(&dir).unwrap(), 42);
+        save_train_state(&dir, 42, 2).unwrap();
+        assert_eq!(load_train_state(&dir).unwrap(), (42, 2));
+        // a pre-dp checkpoint (no "dp" key) loads as dp = 1
+        std::fs::write(dir.join("train_state.json"), "{\"steps\": 7}\n").unwrap();
+        assert_eq!(load_train_state(&dir).unwrap(), (7, 1));
         std::fs::remove_dir_all(&dir).ok();
         assert!(load_train_state(&dir).is_err());
+    }
+
+    #[test]
+    fn per_rank_optimizer_shards_roundtrip_and_reject_geometry() {
+        // dp = 2: each rank checkpoints its own half-moments; loading
+        // restores exactly the owning rank's shard and refuses a shard
+        // from a different dp geometry.
+        let dir = std::env::temp_dir().join(format!("ppmoe_optdp_{}", std::process::id()));
+        let params = vec![Tensor::f32((0..10).map(|i| i as f32).collect(), vec![10])];
+        let grads = vec![Tensor::f32(vec![0.25; 10], vec![10])];
+        let dp = 2;
+        let mut rank_opts: Vec<Vec<ShardedAdam>> = (0..dp)
+            .map(|r| vec![ShardedAdam::new(0.05, &params, r, dp)])
+            .collect();
+        for (r, opts) in rank_opts.iter_mut().enumerate() {
+            let mut p = params.clone();
+            opts[0].update_shard(&mut p, &grads, 1.0).unwrap();
+            save_optimizer_rank(&dir, 0, r, opts).unwrap();
+        }
+        // rank 0's file is the legacy name; rank 1's is rank-suffixed
+        assert!(dir.join("stage0.opt.bin").exists());
+        assert!(dir.join("stage0.rank1.opt.bin").exists());
+        for r in 0..dp {
+            let mut fresh = vec![ShardedAdam::new(0.05, &params, r, dp)];
+            load_optimizer_rank(&dir, 0, r, &mut fresh).unwrap();
+            let (step, m, v) = fresh[0].state();
+            let (step0, m0, v0) = rank_opts[r][0].state();
+            assert_eq!((step, m, v), (step0, m0, v0), "rank {r} shard diverged");
+        }
+        // wrong geometry: a dp = 4 shard owns a different flat range
+        let mut wrong = vec![ShardedAdam::new(0.05, &params, 1, 4)];
+        assert!(load_optimizer_rank(&dir, 0, 1, &mut wrong).is_err());
+        // missing rank file
+        let mut r2 = vec![ShardedAdam::new(0.05, &params, 1, 2)];
+        assert!(load_optimizer_rank(&dir, 1, 1, &mut r2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -28,6 +28,42 @@
 //! pipelined gradient equals the single-shot `full_lossgrad` artifact up
 //! to fp tolerance (verified in rust/tests/pipeline_equivalence.rs).
 //!
+//! ## Data parallelism with backward-overlapped ZeRO-1 sync (docs/hotpath.md §Data-parallel overlap)
+//!
+//! `--dp n` runs **n concurrent replica thread-groups** of the whole
+//! pipeline: the global batch's `m` microbatches split into contiguous
+//! blocks of `m/n` per replica (replica r draws global micros
+//! `r·m/n ..< (r+1)·m/n` from the shared seeded corpus stream), and the
+//! replicas share one [`AllReduceGroup`] per (stage, chunk) plus one small
+//! per-stage group for clip-norm scalars. Gradient synchronization is
+//! **bucketed and overlapped with the backward pass**: the moment a
+//! chunk's last microbatch backward completes inside the 1F1B walk (the
+//! [`crate::pipeline::chunk_grad_ready`] boundary), its accumulated
+//! gradient is flattened into a reused bucket and handed to that
+//! (stage, chunk)'s sync worker thread, which runs the allocation-free
+//! [`AllReduceGroup::reduce_scatter_into`] concurrently with the stage's
+//! remaining backward ops. At step end each rank:
+//!
+//! 1. receives its chunks' reduce-scattered gradient segments (already
+//!    summed in rank order — bitwise the all-reduce result);
+//! 2. exchanges per-(chunk, rank) sum-of-squares scalars over the stage's
+//!    norm group and combines them in a fixed (chunk, rank) order, so
+//!    every rank derives the **same** clip factor bit-for-bit
+//!    ([`adam::segmented_sumsq`] is the single definition of that
+//!    decomposition);
+//! 3. runs Adam on its owned 1/n moment shard only
+//!    ([`adam::ShardedAdam::update_flat`]) and all-gathers the fresh
+//!    parameter shards — live ZeRO-1: each replica stores 1/n of the
+//!    optimizer state and the full summed gradient never materializes.
+//!
+//! `--no-dp-overlap` defers the whole sync to the step end (compute, then
+//! sync, then update) — same collectives in the same per-group order, so
+//! losses and parameters are **bitwise identical** either way; the knob
+//! exists for A/B timing (`dp_sync/*` bench rows). Both paths are bitwise
+//! equal to a single-replica reference that sums the per-replica block
+//! gradients in rank order ([`TrainerCfg::emulate_dp`],
+//! rust/tests/dp_equivalence.rs).
+//!
 //! ## Device-resident microbatch loop (docs/hotpath.md)
 //!
 //! The steady-state loop crosses the PJRT boundary only where a host value
@@ -50,20 +86,24 @@
 //!   ([`crate::runtime::Runtime::restage_buffers`]); chunk executables
 //!   address their parameters as sub-slices of the stage-level buffers
 //!   ([`crate::runtime::Manifest::chunk_param_range`]).
+//! * The dp sync path reuses its bucket buffers (`flat` + scattered `seg`
+//!   round-trip main thread ↔ sync worker), the gather deposit buffer and
+//!   the norm scalar vector, so steady-state gradient synchronization
+//!   performs **zero heap allocations** (asserted by the
+//!   `optimizer/zero1-live` bench rows).
 //!
 //! ## Sharded per-chunk optimizer (docs/hotpath.md §Sharded optimizer)
 //!
 //! Optimizer state lives per (stage, chunk): each chunk owns a
 //! [`adam::ShardedAdam`] over its contiguous parameter sub-slice, shaped
-//! for rank r of the stage's (future) data-parallel `AllReduceGroup` —
-//! today each stage is a single replica, so every shard spans its whole
-//! chunk and the update is bitwise the historic monolithic fused sweep.
-//! The n-rank path (reduce-scatter grads → Adam on the owned shard →
-//! all-gather params, [`adam::sharded_group_step`]) is property-tested
-//! bitwise-equal against the monolithic reference, and the per-chunk
-//! moments are what checkpoints carry ([`checkpoint::save_optimizer`]) —
-//! which is also what makes resumption bitwise
-//! ([`TrainerCfg::resume_dir`]).
+//! for rank r of the stage's data-parallel group — at `--dp 1` the shard
+//! spans the whole chunk and the update is bitwise the historic monolithic
+//! fused sweep; at `--dp n` rank r keeps only the
+//! `segment(r, numel, n)` moment shard its reduce-scatter phase produces.
+//! The n-rank path is property-tested bitwise-equal against the monolithic
+//! reference, and the per-rank per-chunk moments are what checkpoints
+//! carry ([`checkpoint::save_optimizer_rank`]) — which is also what makes
+//! resumption bitwise at every dp ([`TrainerCfg::resume_dir`]).
 //!
 //! ## Overlapped wrap-edge transfers (docs/hotpath.md §Wrap-edge overlap)
 //!
@@ -85,6 +125,8 @@
 //! restores eager sends for A/B timing (`--no-overlap`).
 //!
 //! [`DeviceTensor`]: crate::runtime::DeviceTensor
+//! [`AllReduceGroup`]: crate::comm::AllReduceGroup
+//! [`AllReduceGroup::reduce_scatter_into`]: crate::comm::AllReduceGroup::reduce_scatter_into
 
 pub mod adam;
 pub mod checkpoint;
@@ -98,14 +140,15 @@ use std::thread;
 
 use anyhow::{bail, Context, Result};
 
-use crate::comm::Barrier;
+use crate::comm::{Algo, AllReduceGroup, Barrier};
 use crate::data::Corpus;
 use crate::metrics::Timers;
 use crate::pipeline::{
-    fwd_consumer, fwd_producer, is_wrap_bwd, is_wrap_fwd, schedule_virtual, Op, Schedule,
+    chunk_grad_ready, fwd_consumer, fwd_producer, is_wrap_bwd, is_wrap_fwd, schedule_virtual,
+    Op, Schedule,
 };
 use crate::runtime::{Runtime, Tensor};
-use adam::{global_grad_norm, ShardedAdam};
+use adam::{global_grad_norm, segmented_sumsq, ShardedAdam};
 use pool::{slab_pair, SlabPool, SlabReturn};
 
 /// Training hyperparameters.
@@ -115,7 +158,10 @@ pub struct TrainerCfg {
     pub artifacts: PathBuf,
     /// Optimizer steps to run.
     pub steps: usize,
-    /// Microbatches per global batch (pipeline depth m).
+    /// Microbatches per global batch (pipeline depth m), **summed over the
+    /// dp replicas**: each replica runs `num_micro / dp` microbatches per
+    /// step, so the global batch (and the loss trajectory) is a function of
+    /// `num_micro` alone.
     pub num_micro: usize,
     /// Adam learning rate.
     pub lr: f32,
@@ -136,19 +182,40 @@ pub struct TrainerCfg {
     pub warmup_steps: usize,
     /// If set, every stage writes its final parameters here
     /// (`stage<i>.bin`, same layout as the manifest) for `evaluate`, plus
-    /// its sharded optimizer state (`stage<i>.opt.bin`) and the completed
-    /// step count (`train_state.json`) so the run can be resumed.
+    /// each dp rank's sharded optimizer state (`stage<i>.opt.bin` /
+    /// `stage<i>.rank<r>.opt.bin`) and the completed step count + dp
+    /// (`train_state.json`) so the run can be resumed.
     pub checkpoint_dir: Option<PathBuf>,
     /// Resume from a checkpoint directory previously written via
-    /// `checkpoint_dir`: parameters, per-chunk Adam moments and the data
-    /// stream position are all restored, making the resumed trajectory
-    /// bitwise-equal to an uninterrupted run.
+    /// `checkpoint_dir`: parameters, per-rank per-chunk Adam moments and
+    /// the data stream position are all restored, making the resumed
+    /// trajectory bitwise-equal to an uninterrupted run (the checkpoint's
+    /// recorded dp must match [`TrainerCfg::dp`]).
     pub resume_dir: Option<PathBuf>,
     /// Stage the wrap-around-edge d2h readback and defer its channel send
     /// to the next blocking point (overlapping the readback with the next
     /// op's dispatch); `false` restores eager per-op sends (`--no-overlap`).
     /// Either way the executed schedule and losses are bitwise identical.
     pub overlap_wrap_edges: bool,
+    /// Data-parallel replica count (`--dp`): dp full pipeline replicas
+    /// share per-(stage, chunk) gradient groups and run the live ZeRO-1
+    /// sharded optimizer step (module docs §Data parallelism). Must divide
+    /// `num_micro`.
+    pub dp: usize,
+    /// Overlap each chunk's gradient reduce-scatter with the remaining
+    /// backward ops via per-(stage, chunk) sync workers (`--no-dp-overlap`
+    /// disables, deferring all sync to the step end). Bitwise-identical
+    /// losses/params either way; only timing moves.
+    pub overlap_dp_sync: bool,
+    /// **Reference mode** (testing): at `dp = 1`, emulate a
+    /// `emulate_dp`-way data-parallel group inside the single replica —
+    /// the `m` microbatches accumulate into `emulate_dp` contiguous block
+    /// gradients which are summed in rank order at step end, and the clip
+    /// norm uses the same [`adam::segmented_sumsq`] (chunk, rank)
+    /// decomposition a live dp group computes. This is "dp = 1 with summed
+    /// gradients": the serialized reference live `--dp n` training is
+    /// bitwise-equal to (rust/tests/dp_equivalence.rs). 0 or 1 = off.
+    pub emulate_dp: usize,
 }
 
 impl Default for TrainerCfg {
@@ -167,6 +234,9 @@ impl Default for TrainerCfg {
             checkpoint_dir: None,
             resume_dir: None,
             overlap_wrap_edges: true,
+            dp: 1,
+            overlap_dp_sync: true,
+            emulate_dp: 0,
         }
     }
 }
@@ -182,6 +252,19 @@ struct ActMsg {
 struct GradMsg {
     micro: usize,
     dy: Tensor,
+}
+
+/// One (stage, chunk)'s gradient-sync bucket: the flattened local gradient
+/// contribution and the reduce-scattered summed segment this rank owns.
+/// Buckets round-trip main thread → sync worker → main thread, so both
+/// buffers reach steady-state capacity after the first step and the sync
+/// path allocates nothing thereafter.
+#[derive(Default)]
+struct Bucket {
+    /// Flattened chunk gradient (chunk numel elements).
+    flat: Vec<f32>,
+    /// This rank's scattered summed segment (chunk numel / dp elements).
+    seg: Vec<f32>,
 }
 
 /// Per-step record returned to the caller.
@@ -204,14 +287,20 @@ pub struct TrainReport {
     pub steps: Vec<StepLog>,
     /// Whole-run throughput.
     pub tokens_per_sec: f64,
-    /// Per-stage timer breakdowns.
+    /// Per-worker timer breakdowns, indexed `replica · p + stage`
+    /// (dp = 1: exactly one entry per stage, as before). Decode through
+    /// [`TrainReport::worker_timers`] rather than re-deriving the layout.
     pub stage_timers: Vec<Timers>,
+    /// Data-parallel replica count the run executed with (decodes
+    /// `stage_timers`).
+    pub dp: usize,
     /// Loss of the final step.
     pub final_loss: f32,
-    /// The op order each stage actually executed during step 0 (recorded
-    /// *after* every blocking recv succeeded) — compared against
-    /// [`crate::pipeline::schedule_virtual`] and the event simulation in
-    /// rust/tests/pipeline_equivalence.rs.
+    /// The op order each stage of **replica 0** actually executed during
+    /// step 0 (recorded *after* every blocking recv succeeded) — compared
+    /// against [`crate::pipeline::schedule_virtual`] and the event
+    /// simulation in rust/tests/pipeline_equivalence.rs. All replicas
+    /// execute the same per-replica stream.
     pub executed_ops: Vec<Vec<Op>>,
 }
 
@@ -220,6 +309,17 @@ impl TrainReport {
     pub fn mean_loss(&self, range: std::ops::Range<usize>) -> f32 {
         let xs: Vec<f32> = self.steps[range].iter().map(|s| s.loss).collect();
         xs.iter().sum::<f32>() / xs.len().max(1) as f32
+    }
+
+    /// Timer breakdowns as `(replica, stage, timers)` — the single decoder
+    /// of the flat [`TrainReport::stage_timers`] layout, so frontends never
+    /// re-derive (and silently mis-attribute) the index encoding.
+    pub fn worker_timers(&self) -> impl Iterator<Item = (usize, usize, &Timers)> {
+        let stages = self.stage_timers.len() / self.dp.max(1);
+        self.stage_timers
+            .iter()
+            .enumerate()
+            .map(move |(i, t)| (i / stages, i % stages, t))
     }
 }
 
@@ -249,7 +349,27 @@ struct StageIo {
     chunks: Vec<ChunkIo>,
     tgt_rx: Option<Receiver<Tensor>>,
     loss_tx: Sender<f32>,
-    timer_tx: Sender<(usize, Timers, Vec<Op>)>,
+    timer_tx: Sender<(usize, usize, Timers, Vec<Op>)>,
+}
+
+/// Everything a stage worker needs to know about its place in the
+/// (replica, stage) grid and the collectives it shares with its dp peers.
+struct WorkerCtx {
+    stage: usize,
+    /// This worker's dp rank (replica index).
+    replica: usize,
+    /// Data-parallel group size.
+    dp: usize,
+    /// Virtual chunks per stage.
+    v: usize,
+    aux_coef: f32,
+    start_step: usize,
+    /// One gradient-sync group per chunk, shared by the dp replicas of
+    /// this stage (unused at dp = 1).
+    sync_groups: Vec<Arc<AllReduceGroup>>,
+    /// Per-stage scalar group for the clip-norm partial exchange
+    /// (None at dp = 1).
+    norm_group: Option<Arc<AllReduceGroup>>,
 }
 
 /// A wrap-edge payload whose d2h readback has been issued (performed
@@ -328,124 +448,204 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     let vocab = manifest.model.vocab;
     let aux_coef = manifest.model.aux_coef as f32;
     let m = cfg.num_micro;
-    if v > 1 && m % p != 0 {
-        bail!("interleaved schedules need --micro ({m}) divisible by stages ({p})");
+    let dp = cfg.dp;
+    if dp == 0 {
+        bail!("--dp must be at least 1");
+    }
+    if m % dp != 0 || m / dp == 0 {
+        bail!("--micro ({m}) must be a positive multiple of --dp ({dp})");
+    }
+    let m_local = m / dp; // microbatches per replica per step
+    if v > 1 && m_local % p != 0 {
+        bail!(
+            "interleaved schedules need per-replica microbatches \
+             (--micro / --dp = {m_local}) divisible by stages ({p})"
+        );
+    }
+    if cfg.emulate_dp > 1 {
+        if dp != 1 {
+            bail!("emulate_dp is a dp = 1 reference mode (got --dp {dp})");
+        }
+        if m % cfg.emulate_dp != 0 {
+            bail!(
+                "emulate_dp ({}) must divide --micro ({m})",
+                cfg.emulate_dp
+            );
+        }
     }
     // resumption: the checkpointed step count positions the data stream and
-    // the LR warmup exactly where an uninterrupted run would be
+    // the LR warmup exactly where an uninterrupted run would be; the
+    // recorded dp must match (optimizer shards + data split depend on it)
     let start_step = match &cfg.resume_dir {
-        Some(dir) => checkpoint::load_train_state(dir)
-            .context("resume checkpoint is missing train_state.json")?,
+        Some(dir) => {
+            let (steps, ckpt_dp) = checkpoint::load_train_state(dir)
+                .context("resume checkpoint is missing train_state.json")?;
+            if ckpt_dp != dp {
+                bail!(
+                    "checkpoint was taken at dp={ckpt_dp}, cannot resume at \
+                     dp={dp} (optimizer shards and data split differ)"
+                );
+            }
+            // pre-validate every (stage, rank) file ON THE DRIVER: a
+            // missing shard discovered by one worker thread after spawn
+            // would strand its dp peers inside the shared collectives
+            // (they poison + panic rather than deadlock, but failing here
+            // is a clean error instead)
+            for stage in 0..p {
+                let bin = dir.join(format!("stage{stage}.bin"));
+                if !bin.exists() {
+                    bail!("resume checkpoint missing {}", bin.display());
+                }
+                for rank in 0..dp {
+                    let f = dir.join(checkpoint::optimizer_shard_file(stage, rank));
+                    if !f.exists() {
+                        bail!(
+                            "resume checkpoint missing {} (dp={dp} needs every \
+                             rank's optimizer shard)",
+                            f.display()
+                        );
+                    }
+                }
+            }
+            steps
+        }
         None => 0,
     };
 
-    // (stage, chunk)-boundary channels
-    let mut fwd_txs: Vec<Vec<Sender<ActMsg>>> = Vec::new();
-    let mut fwd_rxs: Vec<Vec<Option<Receiver<ActMsg>>>> = Vec::new();
-    let mut bwd_txs: Vec<Vec<Sender<GradMsg>>> = Vec::new();
-    let mut bwd_rxs: Vec<Vec<Option<Receiver<GradMsg>>>> = Vec::new();
-    for _ in 0..p {
-        let (mut ft, mut fr, mut bt, mut br) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        for _ in 0..v {
-            let (ftx, frx) = channel::<ActMsg>();
-            ft.push(ftx);
-            fr.push(Some(frx));
-            let (btx, brx) = channel::<GradMsg>();
-            bt.push(btx);
-            br.push(Some(brx));
-        }
-        fwd_txs.push(ft);
-        fwd_rxs.push(fr);
-        bwd_txs.push(bt);
-        bwd_rxs.push(br);
-    }
-    // slab back-channels: one per f32 payload edge. A forward edge into
-    // (s, c) puts the pool at its producer and the return at (s, c); a
-    // backward edge into (s, c) puts the pool at its producer — the chunk
-    // downstream of (s, c) in the ring — and the return at (s, c). The
-    // driver's token feed into (0, 0) is i32 and unpooled.
-    let mut act_pools: Vec<Vec<Option<SlabPool>>> =
-        (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
-    let mut act_returns: Vec<Vec<Option<SlabReturn>>> =
-        (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
-    let mut grad_pools: Vec<Vec<Option<SlabPool>>> =
-        (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
-    let mut grad_returns: Vec<Vec<Option<SlabReturn>>> =
-        (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
-    // wrap edges are double-buffered from the start: two pre-seeded slabs
-    // sized for the boundary activation, so one can sit staged on the
-    // producer while the other drains through the channel, with zero
-    // warmup misses (overlap off keeps the lazy warmup behavior)
-    let act_elems = b * s * manifest.model.hidden;
-    for si in 0..p {
-        for ci in 0..v {
-            if let Some((ps, pc)) = fwd_producer(si, ci, p) {
-                let (mut pool, ret) = slab_pair();
-                if cfg.overlap_wrap_edges && is_wrap_fwd(ps, pc, p, v) {
-                    pool.prefill(2, act_elems);
-                }
-                act_pools[ps][pc] = Some(pool);
-                act_returns[si][ci] = Some(ret);
-            }
-            if let Some((ds, dc)) = fwd_consumer(si, ci, p, v) {
-                // (ds, dc) sends dy back to (si, ci)
-                let (mut pool, ret) = slab_pair();
-                if cfg.overlap_wrap_edges && is_wrap_bwd(ds, dc) {
-                    pool.prefill(2, act_elems);
-                }
-                grad_pools[ds][dc] = Some(pool);
-                grad_returns[si][ci] = Some(ret);
-            }
-        }
-    }
-    // driver -> (0, 0) tokens; driver -> last stage targets
-    let (tgt_tx, tgt_rx) = channel::<Tensor>();
-    let mut tgt_rx = Some(tgt_rx);
-    // loss chunk -> driver losses
-    let (loss_tx, loss_rx) = channel::<f32>();
-    // stage timers + executed-op traces back to driver at the end
-    let (timer_tx, timer_rx) = channel::<(usize, Timers, Vec<Op>)>();
+    // collectives shared across the dp replicas: one gradient group per
+    // (stage, chunk) and one scalar norm group per stage
+    let sync_groups: Vec<Vec<Arc<AllReduceGroup>>> = (0..p)
+        .map(|_| (0..v).map(|_| AllReduceGroup::with_algo(dp, Algo::Chunked)).collect())
+        .collect();
+    let norm_groups: Vec<Arc<AllReduceGroup>> =
+        (0..p).map(|_| AllReduceGroup::with_algo(dp, Algo::Chunked)).collect();
 
-    let barrier = Barrier::new(p + 1); // stages + driver
-    let sched = Arc::new(schedule_virtual(cfg.schedule, p, m, v));
+    let barrier = Barrier::new(p * dp + 1); // all stage workers + driver
+    let sched = Arc::new(schedule_virtual(cfg.schedule, p, m_local, v));
+
+    // stage timers + executed-op traces back to the driver at the end
+    let (timer_tx, timer_rx) = channel::<(usize, usize, Timers, Vec<Op>)>();
 
     let mut handles = Vec::new();
-    for stage in 0..p {
-        let chunks = (0..v)
-            .map(|c| ChunkIo {
-                rx_fwd: fwd_rxs[stage][c].take().unwrap(),
-                tx_fwd: fwd_consumer(stage, c, p, v)
-                    .map(|(ds, dc)| fwd_txs[ds][dc].clone()),
-                rx_bwd: if fwd_consumer(stage, c, p, v).is_some() {
-                    bwd_rxs[stage][c].take()
-                } else {
-                    None
-                },
-                tx_bwd: fwd_producer(stage, c, p).map(|(ps, pc)| bwd_txs[ps][pc].clone()),
-                act_pool: act_pools[stage][c].take(),
-                act_return: act_returns[stage][c].take(),
-                grad_pool: grad_pools[stage][c].take(),
-                grad_return: grad_returns[stage][c].take(),
-            })
-            .collect();
-        let io = StageIo {
-            chunks,
-            tgt_rx: if stage == p - 1 { tgt_rx.take() } else { None },
-            loss_tx: loss_tx.clone(),
-            timer_tx: timer_tx.clone(),
-        };
-        let barrier = barrier.clone();
-        let sched = sched.clone();
-        let cfg = cfg.clone();
-        let handle = thread::Builder::new()
-            .name(format!("stage{stage}"))
-            .spawn(move || {
-                stage_worker(stage, v, &cfg, &sched[stage], io, barrier, aux_coef, start_step)
-            })
-            .context("spawning stage thread")?;
-        handles.push(handle);
+    // driver-side ends, one per replica
+    let mut driver_txs: Vec<Sender<ActMsg>> = Vec::with_capacity(dp);
+    let mut tgt_txs: Vec<Sender<Tensor>> = Vec::with_capacity(dp);
+    let mut loss_rxs: Vec<Receiver<f32>> = Vec::with_capacity(dp);
+
+    let act_elems = b * s * manifest.model.hidden;
+    for replica in 0..dp {
+        // ---- (stage, chunk)-boundary channels for this replica ----
+        let mut fwd_txs: Vec<Vec<Sender<ActMsg>>> = Vec::new();
+        let mut fwd_rxs: Vec<Vec<Option<Receiver<ActMsg>>>> = Vec::new();
+        let mut bwd_txs: Vec<Vec<Sender<GradMsg>>> = Vec::new();
+        let mut bwd_rxs: Vec<Vec<Option<Receiver<GradMsg>>>> = Vec::new();
+        for _ in 0..p {
+            let (mut ft, mut fr, mut bt, mut br) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            for _ in 0..v {
+                let (ftx, frx) = channel::<ActMsg>();
+                ft.push(ftx);
+                fr.push(Some(frx));
+                let (btx, brx) = channel::<GradMsg>();
+                bt.push(btx);
+                br.push(Some(brx));
+            }
+            fwd_txs.push(ft);
+            fwd_rxs.push(fr);
+            bwd_txs.push(bt);
+            bwd_rxs.push(br);
+        }
+        // slab back-channels: one per f32 payload edge. A forward edge into
+        // (s, c) puts the pool at its producer and the return at (s, c); a
+        // backward edge into (s, c) puts the pool at its producer — the
+        // chunk downstream of (s, c) in the ring — and the return at
+        // (s, c). The driver's token feed into (0, 0) is i32 and unpooled.
+        let mut act_pools: Vec<Vec<Option<SlabPool>>> =
+            (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+        let mut act_returns: Vec<Vec<Option<SlabReturn>>> =
+            (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+        let mut grad_pools: Vec<Vec<Option<SlabPool>>> =
+            (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+        let mut grad_returns: Vec<Vec<Option<SlabReturn>>> =
+            (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+        // wrap edges are double-buffered from the start: two pre-seeded
+        // slabs sized for the boundary activation, so one can sit staged on
+        // the producer while the other drains through the channel, with
+        // zero warmup misses (overlap off keeps the lazy warmup behavior)
+        for si in 0..p {
+            for ci in 0..v {
+                if let Some((ps, pc)) = fwd_producer(si, ci, p) {
+                    let (mut pool, ret) = slab_pair();
+                    if cfg.overlap_wrap_edges && is_wrap_fwd(ps, pc, p, v) {
+                        pool.prefill(2, act_elems);
+                    }
+                    act_pools[ps][pc] = Some(pool);
+                    act_returns[si][ci] = Some(ret);
+                }
+                if let Some((ds, dc)) = fwd_consumer(si, ci, p, v) {
+                    // (ds, dc) sends dy back to (si, ci)
+                    let (mut pool, ret) = slab_pair();
+                    if cfg.overlap_wrap_edges && is_wrap_bwd(ds, dc) {
+                        pool.prefill(2, act_elems);
+                    }
+                    grad_pools[ds][dc] = Some(pool);
+                    grad_returns[si][ci] = Some(ret);
+                }
+            }
+        }
+        // driver -> (0, 0) tokens; driver -> last stage targets
+        let (tgt_tx, tgt_rx) = channel::<Tensor>();
+        let mut tgt_rx = Some(tgt_rx);
+        // loss chunk -> driver losses
+        let (loss_tx, loss_rx) = channel::<f32>();
+
+        for stage in 0..p {
+            let chunks = (0..v)
+                .map(|c| ChunkIo {
+                    rx_fwd: fwd_rxs[stage][c].take().unwrap(),
+                    tx_fwd: fwd_consumer(stage, c, p, v)
+                        .map(|(ds, dc)| fwd_txs[ds][dc].clone()),
+                    rx_bwd: if fwd_consumer(stage, c, p, v).is_some() {
+                        bwd_rxs[stage][c].take()
+                    } else {
+                        None
+                    },
+                    tx_bwd: fwd_producer(stage, c, p).map(|(ps, pc)| bwd_txs[ps][pc].clone()),
+                    act_pool: act_pools[stage][c].take(),
+                    act_return: act_returns[stage][c].take(),
+                    grad_pool: grad_pools[stage][c].take(),
+                    grad_return: grad_returns[stage][c].take(),
+                })
+                .collect();
+            let io = StageIo {
+                chunks,
+                tgt_rx: if stage == p - 1 { tgt_rx.take() } else { None },
+                loss_tx: loss_tx.clone(),
+                timer_tx: timer_tx.clone(),
+            };
+            let ctx = WorkerCtx {
+                stage,
+                replica,
+                dp,
+                v,
+                aux_coef,
+                start_step,
+                sync_groups: sync_groups[stage].clone(),
+                norm_group: if dp > 1 { Some(norm_groups[stage].clone()) } else { None },
+            };
+            let barrier = barrier.clone();
+            let sched = sched.clone();
+            let cfg = cfg.clone();
+            let handle = thread::Builder::new()
+                .name(format!("dp{replica}stage{stage}"))
+                .spawn(move || stage_worker(ctx, &cfg, &sched[stage], io, barrier))
+                .context("spawning stage thread")?;
+            handles.push(handle);
+        }
+        driver_txs.push(fwd_txs[0][0].clone());
+        tgt_txs.push(tgt_tx);
+        loss_rxs.push(loss_rx);
     }
-    drop(loss_tx);
     drop(timer_tx);
 
     // ---- driver loop: feed data, collect losses ----
@@ -463,17 +663,25 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     for local_step in 0..cfg.steps {
         let step = start_step + local_step; // global step index
         let t0 = std::time::Instant::now();
-        for micro in 0..m {
+        // route the global batch: replica r owns the contiguous microbatch
+        // block [r·m/dp, (r+1)·m/dp) of the shared seeded stream — the
+        // per-replica data shard the bitwise dp-equivalence rests on
+        for g_micro in 0..m {
             let (tokens, targets) = corpus.batch(b, s);
-            fwd_txs[0][0]
+            let r = g_micro / m_local;
+            let micro = g_micro % m_local;
+            driver_txs[r]
                 .send(ActMsg { micro, x: Tensor::i32(tokens, vec![b, s]), aux: 0.0 })
                 .ok();
-            tgt_tx.send(Tensor::i32(targets, vec![b, s])).ok();
+            tgt_txs[r].send(Tensor::i32(targets, vec![b, s])).ok();
         }
-        // collect per-micro losses for this step
+        // collect per-micro losses in (replica, micro) order — the exact
+        // summation order of the dp = 1 reference over the global batch
         let mut loss_sum = 0.0f32;
-        for _ in 0..m {
-            loss_sum += loss_rx.recv().context("loss channel closed")?;
+        for rx in &loss_rxs {
+            for _ in 0..m_local {
+                loss_sum += rx.recv().context("loss channel closed")?;
+            }
         }
         barrier.wait(); // optimizer updates done on all stages
         let loss = loss_sum / m as f32;
@@ -491,28 +699,32 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         }
         steps.push(log);
     }
-    drop(fwd_txs);
-    drop(tgt_tx);
+    drop(driver_txs);
+    drop(tgt_txs);
 
-    let mut stage_timers = vec![Timers::new(); p];
+    let mut stage_timers = vec![Timers::new(); p * dp];
     let mut executed_ops = vec![Vec::new(); p];
-    for (stage, t, trace) in timer_rx {
-        stage_timers[stage] = t;
-        executed_ops[stage] = trace;
+    for (replica, stage, t, trace) in timer_rx {
+        stage_timers[replica * p + stage] = t;
+        if replica == 0 {
+            executed_ops[stage] = trace;
+        }
     }
     for h in handles {
         h.join().expect("stage thread panicked")?;
     }
     if let Some(dir) = &cfg.checkpoint_dir {
         // stages wrote params + optimizer state; the driver owns the step
-        // counter the resume path fast-forwards the corpus by
-        checkpoint::save_train_state(dir, start_step + cfg.steps)?;
+        // counter the resume path fast-forwards the corpus by, and the dp
+        // the shards were taken at
+        checkpoint::save_train_state(dir, start_step + cfg.steps, dp)?;
     }
 
     Ok(TrainReport {
         steps,
         tokens_per_sec: total_tokens as f64 / run_start.elapsed().as_secs_f64(),
         stage_timers,
+        dp,
         final_loss,
         executed_ops,
     })
@@ -527,17 +739,68 @@ struct Stashed {
     targets: Option<xla::PjRtBuffer>,
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Drop-guard that poisons a failed worker's shared synchronization
+/// primitives: armed for the whole lifetime of [`stage_worker_inner`], it
+/// fires on **any** exit that isn't an explicit disarm — early `?` returns
+/// and panics alike (a panic in the hot loop would otherwise strand dp
+/// peers inside a collective, and the driver inside the step barrier,
+/// forever: unlike mpsc channels, those have no disconnection semantics).
+struct PoisonOnFailure {
+    groups: Vec<Arc<AllReduceGroup>>,
+    norm_group: Option<Arc<AllReduceGroup>>,
+    barrier: Arc<Barrier>,
+    armed: bool,
+}
+
+impl Drop for PoisonOnFailure {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        for g in &self.groups {
+            g.poison();
+        }
+        if let Some(g) = &self.norm_group {
+            g.poison();
+        }
+        self.barrier.poison();
+    }
+}
+
+/// Wrapper around [`stage_worker_inner`] that keeps a failure on one
+/// (replica, stage) from silently deadlocking the rest of the dp group or
+/// the driver: any error or panic poisons this stage's collectives and the
+/// step barrier (via [`PoisonOnFailure`]), making every stranded peer
+/// panic with a clear message instead of blocking forever.
 fn stage_worker(
-    stage: usize,
-    v: usize,
+    ctx: WorkerCtx,
+    cfg: &TrainerCfg,
+    ops: &[Op],
+    io: StageIo,
+    barrier: Arc<Barrier>,
+) -> Result<()> {
+    let mut guard = PoisonOnFailure {
+        groups: ctx.sync_groups.clone(),
+        norm_group: ctx.norm_group.clone(),
+        barrier: barrier.clone(),
+        armed: true,
+    };
+    let result = stage_worker_inner(ctx, cfg, ops, io, barrier);
+    if result.is_ok() {
+        guard.armed = false;
+    }
+    result
+}
+
+fn stage_worker_inner(
+    ctx: WorkerCtx,
     cfg: &TrainerCfg,
     ops: &[Op],
     mut io: StageIo,
     barrier: Arc<Barrier>,
-    aux_coef: f32,
-    start_step: usize,
 ) -> Result<()> {
+    let (stage, replica, dp, v) = (ctx.stage, ctx.replica, ctx.dp, ctx.v);
+    let (aux_coef, start_step) = (ctx.aux_coef, ctx.start_step);
     let mut rt = Runtime::open(&cfg.artifacts)?;
     let p = rt.manifest.model.stages;
     let overlap = cfg.overlap_wrap_edges;
@@ -560,17 +823,18 @@ fn stage_worker(
         Some(dir) => checkpoint::load_stage(dir, stage, &rt.manifest)?,
         None => rt.load_stage_params(stage)?,
     };
-    // per-(stage, chunk) sharded optimizer state: rank 0 of a one-replica
-    // group today, so each shard spans its whole chunk and the update is
+    // per-(stage, chunk) sharded optimizer state: this worker is dp rank
+    // `replica`, so each chunk's shard is segment(replica, numel, dp) —
+    // the whole chunk at dp = 1, which keeps the single-replica update
     // bitwise the historic stage-level fused sweep (see module docs)
     let mut opts: Vec<ShardedAdam> = (0..v)
-        .map(|c| ShardedAdam::new(cfg.lr, &params[ranges[c].clone()], 0, 1))
+        .map(|c| ShardedAdam::new(cfg.lr, &params[ranges[c].clone()], replica, dp))
         .collect();
     if let Some(dir) = &cfg.resume_dir {
-        checkpoint::load_optimizer(dir, stage, &mut opts)?;
+        checkpoint::load_optimizer_rank(dir, stage, replica, &mut opts)?;
     }
     let mut timers = Timers::new();
-    let m = cfg.num_micro;
+    let m_local = cfg.num_micro / dp; // microbatches this replica runs
     // §Perf L3: upload parameters to the PJRT device once per optimizer
     // step; microbatch executions reuse the staged buffers, each chunk
     // addressing its sub-slice.
@@ -591,13 +855,64 @@ fn stage_worker(
     // (chunk, micro); targets are stashed at Fwd time (GPipe drains
     // backwards, so FIFO consumption at Bwd would mispair micros)
     let mut stash: Vec<Vec<Option<Stashed>>> =
-        (0..v).map(|_| (0..m).map(|_| None).collect()).collect();
-    // gradient accumulator + readback scratch, allocated once and reused
-    // across every microbatch of every step; chunks own disjoint sub-slices
-    let mut grad_acc: Vec<Tensor> =
-        params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect();
+        (0..v).map(|_| (0..m_local).map(|_| None).collect()).collect();
+    // gradient accumulation: one accumulator block normally; emulate_dp
+    // blocks in the dp = 1 reference mode (each block sums its contiguous
+    // microbatch slice, blocks are summed in rank order at step end)
+    let nblocks = cfg.emulate_dp.max(1);
+    let micros_per_block = m_local / nblocks;
+    let mut grad_acc: Vec<Vec<Tensor>> = (0..nblocks)
+        .map(|_| params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect())
+        .collect();
+    // rank-order block sum of the reference mode (unused otherwise)
+    let mut grad_sum: Vec<Tensor> = if nblocks > 1 {
+        params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect()
+    } else {
+        Vec::new()
+    };
     let mut grad_scratch: Vec<f32> = Vec::new();
-    let mut accumulated = vec![0usize; v];
+    // per-(chunk, block) microbatch counts (block 0 is the only block
+    // outside the reference mode); a chunk's gradient is complete when its
+    // counts sum to m_local
+    let mut acc_count = vec![vec![0usize; nblocks]; v];
+    // ---- dp gradient sync state ----
+    // the chunk-backward-complete boundary the bucket hook keys off: op
+    // index after which chunk c's gradient is final for the step
+    let ready_idx = chunk_grad_ready(ops, v);
+    // per-chunk buckets (flat contribution + scattered segment), reused
+    // across steps; with overlap they round-trip through the sync workers
+    let mut buckets: Vec<Option<Bucket>> =
+        (0..v).map(|_| Some(Bucket::default())).collect();
+    // per-chunk sync workers: run reduce_scatter_into concurrently with
+    // this stage's remaining backward ops (overlap mode, dp > 1 only)
+    let mut bucket_txs: Vec<Sender<Bucket>> = Vec::new();
+    let mut bucket_rxs: Vec<Receiver<Bucket>> = Vec::new();
+    let mut sync_workers = Vec::new();
+    if dp > 1 && cfg.overlap_dp_sync {
+        for c in 0..v {
+            let (btx, brx) = channel::<Bucket>();
+            let (dtx, drx) = channel::<Bucket>();
+            let group = ctx.sync_groups[c].clone();
+            let worker = thread::Builder::new()
+                .name(format!("dp{replica}stage{stage}sync{c}"))
+                .spawn(move || {
+                    for mut bucket in brx {
+                        group.reduce_scatter_into(replica, &bucket.flat, &mut bucket.seg);
+                        dtx.send(bucket).ok();
+                    }
+                })
+                .context("spawning dp sync worker")?;
+            bucket_txs.push(btx);
+            bucket_rxs.push(drx);
+            sync_workers.push(worker);
+        }
+    }
+    // clip-norm partial exchange: rank r contributes its per-chunk segment
+    // sums-of-squares at slots [c·dp + r]; the rank-order scalar sum fills
+    // the (chunk, rank) matrix every rank combines identically
+    let mut norm_scalars = vec![0.0f32; v * dp];
+    // all-gather deposit buffer for the updated parameter shard
+    let mut gather_buf: Vec<f32> = Vec::new();
     // step-0 op trace for the live-vs-sim schedule check
     let mut trace: Vec<Op> = Vec::new();
     // staged wrap-edge payloads (d2h issued, send deferred — module docs);
@@ -605,7 +920,7 @@ fn stage_worker(
     let mut pending: VecDeque<StagedMsg> = VecDeque::new();
 
     for _step in 0..cfg.steps {
-        for op in ops {
+        for (op_idx, op) in ops.iter().enumerate() {
             // release any staged wrap-edge payload before this op can
             // block on a recv (deadlock-freedom of the deferral)
             flush_staged(&mut pending, &io.chunks);
@@ -719,12 +1034,14 @@ fn stage_worker(
                     let grads = &out[grads_at..];
                     debug_assert_eq!(grads.len(), k);
                     // accumulate on host (the optimizer lives in L3); the
-                    // chunk's first microbatch overwrites its sub-slice,
-                    // later ones add through the reused scratch buffer
+                    // chunk's first microbatch of a block overwrites its
+                    // sub-slice, later ones add through the reused scratch
+                    let block = micro / micros_per_block;
                     timers.time("grad_acc", || -> Result<()> {
-                        for (acc, g) in grad_acc[ranges[chunk].clone()].iter_mut().zip(grads)
+                        for (acc, g) in
+                            grad_acc[block][ranges[chunk].clone()].iter_mut().zip(grads)
                         {
-                            if accumulated[chunk] == 0 {
+                            if acc_count[chunk][block] == 0 {
                                 g.read_into(acc)?;
                             } else {
                                 g.add_into(acc, &mut grad_scratch)?;
@@ -732,7 +1049,7 @@ fn stage_worker(
                         }
                         Ok(())
                     })?;
-                    accumulated[chunk] += 1;
+                    acc_count[chunk][block] += 1;
                     if let Some(i) = dx_at {
                         if cio.tx_bwd.is_some() {
                             let pool = cio.grad_pool.as_mut().unwrap();
@@ -750,18 +1067,38 @@ fn stage_worker(
                             }
                         }
                     }
+                    // ---- bucket hook: chunk-backward-complete boundary ----
+                    // this chunk's gradient is final for the step; with
+                    // overlap on, hand the flattened bucket to the sync
+                    // worker so the reduce-scatter runs under the
+                    // remaining backward ops
+                    if dp > 1 && ready_idx[chunk] == Some(op_idx) {
+                        debug_assert_eq!(acc_count[chunk].iter().sum::<usize>(), m_local);
+                        if cfg.overlap_dp_sync {
+                            let mut bucket =
+                                buckets[chunk].take().context("bucket in flight")?;
+                            timers.time("dp_flatten", || {
+                                adam::flatten_grads(
+                                    &grad_acc[0][ranges[chunk].clone()],
+                                    &mut bucket.flat,
+                                )
+                            })?;
+                            timers.add_count("dp_bucket_staged", 1);
+                            bucket_txs[chunk].send(bucket).ok();
+                        }
+                    }
                 }
             }
             // record the op only once it fully executed (recvs included):
             // this is the live order the schedule/sim tests compare against
-            if _step == 0 {
+            if _step == 0 && replica == 0 {
                 trace.push(*op);
             }
         }
         // every staged wrap payload must be on the wire before the step
         // boundary (downstream stages need it to finish their own walk)
         flush_staged(&mut pending, &io.chunks);
-        // ---- optimizer update (mean over microbatches) ----
+        // ---- optimizer update (mean over the GLOBAL microbatch count) ----
         // linear LR warmup on the GLOBAL step, so resumed runs continue
         // the ramp exactly (paper §4.2: gating needs steps to stabilize)
         let gstep = start_step + _step;
@@ -770,41 +1107,148 @@ fn stage_worker(
         } else {
             cfg.lr
         };
-        timers.time("optimizer", || -> Result<()> {
-            debug_assert!(
-                accumulated.iter().all(|&a| a == m),
-                "missing microbatch gradients: {accumulated:?}"
-            );
-            // fold the microbatch mean and the clip ratio into one
-            // multiplier: ||s·g|| == s·||g||, so no scaled copy is ever
-            // materialized, and the fused sweep reads each gradient once
-            let mean = 1.0 / m as f32;
+        debug_assert!(
+            acc_count.iter().all(|row| row.iter().sum::<usize>() == m_local),
+            "missing microbatch gradients: {acc_count:?}"
+        );
+        // fold the microbatch mean and the clip ratio into one multiplier:
+        // ||s·g|| == s·||g||, so no scaled copy is ever materialized, and
+        // the fused sweep reads each gradient element once
+        let mean = 1.0 / cfg.num_micro as f32;
+        if dp > 1 {
+            // ---- live ZeRO-1 step over the replica group ----
+            // 1. collect every chunk's reduce-scattered gradient segment:
+            //    already in flight under the backward with overlap on,
+            //    performed serially here with it off (the A/B reference)
+            timers.time("dp_sync", || -> Result<()> {
+                for c in 0..v {
+                    let bucket = if cfg.overlap_dp_sync {
+                        bucket_rxs[c].recv().context("dp sync worker died")?
+                    } else {
+                        let mut b = buckets[c].take().context("bucket missing")?;
+                        adam::flatten_grads(&grad_acc[0][ranges[c].clone()], &mut b.flat)?;
+                        ctx.sync_groups[c].reduce_scatter_into(replica, &b.flat, &mut b.seg);
+                        b
+                    };
+                    buckets[c] = Some(bucket);
+                }
+                Ok(())
+            })?;
+            // 2. clip factor from the canonical (chunk, rank) norm
+            //    decomposition — identical bits on every rank
             let mut gscale = mean;
             if let Some(max_norm) = cfg.grad_clip {
-                let norm = global_grad_norm(&grad_acc)? * mean;
-                if norm > max_norm {
-                    gscale *= max_norm / norm;
-                }
+                timers.time("dp_norm", || -> Result<()> {
+                    norm_scalars.iter_mut().for_each(|x| *x = 0.0);
+                    for (c, bucket) in buckets.iter().enumerate() {
+                        let seg = &bucket.as_ref().unwrap().seg;
+                        norm_scalars[c * dp + replica] =
+                            seg.iter().fold(0.0f32, |a, x| a + x * x);
+                    }
+                    let mat = ctx
+                        .norm_group
+                        .as_ref()
+                        .expect("norm group exists at dp > 1")
+                        .all_reduce_as(replica, &norm_scalars);
+                    let mut sumsq = 0.0f32;
+                    for c in 0..v {
+                        for r in 0..dp {
+                            sumsq += mat[c * dp + r];
+                        }
+                    }
+                    let norm = sumsq.sqrt() * mean;
+                    if norm > max_norm {
+                        gscale *= max_norm / norm;
+                    }
+                    Ok(())
+                })?;
             }
-            // per-(stage, chunk) sharded sweep: each chunk's optimizer
-            // updates its contiguous parameter shard — bitwise the
-            // historic stage-level fused_update at one replica
+            // 3. Adam on the owned shard, then all-gather fresh parameters
             for (c, opt) in opts.iter_mut().enumerate() {
                 opt.lr = lr_now;
                 let r = ranges[c].clone();
-                opt.update_shard(&mut params[r.clone()], &grad_acc[r], gscale)?;
+                let seg = &buckets[c].as_ref().unwrap().seg;
+                timers.time("optimizer", || opt.update_flat(&mut params[r.clone()], seg, gscale))?;
+                timers.time("dp_gather", || {
+                    adam::gather_updated_params(
+                        opt,
+                        &ctx.sync_groups[c],
+                        &mut params[r.clone()],
+                        &mut gather_buf,
+                    )
+                })?;
             }
-            Ok(())
-        })?;
-        accumulated.iter_mut().for_each(|a| *a = 0);
+        } else {
+            timers.time("optimizer", || -> Result<()> {
+                let grads = if nblocks > 1 {
+                    // reference mode: sum the block gradients in rank
+                    // order — elementwise from 0.0 in block order, exactly
+                    // the reduce-scatter's slot-order summation
+                    for (ti, t) in grad_sum.iter_mut().enumerate() {
+                        let dst = t.as_f32_mut()?;
+                        dst.iter_mut().for_each(|x| *x = 0.0);
+                        for block in &grad_acc {
+                            for (d, s) in dst.iter_mut().zip(block[ti].as_f32()?) {
+                                *d += s;
+                            }
+                        }
+                    }
+                    &grad_sum
+                } else {
+                    &grad_acc[0]
+                };
+                let mut gscale = mean;
+                if let Some(max_norm) = cfg.grad_clip {
+                    let norm = if nblocks > 1 {
+                        // the canonical (chunk, rank) decomposition a live
+                        // emulate_dp-way group computes (module docs)
+                        let mut sumsq = 0.0f32;
+                        for c in 0..v {
+                            for part in
+                                segmented_sumsq(&grads[ranges[c].clone()], nblocks)?
+                            {
+                                sumsq += part;
+                            }
+                        }
+                        sumsq.sqrt() * mean
+                    } else {
+                        global_grad_norm(grads)? * mean
+                    };
+                    if norm > max_norm {
+                        gscale *= max_norm / norm;
+                    }
+                }
+                // per-(stage, chunk) sharded sweep: each chunk's optimizer
+                // updates its contiguous parameter shard — bitwise the
+                // historic stage-level fused_update at one replica
+                for (c, opt) in opts.iter_mut().enumerate() {
+                    opt.lr = lr_now;
+                    let r = ranges[c].clone();
+                    opt.update_shard(&mut params[r.clone()], &grads[r], gscale)?;
+                }
+                Ok(())
+            })?;
+        }
+        acc_count.iter_mut().for_each(|row| row.iter_mut().for_each(|a| *a = 0));
         // re-stage the updated parameters in place for the next step
         timers.time("stage_params", || rt.restage_buffers(&params, &mut staged))?;
         barrier.wait();
     }
 
+    // retire the sync workers (no further buckets will arrive)
+    drop(bucket_txs);
+    for w in sync_workers {
+        w.join().expect("dp sync worker panicked");
+    }
+
     if let Some(dir) = &cfg.checkpoint_dir {
-        checkpoint::save_stage(dir, stage, &rt.manifest, &params)?;
-        checkpoint::save_optimizer(dir, stage, &opts)?;
+        if replica == 0 {
+            // parameters are bitwise-identical across replicas after the
+            // final all-gather; one copy suffices
+            checkpoint::save_stage(dir, stage, &rt.manifest, &params)?;
+        }
+        // every rank owns (and must checkpoint) its own moment shards
+        checkpoint::save_optimizer_rank(dir, stage, replica, &opts)?;
     }
 
     // slab economy: after warmup every p2p payload should come from the
@@ -820,6 +1264,6 @@ fn stage_worker(
         }
     }
 
-    io.timer_tx.send((stage, timers, trace)).ok();
+    io.timer_tx.send((replica, stage, timers, trace)).ok();
     Ok(())
 }

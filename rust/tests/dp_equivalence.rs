@@ -1,0 +1,201 @@
+//! Integration: live multi-replica data parallelism (`--dp`) must be
+//! **bitwise** equivalent to the dp = 1 summed-gradient reference.
+//!
+//! The reference is the trainer's `emulate_dp` mode: one pipeline
+//! processing the same global batch, accumulating the per-replica
+//! microbatch blocks separately, summing them in rank order at step end
+//! and deriving the clip factor from the same (chunk, rank)
+//! `segmented_sumsq` decomposition a live dp group exchanges — i.e.
+//! exactly the arithmetic the ZeRO-1 reduce-scatter path performs, minus
+//! the threads. Losses and final parameters must agree bit-for-bit, with
+//! the backward-overlapped sync and with `--no-dp-overlap` (overlap moves
+//! timing, never math).
+
+mod common;
+
+use std::path::PathBuf;
+
+use ppmoe::trainer::{checkpoint, train, TrainerCfg};
+
+fn cfg_for(artifacts: PathBuf, steps: usize, micro: usize) -> TrainerCfg {
+    TrainerCfg {
+        artifacts,
+        steps,
+        num_micro: micro,
+        lr: 3e-3,
+        seed: 13,
+        log_every: 0,
+        warmup_steps: 3, // exercise the global-step LR ramp under dp
+        ..Default::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ppmoe_dp_{tag}_{}", std::process::id()))
+}
+
+/// Run the three variants (overlapped dp, serialized dp, emulated dp = 1
+/// reference) and assert bitwise-equal losses and final checkpoint params.
+fn assert_dp_equivalence(arts: PathBuf, dp: usize, micro: usize, steps: usize) {
+    let manifest = ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+    let v = manifest.model.virtual_stages;
+
+    let ck_ref = tmp(&format!("ref{dp}"));
+    let ck_ovl = tmp(&format!("ovl{dp}"));
+    let ck_ser = tmp(&format!("ser{dp}"));
+
+    // dp = 1 with summed gradients: the serialized reference
+    let mut cfg = cfg_for(arts.clone(), steps, micro);
+    cfg.emulate_dp = dp;
+    cfg.checkpoint_dir = Some(ck_ref.clone());
+    let reference = train(&cfg).unwrap();
+
+    // live dp, reduce-scatter overlapped with the backward
+    let mut cfg = cfg_for(arts.clone(), steps, micro);
+    cfg.dp = dp;
+    cfg.checkpoint_dir = Some(ck_ovl.clone());
+    let overlapped = train(&cfg).unwrap();
+
+    // live dp, sync serialized to the step end (--no-dp-overlap)
+    let mut cfg = cfg_for(arts, steps, micro);
+    cfg.dp = dp;
+    cfg.overlap_dp_sync = false;
+    cfg.checkpoint_dir = Some(ck_ser.clone());
+    let serialized = train(&cfg).unwrap();
+
+    for ((r, o), s) in reference
+        .steps
+        .iter()
+        .zip(&overlapped.steps)
+        .zip(&serialized.steps)
+    {
+        assert_eq!(r.loss, o.loss, "dp={dp} step {}: overlapped loss diverged", r.step);
+        assert_eq!(r.loss, s.loss, "dp={dp} step {}: serialized loss diverged", r.step);
+    }
+    for stage in 0..p {
+        let want = checkpoint::load_stage(&ck_ref, stage, &manifest).unwrap();
+        let ovl = checkpoint::load_stage(&ck_ovl, stage, &manifest).unwrap();
+        let ser = checkpoint::load_stage(&ck_ser, stage, &manifest).unwrap();
+        assert_eq!(want, ovl, "dp={dp} stage {stage}: overlapped params diverged");
+        assert_eq!(want, ser, "dp={dp} stage {stage}: serialized params diverged");
+    }
+    // the live runs really took the n = dp group path: every replica
+    // checkpointed its own moment shard, and the overlap run staged one
+    // bucket per (replica, stage, chunk, step)
+    for r in 1..dp {
+        for stage in 0..p {
+            assert!(
+                ck_ovl.join(format!("stage{stage}.rank{r}.opt.bin")).exists(),
+                "dp={dp}: missing rank {r} optimizer shard for stage {stage}"
+            );
+        }
+    }
+    let staged: u64 = overlapped
+        .stage_timers
+        .iter()
+        .map(|t| t.count("dp_bucket_staged"))
+        .sum();
+    assert_eq!(
+        staged,
+        (dp * p * v * steps) as u64,
+        "dp={dp}: overlap must stage one bucket per (replica, stage, chunk, step)"
+    );
+    let staged_ser: u64 = serialized
+        .stage_timers
+        .iter()
+        .map(|t| t.count("dp_bucket_staged"))
+        .sum();
+    assert_eq!(staged_ser, 0, "dp={dp}: --no-dp-overlap must not stage buckets");
+
+    for d in [&ck_ref, &ck_ovl, &ck_ser] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn dp2_and_dp4_bitwise_match_dp1_summed_reference() {
+    let Some(arts) = common::artifacts_dir() else { return };
+    // m = 8 splits as 2×4 and 4×2 per-replica microbatch blocks
+    assert_dp_equivalence(arts.clone(), 2, 8, 5);
+    assert_dp_equivalence(arts, 4, 8, 5);
+}
+
+#[test]
+fn dp2_bitwise_on_interleaved_chunked_artifacts() {
+    // the bucketed overlap with v > 1 chunks per stage: several buckets
+    // per stage fire at different points of the backward drain
+    let Some(arts) = common::chunked_artifacts_dir() else { return };
+    let manifest = ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+    // per-replica micros must stay divisible by p for the interleaved
+    // schedule: m = 2 · p · dp
+    assert_dp_equivalence(arts, 2, 4 * p, 4);
+}
+
+#[test]
+fn dp2_checkpoint_resume_is_bitwise() {
+    // interrupt-and-resume at dp = 2: 6 straight steps vs 4 -> checkpoint
+    // (params + BOTH ranks' moment shards + step/dp) -> resume 2. Losses
+    // of the overlapping steps and the final parameters must be bitwise.
+    let Some(arts) = common::artifacts_dir() else { return };
+    let manifest = ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+    let ck_full = tmp("resfull");
+    let ck_mid = tmp("resmid");
+    let ck_res = tmp("resres");
+
+    let mut cfg = cfg_for(arts, 6, 8);
+    cfg.dp = 2;
+    cfg.checkpoint_dir = Some(ck_full.clone());
+    let full = train(&cfg).unwrap();
+
+    cfg.steps = 4;
+    cfg.checkpoint_dir = Some(ck_mid.clone());
+    let head = train(&cfg).unwrap();
+    for (a, b) in full.steps[..4].iter().zip(&head.steps) {
+        assert_eq!(a.loss, b.loss, "pre-checkpoint step {} diverged", a.step);
+    }
+
+    // resuming at a different dp must fail loudly: shards + data split moved
+    cfg.steps = 2;
+    cfg.resume_dir = Some(ck_mid.clone());
+    cfg.dp = 4;
+    cfg.num_micro = 8;
+    let err = train(&cfg).unwrap_err().to_string();
+    assert!(err.contains("dp"), "mismatched-dp resume should mention dp: {err}");
+
+    cfg.dp = 2;
+    cfg.checkpoint_dir = Some(ck_res.clone());
+    let tail = train(&cfg).unwrap();
+    for (a, b) in full.steps[4..].iter().zip(&tail.steps) {
+        assert_eq!(a.step, b.step, "resumed run must continue global steps");
+        assert_eq!(a.loss, b.loss, "resumed step {} diverged", a.step);
+    }
+    for s in 0..p {
+        let a = checkpoint::load_stage(&ck_full, s, &manifest).unwrap();
+        let b = checkpoint::load_stage(&ck_res, s, &manifest).unwrap();
+        assert_eq!(a, b, "stage {s} parameters diverged after dp=2 resume");
+    }
+    for d in [&ck_full, &ck_mid, &ck_res] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn dp_misconfiguration_fails_loudly() {
+    let Some(arts) = common::artifacts_dir() else { return };
+    // --dp must divide --micro
+    let mut cfg = cfg_for(arts.clone(), 1, 3);
+    cfg.dp = 2;
+    assert!(train(&cfg).unwrap_err().to_string().contains("multiple"));
+    // dp = 0 is not a thing
+    let mut cfg = cfg_for(arts.clone(), 1, 4);
+    cfg.dp = 0;
+    assert!(train(&cfg).is_err());
+    // the reference mode is dp = 1 only
+    let mut cfg = cfg_for(arts, 1, 4);
+    cfg.dp = 2;
+    cfg.emulate_dp = 2;
+    assert!(train(&cfg).unwrap_err().to_string().contains("emulate_dp"));
+}

@@ -17,11 +17,7 @@ fn base_cfg(artifacts: PathBuf) -> TrainerCfg {
         log_every: 0,
         grad_clip: Some(1.0),
         schedule: Schedule::OneFOneB,
-        virtual_stages: 0,
-        warmup_steps: 0,
-        checkpoint_dir: None,
-        resume_dir: None,
-        overlap_wrap_edges: true,
+        ..Default::default()
     }
 }
 
