@@ -5,7 +5,7 @@ PY ?= python3
 CARGO ?= cargo
 
 .PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 build test test-dp \
-        test-dp-py bench doc clean
+        test-dp-py test-tp test-tp-py bench doc clean
 
 all: artifacts build
 
@@ -14,18 +14,21 @@ all: artifacts build
 artifacts:
 	cd python && $(PY) -m compile.aot --config small --out-dir ../artifacts
 
-# CI-fast artifacts: the `tiny` config. Integration tests self-skip without
+# CI-fast artifacts: the `tiny` config, INCLUDING the tp-pipeline segment
+# export (`--tp 2 --tp-pipeline`) so the live `--tp 2` trainer and the
+# tp-equivalence suite run against it. Integration tests self-skip without
 # any artifacts and pick this directory up first (rust/tests/common).
 artifacts-tiny:
-	cd python && $(PY) -m compile.aot --config tiny --out-dir ../artifacts-tiny
+	cd python && $(PY) -m compile.aot --config tiny --tp 2 --tp-pipeline \
+	    --out-dir ../artifacts-tiny
 
 # Interleaved virtual-stage artifacts: tiny widths, 8 layers split into
-# 2 stages x 4 chunks. Enables the live interleaved-1F1B integration tests
-# (rust/tests/pipeline_equivalence.rs) and
-# `train_ppmoe --artifacts artifacts-tiny-v4 --virtual 4`.
+# 2 stages x 4 chunks, tp-pipeline included — the live interleaved-1F1B
+# tests (rust/tests/pipeline_equivalence.rs), the chunked tp-equivalence
+# slice, and `train_ppmoe --artifacts artifacts-tiny-v4 --virtual 4 --tp 2`.
 artifacts-tiny-v4:
 	cd python && $(PY) -m compile.aot --config tiny-deep --virtual 4 \
-	    --out-dir ../artifacts-tiny-v4
+	    --tp 2 --tp-pipeline --out-dir ../artifacts-tiny-v4
 
 build:
 	$(CARGO) build --release
@@ -35,18 +38,39 @@ test:
 
 # The dp-equivalence slice: live --dp {2,4} training bitwise vs the dp = 1
 # summed-gradient reference (rust integration, self-skips without
-# artifacts) + the numpy ZeRO-1 sharded-Adam property (python, runs
-# everywhere). CI's python job runs the python half via test-dp-py.
+# artifacts/backend) + the numpy ZeRO-1 sharded-Adam property (python, runs
+# wherever pytest is importable). CI's python job runs the python half via
+# test-dp-py.
 test-dp: test-dp-py
 	$(CARGO) test --test dp_equivalence -q
 
 test-dp-py:
-	$(PY) -m pytest python/tests/test_dp_equivalence.py -q
+	@if $(PY) -c "import pytest" >/dev/null 2>&1; then \
+	    $(PY) -m pytest python/tests/test_dp_equivalence.py -q; \
+	else \
+	    echo "SKIP: pytest not importable under $(PY) — python dp tests skipped"; \
+	fi
+
+# The tp-equivalence slice: live --tp 2 training bitwise vs the serial
+# emulate_tp reference, composed with --dp (rust integration, self-skips
+# without artifacts/backend) + the segment-calculus and index-slice
+# dispatch properties (python). CI's python job runs the python half via
+# test-tp-py.
+test-tp: test-tp-py
+	$(CARGO) test --test tp_equivalence -q
+
+test-tp-py:
+	@if $(PY) -c "import pytest" >/dev/null 2>&1; then \
+	    $(PY) -m pytest python/tests/test_tp_pipeline.py \
+	        python/tests/test_tp_dispatch.py -q; \
+	else \
+	    echo "SKIP: pytest not importable under $(PY) — python tp tests skipped"; \
+	fi
 
 # Hot-path microbenches (writes BENCH_hotpath.json: incl. the
-# dp_sync/{serialized,overlapped} dp={2,4} A/B rows and the
-# optimizer/zero1-live r={1,2,4} zero-alloc rows) + the Table 2 sweep
-# with its interleaved variant.
+# dp_sync/{serialized,overlapped} dp={2,4} A/B rows, the
+# optimizer/zero1-live r={1,2,4} zero-alloc rows and the tp_combine rows)
+# + the Table 2 sweep with its interleaved variant.
 bench:
 	$(CARGO) bench --bench hotpath_micro
 	$(CARGO) bench --bench table2_throughput

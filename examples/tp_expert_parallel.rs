@@ -5,11 +5,18 @@
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example tp_expert_parallel
+//! # the same decomposition INSIDE the live trainer (segment plan +
+//! # per-rank shards; needs a --tp-pipeline export like artifacts-tiny):
+//! cargo run --release --example train_ppmoe -- \
+//!     --artifacts artifacts-tiny --tp 2 --micro 4
 //! ```
 //!
 //! Prints a real-execution Table-3-style component breakdown: per-rank
 //! exec (gating + index-slice + grouped expert FFN, inside HLO) vs the
-//! combining all-reduce (in Rust).
+//! combining all-reduce (in Rust). This is the standalone single-layer
+//! check; `ppmoe train --tp n` runs the identical dispatch/combine
+//! arithmetic across whole pipeline stages (docs/hotpath.md
+//! §Tensor-parallel experts).
 
 use ppmoe::coordinator::Args;
 use ppmoe::tp::run_tp_moe;

@@ -43,10 +43,12 @@ fn main() -> anyhow::Result<()> {
         overlap_wrap_edges: !args.has_flag("no-overlap"),
         dp: args.get_usize("dp", 1)?,
         overlap_dp_sync: !args.has_flag("no-dp-overlap"),
+        tp: args.get_usize("tp", 1)?,
         emulate_dp: 0,
+        emulate_tp: 0,
     };
     eprintln!(
-        "training: {} steps × {} microbatches, lr {}, schedule {:?}{}{}",
+        "training: {} steps × {} microbatches, lr {}, schedule {:?}{}{}{}",
         cfg.steps,
         cfg.num_micro,
         cfg.lr,
@@ -63,6 +65,11 @@ fn main() -> anyhow::Result<()> {
                 cfg.num_micro / cfg.dp,
                 if cfg.overlap_dp_sync { "overlapped" } else { "serialized" }
             )
+        } else {
+            String::new()
+        },
+        if cfg.tp > 1 {
+            format!(", {} tp ranks/stage (expert-sharded)", cfg.tp)
         } else {
             String::new()
         }
@@ -88,10 +95,10 @@ fn main() -> anyhow::Result<()> {
     println!("improvement:      {:.1}%", (1.0 - late / early) * 100.0);
     println!("throughput:       {:.0} tokens/s", report.tokens_per_sec);
     println!("loss curve:       {out}");
-    for (replica, stage, t) in report.worker_timers() {
-        if report.dp > 1 {
+    for (replica, stage, tp_rank, t) in report.worker_timers() {
+        if report.dp > 1 || report.tp > 1 {
             println!(
-                "replica {replica} stage {stage}: {:.1}s busy — breakdown:",
+                "replica {replica} stage {stage} tp {tp_rank}: {:.1}s busy — breakdown:",
                 t.total()
             );
         } else {

@@ -15,6 +15,7 @@ Outputs under --out-dir (default ../artifacts):
 
 Usage: python -m compile.aot [--out-dir DIR] [--config tiny|small|medium|...]
                              [--tp N] [--seed S] [--virtual V] [--no-full]
+                             [--tp-pipeline]
 
 `--virtual V` exports each stage as V non-contiguous chunks (interleaved
 virtual-stage 1F1B): per-(stage, chunk) fwd/bwd artifacts plus a `chunks`
@@ -102,10 +103,11 @@ def lower_artifact(name: str, fn, example_args, out_dir: str,
     return entry
 
 
-def save_stage_params(out_dir: str, stage: int, names: list[str], leaves) -> dict:
+def save_stage_params(out_dir: str, stage: int, names: list[str], leaves,
+                      bin_name: str | None = None) -> dict:
     """Raw LE f32 concat + layout. Returns the manifest 'stages' entry."""
     os.makedirs(os.path.join(out_dir, "params"), exist_ok=True)
-    binfile = f"params/stage{stage}.bin"
+    binfile = f"params/{bin_name or f'stage{stage}'}.bin"
     layout, offset = [], 0
     with open(os.path.join(out_dir, binfile), "wb") as f:
         for name, leaf in zip(names, leaves):
@@ -119,8 +121,100 @@ def save_stage_params(out_dir: str, stage: int, names: list[str], leaves) -> dic
     return {"bin": binfile, "params": layout, "total_bytes": offset}
 
 
+def export_tp_exec(cfg, out_dir: str, tp: int,
+                   chunk_params, manifest: dict) -> None:
+    """Additive tp-pipeline export: per-rank expert-sharded segment
+    artifacts + the manifest ``tp_exec`` table the live trainer's `--tp n`
+    executes (see stages.tp_chunk_plan). Parameters are SLICES of the same
+    initialization the monolithic artifacts ship, written as per-(stage,
+    rank) bins, each layout entry tagged with its gradient class."""
+    arts = manifest["artifacts"]
+    S, V = cfg.stages, cfg.virtual_stages
+    tp_exec: dict = {"tp": tp, "ranks": []}
+    print(f"[aot] tp-pipeline export: {tp} ranks")
+    for r in range(tp):
+        rank_stages = []
+        for s in range(S):
+            names, leaves, grads, chunk_meta = [], [], [], []
+            for c in range(V):
+                plan = stages.tp_chunk_plan(cfg, s, c)
+                v_idx = c * S + s
+                seg_meta = []
+                for k, seg in enumerate(plan):
+                    first = k == 0
+                    pdict = stages.tp_segment_params(
+                        chunk_params[s][c], seg, cfg, r, tp, first, v_idx)
+                    pn, pl, _ = stages.flatten_params(pdict)
+                    names += [f"chunk{c}.seg{k}.{n}" for n in pn]
+                    leaves += pl
+                    grads += stages.tp_seg_grad_class(seg, pn)
+                    base = f"stage{s}_chunk{c}_seg{k}"
+                    tokens_in = (first and s == 0 and c == 0
+                                 and not seg["post_moe"])
+                    if seg["kind"] == "moe":
+                        fwd = f"{base}_moe_rank{r}of{tp}_fwd"
+                        bwd = f"{base}_moe_rank{r}of{tp}_bwd"
+                        fn, ex, _ = stages.make_tp_moe_seg_fwd(
+                            cfg, r, tp, pdict)
+                        arts[fwd] = lower_artifact(
+                            fwd, fn, ex, out_dir, [*pn, "hgt"])
+                        fn, ex, _ = stages.make_tp_moe_seg_bwd(
+                            cfg, r, tp, pdict)
+                        arts[bwd] = lower_artifact(
+                            bwd, fn, ex, out_dir, [*pn, "hgt", "dy", "daux"])
+                        seg_meta.append({
+                            "kind": "moe", "fwd": fwd, "bwd": bwd,
+                            "params": len(pn), "xy": False, "pair": False,
+                            "aux": True, "dx": True,
+                        })
+                        continue
+                    xy = seg["post_moe"]
+                    pair = seg["pre_moe"] is not None
+                    xs = ["x", "y"] if xy else ["x"]
+                    if seg["kind"] == "losstail":
+                        bwd = f"{base}_losstail"
+                        if r == 0:  # replicated: shared across ranks
+                            fn, ex, _ = stages.make_tp_losstail(
+                                cfg, s, c, seg, pdict, first)
+                            arts[bwd] = lower_artifact(
+                                bwd, fn, ex, out_dir,
+                                [*pn, *xs, "targets", "aux_in"])
+                        seg_meta.append({
+                            "kind": "losstail", "fwd": None, "bwd": bwd,
+                            "params": len(pn), "xy": xy, "pair": False,
+                            "aux": False, "dx": not tokens_in,
+                        })
+                        continue
+                    fwd, bwd = f"{base}_fwd", f"{base}_bwd"
+                    if r == 0:  # replicated: shared across ranks
+                        cts = ["dx2", "dhgt"] if pair else ["dh"]
+                        fn, ex, _ = stages.make_tp_glue_fwd(
+                            cfg, s, c, seg, pdict, first)
+                        arts[fwd] = lower_artifact(fwd, fn, ex, out_dir,
+                                                   [*pn, *xs])
+                        fn, ex, _ = stages.make_tp_glue_bwd(
+                            cfg, s, c, seg, pdict, first)
+                        arts[bwd] = lower_artifact(bwd, fn, ex, out_dir,
+                                                   [*pn, *xs, *cts])
+                    seg_meta.append({
+                        "kind": "glue", "fwd": fwd, "bwd": bwd,
+                        "params": len(pn), "xy": xy, "pair": pair,
+                        "aux": False, "dx": not tokens_in,
+                    })
+                chunk_meta.append(seg_meta)
+            entry = save_stage_params(out_dir, s, names, leaves,
+                                      bin_name=f"stage{s}.tp{r}of{tp}")
+            for spec, g in zip(entry["params"], grads):
+                spec["grad"] = g
+            entry["chunks"] = chunk_meta
+            rank_stages.append(entry)
+        tp_exec["ranks"].append(rank_stages)
+    manifest["tp_exec"] = tp_exec
+
+
 def export(cfg_name: str, out_dir: str, tp: int, seed: int,
-           include_full: bool, virtual: int = 1) -> None:
+           include_full: bool, virtual: int = 1,
+           tp_pipeline: bool = False) -> None:
     cfg = CONFIGS[cfg_name]
     if virtual != 1:
         cfg = dataclasses.replace(cfg, virtual_stages=virtual)
@@ -159,6 +253,7 @@ def export(cfg_name: str, out_dir: str, tp: int, seed: int,
 
         s_last = cfg.stages - 1
         last_params = all_params[s_last]
+        chunk_params = [[p] for p in all_params]
     else:
         # interleaved pipeline: per-(stage, chunk) artifacts plus the
         # manifest "chunks" table; each stage's bin concatenates its
@@ -229,6 +324,12 @@ def export(cfg_name: str, out_dir: str, tp: int, seed: int,
     arts["ffn_grouped"] = lower_artifact(
         "ffn_grouped", fn, ex, out_dir, ["xd", "w1", "b1", "w2", "b2"])
 
+    # live trainer tp-pipeline scheme (`--tp n`): per-rank expert-sharded
+    # segment artifacts + the manifest tp_exec table; additive — the
+    # monolithic artifacts above stay, so tp = 1 runs are untouched
+    if tp_pipeline and tp > 1:
+        export_tp_exec(cfg, out_dir, tp, chunk_params, manifest)
+
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"[aot] wrote {out_dir}/manifest.json")
@@ -248,12 +349,16 @@ def main() -> None:
                          "stage (layers must divide stages*virtual)")
     ap.add_argument("--no-full", action="store_true",
                     help="skip the whole-model lossgrad artifact")
+    ap.add_argument("--tp-pipeline", action="store_true",
+                    help="also export per-rank expert-sharded SEGMENT "
+                         "artifacts + the manifest tp_exec table, enabling "
+                         "the live trainer's --tp n (requires --tp > 1)")
     args = ap.parse_args()
     out_dir = args.out_dir
     if args.out_compat:
         out_dir = os.path.dirname(args.out_compat) or "."
     export(args.config, out_dir, args.tp, args.seed, not args.no_full,
-           virtual=args.virtual)
+           virtual=args.virtual, tp_pipeline=args.tp_pipeline)
     if args.out_compat:
         # Makefile freshness stamp: alias the first stage/chunk artifact
         src = os.path.join(out_dir, "stage0_fwd.hlo.txt")

@@ -362,6 +362,81 @@ def moe_rank_partial(x, wg, w1_loc, b1_loc, w2_loc, b2_loc,
     return y, aux
 
 
+def tp_glue_fwd(params, xs, cfg: ModelConfig, stage: int, chunk: int,
+                blocks: tuple[int, int], pre_moe: int | None, post_moe: bool,
+                first: bool):
+    """One replicated "glue" segment of a tp-pipeline chunk.
+
+    The tp export cuts every chunk at its MoE layers: glue segments hold the
+    replicated compute (dense blocks, attention, LayerNorms) and run
+    identically on every tp rank, while the cut-out MoE layers run as
+    per-rank ``tp_moe_fwd`` partials combined by the trainer's inner-node
+    all-reduce. A glue segment:
+
+    * takes the chunk input ``(x,)`` when it opens the chunk (``first``), or
+      the pair ``(x_res, y_combined)`` when it follows a combine
+      (``post_moe`` — the residual add lives here, AFTER the all-reduce, so
+      the sum decomposition of the partials stays exact);
+    * runs the dense blocks in ``blocks`` (aux is structurally zero there);
+    * and, when ``pre_moe`` names the next MoE block, stops mid-block after
+      that block's attention + pre-MoE LayerNorm, returning ``(x_res, hgt)``
+      — ``hgt`` is the tensor every rank's MoE partial index-slices.
+    """
+    n = cfg.layers // cfg.num_virtual
+    v_idx = chunk * cfg.stages + stage
+    if post_moe:
+        h = xs[0] + xs[1]
+    elif first and v_idx == 0:
+        h = params["tok_emb"][xs[0]] + params["pos_emb"][None, :, :]
+    else:
+        h = xs[0]
+    for j in range(*blocks):
+        h, _aux = block_fwd(params[f"block{j:02d}"], h, cfg, v_idx * n + j)
+    if pre_moe is not None:
+        bp = params[f"block{pre_moe:02d}"]
+        x2 = h + attention(bp, layer_norm(h, bp["ln1_g"], bp["ln1_b"]), cfg)
+        hgt = layer_norm(x2, bp["ln2_g"], bp["ln2_b"])
+        return (x2, hgt)
+    return (h,)
+
+
+def tp_moe_fwd(params, hgt, cfg: ModelConfig, rank: int, tp: int):
+    """One rank's MoE segment of a tp-pipeline chunk: the ``moe_rank``
+    scheme applied to the stage-local activation ``hgt`` (B, S, h). Returns
+    this rank's partial output (summed across ranks by the trainer's
+    all-reduce) and the aux balance loss (computed identically on every
+    rank from the full gating weights — only the trainer's rank 0 threads
+    its value, and only rank 0 receives the aux cotangent in the backward,
+    so the sum of the rank gradients is exactly the monolithic gradient)."""
+    B, S, h = hgt.shape
+    y, aux = moe_rank_partial(
+        hgt.reshape(B * S, h), params["wg"], params["w1"], params["b1"],
+        params["w2"], params["b2"], rank, tp, cfg)
+    return y.reshape(B, S, h), aux
+
+
+def tp_losstail_loss(params, xs, targets, aux_in, cfg: ModelConfig,
+                     stage: int, chunk: int, blocks: tuple[int, int],
+                     post_moe: bool, first: bool):
+    """The loss chunk's final replicated segment: glue-style entry (the
+    residual add when it follows an MoE combine), the trailing dense
+    blocks, then the loss head. ``aux_in`` carries the ring-threaded aux
+    scalar PLUS this chunk's own MoE segments' aux (added host-side by the
+    trainer — unlike the fused monolithic ``lossgrad``, the tp loss tail
+    computes no gating of its own)."""
+    n = cfg.layers // cfg.num_virtual
+    v_idx = chunk * cfg.stages + stage
+    if post_moe:
+        h = xs[0] + xs[1]
+    elif first and v_idx == 0:
+        h = params["tok_emb"][xs[0]] + params["pos_emb"][None, :, :]
+    else:
+        h = xs[0]
+    for j in range(*blocks):
+        h, _aux = block_fwd(params[f"block{j:02d}"], h, cfg, v_idx * n + j)
+    return loss_head(params, h, targets, aux_in, cfg)
+
+
 def moe_layer_single(x, wg, w1, b1, w2, b2, cfg: ModelConfig):
     """Monolithic single-rank MoE layer — the numerics reference the TP×EP
     rank decomposition must sum to (verified in rust integration tests)."""

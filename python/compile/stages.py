@@ -207,6 +207,236 @@ def make_full_lossgrad_chunks(cfg: ModelConfig,
 
 
 # ---------------------------------------------------------------------------
+# TP-pipeline segment artifacts (the live trainer's tp > 1 execution plan)
+# ---------------------------------------------------------------------------
+#
+# A chunk with MoE layers cannot run expert-sharded as ONE artifact: the
+# combined (all-reduced) MoE output feeds the next block. So the tp export
+# cuts each chunk at its MoE layers into an alternating sequence of
+# replicated "glue" segments and per-rank "moe" segments, with the trainer
+# performing the inner-node all-reduce at each cut (forward: the partial
+# outputs; backward: the partial d(hgt) cotangents and, at step end, the
+# partial gating-weight gradients). Gradient classes per parameter:
+#
+#   rep  — glue params: every rank computes the identical (true) gradient,
+#          because all glue inputs AND cotangents are replicated once the
+#          backward all-reduces d(hgt);
+#   sum  — the gating weights wg: each rank's gradient only sees its local
+#          experts' dispatch slice (rank 0 additionally carries the aux-loss
+#          path), so the true gradient is the rank-order sum;
+#   loc  — the expert weights w1/b1/w2/b2: sliced per rank, local gradient
+#          is already exact.
+
+TP_ATTN_KEYS = ("ln1_g", "ln1_b", "wqkv", "bqkv", "wo", "bo", "ln2_g", "ln2_b")
+TP_MOE_KEYS = ("wg", "w1", "b1", "w2", "b2")
+
+
+def tp_chunk_plan(cfg: ModelConfig, stage: int, chunk: int) -> list[dict]:
+    """The segment sequence of one (stage, chunk) under the tp export.
+
+    Glue segments carry ``blocks`` (a half-open range of fully-contained
+    dense blocks), ``pre_moe`` (the MoE block whose attention + pre-MoE LN
+    close the segment, or None) and ``post_moe`` (whether the segment opens
+    with the residual add of a preceding combine). The final segment of the
+    loss chunk is the fused ``losstail`` (loss head + backward of the tail,
+    mirroring the monolithic ``lossgrad``)."""
+    n = cfg.layers // cfg.num_virtual
+    v_idx = chunk * cfg.stages + stage
+    is_loss = stage == cfg.stages - 1 and chunk == cfg.virtual_stages - 1
+    moes = [j for j in range(n) if cfg.is_moe_layer(v_idx * n + j)]
+    segs: list[dict] = []
+    start = 0
+    for k, j in enumerate(moes):
+        segs.append({"kind": "glue", "blocks": (start, j), "pre_moe": j,
+                     "post_moe": k > 0})
+        segs.append({"kind": "moe", "block": j})
+        start = j + 1
+    segs.append({"kind": "losstail" if is_loss else "glue",
+                 "blocks": (start, n), "pre_moe": None,
+                 "post_moe": bool(moes)})
+    return segs
+
+
+def tp_segment_params(chunk_params: dict[str, Any], seg: dict,
+                      cfg: ModelConfig, rank: int, tp: int,
+                      first: bool, v_idx: int) -> dict[str, Any]:
+    """The parameter sub-dict one segment owns on one rank.
+
+    Partitions the chunk's params exactly: dense blocks go whole into their
+    glue segment, an MoE block splits into attention/LN keys (glue) and
+    gating + rank-sliced expert keys (moe), embeddings ride with the
+    chunk-opening segment and the loss head with the losstail."""
+    if seg["kind"] == "moe":
+        bp = chunk_params[f"block{seg['block']:02d}"]
+        assert cfg.experts % tp == 0, (cfg.experts, tp)
+        n_loc = cfg.experts // tp
+        lo = rank * n_loc
+        return {
+            "wg": bp["wg"],
+            "w1": bp["w1"][lo:lo + n_loc], "b1": bp["b1"][lo:lo + n_loc],
+            "w2": bp["w2"][lo:lo + n_loc], "b2": bp["b2"][lo:lo + n_loc],
+        }
+    p: dict[str, Any] = {}
+    if first and v_idx == 0:
+        p["tok_emb"] = chunk_params["tok_emb"]
+        p["pos_emb"] = chunk_params["pos_emb"]
+    for j in range(*seg["blocks"]):
+        p[f"block{j:02d}"] = chunk_params[f"block{j:02d}"]
+    if seg["pre_moe"] is not None:
+        bp = chunk_params[f"block{seg['pre_moe']:02d}"]
+        p[f"block{seg['pre_moe']:02d}"] = {k: bp[k] for k in TP_ATTN_KEYS}
+    if seg["kind"] == "losstail":
+        p["lnf_g"] = chunk_params["lnf_g"]
+        p["lnf_b"] = chunk_params["lnf_b"]
+        p["w_out"] = chunk_params["w_out"]
+    return p
+
+
+def tp_seg_grad_class(seg: dict, names: list[str]) -> list[str]:
+    """Per-parameter gradient class tags ("rep" | "sum" | "loc") in the
+    segment's flattened name order — the manifest contract the trainer's
+    tp gradient combine and clip-norm decomposition key off."""
+    if seg["kind"] != "moe":
+        return ["rep"] * len(names)
+    return ["sum" if n == "wg" else "loc" for n in names]
+
+
+def _glue_example_ins(cfg: ModelConfig, stage: int, chunk: int,
+                      first: bool, post_moe: bool) -> list:
+    act = jnp.zeros((cfg.micro_batch, cfg.seq, cfg.hidden), jnp.float32)
+    if post_moe:
+        return [act, act]
+    if first:
+        return [_example_chunk_x(cfg, stage, chunk)]
+    return [act]
+
+
+def make_tp_glue_fwd(cfg: ModelConfig, stage: int, chunk: int, seg: dict,
+                     params: dict[str, Any], first: bool):
+    """glue_fwd: (params..., x[, y]) -> (h,) | (x_res, hgt)."""
+    names, leaves, treedef = flatten_params(params)
+    blocks, pre, post = seg["blocks"], seg["pre_moe"], seg["post_moe"]
+    nx = 2 if post else 1
+
+    def fn(*args):
+        p = unflatten_params(treedef, list(args[:-nx]))
+        return model.tp_glue_fwd(p, args[-nx:], cfg, stage, chunk, blocks,
+                                 pre, post, first)
+
+    ex = _glue_example_ins(cfg, stage, chunk, first, post)
+    return fn, [*leaves, *ex], names
+
+
+def make_tp_glue_bwd(cfg: ModelConfig, stage: int, chunk: int, seg: dict,
+                     params: dict[str, Any], first: bool):
+    """glue_bwd: (params..., x[, y], d_out...) -> (dx[, dy], dparams...).
+
+    Recompute-based like every other backward artifact; `d_out` mirrors the
+    forward outputs ((dh,) or (dx_res, dhgt) — the latter ALREADY summed
+    across ranks by the trainer, which is what makes the replicated-grad
+    class exact). The chunk-opening segment of virtual stage 0 consumes int
+    tokens and emits no dx."""
+    names, leaves, treedef = flatten_params(params)
+    blocks, pre, post = seg["blocks"], seg["pre_moe"], seg["post_moe"]
+    nx = 2 if post else 1
+    nout = 2 if pre is not None else 1
+    k = len(leaves)
+    tokens_in = first and stage == 0 and chunk == 0 and not post
+
+    def fn(*args):
+        p = unflatten_params(treedef, list(args[:k]))
+        xs = args[k:k + nx]
+        cts = tuple(args[k + nx:k + nx + nout])
+        _, vjp_fn = jax.vjp(
+            lambda pp, *xx: model.tp_glue_fwd(pp, xx, cfg, stage, chunk,
+                                              blocks, pre, post, first),
+            p, *xs,
+        )
+        res = vjp_fn(cts)
+        dp_leaves = jax.tree_util.tree_leaves(res[0])
+        if tokens_in:
+            return tuple(dp_leaves)
+        return (*res[1:], *dp_leaves)
+
+    ex_in = _glue_example_ins(cfg, stage, chunk, first, post)
+    act = jnp.zeros((cfg.micro_batch, cfg.seq, cfg.hidden), jnp.float32)
+    ex_ct = [act] * nout
+    return fn, [*leaves, *ex_in, *ex_ct], names
+
+
+def make_tp_moe_seg_fwd(cfg: ModelConfig, rank: int, tp: int,
+                        params: dict[str, Any]):
+    """moe_fwd (one rank): (params..., hgt) -> (y_partial, aux)."""
+    names, leaves, treedef = flatten_params(params)
+
+    def fn(*args):
+        p = unflatten_params(treedef, list(args[:-1]))
+        return model.tp_moe_fwd(p, args[-1], cfg, rank, tp)
+
+    hgt = jnp.zeros((cfg.micro_batch, cfg.seq, cfg.hidden), jnp.float32)
+    return fn, [*leaves, hgt], names
+
+
+def make_tp_moe_seg_bwd(cfg: ModelConfig, rank: int, tp: int,
+                        params: dict[str, Any]):
+    """moe_bwd (one rank): (params..., hgt, dy, daux) -> (dhgt, dparams...).
+
+    `dhgt` and `dwg` are rank-partial (the trainer sums them in rank
+    order); expert grads are exact locally. The trainer passes the aux
+    cotangent `daux = aux_coef` to rank 0 only and 0.0 elsewhere, so the
+    replicated aux path is counted exactly once in the rank sum."""
+    names, leaves, treedef = flatten_params(params)
+
+    def fn(*args):
+        p = unflatten_params(treedef, list(args[:-3]))
+        hgt, dy, daux = args[-3], args[-2], args[-1]
+        _, vjp_fn = jax.vjp(
+            lambda pp, xx: model.tp_moe_fwd(pp, xx, cfg, rank, tp), p, hgt
+        )
+        dp, dhgt = vjp_fn((dy, daux))
+        return (dhgt, *jax.tree_util.tree_leaves(dp))
+
+    act = jnp.zeros((cfg.micro_batch, cfg.seq, cfg.hidden), jnp.float32)
+    return fn, [*leaves, act, act, jnp.float32(0.0)], names
+
+
+def make_tp_losstail(cfg: ModelConfig, stage: int, chunk: int, seg: dict,
+                     params: dict[str, Any], first: bool):
+    """losstail (fused fwd+loss+bwd, replicated):
+    (params..., x[, y], targets, aux_in) -> (loss, dx[, dy], dparams...).
+
+    The tp counterpart of `lossgrad`, covering only the replicated tail of
+    the loss chunk; `aux_in` already includes this chunk's own MoE aux
+    (trainer-added). The aux_in cotangent is the constant aux_coef, not
+    re-emitted — same convention as `make_last_stage_lossgrad`."""
+    names, leaves, treedef = flatten_params(params)
+    blocks, post = seg["blocks"], seg["post_moe"]
+    nx = 2 if post else 1
+    k = len(leaves)
+    tokens_in = first and stage == 0 and chunk == 0 and not post
+
+    def fn(*args):
+        p = unflatten_params(treedef, list(args[:k]))
+        xs = args[k:k + nx]
+        tgt, aux_in = args[k + nx], args[k + nx + 1]
+        loss, vjp_fn = jax.vjp(
+            lambda pp, *xx: model.tp_losstail_loss(pp, xx, tgt, aux_in, cfg,
+                                                   stage, chunk, blocks,
+                                                   post, first),
+            p, *xs,
+        )
+        res = vjp_fn(jnp.float32(1.0))
+        dp_leaves = jax.tree_util.tree_leaves(res[0])
+        if tokens_in:
+            return (loss, *dp_leaves)
+        return (loss, *res[1:], *dp_leaves)
+
+    ex_in = _glue_example_ins(cfg, stage, chunk, first, post)
+    tgt = jnp.zeros((cfg.micro_batch, cfg.seq), jnp.int32)
+    return fn, [*leaves, *ex_in, tgt, jnp.float32(0.0)], names
+
+
+# ---------------------------------------------------------------------------
 # TP x EP rank artifacts (§3.3.2-3.3.4)
 # ---------------------------------------------------------------------------
 

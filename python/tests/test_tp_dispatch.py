@@ -1,0 +1,124 @@
+"""Index-slicing dispatch vs a dense all-to-all oracle (numpy property).
+
+The paper's §3.3.3 claim, as a host-side property: PPMoE's per-rank
+"tensor index slicing" of the dispatch/combine tensors — each rank keeping
+only its E/T local experts' rows and contributing a partial output summed
+by ONE inner-node all-reduce — computes exactly what DPMoE's two
+all-to-alls compute (dispatch tokens to expert owners, gather results
+back). With top-1 gating each token lands in exactly one expert's slice,
+so the rank decomposition isn't just close: the partial sum touches one
+nonzero term per token and the equality is EXACT in float32.
+
+Runs under hypothesis when available (CI's python job); the offline
+container without hypothesis skips, mirroring the other kernel sweeps.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+
+def make_dispatch(top1, probs, experts, capacity):
+    """Capacity-based one-hot dispatch/combine (the kernel contract):
+    dispatch[t, e, c] = 1 iff token t is slot c of expert e."""
+    t = top1.shape[0]
+    dispatch = np.zeros((t, experts, capacity), np.float32)
+    combine = np.zeros((t, experts, capacity), np.float32)
+    fill = np.zeros(experts, np.int64)
+    for tok in range(t):
+        e = top1[tok]
+        if fill[e] < capacity:
+            dispatch[tok, e, fill[e]] = 1.0
+            combine[tok, e, fill[e]] = probs[tok, e]
+            fill[e] += 1
+    return dispatch, combine
+
+
+def expert_fn(xd, w):
+    """Per-expert linear stand-in for the expert FFN: xd (E, C, h) -> same."""
+    return np.einsum("ech,eho->eco", xd, w).astype(np.float32)
+
+
+def all_to_all_oracle(x, top1, probs, w, experts, capacity):
+    """DPMoE semantics: globally dispatch every token to its expert's
+    buffer (1st a2a), compute every expert, gather each token's result
+    back (2nd a2a)."""
+    dispatch, combine = make_dispatch(top1, probs, experts, capacity)
+    xd = np.einsum("tec,th->ech", dispatch, x).astype(np.float32)
+    yd = expert_fn(xd, w)
+    return np.einsum("tec,eco->to", combine, yd).astype(np.float32)
+
+
+def index_slice_ranks(x, top1, probs, w, experts, capacity, tp):
+    """PPMoE semantics: every rank holds the full dispatch order (identical
+    gating), index-slices its E/tp local experts, computes a partial, and
+    the partials are summed in rank order (the inner-node all-reduce)."""
+    dispatch, combine = make_dispatch(top1, probs, experts, capacity)
+    n_loc = experts // tp
+    total = None
+    for r in range(tp):
+        lo = r * n_loc
+        d_loc = dispatch[:, lo:lo + n_loc, :]
+        c_loc = combine[:, lo:lo + n_loc, :]
+        xd = np.einsum("tec,th->ech", d_loc, x).astype(np.float32)
+        yd = expert_fn(xd, w[lo:lo + n_loc])
+        y_r = np.einsum("tec,eco->to", c_loc, yd).astype(np.float32)
+        total = y_r if total is None else (total + y_r).astype(np.float32)
+    return total
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tokens=st.integers(1, 48),
+    hidden=st.sampled_from([4, 8, 16]),
+    experts_per_rank=st.integers(1, 4),
+    tp=st.sampled_from([1, 2, 4]),
+    cap_frac=st.floats(0.25, 1.0),
+)
+def test_index_slice_equals_all_to_all(seed, tokens, hidden,
+                                       experts_per_rank, tp, cap_frac):
+    experts = experts_per_rank * tp
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((tokens, hidden)).astype(np.float32)
+    w = (0.3 * rng.standard_normal((experts, hidden, hidden))).astype(
+        np.float32)
+    logits = rng.standard_normal((tokens, experts)).astype(np.float32)
+    probs = (np.exp(logits) /
+             np.exp(logits).sum(-1, keepdims=True)).astype(np.float32)
+    top1 = probs.argmax(-1)
+    capacity = max(1, int(cap_frac * tokens))  # dropped tokens included
+
+    oracle = all_to_all_oracle(x, top1, probs, w, experts, capacity)
+    sliced = index_slice_ranks(x, top1, probs, w, experts, capacity, tp)
+    # top-1: each token's combine row has ONE nonzero expert, so the rank
+    # partial sum adds (tp - 1) exact zeros — bitwise equality, not approx
+    assert np.array_equal(oracle, sliced), (
+        f"max err {np.max(np.abs(oracle - sliced))}"
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), tp=st.sampled_from([2, 4]))
+def test_rank_partials_are_genuinely_partial(seed, tp):
+    """Sanity on the decomposition: a single rank's partial differs from
+    the combined result whenever several ranks' experts are hit (the
+    all-reduce is load-bearing, not a formality)."""
+    rng = np.random.default_rng(seed)
+    tokens, hidden, experts = 32, 8, 2 * tp
+    n_loc = experts // tp
+    x = rng.standard_normal((tokens, hidden)).astype(np.float32)
+    w = rng.standard_normal((experts, hidden, hidden)).astype(np.float32)
+    top1 = rng.integers(0, experts, tokens)  # uniform: all ranks hit w.h.p.
+    probs = np.full((tokens, experts), 1.0 / experts, np.float32)
+    full = index_slice_ranks(x, top1, probs, w, experts, tokens, tp)
+    # rank 0's lone partial: same FULL-expert dispatch order, sliced to its
+    # local experts only (exactly what one rank computes before combining)
+    dispatch, combine = make_dispatch(top1, probs, experts, tokens)
+    xd = np.einsum("tec,th->ech", dispatch[:, :n_loc, :], x).astype(np.float32)
+    yd = expert_fn(xd, w[:n_loc])
+    lone = np.einsum("tec,eco->to", combine[:, :n_loc, :], yd).astype(np.float32)
+    hits = len(np.unique(top1 // n_loc))
+    if hits > 1:
+        assert not np.allclose(full, lone)

@@ -1,0 +1,312 @@
+"""TP-pipeline segment calculus: the expert-sharded chunk decomposition the
+live trainer's ``--tp n`` executes must reproduce the monolithic chunk.
+
+This exercises the EXACT factory functions ``aot.py --tp-pipeline`` lowers
+(stages.make_tp_glue_*/make_tp_moe_seg_*/make_tp_losstail), composed the way
+the Rust trainer composes them:
+
+* forward: glue segments replicated, per-rank MoE partials summed in rank
+  order at each cut (the inner-node all-reduce), the residual add INSIDE
+  the post-combine glue;
+* backward: reverse walk; d(hgt) and d(wg) are rank-order sums of the rank
+  partials, the aux cotangent goes to rank 0 only, glue gradients are
+  taken from any single rank (replicated);
+* expert gradients stay local; concatenating the rank slices reconstructs
+  the monolithic expert gradient.
+
+Against ``model.chunk_fwd`` / its jax.vjp, forward outputs and every
+parameter gradient must agree to fp32 tolerance for every (stage, chunk)
+of the tiny and tiny-deep(v=2) configs — dense-only chunks, mid-chunk MoE
+chunks and the MoE-bearing loss chunk included.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, stages
+from compile.aot import CONFIGS
+
+
+def tol(a, b, what, rtol=3e-4, atol=3e-5):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, f"{what}: shape {a.shape} vs {b.shape}"
+    assert np.allclose(a, b, rtol=rtol, atol=atol), (
+        f"{what}: max abs err {np.max(np.abs(a - b))}"
+    )
+
+
+def seg_states(cfg, stage, chunk, tp):
+    """(plan, per-rank per-seg param dicts + flattening metadata)."""
+    plan = stages.tp_chunk_plan(cfg, stage, chunk)
+    v_idx = chunk * cfg.stages + stage
+    key = jax.random.PRNGKey(17 + v_idx)
+    cp = model.init_chunk(key, cfg, stage, chunk)
+    pdicts = [
+        [
+            stages.tp_segment_params(cp, seg, cfg, r, tp, k == 0, v_idx)
+            for k, seg in enumerate(plan)
+        ]
+        for r in range(tp)
+    ]
+    return plan, cp, pdicts
+
+
+def chunk_input(cfg, stage, chunk, seed=3):
+    if stage == 0 and chunk == 0:
+        return jax.random.randint(
+            jax.random.PRNGKey(seed), (cfg.micro_batch, cfg.seq), 0, cfg.vocab
+        )
+    return 0.5 * jax.random.normal(
+        jax.random.PRNGKey(seed), (cfg.micro_batch, cfg.seq, cfg.hidden)
+    )
+
+
+def run_segmented_fwd(cfg, stage, chunk, tp, plan, pdicts, x):
+    """Trainer-faithful forward walk. Returns (out, aux, stash) where stash
+    holds each segment's inputs for the backward."""
+    cur = (x,)
+    aux_total = jnp.float32(0.0)
+    stash = []
+    for k, seg in enumerate(plan):
+        first = k == 0
+        if seg["kind"] == "moe":
+            hgt = cur[1]
+            y = None
+            for r in range(tp):
+                fn, _, _ = stages.make_tp_moe_seg_fwd(cfg, r, tp, pdicts[r][k])
+                leaves = stages.flatten_params(pdicts[r][k])[1]
+                y_r, aux_r = fn(*leaves, hgt)
+                y = y_r if y is None else y + y_r  # rank-order sum
+                if r == 0:
+                    aux_total = aux_total + aux_r
+            stash.append((hgt,))
+            cur = (cur[0], y)
+        elif seg["kind"] == "glue":
+            fn, _, _ = stages.make_tp_glue_fwd(cfg, stage, chunk, seg,
+                                               pdicts[0][k], first)
+            leaves = stages.flatten_params(pdicts[0][k])[1]
+            stash.append(cur)
+            cur = fn(*leaves, *cur)
+        else:  # losstail executes at backward time (fused)
+            stash.append(cur)
+            cur = None
+    return cur, aux_total, stash
+
+
+def run_segmented_bwd(cfg, stage, chunk, tp, plan, pdicts, stash,
+                      final_ct, targets=None, aux_in=None):
+    """Trainer-faithful backward walk. ``final_ct`` is (dh, daux) for a
+    pipeline chunk (daux = the aux cotangent constant) or None for the loss
+    chunk (rooted in the losstail). Returns (loss_or_None, dx_or_None,
+    grads) with grads[rank][seg] an unflattened param-grad dict."""
+    aux_coef = jnp.float32(cfg.aux_coef)
+    grads = [[None] * len(plan) for _ in range(tp)]
+    loss = None
+    # cotangents flowing upstream (reverse walk); a pipeline chunk's root is
+    # the external (dh,) — the aux cotangent is applied at each moe segment,
+    # not at the chunk boundary
+    cts = (final_ct[0],) if final_ct is not None else None
+    for k in range(len(plan) - 1, -1, -1):
+        seg = plan[k]
+        first = k == 0
+        if seg["kind"] == "losstail":
+            fn, _, names = stages.make_tp_losstail(cfg, stage, chunk, seg,
+                                                   pdicts[0][k], first)
+            leaves, treedef = stages.flatten_params(pdicts[0][k])[1:]
+            out = fn(*leaves, *stash[k], targets, aux_in)
+            loss = out[0]
+            ndx = len(stash[k]) if not (first and stage == 0 and chunk == 0) else 0
+            cts = out[1:1 + ndx]
+            dp = stages.unflatten_params(treedef, list(out[1 + ndx:]))
+            for r in range(tp):
+                grads[r][k] = dp
+        elif seg["kind"] == "glue":
+            fn, _, _ = stages.make_tp_glue_bwd(cfg, stage, chunk, seg,
+                                               pdicts[0][k], first)
+            treedef = stages.flatten_params(pdicts[0][k])[2]
+            leaves = stages.flatten_params(pdicts[0][k])[1]
+            out = fn(*leaves, *stash[k], *cts)
+            ndx = len(stash[k]) if not (first and stage == 0 and chunk == 0
+                                        and not seg["post_moe"]) else 0
+            new_cts = out[:ndx]
+            dp = stages.unflatten_params(treedef, list(out[ndx:]))
+            for r in range(tp):
+                grads[r][k] = dp
+            cts = new_cts
+        else:  # moe: per-rank partials, dhgt/dwg rank-order summed
+            dx2_ct, dy_ct = cts[0], cts[1]
+            dhgt = None
+            for r in range(tp):
+                fn, _, _ = stages.make_tp_moe_seg_bwd(cfg, r, tp, pdicts[r][k])
+                leaves, treedef = stages.flatten_params(pdicts[r][k])[1:]
+                daux_r = aux_coef if r == 0 else jnp.float32(0.0)
+                out = fn(*leaves, stash[k][0], dy_ct, daux_r)
+                dhgt = out[0] if dhgt is None else dhgt + out[0]
+                grads[r][k] = stages.unflatten_params(treedef, list(out[1:]))
+            cts = (dx2_ct, dhgt)
+    dx = cts[0] if cts else None
+    return loss, dx, grads
+
+
+def combine_param_grads(plan, pdicts, grads, tp):
+    """Reassemble the chunk-level gradient dict from the per-(rank, seg)
+    pieces: glue grads from rank 0 (replicated), wg = rank-order sum,
+    experts = concat of rank slices — the trainer's combine semantics."""
+    out = {}
+    for k, seg in enumerate(plan):
+        if seg["kind"] == "moe":
+            bname = f"block{seg['block']:02d}"
+            blk = out.setdefault(bname, {})
+            blk["wg"] = sum(grads[r][k]["wg"] for r in range(tp))
+            for key in ("w1", "b1", "w2", "b2"):
+                blk[key] = jnp.concatenate(
+                    [grads[r][k][key] for r in range(tp)], axis=0)
+        else:
+            for name, val in grads[0][k].items():
+                if isinstance(val, dict):
+                    out.setdefault(name, {}).update(val)
+                else:
+                    out[name] = val
+    return out
+
+
+def flatten_grad_dict(d, prefix=""):
+    items = {}
+    for k, v in sorted(d.items()):
+        if isinstance(v, dict):
+            items.update(flatten_grad_dict(v, prefix + k + "."))
+        else:
+            items[prefix + k] = v
+    return items
+
+
+def tp_configs():
+    tiny = CONFIGS["tiny"]
+    # v=2: every chunk carries one mid-chunk MoE; v=1: TWO MoE layers per
+    # chunk, exercising the glue-between-two-combines path
+    deep1 = CONFIGS["tiny-deep"]
+    deep2 = dataclasses.replace(deep1, virtual_stages=2)
+    return [("tiny", tiny), ("tiny-deep-v1", deep1), ("tiny-deep-v2", deep2)]
+
+
+@pytest.mark.parametrize("name,cfg", tp_configs())
+@pytest.mark.parametrize("tp", [2])
+def test_segment_plan_partitions_params(name, cfg, tp):
+    """Every chunk param appears in exactly one segment (with experts
+    sliced 1/tp), and the plan alternates glue/moe correctly."""
+    for stage in range(cfg.stages):
+        for chunk in range(cfg.virtual_stages):
+            plan, cp, pdicts = seg_states(cfg, stage, chunk, tp)
+            assert plan[-1]["kind"] in ("glue", "losstail")
+            is_loss = (stage == cfg.stages - 1
+                       and chunk == cfg.virtual_stages - 1)
+            assert (plan[-1]["kind"] == "losstail") == is_loss
+            mono = flatten_grad_dict(cp)
+            for r in range(tp):
+                seen = {}
+                for k, seg in enumerate(plan):
+                    flat = flatten_grad_dict(
+                        pdicts[r][k],
+                        f"block{seg['block']:02d}."
+                        if seg["kind"] == "moe" else "")
+                    dup = set(seen) & set(flat)
+                    assert not dup, f"params assigned twice: {dup}"
+                    seen.update(flat)
+                assert set(seen) == set(mono)
+                for pname, v in seen.items():
+                    ref = mono[pname]
+                    if pname.split(".")[-1] in ("w1", "b1", "w2", "b2") and \
+                            v.shape != ref.shape:
+                        assert v.shape[0] * tp == ref.shape[0], pname
+                    else:
+                        assert v.shape == ref.shape, pname
+
+
+@pytest.mark.parametrize("name,cfg", tp_configs())
+@pytest.mark.parametrize("tp", [2])
+def test_segmented_forward_matches_monolithic(name, cfg, tp):
+    for stage in range(cfg.stages):
+        for chunk in range(cfg.virtual_stages):
+            if (stage == cfg.stages - 1 and chunk == cfg.virtual_stages - 1):
+                continue  # loss chunk: covered by the losstail test
+            plan, cp, pdicts = seg_states(cfg, stage, chunk, tp)
+            x = chunk_input(cfg, stage, chunk)
+            h_ref, aux_ref = model.chunk_fwd(cp, x, cfg, stage, chunk)
+            (h_seg,), aux_seg, _ = run_segmented_fwd(
+                cfg, stage, chunk, tp, plan, pdicts, x)
+            tol(h_seg, h_ref, f"{name} s{stage}c{chunk} fwd")
+            tol(aux_seg, aux_ref, f"{name} s{stage}c{chunk} aux")
+
+
+@pytest.mark.parametrize("name,cfg", tp_configs())
+@pytest.mark.parametrize("tp", [2])
+def test_segmented_backward_matches_monolithic(name, cfg, tp):
+    """The headline calculus check: composed segment backwards (rank-order
+    sums for dhgt/dwg, aux cotangent on rank 0 only, replicated glue)
+    reproduce the monolithic chunk vjp — dx AND every parameter grad."""
+    for stage in range(cfg.stages):
+        for chunk in range(cfg.virtual_stages):
+            if (stage == cfg.stages - 1 and chunk == cfg.virtual_stages - 1):
+                continue
+            plan, cp, pdicts = seg_states(cfg, stage, chunk, tp)
+            x = chunk_input(cfg, stage, chunk)
+            dh = 0.3 * jax.random.normal(
+                jax.random.PRNGKey(11),
+                (cfg.micro_batch, cfg.seq, cfg.hidden))
+            daux = jnp.float32(cfg.aux_coef)
+
+            (_, vjp_fn) = jax.vjp(
+                lambda pp, xx: model.chunk_fwd(pp, xx, cfg, stage, chunk),
+                cp, x)
+            dp_ref, dx_ref = vjp_fn((dh, daux))
+
+            _, _, stash = run_segmented_fwd(
+                cfg, stage, chunk, tp, plan, pdicts, x)
+            _, dx_seg, grads = run_segmented_bwd(
+                cfg, stage, chunk, tp, plan, pdicts, stash, (dh, daux))
+            if not (stage == 0 and chunk == 0):
+                tol(dx_seg, dx_ref, f"{name} s{stage}c{chunk} dx")
+            got = flatten_grad_dict(
+                combine_param_grads(plan, pdicts, grads, tp))
+            want = flatten_grad_dict(dp_ref)
+            assert set(got) == set(want)
+            for pname in want:
+                tol(got[pname], want[pname],
+                    f"{name} s{stage}c{chunk} grad {pname}")
+
+
+@pytest.mark.parametrize("name,cfg", tp_configs())
+@pytest.mark.parametrize("tp", [2])
+def test_losstail_matches_monolithic_lossgrad(name, cfg, tp):
+    """Loss chunk: segmented fwd + fused losstail + reverse walk vs the
+    monolithic last_stage_loss vjp. The chunk's own MoE aux is added into
+    aux_in host-side (the trainer's job), so the loss values must agree
+    too."""
+    stage, chunk = cfg.stages - 1, cfg.virtual_stages - 1
+    plan, cp, pdicts = seg_states(cfg, stage, chunk, tp)
+    x = chunk_input(cfg, stage, chunk)
+    targets = jax.random.randint(
+        jax.random.PRNGKey(5), (cfg.micro_batch, cfg.seq), 0, cfg.vocab)
+    aux_in = jnp.float32(0.125)  # ring-threaded upstream aux
+
+    loss_ref, vjp_fn = jax.vjp(
+        lambda pp, xx: model.last_stage_loss(pp, xx, targets, aux_in, cfg),
+        cp, x)
+    dp_ref, dx_ref = vjp_fn(jnp.float32(1.0))
+
+    _, own_aux, stash = run_segmented_fwd(
+        cfg, stage, chunk, tp, plan, pdicts, x)
+    loss_seg, dx_seg, grads = run_segmented_bwd(
+        cfg, stage, chunk, tp, plan, pdicts, stash, None,
+        targets=targets, aux_in=aux_in + own_aux)
+    tol(loss_seg, loss_ref, f"{name} loss", rtol=1e-5, atol=1e-6)
+    if cfg.stages > 1 or cfg.virtual_stages > 1:
+        tol(dx_seg, dx_ref, f"{name} loss dx")
+    got = flatten_grad_dict(combine_param_grads(plan, pdicts, grads, tp))
+    want = flatten_grad_dict(dp_ref)
+    assert set(got) == set(want)
+    for pname in want:
+        tol(got[pname], want[pname], f"{name} loss grad {pname}")

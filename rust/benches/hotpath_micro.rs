@@ -69,6 +69,38 @@ fn main() {
         }
     }
 
+    println!("\n=== tp combine (live all-reduce vs serial rank-order sum) ===");
+    // the inner-node combine of the live `--tp` trainer (per MoE segment,
+    // forward y + backward d(hgt)) vs the emulate_tp serial reference —
+    // bitwise-identical results, so the delta is pure coordination cost.
+    // Sized like a tiny-config boundary activation (b·s·h = 2·32·64).
+    {
+        let act = 2 * 32 * 64;
+        for ranks in [2usize, 4] {
+            results.push(bench(&format!("tp_combine/live r={ranks} act"), || {
+                let g = AllReduceGroup::with_algo(ranks, Algo::Chunked);
+                let handles: Vec<_> = (0..ranks)
+                    .map(|r| {
+                        let g: Arc<AllReduceGroup> = g.clone();
+                        std::thread::spawn(move || {
+                            let v = vec![r as f32; act];
+                            g.all_reduce_as(r, &v)[0]
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum::<f32>()
+            }));
+            let parts: Vec<Vec<f32>> =
+                (0..ranks).map(|r| vec![r as f32; act]).collect();
+            let mut out = Vec::with_capacity(act);
+            results.push(bench(&format!("tp_combine/serial r={ranks} act"), || {
+                let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+                ppmoe::tp::rank_order_sum_into(&refs, &mut out);
+                out[0]
+            }));
+        }
+    }
+
     println!("\n=== PJRT boundary (per-micro serialize vs device-resident) ===");
     {
         let client = xla::PjRtClient::cpu().expect("stub cpu client");

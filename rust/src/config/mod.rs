@@ -164,6 +164,26 @@ impl ParallelCfg {
         2.0 * (self.dp as f64 - 1.0) / self.dp as f64 * slice
     }
 
+    /// Activation-element volume one rank moves per training step through
+    /// the PPMoE expert combines: each MoE layer resident on the rank
+    /// costs ONE inner-node all-reduce of the boundary activation in the
+    /// forward (the partial `y`) and one in the backward (the partial
+    /// `d(hgt)`), ring volume `2·(tp−1)/tp` per element per round. The
+    /// index-slice dispatch itself moves **zero** wire bytes (§3.3.3) —
+    /// that is the scheme's whole advantage over DPMoE's two all-to-alls,
+    /// and this accessor is the wire math docs/hotpath.md §Tensor-parallel
+    /// experts quotes. Multiply by `ClusterCfg::wire_bytes` for bytes.
+    pub fn tp_combine_volume(&self, m: &ModelDims, tc: &TrainCfg) -> f64 {
+        if self.tp <= 1 || self.scheme != Scheme::PpMoE {
+            return 0.0;
+        }
+        let moe_here = m.moe_layers() as f64 / self.pp.max(1) as f64;
+        let act = (tc.micro_batch * m.seq * m.hidden) as f64;
+        let ring = 2.0 * (self.tp as f64 - 1.0) / self.tp as f64;
+        // forward y combine + backward d(hgt) combine, per microbatch
+        2.0 * tc.num_micro as f64 * moe_here * ring * act
+    }
+
     /// Validate divisibility constraints against a model + cluster.
     pub fn validate(&self, m: &ModelDims, c: &ClusterCfg) -> anyhow::Result<()> {
         if self.world() == 0 || self.world() > c.gpus {
@@ -486,6 +506,31 @@ mod tests {
         let v4 = ParallelCfg { dp: 4, ..base }.dp_sync_param_volume(&m);
         let v64 = ParallelCfg { dp: 64, ..base }.dp_sync_param_volume(&m);
         assert!(v2 < v4 && v4 < v64 && v64 < 2.0 * slice);
+    }
+
+    #[test]
+    fn tp_combine_volume_wire_math() {
+        let m = moe_small_setting();
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        let base = ParallelCfg {
+            dp: 1, tp: 8, pp: 4, ep: 8, zero: false, scheme: Scheme::PpMoE,
+        };
+        // tp = 1 and non-PPMoE schemes move nothing through the combine
+        assert_eq!(ParallelCfg { tp: 1, ep: 1, ..base }.tp_combine_volume(&m, &tc), 0.0);
+        assert_eq!(
+            ParallelCfg { scheme: Scheme::DpMoE, ..base }.tp_combine_volume(&m, &tc),
+            0.0
+        );
+        // closed form: 2 (fwd+bwd) · m · (moe_layers/pp) · 2(tp−1)/tp · b·s·h
+        let v8 = base.tp_combine_volume(&m, &tc);
+        let act = (tc.micro_batch * m.seq * m.hidden) as f64;
+        let expect = 2.0 * 16.0 * (m.moe_layers() as f64 / 4.0) * (2.0 * 7.0 / 8.0) * act;
+        assert!((v8 - expect).abs() < 1.0, "{v8} vs {expect}");
+        // volume grows monotonically in tp toward 2× and in micros linearly
+        let v2 = ParallelCfg { tp: 2, ..base }.tp_combine_volume(&m, &tc);
+        assert!(v2 < v8 && v8 < 2.0 * v2, "{v2} vs {v8}");
+        let tc2 = TrainCfg { micro_batch: 8, num_micro: 32 };
+        assert!((base.tp_combine_volume(&m, &tc2) - 2.0 * v8).abs() < 1.0);
     }
 
     #[test]

@@ -35,6 +35,11 @@ COMMANDS:
                                   bucketed reduce-scatter overlapped with
                                   the backward; --micro is the GLOBAL
                                   microbatch count, split across replicas)
+                --tp N            tensor-parallel expert ranks per stage:
+                                  index-slice dispatch + inner-node
+                                  all-reduce, no all-to-all (needs
+                                  artifacts exported with
+                                  `compile.aot --tp N --tp-pipeline`)
                 --no-dp-overlap   serialize gradient sync to the step end
                                   (A/B timing; bitwise-identical losses)
                 --checkpoint DIR  write params + per-rank sharded
@@ -107,16 +112,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         overlap_wrap_edges: !args.has_flag("no-overlap"),
         dp: args.get_usize("dp", 1)?,
         overlap_dp_sync: !args.has_flag("no-dp-overlap"),
+        tp: args.get_usize("tp", 1)?,
         emulate_dp: 0,
+        emulate_tp: 0,
     };
     let report = trainer::train(&cfg)?;
     println!("\n=== training report ===");
     println!("steps: {}", report.steps.len());
     println!("final loss: {:.4}", report.final_loss);
     println!("throughput: {:.0} tokens/s", report.tokens_per_sec);
-    for (replica, stage, t) in report.worker_timers() {
-        if report.dp > 1 {
-            println!("replica {replica} stage {stage} time breakdown:");
+    for (replica, stage, tp_rank, t) in report.worker_timers() {
+        if report.dp > 1 || report.tp > 1 {
+            println!("replica {replica} stage {stage} tp {tp_rank} time breakdown:");
         } else {
             println!("stage {stage} time breakdown:");
         }
@@ -167,6 +174,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     println!("step time:        {:.1} ms", r.step_seconds * 1e3);
     println!("throughput:       {:.0} tokens/s/GPU", r.tokens_per_sec_per_gpu);
     println!("pipeline bubble:  {:.1}%", r.bubble_fraction * 100.0);
+    if tp > 1 {
+        println!(
+            "tp collectives:   {:.1} ms/step inside the walk ({:.1} M \
+             combine elems/rank; dispatch itself is 0 wire bytes)",
+            r.tp_comm_seconds * 1e3,
+            p.tp_combine_volume(&model, &tables::SWEEP_TC) / 1e6
+        );
+    }
     if overlap_dp {
         println!(
             "dp grad sync:     {:.1} ms exposed + {:.1} ms hidden under backward",

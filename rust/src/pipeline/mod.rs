@@ -237,6 +237,14 @@ pub fn peak_activations(kind: Schedule, stages: usize, micros: usize, stage: usi
 /// overlap). Under 1F1B the boundaries are spread across the drain tail —
 /// chunk v−1 completes first, chunk 0 last — which is what gives the
 /// overlap its window.
+///
+/// The boundary is also where the tensor-parallel trainer combines its
+/// `Summed`-class (gating-weight) gradient partials across the tp group —
+/// necessarily *before* the dp bucket is flattened, so the reduce-scatter
+/// ships tp-true gradients (docs/hotpath.md §Tensor-parallel experts).
+/// Every tp rank of a stage executes the identical op stream, so the
+/// boundary fires at the same op index on all of them and the combine
+/// needs no extra synchronization machinery.
 pub fn chunk_grad_ready(ops: &[Op], v: usize) -> Vec<Option<usize>> {
     let mut last = vec![None; v];
     for (i, op) in ops.iter().enumerate() {

@@ -48,6 +48,13 @@ impl DeviceTensor {
         &self.buf
     }
 
+    /// Take ownership of the underlying buffer — how the trainer's segment
+    /// walk stashes one segment's device-resident output as the next
+    /// segment's backward-time input.
+    pub fn into_buffer(self) -> xla::PjRtBuffer {
+        self.buf
+    }
+
     /// Scalar readback (loss / aux coefficients): transfers one element,
     /// not the tensor.
     pub fn item(&self) -> Result<f32> {

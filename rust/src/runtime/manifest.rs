@@ -115,6 +115,182 @@ pub struct ChunkSpec {
     pub params: usize,
 }
 
+/// Gradient class of one parameter under tensor-parallel execution — the
+/// contract between the aot export's `grad` tags and the trainer's tp
+/// gradient combine + clip-norm decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradClass {
+    /// Every tp rank computes the identical (true) gradient — glue params:
+    /// all their backward inputs and cotangents are replicated once d(hgt)
+    /// has been all-reduced. No communication needed.
+    Replicated,
+    /// Rank gradients are partial and the true gradient is their rank-order
+    /// sum — the gating weights `wg` (each rank only sees its local
+    /// experts' dispatch slice; rank 0 additionally carries the aux path).
+    Summed,
+    /// Rank-local exact gradient — the per-rank expert weight slices.
+    Local,
+}
+
+impl GradClass {
+    fn from_tag(s: &str) -> Result<GradClass> {
+        match s {
+            "rep" => Ok(GradClass::Replicated),
+            "sum" => Ok(GradClass::Summed),
+            "loc" => Ok(GradClass::Local),
+            _ => bail!("unknown grad class tag '{s}'"),
+        }
+    }
+}
+
+/// Kind of one execution segment of a chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    /// Replicated compute (dense blocks, attention, LayerNorms) — runs
+    /// identically on every tp rank. The monolithic per-chunk artifacts of
+    /// a tp = 1 run are the degenerate single-glue case.
+    Glue,
+    /// One rank's expert-sharded MoE partial: outputs are summed across
+    /// the tp group by the inner-node all-reduce (forward y, backward
+    /// d(hgt)); `wg` grads combine at the chunk-gradient-ready boundary.
+    Moe,
+    /// The loss chunk's fused fwd+loss+bwd tail (replicated) — `lossgrad`
+    /// when the whole chunk is one segment.
+    LossTail,
+}
+
+/// One execution segment of one chunk: which artifacts run it and how its
+/// I/O is shaped. The flags drive the trainer's uniform segment walk:
+///
+/// * `xy` — forward consumes the `(x_res, y_combined)` pair left by a
+///   preceding MoE combine (the residual add lives inside the segment);
+/// * `pair` — forward produces `(x_res, hgt)` feeding an MoE cut;
+/// * `aux` — forward emits an aux scalar / backward takes a `daux`
+///   cotangent (monolithic glue and MoE segments);
+/// * `dx` — backward emits cotangents for the segment's activation inputs
+///   (everything except the token-consuming opener of virtual stage 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegSpec {
+    /// Segment kind.
+    pub kind: SegKind,
+    /// Forward artifact (None for the fused loss tail).
+    pub fwd: Option<String>,
+    /// Backward artifact (the fused loss tail's single artifact).
+    pub bwd: String,
+    /// Parameter tensors this segment owns (a contiguous run of the
+    /// stage's per-rank parameter list).
+    pub params: usize,
+    /// Forward input is the (x, y) pair.
+    pub xy: bool,
+    /// Forward output is the (x_res, hgt) pair.
+    pub pair: bool,
+    /// Aux scalar crosses this segment's boundary.
+    pub aux: bool,
+    /// Backward emits dx for the activation input(s).
+    pub dx: bool,
+}
+
+impl SegSpec {
+    /// Number of forward activation inputs (1, or 2 after a combine).
+    pub fn n_ins(&self) -> usize {
+        if self.xy {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Number of forward-output cotangents the backward takes.
+    pub fn n_cts(&self) -> usize {
+        if self.pair {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Number of dx outputs the backward emits.
+    pub fn n_dx(&self) -> usize {
+        if self.dx {
+            self.n_ins()
+        } else {
+            0
+        }
+    }
+}
+
+/// One tp rank's complete view of one stage: its parameter bin + layout
+/// (with gradient classes) and the per-chunk segment plans. A tp = 1 run
+/// uses the view synthesized from the plain manifest tables
+/// ([`Manifest::stage_view`]), so the trainer's execution walk is uniform.
+#[derive(Debug, Clone)]
+pub struct TpStageView {
+    /// Parameter bin path inside the artifacts dir.
+    pub bin: String,
+    /// Expected bin size.
+    pub total_bytes: usize,
+    /// Per-tensor layout, in execution (chunk-major, segment-major) order.
+    pub params: Vec<ParamSpec>,
+    /// Gradient class per parameter (aligned with `params`).
+    pub grad_class: Vec<GradClass>,
+    /// Per-chunk segment plans (`chunks[chunk][seg]`).
+    pub chunks: Vec<Vec<SegSpec>>,
+}
+
+impl TpStageView {
+    /// The contiguous range of this stage's parameter tensors owned by
+    /// `chunk` (the tp analogue of [`Manifest::chunk_param_range`]).
+    pub fn chunk_param_range(&self, chunk: usize) -> std::ops::Range<usize> {
+        let count = |c: &Vec<SegSpec>| c.iter().map(|s| s.params).sum::<usize>();
+        let lo: usize = self.chunks[..chunk].iter().map(count).sum();
+        lo..lo + count(&self.chunks[chunk])
+    }
+
+    /// The contiguous parameter range of one segment, as indices into the
+    /// stage-level parameter list.
+    pub fn seg_param_range(&self, chunk: usize, seg: usize) -> std::ops::Range<usize> {
+        let base = self.chunk_param_range(chunk).start;
+        let lo: usize =
+            base + self.chunks[chunk][..seg].iter().map(|s| s.params).sum::<usize>();
+        lo..lo + self.chunks[chunk][seg].params
+    }
+
+    /// Tensor indices (stage-level) of `chunk`'s [`GradClass::Summed`]
+    /// parameters — what the tp gradient combine all-reduces.
+    pub fn summed_tensor_ids(&self, chunk: usize) -> Vec<usize> {
+        self.chunk_param_range(chunk)
+            .filter(|&i| self.grad_class[i] == GradClass::Summed)
+            .collect()
+    }
+
+    /// Flat CHUNK-LOCAL element ranges of `chunk`'s [`GradClass::Local`]
+    /// parameters, ascending — the clip-norm mask for tp ranks > 0 (whose
+    /// non-local gradients are identical to rank 0's and must be counted
+    /// exactly once in the stage norm).
+    pub fn local_elem_ranges(&self, chunk: usize) -> Vec<std::ops::Range<usize>> {
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        for i in self.chunk_param_range(chunk) {
+            let n = self.params[i].numel;
+            if self.grad_class[i] == GradClass::Local {
+                out.push(off..off + n);
+            }
+            off += n;
+        }
+        out
+    }
+}
+
+/// The tp-pipeline execution table of a `--tp-pipeline` export: one
+/// [`TpStageView`] per (rank, stage).
+#[derive(Debug, Clone)]
+pub struct TpExec {
+    /// Tensor-parallel degree the segment artifacts were exported for.
+    pub tp: usize,
+    /// Per-rank per-stage views (`ranks[rank][stage]`).
+    pub ranks: Vec<Vec<TpStageView>>,
+}
+
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
@@ -128,8 +304,130 @@ pub struct Manifest {
     /// `stages` for plain manifests without a `chunks` section, so the
     /// trainer can be uniformly chunk-aware.
     pub chunks: Vec<Vec<ChunkSpec>>,
+    /// Live tensor-parallel execution table (`--tp-pipeline` exports only).
+    pub tp_exec: Option<TpExec>,
     /// All AOT-compiled functions by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn param_spec(p: &Json) -> Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: p.req("name")?.as_str().context("name")?.to_string(),
+        shape: p
+            .req("shape")?
+            .as_arr()
+            .context("shape")?
+            .iter()
+            .map(|v| v.as_usize().context("dim"))
+            .collect::<Result<_>>()?,
+        offset: p.req("offset")?.as_usize().context("offset")?,
+        numel: p.req("numel")?.as_usize().context("numel")?,
+    })
+}
+
+fn parse_tp_exec(te: &Json, model: &ModelInfo) -> Result<TpExec> {
+    let tp = te.req("tp")?.as_usize().context("tp_exec.tp")?;
+    if tp < 2 {
+        bail!("tp_exec.tp must be at least 2, got {tp}");
+    }
+    let ranks = te
+        .req("ranks")?
+        .as_arr()
+        .context("tp_exec.ranks")?
+        .iter()
+        .map(|rank_stages| {
+            rank_stages
+                .as_arr()
+                .context("tp_exec rank entry")?
+                .iter()
+                .map(|st| {
+                    let mut params = Vec::new();
+                    let mut grad_class = Vec::new();
+                    for p in st.req("params")?.as_arr().context("params")? {
+                        params.push(param_spec(p)?);
+                        grad_class.push(GradClass::from_tag(
+                            p.req("grad")?.as_str().context("grad")?,
+                        )?);
+                    }
+                    let chunks = st
+                        .req("chunks")?
+                        .as_arr()
+                        .context("chunks")?
+                        .iter()
+                        .map(|segs| {
+                            segs.as_arr()
+                                .context("chunk segs")?
+                                .iter()
+                                .map(|s| {
+                                    let flag = |k: &str| -> Result<bool> {
+                                        s.req(k)?.as_bool().with_context(|| k.to_string())
+                                    };
+                                    Ok(SegSpec {
+                                        kind: match s
+                                            .req("kind")?
+                                            .as_str()
+                                            .context("kind")?
+                                        {
+                                            "glue" => SegKind::Glue,
+                                            "moe" => SegKind::Moe,
+                                            "losstail" => SegKind::LossTail,
+                                            k => bail!("unknown segment kind '{k}'"),
+                                        },
+                                        fwd: s
+                                            .get("fwd")
+                                            .and_then(Json::as_str)
+                                            .map(str::to_string),
+                                        bwd: s.req("bwd")?.as_str().context("bwd")?.to_string(),
+                                        params: s.req("params")?.as_usize().context("params")?,
+                                        xy: flag("xy")?,
+                                        pair: flag("pair")?,
+                                        aux: flag("aux")?,
+                                        dx: flag("dx")?,
+                                    })
+                                })
+                                .collect::<Result<Vec<_>>>()
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    let view = TpStageView {
+                        bin: st.req("bin")?.as_str().context("bin")?.to_string(),
+                        total_bytes: st.req("total_bytes")?.as_usize().context("total")?,
+                        params,
+                        grad_class,
+                        chunks,
+                    };
+                    let seg_total: usize = view
+                        .chunks
+                        .iter()
+                        .flat_map(|c| c.iter().map(|s| s.params))
+                        .sum();
+                    if seg_total != view.params.len() {
+                        bail!(
+                            "tp_exec stage: segment params sum {seg_total} vs \
+                             {} layout entries",
+                            view.params.len()
+                        );
+                    }
+                    if view.chunks.len() != model.virtual_stages {
+                        bail!(
+                            "tp_exec stage: {} chunks vs virtual_stages {}",
+                            view.chunks.len(),
+                            model.virtual_stages
+                        );
+                    }
+                    Ok(view)
+                })
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if ranks.len() != tp {
+        bail!("tp_exec: {} rank tables vs tp={tp}", ranks.len());
+    }
+    for rs in &ranks {
+        if rs.len() != model.stages {
+            bail!("tp_exec rank: {} stages vs model {}", rs.len(), model.stages);
+        }
+    }
+    Ok(TpExec { tp, ranks })
 }
 
 fn tensor_spec(j: &Json) -> Result<TensorSpec> {
@@ -195,20 +493,7 @@ impl Manifest {
                     .as_arr()
                     .context("params")?
                     .iter()
-                    .map(|p| {
-                        Ok(ParamSpec {
-                            name: p.req("name")?.as_str().context("name")?.to_string(),
-                            shape: p
-                                .req("shape")?
-                                .as_arr()
-                                .context("shape")?
-                                .iter()
-                                .map(|v| v.as_usize().context("dim"))
-                                .collect::<Result<_>>()?,
-                            offset: p.req("offset")?.as_usize().context("offset")?,
-                            numel: p.req("numel")?.as_usize().context("numel")?,
-                        })
-                    })
+                    .map(param_spec)
                     .collect::<Result<Vec<_>>>()?;
                 Ok(StageParams {
                     bin: s.req("bin")?.as_str().context("bin")?.to_string(),
@@ -307,12 +592,86 @@ impl Manifest {
             })
             .collect::<Result<BTreeMap<_, _>>>()?;
 
-        Ok(Manifest { model, tp, stages, chunks, artifacts })
+        let tp_exec = match j.get("tp_exec") {
+            Some(te) => Some(parse_tp_exec(te, &model)?),
+            None => None,
+        };
+
+        Ok(Manifest { model, tp, stages, chunks, tp_exec, artifacts })
     }
 
     /// Number of parameter tensors of an artifact (inputs before x/dy/...).
     pub fn param_count(&self, stage: usize) -> usize {
         self.stages[stage].params.len()
+    }
+
+    /// One tp rank's execution view of a stage for a `tp`-way run.
+    ///
+    /// `tp == 1` synthesizes the single-rank view from the plain manifest
+    /// tables — each chunk becomes one glue segment over its monolithic
+    /// fwd/bwd artifacts (the loss chunk one fused [`SegKind::LossTail`])
+    /// with every gradient [`GradClass::Replicated`] — so the trainer's
+    /// segment walk executes EXACTLY the historic per-chunk path. `tp > 1`
+    /// requires the manifest's `tp_exec` table with a matching degree
+    /// (`aot.py --tp-pipeline`).
+    pub fn stage_view(&self, stage: usize, rank: usize, tp: usize) -> Result<TpStageView> {
+        if tp <= 1 {
+            let sp = self
+                .stages
+                .get(stage)
+                .with_context(|| format!("stage {stage} not in manifest"))?;
+            let chunks = self.chunks[stage]
+                .iter()
+                .enumerate()
+                .map(|(c, ch)| {
+                    let loss = ch.fwd.is_none();
+                    vec![SegSpec {
+                        kind: if loss { SegKind::LossTail } else { SegKind::Glue },
+                        fwd: ch.fwd.clone(),
+                        bwd: ch.bwd.clone(),
+                        params: ch.params,
+                        xy: false,
+                        pair: false,
+                        aux: !loss,
+                        // the monolithic `lossgrad` artifact emits dx
+                        // unconditionally (even in the degenerate
+                        // single-virtual-stage case where its input is
+                        // tokens), so the loss tail's view must match it;
+                        // only the token-consuming pipeline opener has none
+                        dx: loss || !(stage == 0 && c == 0),
+                    }]
+                })
+                .collect();
+            return Ok(TpStageView {
+                bin: sp.bin.clone(),
+                total_bytes: sp.total_bytes,
+                params: sp.params.clone(),
+                grad_class: vec![GradClass::Replicated; sp.params.len()],
+                chunks,
+            });
+        }
+        let te = self.tp_exec.as_ref().with_context(|| {
+            format!(
+                "artifacts have no tp_exec table — re-export with \
+                 `python -m compile.aot --tp {tp} --tp-pipeline` to train \
+                 with --tp {tp}"
+            )
+        })?;
+        if te.tp != tp {
+            bail!(
+                "artifacts were tp-pipeline-exported for tp={}, cannot run \
+                 --tp {tp} (re-export with `python -m compile.aot --tp {tp} \
+                 --tp-pipeline`)",
+                te.tp
+            );
+        }
+        let rs = te
+            .ranks
+            .get(rank)
+            .with_context(|| format!("tp rank {rank} out of {}", te.tp))?;
+        rs.get(stage)
+            .cloned()
+            .with_context(|| format!("stage {stage} not in tp_exec"))
     }
 
     /// The contiguous range of `stage`'s parameter tensors owned by
@@ -411,6 +770,143 @@ mod tests {
         assert_eq!(m.chunks[1][1].fwd, None);
         assert_eq!(m.chunks[1][1].bwd, "lossgrad");
         assert_eq!(m.chunk_param_range(1, 1), 1..2);
+    }
+
+    const TP_EXEC: &str = r#"{
+      "config_name": "tiny",
+      "config": {"vocab": 256, "hidden": 64, "ffn": 256, "layers": 2,
+                 "heads": 4, "experts": 4, "moe_every": 2, "seq": 32,
+                 "micro_batch": 2, "stages": 1, "aux_coef": 0.01,
+                 "block_c": 32, "block_t": 64},
+      "tp": 2,
+      "stages": [
+        {"bin": "params/stage0.bin", "total_bytes": 12,
+         "params": [{"name": "a", "shape": [2], "offset": 0, "numel": 2},
+                    {"name": "b", "shape": [1], "offset": 8, "numel": 1}]}
+      ],
+      "artifacts": {},
+      "tp_exec": {"tp": 2, "ranks": [
+        [{"bin": "params/stage0.tp0of2.bin", "total_bytes": 24,
+          "params": [
+            {"name": "c0.seg0.x", "shape": [2], "offset": 0, "numel": 2, "grad": "rep"},
+            {"name": "c0.seg1.wg", "shape": [1], "offset": 8, "numel": 1, "grad": "sum"},
+            {"name": "c0.seg1.w1", "shape": [2], "offset": 12, "numel": 2, "grad": "loc"},
+            {"name": "c0.seg2.t", "shape": [1], "offset": 20, "numel": 1, "grad": "rep"}],
+          "chunks": [[
+            {"kind": "glue", "fwd": "s0c0seg0_fwd", "bwd": "s0c0seg0_bwd",
+             "params": 1, "xy": false, "pair": true, "aux": false, "dx": false},
+            {"kind": "moe", "fwd": "s0c0seg1_moe0_fwd", "bwd": "s0c0seg1_moe0_bwd",
+             "params": 2, "xy": false, "pair": false, "aux": true, "dx": true},
+            {"kind": "losstail", "fwd": null, "bwd": "s0c0seg2_losstail",
+             "params": 1, "xy": true, "pair": false, "aux": false, "dx": true}
+          ]]}],
+        [{"bin": "params/stage0.tp1of2.bin", "total_bytes": 24,
+          "params": [
+            {"name": "c0.seg0.x", "shape": [2], "offset": 0, "numel": 2, "grad": "rep"},
+            {"name": "c0.seg1.wg", "shape": [1], "offset": 8, "numel": 1, "grad": "sum"},
+            {"name": "c0.seg1.w1", "shape": [2], "offset": 12, "numel": 2, "grad": "loc"},
+            {"name": "c0.seg2.t", "shape": [1], "offset": 20, "numel": 1, "grad": "rep"}],
+          "chunks": [[
+            {"kind": "glue", "fwd": "s0c0seg0_fwd", "bwd": "s0c0seg0_bwd",
+             "params": 1, "xy": false, "pair": true, "aux": false, "dx": false},
+            {"kind": "moe", "fwd": "s0c0seg1_moe1_fwd", "bwd": "s0c0seg1_moe1_bwd",
+             "params": 2, "xy": false, "pair": false, "aux": true, "dx": true},
+            {"kind": "losstail", "fwd": null, "bwd": "s0c0seg2_losstail",
+             "params": 1, "xy": true, "pair": false, "aux": false, "dx": true}
+          ]]}]
+      ]}
+    }"#;
+
+    #[test]
+    fn parses_tp_exec_table() {
+        let m = Manifest::parse(TP_EXEC).unwrap();
+        let te = m.tp_exec.as_ref().unwrap();
+        assert_eq!(te.tp, 2);
+        assert_eq!(te.ranks.len(), 2);
+        let v = &te.ranks[1][0];
+        assert_eq!(v.bin, "params/stage0.tp1of2.bin");
+        assert_eq!(v.grad_class[1], GradClass::Summed);
+        assert_eq!(v.grad_class[2], GradClass::Local);
+        let segs = &v.chunks[0];
+        assert_eq!(segs[0].kind, SegKind::Glue);
+        assert!(segs[0].pair && !segs[0].dx);
+        assert_eq!(segs[1].kind, SegKind::Moe);
+        assert_eq!(segs[1].fwd.as_deref(), Some("s0c0seg1_moe1_fwd"));
+        assert_eq!(segs[2].kind, SegKind::LossTail);
+        assert_eq!(segs[2].fwd, None);
+        assert!(segs[2].xy);
+        // seg arities
+        assert_eq!(segs[2].n_ins(), 2);
+        assert_eq!(segs[0].n_cts(), 2);
+        assert_eq!(segs[0].n_dx(), 0);
+        assert_eq!(segs[2].n_dx(), 2);
+    }
+
+    #[test]
+    fn stage_view_resolves_tp_ranks_and_ranges() {
+        let m = Manifest::parse(TP_EXEC).unwrap();
+        let v = m.stage_view(0, 0, 2).unwrap();
+        assert_eq!(v.chunk_param_range(0), 0..4);
+        assert_eq!(v.seg_param_range(0, 0), 0..1);
+        assert_eq!(v.seg_param_range(0, 1), 1..3);
+        assert_eq!(v.seg_param_range(0, 2), 3..4);
+        assert_eq!(v.summed_tensor_ids(0), vec![1]);
+        // chunk-local flat element ranges of the Local-class params:
+        // [x(2), wg(1), w1(2), t(1)] -> w1 covers elements 3..5
+        assert_eq!(v.local_elem_ranges(0), vec![3..5]);
+        // out-of-range ranks/degrees fail loudly
+        assert!(m.stage_view(0, 2, 2).is_err());
+        assert!(m.stage_view(0, 0, 4).unwrap_err().to_string().contains("tp=2"));
+    }
+
+    #[test]
+    fn stage_view_synthesizes_single_rank_from_plain_tables() {
+        // the tp = 1 view of a plain manifest is one glue/losstail segment
+        // per chunk over the monolithic artifacts — the historic path
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.stage_view(0, 0, 1).unwrap();
+        assert_eq!(v.bin, "params/stage0.bin");
+        assert_eq!(v.chunks.len(), 1);
+        let seg = &v.chunks[0][0];
+        assert_eq!(seg.kind, SegKind::LossTail);
+        assert_eq!(seg.bwd, "lossgrad");
+        assert!(!seg.xy && !seg.pair && !seg.aux);
+        // lossgrad always emits dx (even for this single-stage sample
+        // where the chunk input is tokens) — the view must mirror the
+        // artifact's output arity or the grads would shift by one
+        assert!(seg.dx);
+        assert!(v.grad_class.iter().all(|g| *g == GradClass::Replicated));
+        // chunked plain manifest: glue segments carry aux + dx except (0,0)
+        let m = Manifest::parse(CHUNKED).unwrap();
+        let v0 = m.stage_view(0, 0, 1).unwrap();
+        assert_eq!(v0.chunks[0][0].kind, SegKind::Glue);
+        assert!(v0.chunks[0][0].aux);
+        assert!(!v0.chunks[0][0].dx, "(0, 0) consumes tokens: no dx");
+        assert!(v0.chunks[1][0].dx);
+        let v1 = m.stage_view(1, 0, 1).unwrap();
+        assert_eq!(v1.chunks[1][0].kind, SegKind::LossTail);
+        assert_eq!(v1.seg_param_range(1, 0), 1..2);
+        // requesting tp > 1 without a tp_exec table names the fix
+        let err = m.stage_view(0, 0, 2).unwrap_err().to_string();
+        assert!(err.contains("--tp-pipeline"), "{err}");
+    }
+
+    #[test]
+    fn rejects_inconsistent_tp_exec() {
+        // rank count must match tp
+        let bad = TP_EXEC.replace(r#""tp_exec": {"tp": 2"#, r#""tp_exec": {"tp": 3"#);
+        assert!(Manifest::parse(&bad).is_err());
+        // segment param counts must sum to the layout length
+        let bad = TP_EXEC.replace(
+            r#""kind": "losstail", "fwd": null, "bwd": "s0c0seg2_losstail",
+             "params": 1"#,
+            r#""kind": "losstail", "fwd": null, "bwd": "s0c0seg2_losstail",
+             "params": 2"#,
+        );
+        assert!(Manifest::parse(&bad).is_err());
+        // unknown grad class tag
+        let bad = TP_EXEC.replace(r#""grad": "sum""#, r#""grad": "what""#);
+        assert!(Manifest::parse(&bad).is_err());
     }
 
     #[test]

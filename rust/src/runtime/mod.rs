@@ -16,7 +16,8 @@ pub mod tensor;
 
 pub use device::DeviceTensor;
 pub use manifest::{
-    ArtifactSpec, ChunkSpec, DType, Manifest, ParamSpec, StageParams, TensorSpec,
+    ArtifactSpec, ChunkSpec, DType, GradClass, Manifest, ParamSpec, SegKind, SegSpec,
+    StageParams, TensorSpec, TpExec, TpStageView,
 };
 pub use tensor::Tensor;
 
@@ -261,17 +262,24 @@ impl Runtime {
             .stages
             .get(stage)
             .with_context(|| format!("stage {stage} not in manifest"))?;
-        let bytes = std::fs::read(self.dir.join(&sp.bin))
-            .with_context(|| format!("reading {}", sp.bin))?;
-        if bytes.len() != sp.total_bytes {
-            bail!(
-                "{}: expected {} bytes, got {}",
-                sp.bin,
-                sp.total_bytes,
-                bytes.len()
-            );
+        self.load_params_bin(&sp.bin, &sp.params, sp.total_bytes)
+    }
+
+    /// Load a parameter bin by explicit layout — the tp-rank counterpart of
+    /// [`Runtime::load_stage_params`] (each rank's [`TpStageView`] names
+    /// its own bin and layout).
+    pub fn load_params_bin(
+        &self,
+        bin: &str,
+        specs: &[manifest::ParamSpec],
+        total_bytes: usize,
+    ) -> Result<Vec<Tensor>> {
+        let bytes = std::fs::read(self.dir.join(bin))
+            .with_context(|| format!("reading {bin}"))?;
+        if bytes.len() != total_bytes {
+            bail!("{}: expected {} bytes, got {}", bin, total_bytes, bytes.len());
         }
-        sp.params
+        specs
             .iter()
             .map(|p| {
                 let start = p.offset;

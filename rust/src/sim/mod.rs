@@ -331,7 +331,21 @@ impl Simulator {
     ///   regime docs/hotpath.md §Data-parallel overlap describes.
     pub fn step_virtual_dp(&self, tc: TrainCfg, v: usize, overlap_dp: bool) -> StepResult {
         let bt = Batch { b: tc.micro_batch, s: self.m.seq };
-        let stage_fwd = self.stage_forward(bt).total();
+        let fwd_bd = self.stage_forward(bt);
+        let stage_fwd = fwd_bd.total();
+        // the tensor axis the stage timing already obeys, broken out for
+        // reporting: per-microbatch tp-group collective time (the PPMoE
+        // expert combine plus the attention/FFN all-reduces — NOT the
+        // DPMoE all-to-alls, which ride the EP group), forward + the 2×
+        // backward — the same model the live trainer's `--tp` pays through
+        // its inner-node all-reduce, so the sweep's dp × tp × pp rows and
+        // `simulate --tp` expose what the axis costs rather than burying
+        // it inside `stage_fwd`
+        let tp_comm = 3.0
+            * (fwd_bd.get(Component::MoeAllReduce)
+                + fwd_bd.get(Component::AttnAllReduce)
+                + fwd_bd.get(Component::FfnAllReduce))
+            * tc.num_micro as f64;
         // backward ≈ 2× forward compute; collective volume matches forward
         // (§3.2 footnote 2), approximated as 2× forward time per stage.
         let stage_bwd = 2.0 * stage_fwd;
@@ -394,6 +408,7 @@ impl Simulator {
             bubble_fraction: pipe.bubble_fraction,
             dp_sync_seconds: dp_sync,
             dp_sync_hidden_seconds: dp_hidden,
+            tp_comm_seconds: tp_comm,
             stage_fwd_seconds: stage_fwd,
         }
     }
@@ -415,6 +430,12 @@ pub struct StepResult {
     /// serialized or at dp = 1): `hidden + exposed` equals the total
     /// bucketed collective cost (v per-chunk rounds).
     pub dp_sync_hidden_seconds: f64,
+    /// Per-step tp-group collective time a rank pays INSIDE the pipeline
+    /// walk (already part of the stage timings; broken out for the sweep's
+    /// dp × tp × pp reporting): the PPMoE expert combine + attention/FFN
+    /// all-reduces, forward and backward, over the step's microbatches.
+    /// 0 at tp = 1.
+    pub tp_comm_seconds: f64,
     /// Per-stage forward compute time.
     pub stage_fwd_seconds: f64,
 }
@@ -590,6 +611,26 @@ mod tests {
         assert_eq!(a.step_seconds, b.step_seconds);
         assert_eq!(a.dp_sync_seconds, 0.0);
         assert_eq!(b.dp_sync_hidden_seconds, 0.0);
+    }
+
+    #[test]
+    fn tp_comm_breakout_tracks_the_tensor_axis() {
+        // the per-step tp collective time is 0 at tp = 1, positive and
+        // monotone in the combine count at tp > 1, and consistent with the
+        // ParallelCfg wire math's zero-dispatch property (index slicing
+        // moves no bytes — only the combines do)
+        let m = moe_small_setting();
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        let one = sim(m.clone(), ppmoe(1, 4), 8).step_virtual_dp(tc, 1, false);
+        assert_eq!(one.tp_comm_seconds, 0.0);
+        let r8 = sim(m.clone(), ppmoe(8, 4), 32).step_virtual_dp(tc, 1, false);
+        assert!(r8.tp_comm_seconds > 0.0);
+        // the breakout is part of the step, not added on top of it
+        assert!(r8.tp_comm_seconds < r8.step_seconds * 3.0);
+        // doubling micros doubles the combine rounds
+        let tc2 = TrainCfg { micro_batch: 8, num_micro: 32 };
+        let r8b = sim(m, ppmoe(8, 4), 32).step_virtual_dp(tc2, 1, false);
+        assert!((r8b.tp_comm_seconds / r8.tp_comm_seconds - 2.0).abs() < 1e-6);
     }
 
     #[test]

@@ -79,6 +79,33 @@ pub fn synth_weights(
     (x, w)
 }
 
+/// Sum rank partials element-wise **in slot order** (rank 0 first), each
+/// element accumulated from 0.0 — bitwise the result every rank receives
+/// from [`AllReduceGroup::all_reduce_as`] over the same contributions
+/// (property-tested below). This is the single definition of the combine
+/// arithmetic shared by the standalone TP×EP runner, the live trainer's
+/// tp groups (which delegate to the collective) and the trainer's
+/// `emulate_tp` serial reference (which calls this directly) — so "live
+/// bitwise-equals emulated" is structural, not a convention.
+pub fn rank_order_sum_into(partials: &[&[f32]], out: &mut Vec<f32>) {
+    let len = partials.first().map_or(0, |p| p.len());
+    out.clear();
+    out.resize(len, 0.0);
+    for p in partials {
+        assert_eq!(p.len(), len, "rank partial length mismatch");
+        for (o, x) in out.iter_mut().zip(*p) {
+            *o += x;
+        }
+    }
+}
+
+/// Allocating convenience wrapper over [`rank_order_sum_into`].
+pub fn rank_order_sum(partials: &[&[f32]]) -> Vec<f32> {
+    let mut out = Vec::new();
+    rank_order_sum_into(partials, &mut out);
+    out
+}
+
 /// Slice expert-major weights `[E, ...]` to ranks' local `[N, ...]` shards.
 pub fn shard_experts(t: &Tensor, ranks: usize) -> Result<Vec<Tensor>> {
     let e = t.shape[0];
@@ -209,6 +236,65 @@ mod tests {
         assert_eq!(shards[0].as_f32().unwrap()[0], 0.0);
         assert_eq!(shards[1].as_f32().unwrap()[0], 12.0);
         assert!(shard_experts(&t, 3).is_err());
+    }
+
+    #[test]
+    fn rank_order_sum_is_bitwise_the_collective_sum() {
+        // the emulate_tp reference combines with rank_order_sum; the live
+        // trainer combines with all_reduce_as — these MUST agree bitwise
+        // for the tp-equivalence contract to be structural
+        use crate::comm::AllReduceGroup;
+        crate::util::prop::forall(
+            "rank-order-sum-vs-collective",
+            97,
+            30,
+            |r| {
+                let n = r.range(1, 5);
+                let len = r.below(40);
+                let mut rng = r.split();
+                let parts: Vec<Vec<f32>> = (0..n)
+                    .map(|_| (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect())
+                    .collect();
+                parts
+            },
+            |parts| {
+                let n = parts.len();
+                let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+                let serial = rank_order_sum(&refs);
+                let group = AllReduceGroup::new(n);
+                let mut results = vec![Vec::new(); n];
+                std::thread::scope(|s| {
+                    for (rank, (out, part)) in
+                        results.iter_mut().zip(parts).enumerate()
+                    {
+                        let group = group.clone();
+                        let _ = s.spawn(move || {
+                            *out = group.all_reduce_as(rank, part).to_vec();
+                        });
+                    }
+                });
+                for (rank, got) in results.iter().enumerate() {
+                    if got != &serial {
+                        return Err(format!("rank {rank} diverged from serial sum"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rank_order_sum_reuses_storage() {
+        let a = [1.0f32, 2.0];
+        let b = [10.0f32, 20.0];
+        let mut out = Vec::with_capacity(2);
+        out.push(99.0); // dirty reused buffer must be irrelevant
+        let ptr = out.as_ptr();
+        rank_order_sum_into(&[&a, &b], &mut out);
+        assert_eq!(out, vec![11.0, 22.0]);
+        assert_eq!(out.as_ptr(), ptr, "buffer must be reused");
+        rank_order_sum_into(&[], &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -116,7 +116,16 @@ impl Adam {
 /// convention to maintain across copies.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn adam_elem(m: &mut f32, v: &mut f32, p: &mut f32, gi: f32, b1: f32, b2: f32, lr_t: f32, eps: f32) {
+fn adam_elem(
+    m: &mut f32,
+    v: &mut f32,
+    p: &mut f32,
+    gi: f32,
+    b1: f32,
+    b2: f32,
+    lr_t: f32,
+    eps: f32,
+) {
     *m = b1 * *m + (1.0 - b1) * gi;
     *v = b2 * *v + (1.0 - b2) * gi * gi;
     *p -= lr_t * *m / (v.sqrt() + eps);
@@ -151,20 +160,77 @@ pub fn global_grad_norm(grads: &[Tensor]) -> Result<f32> {
 /// accumulated left-to-right from 0.0 in f32, exactly like a rank's local
 /// loop over its shard.
 pub fn segmented_sumsq(grads: &[Tensor], nseg: usize) -> Result<Vec<f32>> {
+    let total: usize = grads.iter().map(Tensor::numel).sum();
+    (0..nseg)
+        .map(|r| {
+            let (lo, hi) = segment(r, total, nseg);
+            masked_range_sumsq(grads, lo, hi, None)
+        })
+        .collect()
+}
+
+/// Clip `windows` (ascending, disjoint) to `[lo, hi)`, in order. `None`
+/// means "everything": the single window `[lo, hi)`.
+fn clipped_windows(
+    lo: usize,
+    hi: usize,
+    mask: Option<&[std::ops::Range<usize>]>,
+) -> Vec<std::ops::Range<usize>> {
+    match mask {
+        None => vec![lo..hi],
+        Some(ranges) => ranges
+            .iter()
+            .map(|m| m.start.max(lo)..m.end.min(hi))
+            .filter(|w| w.start < w.end)
+            .collect(),
+    }
+}
+
+/// Sum of squares over the flat element range `[lo, hi)` of a ragged
+/// gradient list, optionally restricted to `mask` (ascending flat ranges —
+/// the tp trainer's [`crate::runtime::TpStageView::local_elem_ranges`]).
+/// One f32 accumulator from 0.0, elements visited in ascending flat order —
+/// the same walk as [`masked_seg_sumsq`], so a reference that reads ragged
+/// accumulated gradients and a live rank that reads its reduce-scattered
+/// flat segment produce the same bits.
+///
+/// This is the tp extension of the canonical clip-norm decomposition: tp
+/// rank 0 contributes the whole (chunk, dp-segment) window, ranks > 0 only
+/// their expert-local elements (their replicated/summed gradients are
+/// bitwise rank 0's and must be counted exactly once in the stage norm).
+pub fn masked_range_sumsq(
+    grads: &[Tensor],
+    lo: usize,
+    hi: usize,
+    mask: Option<&[std::ops::Range<usize>]>,
+) -> Result<f32> {
     let sizes: Vec<usize> = grads.iter().map(Tensor::numel).collect();
-    let total: usize = sizes.iter().sum();
-    let mut out = Vec::with_capacity(nseg);
-    for r in 0..nseg {
-        let (lo, hi) = segment(r, total, nseg);
-        let mut acc = 0.0f32;
-        for (ti, range) in flat_slices(&sizes, lo, hi) {
-            for x in &grads[ti].as_f32()?[range] {
+    let mut acc = 0.0f32;
+    for w in clipped_windows(lo, hi, mask) {
+        for (ti, r) in flat_slices(&sizes, w.start, w.end) {
+            for x in &grads[ti].as_f32()?[r] {
                 acc += x * x;
             }
         }
-        out.push(acc);
     }
-    Ok(out)
+    Ok(acc)
+}
+
+/// [`masked_range_sumsq`] over a flat slice `seg` covering the flat
+/// element range `[seg_lo, seg_lo + seg.len())` — the live dp path, whose
+/// per-rank gradient exists only as the reduce-scattered segment.
+pub fn masked_seg_sumsq(
+    seg: &[f32],
+    seg_lo: usize,
+    mask: Option<&[std::ops::Range<usize>]>,
+) -> f32 {
+    let mut acc = 0.0f32;
+    for w in clipped_windows(seg_lo, seg_lo + seg.len(), mask) {
+        for x in &seg[w.start - seg_lo..w.end - seg_lo] {
+            acc += x * x;
+        }
+    }
+    acc
 }
 
 /// Map a flat element range `[lo, hi)` onto a ragged tensor list: yields
@@ -856,6 +922,75 @@ mod tests {
         let many = segmented_sumsq(&grads, 9).unwrap();
         assert_eq!(many.len(), 9);
         assert_eq!(many.iter().filter(|&&x| x == 0.0).count(), 3);
+    }
+
+    #[test]
+    fn masked_sumsq_ragged_and_flat_agree_bitwise() {
+        // the live dp path (flat reduce-scattered segment) and the
+        // emulated reference (ragged accumulated grads) must walk the same
+        // elements in the same order — property over random shapes/masks
+        forall(
+            "masked-sumsq-paths-agree",
+            53,
+            40,
+            |r| {
+                let mut rng = r.split();
+                let grads = rand_tensors(&mut rng, r.range(1, 4), 25);
+                let total: usize = grads.iter().map(Tensor::numel).sum();
+                // random ascending disjoint mask
+                let mut mask = Vec::new();
+                let mut at = 0usize;
+                while at < total {
+                    let lo = at + rng.below(4);
+                    let hi = lo + 1 + rng.below(5);
+                    if lo >= total {
+                        break;
+                    }
+                    mask.push(lo..hi.min(total));
+                    at = hi + rng.below(3);
+                }
+                let nseg = r.range(1, 5);
+                (grads, mask, nseg)
+            },
+            |(grads, mask, nseg)| {
+                let total: usize = grads.iter().map(Tensor::numel).sum();
+                let mut flat = Vec::new();
+                flatten_grads(grads, &mut flat).unwrap();
+                for seg_i in 0..*nseg {
+                    let (lo, hi) = segment(seg_i, total, *nseg);
+                    for m in [None, Some(mask.as_slice())] {
+                        let a = masked_range_sumsq(grads, lo, hi, m).unwrap();
+                        let b = masked_seg_sumsq(&flat[lo..hi], lo, m);
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "seg {seg_i}/{nseg} mask={} ragged {a} vs flat {b}",
+                                m.is_some()
+                            ));
+                        }
+                    }
+                }
+                // unmasked over the full space == the historic fold
+                let full = masked_range_sumsq(grads, 0, total, None).unwrap();
+                let fold = flat.iter().fold(0.0f32, |a, x| a + x * x);
+                if full.to_bits() != fold.to_bits() {
+                    return Err(format!("full {full} vs fold {fold}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn masked_sumsq_counts_only_mask_elements() {
+        let g = vec![Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![4])];
+        // mask covers elements 1..3 -> 4 + 9
+        let m = vec![1..3];
+        assert_eq!(masked_range_sumsq(&g, 0, 4, Some(&m)).unwrap(), 13.0);
+        // window [2, 4) clips the mask to element 2 only
+        assert_eq!(masked_range_sumsq(&g, 2, 4, Some(&m)).unwrap(), 9.0);
+        assert_eq!(masked_seg_sumsq(&[3.0, 4.0], 2, Some(&m)), 9.0);
+        // empty intersection
+        assert_eq!(masked_range_sumsq(&g, 3, 4, Some(&m)).unwrap(), 0.0);
     }
 
     #[test]

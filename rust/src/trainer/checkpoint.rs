@@ -17,21 +17,33 @@ use anyhow::{bail, Context, Result};
 
 use super::adam::ShardedAdam;
 use crate::data::Corpus;
-use crate::runtime::{Manifest, Runtime, Tensor};
+use crate::runtime::{Manifest, ParamSpec, Runtime, Tensor};
 
-/// Write one stage's parameters as `<dir>/stage<i>.bin` (manifest layout).
-pub fn save_stage(
+/// File name of one (stage, tp-rank)'s parameter checkpoint: tp = 1 keeps
+/// the historic `stage<i>.bin` (drop-in for `artifacts/params/`); under
+/// tensor parallelism every rank's expert-sharded vector is its own file.
+pub fn stage_param_file(stage: usize, tp_rank: usize, tp: usize) -> String {
+    if tp <= 1 {
+        format!("stage{stage}.bin")
+    } else {
+        format!("stage{stage}.tp{tp_rank}of{tp}.bin")
+    }
+}
+
+/// Write a parameter vector against an explicit layout (`<dir>/<file>`) —
+/// the spec-generic core of [`save_stage`], used directly by the tp
+/// trainer with each rank's [`crate::runtime::TpStageView`] layout.
+pub fn save_params_with(
     dir: &Path,
-    stage: usize,
-    manifest: &Manifest,
+    file: &str,
+    specs: &[ParamSpec],
     params: &[Tensor],
 ) -> Result<()> {
     std::fs::create_dir_all(dir)?;
-    let specs = &manifest.stages[stage].params;
     if specs.len() != params.len() {
-        bail!("stage {stage}: {} tensors vs {} specs", params.len(), specs.len());
+        bail!("{file}: {} tensors vs {} specs", params.len(), specs.len());
     }
-    let mut bytes = Vec::with_capacity(manifest.stages[stage].total_bytes);
+    let mut bytes = Vec::with_capacity(specs.iter().map(|s| s.numel * 4).sum());
     for (t, spec) in params.iter().zip(specs) {
         if t.shape != spec.shape {
             bail!("checkpoint shape mismatch for {}", spec.name);
@@ -40,22 +52,26 @@ pub fn save_stage(
             bytes.extend_from_slice(&v.to_le_bytes());
         }
     }
-    std::fs::write(dir.join(format!("stage{stage}.bin")), bytes)
-        .with_context(|| format!("writing checkpoint stage {stage}"))?;
+    std::fs::write(dir.join(file), bytes)
+        .with_context(|| format!("writing checkpoint {file}"))?;
     Ok(())
 }
 
-/// Load a stage's parameters from a checkpoint directory (manifest layout).
-pub fn load_stage(dir: &Path, stage: usize, manifest: &Manifest) -> Result<Vec<Tensor>> {
-    let path = dir.join(format!("stage{stage}.bin"));
+/// Load a parameter vector by explicit layout — counterpart of
+/// [`save_params_with`].
+pub fn load_params_with(
+    dir: &Path,
+    file: &str,
+    specs: &[ParamSpec],
+    total_bytes: usize,
+) -> Result<Vec<Tensor>> {
+    let path = dir.join(file);
     let bytes = std::fs::read(&path)
         .with_context(|| format!("reading {}", path.display()))?;
-    let sp = &manifest.stages[stage];
-    if bytes.len() != sp.total_bytes {
-        bail!("{}: {} bytes, expected {}", path.display(), bytes.len(), sp.total_bytes);
+    if bytes.len() != total_bytes {
+        bail!("{}: {} bytes, expected {}", path.display(), bytes.len(), total_bytes);
     }
-    Ok(sp
-        .params
+    Ok(specs
         .iter()
         .map(|p| {
             let data: Vec<f32> = bytes[p.offset..p.offset + p.numel * 4]
@@ -65,6 +81,28 @@ pub fn load_stage(dir: &Path, stage: usize, manifest: &Manifest) -> Result<Vec<T
             Tensor::f32(data, p.shape.clone())
         })
         .collect())
+}
+
+/// Write one stage's parameters as `<dir>/stage<i>.bin` (manifest layout).
+pub fn save_stage(
+    dir: &Path,
+    stage: usize,
+    manifest: &Manifest,
+    params: &[Tensor],
+) -> Result<()> {
+    save_params_with(
+        dir,
+        &stage_param_file(stage, 0, 1),
+        &manifest.stages[stage].params,
+        params,
+    )
+    .with_context(|| format!("writing checkpoint stage {stage}"))
+}
+
+/// Load a stage's parameters from a checkpoint directory (manifest layout).
+pub fn load_stage(dir: &Path, stage: usize, manifest: &Manifest) -> Result<Vec<Tensor>> {
+    let sp = &manifest.stages[stage];
+    load_params_with(dir, &stage_param_file(stage, 0, 1), &sp.params, sp.total_bytes)
 }
 
 /// File name of one (stage, dp-rank)'s optimizer shard: rank 0 keeps the
@@ -77,6 +115,22 @@ pub fn optimizer_shard_file(stage: usize, rank: usize) -> String {
         format!("stage{stage}.opt.bin")
     } else {
         format!("stage{stage}.rank{rank}.opt.bin")
+    }
+}
+
+/// [`optimizer_shard_file`] under tensor parallelism: each (stage,
+/// tp-rank, dp-rank) owns its own moment-shard file; tp = 1 collapses to
+/// the historic names so pre-tp checkpoints stay valid.
+pub fn optimizer_shard_file_tp(
+    stage: usize,
+    tp_rank: usize,
+    tp: usize,
+    dp_rank: usize,
+) -> String {
+    if tp <= 1 {
+        optimizer_shard_file(stage, dp_rank)
+    } else {
+        format!("stage{stage}.tp{tp_rank}of{tp}.rank{dp_rank}.opt.bin")
     }
 }
 
@@ -103,6 +157,23 @@ pub fn save_optimizer_rank(
     rank: usize,
     opts: &[ShardedAdam],
 ) -> Result<()> {
+    save_optimizer_file(dir, &optimizer_shard_file(stage, rank), opts)
+}
+
+/// [`save_optimizer_rank`] for one (tp-rank, dp-rank) — the tp trainer's
+/// per-lane shard files (tp = 1 writes the historic names).
+pub fn save_optimizer_tp(
+    dir: &Path,
+    stage: usize,
+    tp_rank: usize,
+    tp: usize,
+    dp_rank: usize,
+    opts: &[ShardedAdam],
+) -> Result<()> {
+    save_optimizer_file(dir, &optimizer_shard_file_tp(stage, tp_rank, tp, dp_rank), opts)
+}
+
+fn save_optimizer_file(dir: &Path, file: &str, opts: &[ShardedAdam]) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let mut bytes = Vec::new();
     bytes.extend_from_slice(&(opts.len() as u64).to_le_bytes());
@@ -119,8 +190,8 @@ pub fn save_optimizer_rank(
             bytes.extend_from_slice(&x.to_le_bytes());
         }
     }
-    std::fs::write(dir.join(optimizer_shard_file(stage, rank)), bytes)
-        .with_context(|| format!("writing optimizer state for stage {stage} rank {rank}"))?;
+    std::fs::write(dir.join(file), bytes)
+        .with_context(|| format!("writing optimizer state {file}"))?;
     Ok(())
 }
 
@@ -144,6 +215,22 @@ pub fn load_optimizer_rank(
     rank: usize,
     opts: &mut [ShardedAdam],
 ) -> Result<()> {
+    load_optimizer_file(dir, &optimizer_shard_file(stage, rank), opts)
+}
+
+/// [`load_optimizer_rank`] for one (tp-rank, dp-rank) lane shard.
+pub fn load_optimizer_tp(
+    dir: &Path,
+    stage: usize,
+    tp_rank: usize,
+    tp: usize,
+    dp_rank: usize,
+    opts: &mut [ShardedAdam],
+) -> Result<()> {
+    load_optimizer_file(dir, &optimizer_shard_file_tp(stage, tp_rank, tp, dp_rank), opts)
+}
+
+fn load_optimizer_file(dir: &Path, file: &str, opts: &mut [ShardedAdam]) -> Result<()> {
     fn take_u64(bytes: &[u8], cur: &mut usize) -> Result<u64> {
         if *cur + 8 > bytes.len() {
             bail!("truncated optimizer state at byte {cur}");
@@ -164,7 +251,7 @@ pub fn load_optimizer_rank(
         Ok(out)
     }
 
-    let path = dir.join(optimizer_shard_file(stage, rank));
+    let path = dir.join(file);
     let bytes = std::fs::read(&path)
         .with_context(|| format!("reading {}", path.display()))?;
     let mut cur = 0usize;
@@ -199,25 +286,25 @@ pub fn load_optimizer_rank(
     Ok(())
 }
 
-/// Record how many optimizer steps the checkpoint covers and the
-/// data-parallel replica count it was taken at (`<dir>/train_state.json`)
-/// so a resumed run can fast-forward the data stream to the exact position
-/// an uninterrupted run would be at — and refuse to resume under a
-/// different dp (the optimizer shards and the per-replica data split both
-/// depend on it).
-pub fn save_train_state(dir: &Path, steps: usize, dp: usize) -> Result<()> {
+/// Record how many optimizer steps the checkpoint covers and the parallel
+/// degrees it was taken at (`<dir>/train_state.json`) so a resumed run can
+/// fast-forward the data stream to the exact position an uninterrupted run
+/// would be at — and refuse to resume under a different dp or tp (the
+/// optimizer shards, parameter sharding and per-replica data split all
+/// depend on them).
+pub fn save_train_state(dir: &Path, steps: usize, dp: usize, tp: usize) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     std::fs::write(
         dir.join("train_state.json"),
-        format!("{{\"steps\": {steps}, \"dp\": {dp}}}\n"),
+        format!("{{\"steps\": {steps}, \"dp\": {dp}, \"tp\": {tp}}}\n"),
     )
     .context("writing train_state.json")?;
     Ok(())
 }
 
-/// `(steps, dp)` recorded by [`save_train_state`]. Pre-dp checkpoints
-/// (no `dp` key) load as dp = 1.
-pub fn load_train_state(dir: &Path) -> Result<(usize, usize)> {
+/// `(steps, dp, tp)` recorded by [`save_train_state`]. Pre-dp checkpoints
+/// (no `dp` key) load as dp = 1; pre-tp checkpoints as tp = 1.
+pub fn load_train_state(dir: &Path) -> Result<(usize, usize, usize)> {
     let path = dir.join("train_state.json");
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("reading {}", path.display()))?;
@@ -226,11 +313,13 @@ pub fn load_train_state(dir: &Path) -> Result<(usize, usize)> {
         .req("steps")?
         .as_usize()
         .context("train_state.json: steps")?;
-    let dp = match j.get("dp") {
-        Some(v) => v.as_usize().context("train_state.json: dp")?,
-        None => 1,
+    let opt = |k: &str| -> Result<usize> {
+        match j.get(k) {
+            Some(v) => v.as_usize().with_context(|| format!("train_state.json: {k}")),
+            None => Ok(1),
+        }
     };
-    Ok((steps, dp))
+    Ok((steps, opt("dp")?, opt("tp")?))
 }
 
 /// Validation loss over `batches` held-out batches.
@@ -249,6 +338,25 @@ pub fn evaluate(
     let mut rt = Runtime::open(artifacts)?;
     let m = rt.manifest.model.clone();
     let stages = m.stages;
+
+    // tp-sharded checkpoints carry per-rank expert slices under segment-
+    // ordered layouts (`stage<i>.tp<t>ofN.bin`) — the monolithic forward
+    // chain below cannot consume them, so fail with the cause instead of
+    // a bare "stage0.bin: No such file"
+    if let Some(dir) = checkpoint {
+        if let Ok((_, _, ckpt_tp)) = load_train_state(dir) {
+            if ckpt_tp > 1 {
+                bail!(
+                    "checkpoint {} was taken at tp={ckpt_tp}: its parameters \
+                     are expert-sharded per tensor rank and cannot feed the \
+                     monolithic eval artifacts — evaluate a tp=1 run, or \
+                     track the training loss (tp runs report it bitwise-\
+                     equal to the tp reference)",
+                    dir.display()
+                );
+            }
+        }
+    }
 
     let mut params = Vec::with_capacity(stages);
     for s in 0..stages {
@@ -323,6 +431,7 @@ mod tests {
                 bwd: "lossgrad".into(),
                 params: 2,
             }]],
+            tp_exec: None,
             artifacts: BTreeMap::new(),
         }
     }
@@ -367,7 +476,7 @@ mod tests {
         }
         save_stage(&dir, 0, &m, &params).unwrap();
         save_optimizer(&dir, 0, &opts).unwrap();
-        save_train_state(&dir, 3, 1).unwrap();
+        save_train_state(&dir, 3, 1, 1).unwrap();
 
         // uninterrupted continuation
         let mut p_cont = params.clone();
@@ -381,7 +490,7 @@ mod tests {
             ShardedAdam::new(0.05, &p_res[1..], 0, 1),
         ];
         load_optimizer(&dir, 0, &mut opts_res).unwrap();
-        assert_eq!(load_train_state(&dir).unwrap(), (3, 1));
+        assert_eq!(load_train_state(&dir).unwrap(), (3, 1, 1));
         opts_res[0].update_shard(&mut p_res[..1], &grads[..1], 0.5).unwrap();
         opts_res[1].update_shard(&mut p_res[1..], &grads[1..], 0.5).unwrap();
 
@@ -413,13 +522,57 @@ mod tests {
     #[test]
     fn train_state_roundtrip_and_missing() {
         let dir = std::env::temp_dir().join(format!("ppmoe_ts_{}", std::process::id()));
-        save_train_state(&dir, 42, 2).unwrap();
-        assert_eq!(load_train_state(&dir).unwrap(), (42, 2));
-        // a pre-dp checkpoint (no "dp" key) loads as dp = 1
+        save_train_state(&dir, 42, 2, 2).unwrap();
+        assert_eq!(load_train_state(&dir).unwrap(), (42, 2, 2));
+        // a pre-dp/pre-tp checkpoint (no keys) loads as dp = tp = 1
         std::fs::write(dir.join("train_state.json"), "{\"steps\": 7}\n").unwrap();
-        assert_eq!(load_train_state(&dir).unwrap(), (7, 1));
+        assert_eq!(load_train_state(&dir).unwrap(), (7, 1, 1));
         std::fs::remove_dir_all(&dir).ok();
         assert!(load_train_state(&dir).is_err());
+    }
+
+    #[test]
+    fn tp_shard_file_names_collapse_at_tp1() {
+        // tp = 1 keeps every historic name (old checkpoints stay valid)
+        assert_eq!(stage_param_file(3, 0, 1), "stage3.bin");
+        assert_eq!(optimizer_shard_file_tp(3, 0, 1, 0), "stage3.opt.bin");
+        assert_eq!(optimizer_shard_file_tp(3, 0, 1, 2), "stage3.rank2.opt.bin");
+        // tp > 1: every (tp, dp) lane owns its own files
+        assert_eq!(stage_param_file(3, 1, 2), "stage3.tp1of2.bin");
+        assert_eq!(optimizer_shard_file_tp(3, 1, 2, 0), "stage3.tp1of2.rank0.opt.bin");
+        assert_eq!(optimizer_shard_file_tp(0, 0, 4, 3), "stage0.tp0of4.rank3.opt.bin");
+    }
+
+    #[test]
+    fn tp_lane_checkpoints_roundtrip() {
+        // per-(tp, dp) optimizer shards + spec-layout param files
+        let dir =
+            std::env::temp_dir().join(format!("ppmoe_tpck_{}", std::process::id()));
+        let params = vec![Tensor::f32(vec![1.0, 2.0, 3.0], vec![3])];
+        let specs = vec![ParamSpec {
+            name: "w".into(),
+            shape: vec![3],
+            offset: 0,
+            numel: 3,
+        }];
+        save_params_with(&dir, &stage_param_file(0, 1, 2), &specs, &params).unwrap();
+        let loaded =
+            load_params_with(&dir, &stage_param_file(0, 1, 2), &specs, 12).unwrap();
+        assert_eq!(loaded, params);
+
+        let grads = vec![Tensor::f32(vec![0.5, -0.5, 0.25], vec![3])];
+        let mut opts = vec![ShardedAdam::new(0.05, &params, 0, 1)];
+        let mut p = params.clone();
+        opts[0].update_shard(&mut p, &grads, 1.0).unwrap();
+        save_optimizer_tp(&dir, 0, 1, 2, 0, &opts).unwrap();
+        assert!(dir.join("stage0.tp1of2.rank0.opt.bin").exists());
+        let mut fresh = vec![ShardedAdam::new(0.05, &params, 0, 1)];
+        load_optimizer_tp(&dir, 0, 1, 2, 0, &mut fresh).unwrap();
+        assert_eq!(fresh[0].state(), opts[0].state());
+        // wrong lane file is absent
+        let mut other = vec![ShardedAdam::new(0.05, &params, 0, 1)];
+        assert!(load_optimizer_tp(&dir, 0, 0, 2, 0, &mut other).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

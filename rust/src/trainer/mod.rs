@@ -10,6 +10,28 @@
 //! microbatches and an in-crate fused Adam applies the update — the
 //! "gradient accumulation" half of the paper's §3.3.6 equivalence argument.
 //!
+//! ## Tensor-parallel expert axis (docs/hotpath.md §Tensor-parallel experts)
+//!
+//! `--tp n` runs **n tensor ranks per (replica, stage)** — the paper's
+//! headline design: expert parallelism INSIDE the tensor-parallel group,
+//! with token→expert dispatch done by index slicing on the stage-local
+//! activation and partial expert outputs combined by an inner-node
+//! all-reduce ([`AllReduceGroup::all_reduce_as`]) — no all-to-all anywhere
+//! (§3.3.2–3.3.4). Execution follows the manifest's per-rank segment plan
+//! ([`crate::runtime::TpStageView`], exported by `aot.py --tp-pipeline`):
+//! each chunk is an alternating walk of replicated **glue** segments and
+//! per-rank expert-sharded **moe** segments, with an all-reduce at every
+//! cut (forward: the partial outputs `y_r`; backward: the partial
+//! `d(hgt)` cotangents; at the chunk-gradient-ready boundary: the partial
+//! gating-weight gradients). A tp = 1 run executes the synthesized
+//! single-glue view over the monolithic artifacts — bitwise the historic
+//! path. [`TrainerCfg::emulate_tp`] is the serial reference: one worker
+//! per stage runs every rank's executables in-thread and combines with
+//! [`crate::tp::rank_order_sum_into`] — bitwise what the live collective
+//! computes — so "live `--tp n` equals the tp = 1 reference" is checked
+//! bit-for-bit (rust/tests/tp_equivalence.rs), composed with `--dp` and
+//! virtual stages.
+//!
 //! ## Interleaved virtual stages (docs/schedules.md)
 //!
 //! With `v` chunks the model is cut into `p·v` virtual stages; physical
@@ -24,108 +46,82 @@
 //!
 //! The aux (load-balance) loss is threaded through the pipeline as a
 //! scalar alongside activations — across wrap-around edges too — and its
-//! cotangent (`aux_coef`) is passed back to every chunk's backward, so the
-//! pipelined gradient equals the single-shot `full_lossgrad` artifact up
-//! to fp tolerance (verified in rust/tests/pipeline_equivalence.rs).
+//! cotangent (`aux_coef`) is passed back to every aux-producing segment
+//! (under tp: to **rank 0's** moe segments only, so the replicated aux
+//! path is counted exactly once in the rank sum), keeping the pipelined
+//! gradient equal to the single-shot `full_lossgrad` artifact up to fp
+//! tolerance (rust/tests/pipeline_equivalence.rs).
 //!
 //! ## Data parallelism with backward-overlapped ZeRO-1 sync (docs/hotpath.md §Data-parallel overlap)
 //!
 //! `--dp n` runs **n concurrent replica thread-groups** of the whole
 //! pipeline: the global batch's `m` microbatches split into contiguous
-//! blocks of `m/n` per replica (replica r draws global micros
-//! `r·m/n ..< (r+1)·m/n` from the shared seeded corpus stream), and the
-//! replicas share one [`AllReduceGroup`] per (stage, chunk) plus one small
-//! per-stage group for clip-norm scalars. Gradient synchronization is
-//! **bucketed and overlapped with the backward pass**: the moment a
-//! chunk's last microbatch backward completes inside the 1F1B walk (the
-//! [`crate::pipeline::chunk_grad_ready`] boundary), its accumulated
-//! gradient is flattened into a reused bucket and handed to that
-//! (stage, chunk)'s sync worker thread, which runs the allocation-free
-//! [`AllReduceGroup::reduce_scatter_into`] concurrently with the stage's
-//! remaining backward ops. At step end each rank:
+//! blocks of `m/n` per replica, and same-tp-rank workers of a stage share
+//! one [`AllReduceGroup`] per (stage, tp rank, chunk) plus one per-stage
+//! scalar group (size dp·tp) for clip-norm partials. Gradient
+//! synchronization is **bucketed and overlapped with the backward pass**:
+//! at a chunk's [`crate::pipeline::chunk_grad_ready`] boundary its
+//! accumulated gradient — with the tp `Summed`-class combine already
+//! applied — is flattened into a reused bucket and handed to that lane's
+//! sync worker, which runs the allocation-free
+//! [`AllReduceGroup::reduce_scatter_into`] concurrently with the remaining
+//! backward ops. At step end each lane:
 //!
 //! 1. receives its chunks' reduce-scattered gradient segments (already
 //!    summed in rank order — bitwise the all-reduce result);
-//! 2. exchanges per-(chunk, rank) sum-of-squares scalars over the stage's
-//!    norm group and combines them in a fixed (chunk, rank) order, so
-//!    every rank derives the **same** clip factor bit-for-bit
-//!    ([`adam::segmented_sumsq`] is the single definition of that
-//!    decomposition);
-//! 3. runs Adam on its owned 1/n moment shard only
+//! 2. exchanges per-(chunk, dp rank, tp rank) sum-of-squares scalars and
+//!    combines them in a fixed order, so every lane derives the **same**
+//!    clip factor bit-for-bit. Under tp the decomposition is masked
+//!    ([`adam::masked_seg_sumsq`]): tp rank 0 contributes whole windows,
+//!    ranks > 0 only their expert-local elements — shared parameters are
+//!    counted exactly once in the stage norm;
+//! 3. runs Adam on its owned 1/dp moment shard only
 //!    ([`adam::ShardedAdam::update_flat`]) and all-gathers the fresh
-//!    parameter shards — live ZeRO-1: each replica stores 1/n of the
-//!    optimizer state and the full summed gradient never materializes.
+//!    parameter shards — live ZeRO-1 on every tp lane.
 //!
-//! `--no-dp-overlap` defers the whole sync to the step end (compute, then
-//! sync, then update) — same collectives in the same per-group order, so
-//! losses and parameters are **bitwise identical** either way; the knob
-//! exists for A/B timing (`dp_sync/*` bench rows). Both paths are bitwise
-//! equal to a single-replica reference that sums the per-replica block
-//! gradients in rank order ([`TrainerCfg::emulate_dp`],
-//! rust/tests/dp_equivalence.rs).
+//! `--no-dp-overlap` defers the whole sync to the step end; losses and
+//! parameters are **bitwise identical** either way, and both match the
+//! dp = 1 summed-gradient reference ([`TrainerCfg::emulate_dp`],
+//! rust/tests/dp_equivalence.rs) — which composes with live `--tp`.
 //!
 //! ## Device-resident microbatch loop (docs/hotpath.md)
 //!
 //! The steady-state loop crosses the PJRT boundary only where a host value
-//! is genuinely needed:
-//!
-//! * Each microbatch's input is uploaded **once** at forward time and the
-//!   device buffer is stashed per (chunk, micro); the backward pass reuses
-//!   it instead of re-serializing the activation
-//!   (`Executable::run_staged_device`).
-//! * Executions return [`DeviceTensor`]s; only the loss/aux scalars and
-//!   the activation/gradient leaving the stage are read back — into
-//!   recycled slabs ([`pool::SlabPool`]) returned by the consumer, so the
-//!   p2p edges allocate nothing after warmup.
-//! * The constant `aux_coef` cotangent is staged once per run per chunk,
-//!   gradients accumulate host-side through a reused scratch buffer, and
-//!   the microbatch mean + grad-clip factor are folded into a single fused
-//!   sweep per (stage, chunk) shard ([`adam::ShardedAdam::update_shard`])
-//!   — one pass over each parameter instead of three.
-//! * After the optimizer step, parameters are re-staged in place
-//!   ([`crate::runtime::Runtime::restage_buffers`]); chunk executables
-//!   address their parameters as sub-slices of the stage-level buffers
-//!   ([`crate::runtime::Manifest::chunk_param_range`]).
-//! * The dp sync path reuses its bucket buffers (`flat` + scattered `seg`
-//!   round-trip main thread ↔ sync worker), the gather deposit buffer and
-//!   the norm scalar vector, so steady-state gradient synchronization
-//!   performs **zero heap allocations** (asserted by the
-//!   `optimizer/zero1-live` bench rows).
+//! is genuinely needed: microbatch inputs upload once and stash on device
+//! for the backward; executions return [`DeviceTensor`]s and intermediate
+//! segment outputs chain device-to-device; only loss/aux scalars, the
+//! activation/gradient leaving the stage, and the tp/dp collective
+//! payloads are read back — into recycled slabs and reused scratch
+//! buffers. Parameters re-stage in place after the update
+//! ([`crate::runtime::Runtime::restage_buffers`]); segment executables
+//! address their parameters as sub-slices of the stage-level buffers
+//! ([`crate::runtime::TpStageView::seg_param_range`]).
 //!
 //! ## Sharded per-chunk optimizer (docs/hotpath.md §Sharded optimizer)
 //!
-//! Optimizer state lives per (stage, chunk): each chunk owns a
+//! Optimizer state lives per (stage, tp rank, chunk): each chunk owns a
 //! [`adam::ShardedAdam`] over its contiguous parameter sub-slice, shaped
-//! for rank r of the stage's data-parallel group — at `--dp 1` the shard
-//! spans the whole chunk and the update is bitwise the historic monolithic
-//! fused sweep; at `--dp n` rank r keeps only the
-//! `segment(r, numel, n)` moment shard its reduce-scatter phase produces.
-//! The n-rank path is property-tested bitwise-equal against the monolithic
-//! reference, and the per-rank per-chunk moments are what checkpoints
-//! carry ([`checkpoint::save_optimizer_rank`]) — which is also what makes
-//! resumption bitwise at every dp ([`TrainerCfg::resume_dir`]).
+//! for dp rank r — the whole chunk at dp = 1 (bitwise the historic
+//! monolithic sweep), the `segment(r, numel, dp)` shard its reduce-scatter
+//! produces otherwise. Checkpoints carry per-(tp rank, dp rank) moment
+//! shards ([`checkpoint::save_optimizer_tp`]) and per-tp-rank parameter
+//! files ([`checkpoint::stage_param_file`]); `train_state.json` records
+//! dp AND tp, and resumption is bitwise at every (dp, tp).
 //!
 //! ## Overlapped wrap-edge transfers (docs/hotpath.md §Wrap-edge overlap)
 //!
-//! The interleaved ring's wrap-around hops ((p−1, c) → (0, c+1) forward,
-//! (0, c) → (p−1, c−1) backward) are a staged d2h → channel → h2d
-//! pipeline: the producer issues the d2h readback into a pooled slab
+//! The interleaved ring's wrap-around hops are a staged d2h → channel →
+//! h2d pipeline: the producer issues the d2h readback into a pooled slab
 //! immediately after the producing execute, but defers the channel send to
-//! its next blocking point (the following op's recv, or the end of the
-//! step). Under an asynchronous PJRT backend the readback DMA then runs
-//! while the stage dispatches its next op — e.g. stage p−1's wrap readback
-//! overlaps its own loss-chunk backward, instead of serializing the ring.
-//! Wrap-edge slab pools are pre-seeded with two slabs
-//! ([`pool::SlabPool::prefill`]): one staged on the producer while the
-//! previous drains through the channel. The deferral never reorders a
-//! channel (single queue, FIFO flush) and every payload is flushed before
-//! the producer can block, so the schedule's dependency structure — and
-//! the loss trajectory — are unchanged bitwise
-//! (rust/tests/pipeline_equivalence.rs). `overlap_wrap_edges: false`
-//! restores eager sends for A/B timing (`--no-overlap`).
+//! its next blocking point. Wrap-edge slab pools are pre-seeded with two
+//! slabs ([`pool::SlabPool::prefill`]). The deferral never reorders a
+//! channel and every payload is flushed before the producer can block, so
+//! the loss trajectory is unchanged bitwise; `--no-overlap` restores eager
+//! sends for A/B timing.
 //!
 //! [`DeviceTensor`]: crate::runtime::DeviceTensor
 //! [`AllReduceGroup`]: crate::comm::AllReduceGroup
+//! [`AllReduceGroup::all_reduce_as`]: crate::comm::AllReduceGroup::all_reduce_as
 //! [`AllReduceGroup::reduce_scatter_into`]: crate::comm::AllReduceGroup::reduce_scatter_into
 
 pub mod adam;
@@ -134,12 +130,14 @@ pub mod pool;
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
+use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread;
 
 use anyhow::{bail, Context, Result};
 
+use crate::comm::collectives::segment;
 use crate::comm::{Algo, AllReduceGroup, Barrier};
 use crate::data::Corpus;
 use crate::metrics::Timers;
@@ -147,8 +145,10 @@ use crate::pipeline::{
     chunk_grad_ready, fwd_consumer, fwd_producer, is_wrap_bwd, is_wrap_fwd, schedule_virtual,
     Op, Schedule,
 };
-use crate::runtime::{Runtime, Tensor};
-use adam::{global_grad_norm, segmented_sumsq, ShardedAdam};
+use crate::runtime::{DeviceTensor, Executable, Runtime, SegKind, SegSpec, Tensor, TpStageView};
+use crate::tp::rank_order_sum_into;
+use adam::{global_grad_norm, masked_range_sumsq, masked_seg_sumsq, ShardedAdam};
+use checkpoint::{optimizer_shard_file_tp, stage_param_file};
 use pool::{slab_pair, SlabPool, SlabReturn};
 
 /// Training hyperparameters.
@@ -180,17 +180,16 @@ pub struct TrainerCfg {
     /// Linear LR warmup steps (the paper warms its gating up over the first
     /// steps of Fig. 5; 0 disables).
     pub warmup_steps: usize,
-    /// If set, every stage writes its final parameters here
-    /// (`stage<i>.bin`, same layout as the manifest) for `evaluate`, plus
-    /// each dp rank's sharded optimizer state (`stage<i>.opt.bin` /
-    /// `stage<i>.rank<r>.opt.bin`) and the completed step count + dp
+    /// If set, every stage writes its final parameters here (per tp rank:
+    /// [`checkpoint::stage_param_file`]) plus each (tp, dp) lane's sharded
+    /// optimizer state and the completed step count + dp + tp
     /// (`train_state.json`) so the run can be resumed.
     pub checkpoint_dir: Option<PathBuf>,
     /// Resume from a checkpoint directory previously written via
-    /// `checkpoint_dir`: parameters, per-rank per-chunk Adam moments and
+    /// `checkpoint_dir`: parameters, per-lane per-chunk Adam moments and
     /// the data stream position are all restored, making the resumed
     /// trajectory bitwise-equal to an uninterrupted run (the checkpoint's
-    /// recorded dp must match [`TrainerCfg::dp`]).
+    /// recorded dp and tp must match this run's).
     pub resume_dir: Option<PathBuf>,
     /// Stage the wrap-around-edge d2h readback and defer its channel send
     /// to the next blocking point (overlapping the readback with the next
@@ -198,24 +197,37 @@ pub struct TrainerCfg {
     /// Either way the executed schedule and losses are bitwise identical.
     pub overlap_wrap_edges: bool,
     /// Data-parallel replica count (`--dp`): dp full pipeline replicas
-    /// share per-(stage, chunk) gradient groups and run the live ZeRO-1
-    /// sharded optimizer step (module docs §Data parallelism). Must divide
-    /// `num_micro`.
+    /// share per-(stage, tp rank, chunk) gradient groups and run the live
+    /// ZeRO-1 sharded optimizer step (module docs §Data parallelism). Must
+    /// divide `num_micro`.
     pub dp: usize,
     /// Overlap each chunk's gradient reduce-scatter with the remaining
     /// backward ops via per-(stage, chunk) sync workers (`--no-dp-overlap`
     /// disables, deferring all sync to the step end). Bitwise-identical
     /// losses/params either way; only timing moves.
     pub overlap_dp_sync: bool,
+    /// Tensor-parallel expert degree (`--tp`): n rank threads per
+    /// (replica, stage), executing the manifest's per-rank expert-sharded
+    /// segment plan with inner-node all-reduce combines (module docs
+    /// §Tensor-parallel expert axis). Requires artifacts exported with
+    /// `aot.py --tp n --tp-pipeline`; 1 runs the monolithic artifacts.
+    pub tp: usize,
     /// **Reference mode** (testing): at `dp = 1`, emulate a
     /// `emulate_dp`-way data-parallel group inside the single replica —
     /// the `m` microbatches accumulate into `emulate_dp` contiguous block
     /// gradients which are summed in rank order at step end, and the clip
-    /// norm uses the same [`adam::segmented_sumsq`] (chunk, rank)
-    /// decomposition a live dp group computes. This is "dp = 1 with summed
-    /// gradients": the serialized reference live `--dp n` training is
-    /// bitwise-equal to (rust/tests/dp_equivalence.rs). 0 or 1 = off.
+    /// norm uses the same (chunk, rank) decomposition a live dp group
+    /// exchanges. Live `--dp n` training is bitwise-equal to this
+    /// (rust/tests/dp_equivalence.rs), including composed with live
+    /// `--tp`. 0 or 1 = off.
     pub emulate_dp: usize,
+    /// **Reference mode** (testing): at `tp = 1` and `dp = 1`, execute the
+    /// `emulate_tp`-way tensor-parallel segment plan serially inside each
+    /// stage worker — every rank's executables run in-thread and partials
+    /// combine via [`crate::tp::rank_order_sum_into`], bitwise what the
+    /// live collective computes. Live `--tp n` training is bitwise-equal
+    /// to this (rust/tests/tp_equivalence.rs). 0 or 1 = off.
+    pub emulate_tp: usize,
 }
 
 impl Default for TrainerCfg {
@@ -236,7 +248,9 @@ impl Default for TrainerCfg {
             overlap_wrap_edges: true,
             dp: 1,
             overlap_dp_sync: true,
+            tp: 1,
             emulate_dp: 0,
+            emulate_tp: 0,
         }
     }
 }
@@ -287,20 +301,25 @@ pub struct TrainReport {
     pub steps: Vec<StepLog>,
     /// Whole-run throughput.
     pub tokens_per_sec: f64,
-    /// Per-worker timer breakdowns, indexed `replica · p + stage`
-    /// (dp = 1: exactly one entry per stage, as before). Decode through
+    /// Per-worker timer breakdowns, indexed
+    /// `replica · (p · tp) + stage · tp + tp_rank` (dp = tp = 1: exactly
+    /// one entry per stage, as before). Decode through
     /// [`TrainReport::worker_timers`] rather than re-deriving the layout.
     pub stage_timers: Vec<Timers>,
     /// Data-parallel replica count the run executed with (decodes
     /// `stage_timers`).
     pub dp: usize,
+    /// Tensor-parallel worker threads per (replica, stage) the run
+    /// executed with (decodes `stage_timers`; 1 for `emulate_tp` runs,
+    /// whose serial lanes live inside one worker).
+    pub tp: usize,
     /// Loss of the final step.
     pub final_loss: f32,
-    /// The op order each stage of **replica 0** actually executed during
-    /// step 0 (recorded *after* every blocking recv succeeded) — compared
-    /// against [`crate::pipeline::schedule_virtual`] and the event
-    /// simulation in rust/tests/pipeline_equivalence.rs. All replicas
-    /// execute the same per-replica stream.
+    /// The op order each stage of **replica 0, tp rank 0** actually
+    /// executed during step 0 (recorded *after* every blocking recv
+    /// succeeded) — compared against [`crate::pipeline::schedule_virtual`]
+    /// and the event simulation in rust/tests/pipeline_equivalence.rs.
+    /// All replicas and ranks execute the same per-replica stream.
     pub executed_ops: Vec<Vec<Op>>,
 }
 
@@ -311,15 +330,16 @@ impl TrainReport {
         xs.iter().sum::<f32>() / xs.len().max(1) as f32
     }
 
-    /// Timer breakdowns as `(replica, stage, timers)` — the single decoder
-    /// of the flat [`TrainReport::stage_timers`] layout, so frontends never
-    /// re-derive (and silently mis-attribute) the index encoding.
-    pub fn worker_timers(&self) -> impl Iterator<Item = (usize, usize, &Timers)> {
-        let stages = self.stage_timers.len() / self.dp.max(1);
-        self.stage_timers
-            .iter()
-            .enumerate()
-            .map(move |(i, t)| (i / stages, i % stages, t))
+    /// Timer breakdowns as `(replica, stage, tp_rank, timers)` — the
+    /// single decoder of the flat [`TrainReport::stage_timers`] layout, so
+    /// frontends never re-derive (and silently mis-attribute) the index
+    /// encoding.
+    pub fn worker_timers(&self) -> impl Iterator<Item = (usize, usize, usize, &Timers)> {
+        let tp = self.tp.max(1);
+        let per_replica = self.stage_timers.len() / self.dp.max(1);
+        self.stage_timers.iter().enumerate().map(move |(i, t)| {
+            (i / per_replica, (i % per_replica) / tp, i % tp, t)
+        })
     }
 }
 
@@ -349,11 +369,11 @@ struct StageIo {
     chunks: Vec<ChunkIo>,
     tgt_rx: Option<Receiver<Tensor>>,
     loss_tx: Sender<f32>,
-    timer_tx: Sender<(usize, usize, Timers, Vec<Op>)>,
+    timer_tx: Sender<(usize, usize, usize, Timers, Vec<Op>)>,
 }
 
 /// Everything a stage worker needs to know about its place in the
-/// (replica, stage) grid and the collectives it shares with its dp peers.
+/// (replica, stage, tp rank) grid and the collectives it shares.
 struct WorkerCtx {
     stage: usize,
     /// This worker's dp rank (replica index).
@@ -362,14 +382,36 @@ struct WorkerCtx {
     dp: usize,
     /// Virtual chunks per stage.
     v: usize,
+    /// This worker's tp rank (0 at tp = 1 and in the emulation worker).
+    tp_rank: usize,
+    /// Live tp worker threads per (replica, stage).
+    tpw: usize,
+    /// In-process serial lanes this worker executes (1 live;
+    /// `emulate_tp` in the reference mode).
+    nlanes: usize,
+    /// Logical tp group size (`tpw` live, `nlanes` emulated).
+    tg: usize,
     aux_coef: f32,
     start_step: usize,
-    /// One gradient-sync group per chunk, shared by the dp replicas of
-    /// this stage (unused at dp = 1).
+    /// One gradient-sync group per chunk, shared by this tp lane's dp
+    /// replicas (unused at dp = 1).
     sync_groups: Vec<Arc<AllReduceGroup>>,
-    /// Per-stage scalar group for the clip-norm partial exchange
-    /// (None at dp = 1).
+    /// Per-stage scalar group for the clip-norm partial exchange across
+    /// the dp × tp lanes (None when dp·tpw = 1).
     norm_group: Option<Arc<AllReduceGroup>>,
+    /// Per-(replica, stage) tp combine group (None unless live tp > 1).
+    tp_group: Option<Arc<AllReduceGroup>>,
+}
+
+impl WorkerCtx {
+    /// Global tp rank of in-worker lane `l`.
+    fn grank(&self, l: usize) -> usize {
+        if self.nlanes > 1 {
+            l
+        } else {
+            self.tp_rank
+        }
+    }
 }
 
 /// A wrap-edge payload whose d2h readback has been issued (performed
@@ -452,6 +494,9 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     if dp == 0 {
         bail!("--dp must be at least 1");
     }
+    if cfg.tp == 0 {
+        bail!("--tp must be at least 1");
+    }
     if m % dp != 0 || m / dp == 0 {
         bail!("--micro ({m}) must be a positive multiple of --dp ({dp})");
     }
@@ -473,12 +518,32 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
             );
         }
     }
+    if cfg.emulate_tp > 1 {
+        if cfg.tp != 1 || dp != 1 {
+            bail!(
+                "emulate_tp is a tp = dp = 1 reference mode (got --tp {} \
+                 --dp {dp})",
+                cfg.tp
+            );
+        }
+        if cfg.emulate_dp > 1 {
+            bail!("emulate_tp cannot be combined with emulate_dp");
+        }
+    }
+    // tp geometry: tpw worker threads per (replica, stage), tg logical
+    // tensor ranks (the emulation folds tg lanes into one worker)
+    let tpw = cfg.tp;
+    let tg = if cfg.emulate_tp > 1 { cfg.emulate_tp } else { tpw };
+    // fail on the driver with a clear message if the artifacts cannot
+    // serve the requested tensor degree (workers would all hit this too)
+    manifest.stage_view(0, 0, tg)?;
+
     // resumption: the checkpointed step count positions the data stream and
     // the LR warmup exactly where an uninterrupted run would be; the
-    // recorded dp must match (optimizer shards + data split depend on it)
+    // recorded dp and tp must match (shards + data split depend on them)
     let start_step = match &cfg.resume_dir {
         Some(dir) => {
-            let (steps, ckpt_dp) = checkpoint::load_train_state(dir)
+            let (steps, ckpt_dp, ckpt_tp) = checkpoint::load_train_state(dir)
                 .context("resume checkpoint is missing train_state.json")?;
             if ckpt_dp != dp {
                 bail!(
@@ -486,24 +551,32 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
                      dp={dp} (optimizer shards and data split differ)"
                 );
             }
-            // pre-validate every (stage, rank) file ON THE DRIVER: a
-            // missing shard discovered by one worker thread after spawn
-            // would strand its dp peers inside the shared collectives
+            if ckpt_tp != tg {
+                bail!(
+                    "checkpoint was taken at tp={ckpt_tp}, cannot resume at \
+                     tp={tg} (parameter and optimizer sharding differ)"
+                );
+            }
+            // pre-validate every (stage, tp rank, dp rank) file ON THE
+            // DRIVER: a missing shard discovered by one worker thread after
+            // spawn would strand its peers inside the shared collectives
             // (they poison + panic rather than deadlock, but failing here
             // is a clean error instead)
             for stage in 0..p {
-                let bin = dir.join(format!("stage{stage}.bin"));
-                if !bin.exists() {
-                    bail!("resume checkpoint missing {}", bin.display());
-                }
-                for rank in 0..dp {
-                    let f = dir.join(checkpoint::optimizer_shard_file(stage, rank));
-                    if !f.exists() {
-                        bail!(
-                            "resume checkpoint missing {} (dp={dp} needs every \
-                             rank's optimizer shard)",
-                            f.display()
-                        );
+                for t in 0..tg {
+                    let bin = dir.join(stage_param_file(stage, t, tg));
+                    if !bin.exists() {
+                        bail!("resume checkpoint missing {}", bin.display());
+                    }
+                    for rank in 0..dp {
+                        let f = dir.join(optimizer_shard_file_tp(stage, t, tg, rank));
+                        if !f.exists() {
+                            bail!(
+                                "resume checkpoint missing {} (dp={dp} tp={tg} \
+                                 needs every lane's optimizer shard)",
+                                f.display()
+                            );
+                        }
                     }
                 }
             }
@@ -512,138 +585,168 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         None => 0,
     };
 
-    // collectives shared across the dp replicas: one gradient group per
-    // (stage, chunk) and one scalar norm group per stage
-    let sync_groups: Vec<Vec<Arc<AllReduceGroup>>> = (0..p)
-        .map(|_| (0..v).map(|_| AllReduceGroup::with_algo(dp, Algo::Chunked)).collect())
+    // collectives: one dp gradient group per (stage, tp rank, chunk), one
+    // scalar norm group per stage across the dp × tp lanes, and one tp
+    // combine group per (replica, stage)
+    let sync_groups: Vec<Vec<Vec<Arc<AllReduceGroup>>>> = (0..p)
+        .map(|_| {
+            (0..tpw)
+                .map(|_| (0..v).map(|_| AllReduceGroup::with_algo(dp, Algo::Chunked)).collect())
+                .collect()
+        })
         .collect();
     let norm_groups: Vec<Arc<AllReduceGroup>> =
-        (0..p).map(|_| AllReduceGroup::with_algo(dp, Algo::Chunked)).collect();
+        (0..p).map(|_| AllReduceGroup::with_algo(dp * tpw, Algo::Chunked)).collect();
+    let tp_groups: Vec<Vec<Arc<AllReduceGroup>>> = (0..dp)
+        .map(|_| (0..p).map(|_| AllReduceGroup::with_algo(tpw, Algo::Chunked)).collect())
+        .collect();
 
-    let barrier = Barrier::new(p * dp + 1); // all stage workers + driver
+    let barrier = Barrier::new(p * dp * tpw + 1); // all stage workers + driver
     let sched = Arc::new(schedule_virtual(cfg.schedule, p, m_local, v));
 
     // stage timers + executed-op traces back to the driver at the end
-    let (timer_tx, timer_rx) = channel::<(usize, usize, Timers, Vec<Op>)>();
+    let (timer_tx, timer_rx) = channel::<(usize, usize, usize, Timers, Vec<Op>)>();
 
     let mut handles = Vec::new();
-    // driver-side ends, one per replica
-    let mut driver_txs: Vec<Sender<ActMsg>> = Vec::with_capacity(dp);
-    let mut tgt_txs: Vec<Sender<Tensor>> = Vec::with_capacity(dp);
+    // driver-side ends: token/target feeds per (replica, tp worker), one
+    // loss stream per replica (only tp rank 0 reports)
+    let mut driver_txs: Vec<Vec<Sender<ActMsg>>> = Vec::with_capacity(dp);
+    let mut tgt_txs: Vec<Vec<Sender<Tensor>>> = Vec::with_capacity(dp);
     let mut loss_rxs: Vec<Receiver<f32>> = Vec::with_capacity(dp);
 
     let act_elems = b * s * manifest.model.hidden;
     for replica in 0..dp {
-        // ---- (stage, chunk)-boundary channels for this replica ----
-        let mut fwd_txs: Vec<Vec<Sender<ActMsg>>> = Vec::new();
-        let mut fwd_rxs: Vec<Vec<Option<Receiver<ActMsg>>>> = Vec::new();
-        let mut bwd_txs: Vec<Vec<Sender<GradMsg>>> = Vec::new();
-        let mut bwd_rxs: Vec<Vec<Option<Receiver<GradMsg>>>> = Vec::new();
-        for _ in 0..p {
-            let (mut ft, mut fr, mut bt, mut br) =
-                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-            for _ in 0..v {
-                let (ftx, frx) = channel::<ActMsg>();
-                ft.push(ftx);
-                fr.push(Some(frx));
-                let (btx, brx) = channel::<GradMsg>();
-                bt.push(btx);
-                br.push(Some(brx));
-            }
-            fwd_txs.push(ft);
-            fwd_rxs.push(fr);
-            bwd_txs.push(bt);
-            bwd_rxs.push(br);
-        }
-        // slab back-channels: one per f32 payload edge. A forward edge into
-        // (s, c) puts the pool at its producer and the return at (s, c); a
-        // backward edge into (s, c) puts the pool at its producer — the
-        // chunk downstream of (s, c) in the ring — and the return at
-        // (s, c). The driver's token feed into (0, 0) is i32 and unpooled.
-        let mut act_pools: Vec<Vec<Option<SlabPool>>> =
-            (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
-        let mut act_returns: Vec<Vec<Option<SlabReturn>>> =
-            (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
-        let mut grad_pools: Vec<Vec<Option<SlabPool>>> =
-            (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
-        let mut grad_returns: Vec<Vec<Option<SlabReturn>>> =
-            (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
-        // wrap edges are double-buffered from the start: two pre-seeded
-        // slabs sized for the boundary activation, so one can sit staged on
-        // the producer while the other drains through the channel, with
-        // zero warmup misses (overlap off keeps the lazy warmup behavior)
-        for si in 0..p {
-            for ci in 0..v {
-                if let Some((ps, pc)) = fwd_producer(si, ci, p) {
-                    let (mut pool, ret) = slab_pair();
-                    if cfg.overlap_wrap_edges && is_wrap_fwd(ps, pc, p, v) {
-                        pool.prefill(2, act_elems);
-                    }
-                    act_pools[ps][pc] = Some(pool);
-                    act_returns[si][ci] = Some(ret);
-                }
-                if let Some((ds, dc)) = fwd_consumer(si, ci, p, v) {
-                    // (ds, dc) sends dy back to (si, ci)
-                    let (mut pool, ret) = slab_pair();
-                    if cfg.overlap_wrap_edges && is_wrap_bwd(ds, dc) {
-                        pool.prefill(2, act_elems);
-                    }
-                    grad_pools[ds][dc] = Some(pool);
-                    grad_returns[si][ci] = Some(ret);
-                }
-            }
-        }
-        // driver -> (0, 0) tokens; driver -> last stage targets
-        let (tgt_tx, tgt_rx) = channel::<Tensor>();
-        let mut tgt_rx = Some(tgt_rx);
-        // loss chunk -> driver losses
+        let mut rep_driver_txs = Vec::with_capacity(tpw);
+        let mut rep_tgt_txs = Vec::with_capacity(tpw);
         let (loss_tx, loss_rx) = channel::<f32>();
+        for t in 0..tpw {
+            // ---- (stage, chunk)-boundary channels for this tp lane ----
+            let mut fwd_txs: Vec<Vec<Sender<ActMsg>>> = Vec::new();
+            let mut fwd_rxs: Vec<Vec<Option<Receiver<ActMsg>>>> = Vec::new();
+            let mut bwd_txs: Vec<Vec<Sender<GradMsg>>> = Vec::new();
+            let mut bwd_rxs: Vec<Vec<Option<Receiver<GradMsg>>>> = Vec::new();
+            for _ in 0..p {
+                let (mut ft, mut fr, mut bt, mut br) =
+                    (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+                for _ in 0..v {
+                    let (ftx, frx) = channel::<ActMsg>();
+                    ft.push(ftx);
+                    fr.push(Some(frx));
+                    let (btx, brx) = channel::<GradMsg>();
+                    bt.push(btx);
+                    br.push(Some(brx));
+                }
+                fwd_txs.push(ft);
+                fwd_rxs.push(fr);
+                bwd_txs.push(bt);
+                bwd_rxs.push(br);
+            }
+            // slab back-channels: one per f32 payload edge. A forward edge
+            // into (s, c) puts the pool at its producer and the return at
+            // (s, c); a backward edge into (s, c) puts the pool at its
+            // producer — the chunk downstream of (s, c) in the ring — and
+            // the return at (s, c). The driver's token feed into (0, 0) is
+            // i32 and unpooled.
+            let mut act_pools: Vec<Vec<Option<SlabPool>>> =
+                (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+            let mut act_returns: Vec<Vec<Option<SlabReturn>>> =
+                (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+            let mut grad_pools: Vec<Vec<Option<SlabPool>>> =
+                (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+            let mut grad_returns: Vec<Vec<Option<SlabReturn>>> =
+                (0..p).map(|_| (0..v).map(|_| None).collect()).collect();
+            // wrap edges are double-buffered from the start: two pre-seeded
+            // slabs sized for the boundary activation, so one can sit
+            // staged on the producer while the other drains through the
+            // channel, with zero warmup misses (overlap off keeps the lazy
+            // warmup behavior)
+            for si in 0..p {
+                for ci in 0..v {
+                    if let Some((ps, pc)) = fwd_producer(si, ci, p) {
+                        let (mut pool, ret) = slab_pair();
+                        if cfg.overlap_wrap_edges && is_wrap_fwd(ps, pc, p, v) {
+                            pool.prefill(2, act_elems);
+                        }
+                        act_pools[ps][pc] = Some(pool);
+                        act_returns[si][ci] = Some(ret);
+                    }
+                    if let Some((ds, dc)) = fwd_consumer(si, ci, p, v) {
+                        // (ds, dc) sends dy back to (si, ci)
+                        let (mut pool, ret) = slab_pair();
+                        if cfg.overlap_wrap_edges && is_wrap_bwd(ds, dc) {
+                            pool.prefill(2, act_elems);
+                        }
+                        grad_pools[ds][dc] = Some(pool);
+                        grad_returns[si][ci] = Some(ret);
+                    }
+                }
+            }
+            // driver -> (0, 0) tokens; driver -> last stage targets
+            let (tgt_tx, tgt_rx) = channel::<Tensor>();
+            let mut tgt_rx = Some(tgt_rx);
 
-        for stage in 0..p {
-            let chunks = (0..v)
-                .map(|c| ChunkIo {
-                    rx_fwd: fwd_rxs[stage][c].take().unwrap(),
-                    tx_fwd: fwd_consumer(stage, c, p, v)
-                        .map(|(ds, dc)| fwd_txs[ds][dc].clone()),
-                    rx_bwd: if fwd_consumer(stage, c, p, v).is_some() {
-                        bwd_rxs[stage][c].take()
+            for stage in 0..p {
+                let chunks = (0..v)
+                    .map(|c| ChunkIo {
+                        rx_fwd: fwd_rxs[stage][c].take().unwrap(),
+                        tx_fwd: fwd_consumer(stage, c, p, v)
+                            .map(|(ds, dc)| fwd_txs[ds][dc].clone()),
+                        rx_bwd: if fwd_consumer(stage, c, p, v).is_some() {
+                            bwd_rxs[stage][c].take()
+                        } else {
+                            None
+                        },
+                        tx_bwd: fwd_producer(stage, c, p)
+                            .map(|(ps, pc)| bwd_txs[ps][pc].clone()),
+                        act_pool: act_pools[stage][c].take(),
+                        act_return: act_returns[stage][c].take(),
+                        grad_pool: grad_pools[stage][c].take(),
+                        grad_return: grad_returns[stage][c].take(),
+                    })
+                    .collect();
+                let io = StageIo {
+                    chunks,
+                    tgt_rx: if stage == p - 1 { tgt_rx.take() } else { None },
+                    loss_tx: loss_tx.clone(),
+                    timer_tx: timer_tx.clone(),
+                };
+                let ctx = WorkerCtx {
+                    stage,
+                    replica,
+                    dp,
+                    v,
+                    tp_rank: t,
+                    tpw,
+                    nlanes: if cfg.emulate_tp > 1 { cfg.emulate_tp } else { 1 },
+                    tg,
+                    aux_coef,
+                    start_step,
+                    sync_groups: sync_groups[stage][t].clone(),
+                    norm_group: if dp * tpw > 1 {
+                        Some(norm_groups[stage].clone())
                     } else {
                         None
                     },
-                    tx_bwd: fwd_producer(stage, c, p).map(|(ps, pc)| bwd_txs[ps][pc].clone()),
-                    act_pool: act_pools[stage][c].take(),
-                    act_return: act_returns[stage][c].take(),
-                    grad_pool: grad_pools[stage][c].take(),
-                    grad_return: grad_returns[stage][c].take(),
-                })
-                .collect();
-            let io = StageIo {
-                chunks,
-                tgt_rx: if stage == p - 1 { tgt_rx.take() } else { None },
-                loss_tx: loss_tx.clone(),
-                timer_tx: timer_tx.clone(),
-            };
-            let ctx = WorkerCtx {
-                stage,
-                replica,
-                dp,
-                v,
-                aux_coef,
-                start_step,
-                sync_groups: sync_groups[stage].clone(),
-                norm_group: if dp > 1 { Some(norm_groups[stage].clone()) } else { None },
-            };
-            let barrier = barrier.clone();
-            let sched = sched.clone();
-            let cfg = cfg.clone();
-            let handle = thread::Builder::new()
-                .name(format!("dp{replica}stage{stage}"))
-                .spawn(move || stage_worker(ctx, &cfg, &sched[stage], io, barrier))
-                .context("spawning stage thread")?;
-            handles.push(handle);
+                    tp_group: if tpw > 1 {
+                        Some(tp_groups[replica][stage].clone())
+                    } else {
+                        None
+                    },
+                };
+                let barrier = barrier.clone();
+                let sched = sched.clone();
+                let cfg = cfg.clone();
+                let handle = thread::Builder::new()
+                    .name(format!("dp{replica}tp{t}stage{stage}"))
+                    .spawn(move || stage_worker(ctx, &cfg, &sched[stage], io, barrier))
+                    .context("spawning stage thread")?;
+                handles.push(handle);
+            }
+            rep_driver_txs.push(fwd_txs[0][0].clone());
+            rep_tgt_txs.push(tgt_tx);
         }
-        driver_txs.push(fwd_txs[0][0].clone());
-        tgt_txs.push(tgt_tx);
+        driver_txs.push(rep_driver_txs);
+        tgt_txs.push(rep_tgt_txs);
         loss_rxs.push(loss_rx);
     }
     drop(timer_tx);
@@ -665,15 +768,23 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         let t0 = std::time::Instant::now();
         // route the global batch: replica r owns the contiguous microbatch
         // block [r·m/dp, (r+1)·m/dp) of the shared seeded stream — the
-        // per-replica data shard the bitwise dp-equivalence rests on
+        // per-replica data shard the bitwise dp-equivalence rests on; every
+        // tp lane of a replica receives the identical payload (replicated
+        // activations, sharded experts)
         for g_micro in 0..m {
             let (tokens, targets) = corpus.batch(b, s);
             let r = g_micro / m_local;
             let micro = g_micro % m_local;
-            driver_txs[r]
-                .send(ActMsg { micro, x: Tensor::i32(tokens, vec![b, s]), aux: 0.0 })
-                .ok();
-            tgt_txs[r].send(Tensor::i32(targets, vec![b, s])).ok();
+            for t in 0..tpw {
+                driver_txs[r][t]
+                    .send(ActMsg {
+                        micro,
+                        x: Tensor::i32(tokens.clone(), vec![b, s]),
+                        aux: 0.0,
+                    })
+                    .ok();
+                tgt_txs[r][t].send(Tensor::i32(targets.clone(), vec![b, s])).ok();
+            }
         }
         // collect per-micro losses in (replica, micro) order — the exact
         // summation order of the dp = 1 reference over the global batch
@@ -702,11 +813,11 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     drop(driver_txs);
     drop(tgt_txs);
 
-    let mut stage_timers = vec![Timers::new(); p * dp];
+    let mut stage_timers = vec![Timers::new(); p * dp * tpw];
     let mut executed_ops = vec![Vec::new(); p];
-    for (replica, stage, t, trace) in timer_rx {
-        stage_timers[replica * p + stage] = t;
-        if replica == 0 {
+    for (replica, stage, t, timers, trace) in timer_rx {
+        stage_timers[replica * (p * tpw) + stage * tpw + t] = timers;
+        if replica == 0 && t == 0 {
             executed_ops[stage] = trace;
         }
     }
@@ -715,9 +826,9 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     }
     if let Some(dir) = &cfg.checkpoint_dir {
         // stages wrote params + optimizer state; the driver owns the step
-        // counter the resume path fast-forwards the corpus by, and the dp
-        // the shards were taken at
-        checkpoint::save_train_state(dir, start_step + cfg.steps, dp)?;
+        // counter the resume path fast-forwards the corpus by, and the
+        // (dp, tp) the shards were taken at
+        checkpoint::save_train_state(dir, start_step + cfg.steps, dp, tg)?;
     }
 
     Ok(TrainReport {
@@ -725,29 +836,49 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         tokens_per_sec: total_tokens as f64 / run_start.elapsed().as_secs_f64(),
         stage_timers,
         dp,
+        tp: tpw,
         final_loss,
         executed_ops,
     })
 }
 
 /// A (chunk, micro)'s forward-time state, stashed on device for its
-/// backward: the uploaded input buffer (reused, not re-serialized), the
-/// accumulated aux scalar, and — on the loss chunk — the uploaded targets.
+/// backward: per segment, the activation input buffers that segment's
+/// backward re-consumes (reused, not re-serialized); the accumulated aux
+/// scalar (the loss tail's `aux_in`: ring-threaded upstream aux plus this
+/// chunk's own moe-segment aux); and — on the loss chunk — the uploaded
+/// targets.
 struct Stashed {
-    x: xla::PjRtBuffer,
+    seg_ins: Vec<Vec<xla::PjRtBuffer>>,
     aux: f32,
     targets: Option<xla::PjRtBuffer>,
+}
+
+/// A backward-walk cotangent: either a device-resident executable output
+/// fed straight into the upstream segment, or a host-combined payload
+/// (p2p dy, all-reduced d(hgt)) uploaded for it.
+enum CtBuf {
+    Dev(DeviceTensor),
+    Up(xla::PjRtBuffer),
+}
+
+impl CtBuf {
+    fn buf(&self) -> &xla::PjRtBuffer {
+        match self {
+            CtBuf::Dev(d) => d.buffer(),
+            CtBuf::Up(b) => b,
+        }
+    }
 }
 
 /// Drop-guard that poisons a failed worker's shared synchronization
 /// primitives: armed for the whole lifetime of [`stage_worker_inner`], it
 /// fires on **any** exit that isn't an explicit disarm — early `?` returns
-/// and panics alike (a panic in the hot loop would otherwise strand dp
+/// and panics alike (a panic in the hot loop would otherwise strand dp/tp
 /// peers inside a collective, and the driver inside the step barrier,
 /// forever: unlike mpsc channels, those have no disconnection semantics).
 struct PoisonOnFailure {
     groups: Vec<Arc<AllReduceGroup>>,
-    norm_group: Option<Arc<AllReduceGroup>>,
     barrier: Arc<Barrier>,
     armed: bool,
 }
@@ -760,18 +891,16 @@ impl Drop for PoisonOnFailure {
         for g in &self.groups {
             g.poison();
         }
-        if let Some(g) = &self.norm_group {
-            g.poison();
-        }
         self.barrier.poison();
     }
 }
 
 /// Wrapper around [`stage_worker_inner`] that keeps a failure on one
-/// (replica, stage) from silently deadlocking the rest of the dp group or
-/// the driver: any error or panic poisons this stage's collectives and the
-/// step barrier (via [`PoisonOnFailure`]), making every stranded peer
-/// panic with a clear message instead of blocking forever.
+/// (replica, stage, tp rank) from silently deadlocking the rest of the
+/// dp/tp group or the driver: any error or panic poisons this worker's
+/// collectives and the step barrier (via [`PoisonOnFailure`]), making
+/// every stranded peer panic with a clear message instead of blocking
+/// forever.
 fn stage_worker(
     ctx: WorkerCtx,
     cfg: &TrainerCfg,
@@ -779,17 +908,110 @@ fn stage_worker(
     io: StageIo,
     barrier: Arc<Barrier>,
 ) -> Result<()> {
-    let mut guard = PoisonOnFailure {
-        groups: ctx.sync_groups.clone(),
-        norm_group: ctx.norm_group.clone(),
-        barrier: barrier.clone(),
-        armed: true,
-    };
+    let mut groups = ctx.sync_groups.clone();
+    if let Some(g) = &ctx.norm_group {
+        groups.push(g.clone());
+    }
+    if let Some(g) = &ctx.tp_group {
+        groups.push(g.clone());
+    }
+    let mut guard = PoisonOnFailure { groups, barrier: barrier.clone(), armed: true };
     let result = stage_worker_inner(ctx, cfg, ops, io, barrier);
     if result.is_ok() {
         guard.armed = false;
     }
     result
+}
+
+/// One tensor lane's complete per-worker state: its stage view, parameter
+/// vector, staged device buffers, per-(chunk, segment) executables and
+/// per-chunk sharded optimizer + gradient accumulators. A live worker owns
+/// exactly one lane (its tp rank); the `emulate_tp` reference worker owns
+/// all `tg` lanes and steps them serially.
+struct Lane {
+    view: TpStageView,
+    params: Vec<Tensor>,
+    staged: Vec<xla::PjRtBuffer>,
+    opts: Vec<ShardedAdam>,
+    /// Gradient accumulators `[block][param]` (one block normally;
+    /// `emulate_dp` blocks in the dp = 1 reference mode).
+    grad_acc: Vec<Vec<Tensor>>,
+    /// Rank-order block sum of the reference mode (unused otherwise).
+    grad_sum: Vec<Tensor>,
+    /// Per-(chunk, segment) executables (fwd is None for the loss tail).
+    fwd_exes: Vec<Vec<Option<Rc<Executable>>>>,
+    bwd_exes: Vec<Vec<Rc<Executable>>>,
+    /// Staged constant aux cotangents per (chunk, segment) — `aux_coef`
+    /// for aux-carrying glue and this lane's rank-0 moe segments, 0.0 for
+    /// moe segments on ranks > 0 (the aux path is counted exactly once in
+    /// the rank sum).
+    daux_bufs: Vec<Vec<Option<xla::PjRtBuffer>>>,
+    /// Per-chunk flat element ranges of the Local-class (expert) params —
+    /// the clip-norm mask for tp ranks > 0.
+    local_masks: Vec<Vec<std::ops::Range<usize>>>,
+    /// Per-chunk tensor indices of the Summed-class (gating) params.
+    summed_ids: Vec<Vec<usize>>,
+    /// MoE partial readback scratch (reused per segment execution).
+    part_scratch: Vec<f32>,
+    /// Summed-class gradient flatten scratch (tp combine).
+    sum_scratch: Vec<f32>,
+    /// Gradient-accumulation readback scratch.
+    grad_scratch: Vec<f32>,
+    /// dp sync state (dp > 1 only — which implies a single lane).
+    buckets: Vec<Option<Bucket>>,
+    bucket_txs: Vec<Sender<Bucket>>,
+    bucket_rxs: Vec<Receiver<Bucket>>,
+    /// All-gather deposit buffer for the updated parameter shard.
+    gather_buf: Vec<f32>,
+}
+
+/// Combine one per-lane payload across the logical tp group into
+/// `comb_scratch`: the live collective's rank-order sum
+/// ([`AllReduceGroup::all_reduce_as`], one lane per worker) or the serial
+/// reference's bitwise-identical [`rank_order_sum_into`] over the
+/// emulation's in-worker lanes. This is the single combine used by the
+/// forward `y`, the backward `d(hgt)` and the gating-gradient rounds, so
+/// the live-equals-emulated contract cannot drift between them. `pick`
+/// selects which of the lane's scratch buffers participates.
+fn tp_combine_into(
+    ctx: &WorkerCtx,
+    lanes: &[Lane],
+    pick: fn(&Lane) -> &[f32],
+    comb_scratch: &mut Vec<f32>,
+) {
+    if let Some(g) = &ctx.tp_group {
+        // steady-state allocation-free despite the Arc return: the result
+        // is copied into the reused scratch (a copy the h2d upload needs
+        // anyway) and DROPPED before this group's next round, so the
+        // collective reclaims its storage (`Round::retired` — see the
+        // collectives module docs)
+        let arc = g.all_reduce_as(ctx.tp_rank, pick(&lanes[0]));
+        comb_scratch.clear();
+        comb_scratch.extend_from_slice(&arc);
+    } else {
+        let parts: Vec<&[f32]> = lanes.iter().map(pick).collect();
+        rank_order_sum_into(&parts, comb_scratch);
+    }
+}
+
+/// Accumulate a segment's parameter-gradient outputs into the matching
+/// accumulator sub-slice: the block's first microbatch overwrites, later
+/// ones add through the reused scratch.
+fn accumulate_seg_grads(
+    acc: &mut [Tensor],
+    grads: &[DeviceTensor],
+    fresh: bool,
+    scratch: &mut Vec<f32>,
+) -> Result<()> {
+    debug_assert_eq!(acc.len(), grads.len());
+    for (a, g) in acc.iter_mut().zip(grads) {
+        if fresh {
+            g.read_into(a)?;
+        } else {
+            g.add_into(a, scratch)?;
+        }
+    }
+    Ok(())
 }
 
 fn stage_worker_inner(
@@ -801,76 +1023,133 @@ fn stage_worker_inner(
 ) -> Result<()> {
     let (stage, replica, dp, v) = (ctx.stage, ctx.replica, ctx.dp, ctx.v);
     let (aux_coef, start_step) = (ctx.aux_coef, ctx.start_step);
+    let (tg, nlanes) = (ctx.tg, ctx.nlanes);
     let mut rt = Runtime::open(&cfg.artifacts)?;
     let p = rt.manifest.model.stages;
     let overlap = cfg.overlap_wrap_edges;
-    let chunk_specs = rt.manifest.chunks[stage].clone();
-    let ranges: Vec<std::ops::Range<usize>> =
-        (0..v).map(|c| rt.manifest.chunk_param_range(stage, c)).collect();
-    // per-chunk executables: fwd for pipeline chunks, the fused
-    // fwd+loss+bwd for the loss chunk (whose `fwd` spec is None)
-    let mut fwd_exes = Vec::with_capacity(v);
-    let mut bwd_exes = Vec::with_capacity(v);
-    for spec in &chunk_specs {
-        fwd_exes.push(match &spec.fwd {
-            Some(name) => Some(rt.load(name)?),
-            None => None,
-        });
-        bwd_exes.push(rt.load(&spec.bwd)?);
-    }
-    // parameters: fresh from the artifacts, or restored from a checkpoint
-    let mut params = match &cfg.resume_dir {
-        Some(dir) => checkpoint::load_stage(dir, stage, &rt.manifest)?,
-        None => rt.load_stage_params(stage)?,
-    };
-    // per-(stage, chunk) sharded optimizer state: this worker is dp rank
-    // `replica`, so each chunk's shard is segment(replica, numel, dp) —
-    // the whole chunk at dp = 1, which keeps the single-replica update
-    // bitwise the historic stage-level fused sweep (see module docs)
-    let mut opts: Vec<ShardedAdam> = (0..v)
-        .map(|c| ShardedAdam::new(cfg.lr, &params[ranges[c].clone()], replica, dp))
-        .collect();
-    if let Some(dir) = &cfg.resume_dir {
-        checkpoint::load_optimizer_rank(dir, stage, replica, &mut opts)?;
-    }
-    let mut timers = Timers::new();
     let m_local = cfg.num_micro / dp; // microbatches this replica runs
-    // §Perf L3: upload parameters to the PJRT device once per optimizer
-    // step; microbatch executions reuse the staged buffers, each chunk
-    // addressing its sub-slice.
-    let mut staged = rt.stage_buffers(&params)?;
-    // the aux cotangent is a run constant for non-loss chunks: stage it
-    // once per chunk executable
-    let mut aux_coef_bufs = Vec::with_capacity(v);
-    for c in 0..v {
-        aux_coef_bufs.push(if chunk_specs[c].fwd.is_none() {
-            None
+    // gradient blocks: one normally; emulate_dp blocks in the dp = 1
+    // reference mode (each block sums its contiguous microbatch slice,
+    // blocks are summed in rank order at step end)
+    let nblocks = cfg.emulate_dp.max(1);
+    let micros_per_block = m_local / nblocks;
+
+    // ---- per-lane state (live: exactly this worker's tp rank) ----
+    let mut lanes: Vec<Lane> = Vec::with_capacity(nlanes);
+    for l in 0..nlanes {
+        let grank = ctx.grank(l);
+        let view = rt.manifest.stage_view(stage, grank, tg)?;
+        let mut fwd_exes = Vec::with_capacity(v);
+        let mut bwd_exes = Vec::with_capacity(v);
+        for c in 0..v {
+            let mut f = Vec::new();
+            let mut b = Vec::new();
+            for seg in &view.chunks[c] {
+                f.push(match &seg.fwd {
+                    Some(name) => Some(rt.load(name)?),
+                    None => None,
+                });
+                b.push(rt.load(&seg.bwd)?);
+            }
+            fwd_exes.push(f);
+            bwd_exes.push(b);
+        }
+        // parameters: fresh from the artifacts, or restored from a
+        // checkpoint (per-tp-rank files)
+        let params = match &cfg.resume_dir {
+            Some(dir) => checkpoint::load_params_with(
+                dir,
+                &stage_param_file(stage, grank, tg),
+                &view.params,
+                view.total_bytes,
+            )?,
+            None => rt.load_params_bin(&view.bin, &view.params, view.total_bytes)?,
+        };
+        // per-(stage, chunk) sharded optimizer state: this worker is dp
+        // rank `replica`, so each chunk's shard is
+        // segment(replica, numel, dp) — the whole chunk at dp = 1
+        let mut opts: Vec<ShardedAdam> = (0..v)
+            .map(|c| {
+                let r = view.chunk_param_range(c);
+                ShardedAdam::new(cfg.lr, &params[r], replica, dp)
+            })
+            .collect();
+        if let Some(dir) = &cfg.resume_dir {
+            checkpoint::load_optimizer_tp(dir, stage, grank, tg, replica, &mut opts)?;
+        }
+        let staged = rt.stage_buffers(&params)?;
+        // constant aux cotangents, staged once per (chunk, segment)
+        let mut daux_bufs = Vec::with_capacity(v);
+        for c in 0..v {
+            let mut row = Vec::new();
+            for (k, seg) in view.chunks[c].iter().enumerate() {
+                row.push(if seg.aux {
+                    let slot = view.seg_param_range(c, k).len() + seg.n_ins() + seg.n_cts();
+                    let val = match seg.kind {
+                        // moe: only the lane at tp rank 0 carries the
+                        // replicated aux path backward
+                        SegKind::Moe => {
+                            if grank == 0 {
+                                aux_coef
+                            } else {
+                                0.0
+                            }
+                        }
+                        _ => aux_coef,
+                    };
+                    Some(bwd_exes[c][k].upload_input(slot, &Tensor::scalar_f32(val))?)
+                } else {
+                    None
+                });
+            }
+            daux_bufs.push(row);
+        }
+        let grad_acc: Vec<Vec<Tensor>> = (0..nblocks)
+            .map(|_| params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect())
+            .collect();
+        let grad_sum: Vec<Tensor> = if nblocks > 1 {
+            params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect()
         } else {
-            let k = ranges[c].len();
-            Some(bwd_exes[c].upload_input(k + 2, &Tensor::scalar_f32(aux_coef))?)
+            Vec::new()
+        };
+        let local_masks = (0..v).map(|c| view.local_elem_ranges(c)).collect();
+        let summed_ids = (0..v).map(|c| view.summed_tensor_ids(c)).collect();
+        let buckets: Vec<Option<Bucket>> = (0..v).map(|_| Some(Bucket::default())).collect();
+        lanes.push(Lane {
+            view,
+            params,
+            staged,
+            opts,
+            grad_acc,
+            grad_sum,
+            fwd_exes,
+            bwd_exes,
+            daux_bufs,
+            local_masks,
+            summed_ids,
+            part_scratch: Vec::new(),
+            sum_scratch: Vec::new(),
+            grad_scratch: Vec::new(),
+            buckets,
+            bucket_txs: Vec::new(),
+            bucket_rxs: Vec::new(),
+            gather_buf: Vec::new(),
         });
     }
+    // segment plans + parameter ranges are layout-identical across lanes
+    let seg_specs: Vec<Vec<SegSpec>> = lanes[0].view.chunks.clone();
+    let seg_ranges: Vec<Vec<std::ops::Range<usize>>> = (0..v)
+        .map(|c| (0..seg_specs[c].len()).map(|k| lanes[0].view.seg_param_range(c, k)).collect())
+        .collect();
+    let chunk_ranges: Vec<std::ops::Range<usize>> =
+        (0..v).map(|c| lanes[0].view.chunk_param_range(c)).collect();
 
+    let mut timers = Timers::new();
     // forward inputs stashed ON DEVICE for the backward, keyed by
     // (chunk, micro); targets are stashed at Fwd time (GPipe drains
     // backwards, so FIFO consumption at Bwd would mispair micros)
     let mut stash: Vec<Vec<Option<Stashed>>> =
         (0..v).map(|_| (0..m_local).map(|_| None).collect()).collect();
-    // gradient accumulation: one accumulator block normally; emulate_dp
-    // blocks in the dp = 1 reference mode (each block sums its contiguous
-    // microbatch slice, blocks are summed in rank order at step end)
-    let nblocks = cfg.emulate_dp.max(1);
-    let micros_per_block = m_local / nblocks;
-    let mut grad_acc: Vec<Vec<Tensor>> = (0..nblocks)
-        .map(|_| params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect())
-        .collect();
-    // rank-order block sum of the reference mode (unused otherwise)
-    let mut grad_sum: Vec<Tensor> = if nblocks > 1 {
-        params.iter().map(|t| Tensor::zeros(t.shape.clone())).collect()
-    } else {
-        Vec::new()
-    };
-    let mut grad_scratch: Vec<f32> = Vec::new();
     // per-(chunk, block) microbatch counts (block 0 is the only block
     // outside the reference mode); a chunk's gradient is complete when its
     // counts sum to m_local
@@ -879,22 +1158,18 @@ fn stage_worker_inner(
     // the chunk-backward-complete boundary the bucket hook keys off: op
     // index after which chunk c's gradient is final for the step
     let ready_idx = chunk_grad_ready(ops, v);
-    // per-chunk buckets (flat contribution + scattered segment), reused
-    // across steps; with overlap they round-trip through the sync workers
-    let mut buckets: Vec<Option<Bucket>> =
-        (0..v).map(|_| Some(Bucket::default())).collect();
     // per-chunk sync workers: run reduce_scatter_into concurrently with
-    // this stage's remaining backward ops (overlap mode, dp > 1 only)
-    let mut bucket_txs: Vec<Sender<Bucket>> = Vec::new();
-    let mut bucket_rxs: Vec<Receiver<Bucket>> = Vec::new();
+    // this stage's remaining backward ops (overlap mode, dp > 1 only —
+    // which implies a single lane)
     let mut sync_workers = Vec::new();
     if dp > 1 && cfg.overlap_dp_sync {
+        let lane = &mut lanes[0];
         for c in 0..v {
             let (btx, brx) = channel::<Bucket>();
             let (dtx, drx) = channel::<Bucket>();
             let group = ctx.sync_groups[c].clone();
             let worker = thread::Builder::new()
-                .name(format!("dp{replica}stage{stage}sync{c}"))
+                .name(format!("dp{replica}tp{}stage{stage}sync{c}", ctx.tp_rank))
                 .spawn(move || {
                     for mut bucket in brx {
                         group.reduce_scatter_into(replica, &bucket.flat, &mut bucket.seg);
@@ -902,17 +1177,20 @@ fn stage_worker_inner(
                     }
                 })
                 .context("spawning dp sync worker")?;
-            bucket_txs.push(btx);
-            bucket_rxs.push(drx);
+            lane.bucket_txs.push(btx);
+            lane.bucket_rxs.push(drx);
             sync_workers.push(worker);
         }
     }
-    // clip-norm partial exchange: rank r contributes its per-chunk segment
-    // sums-of-squares at slots [c·dp + r]; the rank-order scalar sum fills
-    // the (chunk, rank) matrix every rank combines identically
-    let mut norm_scalars = vec![0.0f32; v * dp];
-    // all-gather deposit buffer for the updated parameter shard
-    let mut gather_buf: Vec<f32> = Vec::new();
+    // clip-norm partial exchange matrix: slot (c, r, t) with r the dp rank
+    // (or emulate_dp block) and t the tp rank — every lane fills its own
+    // slots and combines the full matrix in the same fixed order, so the
+    // resulting norm is bitwise identical everywhere
+    let rb = if dp > 1 { dp } else { nblocks };
+    let mut norm_scalars = vec![0.0f32; v * rb * tg];
+    // combined-payload staging buffer (tp all-reduce results round-trip
+    // host <-> device through it; steady-state allocation-free)
+    let mut comb_scratch: Vec<f32> = Vec::new();
     // step-0 op trace for the live-vs-sim schedule check
     let mut trace: Vec<Op> = Vec::new();
     // staged wrap-edge payloads (d2h issued, send deferred — module docs);
@@ -926,172 +1204,441 @@ fn stage_worker_inner(
             flush_staged(&mut pending, &io.chunks);
             match *op {
                 Op::Fwd { micro, chunk } => {
-                    let is_loss = chunk_specs[chunk].fwd.is_none();
-                    let k = ranges[chunk].len();
+                    let segs = &seg_specs[chunk];
+                    let nseg = segs.len();
                     let cio = &mut io.chunks[chunk];
                     let msg = timers.time("p2p_recv", || cio.rx_fwd.recv());
                     let msg = msg.context("fwd channel closed")?;
                     debug_assert_eq!(msg.micro, micro);
-                    // the executable whose input slot this microbatch's x
-                    // occupies: fwd for pipeline chunks, the fused
-                    // fwd+loss+bwd for the loss chunk
-                    let exe = fwd_exes[chunk].as_ref().unwrap_or(&bwd_exes[chunk]);
-                    let dev_x = timers.time("h2d", || exe.upload_input(k, &msg.x))?;
+                    let mut aux_acc = msg.aux;
+                    // upload the incoming payload once into the opening
+                    // segment's activation slot (glue fwd, or the fused
+                    // loss tail when the chunk is a single segment)
+                    let first_exe: Rc<Executable> = match &lanes[0].fwd_exes[chunk][0] {
+                        Some(e) => e.clone(),
+                        None => lanes[0].bwd_exes[chunk][0].clone(),
+                    };
+                    let first_slot = seg_ranges[chunk][0].len();
+                    let dev_x =
+                        timers.time("h2d", || first_exe.upload_input(first_slot, &msg.x))?;
                     // recycle the payload storage upstream (driver token
                     // feeds are i32 and unpooled)
                     if let (Some(ret), Ok(vv)) = (&cio.act_return, msg.x.into_f32()) {
                         ret.put(vv);
                     }
-                    if is_loss {
-                        // fused fwd+loss+bwd happens at Bwd; stash this
-                        // micro's uploaded input + targets (sent in fwd
-                        // order)
-                        let tgt =
-                            io.tgt_rx.as_ref().unwrap().recv().context("targets closed")?;
-                        let dev_tgt = timers
-                            .time("h2d", || bwd_exes[chunk].upload_input(k + 1, &tgt))?;
-                        stash[chunk][micro] =
-                            Some(Stashed { x: dev_x, aux: msg.aux, targets: Some(dev_tgt) });
-                    } else {
-                        let exe = fwd_exes[chunk].as_ref().unwrap();
-                        let out = timers.time("fwd", || {
-                            exe.run_staged_device(&staged[ranges[chunk].clone()], &[&dev_x])
-                        })?;
-                        // outputs: (activations, aux) — activations are read
-                        // back into a recycled slab only because the p2p
-                        // edge is a host channel; aux is a scalar readback
-                        let aux = msg.aux + out[1].item()?;
-                        let act = {
-                            let pool = cio.act_pool.as_mut().unwrap();
-                            let slab = pool.take(out[0].numel());
-                            timers.time("d2h", || out[0].read_to_tensor(slab))?
-                        };
-                        stash[chunk][micro] =
-                            Some(Stashed { x: dev_x, aux: msg.aux, targets: None });
-                        if overlap && is_wrap_fwd(stage, chunk, p, v) {
-                            // wrap hop: d2h issued above, send deferred to
-                            // the next op boundary so the readback overlaps
-                            // this stage's next dispatch
-                            timers.add_count("wrap_staged", 1);
-                            pending.push_back(StagedMsg::Act { chunk, micro, x: act, aux });
+                    let mut cur: Vec<xla::PjRtBuffer> = vec![dev_x];
+                    let mut seg_ins: Vec<Vec<xla::PjRtBuffer>> = Vec::with_capacity(nseg);
+                    let mut targets_buf: Option<xla::PjRtBuffer> = None;
+                    for k in 0..nseg {
+                        let seg = &segs[k];
+                        let range = seg_ranges[chunk][k].clone();
+                        match seg.kind {
+                            SegKind::LossTail => {
+                                // fused fwd+loss+bwd happens at Bwd; stash
+                                // this micro's inputs + targets (sent in
+                                // fwd order)
+                                let tgt = io
+                                    .tgt_rx
+                                    .as_ref()
+                                    .expect("loss tail without a target feed")
+                                    .recv()
+                                    .context("targets closed")?;
+                                let slot = range.len() + seg.n_ins();
+                                let exe = lanes[0].bwd_exes[chunk][k].clone();
+                                targets_buf =
+                                    Some(timers.time("h2d", || exe.upload_input(slot, &tgt))?);
+                                seg_ins.push(std::mem::take(&mut cur));
+                            }
+                            SegKind::Glue => {
+                                let exe = lanes[0].fwd_exes[chunk][k]
+                                    .as_ref()
+                                    .expect("glue without a forward artifact")
+                                    .clone();
+                                let args: Vec<&xla::PjRtBuffer> = cur.iter().collect();
+                                let out = timers.time("fwd", || {
+                                    exe.run_staged_device(&lanes[0].staged[range.clone()], &args)
+                                })?;
+                                if seg.aux {
+                                    // monolithic chunk artifacts thread
+                                    // their own aux out
+                                    aux_acc += out.last().unwrap().item()?;
+                                }
+                                seg_ins.push(std::mem::take(&mut cur));
+                                if k + 1 == nseg {
+                                    // chunk output: read back into a
+                                    // recycled slab only because the p2p
+                                    // edge is a host channel
+                                    let act = {
+                                        let pool = cio.act_pool.as_mut().unwrap();
+                                        let slab = pool.take(out[0].numel());
+                                        timers.time("d2h", || out[0].read_to_tensor(slab))?
+                                    };
+                                    if overlap && is_wrap_fwd(stage, chunk, p, v) {
+                                        // wrap hop: d2h issued above, send
+                                        // deferred to the next op boundary
+                                        timers.add_count("wrap_staged", 1);
+                                        pending.push_back(StagedMsg::Act {
+                                            chunk,
+                                            micro,
+                                            x: act,
+                                            aux: aux_acc,
+                                        });
+                                    } else {
+                                        cio.tx_fwd
+                                            .as_ref()
+                                            .unwrap()
+                                            .send(ActMsg { micro, x: act, aux: aux_acc })
+                                            .ok();
+                                    }
+                                } else {
+                                    // chain device-resident into the next
+                                    // segment: (h) or (x_res, hgt)
+                                    let mut outs = out;
+                                    if seg.aux {
+                                        outs.pop();
+                                    }
+                                    cur = outs
+                                        .into_iter()
+                                        .map(DeviceTensor::into_buffer)
+                                        .collect();
+                                }
+                            }
+                            SegKind::Moe => {
+                                // cur = [x_res, hgt] from the pre-moe glue
+                                let hgt = cur.pop().expect("moe without hgt");
+                                let x_res = cur.pop().expect("moe without x_res");
+                                debug_assert!(cur.is_empty());
+                                // each lane's expert-sharded partial; only
+                                // the first lane's (replicated) aux counts
+                                let mut first_aux = 0.0f32;
+                                for (l, lane) in lanes.iter_mut().enumerate() {
+                                    let exe = lane.fwd_exes[chunk][k]
+                                        .as_ref()
+                                        .expect("moe without a forward artifact")
+                                        .clone();
+                                    let out = timers.time("moe_fwd", || {
+                                        exe.run_staged_device(
+                                            &lane.staged[range.clone()],
+                                            &[&hgt],
+                                        )
+                                    })?;
+                                    timers.time("d2h", || {
+                                        out[0].read_into_vec(&mut lane.part_scratch)
+                                    })?;
+                                    if l == 0 {
+                                        first_aux = out[1].item()?;
+                                    }
+                                }
+                                aux_acc += first_aux;
+                                // inner-node all-reduce of the partials
+                                // (live), or the bitwise-identical serial
+                                // rank-order sum (emulate_tp)
+                                timers.time("tp_combine", || {
+                                    tp_combine_into(
+                                        &ctx,
+                                        &lanes,
+                                        |l| l.part_scratch.as_slice(),
+                                        &mut comb_scratch,
+                                    )
+                                });
+                                // upload the combined y into the next
+                                // segment's pair slot
+                                let next_exe: Rc<Executable> =
+                                    match &lanes[0].fwd_exes[chunk][k + 1] {
+                                        Some(e) => e.clone(),
+                                        None => lanes[0].bwd_exes[chunk][k + 1].clone(),
+                                    };
+                                let y_slot = seg_ranges[chunk][k + 1].len() + 1;
+                                let shape = next_exe.spec.inputs[y_slot].shape.clone();
+                                let t = Tensor::f32(std::mem::take(&mut comb_scratch), shape);
+                                let y_buf =
+                                    timers.time("h2d", || next_exe.upload_input(y_slot, &t))?;
+                                comb_scratch = t.into_f32()?;
+                                seg_ins.push(vec![hgt]);
+                                cur = vec![x_res, y_buf];
+                            }
+                        }
+                    }
+                    stash[chunk][micro] =
+                        Some(Stashed { seg_ins, aux: aux_acc, targets: targets_buf });
+                }
+                Op::Bwd { micro, chunk } => {
+                    let segs = &seg_specs[chunk];
+                    let nseg = segs.len();
+                    let st = stash[chunk][micro].take().context("missing stash")?;
+                    let block = micro / micros_per_block;
+                    let fresh = acc_count[chunk][block] == 0;
+                    let cio = &mut io.chunks[chunk];
+                    // ---- root cotangents from the chunk's last segment ----
+                    let k_last = nseg - 1;
+                    let mut cts: Vec<CtBuf>;
+                    {
+                        let seg = &segs[k_last];
+                        let range = seg_ranges[chunk][k_last].clone();
+                        let ndx = seg.n_dx();
+                        if seg.kind == SegKind::LossTail {
+                            // fused fwd+loss+bwd over the replicated tail:
+                            // execute once, accumulate into every lane
+                            let exe = lanes[0].bwd_exes[chunk][k_last].clone();
+                            let aux_slot = range.len() + seg.n_ins() + 1;
+                            let aux_in = exe
+                                .upload_input(aux_slot, &Tensor::scalar_f32(st.aux))?;
+                            let mut args: Vec<&xla::PjRtBuffer> =
+                                st.seg_ins[k_last].iter().collect();
+                            args.push(st.targets.as_ref().expect("loss tail without targets"));
+                            args.push(&aux_in);
+                            let out = timers.time("lossgrad", || {
+                                exe.run_staged_device(&lanes[0].staged[range.clone()], &args)
+                            })?;
+                            // outputs: (loss, dx..., dparams...)
+                            if ctx.grank(0) == 0 {
+                                io.loss_tx.send(out[0].item()?).ok();
+                            }
+                            timers.time("grad_acc", || -> Result<()> {
+                                for lane in lanes.iter_mut() {
+                                    accumulate_seg_grads(
+                                        &mut lane.grad_acc[block][range.clone()],
+                                        &out[1 + ndx..],
+                                        fresh,
+                                        &mut lane.grad_scratch,
+                                    )?;
+                                }
+                                Ok(())
+                            })?;
+                            cts = out
+                                .into_iter()
+                                .skip(1)
+                                .take(ndx)
+                                .map(CtBuf::Dev)
+                                .collect();
                         } else {
-                            cio.tx_fwd
+                            // pipeline chunk: dy arrives over the p2p edge
+                            let gmsg = timers
+                                .time("p2p_recv", || cio.rx_bwd.as_ref().unwrap().recv());
+                            let gmsg = gmsg.context("bwd channel closed")?;
+                            debug_assert_eq!(gmsg.micro, micro);
+                            let exe = lanes[0].bwd_exes[chunk][k_last].clone();
+                            let dy_slot = range.len() + seg.n_ins();
+                            let dev_dy =
+                                timers.time("h2d", || exe.upload_input(dy_slot, &gmsg.dy))?;
+                            if let (Some(ret), Ok(vv)) = (&cio.grad_return, gmsg.dy.into_f32()) {
+                                ret.put(vv);
+                            }
+                            let out = {
+                                let lane0 = &lanes[0];
+                                let mut args: Vec<&xla::PjRtBuffer> =
+                                    st.seg_ins[k_last].iter().collect();
+                                args.push(&dev_dy);
+                                if let Some(d) = &lane0.daux_bufs[chunk][k_last] {
+                                    args.push(d);
+                                }
+                                timers.time("bwd", || {
+                                    exe.run_staged_device(&lane0.staged[range.clone()], &args)
+                                })?
+                            };
+                            timers.time("grad_acc", || -> Result<()> {
+                                for lane in lanes.iter_mut() {
+                                    accumulate_seg_grads(
+                                        &mut lane.grad_acc[block][range.clone()],
+                                        &out[ndx..],
+                                        fresh,
+                                        &mut lane.grad_scratch,
+                                    )?;
+                                }
+                                Ok(())
+                            })?;
+                            cts = out.into_iter().take(ndx).map(CtBuf::Dev).collect();
+                        }
+                    }
+                    // ---- reverse walk over the remaining segments ----
+                    for k in (0..k_last).rev() {
+                        let seg = &segs[k];
+                        let range = seg_ranges[chunk][k].clone();
+                        match seg.kind {
+                            SegKind::Moe => {
+                                // cotangents from the downstream glue:
+                                // (d x_res, d y); every lane runs its
+                                // partial backward, d(hgt) partials combine
+                                // in rank order
+                                let mut it = cts.into_iter();
+                                let dx_res = it.next().expect("moe missing dx_res ct");
+                                let dy = it.next().expect("moe missing dy ct");
+                                for lane in lanes.iter_mut() {
+                                    let exe = lane.bwd_exes[chunk][k].clone();
+                                    let out = {
+                                        let args: Vec<&xla::PjRtBuffer> = vec![
+                                            &st.seg_ins[k][0],
+                                            dy.buf(),
+                                            lane.daux_bufs[chunk][k]
+                                                .as_ref()
+                                                .expect("moe without daux"),
+                                        ];
+                                        timers.time("moe_bwd", || {
+                                            exe.run_staged_device(
+                                                &lane.staged[range.clone()],
+                                                &args,
+                                            )
+                                        })?
+                                    };
+                                    timers.time("d2h", || {
+                                        out[0].read_into_vec(&mut lane.part_scratch)
+                                    })?;
+                                    timers.time("grad_acc", || {
+                                        accumulate_seg_grads(
+                                            &mut lane.grad_acc[block][range.clone()],
+                                            &out[1..],
+                                            fresh,
+                                            &mut lane.grad_scratch,
+                                        )
+                                    })?;
+                                }
+                                timers.time("tp_combine", || {
+                                    tp_combine_into(
+                                        &ctx,
+                                        &lanes,
+                                        |l| l.part_scratch.as_slice(),
+                                        &mut comb_scratch,
+                                    )
+                                });
+                                // upload the summed d(hgt) as the upstream
+                                // glue's second cotangent
+                                let up_exe = lanes[0].bwd_exes[chunk][k - 1].clone();
+                                let up_seg = &segs[k - 1];
+                                let slot =
+                                    seg_ranges[chunk][k - 1].len() + up_seg.n_ins() + 1;
+                                let shape = up_exe.spec.inputs[slot].shape.clone();
+                                let t = Tensor::f32(std::mem::take(&mut comb_scratch), shape);
+                                let dhgt_buf =
+                                    timers.time("h2d", || up_exe.upload_input(slot, &t))?;
+                                comb_scratch = t.into_f32()?;
+                                cts = vec![dx_res, CtBuf::Up(dhgt_buf)];
+                            }
+                            SegKind::Glue => {
+                                let exe = lanes[0].bwd_exes[chunk][k].clone();
+                                let ndx = seg.n_dx();
+                                let out = {
+                                    let lane0 = &lanes[0];
+                                    let mut args: Vec<&xla::PjRtBuffer> =
+                                        st.seg_ins[k].iter().collect();
+                                    for ct in &cts {
+                                        args.push(ct.buf());
+                                    }
+                                    if let Some(d) = &lane0.daux_bufs[chunk][k] {
+                                        args.push(d);
+                                    }
+                                    timers.time("bwd", || {
+                                        exe.run_staged_device(
+                                            &lane0.staged[range.clone()],
+                                            &args,
+                                        )
+                                    })?
+                                };
+                                timers.time("grad_acc", || -> Result<()> {
+                                    for lane in lanes.iter_mut() {
+                                        accumulate_seg_grads(
+                                            &mut lane.grad_acc[block][range.clone()],
+                                            &out[ndx..],
+                                            fresh,
+                                            &mut lane.grad_scratch,
+                                        )?;
+                                    }
+                                    Ok(())
+                                })?;
+                                cts = out.into_iter().take(ndx).map(CtBuf::Dev).collect();
+                            }
+                            SegKind::LossTail => unreachable!("loss tail is always last"),
+                        }
+                    }
+                    acc_count[chunk][block] += 1;
+                    // the chunk's dx leaves the stage (unless this is the
+                    // token-consuming chunk (0, 0))
+                    if segs[0].n_dx() > 0 && cio.tx_bwd.is_some() {
+                        let dx = match &cts[0] {
+                            CtBuf::Dev(d) => d,
+                            CtBuf::Up(_) => unreachable!("chunk dx is an executable output"),
+                        };
+                        let pool = cio.grad_pool.as_mut().unwrap();
+                        let slab = pool.take(dx.numel());
+                        let dy = timers.time("d2h", || dx.read_to_tensor(slab))?;
+                        if overlap && is_wrap_bwd(stage, chunk) {
+                            timers.add_count("wrap_staged", 1);
+                            pending.push_back(StagedMsg::Grad { chunk, micro, dy });
+                        } else {
+                            cio.tx_bwd
                                 .as_ref()
                                 .unwrap()
-                                .send(ActMsg { micro, x: act, aux })
+                                .send(GradMsg { micro, dy })
                                 .ok();
                         }
                     }
-                }
-                Op::Bwd { micro, chunk } => {
-                    let is_loss = chunk_specs[chunk].fwd.is_none();
-                    let k = ranges[chunk].len();
-                    let stashed = stash[chunk][micro].take().context("missing stash")?;
-                    let cio = &mut io.chunks[chunk];
-                    let out;
-                    let grads_at;
-                    let dx_at;
-                    if is_loss {
-                        let targets = stashed.targets.as_ref().unwrap();
-                        let aux_in = bwd_exes[chunk]
-                            .upload_input(k + 2, &Tensor::scalar_f32(stashed.aux))?;
-                        out = timers.time("lossgrad", || {
-                            bwd_exes[chunk].run_staged_device(
-                                &staged[ranges[chunk].clone()],
-                                &[&stashed.x, targets, &aux_in],
-                            )
-                        })?;
-                        // outputs: (loss, dx, dparams...)
-                        io.loss_tx.send(out[0].item()?).ok();
-                        dx_at = Some(1);
-                        grads_at = 2;
-                    } else {
-                        let gmsg =
-                            timers.time("p2p_recv", || cio.rx_bwd.as_ref().unwrap().recv());
-                        let gmsg = gmsg.context("bwd channel closed")?;
-                        debug_assert_eq!(gmsg.micro, micro);
-                        let dev_dy = timers
-                            .time("h2d", || bwd_exes[chunk].upload_input(k + 1, &gmsg.dy))?;
-                        if let (Some(ret), Ok(vv)) = (&cio.grad_return, gmsg.dy.into_f32()) {
-                            ret.put(vv);
+                    // ---- chunk-gradient-ready boundary ----
+                    // the chunk's accumulation is complete for the step:
+                    // first combine the tp Summed-class (gating) partials
+                    // across ranks, then (dp overlap) hand the flattened
+                    // bucket to the sync worker so the reduce-scatter runs
+                    // under the remaining backward ops. The tp combine is a
+                    // blocking collective, so any wrap payload staged just
+                    // above goes on the wire first (the flush-before-block
+                    // invariant of the deferral).
+                    if ready_idx[chunk] == Some(op_idx) {
+                        if tg > 1 {
+                            flush_staged(&mut pending, &io.chunks);
                         }
-                        let aux_buf = aux_coef_bufs[chunk].as_ref().unwrap();
-                        out = timers.time("bwd", || {
-                            bwd_exes[chunk].run_staged_device(
-                                &staged[ranges[chunk].clone()],
-                                &[&stashed.x, &dev_dy, aux_buf],
-                            )
-                        })?;
-                        if stage == 0 && chunk == 0 {
-                            // virtual stage 0 consumes int tokens: no dx
-                            dx_at = None;
-                            grads_at = 0;
-                        } else {
-                            dx_at = Some(0);
-                            grads_at = 1;
-                        }
-                    }
-                    let grads = &out[grads_at..];
-                    debug_assert_eq!(grads.len(), k);
-                    // accumulate on host (the optimizer lives in L3); the
-                    // chunk's first microbatch of a block overwrites its
-                    // sub-slice, later ones add through the reused scratch
-                    let block = micro / micros_per_block;
-                    timers.time("grad_acc", || -> Result<()> {
-                        for (acc, g) in
-                            grad_acc[block][ranges[chunk].clone()].iter_mut().zip(grads)
-                        {
-                            if acc_count[chunk][block] == 0 {
-                                g.read_into(acc)?;
-                            } else {
-                                g.add_into(acc, &mut grad_scratch)?;
-                            }
-                        }
-                        Ok(())
-                    })?;
-                    acc_count[chunk][block] += 1;
-                    if let Some(i) = dx_at {
-                        if cio.tx_bwd.is_some() {
-                            let pool = cio.grad_pool.as_mut().unwrap();
-                            let slab = pool.take(out[i].numel());
-                            let dy = timers.time("d2h", || out[i].read_to_tensor(slab))?;
-                            if overlap && is_wrap_bwd(stage, chunk) {
-                                timers.add_count("wrap_staged", 1);
-                                pending.push_back(StagedMsg::Grad { chunk, micro, dy });
-                            } else {
-                                cio.tx_bwd
-                                    .as_ref()
-                                    .unwrap()
-                                    .send(GradMsg { micro, dy })
-                                    .ok();
-                            }
-                        }
-                    }
-                    // ---- bucket hook: chunk-backward-complete boundary ----
-                    // this chunk's gradient is final for the step; with
-                    // overlap on, hand the flattened bucket to the sync
-                    // worker so the reduce-scatter runs under the
-                    // remaining backward ops
-                    if dp > 1 && ready_idx[chunk] == Some(op_idx) {
                         debug_assert_eq!(acc_count[chunk].iter().sum::<usize>(), m_local);
-                        if cfg.overlap_dp_sync {
+                        if tg > 1 && !lanes[0].summed_ids[chunk].is_empty() {
+                            let ids = lanes[0].summed_ids[chunk].clone();
+                            for b_i in 0..nblocks {
+                                timers.time("tp_wg_combine", || -> Result<()> {
+                                    // flatten each lane's Summed-class
+                                    // gradients, combine in rank order,
+                                    // scatter the true sums back
+                                    for lane in lanes.iter_mut() {
+                                        lane.sum_scratch.clear();
+                                        for &i in &ids {
+                                            lane.sum_scratch.extend_from_slice(
+                                                lane.grad_acc[b_i][i].as_f32()?,
+                                            );
+                                        }
+                                    }
+                                    tp_combine_into(
+                                        &ctx,
+                                        &lanes,
+                                        |l| l.sum_scratch.as_slice(),
+                                        &mut comb_scratch,
+                                    );
+                                    for lane in lanes.iter_mut() {
+                                        let mut off = 0usize;
+                                        for &i in &ids {
+                                            let dst = lane.grad_acc[b_i][i].as_f32_mut()?;
+                                            dst.copy_from_slice(
+                                                &comb_scratch[off..off + dst.len()],
+                                            );
+                                            off += dst.len();
+                                        }
+                                    }
+                                    Ok(())
+                                })?;
+                            }
+                        }
+                        if dp > 1 && cfg.overlap_dp_sync {
+                            let lane = &mut lanes[0];
                             let mut bucket =
-                                buckets[chunk].take().context("bucket in flight")?;
+                                lane.buckets[chunk].take().context("bucket in flight")?;
                             timers.time("dp_flatten", || {
                                 adam::flatten_grads(
-                                    &grad_acc[0][ranges[chunk].clone()],
+                                    &lane.grad_acc[0][chunk_ranges[chunk].clone()],
                                     &mut bucket.flat,
                                 )
                             })?;
                             timers.add_count("dp_bucket_staged", 1);
-                            bucket_txs[chunk].send(bucket).ok();
+                            lane.bucket_txs[chunk].send(bucket).ok();
                         }
                     }
                 }
             }
             // record the op only once it fully executed (recvs included):
             // this is the live order the schedule/sim tests compare against
-            if _step == 0 && replica == 0 {
+            if _step == 0 && replica == 0 && ctx.tp_rank == 0 {
                 trace.push(*op);
             }
         }
@@ -1116,45 +1663,61 @@ fn stage_worker_inner(
         // the fused sweep reads each gradient element once
         let mean = 1.0 / cfg.num_micro as f32;
         if dp > 1 {
-            // ---- live ZeRO-1 step over the replica group ----
+            // ---- live ZeRO-1 step over the replica group (one lane) ----
+            let lane = &mut lanes[0];
             // 1. collect every chunk's reduce-scattered gradient segment:
             //    already in flight under the backward with overlap on,
             //    performed serially here with it off (the A/B reference)
             timers.time("dp_sync", || -> Result<()> {
                 for c in 0..v {
                     let bucket = if cfg.overlap_dp_sync {
-                        bucket_rxs[c].recv().context("dp sync worker died")?
+                        lane.bucket_rxs[c].recv().context("dp sync worker died")?
                     } else {
-                        let mut b = buckets[c].take().context("bucket missing")?;
-                        adam::flatten_grads(&grad_acc[0][ranges[c].clone()], &mut b.flat)?;
-                        ctx.sync_groups[c].reduce_scatter_into(replica, &b.flat, &mut b.seg);
-                        b
+                        let mut bkt =
+                            lane.buckets[c].take().context("bucket missing")?;
+                        adam::flatten_grads(
+                            &lane.grad_acc[0][chunk_ranges[c].clone()],
+                            &mut bkt.flat,
+                        )?;
+                        ctx.sync_groups[c].reduce_scatter_into(
+                            replica,
+                            &bkt.flat,
+                            &mut bkt.seg,
+                        );
+                        bkt
                     };
-                    buckets[c] = Some(bucket);
+                    lane.buckets[c] = Some(bucket);
                 }
                 Ok(())
             })?;
-            // 2. clip factor from the canonical (chunk, rank) norm
-            //    decomposition — identical bits on every rank
+            // 2. clip factor from the canonical (chunk, dp rank, tp rank)
+            //    norm decomposition — identical bits on every lane. Under
+            //    tp, ranks > 0 count only their expert-local elements
+            //    (masked), so shared gradients enter the norm exactly once.
             let mut gscale = mean;
             if let Some(max_norm) = cfg.grad_clip {
                 timers.time("dp_norm", || -> Result<()> {
                     norm_scalars.iter_mut().for_each(|x| *x = 0.0);
-                    for (c, bucket) in buckets.iter().enumerate() {
-                        let seg = &bucket.as_ref().unwrap().seg;
-                        norm_scalars[c * dp + replica] =
-                            seg.iter().fold(0.0f32, |a, x| a + x * x);
+                    for c in 0..v {
+                        let seg_ref = &lane.buckets[c].as_ref().unwrap().seg;
+                        let total_c = lane.opts[c].total();
+                        let (lo, _hi) = segment(replica, total_c, dp);
+                        let mask = if ctx.grank(0) == 0 {
+                            None
+                        } else {
+                            Some(lane.local_masks[c].as_slice())
+                        };
+                        norm_scalars[c * (rb * tg) + replica * tg + ctx.tp_rank] =
+                            masked_seg_sumsq(seg_ref, lo, mask);
                     }
                     let mat = ctx
                         .norm_group
                         .as_ref()
                         .expect("norm group exists at dp > 1")
-                        .all_reduce_as(replica, &norm_scalars);
+                        .all_reduce_as(replica * ctx.tpw + ctx.tp_rank, &norm_scalars);
                     let mut sumsq = 0.0f32;
-                    for c in 0..v {
-                        for r in 0..dp {
-                            sumsq += mat[c * dp + r];
-                        }
+                    for x in mat.iter() {
+                        sumsq += x;
                     }
                     let norm = sumsq.sqrt() * mean;
                     if norm > max_norm {
@@ -1164,91 +1727,143 @@ fn stage_worker_inner(
                 })?;
             }
             // 3. Adam on the owned shard, then all-gather fresh parameters
-            for (c, opt) in opts.iter_mut().enumerate() {
+            for c in 0..v {
+                let r = chunk_ranges[c].clone();
+                let Lane { params, opts, buckets, gather_buf, .. } = &mut *lane;
+                let opt = &mut opts[c];
                 opt.lr = lr_now;
-                let r = ranges[c].clone();
-                let seg = &buckets[c].as_ref().unwrap().seg;
-                timers.time("optimizer", || opt.update_flat(&mut params[r.clone()], seg, gscale))?;
+                let seg_ref = &buckets[c].as_ref().unwrap().seg;
+                timers.time("optimizer", || {
+                    opt.update_flat(&mut params[r.clone()], seg_ref, gscale)
+                })?;
                 timers.time("dp_gather", || {
                     adam::gather_updated_params(
                         opt,
                         &ctx.sync_groups[c],
                         &mut params[r.clone()],
-                        &mut gather_buf,
+                        gather_buf,
                     )
                 })?;
             }
         } else {
-            timers.time("optimizer", || -> Result<()> {
-                let grads = if nblocks > 1 {
-                    // reference mode: sum the block gradients in rank
-                    // order — elementwise from 0.0 in block order, exactly
-                    // the reduce-scatter's slot-order summation
+            // ---- dp = 1: per-lane sharded sweep (with the reference-mode
+            // block sum and the general (c, r, t) norm decomposition) ----
+            if nblocks > 1 {
+                // reference mode: sum the block gradients in rank order —
+                // elementwise from 0.0 in block order, exactly the
+                // reduce-scatter's slot-order summation
+                for lane in lanes.iter_mut() {
+                    let Lane { grad_acc, grad_sum, .. } = &mut *lane;
                     for (ti, t) in grad_sum.iter_mut().enumerate() {
                         let dst = t.as_f32_mut()?;
                         dst.iter_mut().for_each(|x| *x = 0.0);
-                        for block in &grad_acc {
-                            for (d, s) in dst.iter_mut().zip(block[ti].as_f32()?) {
-                                *d += s;
+                        for blk in grad_acc.iter() {
+                            for (d, s2) in dst.iter_mut().zip(blk[ti].as_f32()?) {
+                                *d += s2;
                             }
                         }
-                    }
-                    &grad_sum
-                } else {
-                    &grad_acc[0]
-                };
-                let mut gscale = mean;
-                if let Some(max_norm) = cfg.grad_clip {
-                    let norm = if nblocks > 1 {
-                        // the canonical (chunk, rank) decomposition a live
-                        // emulate_dp-way group computes (module docs)
-                        let mut sumsq = 0.0f32;
-                        for c in 0..v {
-                            for part in
-                                segmented_sumsq(&grads[ranges[c].clone()], nblocks)?
-                            {
-                                sumsq += part;
-                            }
-                        }
-                        sumsq.sqrt() * mean
-                    } else {
-                        global_grad_norm(grads)? * mean
-                    };
-                    if norm > max_norm {
-                        gscale *= max_norm / norm;
                     }
                 }
-                // per-(stage, chunk) sharded sweep: each chunk's optimizer
-                // updates its contiguous parameter shard — bitwise the
-                // historic stage-level fused_update at one replica
-                for (c, opt) in opts.iter_mut().enumerate() {
-                    opt.lr = lr_now;
-                    let r = ranges[c].clone();
-                    opt.update_shard(&mut params[r.clone()], &grads[r], gscale)?;
+            }
+            let mut gscale = mean;
+            if let Some(max_norm) = cfg.grad_clip {
+                let norm = if tg == 1 && nblocks == 1 {
+                    // the historic single-pass stage norm (bitwise-
+                    // preserving for plain runs)
+                    global_grad_norm(&lanes[0].grad_acc[0])? * mean
+                } else {
+                    norm_scalars.iter_mut().for_each(|x| *x = 0.0);
+                    for c in 0..v {
+                        let crange = chunk_ranges[c].clone();
+                        let total_c = lanes[0].opts[c].total();
+                        for r_i in 0..rb {
+                            let (lo, hi) = segment(r_i, total_c, rb);
+                            for (l, lane) in lanes.iter().enumerate() {
+                                let gref: &[Tensor] = if nblocks > 1 {
+                                    &lane.grad_sum
+                                } else {
+                                    &lane.grad_acc[0]
+                                };
+                                let mask = if ctx.grank(l) == 0 {
+                                    None
+                                } else {
+                                    Some(lane.local_masks[c].as_slice())
+                                };
+                                norm_scalars[c * (rb * tg) + r_i * tg + ctx.grank(l)] =
+                                    masked_range_sumsq(&gref[crange.clone()], lo, hi, mask)?;
+                            }
+                        }
+                    }
+                    // live tp lanes exchange their slots; the emulation
+                    // already holds the full matrix locally
+                    let mut sumsq = 0.0f32;
+                    if let Some(g) = &ctx.norm_group {
+                        let mat = g
+                            .all_reduce_as(replica * ctx.tpw + ctx.tp_rank, &norm_scalars);
+                        for x in mat.iter() {
+                            sumsq += x;
+                        }
+                    } else {
+                        for x in &norm_scalars {
+                            sumsq += x;
+                        }
+                    }
+                    sumsq.sqrt() * mean
+                };
+                if norm > max_norm {
+                    gscale *= max_norm / norm;
+                }
+            }
+            timers.time("optimizer", || -> Result<()> {
+                for lane in lanes.iter_mut() {
+                    let Lane { params, opts, grad_acc, grad_sum, .. } = &mut *lane;
+                    let gref: &[Tensor] =
+                        if nblocks > 1 { &*grad_sum } else { &grad_acc[0] };
+                    for (c, opt) in opts.iter_mut().enumerate() {
+                        opt.lr = lr_now;
+                        let r = chunk_ranges[c].clone();
+                        opt.update_shard(&mut params[r.clone()], &gref[r], gscale)?;
+                    }
                 }
                 Ok(())
             })?;
         }
         acc_count.iter_mut().for_each(|row| row.iter_mut().for_each(|a| *a = 0));
         // re-stage the updated parameters in place for the next step
-        timers.time("stage_params", || rt.restage_buffers(&params, &mut staged))?;
+        timers.time("stage_params", || -> Result<()> {
+            for lane in lanes.iter_mut() {
+                let Lane { params, staged, .. } = &mut *lane;
+                rt.restage_buffers(params, staged)?;
+            }
+            Ok(())
+        })?;
         barrier.wait();
     }
 
     // retire the sync workers (no further buckets will arrive)
-    drop(bucket_txs);
+    for lane in lanes.iter_mut() {
+        lane.bucket_txs.clear();
+    }
     for w in sync_workers {
         w.join().expect("dp sync worker panicked");
     }
 
     if let Some(dir) = &cfg.checkpoint_dir {
-        if replica == 0 {
-            // parameters are bitwise-identical across replicas after the
-            // final all-gather; one copy suffices
-            checkpoint::save_stage(dir, stage, &rt.manifest, &params)?;
+        for (l, lane) in lanes.iter().enumerate() {
+            let grank = ctx.grank(l);
+            if replica == 0 {
+                // parameters are bitwise-identical across replicas after
+                // the final all-gather; one copy per tp rank suffices
+                checkpoint::save_params_with(
+                    dir,
+                    &stage_param_file(stage, grank, tg),
+                    &lane.view.params,
+                    &lane.params,
+                )?;
+            }
+            // every (tp, dp) lane owns (and must checkpoint) its moments
+            checkpoint::save_optimizer_tp(dir, stage, grank, tg, replica, &lane.opts)?;
         }
-        // every rank owns (and must checkpoint) its own moment shards
-        checkpoint::save_optimizer_rank(dir, stage, replica, &opts)?;
     }
 
     // slab economy: after warmup every p2p payload should come from the
@@ -1264,6 +1879,6 @@ fn stage_worker_inner(
         }
     }
 
-    io.timer_tx.send((replica, stage, timers, trace)).ok();
+    io.timer_tx.send((replica, stage, ctx.tp_rank, timers, trace)).ok();
     Ok(())
 }

@@ -78,6 +78,30 @@ pub fn check_topo_order(
     Ok(())
 }
 
+/// Whether live-execution tests can run: a real PJRT backend must be
+/// linked (the vendored offline stub moves bytes but cannot execute).
+/// Prints a distinctive SKIP line the CI job summary counts. Set
+/// `PPMOE_REQUIRE_LIVE=1` to turn the skip into a hard failure (for
+/// environments that are SUPPOSED to have the real backend).
+#[allow(dead_code)] // not every test binary links every helper
+pub fn live_backend() -> bool {
+    if xla::backend_available() {
+        return true;
+    }
+    if std::env::var("PPMOE_REQUIRE_LIVE").map(|v| v == "1").unwrap_or(false) {
+        panic!(
+            "PPMOE_REQUIRE_LIVE=1 but the xla backend is the vendored \
+             data-movement stub — link the real xla-rs/PJRT backend"
+        );
+    }
+    eprintln!(
+        "SKIP: live execution needs the real xla-rs/PJRT backend (this \
+         build links the vendored data-movement stub — see docs/hotpath.md \
+         §Offline-build note)"
+    );
+    false
+}
+
 /// Resolve the artifacts directory, or `None` (with a skip message) when
 /// this checkout has no artifacts — keeping `cargo test -q` green without
 /// the AOT toolchain.
@@ -87,6 +111,11 @@ pub fn check_topo_order(
 ///    a directory without a manifest (a misconfigured run should fail
 ///    loudly, not silently skip).
 /// 2. `artifacts-tiny/`, then `artifacts/` under the repo root.
+///
+/// This only gates on the ARTIFACTS being present; tests that execute them
+/// must additionally gate on [`live_backend`] (manifest/param-contract
+/// tests run under the stub too, and do run in CI once the workflow has
+/// built the artifact cache).
 #[allow(dead_code)] // not every test binary links every helper
 pub fn artifacts_dir() -> Option<PathBuf> {
     if let Ok(dir) = std::env::var("PPMOE_ARTIFACTS") {
@@ -110,6 +139,22 @@ pub fn artifacts_dir() -> Option<PathBuf> {
          PPMOE_ARTIFACTS) to enable this integration test"
     );
     None
+}
+
+/// [`artifacts_dir`] + [`live_backend`]: the gate for tests that EXECUTE
+/// artifacts (training runs, TP×EP numerics) rather than just parsing
+/// their manifests/bins.
+#[allow(dead_code)] // not every test binary links every helper
+pub fn live_artifacts_dir() -> Option<PathBuf> {
+    let dir = artifacts_dir()?;
+    live_backend().then_some(dir)
+}
+
+/// [`chunked_artifacts_dir`] + [`live_backend`].
+#[allow(dead_code)] // not every test binary links every helper
+pub fn live_chunked_artifacts_dir() -> Option<PathBuf> {
+    let dir = chunked_artifacts_dir()?;
+    live_backend().then_some(dir)
 }
 
 /// Resolve an artifacts directory exported with interleaved chunks

@@ -115,7 +115,7 @@ fn assert_dp_equivalence(arts: PathBuf, dp: usize, micro: usize, steps: usize) {
 
 #[test]
 fn dp2_and_dp4_bitwise_match_dp1_summed_reference() {
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     // m = 8 splits as 2×4 and 4×2 per-replica microbatch blocks
     assert_dp_equivalence(arts.clone(), 2, 8, 5);
     assert_dp_equivalence(arts, 4, 8, 5);
@@ -125,7 +125,7 @@ fn dp2_and_dp4_bitwise_match_dp1_summed_reference() {
 fn dp2_bitwise_on_interleaved_chunked_artifacts() {
     // the bucketed overlap with v > 1 chunks per stage: several buckets
     // per stage fire at different points of the backward drain
-    let Some(arts) = common::chunked_artifacts_dir() else { return };
+    let Some(arts) = common::live_chunked_artifacts_dir() else { return };
     let manifest = ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
     let p = manifest.model.stages;
     // per-replica micros must stay divisible by p for the interleaved
@@ -138,7 +138,7 @@ fn dp2_checkpoint_resume_is_bitwise() {
     // interrupt-and-resume at dp = 2: 6 straight steps vs 4 -> checkpoint
     // (params + BOTH ranks' moment shards + step/dp) -> resume 2. Losses
     // of the overlapping steps and the final parameters must be bitwise.
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let manifest = ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
     let p = manifest.model.stages;
     let ck_full = tmp("resfull");
@@ -184,7 +184,7 @@ fn dp2_checkpoint_resume_is_bitwise() {
 
 #[test]
 fn dp_misconfiguration_fails_loudly() {
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     // --dp must divide --micro
     let mut cfg = cfg_for(arts.clone(), 1, 3);
     cfg.dp = 2;

@@ -24,7 +24,7 @@ fn max_rel_err(a: &Tensor, b: &Tensor) -> f32 {
 
 #[test]
 fn stagewise_grads_equal_full_model_grads() {
-    let Some(dir) = common::artifacts_dir() else { return };
+    let Some(dir) = common::live_artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     if !rt.manifest.artifacts.contains_key("full_lossgrad") {
         eprintln!("skipping: artifacts exported with --no-full");
@@ -101,7 +101,7 @@ fn microbatch_grad_accumulation_linearity() {
     // gradient over two microbatches must equal the sum of their individual
     // gradients (trivially true mathematically; this guards the artifact
     // plumbing — e.g. stale-state bugs — not the math).
-    let Some(dir) = common::artifacts_dir() else { return };
+    let Some(dir) = common::live_artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     if rt.manifest.model.virtual_stages > 1 {
         eprintln!("skipping: lossgrad covers only the last chunk on chunked artifacts");
@@ -187,7 +187,7 @@ fn live_v1_op_order_bitwise_matches_plain_1f1b() {
     // blocking recv) must equal the plain PipeDream-flush order, inlined
     // here as an independent reference — and two identically-seeded runs
     // must produce bitwise-identical loss trajectories.
-    let Some(dir) = common::artifacts_dir() else { return };
+    let Some(dir) = common::live_artifacts_dir() else { return };
     let manifest =
         ppmoe::runtime::Manifest::load(&dir.join("manifest.json")).unwrap();
     if manifest.model.virtual_stages > 1 {
@@ -234,7 +234,7 @@ fn live_interleaved_op_order_matches_sim_order() {
     // The executed op order of the interleaved trainer must equal the
     // schedule that `simulate_interleaved` consumes, stage for stage, and
     // that order must be a valid topological order of the chunk DAG.
-    let Some(dir) = common::chunked_artifacts_dir() else { return };
+    let Some(dir) = common::live_chunked_artifacts_dir() else { return };
     let manifest =
         ppmoe::runtime::Manifest::load(&dir.join("manifest.json")).unwrap();
     let (p, v) = (manifest.model.stages, manifest.model.virtual_stages);
@@ -261,7 +261,7 @@ fn wrap_edge_overlap_is_bitwise_invisible() {
     // The staged d2h → channel → h2d wrap-edge pipeline changes WHEN a
     // payload is sent, never what is computed: with overlap on vs off the
     // executed op streams and the per-step losses must be bitwise equal.
-    let Some(dir) = common::chunked_artifacts_dir() else { return };
+    let Some(dir) = common::live_chunked_artifacts_dir() else { return };
     let manifest =
         ppmoe::runtime::Manifest::load(&dir.join("manifest.json")).unwrap();
     let p = manifest.model.stages;
@@ -296,7 +296,7 @@ fn interleaved_trainer_converges_and_matches_gpipe_math() {
     // §3.1.3 at v > 1: schedules change overlap, not math — the interleaved
     // 1F1B loss trajectory equals the chunked GPipe one, and training still
     // converges through the wrap-around p2p ring.
-    let Some(dir) = common::chunked_artifacts_dir() else { return };
+    let Some(dir) = common::live_chunked_artifacts_dir() else { return };
     let manifest =
         ppmoe::runtime::Manifest::load(&dir.join("manifest.json")).unwrap();
     let p = manifest.model.stages;

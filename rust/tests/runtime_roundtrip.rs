@@ -20,7 +20,7 @@ fn manifest_matches_artifacts_on_disk() {
 
 #[test]
 fn stage0_fwd_executes_with_loaded_params() {
-    let Some(dir) = common::artifacts_dir() else { return };
+    let Some(dir) = common::live_artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     let exe = rt.load("stage0_fwd").unwrap();
     let params = rt.load_stage_params(0).unwrap();
@@ -84,7 +84,7 @@ fn params_layout_is_consistent() {
 
 #[test]
 fn loss_eval_runs_and_is_positive() {
-    let Some(dir) = common::artifacts_dir() else { return };
+    let Some(dir) = common::live_artifacts_dir() else { return };
     let mut rt = Runtime::open(&dir).unwrap();
     let m = rt.manifest.model.clone();
     let last = m.stages - 1;

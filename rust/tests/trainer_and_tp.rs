@@ -23,7 +23,7 @@ fn base_cfg(artifacts: PathBuf) -> TrainerCfg {
 
 #[test]
 fn trainer_runs_and_loss_decreases() {
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let report = train(&base_cfg(arts)).unwrap();
     assert_eq!(report.steps.len(), 12);
     for s in &report.steps {
@@ -41,7 +41,7 @@ fn trainer_runs_and_loss_decreases() {
 #[test]
 fn trainer_deterministic_across_runs() {
     // same seed + schedule => identical loss trajectory (bitwise)
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let a = train(&base_cfg(arts.clone())).unwrap();
     let b = train(&base_cfg(arts)).unwrap();
     for (x, y) in a.steps.iter().zip(&b.steps) {
@@ -52,7 +52,7 @@ fn trainer_deterministic_across_runs() {
 #[test]
 fn gpipe_schedule_matches_1f1b_losses() {
     // §3.1.3: schedules change overlap, not math — same grads, same losses.
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let mut cfg = base_cfg(arts);
     cfg.steps = 6;
     let one = train(&cfg).unwrap();
@@ -71,7 +71,7 @@ fn gpipe_schedule_matches_1f1b_losses() {
 
 #[test]
 fn more_microbatches_still_converge() {
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let mut cfg = base_cfg(arts);
     cfg.num_micro = 4;
     cfg.steps = 8;
@@ -85,7 +85,7 @@ fn checkpoint_eval_improves_over_init() {
     // train briefly with checkpointing, then compare held-out validation
     // loss of the checkpoint vs the initial parameters (Fig. 5's
     // validation-loss panel, in miniature).
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let ckpt = std::env::temp_dir().join(format!("pppmoe_ck_{}", std::process::id()));
     let mut cfg = base_cfg(arts.clone());
     cfg.steps = 40; // enough to clear the early-training transient
@@ -111,7 +111,7 @@ fn sharded_optimizer_checkpoint_resume_is_bitwise() {
     // -> resume 2 steps. Losses of the overlapping steps and the final
     // parameters must be BITWISE equal — exercised on chunked artifacts so
     // every stage carries several per-chunk optimizer shards.
-    let Some(arts) = common::chunked_artifacts_dir() else { return };
+    let Some(arts) = common::live_chunked_artifacts_dir() else { return };
     let manifest =
         ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
     let p = manifest.model.stages;
@@ -163,7 +163,7 @@ fn sharded_optimizer_checkpoint_resume_is_bitwise() {
 #[test]
 fn warmup_scales_first_steps() {
     // with warmup the first update is tiny -> step-1 loss closer to step-0
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let mut cfg = base_cfg(arts);
     cfg.steps = 4;
     cfg.lr = 0.01;
@@ -181,7 +181,7 @@ fn warmup_scales_first_steps() {
 fn tp_ep_partials_match_monolithic() {
     // §3.3.2-3.3.4 in real execution: rank partials all-reduce to the
     // monolithic MoE layer's output.
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let r = ppmoe::tp::run_tp_moe(&arts, 42).unwrap();
     assert!(
         r.max_abs_err < 1e-4,
@@ -196,7 +196,7 @@ fn tp_ep_partials_match_monolithic() {
 
 #[test]
 fn tp_ep_deterministic_per_seed() {
-    let Some(arts) = common::artifacts_dir() else { return };
+    let Some(arts) = common::live_artifacts_dir() else { return };
     let a = ppmoe::tp::run_tp_moe(&arts, 1).unwrap();
     let b = ppmoe::tp::run_tp_moe(&arts, 1).unwrap();
     assert_eq!(a.output, b.output);
