@@ -5,7 +5,7 @@ PY ?= python3
 CARGO ?= cargo
 
 .PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 build test test-dp \
-        test-dp-py test-tp test-tp-py bench doc clean
+        test-dp-py test-tp test-tp-py test-elastic bench doc clean
 
 all: artifacts build
 
@@ -66,6 +66,15 @@ test-tp-py:
 	else \
 	    echo "SKIP: pytest not importable under $(PY) — python tp tests skipped"; \
 	fi
+
+# The chaos tier: deterministic fault injection (panic/err/stall kinds,
+# plain and interleaved artifacts, composed with tp) + elastic recovery
+# bitwise vs an uninterrupted run at the reduced dp
+# (rust/tests/elastic_equivalence.rs; docs/fault_tolerance.md). The
+# contract tier (grammar, root-cause selection) runs everywhere; the
+# kill-a-replica tier self-skips without artifacts/backend.
+test-elastic:
+	$(CARGO) test --test elastic_equivalence -q -- --nocapture
 
 # Hot-path microbenches (writes BENCH_hotpath.json: incl. the
 # dp_sync/{serialized,overlapped} dp={2,4} A/B rows, the

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         tp: args.get_usize("tp", 1)?,
         emulate_dp: 0,
         emulate_tp: 0,
+        ..Default::default()
     };
     eprintln!(
         "training: {} steps × {} microbatches, lr {}, schedule {:?}{}{}{}",

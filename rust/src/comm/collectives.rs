@@ -483,20 +483,38 @@ impl Barrier {
     /// [`Barrier::poison`]ed — a participant died and the group can never
     /// be complete again.
     pub fn wait(&self) {
+        assert!(
+            self.wait_checked(),
+            "barrier poisoned: a participant failed and the group can \
+             never be complete"
+        );
+    }
+
+    /// Non-panicking [`Barrier::wait`], for the trainer's supervision
+    /// loop: the driver must observe a worker death as a recoverable
+    /// `false` (and go excise the rank) rather than unwind through the
+    /// panic [`Barrier::wait`] raises for workers. Poison is terminal, so
+    /// the abandoned arrival count of a `false` return can never matter.
+    pub fn wait_checked(&self) -> bool {
         let mut st = self.lock_state();
-        Self::check_poison(&st);
+        if st.2 {
+            return false;
+        }
         let my_gen = st.0;
         st.1 += 1;
         if st.1 == self.n {
             st.0 += 1;
             st.1 = 0;
             self.cv.notify_all();
-            return;
+            return true;
         }
         while st.0 == my_gen {
             st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
-            Self::check_poison(&st);
+            if st.2 {
+                return false;
+            }
         }
+        true
     }
 
     /// Mark the barrier dead: a participant failed and will never arrive,
@@ -511,14 +529,6 @@ impl Barrier {
 
     fn lock_state(&self) -> std::sync::MutexGuard<'_, (u64, usize, bool)> {
         self.state.lock().unwrap_or_else(|e| e.into_inner())
-    }
-
-    fn check_poison(st: &(u64, usize, bool)) {
-        assert!(
-            !st.2,
-            "barrier poisoned: a participant failed and the group can \
-             never be complete"
-        );
     }
 }
 
@@ -941,6 +951,174 @@ mod tests {
         // and later arrivals die immediately
         let b2 = b.clone();
         assert!(thread::spawn(move || b2.wait()).join().is_err());
+    }
+
+    #[test]
+    fn wait_checked_reports_poison_instead_of_panicking() {
+        let b = Barrier::new(2);
+        let waiter = {
+            let b = b.clone();
+            thread::spawn(move || b.wait_checked())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.poison();
+        assert!(!waiter.join().unwrap(), "blocked wait_checked must return false");
+        // poisoned-on-entry reports false immediately
+        assert!(!b.wait_checked());
+        // a healthy barrier completes with true
+        let b2 = Barrier::new(1);
+        assert!(b2.wait_checked());
+    }
+
+    #[test]
+    fn poison_releases_split_phase_gather_waiters() {
+        // a rank dies BETWEEN the reduce-scatter and all-gather phases (the
+        // sharded-optimizer window where the Adam update runs): the peer is
+        // parked inside all_gather_as and must be released loudly
+        let g = AllReduceGroup::with_algo(2, Algo::Chunked);
+        let peer = {
+            let g = g.clone();
+            thread::spawn(move || {
+                let seg = g.reduce_scatter_as(0, &[1.0, 2.0]);
+                g.all_gather_as(0, &seg);
+            })
+        };
+        // rank 1 completes its scatter so the round reaches the gather
+        // phase, then dies before gathering
+        let _seg = g.reduce_scatter_as(1, &[3.0, 4.0]);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        g.poison();
+        let err = peer.join().unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("poisoned"), "gather waiter died with: {msg}");
+    }
+
+    #[test]
+    fn poison_releases_scalar_legacy_turn_takers() {
+        // the grad-norm groups are scalar and may run the legacy
+        // turn-taking path; ranks parked waiting for a dead rank's turn
+        // must be released too
+        let g = AllReduceGroup::with_algo(4, Algo::Legacy);
+        let waiters: Vec<_> = (1..4)
+            .map(|r| {
+                let g = g.clone();
+                thread::spawn(move || g.all_reduce_as(r, &[r as f32]))
+            })
+            .collect();
+        // rank 0 (whose turn is first) never arrives
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        g.poison();
+        for w in waiters {
+            assert!(w.join().is_err(), "legacy turn-taker must be released");
+        }
+    }
+
+    #[test]
+    fn poison_reaches_every_primitive_on_a_2x2_grid() {
+        // dp=2 x tp=2 layout: per-tp-lane dp sync groups (split-phase),
+        // one scalar norm group over all 4 workers, per-replica tp groups,
+        // and the step barrier. Worker (0,0) dies in each of the trainer's
+        // three failure modes — panic (poison from the unwind guard),
+        // err-return (explicit poison before returning), and stall
+        // (a third party — the heartbeat monitor — poisons) — while the
+        // three survivors are parked in DIFFERENT primitives. All must die
+        // loudly.
+        struct PoisonOnUnwind {
+            groups: Vec<Arc<AllReduceGroup>>,
+            barrier: Arc<Barrier>,
+        }
+        impl Drop for PoisonOnUnwind {
+            fn drop(&mut self) {
+                for g in &self.groups {
+                    g.poison();
+                }
+                self.barrier.poison();
+            }
+        }
+
+        for kind in ["panic", "err", "stall"] {
+            let dp_lane: Vec<_> =
+                (0..2).map(|_| AllReduceGroup::with_algo(2, Algo::Chunked)).collect();
+            let norm = AllReduceGroup::with_algo(4, Algo::Chunked);
+            let tp_g: Vec<_> =
+                (0..2).map(|_| AllReduceGroup::with_algo(2, Algo::Chunked)).collect();
+            let barrier = Barrier::new(4);
+            let all: Vec<Arc<AllReduceGroup>> = dp_lane
+                .iter()
+                .chain(tp_g.iter())
+                .chain(std::iter::once(&norm))
+                .cloned()
+                .collect();
+
+            // survivor (0,1): tp collective of replica 0 (peer = the victim)
+            let s01 = {
+                let g = tp_g[0].clone();
+                thread::spawn(move || g.all_reduce_as(1, &[1.0]))
+            };
+            // survivor (1,0): split-phase dp sync of tp lane 0
+            let s10 = {
+                let g = dp_lane[0].clone();
+                thread::spawn(move || {
+                    let mut out = Vec::new();
+                    g.reduce_scatter_into(1, &[1.0, 2.0, 3.0], &mut out);
+                    g.all_gather_as(1, &out);
+                })
+            };
+            // survivor (1,1): scalar norm collective over all 4 workers
+            let s11 = {
+                let g = norm.clone();
+                thread::spawn(move || g.all_reduce_as(3, &[0.5]))
+            };
+            // the driver's seat: parked at the step barrier
+            let sbar = {
+                let b = barrier.clone();
+                thread::spawn(move || b.wait())
+            };
+            std::thread::sleep(std::time::Duration::from_millis(20));
+
+            match kind {
+                "panic" => {
+                    let (all, barrier) = (all.clone(), barrier.clone());
+                    let victim = thread::spawn(move || {
+                        let _guard = PoisonOnUnwind { groups: all, barrier };
+                        panic!("injected fault (panic)");
+                    });
+                    assert!(victim.join().is_err());
+                }
+                "err" => {
+                    // the worker's Err path poisons explicitly before
+                    // returning the error
+                    for g in &all {
+                        g.poison();
+                    }
+                    barrier.poison();
+                }
+                "stall" => {
+                    // the victim hangs; a monitor thread promotes the
+                    // stall by poisoning on its behalf
+                    let (all, barrier) = (all.clone(), barrier.clone());
+                    let monitor = thread::spawn(move || {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        for g in &all {
+                            g.poison();
+                        }
+                        barrier.poison();
+                    });
+                    monitor.join().unwrap();
+                }
+                _ => unreachable!(),
+            }
+
+            for (name, h) in [("tp", s01), ("norm", s11)] {
+                assert!(h.join().is_err(), "{kind}: {name} waiter not released");
+            }
+            assert!(s10.join().is_err(), "{kind}: dp split-phase waiter not released");
+            assert!(sbar.join().is_err(), "{kind}: barrier waiter not released");
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "no-overlap",
     "no-dp-overlap",
     "overlap-dp",
+    "elastic",
 ];
 
 impl Args {
@@ -90,6 +91,17 @@ impl Args {
         }
     }
 
+    /// A double-precision float option with a default (durations in
+    /// seconds: `--mttf`, `--ckpt-every`).
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
     /// Whether a boolean flag was passed.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
@@ -128,5 +140,16 @@ mod tests {
         let a = parse("--flag --opt val");
         assert!(a.has_flag("flag"));
         assert_eq!(a.get("opt"), Some("val"));
+    }
+
+    #[test]
+    fn elastic_is_a_boolean_even_before_a_value() {
+        // without the KNOWN_FLAGS entry, `--elastic --fault ...` would eat
+        // the next token as its value
+        let a = parse("train --elastic --fault step=4,kind=panic");
+        assert!(a.has_flag("elastic"));
+        assert_eq!(a.get("fault"), Some("step=4,kind=panic"));
+        assert!((a.get_f64("mttf", 3600.0).unwrap() - 3600.0).abs() < 1e-9);
+        assert!(parse("--mttf soon").get_f64("mttf", 0.0).is_err());
     }
 }

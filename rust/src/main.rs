@@ -50,12 +50,35 @@ COMMANDS:
                                   must match the checkpoint)
                 --no-overlap      eager wrap-edge sends instead of the
                                   staged d2h -> channel -> h2d pipeline
+                --checkpoint-every K
+                                  atomically commit the --checkpoint dir
+                                  every K steps (not just at the end)
+                --elastic         supervise the run: on a worker failure,
+                                  excise the dead dp rank, re-shard the
+                                  ZeRO-1 optimizer state from the last
+                                  checkpoint, and resume at dp-1
+                                  (requires --checkpoint; see
+                                  docs/fault_tolerance.md)
+                --max-recoveries N
+                                  give up after N excisions (default: 1)
+                --retry-backoff-ms B
+                                  sleep B*attempt ms before relaunching
+                --fault SPEC      deterministic fault injection:
+                                  \"step=S,replica=R,stage=P,tp=T,op=O,
+                                  kind=panic|stall|err\" (';'-separated
+                                  for several; step and kind required)
+                --heartbeat-timeout-ms T
+                                  promote a stall into a failure once
+                                  EVERY live worker is >T ms silent
   sweep       print Table 2 (simulated throughput, 13 rows)
   breakdown   print Tables 1 and 3 (simulated forward breakdowns)
   simulate    one point: --model NAME --dp N --tp N --pp N
                          --scheme dense|dpmoe|ppmoe --gpus N [--zero]
                          [--overlap-dp]  model the backward-overlapped
                                          dp gradient sync
+                         [--mttf SECS [--ckpt-every SECS]]  report the
+                                         Young/Daly checkpoint-interval
+                                         trade-off at that failure rate
   verify-tp   real TP×EP MoE layer vs monolithic reference
                 --artifacts DIR --seed N
   info        manifest inventory: --artifacts DIR
@@ -115,8 +138,35 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         tp: args.get_usize("tp", 1)?,
         emulate_dp: 0,
         emulate_tp: 0,
+        fault: match args.get("fault") {
+            Some(spec) => Some(trainer::fault::FaultPlan::parse(spec)?),
+            None => None,
+        },
+        heartbeat_timeout: {
+            let ms = args.get_usize("heartbeat-timeout-ms", 0)?;
+            (ms > 0).then(|| std::time::Duration::from_millis(ms as u64))
+        },
+        checkpoint_every: args.get_usize("checkpoint-every", 0)?,
+        max_recoveries: args.get_usize("max-recoveries", 1)?,
+        retry_backoff_ms: args.get_usize("retry-backoff-ms", 0)? as u64,
     };
-    let report = trainer::train(&cfg)?;
+    let report = if args.has_flag("elastic") {
+        let sup = trainer::train_supervised(&cfg)?;
+        for ev in &sup.recoveries {
+            println!(
+                "recovery: dp {} -> {} (replica {} excised), resumed at step {}: {}",
+                ev.dp_from, ev.dp_to, ev.replica, ev.resumed_at_step, ev.cause
+            );
+        }
+        for (name, value) in ppmoe::metrics::recovery().snapshot() {
+            if value > 0 {
+                println!("  {name}: {value}");
+            }
+        }
+        sup.report
+    } else {
+        trainer::train(&cfg)?
+    };
     println!("\n=== training report ===");
     println!("steps: {}", report.steps.len());
     println!("final loss: {:.4}", report.final_loss);
@@ -194,6 +244,36 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         );
     } else {
         println!("dp grad sync:     {:.1} ms", r.dp_sync_seconds * 1e3);
+    }
+    let mttf = args.get_f64("mttf", 0.0)?;
+    if mttf > 0.0 {
+        let every = args.get_f64("ckpt-every", 0.0)?;
+        let est = sim.recovery_estimate(
+            tables::SWEEP_TC,
+            mttf,
+            (every > 0.0).then_some(every),
+        );
+        println!("--- fault tolerance @ MTTF {mttf:.0} s ---");
+        println!(
+            "checkpoint:       {:.2} GB, {:.1} s to write",
+            est.checkpoint_bytes / 1e9,
+            est.checkpoint_seconds
+        );
+        println!(
+            "recovery:         {:.1} s (read-back + excise/reshard/respawn)",
+            est.restart_seconds
+        );
+        println!(
+            "ckpt interval:    {:.0} s{} (Young/Daly optimum {:.0} s)",
+            est.interval_seconds,
+            if every > 0.0 { "" } else { " = optimum" },
+            est.optimal_interval_seconds
+        );
+        println!(
+            "expected waste:   {:.2}% of wall-clock (optimum {:.2}%)",
+            est.waste_fraction * 100.0,
+            est.optimal_waste_fraction * 100.0
+        );
     }
     Ok(())
 }

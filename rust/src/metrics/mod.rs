@@ -3,7 +3,62 @@
 //! paper-style tables.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Process-wide failure/recovery counters for the elastic training path:
+/// injected faults, heartbeat promotions, dead workers, rank excisions and
+/// optimizer reshards (docs/fault_tolerance.md). Plain relaxed atomics —
+/// the counters are observability, never control flow — bumped from worker
+/// threads, the stall monitor, and the supervisor alike.
+#[derive(Debug, Default)]
+pub struct RecoveryCounters {
+    /// Faults fired by a [`crate::trainer::fault::FaultPlan`].
+    pub faults_injected: AtomicU64,
+    /// Stalls the heartbeat monitor promoted into the poison path.
+    pub stalls_promoted: AtomicU64,
+    /// Workers that exited with a panic or error (cascade deaths
+    /// included).
+    pub workers_failed: AtomicU64,
+    /// dp ranks excised by the elastic supervisor.
+    pub ranks_excised: AtomicU64,
+    /// `reshard_optimizer` invocations that completed.
+    pub optimizer_reshards: AtomicU64,
+    /// Supervised relaunch attempts.
+    pub recovery_attempts: AtomicU64,
+    /// Atomic checkpoint commits (periodic + final).
+    pub checkpoints_committed: AtomicU64,
+}
+
+impl RecoveryCounters {
+    /// `(name, value)` rows for logging/tests, in a fixed order.
+    pub fn snapshot(&self) -> [(&'static str, u64); 7] {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        [
+            ("faults_injected", g(&self.faults_injected)),
+            ("stalls_promoted", g(&self.stalls_promoted)),
+            ("workers_failed", g(&self.workers_failed)),
+            ("ranks_excised", g(&self.ranks_excised)),
+            ("optimizer_reshards", g(&self.optimizer_reshards)),
+            ("recovery_attempts", g(&self.recovery_attempts)),
+            ("checkpoints_committed", g(&self.checkpoints_committed)),
+        ]
+    }
+}
+
+/// The process-wide [`RecoveryCounters`] instance.
+pub fn recovery() -> &'static RecoveryCounters {
+    static COUNTERS: RecoveryCounters = RecoveryCounters {
+        faults_injected: AtomicU64::new(0),
+        stalls_promoted: AtomicU64::new(0),
+        workers_failed: AtomicU64::new(0),
+        ranks_excised: AtomicU64::new(0),
+        optimizer_reshards: AtomicU64::new(0),
+        recovery_attempts: AtomicU64::new(0),
+        checkpoints_committed: AtomicU64::new(0),
+    };
+    &COUNTERS
+}
 
 /// Accumulating named timer set (the real-execution analogue of
 /// `sim::Breakdown`).
@@ -209,6 +264,20 @@ mod tests {
         assert!(s.lines().count() == 4);
         let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
         assert!(lens.windows(2).all(|w| w[0] == w[1]), "aligned: {s}");
+    }
+
+    #[test]
+    fn recovery_counters_snapshot() {
+        let c = RecoveryCounters::default();
+        c.faults_injected.fetch_add(2, Ordering::Relaxed);
+        c.checkpoints_committed.fetch_add(1, Ordering::Relaxed);
+        let snap = c.snapshot();
+        assert_eq!(snap[0], ("faults_injected", 2));
+        assert_eq!(snap[6], ("checkpoints_committed", 1));
+        // the process-wide instance is shared and monotone
+        let before = recovery().recovery_attempts.load(Ordering::Relaxed);
+        recovery().recovery_attempts.fetch_add(1, Ordering::Relaxed);
+        assert!(recovery().recovery_attempts.load(Ordering::Relaxed) > before);
     }
 
     #[test]

@@ -412,6 +412,93 @@ impl Simulator {
             stage_fwd_seconds: stage_fwd,
         }
     }
+
+    /// Expected fault-tolerance overhead under a mean-time-to-failure
+    /// budget, for the elastic trainer's checkpoint-interval trade-off
+    /// (docs/fault_tolerance.md §Choosing a checkpoint cadence).
+    ///
+    /// The classic first-order model (Young '74 / Daly '06): with a
+    /// checkpoint write cost δ, a restart cost R, and job MTTF M, the
+    /// wasted fraction of wall-clock at interval τ is
+    ///
+    /// ```text
+    /// h(τ) = δ/τ + (τ/2 + R)/M
+    /// ```
+    ///
+    /// (checkpoint overhead, plus — per failure, at rate 1/M — the half
+    /// interval of lost work and the recovery itself), minimized at
+    /// τ* = √(2·δ·M). δ comes from the checkpoint footprint (one wire-format
+    /// param copy + two f32 Adam moments per param, the live
+    /// `trainer::checkpoint` layout) over [`DISK_BW`]; R adds
+    /// [`RESPAWN_SECONDS`] of excise/reshard/relaunch on top of reading the
+    /// checkpoint back. `interval` overrides τ* when the caller pins
+    /// `--ckpt-every`; the interval is floored at one step — a cadence
+    /// below one step is unrealizable by the step-granular trainer loop.
+    pub fn recovery_estimate(
+        &self,
+        tc: TrainCfg,
+        mttf_seconds: f64,
+        interval: Option<f64>,
+    ) -> RecoveryEstimate {
+        let step = self.step(tc).step_seconds;
+        let total_params = model::params_per_device(
+            &self.m,
+            1,
+            1,
+            1,
+            self.p.scheme == Scheme::DpMoE,
+        );
+        let bytes =
+            total_params * (self.cost.cluster.wire_bytes as f64 + 8.0);
+        let delta = bytes / DISK_BW;
+        let restart = delta + RESPAWN_SECONDS;
+        let m = mttf_seconds.max(1e-9);
+        let waste_at = |tau: f64| delta / tau + (tau / 2.0 + restart) / m;
+        let optimal = (2.0 * delta * m).sqrt().max(step);
+        let tau = interval.unwrap_or(optimal).max(step);
+        RecoveryEstimate {
+            step_seconds: step,
+            checkpoint_bytes: bytes,
+            checkpoint_seconds: delta,
+            restart_seconds: restart,
+            interval_seconds: tau,
+            optimal_interval_seconds: optimal,
+            waste_fraction: waste_at(tau).min(1.0),
+            optimal_waste_fraction: waste_at(optimal).min(1.0),
+        }
+    }
+}
+
+/// Sustained checkpoint-store bandwidth assumed by
+/// [`Simulator::recovery_estimate`] (a parallel-filesystem-class 2 GB/s).
+pub const DISK_BW: f64 = 2.0e9;
+
+/// Fixed relaunch cost on top of reading the checkpoint back: detecting
+/// the failure (heartbeat timeout), excising the dead rank, resharding the
+/// optimizer, and re-spawning the worker grid.
+pub const RESPAWN_SECONDS: f64 = 30.0;
+
+/// Outcome of [`Simulator::recovery_estimate`]: the Young/Daly
+/// checkpoint-interval trade-off for one (model, layout, MTTF) point.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryEstimate {
+    /// Simulated training-step wall-clock (the interval floor).
+    pub step_seconds: f64,
+    /// Checkpoint footprint: params + both Adam moments.
+    pub checkpoint_bytes: f64,
+    /// δ — time to write one checkpoint at [`DISK_BW`].
+    pub checkpoint_seconds: f64,
+    /// R — failure-to-training recovery latency (read-back + respawn).
+    pub restart_seconds: f64,
+    /// The evaluated interval τ (caller-pinned or τ*).
+    pub interval_seconds: f64,
+    /// τ* = √(2·δ·MTTF), floored at one step.
+    pub optimal_interval_seconds: f64,
+    /// h(τ): expected fraction of wall-clock lost to checkpoints,
+    /// lost work, and recovery, capped at 1.
+    pub waste_fraction: f64,
+    /// h(τ*) — the floor the cadence knob is chasing.
+    pub optimal_waste_fraction: f64,
 }
 
 /// Outcome of a simulated training step.
@@ -631,6 +718,40 @@ mod tests {
         let tc2 = TrainCfg { micro_batch: 8, num_micro: 32 };
         let r8b = sim(m, ppmoe(8, 4), 32).step_virtual_dp(tc2, 1, false);
         assert!((r8b.tp_comm_seconds / r8.tp_comm_seconds - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn recovery_estimate_optimum_beats_neighbors() {
+        // τ* = √(2δM) must (weakly) beat both a 4x-too-eager and a
+        // 4x-too-lazy cadence, and the reported fields must be coherent
+        let s = sim(moe_small_setting(), ppmoe(8, 4), 32);
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        let mttf = 6.0 * 3600.0;
+        let opt = s.recovery_estimate(tc, mttf, None);
+        assert!(opt.checkpoint_bytes > 0.0);
+        assert!(opt.checkpoint_seconds > 0.0);
+        assert!(opt.restart_seconds > opt.checkpoint_seconds);
+        assert!(opt.interval_seconds >= opt.step_seconds);
+        assert_eq!(opt.interval_seconds, opt.optimal_interval_seconds);
+        assert_eq!(opt.waste_fraction, opt.optimal_waste_fraction);
+        let eager = s.recovery_estimate(tc, mttf, Some(opt.optimal_interval_seconds / 4.0));
+        let lazy = s.recovery_estimate(tc, mttf, Some(opt.optimal_interval_seconds * 4.0));
+        assert!(opt.waste_fraction <= eager.waste_fraction, "eager cadence can't win");
+        assert!(opt.waste_fraction <= lazy.waste_fraction, "lazy cadence can't win");
+    }
+
+    #[test]
+    fn recovery_waste_falls_as_hardware_gets_healthier() {
+        // at the optimal cadence, a 10x-longer MTTF strictly shrinks the
+        // expected waste; an unreliable cluster saturates toward 1
+        let s = sim(moe_small_setting(), ppmoe(8, 4), 32);
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        let flaky = s.recovery_estimate(tc, 600.0, None);
+        let healthy = s.recovery_estimate(tc, 6000.0, None);
+        assert!(healthy.waste_fraction < flaky.waste_fraction);
+        assert!(flaky.waste_fraction <= 1.0);
+        let hopeless = s.recovery_estimate(tc, 1.0, None);
+        assert_eq!(hopeless.waste_fraction, 1.0);
     }
 
     #[test]

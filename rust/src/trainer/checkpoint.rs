@@ -11,13 +11,90 @@
 //! `evaluate` runs the full forward chain + `loss_eval` artifact over
 //! held-out synthetic batches — the validation-loss half of Fig. 5.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use super::adam::ShardedAdam;
+use crate::comm::collectives::segment;
 use crate::data::Corpus;
 use crate::runtime::{Manifest, ParamSpec, Runtime, Tensor};
+
+/// Write `<dir>/<file>` atomically: bytes land under a temporary name and
+/// are renamed into place, so a reader (or a crash) can never observe a
+/// half-written file — rename within a directory is atomic on POSIX
+/// filesystems. Every checkpoint file goes through here.
+fn atomic_write(dir: &Path, file: &str, bytes: &[u8]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!("{file}.tmp"));
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, dir.join(file))
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// `<parent>/<name><suffix>` — a sibling path of `dir` (same parent).
+fn sibling(dir: &Path, suffix: &str) -> PathBuf {
+    let mut name = dir
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("ckpt"));
+    name.push(suffix);
+    dir.with_file_name(name)
+}
+
+/// The staging directory periodic checkpoints are written into before the
+/// driver commits them: `<dir>.partial`, a sibling of the checkpoint dir
+/// so the final rename swap stays on one filesystem. A `.partial` dir is
+/// garbage by definition — only [`commit_staged`] turns one into a real
+/// checkpoint, and it never contains a `train_state.json` until commit
+/// time (so `load_*` on a torn dir fails loudly).
+pub fn staging_dir(dir: &Path) -> PathBuf {
+    sibling(dir, ".partial")
+}
+
+/// Delete any leftover staging (`<dir>.partial`) and swap-residue
+/// (`<dir>.old`) directories — called before a run starts writing staged
+/// state and before recovery re-shards the committed checkpoint.
+pub fn discard_staging(dir: &Path) -> Result<()> {
+    for leftover in [staging_dir(dir), sibling(dir, ".old")] {
+        if leftover.exists() {
+            std::fs::remove_dir_all(&leftover)
+                .with_context(|| format!("clearing stale {}", leftover.display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Commit the staged checkpoint: stamp `train_state.json` into the staging
+/// dir (the validity marker every load path requires), then swap it into
+/// place by rename — previous checkpoint to `<dir>.old`, staging to
+/// `<dir>`, remove the old copy. A crash before the swap leaves the
+/// previous checkpoint untouched; the one non-atomic window (between the
+/// two renames) leaves a complete checkpoint under `<dir>.old` rather than
+/// a torn one under `<dir>`.
+pub fn commit_staged(dir: &Path, steps: usize, dp: usize, tp: usize) -> Result<()> {
+    let staging = staging_dir(dir);
+    if !staging.is_dir() {
+        bail!("no staged checkpoint at {}", staging.display());
+    }
+    save_train_state(&staging, steps, dp, tp)?;
+    let old = sibling(dir, ".old");
+    if old.exists() {
+        std::fs::remove_dir_all(&old)
+            .with_context(|| format!("clearing stale {}", old.display()))?;
+    }
+    if dir.exists() {
+        std::fs::rename(dir, &old)
+            .with_context(|| format!("retiring previous checkpoint {}", dir.display()))?;
+    }
+    std::fs::rename(&staging, dir)
+        .with_context(|| format!("committing staged checkpoint into {}", dir.display()))?;
+    if old.exists() {
+        std::fs::remove_dir_all(&old).ok(); // best-effort; .old is inert
+    }
+    Ok(())
+}
 
 /// File name of one (stage, tp-rank)'s parameter checkpoint: tp = 1 keeps
 /// the historic `stage<i>.bin` (drop-in for `artifacts/params/`); under
@@ -52,8 +129,7 @@ pub fn save_params_with(
             bytes.extend_from_slice(&v.to_le_bytes());
         }
     }
-    std::fs::write(dir.join(file), bytes)
-        .with_context(|| format!("writing checkpoint {file}"))?;
+    atomic_write(dir, file, &bytes).with_context(|| format!("writing checkpoint {file}"))?;
     Ok(())
 }
 
@@ -174,7 +250,6 @@ pub fn save_optimizer_tp(
 }
 
 fn save_optimizer_file(dir: &Path, file: &str, opts: &[ShardedAdam]) -> Result<()> {
-    std::fs::create_dir_all(dir)?;
     let mut bytes = Vec::new();
     bytes.extend_from_slice(&(opts.len() as u64).to_le_bytes());
     for opt in opts {
@@ -190,7 +265,7 @@ fn save_optimizer_file(dir: &Path, file: &str, opts: &[ShardedAdam]) -> Result<(
             bytes.extend_from_slice(&x.to_le_bytes());
         }
     }
-    std::fs::write(dir.join(file), bytes)
+    atomic_write(dir, file, &bytes)
         .with_context(|| format!("writing optimizer state {file}"))?;
     Ok(())
 }
@@ -230,27 +305,71 @@ pub fn load_optimizer_tp(
     load_optimizer_file(dir, &optimizer_shard_file_tp(stage, tp_rank, tp, dp_rank), opts)
 }
 
-fn load_optimizer_file(dir: &Path, file: &str, opts: &mut [ShardedAdam]) -> Result<()> {
-    fn take_u64(bytes: &[u8], cur: &mut usize) -> Result<u64> {
-        if *cur + 8 > bytes.len() {
-            bail!("truncated optimizer state at byte {cur}");
-        }
-        let v = u64::from_le_bytes(bytes[*cur..*cur + 8].try_into().unwrap());
-        *cur += 8;
-        Ok(v)
+fn take_u64(bytes: &[u8], cur: &mut usize) -> Result<u64> {
+    if *cur + 8 > bytes.len() {
+        bail!("truncated optimizer state at byte {cur}");
     }
-    fn take_f32s(bytes: &[u8], cur: &mut usize, n: usize) -> Result<Vec<f32>> {
-        if *cur + 4 * n > bytes.len() {
-            bail!("truncated moment array at byte {cur}");
-        }
-        let out = bytes[*cur..*cur + 4 * n]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        *cur += 4 * n;
-        Ok(out)
-    }
+    let v = u64::from_le_bytes(bytes[*cur..*cur + 8].try_into().unwrap());
+    *cur += 8;
+    Ok(v)
+}
 
+fn take_f32s(bytes: &[u8], cur: &mut usize, n: usize) -> Result<Vec<f32>> {
+    if *cur + 4 * n > bytes.len() {
+        bail!("truncated moment array at byte {cur}");
+    }
+    let out = bytes[*cur..*cur + 4 * n]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    *cur += 4 * n;
+    Ok(out)
+}
+
+/// One chunk of an optimizer shard file, read raw (no target geometry):
+/// `(step, lo, hi, m, v)`. Feeds [`reshard_optimizer`] and the torn-file
+/// checks in [`validate_resume_dir`].
+type RawOptChunk = (u64, usize, usize, Vec<f32>, Vec<f32>);
+
+fn read_optimizer_raw(path: &Path) -> Result<Vec<RawOptChunk>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut cur = 0usize;
+    let chunks = take_u64(&bytes, &mut cur)? as usize;
+    let mut out = Vec::with_capacity(chunks);
+    for _ in 0..chunks {
+        let step = take_u64(&bytes, &mut cur)?;
+        let lo = take_u64(&bytes, &mut cur)? as usize;
+        let hi = take_u64(&bytes, &mut cur)? as usize;
+        if hi < lo {
+            bail!("{}: inverted shard range {lo}..{hi}", path.display());
+        }
+        let n = hi - lo;
+        let m = take_f32s(&bytes, &mut cur, n)?;
+        let v = take_f32s(&bytes, &mut cur, n)?;
+        out.push((step, lo, hi, m, v));
+    }
+    if cur != bytes.len() {
+        bail!("{}: {} trailing bytes", path.display(), bytes.len() - cur);
+    }
+    Ok(out)
+}
+
+/// Exact byte size of one rank's optimizer shard file over the given
+/// per-chunk flat numels: the header `u64` plus, per chunk, 3 `u64`s and
+/// the `2 · (hi − lo)` f32 moments of the [`segment`]`(rank, numel, dp)`
+/// slice. The torn-file size check in [`validate_resume_dir`].
+pub fn optimizer_file_bytes(chunk_numels: &[usize], rank: usize, dp: usize) -> usize {
+    8 + chunk_numels
+        .iter()
+        .map(|&n| {
+            let (lo, hi) = segment(rank, n, dp);
+            24 + 8 * (hi - lo)
+        })
+        .sum::<usize>()
+}
+
+fn load_optimizer_file(dir: &Path, file: &str, opts: &mut [ShardedAdam]) -> Result<()> {
     let path = dir.join(file);
     let bytes = std::fs::read(&path)
         .with_context(|| format!("reading {}", path.display()))?;
@@ -293,10 +412,10 @@ fn load_optimizer_file(dir: &Path, file: &str, opts: &mut [ShardedAdam]) -> Resu
 /// optimizer shards, parameter sharding and per-replica data split all
 /// depend on them).
 pub fn save_train_state(dir: &Path, steps: usize, dp: usize, tp: usize) -> Result<()> {
-    std::fs::create_dir_all(dir)?;
-    std::fs::write(
-        dir.join("train_state.json"),
-        format!("{{\"steps\": {steps}, \"dp\": {dp}, \"tp\": {tp}}}\n"),
+    atomic_write(
+        dir,
+        "train_state.json",
+        format!("{{\"steps\": {steps}, \"dp\": {dp}, \"tp\": {tp}}}\n").as_bytes(),
     )
     .context("writing train_state.json")?;
     Ok(())
@@ -320,6 +439,195 @@ pub fn load_train_state(dir: &Path) -> Result<(usize, usize, usize)> {
         }
     };
     Ok((steps, opt("dp")?, opt("tp")?))
+}
+
+/// Per-chunk flat numels of one (stage, tp rank) view — the shard geometry
+/// both the optimizer files and [`optimizer_file_bytes`] key off.
+fn view_chunk_numels(view: &crate::runtime::TpStageView) -> Vec<usize> {
+    (0..view.chunks.len())
+        .map(|c| view.params[view.chunk_param_range(c)].iter().map(|p| p.numel).sum())
+        .collect()
+}
+
+/// Full pre-spawn validation of a resume directory: the recorded (dp, tp)
+/// must match the run's, every per-tp-rank parameter file must exist **at
+/// its exact byte size**, and every (stage, tp rank, dp rank) optimizer
+/// shard must exist at its exact byte size with every chunk's step counter
+/// equal to the recorded step count. A torn or half-written directory
+/// (something pre-atomic-commit crashes could produce, and foreign
+/// checkpoints still can) fails here with the offending file named,
+/// before any worker thread spawns. Returns the recorded step count.
+pub fn validate_resume_dir(
+    dir: &Path,
+    manifest: &Manifest,
+    dp: usize,
+    tp: usize,
+) -> Result<usize> {
+    let (steps, ckpt_dp, ckpt_tp) =
+        load_train_state(dir).context("resume checkpoint is missing train_state.json")?;
+    if ckpt_dp != dp {
+        bail!(
+            "checkpoint was taken at dp={ckpt_dp}, cannot resume at dp={dp} \
+             (optimizer shards and data split differ)"
+        );
+    }
+    if ckpt_tp != tp {
+        bail!(
+            "checkpoint was taken at tp={ckpt_tp}, cannot resume at tp={tp} \
+             (parameter and optimizer sharding differ)"
+        );
+    }
+    for stage in 0..manifest.model.stages {
+        for t in 0..tp {
+            let view = manifest.stage_view(stage, t, tp)?;
+            let bin = dir.join(stage_param_file(stage, t, tp));
+            let meta = std::fs::metadata(&bin)
+                .with_context(|| format!("resume checkpoint missing {}", bin.display()))?;
+            if meta.len() as usize != view.total_bytes {
+                bail!(
+                    "{}: {} bytes, expected {} — torn or foreign checkpoint",
+                    bin.display(),
+                    meta.len(),
+                    view.total_bytes
+                );
+            }
+            let numels = view_chunk_numels(&view);
+            for rank in 0..dp {
+                let f = dir.join(optimizer_shard_file_tp(stage, t, tp, rank));
+                let meta = std::fs::metadata(&f).with_context(|| {
+                    format!(
+                        "resume checkpoint missing {} (dp={dp} tp={tp} needs \
+                         every lane's optimizer shard)",
+                        f.display()
+                    )
+                })?;
+                let want = optimizer_file_bytes(&numels, rank, dp);
+                if meta.len() as usize != want {
+                    bail!(
+                        "{}: {} bytes, expected {} — torn or foreign checkpoint",
+                        f.display(),
+                        meta.len(),
+                        want
+                    );
+                }
+                for (c, (step, ..)) in read_optimizer_raw(&f)?.iter().enumerate() {
+                    if *step as usize != steps {
+                        bail!(
+                            "{}: chunk {c} records optimizer step {step} but \
+                             train_state.json says {steps} — torn checkpoint",
+                            f.display()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    Ok(steps)
+}
+
+/// Re-partition a checkpoint's ZeRO-1 optimizer shards from `dp_old` to
+/// `dp_new` ranks, in place. The full per-chunk moment state is
+/// dp-invariant — rank r of n owns exactly the contiguous
+/// [`segment`]`(r, numel, n)` slice — so resharding stitches the old
+/// shards back together (verifying step agreement, contiguity, and the
+/// segment contract as it goes) and re-slices along the new geometry.
+/// Every f32 moves by `to_le_bytes`/`from_le_bytes`, so moments round-trip
+/// bitwise: a run resumed from the resharded checkpoint at `dp_new` is
+/// bit-identical to one launched at `dp_new` from the same full state
+/// (rust/tests/elastic_equivalence.rs). Rewrites `train_state.json` with
+/// the new dp and removes the excised ranks' stale shard files. This is
+/// the elastic supervisor's rank-excision primitive
+/// ([`super::train_supervised`]).
+pub fn reshard_optimizer(
+    dir: &Path,
+    stages: usize,
+    tp: usize,
+    dp_old: usize,
+    dp_new: usize,
+) -> Result<()> {
+    if dp_new == 0 {
+        bail!("cannot reshard to dp=0");
+    }
+    if dp_old == dp_new {
+        return Ok(());
+    }
+    let (steps, ckpt_dp, ckpt_tp) = load_train_state(dir)?;
+    if ckpt_dp != dp_old {
+        bail!(
+            "{} records dp={ckpt_dp}, cannot reshard from dp_old={dp_old}",
+            dir.display()
+        );
+    }
+    if ckpt_tp != tp {
+        bail!("{} records tp={ckpt_tp}, expected tp={tp}", dir.display());
+    }
+    for stage in 0..stages {
+        for t in 0..tp {
+            // 1. read every old rank's raw shard
+            let shards: Vec<Vec<RawOptChunk>> = (0..dp_old)
+                .map(|r| read_optimizer_raw(&dir.join(optimizer_shard_file_tp(stage, t, tp, r))))
+                .collect::<Result<_>>()?;
+            let nchunks = shards[0].len();
+            if shards.iter().any(|s| s.len() != nchunks) {
+                bail!("stage {stage} tp {t}: ranks disagree on chunk count");
+            }
+            // 2. stitch each chunk's full moment arrays back together,
+            //    proving the shards really tile the flat range
+            let mut full: Vec<(u64, Vec<f32>, Vec<f32>)> = Vec::with_capacity(nchunks);
+            for c in 0..nchunks {
+                let step = shards[0][c].0;
+                let total = shards[dp_old - 1][c].2;
+                let mut m = Vec::with_capacity(total);
+                let mut v = Vec::with_capacity(total);
+                let mut expect_lo = 0usize;
+                for (r, shard) in shards.iter().enumerate() {
+                    let (st, lo, hi, sm, sv) = &shard[c];
+                    if *st != step {
+                        bail!(
+                            "stage {stage} tp {t} chunk {c}: rank {r} at \
+                             optimizer step {st}, rank 0 at {step} — shards \
+                             are from different checkpoints"
+                        );
+                    }
+                    if *lo != expect_lo || (*lo, *hi) != segment(r, total, dp_old) {
+                        bail!(
+                            "stage {stage} tp {t} chunk {c}: rank {r} owns \
+                             {lo}..{hi}, segment contract says {:?}",
+                            segment(r, total, dp_old)
+                        );
+                    }
+                    m.extend_from_slice(sm);
+                    v.extend_from_slice(sv);
+                    expect_lo = *hi;
+                }
+                full.push((step, m, v));
+            }
+            // 3. write the new geometry's shards (atomic, like any save)
+            for r in 0..dp_new {
+                let mut bytes = Vec::new();
+                bytes.extend_from_slice(&(nchunks as u64).to_le_bytes());
+                for (step, m, v) in &full {
+                    let (lo, hi) = segment(r, m.len(), dp_new);
+                    bytes.extend_from_slice(&step.to_le_bytes());
+                    bytes.extend_from_slice(&(lo as u64).to_le_bytes());
+                    bytes.extend_from_slice(&(hi as u64).to_le_bytes());
+                    for x in &m[lo..hi] {
+                        bytes.extend_from_slice(&x.to_le_bytes());
+                    }
+                    for x in &v[lo..hi] {
+                        bytes.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                atomic_write(dir, &optimizer_shard_file_tp(stage, t, tp, r), &bytes)?;
+            }
+            // 4. the excised ranks' files are now stale — remove them so a
+            //    later reshard (or validation) can't read a mixed geometry
+            for r in dp_new..dp_old {
+                std::fs::remove_file(dir.join(optimizer_shard_file_tp(stage, t, tp, r))).ok();
+            }
+        }
+    }
+    save_train_state(dir, steps, dp_new, tp)
 }
 
 /// Validation loss over `batches` held-out batches.
@@ -608,6 +916,172 @@ mod tests {
         // missing rank file
         let mut r2 = vec![ShardedAdam::new(0.05, &params, 1, 2)];
         assert!(load_optimizer_rank(&dir, 1, 1, &mut r2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn atomic_writes_leave_no_tmp_files() {
+        let dir = std::env::temp_dir().join(format!("ppmoe_atomic_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let m = fake_manifest();
+        let params = vec![
+            Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]),
+            Tensor::f32(vec![5.0, 6.0], vec![2]),
+        ];
+        save_stage(&dir, 0, &m, &params).unwrap();
+        save_optimizer(&dir, 0, &[ShardedAdam::new(0.05, &params, 0, 1)]).unwrap();
+        save_train_state(&dir, 1, 1, 1).unwrap();
+        for e in std::fs::read_dir(&dir).unwrap() {
+            let name = e.unwrap().file_name().into_string().unwrap();
+            assert!(!name.ends_with(".tmp"), "leftover temp file {name}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn staged_commit_swaps_atomically() {
+        let base = std::env::temp_dir().join(format!("ppmoe_stage_{}", std::process::id()));
+        std::fs::remove_dir_all(&base).ok();
+        let dir = base.join("ckpt");
+        let m = fake_manifest();
+        let p1 = vec![
+            Tensor::f32(vec![1.0; 4], vec![2, 2]),
+            Tensor::f32(vec![1.0; 2], vec![2]),
+        ];
+        let p2 = vec![
+            Tensor::f32(vec![2.0; 4], vec![2, 2]),
+            Tensor::f32(vec![2.0; 2], vec![2]),
+        ];
+        // committing with nothing staged is an error
+        assert!(commit_staged(&dir, 1, 1, 1).is_err());
+        // stage + commit v1, then v2 over it
+        save_stage(&staging_dir(&dir), 0, &m, &p1).unwrap();
+        commit_staged(&dir, 1, 1, 1).unwrap();
+        assert_eq!(load_train_state(&dir).unwrap(), (1, 1, 1));
+        assert_eq!(load_stage(&dir, 0, &m).unwrap(), p1);
+        assert!(!staging_dir(&dir).exists(), "staging dir must be consumed");
+        save_stage(&staging_dir(&dir), 0, &m, &p2).unwrap();
+        commit_staged(&dir, 2, 1, 1).unwrap();
+        assert_eq!(load_train_state(&dir).unwrap(), (2, 1, 1));
+        assert_eq!(load_stage(&dir, 0, &m).unwrap(), p2);
+        assert!(!sibling(&dir, ".old").exists(), "swap residue must be cleaned");
+        // a torn staging dir has no train_state.json (only commit writes
+        // it), so load paths reject it; discard leaves the committed
+        // checkpoint untouched
+        save_stage(&staging_dir(&dir), 0, &m, &p1).unwrap();
+        assert!(load_train_state(&staging_dir(&dir)).is_err());
+        discard_staging(&dir).unwrap();
+        assert!(!staging_dir(&dir).exists());
+        assert_eq!(load_stage(&dir, 0, &m).unwrap(), p2);
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn reshard_2_to_1_is_bitwise() {
+        // the elastic contract, host-side: the full moment state is
+        // dp-invariant, so stitching dp = 2 shards and re-slicing to
+        // dp = 1 reproduces a native dp = 1 optimizer bit for bit
+        let dir = std::env::temp_dir().join(format!("ppmoe_reshard_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let params = vec![Tensor::f32((0..11).map(|i| 0.1 * i as f32).collect(), vec![11])];
+        let grads =
+            vec![Tensor::f32((0..11).map(|i| 0.01 * (i as f32 - 5.0)).collect(), vec![11])];
+        let mut rank_opts: Vec<Vec<ShardedAdam>> =
+            (0..2).map(|r| vec![ShardedAdam::new(0.05, &params, r, 2)]).collect();
+        let mut reference = vec![ShardedAdam::new(0.05, &params, 0, 1)];
+        for _ in 0..3 {
+            for opts in rank_opts.iter_mut() {
+                let mut p = params.clone();
+                opts[0].update_shard(&mut p, &grads, 0.5).unwrap();
+            }
+            let mut p = params.clone();
+            reference[0].update_shard(&mut p, &grads, 0.5).unwrap();
+        }
+        for (r, opts) in rank_opts.iter().enumerate() {
+            save_optimizer_rank(&dir, 0, r, opts).unwrap();
+        }
+        save_train_state(&dir, 3, 2, 1).unwrap();
+
+        reshard_optimizer(&dir, 1, 1, 2, 1).unwrap();
+        assert_eq!(load_train_state(&dir).unwrap(), (3, 1, 1));
+        assert!(
+            !dir.join("stage0.rank1.opt.bin").exists(),
+            "excised rank's shard must be removed"
+        );
+        let mut restored = vec![ShardedAdam::new(0.05, &params, 0, 1)];
+        load_optimizer(&dir, 0, &mut restored).unwrap();
+        let (step, m, v) = restored[0].state();
+        let (step_ref, m_ref, v_ref) = reference[0].state();
+        assert_eq!(step, step_ref);
+        assert_eq!(m, m_ref, "first moments must reshard bitwise");
+        assert_eq!(v, v_ref, "second moments must reshard bitwise");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reshard_rejects_mixed_step_shards() {
+        let dir = std::env::temp_dir().join(format!("ppmoe_reshard2_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let params = vec![Tensor::f32(vec![0.0; 8], vec![8])];
+        let grads = vec![Tensor::f32(vec![0.5; 8], vec![8])];
+        let mut r0 = vec![ShardedAdam::new(0.05, &params, 0, 2)];
+        let mut r1 = vec![ShardedAdam::new(0.05, &params, 1, 2)];
+        let mut p = params.clone();
+        r0[0].update_shard(&mut p, &grads, 1.0).unwrap();
+        r0[0].update_shard(&mut p, &grads, 1.0).unwrap();
+        r1[0].update_shard(&mut p, &grads, 1.0).unwrap(); // one step behind
+        save_optimizer_rank(&dir, 0, 0, &r0).unwrap();
+        save_optimizer_rank(&dir, 0, 1, &r1).unwrap();
+        save_train_state(&dir, 2, 2, 1).unwrap();
+        let err = reshard_optimizer(&dir, 1, 1, 2, 1).unwrap_err().to_string();
+        assert!(err.contains("different checkpoints"), "got: {err}");
+        // a missing rank file is an error, not a silent partial reshard
+        std::fs::remove_file(dir.join("stage0.rank1.opt.bin")).unwrap();
+        assert!(reshard_optimizer(&dir, 1, 1, 2, 1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_resume_dir_flags_torn_dirs() {
+        let dir = std::env::temp_dir().join(format!("ppmoe_val_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let m = fake_manifest();
+        let params = vec![
+            Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]),
+            Tensor::f32(vec![5.0, 6.0], vec![2]),
+        ];
+        let grads = vec![
+            Tensor::f32(vec![0.5; 4], vec![2, 2]),
+            Tensor::f32(vec![0.25; 2], vec![2]),
+        ];
+        let mut opts = vec![ShardedAdam::new(0.05, &params, 0, 1)];
+        let mut p = params.clone();
+        for _ in 0..3 {
+            opts[0].update_shard(&mut p, &grads, 1.0).unwrap();
+        }
+        save_stage(&dir, 0, &m, &p).unwrap();
+        save_optimizer(&dir, 0, &opts).unwrap();
+        save_train_state(&dir, 3, 1, 1).unwrap();
+        assert_eq!(validate_resume_dir(&dir, &m, 1, 1).unwrap(), 3);
+        // recorded-geometry mismatches
+        assert!(validate_resume_dir(&dir, &m, 2, 1).is_err());
+        assert!(validate_resume_dir(&dir, &m, 1, 2).is_err());
+        // torn parameter file (truncated mid-write)
+        let bin = dir.join("stage0.bin");
+        let full = std::fs::read(&bin).unwrap();
+        std::fs::write(&bin, &full[..10]).unwrap();
+        assert!(validate_resume_dir(&dir, &m, 1, 1).is_err());
+        std::fs::write(&bin, &full).unwrap();
+        assert_eq!(validate_resume_dir(&dir, &m, 1, 1).unwrap(), 3);
+        // torn optimizer shard
+        let opt_file = dir.join("stage0.opt.bin");
+        let obytes = std::fs::read(&opt_file).unwrap();
+        std::fs::write(&opt_file, &obytes[..obytes.len() - 4]).unwrap();
+        assert!(validate_resume_dir(&dir, &m, 1, 1).is_err());
+        std::fs::write(&opt_file, &obytes).unwrap();
+        // optimizer step counters out of sync with train_state.json
+        save_train_state(&dir, 4, 1, 1).unwrap();
+        assert!(validate_resume_dir(&dir, &m, 1, 1).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,526 @@
+//! Deterministic fault injection and liveness tracking for the elastic
+//! trainer.
+//!
+//! Three building blocks, all consumed by `trainer/mod.rs`:
+//!
+//! * [`FaultPlan`] — a parsed `--fault` spec. Workers call
+//!   [`FaultPlan::check`] at every op boundary; when the (step, replica,
+//!   stage, tp, op) coordinate matches a spec the worker dies in the
+//!   requested way (`panic`, `err`, or `stall`). Coordinates are exact, so
+//!   every chaos scenario replays bit-for-bit.
+//! * [`Heartbeats`] — one timestamp cell per worker, beaten at op
+//!   boundaries. A worker that finished cleanly marks itself done so it
+//!   never counts as stale.
+//! * [`Monitor`] — a background thread that watches the heartbeats and,
+//!   once EVERY live worker has gone quiet for the configured timeout,
+//!   promotes the stall into the same poison path a panic takes: it
+//!   poisons all collective groups and the step barrier, releasing every
+//!   blocked peer with a loud error instead of hanging the run.
+//!
+//! The promotion rule is deliberately "all live workers stale", not "any
+//! worker stale": in a healthy run one slow worker makes its peers block
+//! at a collective or the step barrier, so per-worker staleness alone
+//! cannot distinguish "victim waiting on a slow peer" from "hung". When
+//! truly nobody makes progress, the cell with the OLDEST beat is the
+//! culprit — everyone else went quiet later, while blocked waiting on it.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::collectives::{AllReduceGroup, Barrier};
+
+/// How an injected fault kills its worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the op boundary — models an abort/segfault-style death.
+    Panic,
+    /// Busy-wait at the op boundary — models a hung collective. Only the
+    /// heartbeat [`Monitor`] (or the plan's abort flag) ends it, at which
+    /// point the worker panics out so its thread can still be joined.
+    Stall,
+    /// Return `Err` from the worker — models a detected-and-reported
+    /// failure (e.g. an XLA execute error).
+    Err,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        match s {
+            "panic" => Ok(FaultKind::Panic),
+            "stall" => Ok(FaultKind::Stall),
+            "err" => Ok(FaultKind::Err),
+            other => bail!("--fault: unknown kind '{other}' (expected panic|stall|err)"),
+        }
+    }
+}
+
+/// One injection site: fires exactly once when a worker reaches the
+/// matching (step, replica, stage, tp, op) coordinate.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Global step index (0-based, counting from the start of the FIRST
+    /// attempt — resumed attempts keep the global numbering).
+    pub step: usize,
+    /// Data-parallel replica to kill.
+    pub replica: usize,
+    /// Pipeline stage within the replica.
+    pub stage: usize,
+    /// Tensor-parallel rank within the stage (default 0).
+    pub tp_rank: usize,
+    /// Op index within the stage's per-step schedule (default 0: the
+    /// first op of the step).
+    pub op: usize,
+    /// How the worker dies.
+    pub kind: FaultKind,
+    /// One-shot latch shared across `TrainerCfg` clones: after a
+    /// supervised resume replays step `step`, the fault must not refire.
+    fired: Arc<AtomicBool>,
+}
+
+impl FaultSpec {
+    fn parse(spec: &str) -> Result<FaultSpec> {
+        let (mut step, mut replica, mut stage, mut tp_rank, mut op, mut kind) =
+            (None, 0usize, 0usize, 0usize, 0usize, None);
+        for field in spec.split(',').map(str::trim).filter(|f| !f.is_empty()) {
+            let (key, val) = field
+                .split_once('=')
+                .with_context(|| format!("--fault: field '{field}' is not key=value"))?;
+            let usize_val = || -> Result<usize> {
+                val.parse::<usize>()
+                    .with_context(|| format!("--fault: {key}={val} is not an integer"))
+            };
+            match key {
+                "step" => step = Some(usize_val()?),
+                "replica" => replica = usize_val()?,
+                "stage" => stage = usize_val()?,
+                "tp" => tp_rank = usize_val()?,
+                "op" => op = usize_val()?,
+                "kind" => kind = Some(FaultKind::parse(val)?),
+                other => bail!(
+                    "--fault: unknown field '{other}' (expected \
+                     step/replica/stage/tp/op/kind)"
+                ),
+            }
+        }
+        Ok(FaultSpec {
+            step: step.context("--fault: missing required field step=N")?,
+            replica,
+            stage,
+            tp_rank,
+            op,
+            kind: kind.context("--fault: missing required field kind=panic|stall|err")?,
+            fired: Arc::new(AtomicBool::new(false)),
+        })
+    }
+}
+
+/// A set of injection sites plus the shared abort flag that ends injected
+/// stalls. Cloning shares the one-shot latches and the abort flag, so the
+/// plan behaves identically across the per-worker `TrainerCfg` clones and
+/// across supervised retry attempts.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+    abort: Arc<AtomicBool>,
+}
+
+impl FaultPlan {
+    /// Parse a `--fault` value: `;`-separated specs, each a `,`-separated
+    /// list of `key=value` fields. Grammar:
+    ///
+    /// ```text
+    /// step=S,replica=R,stage=G,kind=panic|stall|err[,tp=T][,op=K]
+    /// ```
+    ///
+    /// `step` and `kind` are required; `replica`/`stage`/`tp`/`op`
+    /// default to 0.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for spec in s.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+            plan.specs.push(FaultSpec::parse(spec)?);
+        }
+        if plan.specs.is_empty() {
+            bail!("--fault: empty spec");
+        }
+        Ok(plan)
+    }
+
+    /// The flag that ends injected stalls (shared across clones). The
+    /// [`Monitor`] sets it when promoting a stall; the supervisor may also
+    /// set it when tearing a run down.
+    pub fn abort_flag(&self) -> Arc<AtomicBool> {
+        self.abort.clone()
+    }
+
+    /// The parsed injection sites.
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// Fire any not-yet-fired spec matching this exact coordinate.
+    /// `Panic`/`Stall` never return; `Err` returns the injected error;
+    /// no match (or an already-fired spec) returns `Ok(())`.
+    pub fn check(
+        &self,
+        step: usize,
+        replica: usize,
+        stage: usize,
+        tp_rank: usize,
+        op: usize,
+    ) -> Result<()> {
+        for spec in &self.specs {
+            let hit = spec.step == step
+                && spec.replica == replica
+                && spec.stage == stage
+                && spec.tp_rank == tp_rank
+                && spec.op == op;
+            if !hit || spec.fired.swap(true, Ordering::SeqCst) {
+                continue;
+            }
+            crate::metrics::recovery().faults_injected.fetch_add(1, Ordering::Relaxed);
+            let at = format!("step={step} replica={replica} stage={stage} tp={tp_rank} op={op}");
+            match spec.kind {
+                FaultKind::Panic => panic!("injected fault (panic) at {at}"),
+                FaultKind::Err => bail!("injected fault (err) at {at}"),
+                FaultKind::Stall => {
+                    // Model a hung collective: stop beating the heartbeat
+                    // and make no progress. The Monitor notices every live
+                    // worker has gone quiet, sets the abort flag and
+                    // poisons the groups; we then panic out so the thread
+                    // can be joined (a real external hang could not be —
+                    // see docs/fault_tolerance.md).
+                    loop {
+                        if self.abort.load(Ordering::SeqCst) {
+                            panic!(
+                                "injected fault (stall) at {at}: promoted to failure \
+                                 by the heartbeat monitor"
+                            );
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Sentinel for "worker finished cleanly — never stale".
+const DONE: u64 = u64::MAX;
+
+/// One millisecond-resolution timestamp cell per worker, beaten at op
+/// boundaries. Cheap enough for the hot loop: one `Instant::elapsed` plus
+/// one relaxed atomic store per op.
+#[derive(Debug)]
+pub struct Heartbeats {
+    epoch: Instant,
+    cells: Vec<AtomicU64>,
+}
+
+/// What the monitor sees when it samples the heartbeat table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pulse {
+    /// Every worker marked itself done.
+    AllDone,
+    /// At least one live worker beat within the timeout.
+    Alive,
+    /// EVERY live worker is stale; `worker` holds the oldest beat (the
+    /// presumed culprit) and `stale_ms` how long ago it was.
+    Stuck { worker: usize, stale_ms: u64 },
+}
+
+impl Heartbeats {
+    /// A fresh table for `n` workers, all considered "just beaten".
+    pub fn new(n: usize) -> Arc<Heartbeats> {
+        Arc::new(Heartbeats {
+            epoch: Instant::now(),
+            cells: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Record that worker `i` made progress.
+    pub fn beat(&self, i: usize) {
+        self.cells[i].store(self.now_ms(), Ordering::Relaxed);
+    }
+
+    /// Record that worker `i` exited cleanly (excluded from staleness).
+    pub fn done(&self, i: usize) {
+        self.cells[i].store(DONE, Ordering::Relaxed);
+    }
+
+    /// Sample the table against `timeout`.
+    pub fn status(&self, timeout: Duration) -> Pulse {
+        let now = self.now_ms();
+        let timeout_ms = timeout.as_millis() as u64;
+        let mut freshest: Option<u64> = None; // smallest elapsed among live
+        let mut stalest: Option<(usize, u64)> = None; // largest elapsed
+        for (i, cell) in self.cells.iter().enumerate() {
+            let at = cell.load(Ordering::Relaxed);
+            if at == DONE {
+                continue;
+            }
+            let elapsed = now.saturating_sub(at);
+            if freshest.map(|f| elapsed < f).unwrap_or(true) {
+                freshest = Some(elapsed);
+            }
+            if stalest.map(|(_, s)| elapsed > s).unwrap_or(true) {
+                stalest = Some((i, elapsed));
+            }
+        }
+        match (freshest, stalest) {
+            (None, _) => Pulse::AllDone,
+            (Some(f), _) if f <= timeout_ms => Pulse::Alive,
+            (Some(_), Some((worker, stale_ms))) => Pulse::Stuck { worker, stale_ms },
+            (Some(_), None) => unreachable!("live cell implies a stalest cell"),
+        }
+    }
+}
+
+/// Details of a stall promotion, for the supervisor's failure report.
+#[derive(Debug, Clone, Copy)]
+pub struct Promotion {
+    /// Flat worker index (`replica*(stages*tp) + stage*tp + t`) with the
+    /// oldest heartbeat when the run was declared stuck.
+    pub worker: usize,
+    /// How stale that heartbeat was, in milliseconds.
+    pub stale_ms: u64,
+}
+
+/// Background stall detector: polls [`Heartbeats`] and, when the whole
+/// run is stuck, promotes the hang into the poison path (abort flag +
+/// group/barrier poison) so every blocked thread fails loudly.
+pub struct Monitor {
+    stop: Arc<AtomicBool>,
+    promoted: Arc<Mutex<Option<Promotion>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Monitor {
+    /// Spawn the monitor thread. `groups` should contain EVERY collective
+    /// group of the run (sync, norm, tp) so promotion releases all
+    /// blocked waiters; `abort` is the fault plan's flag (ends injected
+    /// stalls), if a plan is present.
+    pub fn spawn(
+        hb: Arc<Heartbeats>,
+        timeout: Duration,
+        groups: Vec<Arc<AllReduceGroup>>,
+        barrier: Arc<Barrier>,
+        abort: Option<Arc<AtomicBool>>,
+    ) -> Monitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let promoted = Arc::new(Mutex::new(None));
+        let (stop2, promoted2) = (stop.clone(), promoted.clone());
+        let poll = (timeout / 8).clamp(Duration::from_millis(2), Duration::from_millis(250));
+        let handle = std::thread::Builder::new()
+            .name("hb-monitor".into())
+            .spawn(move || loop {
+                std::thread::sleep(poll);
+                if stop2.load(Ordering::SeqCst) {
+                    return;
+                }
+                match hb.status(timeout) {
+                    Pulse::AllDone => return,
+                    Pulse::Alive => {}
+                    Pulse::Stuck { worker, stale_ms } => {
+                        *promoted2.lock().unwrap() = Some(Promotion { worker, stale_ms });
+                        crate::metrics::recovery()
+                            .stalls_promoted
+                            .fetch_add(1, Ordering::Relaxed);
+                        // Order matters only for promptness: the abort
+                        // flag ends injected stalls, the poisons release
+                        // everyone blocked in a collective or the barrier.
+                        if let Some(flag) = &abort {
+                            flag.store(true, Ordering::SeqCst);
+                        }
+                        for g in &groups {
+                            g.poison();
+                        }
+                        barrier.poison();
+                        return;
+                    }
+                }
+            })
+            .expect("spawn heartbeat monitor");
+        Monitor { stop, promoted, handle: Some(handle) }
+    }
+
+    /// Whether (and against whom) the monitor fired.
+    pub fn promotion(&self) -> Option<Promotion> {
+        *self.promoted.lock().unwrap()
+    }
+
+    /// Stop and join the monitor thread.
+    pub fn shutdown(mut self) -> Option<Promotion> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+        self.promotion()
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_full_and_defaults() {
+        let plan = FaultPlan::parse("step=4,replica=1,stage=0,kind=panic,tp=1,op=3").unwrap();
+        let s = &plan.specs()[0];
+        assert_eq!((s.step, s.replica, s.stage, s.tp_rank, s.op), (4, 1, 0, 1, 3));
+        assert_eq!(s.kind, FaultKind::Panic);
+
+        let plan = FaultPlan::parse("step=2,kind=err").unwrap();
+        let s = &plan.specs()[0];
+        assert_eq!((s.replica, s.stage, s.tp_rank, s.op), (0, 0, 0, 0));
+        assert_eq!(s.kind, FaultKind::Err);
+
+        let plan = FaultPlan::parse("step=1,kind=err; step=3,kind=stall").unwrap();
+        assert_eq!(plan.specs().len(), 2);
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "kind=panic",                  // missing step
+            "step=1",                      // missing kind
+            "step=1,kind=sigkill",         // unknown kind
+            "step=x,kind=panic",           // non-integer
+            "step=1,kind=panic,node=3",    // unknown field
+            "step=1 kind=panic",           // not key=value
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn err_fault_fires_exactly_once() {
+        let plan = FaultPlan::parse("step=5,replica=1,stage=2,kind=err").unwrap();
+        // non-matching coordinates never fire
+        assert!(plan.check(5, 0, 2, 0, 0).is_ok());
+        assert!(plan.check(4, 1, 2, 0, 0).is_ok());
+        let err = plan.check(5, 1, 2, 0, 0).unwrap_err();
+        assert!(err.to_string().contains("injected fault (err)"), "{err:#}");
+        // one-shot: replaying the same coordinate (post-resume) is clean,
+        // including through a clone (latch is shared)
+        assert!(plan.check(5, 1, 2, 0, 0).is_ok());
+        assert!(plan.clone().check(5, 1, 2, 0, 0).is_ok());
+    }
+
+    #[test]
+    fn stall_fault_ends_on_abort_with_a_panic() {
+        let plan = FaultPlan::parse("step=0,kind=stall").unwrap();
+        let abort = plan.abort_flag();
+        let worker = {
+            let plan = plan.clone();
+            std::thread::spawn(move || plan.check(0, 0, 0, 0, 0))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!worker.is_finished(), "stall must hold until aborted");
+        abort.store(true, Ordering::SeqCst);
+        let payload = worker.join().expect_err("stall must end in a panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("promoted to failure"), "panic said: {msg}");
+    }
+
+    #[test]
+    fn heartbeat_status_transitions() {
+        let hb = Heartbeats::new(3);
+        let t = Duration::from_millis(40);
+        assert_eq!(hb.status(t), Pulse::Alive);
+        std::thread::sleep(Duration::from_millis(60));
+        // everyone stale -> stuck; cell 1 beaten latest is NOT the culprit
+        hb.beat(1);
+        std::thread::sleep(Duration::from_millis(60));
+        match hb.status(t) {
+            Pulse::Stuck { worker, stale_ms } => {
+                assert_ne!(worker, 1, "culprit must be an oldest-beat cell");
+                assert!(stale_ms >= 60);
+            }
+            other => panic!("expected Stuck, got {other:?}"),
+        }
+        // one fresh live worker -> alive again
+        hb.beat(2);
+        assert_eq!(hb.status(t), Pulse::Alive);
+        // all done -> AllDone regardless of age
+        hb.done(0);
+        hb.done(1);
+        hb.done(2);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(hb.status(Duration::from_millis(1)), Pulse::AllDone);
+    }
+
+    #[test]
+    fn monitor_promotes_a_stuck_run_and_poisons() {
+        let hb = Heartbeats::new(2);
+        let group = AllReduceGroup::new(2); // constructor returns Arc
+        let barrier = Barrier::new(2);
+        let abort = Arc::new(AtomicBool::new(false));
+        // a peer blocked at the barrier must be released by promotion
+        let blocked = {
+            let b = barrier.clone();
+            std::thread::spawn(move || b.wait())
+        };
+        let mon = Monitor::spawn(
+            hb.clone(),
+            Duration::from_millis(30),
+            vec![group.clone()],
+            barrier.clone(),
+            Some(abort.clone()),
+        );
+        // nobody beats -> promotion within a few polls
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while mon.promotion().is_none() {
+            assert!(Instant::now() < deadline, "monitor never promoted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(abort.load(Ordering::SeqCst), "promotion must set the abort flag");
+        let payload = blocked.join().expect_err("poison must panic the waiter");
+        // assert! with a literal message panics with &str, not String
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("barrier poisoned"), "waiter died with: {msg}");
+        let p = mon.shutdown().unwrap();
+        assert!(p.worker < 2);
+    }
+
+    #[test]
+    fn monitor_exits_when_all_workers_finish() {
+        let hb = Heartbeats::new(1);
+        let barrier = Barrier::new(1);
+        let mon = Monitor::spawn(
+            hb.clone(),
+            Duration::from_millis(20),
+            Vec::new(),
+            barrier,
+            None,
+        );
+        hb.done(0);
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(mon.promotion().is_none(), "clean finish must not promote");
+        mon.shutdown();
+    }
+}

@@ -126,10 +126,11 @@
 
 pub mod adam;
 pub mod checkpoint;
+pub mod fault;
 pub mod pool;
 
 use std::collections::VecDeque;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -148,7 +149,7 @@ use crate::pipeline::{
 use crate::runtime::{DeviceTensor, Executable, Runtime, SegKind, SegSpec, Tensor, TpStageView};
 use crate::tp::rank_order_sum_into;
 use adam::{global_grad_norm, masked_range_sumsq, masked_seg_sumsq, ShardedAdam};
-use checkpoint::{optimizer_shard_file_tp, stage_param_file};
+use checkpoint::stage_param_file;
 use pool::{slab_pair, SlabPool, SlabReturn};
 
 /// Training hyperparameters.
@@ -228,6 +229,31 @@ pub struct TrainerCfg {
     /// live collective computes. Live `--tp n` training is bitwise-equal
     /// to this (rust/tests/tp_equivalence.rs). 0 or 1 = off.
     pub emulate_tp: usize,
+    /// Deterministic fault-injection plan (`--fault`): every worker checks
+    /// it at each op boundary and dies at the exact (step, replica, stage,
+    /// tp rank, op) coordinates it names, so chaos scenarios replay
+    /// bitwise (docs/fault_tolerance.md §Fault grammar). `None` = off.
+    pub fault: Option<fault::FaultPlan>,
+    /// Stall detection (`--heartbeat-timeout`): a monitor thread watches
+    /// per-worker heartbeats and, once **every** live worker has been
+    /// silent this long, promotes the hang into the same poison path a
+    /// panic takes (the culprit is the stalest worker). `None` = no
+    /// monitor; a genuinely hung collective then hangs the run, exactly
+    /// the pre-elastic behavior.
+    pub heartbeat_timeout: Option<std::time::Duration>,
+    /// Periodic checkpoint cadence in steps (`--checkpoint-every`): every
+    /// k-th step's params + optimizer shards are committed atomically into
+    /// `checkpoint_dir` (staging dir, then a rename swap), giving the
+    /// elastic supervisor a recent consistent state to re-shard from.
+    /// 0 = final-state-only, the historic behavior.
+    pub checkpoint_every: usize,
+    /// Supervised mode only ([`train_supervised`]): recovery attempts
+    /// (excise + re-shard + relaunch) before giving up.
+    pub max_recoveries: usize,
+    /// Supervised mode only: base backoff between a failure and the
+    /// relaunch, multiplied by the attempt number. 0 relaunches instantly
+    /// (tests); real deployments want a few seconds.
+    pub retry_backoff_ms: u64,
 }
 
 impl Default for TrainerCfg {
@@ -251,6 +277,11 @@ impl Default for TrainerCfg {
             tp: 1,
             emulate_dp: 0,
             emulate_tp: 0,
+            fault: None,
+            heartbeat_timeout: None,
+            checkpoint_every: 0,
+            max_recoveries: 1,
+            retry_backoff_ms: 0,
         }
     }
 }
@@ -401,6 +432,12 @@ struct WorkerCtx {
     norm_group: Option<Arc<AllReduceGroup>>,
     /// Per-(replica, stage) tp combine group (None unless live tp > 1).
     tp_group: Option<Arc<AllReduceGroup>>,
+    /// Shared heartbeat board the stall monitor reads.
+    hb: Arc<fault::Heartbeats>,
+    /// This worker's heartbeat cell / flat worker index
+    /// (`replica · (p · tpw) + stage · tpw + tp_rank`, the
+    /// [`TrainReport::stage_timers`] layout).
+    widx: usize,
 }
 
 impl WorkerCtx {
@@ -473,6 +510,79 @@ fn flush_staged(pending: &mut VecDeque<StagedMsg>, chunks: &[ChunkIo]) {
 
 /// Run PPMoE pipeline training against an artifacts directory.
 pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
+    train_capture(cfg, &mut Vec::new())
+}
+
+/// One dead worker's grid identity and cause, captured by
+/// [`train_capture`] when a run fails. `msg` carries the worker's panic
+/// payload or error chain verbatim — [`root_failure`] pattern-matches it
+/// to separate root causes from poison-cascade collateral.
+#[derive(Debug, Clone)]
+pub struct WorkerFailure {
+    /// dp rank of the dead worker.
+    pub replica: usize,
+    /// Pipeline stage of the dead worker.
+    pub stage: usize,
+    /// tp rank of the dead worker.
+    pub tp_rank: usize,
+    /// Panic payload / error chain, or a synthesized description for a
+    /// worker that could not be joined (stall-promoted).
+    pub msg: String,
+}
+
+/// Pick the root cause among a failed run's worker failures: injected
+/// faults and heartbeat promotions are roots by construction; otherwise
+/// prefer a worker that did NOT die of the poison/channel cascade (whose
+/// messages name the poisoned primitive or a closed channel). The root's
+/// `replica` is the dp rank the supervisor excises.
+pub fn root_failure(failures: &[WorkerFailure]) -> Option<&WorkerFailure> {
+    failures
+        .iter()
+        .find(|f| f.msg.contains("injected fault") || f.msg.contains("stall promoted"))
+        .or_else(|| {
+            failures
+                .iter()
+                .find(|f| !f.msg.contains("poisoned") && !f.msg.contains("closed"))
+        })
+        .or_else(|| failures.first())
+}
+
+/// Render a thread panic payload (the `Box<dyn Any>` from `join`).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        return s.clone();
+    }
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        return (*s).to_string();
+    }
+    "panic with non-string payload".to_string()
+}
+
+/// Receive one microbatch loss from a possibly-dying run. Without a stall
+/// monitor a plain blocking recv suffices: any worker death drops its
+/// channel ends (directly or through the poison cascade) and the recv
+/// errors. With a monitor, a *genuinely hung* worker never drops its
+/// sender, so poll and give up once the monitor has promoted the stall.
+fn recv_loss(rx: &Receiver<f32>, monitor: Option<&fault::Monitor>) -> Option<f32> {
+    let Some(mon) = monitor else { return rx.recv().ok() };
+    loop {
+        match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+            Ok(v) => return Some(v),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return None,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if mon.promotion().is_some() {
+                    return None;
+                }
+            }
+        }
+    }
+}
+
+/// [`train`] plus structured failure capture: when the run dies,
+/// `failures_out` receives one [`WorkerFailure`] per dead worker (the
+/// vendored error type has no downcasting, so the supervisor gets its
+/// structured view through this out-parameter instead).
+pub fn train_capture(cfg: &TrainerCfg, failures_out: &mut Vec<WorkerFailure>) -> Result<TrainReport> {
     // read the manifest once on the driver to learn the geometry
     let manifest = crate::runtime::Manifest::load(&cfg.artifacts.join("manifest.json"))?;
     let p = manifest.model.stages;
@@ -540,50 +650,23 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
 
     // resumption: the checkpointed step count positions the data stream and
     // the LR warmup exactly where an uninterrupted run would be; the
-    // recorded dp and tp must match (shards + data split depend on them)
+    // recorded dp and tp must match (shards + data split depend on them).
+    // Validation happens ON THE DRIVER, before spawn, and checks byte sizes
+    // as well as existence: a torn shard discovered by one worker thread
+    // after spawn would strand its peers inside the shared collectives
+    // (they poison + panic rather than deadlock, but failing here is a
+    // clean error instead)
     let start_step = match &cfg.resume_dir {
-        Some(dir) => {
-            let (steps, ckpt_dp, ckpt_tp) = checkpoint::load_train_state(dir)
-                .context("resume checkpoint is missing train_state.json")?;
-            if ckpt_dp != dp {
-                bail!(
-                    "checkpoint was taken at dp={ckpt_dp}, cannot resume at \
-                     dp={dp} (optimizer shards and data split differ)"
-                );
-            }
-            if ckpt_tp != tg {
-                bail!(
-                    "checkpoint was taken at tp={ckpt_tp}, cannot resume at \
-                     tp={tg} (parameter and optimizer sharding differ)"
-                );
-            }
-            // pre-validate every (stage, tp rank, dp rank) file ON THE
-            // DRIVER: a missing shard discovered by one worker thread after
-            // spawn would strand its peers inside the shared collectives
-            // (they poison + panic rather than deadlock, but failing here
-            // is a clean error instead)
-            for stage in 0..p {
-                for t in 0..tg {
-                    let bin = dir.join(stage_param_file(stage, t, tg));
-                    if !bin.exists() {
-                        bail!("resume checkpoint missing {}", bin.display());
-                    }
-                    for rank in 0..dp {
-                        let f = dir.join(optimizer_shard_file_tp(stage, t, tg, rank));
-                        if !f.exists() {
-                            bail!(
-                                "resume checkpoint missing {} (dp={dp} tp={tg} \
-                                 needs every lane's optimizer shard)",
-                                f.display()
-                            );
-                        }
-                    }
-                }
-            }
-            steps
-        }
+        Some(dir) => checkpoint::validate_resume_dir(dir, &manifest, dp, tg)
+            .context("resume checkpoint failed pre-spawn validation")?,
         None => 0,
     };
+    if let Some(dir) = &cfg.checkpoint_dir {
+        // a staging dir left behind by a crashed run is garbage by
+        // definition (commits are rename-atomic); clear it before workers
+        // start writing this run's staged state into the same path
+        checkpoint::discard_staging(dir)?;
+    }
 
     // collectives: one dp gradient group per (stage, tp rank, chunk), one
     // scalar norm group per stage across the dp × tp lanes, and one tp
@@ -604,10 +687,27 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     let barrier = Barrier::new(p * dp * tpw + 1); // all stage workers + driver
     let sched = Arc::new(schedule_virtual(cfg.schedule, p, m_local, v));
 
+    // every collective in the run, flat — the set the stall monitor (and
+    // the driver's own failure path) poisons to release blocked waiters
+    let mut all_groups: Vec<Arc<AllReduceGroup>> = Vec::new();
+    for per_tp in &sync_groups {
+        for per_chunk in per_tp {
+            all_groups.extend(per_chunk.iter().cloned());
+        }
+    }
+    all_groups.extend(norm_groups.iter().cloned());
+    for per_stage in &tp_groups {
+        all_groups.extend(per_stage.iter().cloned());
+    }
+    // heartbeat board: one cell per worker, beaten at every op boundary
+    let hb = fault::Heartbeats::new(p * dp * tpw);
+
     // stage timers + executed-op traces back to the driver at the end
     let (timer_tx, timer_rx) = channel::<(usize, usize, usize, Timers, Vec<Op>)>();
 
-    let mut handles = Vec::new();
+    // (replica, stage, tp_rank, handle): identity travels with the handle
+    // so join failures attribute to a grid coordinate
+    let mut handles: Vec<(usize, usize, usize, thread::JoinHandle<Result<()>>)> = Vec::new();
     // driver-side ends: token/target feeds per (replica, tp worker), one
     // loss stream per replica (only tp rank 0 reports)
     let mut driver_txs: Vec<Vec<Sender<ActMsg>>> = Vec::with_capacity(dp);
@@ -732,6 +832,8 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
                     } else {
                         None
                     },
+                    hb: hb.clone(),
+                    widx: replica * (p * tpw) + stage * tpw + t,
                 };
                 let barrier = barrier.clone();
                 let sched = sched.clone();
@@ -740,7 +842,7 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
                     .name(format!("dp{replica}tp{t}stage{stage}"))
                     .spawn(move || stage_worker(ctx, &cfg, &sched[stage], io, barrier))
                     .context("spawning stage thread")?;
-                handles.push(handle);
+                handles.push((replica, stage, t, handle));
             }
             rep_driver_txs.push(fwd_txs[0][0].clone());
             rep_tgt_txs.push(tgt_tx);
@@ -750,6 +852,18 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         loss_rxs.push(loss_rx);
     }
     drop(timer_tx);
+
+    // stall monitor: promotes an all-quiet heartbeat board into the same
+    // poison path a worker panic takes (fault.rs module docs)
+    let monitor = cfg.heartbeat_timeout.map(|timeout| {
+        fault::Monitor::spawn(
+            hb.clone(),
+            timeout,
+            all_groups.clone(),
+            barrier.clone(),
+            cfg.fault.as_ref().map(|f| f.abort_flag()),
+        )
+    });
 
     // ---- driver loop: feed data, collect losses ----
     let mut corpus = Corpus::new(vocab, cfg.seed);
@@ -762,8 +876,10 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     let run_start = std::time::Instant::now();
     let mut total_tokens = 0usize;
     let mut final_loss = f32::NAN;
+    let mut run_failed = false;
+    let mut driver_failure: Option<String> = None;
 
-    for local_step in 0..cfg.steps {
+    'steps: for local_step in 0..cfg.steps {
         let step = start_step + local_step; // global step index
         let t0 = std::time::Instant::now();
         // route the global batch: replica r owns the contiguous microbatch
@@ -791,10 +907,50 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         let mut loss_sum = 0.0f32;
         for rx in &loss_rxs {
             for _ in 0..m_local {
-                loss_sum += rx.recv().context("loss channel closed")?;
+                match recv_loss(rx, monitor.as_ref()) {
+                    Some(l) => loss_sum += l,
+                    None => {
+                        run_failed = true;
+                        break 'steps;
+                    }
+                }
             }
         }
-        barrier.wait(); // optimizer updates done on all stages
+        // optimizer updates done on all stages; a poisoned barrier means a
+        // worker died mid-step — stop feeding and go reap the failures
+        if !barrier.wait_checked() {
+            run_failed = true;
+            break 'steps;
+        }
+        if cfg.checkpoint_every > 0
+            && local_step + 1 < cfg.steps
+            && (local_step + 1) % cfg.checkpoint_every == 0
+        {
+            if let Some(dir) = &cfg.checkpoint_dir {
+                // workers staged this step's shards before the barrier
+                // above; commit by rename, then release them through a
+                // second barrier (no worker may start the next interval's
+                // staging write while the swap is in flight)
+                if let Err(e) =
+                    checkpoint::commit_staged(dir, start_step + local_step + 1, dp, tg)
+                {
+                    driver_failure = Some(format!("checkpoint commit failed: {e:#}"));
+                    for g in &all_groups {
+                        g.poison();
+                    }
+                    barrier.poison();
+                    run_failed = true;
+                    break 'steps;
+                }
+                crate::metrics::recovery()
+                    .checkpoints_committed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if !barrier.wait_checked() {
+                    run_failed = true;
+                    break 'steps;
+                }
+            }
+        }
         let loss = loss_sum / m as f32;
         let tokens = m * b * s;
         total_tokens += tokens;
@@ -813,22 +969,92 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
     drop(driver_txs);
     drop(tgt_txs);
 
+    // the monitor only naps ≤250ms at a time, so this join is prompt; on a
+    // promoted stall it already exited and this just collects the verdict
+    let promotion = monitor.and_then(|m| m.shutdown());
+    if promotion.is_some() {
+        run_failed = true;
+    }
+
     let mut stage_timers = vec![Timers::new(); p * dp * tpw];
     let mut executed_ops = vec![Vec::new(); p];
-    for (replica, stage, t, timers, trace) in timer_rx {
-        stage_timers[replica * (p * tpw) + stage * tpw + t] = timers;
-        if replica == 0 && t == 0 {
-            executed_ops[stage] = trace;
+    if !run_failed {
+        // drain blocks until every worker drops its timer_tx (i.e. exits);
+        // safe only for a run whose workers are all known to terminate
+        for (replica, stage, t, timers, trace) in timer_rx {
+            stage_timers[replica * (p * tpw) + stage * tpw + t] = timers;
+            if replica == 0 && t == 0 {
+                executed_ops[stage] = trace;
+            }
         }
     }
-    for h in handles {
-        h.join().expect("stage thread panicked")?;
+    // reap the workers. On a failed run, join through a bounded wait: the
+    // poison cascade unwinds every *blocked* worker (and injected stalls
+    // panic on the abort flag), but a genuinely hung thread — the very
+    // thing the heartbeat monitor promoted — can never be joined, so after
+    // the grace window its handle is abandoned and a failure synthesized.
+    let mut failures: Vec<WorkerFailure> = Vec::new();
+    let reap_deadline = std::time::Instant::now()
+        + cfg.heartbeat_timeout.unwrap_or_default()
+        + std::time::Duration::from_secs(10);
+    for (replica, stage, t, h) in handles {
+        if run_failed {
+            while !h.is_finished() && std::time::Instant::now() < reap_deadline {
+                thread::sleep(std::time::Duration::from_millis(2));
+            }
+            if !h.is_finished() {
+                let widx = replica * (p * tpw) + stage * tpw + t;
+                let msg = match &promotion {
+                    Some(pr) if pr.worker == widx => format!(
+                        "stall promoted by heartbeat timeout ({}ms stale); \
+                         worker is unjoinable, thread abandoned",
+                        pr.stale_ms
+                    ),
+                    _ => "worker did not exit after run failure; thread abandoned".to_string(),
+                };
+                failures.push(WorkerFailure { replica, stage, tp_rank: t, msg });
+                continue;
+            }
+        }
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => failures.push(WorkerFailure {
+                replica,
+                stage,
+                tp_rank: t,
+                msg: format!("{e:#}"),
+            }),
+            Err(payload) => failures.push(WorkerFailure {
+                replica,
+                stage,
+                tp_rank: t,
+                msg: panic_message(payload),
+            }),
+        }
     }
+    if run_failed || !failures.is_empty() || driver_failure.is_some() {
+        crate::metrics::recovery()
+            .workers_failed
+            .fetch_add(failures.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        let root = root_failure(&failures)
+            .map(|f| format!("dp{} stage{} tp{}: {}", f.replica, f.stage, f.tp_rank, f.msg))
+            .or(driver_failure)
+            .unwrap_or_else(|| "run failed with no attributable worker".to_string());
+        let n = failures.len();
+        *failures_out = failures;
+        bail!("training run failed ({n} worker failure(s); root cause: {root})");
+    }
+
     if let Some(dir) = &cfg.checkpoint_dir {
-        // stages wrote params + optimizer state; the driver owns the step
-        // counter the resume path fast-forwards the corpus by, and the
-        // (dp, tp) the shards were taken at
-        checkpoint::save_train_state(dir, start_step + cfg.steps, dp, tg)?;
+        // stages staged params + optimizer state after their last step; the
+        // driver owns the step counter the resume path fast-forwards the
+        // corpus by, and the (dp, tp) the shards were taken at. The commit
+        // swaps the staged dir in atomically — a crash anywhere above
+        // leaves the previous checkpoint intact, never a torn one.
+        checkpoint::commit_staged(dir, start_step + cfg.steps, dp, tg)?;
+        crate::metrics::recovery()
+            .checkpoints_committed
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 
     Ok(TrainReport {
@@ -840,6 +1066,171 @@ pub fn train(cfg: &TrainerCfg) -> Result<TrainReport> {
         final_loss,
         executed_ops,
     })
+}
+
+/// What one recovery did: which replica died, the dp transition, and the
+/// global step the relaunch resumed from.
+#[derive(Debug, Clone)]
+pub struct RecoveryEvent {
+    /// dp size the failed attempt ran at.
+    pub dp_from: usize,
+    /// dp size after excision (`dp_from − 1`).
+    pub dp_to: usize,
+    /// The excised dp rank (the root failure's replica).
+    pub replica: usize,
+    /// Global step the relaunch resumed from — the last committed
+    /// checkpoint.
+    pub resumed_at_step: usize,
+    /// Root-cause message of the failure that triggered this recovery.
+    pub cause: String,
+}
+
+/// A supervised run's outcome: the final (successful) attempt's report
+/// plus every recovery the supervisor performed on the way.
+#[derive(Debug)]
+pub struct SupervisedReport {
+    /// Report of the attempt that completed (its `steps` cover only that
+    /// attempt's local steps — earlier attempts' progress lives in the
+    /// checkpoint trail).
+    pub report: TrainReport,
+    /// Recoveries performed, in order. Empty = the first attempt ran
+    /// through clean.
+    pub recoveries: Vec<RecoveryEvent>,
+}
+
+/// [`train`] wrapped in the elastic supervision loop (`--elastic`): when a
+/// replica group dies, excise the root failure's dp rank, re-shard the
+/// ZeRO-1 optimizer state in the last committed checkpoint from `dp` to
+/// `dp − 1` ways ([`checkpoint::reshard_optimizer`] — the full moment
+/// state is dp-invariant, so this is a pure re-partition along the
+/// [`segment`] contract), re-partition the global microbatch blocks (free:
+/// the driver splits `num_micro` over whatever dp it launches with), and
+/// relaunch from that checkpoint at the reduced width. The recovered
+/// trajectory is bitwise-equal from the resharding step onward to an
+/// uninterrupted run launched at the lower dp from the same checkpoint
+/// (rust/tests/elastic_equivalence.rs).
+///
+/// Requires `checkpoint_dir` (recovery re-shards from the last committed
+/// checkpoint; set `checkpoint_every` to bound lost work). Bounded by
+/// `max_recoveries`, with `retry_backoff_ms × attempt` sleeps between
+/// attempts.
+pub fn train_supervised(cfg: &TrainerCfg) -> Result<SupervisedReport> {
+    let Some(ckpt_dir) = cfg.checkpoint_dir.clone() else {
+        bail!(
+            "--elastic requires --checkpoint: recovery re-shards optimizer \
+             state from the last committed checkpoint"
+        );
+    };
+    let manifest = crate::runtime::Manifest::load(&cfg.artifacts.join("manifest.json"))?;
+    let stages = manifest.model.stages;
+    let tg = if cfg.emulate_tp > 1 { cfg.emulate_tp } else { cfg.tp };
+    // the global step the run must reach, fixed across attempts
+    let end_step = match &cfg.resume_dir {
+        Some(dir) => checkpoint::load_train_state(dir)?.0 + cfg.steps,
+        None => cfg.steps,
+    };
+
+    let mut attempt_cfg = cfg.clone();
+    let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+    loop {
+        let mut failures = Vec::new();
+        let err = match train_capture(&attempt_cfg, &mut failures) {
+            Ok(report) => return Ok(SupervisedReport { report, recoveries }),
+            Err(e) => e,
+        };
+        if recoveries.len() >= cfg.max_recoveries {
+            return Err(err.context(format!(
+                "giving up after {} recovery attempt(s) (--max-recoveries)",
+                recoveries.len()
+            )));
+        }
+        let root = root_failure(&failures).cloned();
+        let cause = root
+            .as_ref()
+            .map(|f| format!("dp{} stage{} tp{}: {}", f.replica, f.stage, f.tp_rank, f.msg))
+            .unwrap_or_else(|| format!("{err:#}"));
+        let dead = root.as_ref().map(|f| f.replica).unwrap_or(0);
+
+        // the checkpoint trail is the source of truth for where to resume:
+        // commits are rename-atomic, so whatever train_state.json says is
+        // a consistent state (validate_resume_dir re-proves it on relaunch)
+        let (ckpt_steps, ckpt_dp, ckpt_tp) = checkpoint::load_train_state(&ckpt_dir)
+            .with_context(|| {
+                format!(
+                    "recovery needs a committed checkpoint in {} — the run \
+                     died before its first commit (set --checkpoint-every \
+                     below the failure step, or start from --resume); \
+                     original failure: {cause}",
+                    ckpt_dir.display()
+                )
+            })?;
+        if ckpt_dp != attempt_cfg.dp {
+            bail!(
+                "checkpoint {} records dp={ckpt_dp} but the failed attempt \
+                 ran dp={} — refusing to re-shard from a foreign checkpoint \
+                 (original failure: {cause})",
+                ckpt_dir.display(),
+                attempt_cfg.dp
+            );
+        }
+        if ckpt_tp != tg {
+            bail!(
+                "checkpoint {} records tp={ckpt_tp} but the run uses tp={tg} \
+                 (original failure: {cause})",
+                ckpt_dir.display()
+            );
+        }
+        let dp_new = ckpt_dp - 1;
+        if dp_new == 0 {
+            return Err(err.context(format!(
+                "the last replica died — nothing left to excise down to \
+                 (root cause: {cause})"
+            )));
+        }
+        if cfg.num_micro % dp_new != 0 {
+            return Err(err.context(format!(
+                "cannot re-partition {} global microbatches over the {} \
+                 surviving replica(s) (--micro must stay divisible after \
+                 excision; root cause: {cause})",
+                cfg.num_micro, dp_new
+            )));
+        }
+
+        crate::metrics::recovery()
+            .recovery_attempts
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if cfg.retry_backoff_ms > 0 {
+            let pause = cfg.retry_backoff_ms * (recoveries.len() as u64 + 1);
+            eprintln!("[elastic] backing off {pause}ms before relaunch");
+            thread::sleep(std::time::Duration::from_millis(pause));
+        }
+
+        // the failed attempt may have left a partial staging dir; recovery
+        // re-shards the *committed* state only
+        checkpoint::discard_staging(&ckpt_dir)?;
+        checkpoint::reshard_optimizer(&ckpt_dir, stages, tg, ckpt_dp, dp_new).with_context(
+            || format!("re-sharding optimizer state {ckpt_dp} → {dp_new} ways"),
+        )?;
+        {
+            let rec = crate::metrics::recovery();
+            rec.ranks_excised.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            rec.optimizer_reshards.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        eprintln!(
+            "[elastic] replica {dead} excised ({cause}); resuming at \
+             dp={dp_new} from step {ckpt_steps}"
+        );
+        recoveries.push(RecoveryEvent {
+            dp_from: ckpt_dp,
+            dp_to: dp_new,
+            replica: dead,
+            resumed_at_step: ckpt_steps,
+            cause,
+        });
+        attempt_cfg.dp = dp_new;
+        attempt_cfg.resume_dir = Some(ckpt_dir.clone());
+        attempt_cfg.steps = end_step - ckpt_steps;
+    }
 }
 
 /// A (chunk, micro)'s forward-time state, stashed on device for its
@@ -1202,6 +1593,13 @@ fn stage_worker_inner(
             // release any staged wrap-edge payload before this op can
             // block on a recv (deadlock-freedom of the deferral)
             flush_staged(&mut pending, &io.chunks);
+            // op boundary: beat the heartbeat (liveness for the stall
+            // monitor), then fire any injected fault scheduled for these
+            // exact (step, replica, stage, tp rank, op) coordinates
+            ctx.hb.beat(ctx.widx);
+            if let Some(plan) = &cfg.fault {
+                plan.check(start_step + _step, replica, stage, ctx.tp_rank, op_idx)?;
+            }
             match *op {
                 Op::Fwd { micro, chunk } => {
                     let segs = &seg_specs[chunk];
@@ -1837,7 +2235,27 @@ fn stage_worker_inner(
             }
             Ok(())
         })?;
+        // big-model checkpoint writes can outlast the heartbeat timeout;
+        // beat on entry so only a genuine hang looks stale
+        ctx.hb.beat(ctx.widx);
+        let committing = cfg.checkpoint_every > 0
+            && cfg.checkpoint_dir.is_some()
+            && (_step + 1) % cfg.checkpoint_every == 0
+            && _step + 1 < cfg.steps;
+        if committing {
+            // periodic checkpoint: stage this step's shards for the
+            // driver's atomic commit (mirrors the driver's predicate
+            // exactly — the second barrier below must be unanimous)
+            let dir = cfg.checkpoint_dir.as_ref().unwrap();
+            write_worker_checkpoint(&checkpoint::staging_dir(dir), &ctx, &lanes)?;
+        }
         barrier.wait();
+        if committing {
+            // the driver swaps the staged dir in (rename-atomic) between
+            // these two barriers; no worker may touch the staging path
+            // while the swap is in flight
+            barrier.wait();
+        }
     }
 
     // retire the sync workers (no further buckets will arrive)
@@ -1849,21 +2267,10 @@ fn stage_worker_inner(
     }
 
     if let Some(dir) = &cfg.checkpoint_dir {
-        for (l, lane) in lanes.iter().enumerate() {
-            let grank = ctx.grank(l);
-            if replica == 0 {
-                // parameters are bitwise-identical across replicas after
-                // the final all-gather; one copy per tp rank suffices
-                checkpoint::save_params_with(
-                    dir,
-                    &stage_param_file(stage, grank, tg),
-                    &lane.view.params,
-                    &lane.params,
-                )?;
-            }
-            // every (tp, dp) lane owns (and must checkpoint) its moments
-            checkpoint::save_optimizer_tp(dir, stage, grank, tg, replica, &lane.opts)?;
-        }
+        // final state goes through the same staging dir; the driver
+        // commits it after every worker has joined
+        ctx.hb.beat(ctx.widx);
+        write_worker_checkpoint(&checkpoint::staging_dir(dir), &ctx, &lanes)?;
     }
 
     // slab economy: after warmup every p2p payload should come from the
@@ -1879,6 +2286,28 @@ fn stage_worker_inner(
         }
     }
 
+    ctx.hb.done(ctx.widx); // monitor: this cell is finished, not stale
     io.timer_tx.send((replica, stage, ctx.tp_rank, timers, trace)).ok();
+    Ok(())
+}
+
+/// Write this worker's slice of a checkpoint into `dir` (the staging
+/// directory — the driver commits it by rename): per-tp-rank parameters on
+/// replica 0 (bitwise-identical across replicas after the all-gather) and
+/// every lane's sharded Adam moments.
+fn write_worker_checkpoint(dir: &Path, ctx: &WorkerCtx, lanes: &[Lane]) -> Result<()> {
+    for (l, lane) in lanes.iter().enumerate() {
+        let grank = ctx.grank(l);
+        if ctx.replica == 0 {
+            checkpoint::save_params_with(
+                dir,
+                &stage_param_file(ctx.stage, grank, ctx.tg),
+                &lane.view.params,
+                &lane.params,
+            )?;
+        }
+        // every (tp, dp) lane owns (and must checkpoint) its moments
+        checkpoint::save_optimizer_tp(dir, ctx.stage, grank, ctx.tg, ctx.replica, &lane.opts)?;
+    }
     Ok(())
 }

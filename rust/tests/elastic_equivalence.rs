@@ -1,0 +1,338 @@
+//! Chaos tier: deterministic fault injection + elastic recovery.
+//!
+//! Two tiers, like the dp/tp equivalence suites:
+//!
+//! * **Contract tier** (always runs): the `--fault` grammar through the
+//!   public API, one-shot firing semantics, and the root-cause selection
+//!   that decides which dp rank the supervisor excises.
+//! * **Live tier** (needs a real PJRT backend + artifacts): kill a replica
+//!   mid-run under every fault kind (panic / err / heartbeat-promoted
+//!   stall) and assert the supervised recovery — excise the dead rank,
+//!   re-shard the ZeRO-1 Adam shards dp → dp−1, resume from the last
+//!   committed checkpoint — is **bitwise** equal, from the resharding step
+//!   onward, to an uninterrupted run launched at the lower dp from the
+//!   same checkpoint. Composed with interleaved virtual stages and the
+//!   live tp axis where the artifacts carry them.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use ppmoe::runtime::Manifest;
+use ppmoe::trainer::fault::{FaultKind, FaultPlan};
+use ppmoe::trainer::{
+    checkpoint, root_failure, train, train_supervised, TrainerCfg, WorkerFailure,
+};
+
+fn cfg_for(artifacts: PathBuf, steps: usize, micro: usize) -> TrainerCfg {
+    TrainerCfg {
+        artifacts,
+        steps,
+        num_micro: micro,
+        lr: 3e-3,
+        seed: 23,
+        log_every: 0,
+        warmup_steps: 3, // the LR ramp must survive excision untouched
+        ..Default::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ppmoe_elastic_{tag}_{}", std::process::id()))
+}
+
+// ---------------------------------------------------------------------------
+// Contract tier: grammar + root-cause selection, no execution
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_grammar_parses_and_rejects() {
+    let plan = FaultPlan::parse(
+        "step=4,replica=1,stage=0,tp=1,op=2,kind=stall; step=9,kind=err",
+    )
+    .unwrap();
+    let specs = plan.specs();
+    assert_eq!(specs.len(), 2);
+    assert_eq!(
+        (specs[0].step, specs[0].replica, specs[0].tp_rank, specs[0].op),
+        (4, 1, 1, 2)
+    );
+    assert_eq!(specs[0].kind, FaultKind::Stall);
+    // unspecified coordinates default to 0
+    assert_eq!(
+        (specs[1].replica, specs[1].stage, specs[1].tp_rank, specs[1].op),
+        (0, 0, 0, 0)
+    );
+    assert_eq!(specs[1].kind, FaultKind::Err);
+    for bad in [
+        "",
+        "kind=panic",              // step is required
+        "step=1",                  // kind is required
+        "step=1,kind=explode",     // unknown kind
+        "step=one,kind=err",       // non-integer
+        "step=1,minute=3,kind=err", // unknown field
+        "step 1 kind err",         // not key=value
+    ] {
+        assert!(FaultPlan::parse(bad).is_err(), "'{bad}' must be rejected");
+    }
+}
+
+#[test]
+fn err_fault_fires_exactly_once_at_its_coordinate() {
+    let plan = FaultPlan::parse("step=2,kind=err").unwrap();
+    assert!(plan.check(1, 0, 0, 0, 0).is_ok(), "wrong step: no fire");
+    assert!(plan.check(2, 1, 0, 0, 0).is_ok(), "wrong replica: no fire");
+    assert!(plan.check(2, 0, 0, 0, 3).is_ok(), "wrong op: no fire");
+    let e = plan.check(2, 0, 0, 0, 0).unwrap_err().to_string();
+    assert!(e.contains("injected fault (err)"), "{e}");
+    // the one-shot latch: a supervised resume replays step 2, the fault
+    // must not refire — and the latch survives plan clones
+    assert!(plan.clone().check(2, 0, 0, 0, 0).is_ok(), "must not refire");
+}
+
+#[test]
+fn root_cause_selection_prefers_faults_over_cascade_collateral() {
+    let mk = |replica: usize, msg: &str| WorkerFailure {
+        replica,
+        stage: 0,
+        tp_rank: 0,
+        msg: msg.to_string(),
+    };
+    // an injected fault outranks everything, wherever it sits
+    let fs = vec![
+        mk(0, "recv on a closed channel"),
+        mk(1, "collective group poisoned: a participant failed"),
+        mk(2, "injected fault (panic) at step=4 replica=2 stage=0 tp=0 op=0"),
+    ];
+    assert_eq!(root_failure(&fs).unwrap().replica, 2);
+    // so does a heartbeat promotion
+    let fs = vec![
+        mk(0, "barrier poisoned: a participant failed"),
+        mk(1, "stall promoted by heartbeat timeout (800ms stale)"),
+    ];
+    assert_eq!(root_failure(&fs).unwrap().replica, 1);
+    // otherwise: the worker that did NOT die of the poison/channel cascade
+    let fs = vec![
+        mk(0, "barrier poisoned: a participant failed"),
+        mk(1, "XLA execute failed: device went away"),
+    ];
+    assert_eq!(root_failure(&fs).unwrap().replica, 1);
+    // all collateral: settle for the first
+    let fs = vec![mk(1, "poisoned"), mk(0, "closed channel")];
+    assert_eq!(root_failure(&fs).unwrap().replica, 1);
+    assert!(root_failure(&[]).is_none());
+}
+
+// ---------------------------------------------------------------------------
+// Live tier: kill-a-replica chaos (needs a real PJRT backend)
+// ---------------------------------------------------------------------------
+
+/// The chaos harness. Runs three trainings:
+///
+/// 1. **elastic** — dp=2, `kind` fault on replica 1 at global step 4, a
+///    committed checkpoint every 2 steps, supervised recovery to dp=1;
+/// 2. **head** — a clean dp=2 run to the checkpoint step, whose final
+///    commit is bitwise the state the elastic run recovered from;
+/// 3. **tail** — `reshard_optimizer(2 → 1)` on the head's checkpoint by
+///    hand, then an uninterrupted dp=1 resume to the same end step.
+///
+/// The recovered attempt's per-step losses and the final per-(stage, tp)
+/// parameters must equal the tail's bitwise.
+fn assert_elastic_recovery(
+    arts: PathBuf,
+    kind: &str,
+    heartbeat: Option<Duration>,
+    tp: usize,
+    micro: usize,
+) {
+    let manifest = Manifest::load(&arts.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+    let (steps, fault_step, every) = (6usize, 4usize, 2usize);
+
+    let ck_el = tmp(&format!("{kind}_tp{tp}_el"));
+    let ck_ref = tmp(&format!("{kind}_tp{tp}_ref"));
+    for d in [&ck_el, &ck_ref] {
+        std::fs::remove_dir_all(d).ok();
+    }
+
+    // 1. the elastic run that takes the hit
+    let mut cfg = cfg_for(arts.clone(), steps, micro);
+    cfg.dp = 2;
+    cfg.tp = tp;
+    cfg.checkpoint_dir = Some(ck_el.clone());
+    cfg.checkpoint_every = every;
+    cfg.fault = Some(
+        FaultPlan::parse(&format!("step={fault_step},replica=1,kind={kind}")).unwrap(),
+    );
+    cfg.heartbeat_timeout = heartbeat;
+    cfg.max_recoveries = 1;
+    let t0 = Instant::now();
+    let sup = train_supervised(&cfg).unwrap();
+    // a promoted stall must resolve in bounded time, not hang the harness
+    assert!(
+        t0.elapsed() < Duration::from_secs(120),
+        "{kind}: recovery took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(sup.recoveries.len(), 1, "{kind}: exactly one recovery");
+    let ev = &sup.recoveries[0];
+    assert_eq!((ev.dp_from, ev.dp_to), (2, 1), "{kind}: dp transition");
+    assert_eq!(ev.replica, 1, "{kind}: the faulted replica must be excised");
+    assert_eq!(
+        ev.resumed_at_step, fault_step,
+        "{kind}: must resume from the step-{fault_step} commit"
+    );
+    assert!(
+        ev.cause.contains("injected fault") || ev.cause.contains("stall promoted"),
+        "{kind}: cause should name the injection: {}",
+        ev.cause
+    );
+
+    // 2. the clean head reproduces the recovery point...
+    let mut cfg = cfg_for(arts.clone(), fault_step, micro);
+    cfg.dp = 2;
+    cfg.tp = tp;
+    cfg.checkpoint_dir = Some(ck_ref.clone());
+    train(&cfg).unwrap();
+    // ...3. resharded by hand and run out at dp = 1, uninterrupted
+    checkpoint::reshard_optimizer(&ck_ref, p, tp, 2, 1).unwrap();
+    let mut cfg = cfg_for(arts.clone(), steps - fault_step, micro);
+    cfg.dp = 1;
+    cfg.tp = tp;
+    cfg.resume_dir = Some(ck_ref.clone());
+    cfg.checkpoint_dir = Some(ck_ref.clone());
+    let tail = train(&cfg).unwrap();
+
+    // the recovered attempt IS the reference tail, bitwise
+    assert_eq!(sup.report.steps.len(), tail.steps.len(), "{kind}");
+    for (a, b) in tail.steps.iter().zip(&sup.report.steps) {
+        assert_eq!(a.step, b.step, "{kind}: global step numbering diverged");
+        assert_eq!(a.loss, b.loss, "{kind} step {}: recovered loss diverged", a.step);
+    }
+    for stage in 0..p {
+        for t in 0..tp {
+            let view = manifest.stage_view(stage, t, tp).unwrap();
+            let file = checkpoint::stage_param_file(stage, t, tp);
+            let want =
+                checkpoint::load_params_with(&ck_ref, &file, &view.params, view.total_bytes)
+                    .unwrap();
+            let got =
+                checkpoint::load_params_with(&ck_el, &file, &view.params, view.total_bytes)
+                    .unwrap();
+            assert_eq!(want, got, "{kind} stage {stage} tp {t}: params diverged");
+        }
+    }
+    // the recovered trail is a consistent dp=1 checkpoint: state says so,
+    // and the excised rank's moment shards are gone
+    let (got_steps, got_dp, got_tp) = checkpoint::load_train_state(&ck_el).unwrap();
+    assert_eq!((got_steps, got_dp, got_tp), (steps, 1, tp), "{kind}");
+    for stage in 0..p {
+        for t in 0..tp {
+            let stale = ck_el.join(checkpoint::optimizer_shard_file_tp(stage, t, tp, 1));
+            assert!(!stale.exists(), "{kind}: stale shard {}", stale.display());
+        }
+    }
+    checkpoint::validate_resume_dir(&ck_el, &manifest, 1, tp).unwrap();
+
+    for d in [&ck_el, &ck_ref] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn panic_fault_recovery_is_bitwise() {
+    let Some(arts) = common::live_artifacts_dir() else { return };
+    let before = injected_now();
+    assert_elastic_recovery(arts, "panic", None, 1, 8);
+    assert!(injected_now() > before, "the fault must actually have fired");
+}
+
+#[test]
+fn err_fault_recovery_is_bitwise() {
+    let Some(arts) = common::live_artifacts_dir() else { return };
+    assert_elastic_recovery(arts, "err", None, 1, 8);
+}
+
+#[test]
+fn stall_fault_is_promoted_and_recovery_is_bitwise() {
+    let Some(arts) = common::live_artifacts_dir() else { return };
+    // the stalled worker stops beating; everyone else blocks on it; once
+    // EVERY live worker is >300ms silent the monitor promotes, poisons
+    // the groups and the supervisor excises the stalled replica
+    assert_elastic_recovery(arts, "stall", Some(Duration::from_millis(300)), 1, 8);
+}
+
+#[test]
+fn panic_fault_recovery_on_interleaved_chunked_artifacts() {
+    // composed with interleaved virtual stages: per-replica micros must
+    // stay divisible by p at dp=2 AND at the recovered dp=1 → m = 4·p
+    let Some(arts) = common::live_chunked_artifacts_dir() else { return };
+    let manifest = Manifest::load(&arts.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+    assert_elastic_recovery(arts, "panic", None, 1, 4 * p);
+}
+
+#[test]
+fn panic_fault_recovery_composes_with_live_tp() {
+    // the full grid: dp=2 × tp → recovery at (dp=1, tp) with per-tp-rank
+    // param files and per-(tp, dp) moment shards re-partitioned
+    let Some(arts) = common::live_artifacts_dir() else { return };
+    let manifest = Manifest::load(&arts.join("manifest.json")).unwrap();
+    let Some(te) = &manifest.tp_exec else {
+        eprintln!(
+            "SKIP: artifacts have no tp_exec table — re-export with \
+             `python -m compile.aot --tp 2 --tp-pipeline`"
+        );
+        return;
+    };
+    assert_elastic_recovery(arts.clone(), "panic", None, te.tp, 8);
+}
+
+#[test]
+fn elastic_gives_up_cleanly_when_it_cannot_recover() {
+    let Some(arts) = common::live_artifacts_dir() else { return };
+    // no --checkpoint at all: refuse before spawning anything
+    let mut cfg = cfg_for(arts.clone(), 2, 8);
+    cfg.dp = 2;
+    cfg.fault = Some(FaultPlan::parse("step=1,replica=1,kind=panic").unwrap());
+    let err = format!("{:#}", train_supervised(&cfg).unwrap_err());
+    assert!(err.contains("--checkpoint"), "{err}");
+
+    // recovery budget exhausted: the root cause must survive the give-up
+    let ck = tmp("giveup");
+    std::fs::remove_dir_all(&ck).ok();
+    let mut cfg = cfg_for(arts.clone(), 2, 8);
+    cfg.dp = 2;
+    cfg.checkpoint_dir = Some(ck.clone());
+    cfg.checkpoint_every = 1;
+    cfg.fault = Some(FaultPlan::parse("step=1,replica=1,kind=panic").unwrap());
+    cfg.max_recoveries = 0;
+    let err = format!("{:#}", train_supervised(&cfg).unwrap_err());
+    assert!(err.contains("giving up"), "{err}");
+    assert!(err.contains("injected fault"), "{err}");
+
+    // death before the first commit: say exactly what was missing
+    let ck2 = tmp("nocommit");
+    std::fs::remove_dir_all(&ck2).ok();
+    let mut cfg = cfg_for(arts, 3, 8);
+    cfg.dp = 2;
+    cfg.checkpoint_dir = Some(ck2.clone());
+    cfg.checkpoint_every = 0; // only the final commit, which the fault prevents
+    cfg.fault = Some(FaultPlan::parse("step=1,replica=0,kind=err").unwrap());
+    cfg.max_recoveries = 1;
+    let err = format!("{:#}", train_supervised(&cfg).unwrap_err());
+    assert!(err.contains("committed checkpoint"), "{err}");
+
+    for d in [&ck, &ck2] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+/// Process-wide injected-fault count (tests sharing the process may bump
+/// it concurrently, so callers only assert monotone growth).
+fn injected_now() -> u64 {
+    ppmoe::metrics::recovery()
+        .faults_injected
+        .load(std::sync::atomic::Ordering::Relaxed)
+}
