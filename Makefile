@@ -4,8 +4,9 @@
 PY ?= python3
 CARGO ?= cargo
 
-.PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 build test test-dp \
-        test-dp-py test-tp test-tp-py test-elastic bench doc clean
+.PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 artifacts-tiny-k2 \
+        artifacts-tiny-v4-k2 build test test-dp test-dp-py test-tp \
+        test-tp-py test-elastic bench doc clean
 
 all: artifacts build
 
@@ -29,6 +30,21 @@ artifacts-tiny:
 artifacts-tiny-v4:
 	cd python && $(PY) -m compile.aot --config tiny-deep --virtual 4 \
 	    --tp 2 --tp-pipeline --out-dir ../artifacts-tiny-v4
+
+# Top-k artifacts: the tiny config at top_k = 2 with a capacity factor low
+# enough (1.5) that capacity drops actually fire — the k-slot dispatch /
+# gate-weighted combine exercised by rust/tests/tp_equivalence.rs'
+# tp2_k2_* live tier and `ppmoe train --artifacts artifacts-tiny-k2 --tp 2
+# --top-k 2`.
+artifacts-tiny-k2:
+	cd python && $(PY) -m compile.aot --config tiny --tp 2 --tp-pipeline \
+	    --top-k 2 --capacity-factor 1.5 --out-dir ../artifacts-tiny-k2
+
+# Top-k composed with interleaved virtual chunks (k = 2, v = 4).
+artifacts-tiny-v4-k2:
+	cd python && $(PY) -m compile.aot --config tiny-deep --virtual 4 \
+	    --tp 2 --tp-pipeline --top-k 2 --capacity-factor 1.5 \
+	    --out-dir ../artifacts-tiny-v4-k2
 
 build:
 	$(CARGO) build --release
@@ -62,7 +78,8 @@ test-tp: test-tp-py
 test-tp-py:
 	@if $(PY) -c "import pytest" >/dev/null 2>&1; then \
 	    $(PY) -m pytest python/tests/test_tp_pipeline.py \
-	        python/tests/test_tp_dispatch.py -q; \
+	        python/tests/test_tp_dispatch.py \
+	        python/tests/test_topk_gating.py -q; \
 	else \
 	    echo "SKIP: pytest not importable under $(PY) — python tp tests skipped"; \
 	fi
@@ -89,4 +106,5 @@ doc:
 
 clean:
 	$(CARGO) clean
-	rm -rf artifacts artifacts-tiny artifacts-tiny-v4
+	rm -rf artifacts artifacts-tiny artifacts-tiny-v4 artifacts-tiny-k2 \
+	    artifacts-tiny-v4-k2

@@ -15,7 +15,7 @@ Outputs under --out-dir (default ../artifacts):
 
 Usage: python -m compile.aot [--out-dir DIR] [--config tiny|small|medium|...]
                              [--tp N] [--seed S] [--virtual V] [--no-full]
-                             [--tp-pipeline]
+                             [--tp-pipeline] [--top-k K] [--capacity-factor CF]
 
 `--virtual V` exports each stage as V non-contiguous chunks (interleaved
 virtual-stage 1F1B): per-(stage, chunk) fwd/bwd artifacts plus a `chunks`
@@ -214,10 +214,17 @@ def export_tp_exec(cfg, out_dir: str, tp: int,
 
 def export(cfg_name: str, out_dir: str, tp: int, seed: int,
            include_full: bool, virtual: int = 1,
-           tp_pipeline: bool = False) -> None:
+           tp_pipeline: bool = False, top_k: int = 0,
+           capacity_factor: float | None = None) -> None:
     cfg = CONFIGS[cfg_name]
     if virtual != 1:
         cfg = dataclasses.replace(cfg, virtual_stages=virtual)
+    if top_k > 0:
+        cfg = dataclasses.replace(cfg, top_k=top_k)
+    if capacity_factor is not None:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    # validate() raises loudly on an unroutable schedule (top_k > experts,
+    # capacity_factor < 1/experts) BEFORE any artifact is written
     cfg.validate()
     os.makedirs(out_dir, exist_ok=True)
     key = jax.random.PRNGKey(seed)
@@ -233,7 +240,8 @@ def export(cfg_name: str, out_dir: str, tp: int, seed: int,
     v = cfg.virtual_stages
 
     print(f"[aot] config={cfg_name} stages={cfg.stages} "
-          f"virtual={v} tp={tp}")
+          f"virtual={v} tp={tp} top_k={cfg.top_k} "
+          f"capacity={cfg.capacity} (cf={cfg.capacity_factor})")
     if v == 1:
         # plain pipeline: per-stage artifacts, no "chunks" section (the
         # Rust manifest synthesizes the single-chunk view)
@@ -353,12 +361,22 @@ def main() -> None:
                     help="also export per-rank expert-sharded SEGMENT "
                          "artifacts + the manifest tp_exec table, enabling "
                          "the live trainer's --tp n (requires --tp > 1)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="gating schedule: dispatch each token to its k "
+                         "best experts, gate weights renormalized over the "
+                         "winners (0 = keep the config's default, top-1). "
+                         "Must be <= the config's expert count.")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="expert capacity = cf*k*tokens/E (0 = uncapped); "
+                         "overrides the config's default. Must be 0 or "
+                         ">= 1/experts.")
     args = ap.parse_args()
     out_dir = args.out_dir
     if args.out_compat:
         out_dir = os.path.dirname(args.out_compat) or "."
     export(args.config, out_dir, args.tp, args.seed, not args.no_full,
-           virtual=args.virtual, tp_pipeline=args.tp_pipeline)
+           virtual=args.virtual, tp_pipeline=args.tp_pipeline,
+           top_k=args.top_k, capacity_factor=args.capacity_factor)
     if args.out_compat:
         # Makefile freshness stamp: alias the first stage/chunk artifact
         src = os.path.join(out_dir, "stage0_fwd.hlo.txt")

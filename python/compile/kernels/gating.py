@@ -113,11 +113,80 @@ def make_dispatch(probs, top1, num_experts: int, capacity: int):
     return dispatch, combine, aux
 
 
+def make_dispatch_topk(probs, num_experts: int, capacity: int, k: int):
+    """Top-k dispatch/combine: the general gating schedule (§3.3.3).
+
+    Expert selection is k rounds of argmax-with-masking, which reproduces
+    `jnp.top_k`'s first-occurrence tie semantics exactly (equal scores are
+    taken in ascending expert order). Slot assignment is *level-major*:
+    every token's first choice fills slabs first (scanning tokens in
+    order), then every second choice continues with a per-expert base
+    offset equal to the count of ALL first choices — dropped ones included
+    — and so on; an assignment whose position reaches `capacity` is
+    dropped (the token's OTHER choices survive independently).
+
+    Gate weights: at k = 1 the raw top-1 softmax probability (bitwise
+    `make_dispatch`, so existing top-1 artifacts are unchanged); at k > 1
+    the selected probabilities renormalized over the k winners with
+    `denom = max(sum, 1e-9)`, GShard style (bitwise `make_dispatch_top2`
+    at k = 2). The aux balance loss always uses the top-1 assignment
+    fractions, like both existing variants.
+
+    Returns (dispatch, combine, aux) with the top-1 shapes: per (token,
+    expert) at most ONE slot is set (the k winners are distinct), which is
+    what keeps the per-rank index-slice decomposition exact at any k —
+    every nonzero combine entry belongs to exactly one expert owner.
+    """
+    if not 1 <= k <= num_experts:
+        raise ValueError(
+            f"top_k ({k}) must be between 1 and num_experts ({num_experts})"
+            " — a token cannot be routed to more experts than exist"
+        )
+    masked = probs
+    ohs, gates = [], []
+    for _ in range(k):
+        top = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        oh = jax.nn.one_hot(top, num_experts, dtype=jnp.float32)
+        ohs.append(oh)
+        gates.append(jnp.sum(probs * oh, axis=-1))
+        masked = masked * (1.0 - oh)
+    if k > 1:
+        total = gates[0]
+        for g in gates[1:]:
+            total = total + g
+        denom = jnp.maximum(total, 1e-9)
+        gates = [g / denom for g in gates]
+
+    def slotted(oh, pos):
+        keep = (pos < capacity).astype(jnp.float32)
+        return oh[:, :, None] * jax.nn.one_hot(pos, capacity, dtype=jnp.float32)[
+            :, None, :
+        ] * keep[:, None, None]
+
+    base = jnp.zeros((1, num_experts), jnp.float32)
+    dispatch = None
+    combine = None
+    for oh, g in zip(ohs, gates):
+        pos = jnp.cumsum(oh, axis=0) * oh - oh + base * oh
+        pos = jnp.sum(pos, axis=-1).astype(jnp.int32)
+        d = slotted(oh, pos)
+        c = d * g[:, None, None]
+        dispatch = d if dispatch is None else dispatch + d
+        combine = c if combine is None else combine + c
+        base = base + jnp.sum(oh, axis=0, keepdims=True)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(ohs[0], axis=0)
+    aux = num_experts * jnp.sum(me * ce)
+    return dispatch, combine, aux
+
+
 def make_dispatch_top2(probs, num_experts: int, capacity: int):
     """Top-2 variant (§3.3.3: 'compatible with existing gating schedules').
 
     Second expert's gate weight is renormalized against the first, GShard
     style. Returns (dispatch, combine, aux) with the same shapes as top-1.
+    `make_dispatch_topk(..., k=2)` computes the identical tensors; this
+    explicit form is kept as the readable two-level reference.
     """
     top1 = jnp.argmax(probs, axis=-1).astype(jnp.int32)
     probs_wo1 = probs * (1.0 - jax.nn.one_hot(top1, num_experts, dtype=jnp.float32))

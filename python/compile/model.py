@@ -2,7 +2,8 @@
 
 Decoder-only transformer in the paper's configuration family (§4.1): GPT-3
 style blocks, with every other FFN replaced by an MoE layer of E experts and
-top-1 gating. The MoE layer calls the L1 Pallas kernels (router + grouped
+top-k gating (top-1 by default, matching the paper; `top_k` in ModelConfig
+generalizes the schedule). The MoE layer calls the L1 Pallas kernels (router + grouped
 expert FFN); dispatch is capacity-based with C = tokens, which is
 functionally PPMoE's uncapped index-slice dispatch (§4.1: "PPMoE abandoned
 the capacity limit").
@@ -45,13 +46,19 @@ class ModelConfig:
     # chunk c+1 of stage 0 (the wrap-around p2p edge). 1 = plain pipeline.
     virtual_stages: int = 1
     aux_coef: float = 0.01
-    # Expert capacity factor (§Perf L2). capacity = cf·tokens/E, so the
-    # grouped kernel computes cf× one dense FFN instead of E×. cf = 0 means
-    # "uncapped" (capacity = tokens, zero drops — the paper's §4.1 setting,
-    # at E× the FLOPs in static-shape HLO). With the aux balance loss active
-    # cf = 2 drops <1% of tokens in practice; dropped tokens pass through
-    # the residual connection, standard GShard/Switch behaviour.
+    # Expert capacity factor (§Perf L2). capacity = cf·k·tokens/E, so the
+    # grouped kernel computes cf·k× one dense FFN instead of E×. cf = 0
+    # means "uncapped" (capacity = tokens, zero drops — the paper's §4.1
+    # setting, at E× the FLOPs in static-shape HLO). With the aux balance
+    # loss active cf = 2 drops <1% of tokens in practice; dropped tokens
+    # pass through the residual connection, standard GShard/Switch
+    # behaviour.
     capacity_factor: float = 2.0
+    # Gating schedule: each token is dispatched to its top_k experts, gate
+    # weights renormalized over the winners (GShard style) at k > 1 and the
+    # raw top-1 probability at k = 1 — so the default reproduces the
+    # paper's top-1 artifacts bitwise. See kernels/gating.make_dispatch_topk.
+    top_k: int = 1
     # pallas block sizes (perf knobs, see EXPERIMENTS.md §Perf)
     block_c: int = 64
     block_t: int = 128
@@ -65,9 +72,24 @@ class ModelConfig:
         if self.capacity_factor <= 0:
             # uncapped: every token fits even if all pick one expert
             return self.tokens
-        cap = int(self.capacity_factor * self.tokens / self.experts)
+        # k slots per token on average: capacity scales with the gating
+        # fan-out (reduces to the historic cf·tokens/E at top_k = 1)
+        cap = int(self.capacity_factor * self.top_k * self.tokens / self.experts)
         cap = max(8, (cap + 7) // 8 * 8)  # pad to 8 for tiling
         return min(cap, self.tokens)
+
+    @property
+    def moe_block_c(self) -> int:
+        """Pallas capacity-tile for the grouped expert FFN: the largest
+        divisor of `capacity` that is <= block_c. The historic
+        min(block_c, capacity) clamp only covers capacity <= block_c; a
+        top-k capacity (cf·k·tokens/E) can exceed block_c without being a
+        multiple of it (e.g. 48 vs 32), which the kernel grid rejects."""
+        cap = self.capacity
+        b = min(self.block_c, cap)
+        while cap % b:
+            b -= 1
+        return b
 
     @property
     def head_dim(self) -> int:
@@ -88,6 +110,19 @@ class ModelConfig:
             f"layers ({self.layers}) must split evenly over "
             f"{self.stages} stages x {self.virtual_stages} chunks"
         )
+        if not 1 <= self.top_k <= self.experts:
+            raise ValueError(
+                f"top_k ({self.top_k}) must be between 1 and the expert "
+                f"count ({self.experts}) — a token cannot be routed to "
+                "more experts than exist"
+            )
+        if 0 < self.capacity_factor < 1.0 / self.experts:
+            raise ValueError(
+                f"capacity_factor ({self.capacity_factor}) is below "
+                f"1/experts ({1.0 / self.experts:.4f}): total expert slots "
+                "would round toward zero and silently drop nearly every "
+                "token — raise it, or use 0 for uncapped dispatch"
+            )
 
 
 # ---------------------------------------------------------------------------
@@ -212,19 +247,31 @@ def attention(p: dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
     return jnp.dot(out, p["wo"]) + p["bo"]
 
 
+def make_dispatch_cfg(probs, top1, cfg: ModelConfig):
+    """Dispatch/combine tensors under cfg's gating schedule.
+
+    top_k == 1 keeps the historic `make_dispatch` call so existing top-1
+    artifacts re-lower bitwise unchanged; k > 1 routes through the general
+    k-slot builder (renormalized gate weights applied in the combine,
+    BEFORE the trainer's single inner-node all-reduce of rank partials).
+    """
+    if cfg.top_k == 1:
+        return gating.make_dispatch(probs, top1, cfg.experts, cfg.capacity)
+    return gating.make_dispatch_topk(probs, cfg.experts, cfg.capacity,
+                                     cfg.top_k)
+
+
 def moe_ffn_layer(p: dict[str, Any], x: jax.Array, cfg: ModelConfig):
     """PPMoE MoE layer (single-rank view): route -> index-dispatch -> grouped
     expert FFN (L1 kernel) -> combine. x: (B, S, h) -> ((B, S, h), aux)."""
     B, S, h = x.shape
     xf = x.reshape(B * S, h)
     probs, top1 = gating.router(xf, p["wg"], block_t=min(cfg.block_t, B * S))
-    dispatch, combine, aux = gating.make_dispatch(
-        probs, top1, cfg.experts, cfg.capacity
-    )
+    dispatch, combine, aux = make_dispatch_cfg(probs, top1, cfg)
     xd = jnp.einsum("tec,th->ech", dispatch, xf)
     yd = moe_ffn.moe_ffn(
         xd, p["w1"], p["b1"], p["w2"], p["b2"],
-        block_c=min(cfg.block_c, cfg.capacity),
+        block_c=cfg.moe_block_c,
     )
     y = jnp.einsum("tec,ech->th", combine, yd)
     return y.reshape(B, S, h), aux
@@ -347,7 +394,7 @@ def moe_rank_partial(x, wg, w1_loc, b1_loc, w2_loc, b2_loc,
     E = cfg.experts
     N = E // tp
     probs, top1 = gating.router(x, wg, block_t=min(cfg.block_t, x.shape[0]))
-    dispatch, combine, aux = gating.make_dispatch(probs, top1, E, cfg.capacity)
+    dispatch, combine, aux = make_dispatch_cfg(probs, top1, cfg)
     # slice to this rank's experts only — the "tensor index slicing" of the
     # title; a static slice because rank/tp are compile-time constants here.
     lo = rank * N
@@ -356,7 +403,7 @@ def moe_rank_partial(x, wg, w1_loc, b1_loc, w2_loc, b2_loc,
     xd = jnp.einsum("tec,th->ech", d_loc, x)
     yd = moe_ffn.moe_ffn(
         xd, w1_loc, b1_loc, w2_loc, b2_loc,
-        block_c=min(cfg.block_c, cfg.capacity),
+        block_c=cfg.moe_block_c,
     )
     y = jnp.einsum("tec,ech->th", c_loc, yd)
     return y, aux
@@ -441,9 +488,8 @@ def moe_layer_single(x, wg, w1, b1, w2, b2, cfg: ModelConfig):
     """Monolithic single-rank MoE layer — the numerics reference the TP×EP
     rank decomposition must sum to (verified in rust integration tests)."""
     probs, top1 = gating.router(x, wg, block_t=min(cfg.block_t, x.shape[0]))
-    dispatch, combine, aux = gating.make_dispatch(probs, top1, cfg.experts,
-                                                  cfg.capacity)
+    dispatch, combine, aux = make_dispatch_cfg(probs, top1, cfg)
     xd = jnp.einsum("tec,th->ech", dispatch, x)
     yd = moe_ffn.moe_ffn(xd, w1, b1, w2, b2,
-                         block_c=min(cfg.block_c, cfg.capacity))
+                         block_c=cfg.moe_block_c)
     return jnp.einsum("tec,ech->th", combine, yd), aux

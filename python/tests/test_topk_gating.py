@@ -1,0 +1,177 @@
+"""Top-k gating kernel pins + misconfiguration loud-errors (hypothesis-free).
+
+Three layers of proof that run in any environment with jax + numpy (no
+hypothesis needed, so the offline container executes these too):
+
+1. Bitwise regression pins: `make_dispatch_topk(k=1)` == `make_dispatch`
+   and `make_dispatch_topk(k=2)` == `make_dispatch_top2` — the generalized
+   schedule changes NOTHING for existing top-1/top-2 artifacts.
+2. Contract consistency: the jnp kernel's dispatch/combine tensors are
+   bitwise equal to the loop-written numpy twin in topk_ref.py, including
+   the one-expert-hot and all-assignments-dropped capacity edges.
+3. Loud errors: k > num_experts and capacity_factor < 1/experts fail at
+   config validation (and therefore before `compile.aot` writes anything),
+   with messages that say what to change.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import topk_ref
+
+jnp = pytest.importorskip("jax.numpy")
+
+from compile.kernels import gating
+from compile.model import ModelConfig
+from compile.aot import CONFIGS
+
+
+def _probs(seed, tokens, experts, skew=0.0):
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((tokens, experts)).astype(np.float32)
+    logits[:, 0] += np.float32(skew)
+    return topk_ref.softmax_np(logits)
+
+
+# --- 1. bitwise regression pins -------------------------------------------
+
+
+@pytest.mark.parametrize("capacity", [1, 7, 32])
+def test_topk_k1_is_bitwise_make_dispatch(capacity):
+    probs = _probs(0, 24, 4)
+    top1 = jnp.argmax(jnp.asarray(probs), axis=-1).astype(jnp.int32)
+    d1, c1, a1 = gating.make_dispatch(jnp.asarray(probs), top1, 4, capacity)
+    dk, ck, ak = gating.make_dispatch_topk(jnp.asarray(probs), 4, capacity, 1)
+    assert np.array_equal(np.asarray(d1), np.asarray(dk))
+    assert np.array_equal(np.asarray(c1), np.asarray(ck))
+    assert np.asarray(a1) == np.asarray(ak)
+
+
+@pytest.mark.parametrize("capacity", [1, 7, 32])
+def test_topk_k2_is_bitwise_make_dispatch_top2(capacity):
+    probs = _probs(1, 24, 4)
+    d2, c2, a2 = gating.make_dispatch_top2(jnp.asarray(probs), 4, capacity)
+    dk, ck, ak = gating.make_dispatch_topk(jnp.asarray(probs), 4, capacity, 2)
+    assert np.array_equal(np.asarray(d2), np.asarray(dk))
+    assert np.array_equal(np.asarray(c2), np.asarray(ck))
+    assert np.asarray(a2) == np.asarray(ak)
+
+
+# --- 2. jnp kernel vs numpy contract twin ---------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("capacity", [1, 5, 48])
+@pytest.mark.parametrize("skew", [0.0, 6.0])
+def test_topk_kernel_matches_numpy_twin(k, capacity, skew):
+    experts = 4
+    probs = _probs(2, 32, experts, skew)
+    idx = topk_ref.topk_select(probs, k)
+    gates = topk_ref.topk_gates(probs, idx)
+    dn, cn = topk_ref.make_dispatch_topk_np(idx, gates, experts, capacity)
+    dj, cj, _ = gating.make_dispatch_topk(
+        jnp.asarray(probs), experts, capacity, k)
+    assert np.array_equal(dn, np.asarray(dj))
+    assert np.array_equal(cn, np.asarray(cj))
+
+
+def test_topk_each_token_gets_k_distinct_experts():
+    """Uncapped: exactly k dispatch entries per token, all on distinct
+    experts, at most one slot per (token, expert) — the invariant that
+    keeps the per-rank index-slice decomposition exact at any k."""
+    experts, k, tokens = 8, 4, 16
+    probs = _probs(3, tokens, experts)
+    d, c, _ = gating.make_dispatch_topk(jnp.asarray(probs), experts, tokens, k)
+    d = np.asarray(d)
+    per_tok_expert = d.sum(-1)  # (t, E) slots per (token, expert)
+    assert per_tok_expert.max() <= 1.0
+    assert np.array_equal(per_tok_expert.sum(-1), np.full(tokens, float(k)))
+    # gates renormalize over the winners: combine sums to 1 per token
+    np.testing.assert_allclose(np.asarray(c).sum((1, 2)),
+                               np.ones(tokens), rtol=1e-6)
+
+
+def test_topk_one_expert_hot_overflow():
+    """Every token's first choice is expert 0 with capacity 2: exactly two
+    level-0 survivors, and the level-1 choices land at slab positions that
+    account for ALL level-0 claims (dropped included) — kernel and twin
+    agree bitwise."""
+    experts, tokens, capacity = 4, 12, 2
+    probs = _probs(4, tokens, experts, skew=12.0)
+    assert (probs.argmax(-1) == 0).all()
+    idx = topk_ref.topk_select(probs, 2)
+    gates = topk_ref.topk_gates(probs, idx)
+    dn, cn = topk_ref.make_dispatch_topk_np(idx, gates, experts, capacity)
+    dj, _cj, _ = gating.make_dispatch_topk(
+        jnp.asarray(probs), experts, capacity, 2)
+    assert np.array_equal(dn, np.asarray(dj))
+    assert dn[:, 0].sum() == 2.0  # expert 0 keeps its 2 slots, drops the rest
+
+
+def test_topk_all_assignments_dropped_is_zero_row():
+    """Capacity 1 with identical preferences: token 0 claims both experts'
+    single slots, every later token loses both choices and its combine
+    row is exactly zero (a dropped token contributes nothing — no leak)."""
+    experts, tokens = 2, 8
+    logits = np.zeros((tokens, experts), np.float32)
+    logits[:, 0] = 2.0
+    logits[:, 1] = 1.0
+    probs = topk_ref.softmax_np(logits)
+    d, c, _ = gating.make_dispatch_topk(jnp.asarray(probs), experts, 1, 2)
+    d, c = np.asarray(d), np.asarray(c)
+    assert d[0].sum() == 2.0  # token 0 holds expert 0 AND expert 1 slot 0
+    assert np.array_equal(d[1:], np.zeros_like(d[1:]))
+    assert np.array_equal(c[1:], np.zeros_like(c[1:]))
+
+
+# --- 3. loud errors -------------------------------------------------------
+
+
+def test_gating_rejects_k_above_num_experts():
+    probs = jnp.asarray(_probs(5, 8, 4))
+    with pytest.raises(ValueError, match="top_k .* num_experts"):
+        gating.make_dispatch_topk(probs, 4, 8, 5)
+    with pytest.raises(ValueError, match="top_k"):
+        gating.make_dispatch_topk(probs, 4, 8, 0)
+
+
+def test_config_rejects_k_above_experts():
+    cfg = dataclasses.replace(CONFIGS["tiny"], top_k=99)
+    with pytest.raises(ValueError, match="top_k \\(99\\)"):
+        cfg.validate()
+
+
+def test_config_rejects_starving_capacity_factor():
+    """cf < 1/experts means the total slot budget rounds toward zero —
+    silently dropping nearly every token. Refused with advice."""
+    tiny = CONFIGS["tiny"]
+    cfg = dataclasses.replace(tiny, capacity_factor=0.5 / tiny.experts)
+    with pytest.raises(ValueError, match="capacity_factor .* below"):
+        cfg.validate()
+    # cf = 0 stays the documented "uncapped" setting — NOT an error
+    dataclasses.replace(tiny, capacity_factor=0.0).validate()
+
+
+def test_capacity_scales_with_k():
+    """capacity = cf·k·tokens/E (rounded up to 8s): doubling k doubles the
+    slot budget so a balanced top-k load fits exactly like top-1 did."""
+    tiny = CONFIGS["tiny"]
+    base = tiny.capacity
+    k2 = dataclasses.replace(tiny, top_k=2).capacity
+    assert k2 == min(tiny.tokens, 2 * base) or k2 >= base
+    # exact law away from the clamps
+    cfg = dataclasses.replace(tiny, capacity_factor=1.0, top_k=2)
+    raw = int(cfg.capacity_factor * cfg.top_k * cfg.tokens / cfg.experts)
+    expect = min(cfg.tokens, max(8, -(-raw // 8) * 8))
+    assert cfg.capacity == expect
+
+
+def test_aot_export_rejects_bad_topk(tmp_path):
+    """The export path refuses to write artifacts for an unroutable
+    schedule: the error fires in validate(), before any file exists."""
+    from compile import aot
+    with pytest.raises(ValueError, match="top_k"):
+        aot.export("tiny", str(tmp_path), tp=0, seed=0, include_full=False,
+                   top_k=99)
+    assert list(tmp_path.iterdir()) == []

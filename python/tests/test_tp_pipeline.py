@@ -189,7 +189,11 @@ def tp_configs():
     # chunk, exercising the glue-between-two-combines path
     deep1 = CONFIGS["tiny-deep"]
     deep2 = dataclasses.replace(deep1, virtual_stages=2)
-    return [("tiny", tiny), ("tiny-deep-v1", deep1), ("tiny-deep-v2", deep2)]
+    # k=2 with a dropping capacity: the k-slot dispatch/weighted combine
+    # must flow through the same segment calculus unchanged
+    tiny_k2 = dataclasses.replace(tiny, top_k=2, capacity_factor=1.5)
+    return [("tiny", tiny), ("tiny-deep-v1", deep1), ("tiny-deep-v2", deep2),
+            ("tiny-k2", tiny_k2)]
 
 
 @pytest.mark.parametrize("name,cfg", tp_configs())

@@ -1,0 +1,146 @@
+"""Numpy twin of the top-k dispatch contract, shared by the dispatch tests.
+
+This module is deliberately kernel-free (plain numpy, no jax import): it is
+the executable statement of WHAT `compile.kernels.gating.make_dispatch_topk`
+computes, written as explicit loops instead of one-hot algebra so a reader
+can check the slot-assignment and drop semantics line by line. The jnp
+kernel is pinned bitwise against this twin in test_topk_gating.py, and the
+index-slice-vs-all-to-all property in test_tp_dispatch.py is stated over it.
+
+Summation contract
+------------------
+Float addition is not associative, so "the sliced ranks equal the dense
+oracle" is only a bitwise statement once the reduction order is fixed. The
+contract both sides use (`fold_rank_order`): per-(token, expert)
+contributions are folded from a zero accumulator in ascending expert order
+WITHIN each owning rank's contiguous slice, and the per-rank partials are
+folded in ascending rank order — exactly the order the live trainer's
+rank-order all-reduce performs. Per-contribution values themselves are
+bitwise-identical between the dense and sliced einsums because numpy's
+default (unoptimized) einsum reduces the contracted slot axis in a fixed
+order independent of the expert extent.
+"""
+import numpy as np
+
+
+def topk_select(probs, k):
+    """k rounds of argmax-with-masking: `jnp.top_k` first-occurrence tie
+    semantics (equal scores are taken in ascending expert order)."""
+    masked = probs.astype(np.float32).copy()
+    t = probs.shape[0]
+    idx = np.zeros((t, k), np.int64)
+    for lvl in range(k):
+        idx[:, lvl] = masked.argmax(-1)
+        masked[np.arange(t), idx[:, lvl]] = -np.inf
+    return idx
+
+
+def topk_gates(probs, idx):
+    """Gate weights for the selected experts: raw top-1 probability at
+    k = 1, renormalized over the k winners (denom floored at 1e-9,
+    GShard style) at k > 1 — same branch structure as the jnp kernel."""
+    g = np.take_along_axis(probs.astype(np.float32), idx, axis=1)
+    if idx.shape[1] == 1:
+        return g
+    denom = np.maximum(g.sum(-1, keepdims=True, dtype=np.float32),
+                       np.float32(1e-9))
+    return (g / denom).astype(np.float32)
+
+
+def make_dispatch_topk_np(idx, gates, experts, capacity):
+    """Level-major slot assignment with capacity drops, written as loops.
+
+    Level 0 (every token's first choice) fills expert slabs first, scanning
+    tokens in order; level i continues from a per-expert base equal to the
+    count of ALL prior-level choices — dropped ones included, matching the
+    kernel's `base += sum(onehot)` which never subtracts drops. A choice
+    whose position reaches `capacity` is dropped; the token's other
+    choices survive independently.
+    """
+    t, k = idx.shape
+    dispatch = np.zeros((t, experts, capacity), np.float32)
+    combine = np.zeros((t, experts, capacity), np.float32)
+    chosen = np.zeros(experts, np.int64)  # all prior-level choices, incl. dropped
+    for lvl in range(k):
+        lvl_fill = np.zeros(experts, np.int64)
+        for tok in range(t):
+            e = idx[tok, lvl]
+            pos = chosen[e] + lvl_fill[e]
+            lvl_fill[e] += 1
+            if pos < capacity:
+                dispatch[tok, e, pos] = 1.0
+                combine[tok, e, pos] = gates[tok, lvl]
+        chosen += lvl_fill
+    return dispatch, combine
+
+
+def expert_fn(xd, w):
+    """Per-expert linear stand-in for the expert FFN: xd (E, C, h) @ w."""
+    return np.einsum("ech,eho->eco", xd, w).astype(np.float32)
+
+
+def expert_contribs(x, dispatch, combine, w):
+    """Per-(token, expert) output contributions, reduction over slots only.
+
+    Keeping the expert axis un-reduced is what lets the caller apply the
+    summation contract explicitly: `np.einsum("tec,eco->teo")` reduces each
+    expert's slot axis independently, so contrib[:, e] is bitwise the same
+    whether computed from the full (t, E, C) tensors or from any slice
+    containing expert e.
+    """
+    xd = np.einsum("tec,th->ech", dispatch, x).astype(np.float32)
+    yd = expert_fn(xd, w)
+    return np.einsum("tec,eco->teo", combine, yd).astype(np.float32)
+
+
+def fold_rank_order(contrib, tp):
+    """THE summation contract (see module docstring): ascending experts
+    within each rank's contiguous slice, then ascending ranks."""
+    t, E, h = contrib.shape
+    n_loc = E // tp
+    total = None
+    for r in range(tp):
+        part = np.zeros((t, h), np.float32)
+        for e in range(r * n_loc, (r + 1) * n_loc):
+            part = part + contrib[:, e]
+        total = part if total is None else total + part
+    return total
+
+
+def all_to_all_oracle_topk(x, idx, gates, w, experts, capacity, tp):
+    """DPMoE semantics: dispatch every token's k copies to the global
+    expert buffers (1st all-to-all), compute every expert, gather each
+    token's gate-weighted results back (2nd all-to-all). Dense: every
+    einsum sees the full (t, E, C) tensors and the full weight stack; the
+    final reduction follows the shared summation contract."""
+    dispatch, combine = make_dispatch_topk_np(idx, gates, experts, capacity)
+    return fold_rank_order(expert_contribs(x, dispatch, combine, w), tp)
+
+
+def index_slice_ranks_topk(x, idx, gates, w, experts, capacity, tp):
+    """PPMoE semantics: every rank derives the identical dispatch order,
+    index-slices its E/tp local experts (zero wire bytes), computes a
+    partial from ONLY its slice of tensors and weights, and the partials
+    are summed in rank order (the single inner-node all-reduce)."""
+    dispatch, combine = make_dispatch_topk_np(idx, gates, experts, capacity)
+    n_loc = experts // tp
+    t = x.shape[0]
+    o = w.shape[2]
+    total = None
+    for r in range(tp):
+        lo = r * n_loc
+        contrib = expert_contribs(
+            x, dispatch[:, lo:lo + n_loc], combine[:, lo:lo + n_loc],
+            w[lo:lo + n_loc])
+        part = np.zeros((t, o), np.float32)
+        for e in range(n_loc):
+            part = part + contrib[:, e]
+        total = part if total is None else total + part
+    return total
+
+
+def softmax_np(logits):
+    """Row-stable softmax in float32 (numpy twin of the router's score)."""
+    m = logits.max(-1, keepdims=True)
+    e = np.exp(logits - m)
+    return (e / e.sum(-1, keepdims=True)).astype(np.float32)

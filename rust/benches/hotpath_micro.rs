@@ -1,6 +1,8 @@
 //! Bench: L3 coordinator hot paths (the docs/hotpath.md components).
 //!
-//! * router dispatch (route_top1) across token/expert scales
+//! * router dispatch (route_top1) across token/expert scales, plus the
+//!   route_topk k ∈ {1, 2, 4} sweep and the tp_combine k rows (flat in k —
+//!   the index-slice combine ships gate-weighted sums, not per-slot copies)
 //! * in-process all-reduce: legacy single-accumulator vs chunked
 //!   reduce-scatter + all-gather, across rank counts
 //! * PJRT boundary: per-microbatch literal serialization vs device-resident
@@ -21,7 +23,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use ppmoe::comm::{Algo, AllReduceGroup};
-use ppmoe::moe::{route_top1, synth_logits};
+use ppmoe::moe::{route_top1, route_topk, synth_logits, DropPolicy};
 use ppmoe::pipeline::interleaved::{interleaved_bubble, simulate_interleaved};
 use ppmoe::pipeline::{analytic_bubble, simulate, Schedule, StageTiming};
 use ppmoe::runtime::Tensor;
@@ -43,6 +45,23 @@ fn main() {
         results.push(bench(&format!("route_top1 t={tokens} E={experts}"), || {
             route_top1(&logits, experts, tokens).tokens()
         }));
+    }
+
+    println!("\n=== router (route_topk, k sweep) ===");
+    // k rounds of masked argmax over the same logits: cost should scale
+    // ~linearly in k, and the k=1 row A/Bs directly against route_top1
+    // above (bitwise-equal routing, so the delta is pure generalization
+    // overhead). Capacity = 2·k·t/E, the default-ish factor-2 slab.
+    {
+        let (tokens, experts) = (16384usize, 64usize);
+        let logits = synth_logits(&mut rng, tokens, experts, 0.5);
+        for k in [1usize, 2, 4] {
+            let capacity = 2 * k * tokens / experts;
+            results.push(bench(
+                &format!("route_topk t={tokens} E={experts} k={k}"),
+                || route_topk(&logits, experts, capacity, k, DropPolicy::Drop).tokens(),
+            ));
+        }
     }
 
     println!("\n=== in-process all-reduce (legacy vs chunked) ===");
@@ -94,6 +113,35 @@ fn main() {
                 (0..ranks).map(|r| vec![r as f32; act]).collect();
             let mut out = Vec::with_capacity(act);
             results.push(bench(&format!("tp_combine/serial r={ranks} act"), || {
+                let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
+                ppmoe::tp::rank_order_sum_into(&refs, &mut out);
+                out[0]
+            }));
+        }
+        // the top_k sweep at fixed r=2: the combine payload is the already
+        // gate-weighted b·s·h activation, so it does NOT grow with k — the
+        // k rows should be flat within noise (config::tp_combine_volume's
+        // k-independence claim as a measurement; a DP-MoE all-to-all would
+        // scale linearly here, see config::dpmoe_a2a_volume).
+        for k in [1usize, 2, 4] {
+            let ranks = 2usize;
+            results.push(bench(&format!("tp_combine/live k={k} act"), || {
+                let g = AllReduceGroup::with_algo(ranks, Algo::Chunked);
+                let handles: Vec<_> = (0..ranks)
+                    .map(|r| {
+                        let g: Arc<AllReduceGroup> = g.clone();
+                        std::thread::spawn(move || {
+                            let v = vec![(r * k) as f32; act];
+                            g.all_reduce_as(r, &v)[0]
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum::<f32>()
+            }));
+            let parts: Vec<Vec<f32>> =
+                (0..ranks).map(|r| vec![(r * k) as f32; act]).collect();
+            let mut out = Vec::with_capacity(act);
+            results.push(bench(&format!("tp_combine/serial k={k} act"), || {
                 let refs: Vec<&[f32]> = parts.iter().map(|p| p.as_slice()).collect();
                 ppmoe::tp::rank_order_sum_into(&refs, &mut out);
                 out[0]

@@ -173,6 +173,15 @@ impl ParallelCfg {
     /// that is the scheme's whole advantage over DPMoE's two all-to-alls,
     /// and this accessor is the wire math docs/hotpath.md §Tensor-parallel
     /// experts quotes. Multiply by `ClusterCfg::wire_bytes` for bytes.
+    ///
+    /// Deliberately **independent of `top_k`**: the combine moves the
+    /// summed output activation `y`, whose shape is (b·s, h) no matter
+    /// how many experts contributed per token — the k slots are reduced
+    /// LOCALLY by each rank's gate-weighted combine before the
+    /// all-reduce. Contrast [`Self::dpmoe_a2a_volume`], which carries the
+    /// k term; the gap between the two is where slicing beats all-to-all
+    /// as k grows (`simulate --tp --top-k`, EXPERIMENTS.md §Top-k
+    /// crossover).
     pub fn tp_combine_volume(&self, m: &ModelDims, tc: &TrainCfg) -> f64 {
         if self.tp <= 1 || self.scheme != Scheme::PpMoE {
             return 0.0;
@@ -182,6 +191,27 @@ impl ParallelCfg {
         let ring = 2.0 * (self.tp as f64 - 1.0) / self.tp as f64;
         // forward y combine + backward d(hgt) combine, per microbatch
         2.0 * tc.num_micro as f64 * moe_here * ring * act
+    }
+
+    /// Activation-element volume one rank moves per training step through
+    /// DPMoE's expert-parallel all-to-alls: each MoE layer costs TWO
+    /// all-to-alls per direction (dispatch out, combine back; §3.1.4) and
+    /// each moves the token's dispatched copies — `top_k` hidden vectors
+    /// per token, since every selected expert receives the full activation
+    /// row. All-to-all moves `(ep−1)/ep` of the payload off-rank. This is
+    /// the k-scaling counterpart of [`Self::tp_combine_volume`]: PPMoE's
+    /// combine is flat in k while this grows linearly, so the crossover
+    /// where index-slicing wins widens with the gating fan-out. Multiply
+    /// by `ClusterCfg::wire_bytes` for bytes.
+    pub fn dpmoe_a2a_volume(&self, m: &ModelDims, tc: &TrainCfg) -> f64 {
+        if self.ep <= 1 || self.scheme != Scheme::DpMoE {
+            return 0.0;
+        }
+        let moe_here = m.moe_layers() as f64 / self.pp.max(1) as f64;
+        let act = (tc.micro_batch * m.seq * m.hidden) as f64;
+        let frac = (self.ep as f64 - 1.0) / self.ep as f64;
+        // 2 a2a per direction × fwd+bwd = 4, × k dispatched copies/token
+        4.0 * tc.num_micro as f64 * moe_here * frac * act * m.top_k as f64
     }
 
     /// Validate divisibility constraints against a model + cluster.
@@ -531,6 +561,40 @@ mod tests {
         assert!(v2 < v8 && v8 < 2.0 * v2, "{v2} vs {v8}");
         let tc2 = TrainCfg { micro_batch: 8, num_micro: 32 };
         assert!((base.tp_combine_volume(&m, &tc2) - 2.0 * v8).abs() < 1.0);
+    }
+
+    #[test]
+    fn topk_scales_a2a_but_not_the_combine() {
+        // the §3.3.3 asymmetry that simulate --tp --top-k maps: DPMoE's
+        // all-to-all volume is linear in k (k dispatched copies per
+        // token), PPMoE's combine is flat (k slots reduce locally before
+        // the all-reduce)
+        let m1 = moe_small_setting();
+        let m2 = ModelDims { top_k: 2, ..m1.clone() };
+        let m4 = ModelDims { top_k: 4, ..m1.clone() };
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        let pp = ParallelCfg {
+            dp: 1, tp: 8, pp: 4, ep: 8, zero: false, scheme: Scheme::PpMoE,
+        };
+        let dp = ParallelCfg { tp: 1, scheme: Scheme::DpMoE, ..pp };
+        let a1 = dp.dpmoe_a2a_volume(&m1, &tc);
+        let a2 = dp.dpmoe_a2a_volume(&m2, &tc);
+        let a4 = dp.dpmoe_a2a_volume(&m4, &tc);
+        assert!(a1 > 0.0);
+        assert!((a2 - 2.0 * a1).abs() < 1.0 && (a4 - 4.0 * a1).abs() < 1.0);
+        // closed form at k = 1: 4 · m · (moe/pp) · (ep−1)/ep · b·s·h
+        let act = (tc.micro_batch * m1.seq * m1.hidden) as f64;
+        let expect = 4.0 * 16.0 * (m1.moe_layers() as f64 / 4.0) * (7.0 / 8.0) * act;
+        assert!((a1 - expect).abs() < 1.0, "{a1} vs {expect}");
+        // the combine does not move with k
+        assert_eq!(
+            pp.tp_combine_volume(&m1, &tc),
+            pp.tp_combine_volume(&m4, &tc)
+        );
+        // a PPMoE cfg moves nothing through a2a, a DPMoE cfg nothing
+        // through the combine
+        assert_eq!(pp.dpmoe_a2a_volume(&m1, &tc), 0.0);
+        assert_eq!(dp.tp_combine_volume(&m1, &tc), 0.0);
     }
 
     #[test]

@@ -40,6 +40,11 @@ COMMANDS:
                                   all-reduce, no all-to-all (needs
                                   artifacts exported with
                                   `compile.aot --tp N --tp-pipeline`)
+                --top-k K         guard: refuse to run unless the
+                                  artifacts were exported with this
+                                  gating fan-out (the schedule is baked
+                                  into the HLO; default: follow the
+                                  manifest)
                 --no-dp-overlap   serialize gradient sync to the step end
                                   (A/B timing; bitwise-identical losses)
                 --checkpoint DIR  write params + per-rank sharded
@@ -74,6 +79,11 @@ COMMANDS:
   breakdown   print Tables 1 and 3 (simulated forward breakdowns)
   simulate    one point: --model NAME --dp N --tp N --pp N
                          --scheme dense|dpmoe|ppmoe --gpus N [--zero]
+                         [--top-k K]     gating fan-out override: scales
+                                         expert FLOPs and DPMoE a2a bytes
+                                         linearly; PPMoE's combine stays
+                                         flat (prints the crossover ratio
+                                         when --tp > 1)
                          [--overlap-dp]  model the backward-overlapped
                                          dp gradient sync
                          [--mttf SECS [--ckpt-every SECS]]  report the
@@ -136,6 +146,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         dp: args.get_usize("dp", 1)?,
         overlap_dp_sync: !args.has_flag("no-dp-overlap"),
         tp: args.get_usize("tp", 1)?,
+        top_k: args.get_usize("top-k", 0)?,
         emulate_dp: 0,
         emulate_tp: 0,
         fault: match args.get("fault") {
@@ -199,7 +210,17 @@ fn cmd_breakdown() -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let model = config::model_preset(args.get("model").unwrap_or("moe-small"))?;
+    let mut model = config::model_preset(args.get("model").unwrap_or("moe-small"))?;
+    let top_k = args.get_usize("top-k", 0)?;
+    if top_k > 0 {
+        anyhow::ensure!(
+            top_k <= model.experts,
+            "--top-k {top_k} exceeds the model's {} experts — a token \
+             cannot be routed to more experts than exist",
+            model.experts
+        );
+        model.top_k = top_k;
+    }
     let scheme = match args.get("scheme").unwrap_or("ppmoe") {
         "dense" => Scheme::Dense,
         "dpmoe" => Scheme::DpMoE,
@@ -230,6 +251,24 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
              combine elems/rank; dispatch itself is 0 wire bytes)",
             r.tp_comm_seconds * 1e3,
             p.tp_combine_volume(&model, &tables::SWEEP_TC) / 1e6
+        );
+        // the k-scaling asymmetry (§3.3.3): what an equivalent DPMoE
+        // layout would push through its two all-to-alls at this k,
+        // vs the combine volume above, which is flat in k
+        let dp_equiv = config::ParallelCfg {
+            tp: 1,
+            ep: tp.min(model.experts),
+            scheme: Scheme::DpMoE,
+            ..p
+        };
+        let a2a = dp_equiv.dpmoe_a2a_volume(&model, &tables::SWEEP_TC);
+        println!(
+            "vs all-to-all:    {:.1} M a2a elems/rank at top_k={} on a \
+             DPMoE layout ({:.1}x the combine; the gap grows linearly \
+             with k)",
+            a2a / 1e6,
+            model.top_k,
+            a2a / p.tp_combine_volume(&model, &tables::SWEEP_TC).max(1.0)
         );
     }
     if overlap_dp {
@@ -305,6 +344,10 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
         "model: vocab={} hidden={} layers={} experts={} seq={} micro_batch={}",
         m.model.vocab, m.model.hidden, m.model.layers, m.model.experts,
         m.model.seq, m.model.micro_batch
+    );
+    println!(
+        "gating: top_k={} capacity_factor={}",
+        m.model.top_k, m.model.capacity_factor
     );
     for (s, sp) in m.stages.iter().enumerate() {
         println!(

@@ -70,6 +70,248 @@ pub fn route_top1(logits: &[f32], num_experts: usize, capacity: usize) -> Routin
     Routing { expert, gate, slot, dropped, num_experts, capacity }
 }
 
+/// What happens to an assignment that overflows its expert's capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropPolicy {
+    /// Drop the overflowing assignment (GShard / the HLO kernel's
+    /// semantics: the combine entry is zeroed, the token's OTHER level
+    /// choices survive independently).
+    Drop,
+    /// Never drop: the slot index keeps counting past `capacity` and the
+    /// caller sizes slabs to `TopkRouting::max_fill()` instead. Capacity
+    /// becomes advisory — useful for planning runs that want the true
+    /// load histogram.
+    Pad,
+    /// Re-route the overflowing assignment to the next expert in
+    /// ascending wrap-around order with free capacity, skipping experts
+    /// the token already uses; drop only when no such expert exists.
+    /// "Rank-order" re-route: the scan order is the expert id order, so
+    /// the decision is bit-deterministic on every TP rank.
+    Reroute,
+}
+
+/// Top-k routing decision for a batch of tokens (level-major assignment).
+///
+/// Storage is token-major: entry `t * k + lvl` is token `t`'s level-`lvl`
+/// choice. Slot ASSIGNMENT, however, is level-major across the batch —
+/// every token's first choice fills slabs before any second choice does —
+/// matching the jnp kernel's `base += sum(onehot)` pass structure, so the
+/// Rust plan and the HLO dispatch tensors agree slot-for-slot.
+#[derive(Debug, Clone)]
+pub struct TopkRouting {
+    /// Chosen expert per (token, level).
+    pub expert: Vec<u32>,
+    /// Gate weight per (token, level): raw top-1 softmax probability at
+    /// k = 1, renormalized over the k winners (denom floored at 1e-9,
+    /// GShard style) at k > 1.
+    pub gate: Vec<f32>,
+    /// Position within the expert's capacity slab (0 for dropped entries).
+    pub slot: Vec<u32>,
+    /// True if the assignment overflowed capacity (and, under `Reroute`,
+    /// no other expert had room).
+    pub dropped: Vec<bool>,
+    /// Expert count E.
+    pub num_experts: usize,
+    /// Per-expert capacity C (advisory under `Pad`).
+    pub capacity: usize,
+    /// Experts per token.
+    pub k: usize,
+}
+
+/// Softmax + top-k over raw logits, then level-major slot assignment.
+///
+/// Expert selection is k rounds of strict-greater argmax with masking,
+/// which reproduces `jnp.top_k`'s first-occurrence tie semantics exactly:
+/// equal scores are taken in ascending expert id order. Deterministic in
+/// every policy — identical logits yield identical dispatch on every rank
+/// (§3.3.3), which is what lets PPMoE skip the all-to-all.
+///
+/// `route_topk(k = 1, DropPolicy::Drop)` is bitwise `route_top1` in every
+/// field (the regression pin for the existing hot loop).
+pub fn route_topk(
+    logits: &[f32],
+    num_experts: usize,
+    capacity: usize,
+    k: usize,
+    policy: DropPolicy,
+) -> TopkRouting {
+    assert!(num_experts > 0 && logits.len() % num_experts == 0);
+    assert!(
+        k >= 1,
+        "top_k must be at least 1 — k = 0 routes every token nowhere"
+    );
+    assert!(
+        k <= num_experts,
+        "top_k ({k}) exceeds num_experts ({num_experts}) — a token cannot \
+         be routed to more experts than exist"
+    );
+    let tokens = logits.len() / num_experts;
+    let mut expert = vec![0u32; tokens * k];
+    let mut gate = vec![0f32; tokens * k];
+    let mut slot = vec![0u32; tokens * k];
+    let mut dropped = vec![false; tokens * k];
+
+    // --- selection + gates (per token, one softmax) -----------------------
+    for t in 0..tokens {
+        let row = &logits[t * num_experts..(t + 1) * num_experts];
+        // single-pass online softmax fused with the level-0 argmax, same
+        // sweep as route_top1 (keeps the k = 1 fast path bitwise)
+        let mut m = f32::NEG_INFINITY;
+        let mut denom = 0.0f32;
+        let mut best = 0usize;
+        for (e, &v) in row.iter().enumerate() {
+            if v > m {
+                denom = denom * (m - v).exp() + 1.0;
+                m = v;
+                best = e;
+            } else {
+                denom += (v - m).exp();
+            }
+        }
+        expert[t * k] = best as u32;
+        gate[t * k] = 1.0 / denom; // exp(m - m) / denom
+        // levels 1..k: next strict-greater argmax over unchosen experts
+        for lvl in 1..k {
+            let mut nxt = usize::MAX;
+            let mut nv = f32::NEG_INFINITY;
+            for (e, &v) in row.iter().enumerate() {
+                let used = (0..lvl).any(|l| expert[t * k + l] as usize == e);
+                if !used && v > nv {
+                    nv = v;
+                    nxt = e;
+                }
+            }
+            debug_assert!(nxt != usize::MAX, "k <= E guarantees a candidate");
+            expert[t * k + lvl] = nxt as u32;
+            gate[t * k + lvl] = (nv - m).exp() / denom;
+        }
+        if k > 1 {
+            let mut sum = 0.0f32;
+            for lvl in 0..k {
+                sum += gate[t * k + lvl];
+            }
+            let d = sum.max(1e-9);
+            for lvl in 0..k {
+                gate[t * k + lvl] /= d;
+            }
+        }
+    }
+
+    // --- level-major slot assignment --------------------------------------
+    match policy {
+        DropPolicy::Drop => {
+            // mirror the jnp kernel: the per-expert base for level i counts
+            // ALL prior-level choices, dropped ones included
+            let mut chosen = vec![0u32; num_experts];
+            for lvl in 0..k {
+                let mut lvl_fill = vec![0u32; num_experts];
+                for t in 0..tokens {
+                    let e = expert[t * k + lvl] as usize;
+                    let pos = chosen[e] + lvl_fill[e];
+                    lvl_fill[e] += 1;
+                    if (pos as usize) < capacity {
+                        slot[t * k + lvl] = pos;
+                    } else {
+                        dropped[t * k + lvl] = true;
+                    }
+                }
+                for e in 0..num_experts {
+                    chosen[e] += lvl_fill[e];
+                }
+            }
+        }
+        DropPolicy::Pad => {
+            // nothing drops; slots count past capacity and the caller pads
+            let mut fill = vec![0u32; num_experts];
+            for lvl in 0..k {
+                for t in 0..tokens {
+                    let e = expert[t * k + lvl] as usize;
+                    slot[t * k + lvl] = fill[e];
+                    fill[e] += 1;
+                }
+            }
+        }
+        DropPolicy::Reroute => {
+            // occupancy-based: a rerouted assignment takes a REAL slot in
+            // its new expert, so accounting uses accepted fills, not choices
+            let mut fill = vec![0u32; num_experts];
+            for lvl in 0..k {
+                for t in 0..tokens {
+                    let e = expert[t * k + lvl] as usize;
+                    if (fill[e] as usize) < capacity {
+                        slot[t * k + lvl] = fill[e];
+                        fill[e] += 1;
+                        continue;
+                    }
+                    // ascending wrap-around scan from e+1, skipping experts
+                    // this token already uses at ANY level
+                    let mut placed = false;
+                    for step in 1..num_experts {
+                        let cand = (e + step) % num_experts;
+                        if (fill[cand] as usize) >= capacity {
+                            continue;
+                        }
+                        let used = (0..k).any(|l| {
+                            l != lvl && expert[t * k + l] as usize == cand
+                        });
+                        if used {
+                            continue;
+                        }
+                        expert[t * k + lvl] = cand as u32;
+                        slot[t * k + lvl] = fill[cand];
+                        fill[cand] += 1;
+                        placed = true;
+                        break;
+                    }
+                    if !placed {
+                        dropped[t * k + lvl] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    TopkRouting { expert, gate, slot, dropped, num_experts, capacity, k }
+}
+
+impl TopkRouting {
+    /// Number of routed tokens.
+    pub fn tokens(&self) -> usize {
+        self.expert.len() / self.k
+    }
+
+    /// Accepted assignments per expert (post-capacity).
+    pub fn load(&self) -> Vec<usize> {
+        let mut l = vec![0usize; self.num_experts];
+        for (e, d) in self.expert.iter().zip(&self.dropped) {
+            if !d {
+                l[*e as usize] += 1;
+            }
+        }
+        l
+    }
+
+    /// Fraction of (token, level) assignments dropped by capacity.
+    pub fn drop_fraction(&self) -> f64 {
+        self.dropped.iter().filter(|d| **d).count() as f64
+            / self.expert.len().max(1) as f64
+    }
+
+    /// Largest slab any expert actually needs (== load per expert under
+    /// `Drop`/`Reroute`; under `Pad` this is the real required capacity,
+    /// which may exceed the advisory `capacity`).
+    pub fn max_fill(&self) -> usize {
+        self.expert
+            .iter()
+            .zip(&self.slot)
+            .zip(&self.dropped)
+            .filter(|(_, d)| !**d)
+            .map(|((_, s), _)| *s as usize + 1)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
 impl Routing {
     /// Number of routed tokens.
     pub fn tokens(&self) -> usize {
@@ -258,6 +500,225 @@ mod tests {
         let all_one: Vec<f32> = (0..8).flat_map(|_| vec![10.0, 0.0, 0.0, 0.0]).collect();
         let rt1 = route_top1(&all_one, 4, 8);
         assert!((rt1.balance_loss() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_k1_drop_is_bitwise_route_top1() {
+        // regression pin for the existing hot loop: the generalized router
+        // at k = 1 / Drop reproduces route_top1 in EVERY field, gates
+        // compared by bit pattern, not tolerance
+        forall(
+            "topk-k1-pin",
+            11,
+            60,
+            |r| {
+                let tokens = r.range(1, 96);
+                let experts = 1 << r.below(5);
+                let cap = r.range(1, tokens + 8);
+                let skew = r.f64() * 4.0;
+                let logits = synth_logits(r, tokens, experts, skew);
+                (tokens, experts, cap, logits)
+            },
+            |(tokens, experts, cap, logits)| {
+                let t1 = route_top1(logits, *experts, *cap);
+                let tk = route_topk(logits, *experts, *cap, 1, DropPolicy::Drop);
+                if t1.expert != tk.expert {
+                    return Err("expert mismatch".into());
+                }
+                if t1.slot != tk.slot || t1.dropped != tk.dropped {
+                    return Err("slot/drop mismatch".into());
+                }
+                for (a, b) in t1.gate.iter().zip(&tk.gate) {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("gate bits {a} vs {b}"));
+                    }
+                }
+                if tk.tokens() != *tokens {
+                    return Err("token count".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn topk_tie_breaking_is_first_occurrence() {
+        // jnp.top_k takes equal scores in ascending index order; so do we.
+        // All-equal row: selection order must be 0, 1, 2, ... k-1.
+        let logits = vec![1.0f32; 8];
+        let rt = route_topk(&logits, 8, 8, 4, DropPolicy::Drop);
+        assert_eq!(&rt.expert[..4], &[0, 1, 2, 3]);
+        // duplicated maxima at arbitrary positions: first occurrence wins
+        // per level, and the second level picks the NEXT occurrence
+        let row = vec![0.0f32, 7.0, 7.0, 7.0];
+        let rt = route_topk(&row, 4, 4, 3, DropPolicy::Drop);
+        assert_eq!(&rt.expert[..3], &[1, 2, 3]);
+        // property: levels are strictly score-descending, index-ascending
+        // among equal scores
+        forall(
+            "topk-tiebreak",
+            13,
+            60,
+            |r| {
+                let experts = 4 + r.below(5);
+                // quantized logits force frequent exact ties
+                let row: Vec<f32> =
+                    (0..experts).map(|_| (r.below(4) as f32) * 0.5).collect();
+                let k = 1 + r.below(experts.min(4));
+                (row, experts, k)
+            },
+            |(row, experts, k)| {
+                let rt = route_topk(row, *experts, 64, *k, DropPolicy::Drop);
+                for lvl in 1..*k {
+                    let (pe, ce) =
+                        (rt.expert[lvl - 1] as usize, rt.expert[lvl] as usize);
+                    let (pv, cv) = (row[pe], row[ce]);
+                    if cv > pv || (cv == pv && ce < pe) {
+                        return Err(format!(
+                            "level {lvl} picked e{ce}({cv}) after e{pe}({pv})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn topk_gates_renormalize_and_experts_distinct() {
+        forall(
+            "topk-gates",
+            17,
+            60,
+            |r| {
+                let tokens = r.range(1, 64);
+                let experts = 4 << r.below(3);
+                let k = [1usize, 2, 4][r.below(3)];
+                let logits = synth_logits(r, tokens, experts, r.f64() * 3.0);
+                (tokens, experts, k, logits)
+            },
+            |(tokens, experts, k, logits)| {
+                let rt =
+                    route_topk(logits, *experts, *tokens, *k, DropPolicy::Drop);
+                for t in 0..*tokens {
+                    let lv = &rt.expert[t * k..(t + 1) * k];
+                    let mut set = std::collections::HashSet::new();
+                    if !lv.iter().all(|e| set.insert(*e)) {
+                        return Err("duplicate expert within token".into());
+                    }
+                    let sum: f32 = rt.gate[t * k..(t + 1) * k].iter().sum();
+                    let want_unit = *k > 1;
+                    if want_unit && (sum - 1.0).abs() > 1e-5 {
+                        return Err(format!("gates sum {sum}"));
+                    }
+                    if !want_unit && !(sum > 0.0 && sum <= 1.0) {
+                        return Err(format!("k=1 gate {sum}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn topk_drop_order_is_deterministic_and_level_major() {
+        // E = 2, k = 2, capacity = 2, every token prefers e0 then e1:
+        // level 0 fills e0 with tokens 0,1 (tokens 2+ drop); level 1 fills
+        // e1 with tokens 0,1 (tokens 2+ drop). The exact drop PATTERN is
+        // part of the contract, not just the drop count.
+        let logits: Vec<f32> = (0..5).flat_map(|_| vec![2.0, 1.0]).collect();
+        let rt = route_topk(&logits, 2, 2, 2, DropPolicy::Drop);
+        let drops: Vec<bool> = rt.dropped.clone();
+        assert_eq!(
+            drops,
+            vec![false, false, false, false, true, true, true, true, true, true]
+        );
+        assert_eq!(rt.load(), vec![2, 2]);
+        // run-to-run determinism across every policy (§3.3.3)
+        let mut r = Rng::new(23);
+        let l = synth_logits(&mut r, 48, 8, 2.0);
+        for policy in [DropPolicy::Drop, DropPolicy::Pad, DropPolicy::Reroute] {
+            let a = route_topk(&l, 8, 4, 2, policy);
+            let b = route_topk(&l, 8, 4, 2, policy);
+            assert_eq!(a.expert, b.expert);
+            assert_eq!(a.slot, b.slot);
+            assert_eq!(a.dropped, b.dropped);
+        }
+    }
+
+    #[test]
+    fn topk_pad_never_drops_and_reports_true_fill() {
+        let logits: Vec<f32> = (0..10).flat_map(|_| vec![5.0, 0.0]).collect();
+        let rt = route_topk(&logits, 2, 3, 2, DropPolicy::Pad);
+        assert!(rt.dropped.iter().all(|d| !d));
+        assert_eq!(rt.load(), vec![10, 10]); // every assignment accepted
+        assert_eq!(rt.max_fill(), 10); // true slab size, past advisory cap 3
+        // slots are unique per expert even past capacity
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..rt.expert.len() {
+            assert!(seen.insert((rt.expert[i], rt.slot[i])));
+        }
+    }
+
+    #[test]
+    fn topk_reroute_spills_in_ascending_wrap_order() {
+        // 4 tokens all prefer e0, capacity 1: reroute walks e0 e1 e2 e3
+        let logits: Vec<f32> =
+            (0..4).flat_map(|_| vec![9.0, 0.0, 0.0, 0.0]).collect();
+        let rt = route_topk(&logits, 4, 1, 1, DropPolicy::Reroute);
+        assert_eq!(rt.expert, vec![0, 1, 2, 3]);
+        assert!(rt.dropped.iter().all(|d| !d));
+        // k = 1: reroute drops ONLY when the machine is full
+        forall(
+            "topk-reroute-full",
+            29,
+            40,
+            |r| {
+                let tokens = r.range(1, 64);
+                let experts = 1 << r.below(4);
+                let cap = r.range(1, 16);
+                let logits = synth_logits(r, tokens, experts, r.f64() * 5.0);
+                (tokens, experts, cap, logits)
+            },
+            |(tokens, experts, cap, logits)| {
+                let rt =
+                    route_topk(logits, *experts, *cap, 1, DropPolicy::Reroute);
+                let accepted = rt.expert.len()
+                    - rt.dropped.iter().filter(|d| **d).count();
+                if accepted != (*tokens).min(experts * cap) {
+                    return Err(format!(
+                        "accepted {accepted} != min(t, E*cap)"
+                    ));
+                }
+                Ok(())
+            },
+        );
+        // a token never lands on the same expert twice, even via reroute:
+        // e0/e1 full, token's choices are e0 and e1 — level-1 overflow may
+        // only go to an expert the token does not already use
+        let mut logits: Vec<f32> = (0..3).flat_map(|_| vec![3.0, 2.0, 0.0, 0.0]).collect();
+        logits.extend_from_slice(&[3.0, 2.0, 0.0, 0.0]);
+        let rt = route_topk(&logits, 4, 2, 2, DropPolicy::Reroute);
+        for t in 0..4 {
+            let mut set = std::collections::HashSet::new();
+            for lvl in 0..2 {
+                if !rt.dropped[t * 2 + lvl] {
+                    assert!(set.insert(rt.expert[t * 2 + lvl]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "top_k (5) exceeds num_experts (4)")]
+    fn topk_rejects_k_above_num_experts() {
+        route_topk(&[0.0; 4], 4, 8, 5, DropPolicy::Drop);
+    }
+
+    #[test]
+    #[should_panic(expected = "top_k must be at least 1")]
+    fn topk_rejects_k_zero() {
+        route_topk(&[0.0; 4], 4, 8, 0, DropPolicy::Drop);
     }
 
     #[test]

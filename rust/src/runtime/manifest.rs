@@ -97,6 +97,13 @@ pub struct ModelInfo {
     pub virtual_stages: usize,
     /// Load-balance loss coefficient.
     pub aux_coef: f64,
+    /// Gating fan-out k: each token is dispatched to its top_k experts
+    /// with gate-weighted combine; 1 for manifests that predate the field
+    /// (every pre-top-k export was top-1 by construction).
+    pub top_k: usize,
+    /// Expert capacity factor (capacity = cf·k·tokens/E, 0 = uncapped);
+    /// 2.0 — the historic python default — for manifests without it.
+    pub capacity_factor: f64,
 }
 
 /// One virtual chunk of a pipeline stage: the artifacts that execute it and
@@ -479,6 +486,12 @@ impl Manifest {
                 .and_then(Json::as_usize)
                 .unwrap_or(1),
             aux_coef: cfg.req("aux_coef")?.as_f64().context("aux_coef")?,
+            // both absent in manifests exported before top-k gating existed
+            top_k: cfg.get("top_k").and_then(Json::as_usize).unwrap_or(1),
+            capacity_factor: cfg
+                .get("capacity_factor")
+                .and_then(Json::as_f64)
+                .unwrap_or(2.0),
         };
         let tp = j.req("tp")?.as_usize().context("tp")?;
 

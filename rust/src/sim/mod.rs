@@ -224,13 +224,18 @@ impl Simulator {
                 let inter = self.mesh.group_link(&g) == Link::InterNode;
                 let streams =
                     if inter { self.cost.cluster.gpus_per_node } else { 1 };
+                // each token ships top_k activation copies — one per
+                // selected expert — so the a2a payload is linear in k
+                // (PPMoE's combine below is NOT: the k slots reduce
+                // locally before its single all-reduce)
+                let payload = self.act_bytes(bt) * self.m.top_k as f64;
                 let a2a = if inter {
-                    let wire = self.act_bytes(bt) * (self.p.ep as f64 - 1.0)
+                    let wire = payload * (self.p.ep as f64 - 1.0)
                         / self.p.ep as f64;
                     (self.p.ep as f64 - 1.0) * self.cost.cluster.alpha
                         + wire * streams as f64 / self.cost.inter_bw()
                 } else {
-                    self.cost.all_to_all(self.p.ep, self.act_bytes(bt)).seconds
+                    self.cost.all_to_all(self.p.ep, payload).seconds
                 };
                 b.add(Component::FirstA2A, a2a);
                 // expert compute: top-k dense-FFN equivalents, balanced

@@ -723,7 +723,8 @@ mod tests {
             model: ModelInfo {
                 config_name: "t".into(), vocab: 4, hidden: 2, layers: 1,
                 experts: 1, seq: 2, micro_batch: 1, stages: 1,
-                virtual_stages: 1, aux_coef: 0.0,
+                virtual_stages: 1, aux_coef: 0.0, top_k: 1,
+                capacity_factor: 2.0,
             },
             tp: 1,
             stages: vec![StageParams {

@@ -222,6 +222,13 @@ pub struct TrainerCfg {
     /// (rust/tests/dp_equivalence.rs), including composed with live
     /// `--tp`. 0 or 1 = off.
     pub emulate_dp: usize,
+    /// Expected gating fan-out (`--top-k`): the top-k schedule is compiled
+    /// into the HLO artifacts at export time, so this is a GUARD, not a
+    /// knob — the run refuses to start if the manifest's `top_k` differs
+    /// from what the operator asked for (e.g. `--top-k 2` against a
+    /// top-1-only export), instead of silently training the wrong
+    /// schedule. 0 = follow whatever the manifest carries.
+    pub top_k: usize,
     /// **Reference mode** (testing): at `tp = 1` and `dp = 1`, execute the
     /// `emulate_tp`-way tensor-parallel segment plan serially inside each
     /// stage worker — every rank's executables run in-thread and partials
@@ -275,6 +282,7 @@ impl Default for TrainerCfg {
             dp: 1,
             overlap_dp_sync: true,
             tp: 1,
+            top_k: 0,
             emulate_dp: 0,
             emulate_tp: 0,
             fault: None,
@@ -647,6 +655,48 @@ pub fn train_capture(cfg: &TrainerCfg, failures_out: &mut Vec<WorkerFailure>) ->
     // fail on the driver with a clear message if the artifacts cannot
     // serve the requested tensor degree (workers would all hit this too)
     manifest.stage_view(0, 0, tg)?;
+    // gating schedule guards: the top-k schedule is baked into the HLO at
+    // export time, so a mismatch cannot be fixed at run time — refuse
+    // loudly instead of silently training a different schedule
+    let mk = manifest.model.top_k;
+    if mk == 0 || mk > manifest.model.experts {
+        bail!(
+            "manifest declares top_k = {mk} with {} experts — a token \
+             cannot be routed to more experts than exist; the export is \
+             corrupt, re-run `python -m compile.aot`",
+            manifest.model.experts
+        );
+    }
+    let mcf = manifest.model.capacity_factor;
+    if mcf > 0.0 && mcf < 1.0 / manifest.model.experts as f64 {
+        bail!(
+            "manifest capacity_factor ({mcf}) is below 1/experts \
+             ({:.4}): the export would silently drop nearly every token — \
+             re-export with a sane --capacity-factor (or 0 for uncapped)",
+            1.0 / manifest.model.experts as f64
+        );
+    }
+    if cfg.top_k > 0 && cfg.top_k != mk {
+        if mk == 1 {
+            bail!(
+                "--top-k {} requested but '{}' is a top-1-only export \
+                 (manifest top_k = 1): the gating schedule is compiled \
+                 into the HLO artifacts and cannot change at run time — \
+                 re-export with `python -m compile.aot --top-k {}`",
+                cfg.top_k,
+                cfg.artifacts.display(),
+                cfg.top_k
+            );
+        }
+        bail!(
+            "--top-k {} does not match the artifacts' top_k = {mk} \
+             ('{}'): drop the flag to follow the manifest, or re-export \
+             with `python -m compile.aot --top-k {}`",
+            cfg.top_k,
+            cfg.artifacts.display(),
+            cfg.top_k
+        );
+    }
 
     // resumption: the checkpointed step count positions the data stream and
     // the LR warmup exactly where an uninterrupted run would be; the

@@ -157,6 +157,73 @@ pub fn live_chunked_artifacts_dir() -> Option<PathBuf> {
     live_backend().then_some(dir)
 }
 
+/// Resolve an artifacts directory exported with top-k gating
+/// (`make artifacts-tiny-k2`: top_k = 2, capacity_factor = 1.5, tp = 2),
+/// or `None` with a skip message. Env override: `PPMOE_ARTIFACTS_TOPK`.
+#[allow(dead_code)] // not every test binary links every helper
+pub fn topk_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("PPMOE_ARTIFACTS_TOPK") {
+        let dir = PathBuf::from(dir);
+        assert!(
+            dir.join("manifest.json").exists(),
+            "PPMOE_ARTIFACTS_TOPK={} has no manifest.json — run \
+             `make artifacts-tiny-k2`",
+            dir.display()
+        );
+        return Some(dir);
+    }
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts-tiny-k2");
+    if dir.join("manifest.json").exists() {
+        return Some(dir);
+    }
+    eprintln!(
+        "SKIP: no top-k AOT artifacts found — run `make artifacts-tiny-k2` \
+         (or set PPMOE_ARTIFACTS_TOPK) to enable this integration test"
+    );
+    None
+}
+
+/// Interleaved + top-k artifacts (`make artifacts-tiny-v4-k2`), or `None`
+/// with a skip message. Env override: `PPMOE_ARTIFACTS_TOPK_CHUNKED`.
+#[allow(dead_code)] // not every test binary links every helper
+pub fn topk_chunked_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("PPMOE_ARTIFACTS_TOPK_CHUNKED") {
+        let dir = PathBuf::from(dir);
+        assert!(
+            dir.join("manifest.json").exists(),
+            "PPMOE_ARTIFACTS_TOPK_CHUNKED={} has no manifest.json — run \
+             `make artifacts-tiny-v4-k2`",
+            dir.display()
+        );
+        return Some(dir);
+    }
+    let dir =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts-tiny-v4-k2");
+    if dir.join("manifest.json").exists() {
+        return Some(dir);
+    }
+    eprintln!(
+        "SKIP: no interleaved top-k AOT artifacts found — run `make \
+         artifacts-tiny-v4-k2` (or set PPMOE_ARTIFACTS_TOPK_CHUNKED) to \
+         enable this integration test"
+    );
+    None
+}
+
+/// [`topk_artifacts_dir`] + [`live_backend`].
+#[allow(dead_code)] // not every test binary links every helper
+pub fn live_topk_artifacts_dir() -> Option<PathBuf> {
+    let dir = topk_artifacts_dir()?;
+    live_backend().then_some(dir)
+}
+
+/// [`topk_chunked_artifacts_dir`] + [`live_backend`].
+#[allow(dead_code)] // not every test binary links every helper
+pub fn live_topk_chunked_artifacts_dir() -> Option<PathBuf> {
+    let dir = topk_chunked_artifacts_dir()?;
+    live_backend().then_some(dir)
+}
+
 /// Resolve an artifacts directory exported with interleaved chunks
 /// (`make artifacts-tiny-v4`), or `None` with a skip message.
 ///

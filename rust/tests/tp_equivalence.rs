@@ -13,7 +13,9 @@
 //!   collective computes — on plain AND interleaved chunked artifacts,
 //!   composed with `--dp 2` (via the `emulate_dp` summed-gradient
 //!   reference at fixed tp), with bitwise resume from tp-sharded
-//!   checkpoints.
+//!   checkpoints. The same pin holds at top_k = 2 (gate-weighted k-slot
+//!   combine with capacity drops) against the `make artifacts-tiny-k2` /
+//!   `artifacts-tiny-v4-k2` exports.
 
 mod common;
 
@@ -176,6 +178,62 @@ fn tp_misconfiguration_fails_loudly_on_the_driver() {
     assert!(train(&cfg).is_err());
 }
 
+#[test]
+fn topk_mismatch_fails_loudly_on_the_driver() {
+    // the gating schedule is compiled into the HLO at export time, so a
+    // --top-k that disagrees with the manifest must refuse to run with
+    // actionable advice, not silently train a different schedule
+    let Some((dir, manifest, _tp)) = tp_artifacts(common::artifacts_dir()) else { return };
+    let mk = manifest.model.top_k;
+    let mut cfg = cfg_for(dir.clone(), 1, 4);
+    cfg.top_k = mk + 1;
+    let err = train(&cfg).unwrap_err().to_string();
+    assert!(err.contains("top-k") || err.contains("top_k"), "{err}");
+    assert!(err.contains("compile.aot"), "should say how to re-export: {err}");
+    if mk == 1 {
+        // the headline case: --tp run against a top-1-only export
+        assert!(
+            err.contains("top-1-only"),
+            "a k>1 request against a top-1 manifest should say so: {err}"
+        );
+    }
+    // matching the manifest (or leaving the guard off) passes validation:
+    // any later failure must NOT be the schedule guard
+    for ok_k in [0, mk] {
+        let mut cfg = cfg_for(dir.clone(), 1, 4);
+        cfg.top_k = ok_k;
+        if let Err(e) = train(&cfg) {
+            let msg = e.to_string();
+            assert!(
+                !msg.contains("top_k") && !msg.contains("top-k"),
+                "top_k guard misfired at k={ok_k}: {msg}"
+            );
+        }
+    }
+}
+
+#[test]
+fn topk_artifacts_carry_the_k2_schedule() {
+    // contract tier for the k = 2 export: manifest declares top_k = 2 with
+    // a dropping capacity factor, carries a tp_exec table, and the
+    // per-rank bins parse exactly like the top-1 ones
+    let Some((dir, manifest, tp)) = tp_artifacts(common::topk_artifacts_dir()) else {
+        return;
+    };
+    assert_eq!(manifest.model.top_k, 2, "artifacts-tiny-k2 must be a k=2 export");
+    assert!(
+        manifest.model.capacity_factor > 0.0,
+        "k=2 export is meant to exercise capacity drops, not uncapped"
+    );
+    let rt = Runtime::open(&dir).unwrap();
+    for stage in 0..manifest.model.stages {
+        for r in 0..tp {
+            let view = manifest.stage_view(stage, r, tp).unwrap();
+            rt.load_params_bin(&view.bin, &view.params, view.total_bytes).unwrap();
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Live tier: bitwise equivalence (needs a real PJRT backend)
 // ---------------------------------------------------------------------------
@@ -235,6 +293,29 @@ fn tp2_bitwise_on_interleaved_chunked_artifacts() {
     let Some((arts, m, tp)) = tp_artifacts(common::live_chunked_artifacts_dir()) else {
         return;
     };
+    let p = m.model.stages;
+    assert_tp_equivalence(arts, tp, 2 * p, 4);
+}
+
+#[test]
+fn tp2_k2_bitwise_matches_emulated_reference() {
+    // the acceptance bar for top-k: live --tp 2 at k = 2 (gate-weighted
+    // two-slot combine, capacity drops active) is bitwise the serial
+    // emulate_tp reference on the k = 2 export
+    let Some((arts, m, tp)) = tp_artifacts(common::live_topk_artifacts_dir()) else {
+        return;
+    };
+    assert_eq!(m.model.top_k, 2);
+    assert_tp_equivalence(arts, tp, 4, 5);
+}
+
+#[test]
+fn tp2_k2_bitwise_on_interleaved_chunked_artifacts() {
+    // k = 2 composed with interleaved virtual chunks: several k-slot moe
+    // combines per stage fire at different points of the 1F1B walk
+    let Some((arts, m, tp)) =
+        tp_artifacts(common::live_topk_chunked_artifacts_dir()) else { return };
+    assert_eq!(m.model.top_k, 2);
     let p = m.model.stages;
     assert_tp_equivalence(arts, tp, 2 * p, 4);
 }
