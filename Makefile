@@ -6,7 +6,7 @@ CARGO ?= cargo
 
 .PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 artifacts-tiny-k2 \
         artifacts-tiny-v4-k2 build test test-dp test-dp-py test-tp \
-        test-tp-py test-elastic bench doc clean
+        test-tp-py test-elastic test-serve bench bench-serve doc clean
 
 all: artifacts build
 
@@ -92,6 +92,23 @@ test-tp-py:
 # kill-a-replica tier self-skips without artifacts/backend.
 test-elastic:
 	$(CARGO) test --test elastic_equivalence -q -- --nocapture
+
+# The serving slice: continuous batching bitwise-equal to the serial
+# reference at any (max-batch, max-wait, arrival-trace), engine
+# determinism, and the index-slice vs dense dispatch A/B under the engine
+# (rust/tests/serve_equivalence.rs; docs/serving.md). The property tier
+# runs everywhere on the stub forward; the manifest tier self-skips
+# without artifacts/backend.
+test-serve:
+	$(CARGO) test --test serve_equivalence -q -- --nocapture
+
+# Closed-loop serving bench: `ppmoe serve --loadgen` sweeps the
+# uniform/zipf/bursty arrival mixes and writes BENCH_serve.json
+# (p50/p99 latency, tokens/s, batch fill, dispatch A/B ns rows, oracle
+# wire volumes). Fully deterministic apart from the wall-clock ns rows.
+bench-serve:
+	$(CARGO) run --release -- serve --loadgen --requests 256 \
+	    --max-batch 8 --max-wait-us 800 --seed 42
 
 # Hot-path microbenches (writes BENCH_hotpath.json: incl. the
 # dp_sync/{serialized,overlapped} dp={2,4} A/B rows, the

@@ -12,6 +12,8 @@
 //! * grad-clip + Adam: the old three-pass sweep vs the fused single pass;
 //!   the live ZeRO-1 round with reused scratch (asserts zero steady-state
 //!   allocations via pointer/capacity fingerprints)
+//! * slab pool: cold fresh-alloc take vs recycled take/put round-trip,
+//!   asserting the hit/miss/prefill accounting contract on the way
 //! * 1F1B schedule simulation, manifest JSON parse
 //!
 //! Besides the human-readable lines, results are written to
@@ -345,6 +347,36 @@ fn main() {
                 );
             }
         }
+    }
+
+    println!("\n=== slab pool (fresh-alloc vs recycle, counter semantics) ===");
+    {
+        use ppmoe::trainer::pool::LocalSlabPool;
+        let len = 65_536; // one 256 KiB activation slab
+        // fresh-alloc reference: a cold pool, every take is a miss
+        results.push(bench("slab_pool/fresh 256KiB", || {
+            let mut pool = LocalSlabPool::new();
+            let v = pool.take(len);
+            assert_eq!(
+                (pool.hits, pool.misses, pool.prefilled),
+                (0, 1, 0),
+                "a cold take is a miss — never a hit"
+            );
+            v.capacity()
+        }));
+        // recycling path: one prefilled slab loops take -> put forever
+        let mut pool = LocalSlabPool::new();
+        pool.prefill(1, len);
+        results.push(bench("slab_pool/recycled 256KiB", || {
+            let v = pool.take(len);
+            pool.put(v);
+        }));
+        // the accounting contract the trainer timers rely on: prefills are
+        // neither hits nor misses, recycled takes are hits, and total
+        // allocations == misses + prefilled (here: 0 + 1)
+        assert_eq!(pool.prefilled, 1, "one slab seeded up front");
+        assert_eq!(pool.misses, 0, "steady-state recycling never allocates");
+        assert!(pool.hits > 0, "recycled takes count as hits");
     }
 
     println!("\n=== manifest JSON parse ===");

@@ -183,14 +183,26 @@ impl ParallelCfg {
     /// as k grows (`simulate --tp --top-k`, EXPERIMENTS.md §Top-k
     /// crossover).
     pub fn tp_combine_volume(&self, m: &ModelDims, tc: &TrainCfg) -> f64 {
+        // forward y combine + backward d(hgt) combine, per microbatch
+        2.0 * tc.num_micro as f64
+            * self.tp_combine_volume_fwd_tokens(m, tc.micro_batch * m.seq)
+    }
+
+    /// Forward-only combine volume for an arbitrary batch of `tokens`
+    /// rows — the serving-shape core [`Self::tp_combine_volume`] delegates
+    /// to. A serving batch has no microbatch loop and no backward, so its
+    /// wire cost per forward is exactly one all-reduce of the (tokens, h)
+    /// boundary activation per resident MoE layer. Like the training
+    /// accessor, this is **flat in `top_k`** — the k slots are combined
+    /// locally before the all-reduce (`serve`'s dispatch oracle quotes
+    /// this against [`Self::dpmoe_a2a_volume_fwd_tokens`]).
+    pub fn tp_combine_volume_fwd_tokens(&self, m: &ModelDims, tokens: usize) -> f64 {
         if self.tp <= 1 || self.scheme != Scheme::PpMoE {
             return 0.0;
         }
         let moe_here = m.moe_layers() as f64 / self.pp.max(1) as f64;
-        let act = (tc.micro_batch * m.seq * m.hidden) as f64;
         let ring = 2.0 * (self.tp as f64 - 1.0) / self.tp as f64;
-        // forward y combine + backward d(hgt) combine, per microbatch
-        2.0 * tc.num_micro as f64 * moe_here * ring * act
+        moe_here * ring * (tokens * m.hidden) as f64
     }
 
     /// Activation-element volume one rank moves per training step through
@@ -204,14 +216,26 @@ impl ParallelCfg {
     /// where index-slicing wins widens with the gating fan-out. Multiply
     /// by `ClusterCfg::wire_bytes` for bytes.
     pub fn dpmoe_a2a_volume(&self, m: &ModelDims, tc: &TrainCfg) -> f64 {
+        // the forward's two all-to-alls repeat in the backward: ×2
+        2.0 * tc.num_micro as f64
+            * self.dpmoe_a2a_volume_fwd_tokens(m, tc.micro_batch * m.seq)
+    }
+
+    /// Forward-only all-to-all volume for an arbitrary batch of `tokens`
+    /// rows — the serving-shape core [`Self::dpmoe_a2a_volume`] delegates
+    /// to: one dispatch + one combine all-to-all per resident MoE layer,
+    /// each moving the token's `top_k` dispatched hidden-vector copies,
+    /// `(ep−1)/ep` of them off-rank. Still **linear in k**, which is why
+    /// the index-slice advantage the serving oracle reports widens with
+    /// the gating fan-out even at inference batch shapes.
+    pub fn dpmoe_a2a_volume_fwd_tokens(&self, m: &ModelDims, tokens: usize) -> f64 {
         if self.ep <= 1 || self.scheme != Scheme::DpMoE {
             return 0.0;
         }
         let moe_here = m.moe_layers() as f64 / self.pp.max(1) as f64;
-        let act = (tc.micro_batch * m.seq * m.hidden) as f64;
         let frac = (self.ep as f64 - 1.0) / self.ep as f64;
-        // 2 a2a per direction × fwd+bwd = 4, × k dispatched copies/token
-        4.0 * tc.num_micro as f64 * moe_here * frac * act * m.top_k as f64
+        // 2 a2a (dispatch out, combine back) × k copies/token
+        2.0 * moe_here * frac * (tokens * m.hidden) as f64 * m.top_k as f64
     }
 
     /// Validate divisibility constraints against a model + cluster.
@@ -595,6 +619,46 @@ mod tests {
         // through the combine
         assert_eq!(pp.dpmoe_a2a_volume(&m1, &tc), 0.0);
         assert_eq!(dp.tp_combine_volume(&m1, &tc), 0.0);
+    }
+
+    #[test]
+    fn serving_shape_volumes_delegate_from_training() {
+        // PR 8: the *_fwd_tokens accessors are the serving-shape cores the
+        // training accessors delegate to — combine: ×2 (fwd+bwd) × num_micro;
+        // a2a: ×2 (bwd repeats the forward's pair) × num_micro.
+        let m = ModelDims { top_k: 2, ..moe_small_setting() };
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        let pp = ParallelCfg {
+            dp: 1, tp: 8, pp: 4, ep: 8, zero: false, scheme: Scheme::PpMoE,
+        };
+        let dp = ParallelCfg { tp: 1, scheme: Scheme::DpMoE, ..pp };
+        let tokens = tc.micro_batch * m.seq;
+        assert!(
+            (pp.tp_combine_volume(&m, &tc)
+                - 2.0 * 16.0 * pp.tp_combine_volume_fwd_tokens(&m, tokens))
+            .abs()
+                < 1.0
+        );
+        assert!(
+            (dp.dpmoe_a2a_volume(&m, &tc)
+                - 2.0 * 16.0 * dp.dpmoe_a2a_volume_fwd_tokens(&m, tokens))
+            .abs()
+                < 1.0
+        );
+        // serving shapes: linear in the batch's token count...
+        let v1 = pp.tp_combine_volume_fwd_tokens(&m, 128);
+        assert!((pp.tp_combine_volume_fwd_tokens(&m, 256) - 2.0 * v1).abs() < 1.0);
+        // ...combine still flat in k, a2a still linear in k
+        let m4 = ModelDims { top_k: 4, ..m.clone() };
+        assert_eq!(
+            pp.tp_combine_volume_fwd_tokens(&m, 128),
+            pp.tp_combine_volume_fwd_tokens(&m4, 128)
+        );
+        let a = dp.dpmoe_a2a_volume_fwd_tokens(&m, 128);
+        assert!((dp.dpmoe_a2a_volume_fwd_tokens(&m4, 128) - 2.0 * a).abs() < 1.0);
+        // scheme guards hold at serving shapes too
+        assert_eq!(dp.tp_combine_volume_fwd_tokens(&m, 128), 0.0);
+        assert_eq!(pp.dpmoe_a2a_volume_fwd_tokens(&m, 128), 0.0);
     }
 
     #[test]

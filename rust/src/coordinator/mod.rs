@@ -35,7 +35,12 @@ const KNOWN_FLAGS: &[&str] = &[
     "no-dp-overlap",
     "overlap-dp",
     "elastic",
+    "loadgen",
 ];
+
+/// Flags every subcommand accepts (appended to each command's own list by
+/// [`Args::validate_known`] callers).
+pub const COMMON_FLAGS: &[&str] = &["verbose", "help"];
 
 impl Args {
     /// Parse an argv iterator (without the program name).
@@ -106,6 +111,97 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Reject unrecognized `--keys` loudly. `options` is the set of
+    /// value-taking knobs the command reads, `flags` its boolean switches
+    /// (callers append [`COMMON_FLAGS`]). Before this pass existed, a
+    /// typo'd `--top-K 2` or `--no-dp-overlaps` parsed fine and silently
+    /// meant "use the default" — the worst possible failure mode for a
+    /// perf knob.
+    pub fn validate_known(
+        &self,
+        command: &str,
+        options: &[&str],
+        flags: &[&str],
+    ) -> anyhow::Result<()> {
+        for k in self.options.keys() {
+            if !options.iter().any(|o| o == k) {
+                anyhow::bail!(
+                    "unknown option --{k} for '{command}'{}\nvalid options: {}",
+                    Self::nearest_hint(k, options, flags),
+                    Self::joined(options),
+                );
+            }
+        }
+        for f in &self.flags {
+            if flags.iter().any(|x| x == f) {
+                continue;
+            }
+            if options.iter().any(|o| o == f) {
+                // a known value-taking knob that parsed as a flag: the
+                // value is missing (e.g. `--steps` at the end of argv)
+                anyhow::bail!("--{f} expects a value for '{command}', got none");
+            }
+            anyhow::bail!(
+                "unknown flag --{f} for '{command}'{}\nvalid flags: {}",
+                Self::nearest_hint(f, options, flags),
+                Self::joined(flags),
+            );
+        }
+        Ok(())
+    }
+
+    /// A "did you mean" suffix when a known key is a near-miss of the
+    /// given one (case-insensitive match, or within edit distance 1 —
+    /// enough to catch `--top-K` and `--no-dp-overlaps`).
+    fn nearest_hint(key: &str, options: &[&str], flags: &[&str]) -> String {
+        let lower = key.to_ascii_lowercase();
+        for cand in options.iter().chain(flags.iter()) {
+            if cand.to_ascii_lowercase() == lower || Self::edit1(&lower, cand) {
+                return format!(" (did you mean --{cand}?)");
+            }
+        }
+        String::new()
+    }
+
+    /// Whether `a` and `b` differ by at most one edit (insert, delete, or
+    /// substitute a single character).
+    fn edit1(a: &str, b: &str) -> bool {
+        let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+        let (short, long) = if a.len() <= b.len() { (&a, &b) } else { (&b, &a) };
+        match long.len() - short.len() {
+            0 => short.iter().zip(long.iter()).filter(|(x, y)| x != y).count() <= 1,
+            1 => {
+                // one deletion from `long`
+                let mut i = 0;
+                let mut j = 0;
+                let mut skipped = false;
+                while i < short.len() && j < long.len() {
+                    if short[i] == long[j] {
+                        i += 1;
+                        j += 1;
+                    } else if skipped {
+                        return false;
+                    } else {
+                        skipped = true;
+                        j += 1;
+                    }
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn joined(keys: &[&str]) -> String {
+        if keys.is_empty() {
+            return "(none)".to_string();
+        }
+        keys.iter()
+            .map(|k| format!("--{k}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +236,66 @@ mod tests {
         let a = parse("--flag --opt val");
         assert!(a.has_flag("flag"));
         assert_eq!(a.get("opt"), Some("val"));
+    }
+
+    /// Regression (PR 8): unknown `--keys` used to be silently swallowed —
+    /// a typo'd knob looked identical to "use the default".
+    #[test]
+    fn typoed_knobs_are_rejected_loudly() {
+        // case typo on a value knob: `--top-K` instead of `--top-k`
+        let a = parse("train --top-K 2");
+        let err = a
+            .validate_known("train", &["top-k", "steps"], &["gpipe"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown option --top-K"), "{err}");
+        assert!(err.contains("did you mean --top-k?"), "{err}");
+
+        // near-miss boolean: `--no-dp-overlaps` instead of `--no-dp-overlap`
+        let a = parse("train --no-dp-overlaps");
+        let err = a
+            .validate_known("train", &["steps"], &["no-dp-overlap"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag --no-dp-overlaps"), "{err}");
+        assert!(err.contains("did you mean --no-dp-overlap?"), "{err}");
+
+        // a completely foreign key lists the valid set instead of a hint
+        let a = parse("info --artifcts dir");
+        let err = a
+            .validate_known("info", &["artifacts"], &[])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean --artifacts?"), "{err}");
+        assert!(err.contains("valid options: --artifacts"), "{err}");
+    }
+
+    #[test]
+    fn known_keys_validate_clean() {
+        let a = parse("train --steps 10 --gpipe --top-k 2");
+        a.validate_known("train", &["steps", "top-k"], &["gpipe"])
+            .unwrap();
+    }
+
+    #[test]
+    fn value_knob_without_value_is_an_error() {
+        // `--steps` at the end of argv parses as a flag; validation must
+        // not let it silently mean "default steps"
+        let a = parse("train --steps");
+        let err = a
+            .validate_known("train", &["steps"], &[])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--steps expects a value"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_one_matches() {
+        assert!(Args::edit1("topk", "top-k")); // one insert
+        assert!(Args::edit1("stepss", "steps")); // one delete
+        assert!(Args::edit1("sleps", "steps")); // one substitute
+        assert!(!Args::edit1("stps", "step-s")); // two edits
+        assert!(Args::edit1("x", "x"));
     }
 
     #[test]

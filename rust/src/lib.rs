@@ -28,6 +28,7 @@ pub mod model;
 pub mod moe;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tp;
 pub mod trainer;
@@ -74,9 +75,14 @@ mod registration_guard {
         for entry in std::fs::read_dir(root.join("rust/tests")).unwrap() {
             let path = entry.unwrap().path();
             if path.extension().and_then(|e| e.to_str()) == Some("rs") {
-                files.insert(
-                    path.file_stem().unwrap().to_str().unwrap().to_string(),
-                );
+                // non-UTF8 stems can't correspond to a [[test]] entry (the
+                // manifest is UTF-8); skip rather than unwrap-panic on them
+                match path.file_stem().and_then(|s| s.to_str()) {
+                    Some(stem) => {
+                        files.insert(stem.to_string());
+                    }
+                    None => continue,
+                }
             }
         }
         let missing: Vec<_> = files.difference(&registered).collect();

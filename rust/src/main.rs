@@ -2,17 +2,25 @@
 //!
 //! Subcommands:
 //!   train       real 1F1B pipeline training over the AOT artifacts
+//!   serve       forward-only batched inference (closed loop: --loadgen)
 //!   sweep       regenerate Table 2 (throughput, 13 configurations)
 //!   breakdown   regenerate Tables 1 & 3 (forward-time components)
 //!   simulate    simulate one (model, parallel) point
 //!   verify-tp   run the real TP×EP MoE layer and check numerics
 //!   info        print manifest / artifact inventory
+//!
+//! Every subcommand validates its `--keys` against its known set
+//! ([`Args::validate_known`]) — a typo'd knob is a hard error with a
+//! "did you mean" hint, never a silently-applied default.
 
 use std::path::PathBuf;
 
 use ppmoe::config::{self, Scheme};
-use ppmoe::coordinator::{tables, Args};
+use ppmoe::coordinator::{tables, Args, COMMON_FLAGS};
 use ppmoe::pipeline::Schedule;
+use ppmoe::serve::forward::{DispatchMode, ManifestForward};
+use ppmoe::serve::{BatchPolicy, LoadgenCfg, StubDims, StubForward};
+use ppmoe::sim::arrival::ArrivalKind;
 use ppmoe::trainer::{self, TrainerCfg};
 
 const USAGE: &str = "\
@@ -75,6 +83,26 @@ COMMANDS:
                 --heartbeat-timeout-ms T
                                   promote a stall into a failure once
                                   EVERY live worker is >T ms silent
+  serve       forward-only batched inference over the segment walk
+                --loadgen         closed-loop load generator (required for
+                                  now: no network listener yet); sweeps
+                                  uniform/zipf/bursty arrival mixes and
+                                  writes BENCH_serve.json
+                --artifacts DIR   shape the server like this export and,
+                                  with a real PJRT backend, serve the live
+                                  manifest tier (default: artifacts; falls
+                                  back to the built-in tiny geometry when
+                                  absent)
+                --requests N      requests per mix (default: 256)
+                --max-batch N     continuous-batching slot cap (default: 8)
+                --max-wait-us U   longest the oldest request waits for its
+                                  batch to fill (default: 800)
+                --arrival MIX     restrict to one mix: uniform|zipf|bursty
+                --mean-gap-us U   mean inter-arrival gap (default: 400)
+                --seed N          arrival + token seed (default: 42)
+                --bench-out PATH  where to write the bench JSON
+                                  (default: BENCH_serve.json)
+                --tp N            live tier only: tp lanes per stage
   sweep       print Table 2 (simulated throughput, 13 rows)
   breakdown   print Tables 1 and 3 (simulated forward breakdowns)
   simulate    one point: --model NAME --dp N --tp N --pp N
@@ -104,8 +132,9 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
     let result = match cmd {
         "train" => cmd_train(&args),
-        "sweep" => cmd_sweep(),
-        "breakdown" => cmd_breakdown(),
+        "serve" => cmd_serve(&args),
+        "sweep" => cmd_sweep(&args),
+        "breakdown" => cmd_breakdown(&args),
         "simulate" => cmd_simulate(&args),
         "verify-tp" => cmd_verify_tp(&args),
         "info" => cmd_info(&args),
@@ -128,7 +157,36 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
 }
 
+/// A command's boolean-flag set: its own switches plus [`COMMON_FLAGS`].
+fn with_common(extra: &[&'static str]) -> Vec<&'static str> {
+    extra.iter().chain(COMMON_FLAGS.iter()).copied().collect()
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    args.validate_known(
+        "train",
+        &[
+            "artifacts",
+            "steps",
+            "micro",
+            "lr",
+            "seed",
+            "log-every",
+            "virtual",
+            "warmup",
+            "checkpoint",
+            "resume",
+            "dp",
+            "tp",
+            "top-k",
+            "fault",
+            "heartbeat-timeout-ms",
+            "checkpoint-every",
+            "max-recoveries",
+            "retry-backoff-ms",
+        ],
+        &with_common(&["gpipe", "no-overlap", "no-dp-overlap", "elastic"]),
+    )?;
     let cfg = TrainerCfg {
         artifacts: artifacts_dir(args),
         steps: args.get_usize("steps", 50)?,
@@ -195,13 +253,76 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep() -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    args.validate_known(
+        "serve",
+        &[
+            "artifacts",
+            "requests",
+            "max-batch",
+            "max-wait-us",
+            "arrival",
+            "mean-gap-us",
+            "seed",
+            "bench-out",
+            "tp",
+        ],
+        &with_common(&["loadgen"]),
+    )?;
+    anyhow::ensure!(
+        args.has_flag("loadgen"),
+        "serve currently runs closed-loop only: pass --loadgen (a network \
+         listener is a follow-up; see docs/serving.md)"
+    );
+    let cfg = LoadgenCfg {
+        requests: args.get_usize("requests", 256)?,
+        mean_gap_us: args.get_usize("mean-gap-us", 400)? as u64,
+        seed: args.get_usize("seed", 42)? as u64,
+        policy: BatchPolicy {
+            max_batch: args.get_usize("max-batch", 8)?.max(1),
+            max_wait_us: args.get_usize("max-wait-us", 800)? as u64,
+        },
+        bench_out: Some(PathBuf::from(args.get("bench-out").unwrap_or("BENCH_serve.json"))),
+        mixes: match args.get("arrival") {
+            Some(s) => vec![ArrivalKind::parse(s)?],
+            None => ArrivalKind::ALL.to_vec(),
+        },
+    };
+    let dir = artifacts_dir(args);
+    let manifest_path = dir.join("manifest.json");
+    let (dims, live) = if manifest_path.exists() {
+        let m = ppmoe::runtime::Manifest::load(&manifest_path)?;
+        let dims = StubDims::from_model(&m.model);
+        if xla::backend_available() {
+            let tp = args.get_usize("tp", m.tp.max(1))?;
+            (dims, Some(ManifestForward::open(&dir, tp)?))
+        } else {
+            println!(
+                "note: no PJRT backend — serving the stub tier shaped like '{}'",
+                m.model.config_name
+            );
+            (dims, None)
+        }
+    } else {
+        (StubDims::tiny(), None)
+    };
+    let mut fm: Box<dyn ppmoe::serve::ForwardModel> = match live {
+        Some(m) => Box::new(m),
+        None => Box::new(StubForward::new(dims, DispatchMode::IndexSlice)),
+    };
+    ppmoe::serve::loadgen::run_loadgen(fm.as_mut(), dims, &cfg)?;
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    args.validate_known("sweep", &[], &with_common(&[]))?;
     println!("Table 2 — training throughput (simulated, paper constants)\n");
     print!("{}", tables::table2_markdown()?);
     Ok(())
 }
 
-fn cmd_breakdown() -> anyhow::Result<()> {
+fn cmd_breakdown(args: &Args) -> anyhow::Result<()> {
+    args.validate_known("breakdown", &[], &with_common(&[]))?;
     println!("Table 1 — DPMoE forward breakdown (simulated)\n");
     print!("{}", tables::table1_markdown()?);
     println!("\nTable 3 — PPMoE forward breakdown (simulated)\n");
@@ -210,6 +331,11 @@ fn cmd_breakdown() -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    args.validate_known(
+        "simulate",
+        &["model", "top-k", "scheme", "dp", "tp", "pp", "gpus", "mttf", "ckpt-every"],
+        &with_common(&["zero", "overlap-dp"]),
+    )?;
     let mut model = config::model_preset(args.get("model").unwrap_or("moe-small"))?;
     let top_k = args.get_usize("top-k", 0)?;
     if top_k > 0 {
@@ -318,6 +444,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_verify_tp(args: &Args) -> anyhow::Result<()> {
+    args.validate_known("verify-tp", &["artifacts", "seed"], &with_common(&[]))?;
     let dir = artifacts_dir(args);
     let seed = args.get_usize("seed", 0)? as u64;
     let r = ppmoe::tp::run_tp_moe(&dir, seed)?;
@@ -337,6 +464,7 @@ fn cmd_verify_tp(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    args.validate_known("info", &["artifacts"], &with_common(&[]))?;
     let dir = artifacts_dir(args);
     let m = ppmoe::runtime::Manifest::load(&dir.join("manifest.json"))?;
     println!("config: {} (stages={}, tp={})", m.model.config_name, m.model.stages, m.tp);

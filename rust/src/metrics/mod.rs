@@ -46,6 +46,54 @@ impl RecoveryCounters {
     }
 }
 
+/// Serving-path counters: request admission/completion, batch assembly and
+/// per-request routing outcomes aggregated by the forward-only engine
+/// (`serve/`; docs/serving.md). Same discipline as [`RecoveryCounters`]:
+/// relaxed atomics, observability only, never control flow.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Requests admitted into the queue.
+    pub requests_admitted: AtomicU64,
+    /// Requests whose output rows were produced.
+    pub requests_completed: AtomicU64,
+    /// Forward batches launched.
+    pub batches_launched: AtomicU64,
+    /// Microbatch slots actually filled across launched batches.
+    pub batch_slots_filled: AtomicU64,
+    /// Tokens that went through the forward walk.
+    pub tokens_served: AtomicU64,
+    /// (token, level) assignments dropped at expert capacity.
+    pub assignments_dropped: AtomicU64,
+}
+
+impl ServeCounters {
+    /// `(name, value)` rows for logging/tests, in a fixed order.
+    pub fn snapshot(&self) -> [(&'static str, u64); 6] {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        [
+            ("requests_admitted", g(&self.requests_admitted)),
+            ("requests_completed", g(&self.requests_completed)),
+            ("batches_launched", g(&self.batches_launched)),
+            ("batch_slots_filled", g(&self.batch_slots_filled)),
+            ("tokens_served", g(&self.tokens_served)),
+            ("assignments_dropped", g(&self.assignments_dropped)),
+        ]
+    }
+}
+
+/// The process-wide [`ServeCounters`] instance.
+pub fn serving() -> &'static ServeCounters {
+    static COUNTERS: ServeCounters = ServeCounters {
+        requests_admitted: AtomicU64::new(0),
+        requests_completed: AtomicU64::new(0),
+        batches_launched: AtomicU64::new(0),
+        batch_slots_filled: AtomicU64::new(0),
+        tokens_served: AtomicU64::new(0),
+        assignments_dropped: AtomicU64::new(0),
+    };
+    &COUNTERS
+}
+
 /// The process-wide [`RecoveryCounters`] instance.
 pub fn recovery() -> &'static RecoveryCounters {
     static COUNTERS: RecoveryCounters = RecoveryCounters {
@@ -278,6 +326,19 @@ mod tests {
         let before = recovery().recovery_attempts.load(Ordering::Relaxed);
         recovery().recovery_attempts.fetch_add(1, Ordering::Relaxed);
         assert!(recovery().recovery_attempts.load(Ordering::Relaxed) > before);
+    }
+
+    #[test]
+    fn serve_counters_snapshot() {
+        let c = ServeCounters::default();
+        c.requests_admitted.fetch_add(3, Ordering::Relaxed);
+        c.assignments_dropped.fetch_add(5, Ordering::Relaxed);
+        let snap = c.snapshot();
+        assert_eq!(snap[0], ("requests_admitted", 3));
+        assert_eq!(snap[5], ("assignments_dropped", 5));
+        let before = serving().batches_launched.load(Ordering::Relaxed);
+        serving().batches_launched.fetch_add(1, Ordering::Relaxed);
+        assert!(serving().batches_launched.load(Ordering::Relaxed) > before);
     }
 
     #[test]

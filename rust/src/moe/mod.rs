@@ -310,6 +310,67 @@ impl TopkRouting {
             .max()
             .unwrap_or(0)
     }
+
+    /// Per-request routing statistics over a contiguous token range of
+    /// this (possibly batched) routing decision — the serving engine's
+    /// drop accounting: a continuous batch routes many requests' rows
+    /// through one `TopkRouting`, and each completion reports the stats of
+    /// *its own* token slice (`serve::RequestStats`).
+    pub fn stats_for_tokens(&self, start: usize, end: usize) -> RouteStats {
+        let end = end.min(self.tokens());
+        let start = start.min(end);
+        let mut experts = vec![false; self.num_experts];
+        let mut dropped = 0usize;
+        let mut entropy_sum = 0.0f64;
+        for t in start..end {
+            let base = t * self.k;
+            let mut gate_sum = 0.0f64;
+            for lvl in 0..self.k {
+                let i = base + lvl;
+                if self.dropped[i] {
+                    dropped += 1;
+                } else {
+                    experts[self.expert[i] as usize] = true;
+                }
+                gate_sum += self.gate[i] as f64;
+            }
+            // top-k gate entropy (nats) over the token's renormalized
+            // winner distribution: 0 = confident single expert, ln(k) =
+            // maximally split gates
+            if gate_sum > 0.0 {
+                let mut h = 0.0f64;
+                for lvl in 0..self.k {
+                    let p = self.gate[base + lvl] as f64 / gate_sum;
+                    if p > 0.0 {
+                        h -= p * p.ln();
+                    }
+                }
+                entropy_sum += h;
+            }
+        }
+        let tokens = end - start;
+        RouteStats {
+            tokens,
+            experts_hit: experts.iter().filter(|e| **e).count(),
+            assignments_dropped: dropped,
+            gate_entropy: entropy_sum / tokens.max(1) as f64,
+        }
+    }
+}
+
+/// Routing statistics for one token slice of a (batched) routing decision
+/// — what `serve` surfaces per request ([`TopkRouting::stats_for_tokens`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RouteStats {
+    /// Tokens in the slice.
+    pub tokens: usize,
+    /// Distinct experts that accepted at least one of the slice's
+    /// assignments.
+    pub experts_hit: usize,
+    /// (token, level) assignments dropped at capacity within the slice.
+    pub assignments_dropped: usize,
+    /// Mean per-token top-k gate entropy (nats; 0 at k = 1).
+    pub gate_entropy: f64,
 }
 
 impl Routing {
@@ -644,6 +705,35 @@ mod tests {
             assert_eq!(a.slot, b.slot);
             assert_eq!(a.dropped, b.dropped);
         }
+    }
+
+    #[test]
+    fn per_request_stats_slice_a_batched_routing() {
+        // the drop-order fixture above: E = 2, k = 2, capacity = 2, every
+        // token prefers e0 then e1 → tokens 0-1 fully accepted, 2-4 fully
+        // dropped. Treat tokens [0,2) and [2,5) as two "requests".
+        let logits: Vec<f32> = (0..5).flat_map(|_| vec![2.0, 1.0]).collect();
+        let rt = route_topk(&logits, 2, 2, 2, DropPolicy::Drop);
+        let a = rt.stats_for_tokens(0, 2);
+        assert_eq!((a.tokens, a.experts_hit, a.assignments_dropped), (2, 2, 0));
+        let b = rt.stats_for_tokens(2, 5);
+        assert_eq!((b.tokens, b.experts_hit, b.assignments_dropped), (3, 0, 6));
+        // entropy: renormalized top-2 gates are identical for every token,
+        // so both slices report the same per-token entropy, 0 < H <= ln 2
+        assert!((a.gate_entropy - b.gate_entropy).abs() < 1e-12);
+        assert!(a.gate_entropy > 0.0 && a.gate_entropy <= 2.0f64.ln() + 1e-12);
+        // whole-batch slice is consistent with drop_fraction
+        let whole = rt.stats_for_tokens(0, rt.tokens());
+        assert_eq!(
+            whole.assignments_dropped,
+            (rt.drop_fraction() * rt.expert.len() as f64).round() as usize
+        );
+        // a confident k=1 routing has zero gate entropy
+        let one = route_topk(&logits, 2, 8, 1, DropPolicy::Drop);
+        assert_eq!(one.stats_for_tokens(0, 5).gate_entropy, 0.0);
+        // out-of-range slices clamp instead of panicking
+        let empty = rt.stats_for_tokens(7, 9);
+        assert_eq!((empty.tokens, empty.gate_entropy), (0, 0.0));
     }
 
     #[test]

@@ -106,6 +106,15 @@ pub struct ModelInfo {
     pub capacity_factor: f64,
 }
 
+impl ModelInfo {
+    /// Tokens in one compiled microbatch (`micro_batch · seq`) — the hard
+    /// shape every forward launch must fill (serving pads partial batches
+    /// up to it).
+    pub fn tokens_per_micro(&self) -> usize {
+        self.micro_batch * self.seq
+    }
+}
+
 /// One virtual chunk of a pipeline stage: the artifacts that execute it and
 /// how many of the stage's parameter tensors it owns. Chunks partition the
 /// stage's parameter list *in order* — chunk c owns the contiguous run

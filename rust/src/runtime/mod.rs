@@ -16,8 +16,8 @@ pub mod tensor;
 
 pub use device::DeviceTensor;
 pub use manifest::{
-    ArtifactSpec, ChunkSpec, DType, GradClass, Manifest, ParamSpec, SegKind, SegSpec,
-    StageParams, TensorSpec, TpExec, TpStageView,
+    ArtifactSpec, ChunkSpec, DType, GradClass, Manifest, ModelInfo, ParamSpec, SegKind,
+    SegSpec, StageParams, TensorSpec, TpExec, TpStageView,
 };
 pub use tensor::Tensor;
 

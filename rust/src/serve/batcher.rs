@@ -1,0 +1,124 @@
+//! Batch assembly: the continuous-batching policy.
+//!
+//! The engine calls [`assemble`] every time the virtual clock stops —
+//! after admitting arrivals and after every forward completes (which is
+//! when microbatch slots free). The decision is a pure function of
+//! `(queue contents, now, more_coming, policy)`, which is what makes batch
+//! composition reproducible from the arrival trace alone.
+//!
+//! Policy: launch as soon as `max_batch` slots can be filled; otherwise
+//! hold a partial batch only until its *oldest* request has waited
+//! `max_wait_us` (the latency the operator is willing to spend buying
+//! throughput). When no further arrivals can ever come, waiting is
+//! pointless and partial batches launch immediately — the closed-loop
+//! bench drains cleanly instead of paying one final max-wait.
+
+use super::queue::{Request, RequestQueue};
+
+/// The two knobs of the assembly policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Most requests per forward batch (clamped to the model's microbatch
+    /// capacity by the engine).
+    pub max_batch: usize,
+    /// Longest the oldest waiting request may be held back to let the
+    /// batch fill, µs. 0 = never wait (every launch takes whatever is
+    /// queued right now).
+    pub max_wait_us: u64,
+}
+
+/// What the engine should do at this instant.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Run a forward over these requests (oldest-first, ≤ max_batch).
+    Launch(Vec<Request>),
+    /// Hold: re-assemble at this virtual time (the head's wait deadline)
+    /// or at the next arrival, whichever comes first.
+    WaitUntil(u64),
+    /// Queue empty: sleep until the next arrival (or finish).
+    Idle,
+}
+
+/// Decide the next action. `more_coming` is whether the arrival trace has
+/// requests the engine hasn't admitted yet.
+pub fn assemble(
+    queue: &mut RequestQueue,
+    now_us: u64,
+    more_coming: bool,
+    policy: &BatchPolicy,
+) -> Decision {
+    let max_batch = policy.max_batch.max(1);
+    if queue.is_empty() {
+        return Decision::Idle;
+    }
+    if queue.len() >= max_batch {
+        return Decision::Launch(queue.pop_n(max_batch));
+    }
+    let deadline = queue.head_arrival().expect("non-empty queue") + policy.max_wait_us;
+    if now_us >= deadline || !more_coming {
+        return Decision::Launch(queue.pop_n(max_batch));
+    }
+    Decision::WaitUntil(deadline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue(arrivals: &[u64]) -> RequestQueue {
+        let mut q = RequestQueue::new();
+        for (i, at) in arrivals.iter().enumerate() {
+            q.push(Request { id: i as u64, arrival_us: *at, tokens: vec![0; 2] });
+        }
+        q
+    }
+
+    const POLICY: BatchPolicy = BatchPolicy { max_batch: 4, max_wait_us: 100 };
+
+    #[test]
+    fn full_batch_launches_immediately() {
+        let mut q = queue(&[0, 1, 2, 3, 4]);
+        match assemble(&mut q, 5, true, &POLICY) {
+            Decision::Launch(b) => {
+                assert_eq!(b.len(), 4, "clamped to max_batch");
+                assert_eq!(b[0].id, 0, "oldest first");
+            }
+            other => panic!("expected launch, got {other:?}"),
+        }
+        assert_eq!(q.len(), 1, "overflow stays queued");
+    }
+
+    #[test]
+    fn partial_batch_waits_for_the_heads_deadline() {
+        let mut q = queue(&[10, 20]);
+        // head arrived at 10, deadline 110: at t=50 hold ...
+        assert_eq!(assemble(&mut q, 50, true, &POLICY), Decision::WaitUntil(110));
+        // ... at the deadline, launch what's there
+        match assemble(&mut q, 110, true, &POLICY) {
+            Decision::Launch(b) => assert_eq!(b.len(), 2),
+            other => panic!("expected launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_future_arrivals_flushes_partials() {
+        let mut q = queue(&[10]);
+        match assemble(&mut q, 11, false, &POLICY) {
+            Decision::Launch(b) => assert_eq!(b.len(), 1),
+            other => panic!("expected flush, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_wait_never_holds() {
+        let mut q = queue(&[10]);
+        let p = BatchPolicy { max_batch: 8, max_wait_us: 0 };
+        assert!(matches!(assemble(&mut q, 10, true, &p), Decision::Launch(_)));
+    }
+
+    #[test]
+    fn empty_queue_idles() {
+        let mut q = RequestQueue::new();
+        assert_eq!(assemble(&mut q, 0, true, &POLICY), Decision::Idle);
+    }
+}

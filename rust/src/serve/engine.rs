@@ -1,0 +1,362 @@
+//! The virtual-clock serving engine.
+//!
+//! [`run_trace`] drives a [`ForwardModel`] over a fixed arrival trace:
+//! admit arrivals whose time has come, ask the [`batcher`](super::batcher)
+//! what to do, run forwards, stamp per-request latencies, recycle output
+//! slabs. Time is **virtual microseconds**: the clock advances to arrival
+//! times and by the [`ServiceModel`]'s per-batch cost, never by wall
+//! time — so a run is a pure function of (trace, policy, model), byte for
+//! byte, on any machine. Continuous batching falls out of the event loop:
+//! the instant a forward completes its microbatch slots free, and
+//! everything that arrived during the service interval is eligible for
+//! the very next batch.
+//!
+//! [`run_serial`] is the reference the equivalence discipline measures
+//! against: the same requests, one per batch, no waiting. The contract
+//! (docs/serving.md, rust/tests/serve_equivalence.rs): identical output
+//! bits per request.
+
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+
+use super::batcher::{assemble, BatchPolicy, Decision};
+use super::forward::ForwardModel;
+use super::queue::{Request, RequestQueue};
+use super::stats::{row_checksum, RequestStats};
+use crate::sim::arrival::ServiceModel;
+use crate::trainer::pool::LocalSlabPool;
+
+/// Engine configuration for one run.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineCfg {
+    /// Batch assembly knobs.
+    pub policy: BatchPolicy,
+    /// Virtual service-time model (advances the clock per batch).
+    pub service: ServiceModel,
+    /// Keep full output rows on completions (the equivalence tests need
+    /// them). The closed-loop bench sets this false: outputs are reduced
+    /// to a checksum and their slabs recycled immediately, which is what
+    /// lets the pool counters certify a zero-alloc steady state.
+    pub keep_outputs: bool,
+}
+
+/// One finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// The request's id.
+    pub id: u64,
+    /// Virtual arrival time, µs.
+    pub arrival_us: u64,
+    /// Virtual time its batch launched, µs.
+    pub launch_us: u64,
+    /// Virtual completion time, µs (latency = done − arrival).
+    pub done_us: u64,
+    /// How many requests shared its batch.
+    pub batch_size: usize,
+    /// Routing outcome of this request's rows.
+    pub stats: RequestStats,
+    /// Order-sensitive checksum of the output row (always present).
+    pub checksum: u64,
+    /// The output row itself (when `keep_outputs`).
+    pub output: Option<Vec<f32>>,
+}
+
+impl Completion {
+    /// Queueing + service latency on the virtual clock, µs.
+    pub fn latency_us(&self) -> u64 {
+        self.done_us - self.arrival_us
+    }
+}
+
+/// Everything one engine run produced.
+#[derive(Debug)]
+pub struct ServeRun {
+    /// Per-request completions, in completion order (FIFO within a batch).
+    pub completions: Vec<Completion>,
+    /// Forward batches launched.
+    pub batches: u64,
+    /// Requests summed over launched batches.
+    pub slots_filled: u64,
+    /// Virtual time the last batch finished, µs.
+    pub makespan_us: u64,
+    /// Output-slab pool counters at the end of the run: (hits, misses,
+    /// prefilled) — `misses` stops growing once the pool reaches the
+    /// policy's peak in-flight batch size.
+    pub pool_counters: (u64, u64, u64),
+}
+
+impl ServeRun {
+    /// Total tokens served.
+    pub fn tokens(&self) -> u64 {
+        self.completions.iter().map(|c| c.stats.tokens as u64).sum()
+    }
+
+    /// Virtual-throughput in tokens/s (tokens over makespan).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.makespan_us == 0 {
+            return 0.0;
+        }
+        self.tokens() as f64 * 1e6 / self.makespan_us as f64
+    }
+
+    /// Mean batch fill (slots filled / batches / max-batch ∈ (0, 1]).
+    pub fn mean_fill(&self, max_batch: usize) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.slots_filled as f64 / self.batches as f64 / max_batch.max(1) as f64
+    }
+}
+
+/// Drive `fm` over `requests` (any order; sorted by arrival internally,
+/// ties broken by id — both deterministic).
+pub fn run_trace(
+    fm: &mut dyn ForwardModel,
+    mut requests: Vec<Request>,
+    cfg: &EngineCfg,
+) -> Result<ServeRun> {
+    requests.sort_by_key(|r| (r.arrival_us, r.id));
+    let policy = BatchPolicy {
+        max_batch: cfg.policy.max_batch.clamp(1, fm.max_batch()),
+        max_wait_us: cfg.policy.max_wait_us,
+    };
+    let counters = crate::metrics::serving();
+    let mut pool = LocalSlabPool::new();
+    pool.prefill(policy.max_batch, fm.out_elems());
+    let mut queue = RequestQueue::new();
+    let mut completions = Vec::with_capacity(requests.len());
+    let (mut batches, mut slots_filled) = (0u64, 0u64);
+    let mut now_us = 0u64;
+    let mut next = 0usize;
+
+    loop {
+        while next < requests.len() && requests[next].arrival_us <= now_us {
+            queue.push(requests[next].clone());
+            counters.requests_admitted.fetch_add(1, Ordering::Relaxed);
+            next += 1;
+        }
+        let more_coming = next < requests.len();
+        match assemble(&mut queue, now_us, more_coming, &policy) {
+            Decision::Launch(batch) => {
+                let launch_us = now_us;
+                let rows: Vec<&[u32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+                let mut outs: Vec<Vec<f32>> =
+                    batch.iter().map(|_| pool.take(fm.out_elems())).collect();
+                let stats = fm.forward(&rows, &mut outs)?;
+                let tokens: usize = rows.iter().map(|r| r.len()).sum();
+                now_us += cfg.service.service_us(tokens);
+                batches += 1;
+                slots_filled += batch.len() as u64;
+                counters.batches_launched.fetch_add(1, Ordering::Relaxed);
+                counters.batch_slots_filled.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                counters.tokens_served.fetch_add(tokens as u64, Ordering::Relaxed);
+                let batch_size = batch.len();
+                for ((req, out), st) in batch.into_iter().zip(outs).zip(stats) {
+                    counters.requests_completed.fetch_add(1, Ordering::Relaxed);
+                    counters
+                        .assignments_dropped
+                        .fetch_add(st.assignments_dropped as u64, Ordering::Relaxed);
+                    let checksum = row_checksum(&out);
+                    let output = if cfg.keep_outputs {
+                        Some(out)
+                    } else {
+                        pool.put(out);
+                        None
+                    };
+                    completions.push(Completion {
+                        id: req.id,
+                        arrival_us: req.arrival_us,
+                        launch_us,
+                        done_us: now_us,
+                        batch_size,
+                        stats: st,
+                        checksum,
+                        output,
+                    });
+                }
+            }
+            Decision::WaitUntil(deadline) => {
+                // jump to whichever event lands first: the head's wait
+                // deadline or the next arrival (which may fill the batch)
+                now_us = match requests.get(next) {
+                    Some(r) if r.arrival_us < deadline => r.arrival_us,
+                    _ => deadline,
+                };
+            }
+            Decision::Idle => {
+                if more_coming {
+                    now_us = requests[next].arrival_us;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    Ok(ServeRun {
+        completions,
+        batches,
+        slots_filled,
+        makespan_us: now_us,
+        pool_counters: (pool.hits, pool.misses, pool.prefilled),
+    })
+}
+
+/// The serial reference: every request in its own batch, launched the
+/// instant it is the head of the queue. Output bits per request define
+/// correctness for [`run_trace`] at any policy.
+pub fn run_serial(
+    fm: &mut dyn ForwardModel,
+    requests: Vec<Request>,
+    service: ServiceModel,
+) -> Result<ServeRun> {
+    run_trace(
+        fm,
+        requests,
+        &EngineCfg {
+            policy: BatchPolicy { max_batch: 1, max_wait_us: 0 },
+            service,
+            keep_outputs: true,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::forward::{DispatchMode, StubDims, StubForward};
+    use crate::sim::arrival::{arrival_trace, ArrivalKind};
+
+    fn requests(seed: u64, n: usize, d: &StubDims, mean_gap: u64) -> Vec<Request> {
+        let trace = arrival_trace(ArrivalKind::Uniform, n, mean_gap, seed);
+        let mut rng = crate::util::prng::Rng::new(seed ^ 0xF00D);
+        trace
+            .into_iter()
+            .enumerate()
+            .map(|(i, at)| Request {
+                id: i as u64,
+                arrival_us: at,
+                tokens: (0..d.seq).map(|_| rng.below(d.vocab) as u32).collect(),
+            })
+            .collect()
+    }
+
+    fn cfg(max_batch: usize, max_wait_us: u64) -> EngineCfg {
+        EngineCfg {
+            policy: BatchPolicy { max_batch, max_wait_us },
+            service: ServiceModel::cpu_stub(),
+            keep_outputs: true,
+        }
+    }
+
+    #[test]
+    fn every_request_completes_exactly_once() {
+        let d = StubDims::tiny();
+        let reqs = requests(5, 23, &d, 300);
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let run = run_trace(&mut fm, reqs, &cfg(4, 500)).unwrap();
+        let mut ids: Vec<u64> = run.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..23).collect::<Vec<u64>>());
+        assert_eq!(run.slots_filled, 23);
+        assert!(run.batches <= 23);
+        // latencies are sane: done after launch after (or at) arrival
+        for c in &run.completions {
+            assert!(c.arrival_us <= c.launch_us && c.launch_us < c.done_us);
+            assert!(c.batch_size >= 1 && c.batch_size <= 4);
+        }
+    }
+
+    #[test]
+    fn run_is_bit_reproducible() {
+        let d = StubDims::tiny();
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let a = run_trace(&mut fm, requests(9, 17, &d, 200), &cfg(3, 400)).unwrap();
+        let b = run_trace(&mut fm, requests(9, 17, &d, 200), &cfg(3, 400)).unwrap();
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.makespan_us, b.makespan_us);
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(
+                (x.id, x.launch_us, x.done_us, x.checksum),
+                (y.id, y.launch_us, y.done_us, y.checksum)
+            );
+            assert_eq!(x.output, y.output, "bitwise rerun equality");
+        }
+    }
+
+    #[test]
+    fn batched_outputs_match_serial_reference_bitwise() {
+        // the tentpole contract in miniature (the property sweep lives in
+        // rust/tests/serve_equivalence.rs)
+        let d = StubDims::tiny();
+        let reqs = requests(13, 19, &d, 150);
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let batched = run_trace(&mut fm, reqs.clone(), &cfg(5, 800)).unwrap();
+        let mut fm2 = StubForward::new(d, DispatchMode::IndexSlice);
+        let serial = run_serial(&mut fm2, reqs, ServiceModel::cpu_stub()).unwrap();
+        let by_id = |run: &ServeRun| {
+            let mut v: Vec<(u64, Option<Vec<f32>>)> =
+                run.completions.iter().map(|c| (c.id, c.output.clone())).collect();
+            v.sort_by_key(|(id, _)| *id);
+            v
+        };
+        assert_eq!(by_id(&batched), by_id(&serial));
+        assert!(batched.batches < serial.batches, "batching actually batched");
+    }
+
+    #[test]
+    fn recycling_reaches_zero_alloc_steady_state() {
+        let d = StubDims::tiny();
+        let reqs = requests(21, 64, &d, 100);
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let run = run_trace(
+            &mut fm,
+            reqs,
+            &EngineCfg {
+                policy: BatchPolicy { max_batch: 4, max_wait_us: 200 },
+                service: ServiceModel::cpu_stub(),
+                keep_outputs: false, // slabs recycle per batch
+            },
+        )
+        .unwrap();
+        let (hits, misses, prefilled) = run.pool_counters;
+        assert_eq!(prefilled, 4, "pool pre-seeds max_batch slabs");
+        assert_eq!(misses, 0, "recycling engine allocates nothing at take time");
+        assert!(hits > 0);
+        assert!(run.completions.iter().all(|c| c.output.is_none()));
+        // checksums still present for the bench's equivalence spot-check
+        assert!(run.completions.iter().all(|c| c.checksum != 0));
+    }
+
+    #[test]
+    fn max_batch_clamps_to_the_models_capacity() {
+        struct Tiny(StubForward);
+        impl ForwardModel for Tiny {
+            fn seq(&self) -> usize {
+                self.0.seq()
+            }
+            fn out_elems(&self) -> usize {
+                self.0.out_elems()
+            }
+            fn max_batch(&self) -> usize {
+                2 // a compiled microbatch of 2
+            }
+            fn label(&self) -> &'static str {
+                "tiny"
+            }
+            fn forward(
+                &mut self,
+                batch: &[&[u32]],
+                outs: &mut [Vec<f32>],
+            ) -> Result<Vec<RequestStats>> {
+                assert!(batch.len() <= 2, "engine must respect the model cap");
+                self.0.forward(batch, outs)
+            }
+        }
+        let d = StubDims::tiny();
+        let reqs = requests(3, 11, &d, 50);
+        let mut fm = Tiny(StubForward::new(d, DispatchMode::IndexSlice));
+        let run = run_trace(&mut fm, reqs, &cfg(16, 100)).unwrap();
+        assert!(run.completions.iter().all(|c| c.batch_size <= 2));
+    }
+}

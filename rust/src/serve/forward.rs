@@ -1,0 +1,611 @@
+//! The serving forward contract and its two tiers.
+//!
+//! [`ForwardModel`] is what the engine drives: "turn a batch of token rows
+//! into one output row per request, plus per-request routing stats". Two
+//! implementations:
+//!
+//! * [`StubForward`] — a deterministic pure-Rust model with the *shape* of
+//!   the segment walk (glue mix → router → top-k dispatch → expert FFN →
+//!   gate-weighted combine, with a residual). It exists so the whole
+//!   engine — queue, batcher, slab recycling, stats plumbing — is
+//!   property-testable in today's backend-less CI, and it carries the
+//!   index-slice-vs-dense dispatch A/B: both [`DispatchMode`]s compute
+//!   bit-identical outputs (same per-token math, same level-order
+//!   combine), they only differ in iteration order — grouped per expert
+//!   (the paper's index-slice slab walk) vs per token (the dense
+//!   reference).
+//! * [`ManifestForward`] — the live tier: `Manifest::stage_view` views,
+//!   staged parameters, and the same Glue/Moe/LossTail walk the trainer
+//!   runs, forward arms only. Requires the real PJRT backend
+//!   (`xla::backend_available()`); under the vendored stub it refuses to
+//!   open with a remediation hint, which is what lets the serving tests
+//!   self-skip the live tier exactly like the training suite does.
+//!
+//! **Row independence is the load-bearing invariant.** Routing is
+//! per-request (each request's capacity is computed over its own tokens)
+//! and every transform is row-local, so a request's output bits cannot
+//! depend on who it shares a batch with — the foundation of the
+//! batched-vs-serial bitwise equivalence contract (docs/serving.md).
+
+use anyhow::{bail, Context, Result};
+
+use super::stats::RequestStats;
+use crate::moe::{route_topk, DropPolicy};
+use crate::runtime::{Executable, ModelInfo, Runtime, SegKind, Tensor, TpStageView};
+
+/// What the engine needs from a model: fixed request geometry plus a
+/// batched forward.
+pub trait ForwardModel {
+    /// Tokens per request (the model's sequence length).
+    fn seq(&self) -> usize;
+    /// Elements in one request's output row.
+    fn out_elems(&self) -> usize;
+    /// Hard per-forward batch cap (the live tier's compiled microbatch;
+    /// effectively unbounded for the stub).
+    fn max_batch(&self) -> usize;
+    /// Stable label for logs and bench rows.
+    fn label(&self) -> &'static str;
+    /// Run the forward over `batch` (each row `seq()` token ids), filling
+    /// `outs[i]` (cleared slabs from the engine's pool) with request `i`'s
+    /// `out_elems()` output values. Returns per-request routing stats.
+    fn forward(&mut self, batch: &[&[u32]], outs: &mut [Vec<f32>]) -> Result<Vec<RequestStats>>;
+}
+
+/// Which dispatch path [`StubForward`] runs — the serving-side A/B of the
+/// paper's central claim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Group accepted assignments per expert and walk each expert's slab
+    /// once (§3.3.3's zero-wire index-slice dispatch).
+    IndexSlice,
+    /// Visit every (token, level) in token order, computing its expert
+    /// directly — the all-to-all-shaped reference.
+    Dense,
+}
+
+/// Stub model geometry (defaults mirror the `tiny` AOT config).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StubDims {
+    /// Hidden width h.
+    pub hidden: usize,
+    /// Transformer layers L.
+    pub layers: usize,
+    /// MoE on every `moe_every`-th layer (0 = never).
+    pub moe_every: usize,
+    /// Expert count E.
+    pub experts: usize,
+    /// Experts per token k.
+    pub top_k: usize,
+    /// Capacity factor over perfect balance.
+    pub capacity_factor: f64,
+    /// Sequence length s.
+    pub seq: usize,
+    /// Vocabulary size (token ids are taken modulo this).
+    pub vocab: usize,
+}
+
+impl StubDims {
+    /// The default contract-tier geometry: small enough that a property
+    /// sweep is fast, big enough that capacity drops actually fire.
+    pub fn tiny() -> Self {
+        StubDims {
+            hidden: 16,
+            layers: 4,
+            moe_every: 2,
+            experts: 4,
+            top_k: 2,
+            capacity_factor: 1.25,
+            seq: 8,
+            vocab: 64,
+        }
+    }
+
+    /// Stub geometry shaped like a manifest's model — what `ppmoe serve`
+    /// uses when artifacts are present but the real backend is not, so the
+    /// stub tier's batch shapes (and the oracle volume rows) match the
+    /// export. `moe_every` is not recorded in the manifest; the export
+    /// convention is every other layer.
+    pub fn from_model(m: &ModelInfo) -> Self {
+        StubDims {
+            hidden: m.hidden,
+            layers: m.layers,
+            moe_every: 2,
+            experts: m.experts,
+            top_k: m.top_k.max(1),
+            capacity_factor: if m.capacity_factor > 0.0 { m.capacity_factor } else { 2.0 },
+            seq: m.seq,
+            vocab: m.vocab,
+        }
+    }
+
+    /// Per-request expert capacity: ceil(cf · k · s / E), floored at 1.
+    pub fn capacity(&self) -> usize {
+        let perfect = (self.top_k * self.seq) as f64 / self.experts as f64;
+        ((self.capacity_factor * perfect).ceil() as usize).max(1)
+    }
+}
+
+/// Deterministic pure-Rust forward with the segment walk's shape.
+pub struct StubForward {
+    dims: StubDims,
+    mode: DispatchMode,
+    // scratch, reused across calls (steady state allocates nothing)
+    hidden: Vec<f32>,
+    next: Vec<f32>,
+    logits: Vec<f32>,
+    slab: Vec<f32>,
+    row: Vec<f32>,
+}
+
+/// Deterministic pseudo-weight in [-1, 1): a splitmix-style hash of the
+/// index tuple. This IS the model — every run, every machine, same bits.
+fn coeff(a: u64, b: u64, c: u64) -> f32 {
+    let mut x = a
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ b.wrapping_mul(0xc2b2_ae3d_27d4_eb4f)
+        ^ c.wrapping_mul(0x1656_67b1_9e37_79f9);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    ((x >> 40) as i32 % 1024) as f32 / 512.0 - 1.0
+}
+
+impl StubForward {
+    /// A stub model over the given geometry and dispatch path.
+    pub fn new(dims: StubDims, mode: DispatchMode) -> Self {
+        StubForward {
+            dims,
+            mode,
+            hidden: Vec::new(),
+            next: Vec::new(),
+            logits: Vec::new(),
+            slab: Vec::new(),
+            row: Vec::new(),
+        }
+    }
+
+    fn is_moe_layer(&self, layer: usize) -> bool {
+        self.dims.experts > 1
+            && self.dims.moe_every > 0
+            && (layer + 1) % self.dims.moe_every == 0
+    }
+
+    /// The per-token expert FFN: row-local, identical no matter which
+    /// dispatch path invokes it — the bitwise hinge of the A/B.
+    fn expert_ffn(dims: &StubDims, e: usize, layer: usize, x: &[f32], out: &mut [f32]) {
+        let h = dims.hidden;
+        let a = 0.5 * coeff(e as u64 + 1, layer as u64, 1);
+        let b = 0.5 * coeff(e as u64 + 1, layer as u64, 2);
+        let c = 0.05 * coeff(e as u64 + 1, layer as u64, 3);
+        let shift = (e + 1) % h;
+        for j in 0..h {
+            out[j] = a * x[j] + b * x[(j + shift) % h] + c;
+        }
+    }
+}
+
+impl ForwardModel for StubForward {
+    fn seq(&self) -> usize {
+        self.dims.seq
+    }
+
+    fn out_elems(&self) -> usize {
+        self.dims.seq * self.dims.hidden
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn label(&self) -> &'static str {
+        match self.mode {
+            DispatchMode::IndexSlice => "stub/index_slice",
+            DispatchMode::Dense => "stub/dense",
+        }
+    }
+
+    fn forward(&mut self, batch: &[&[u32]], outs: &mut [Vec<f32>]) -> Result<Vec<RequestStats>> {
+        let d = self.dims;
+        let (h, s, k, e_cnt) = (d.hidden, d.seq, d.top_k, d.experts);
+        if outs.len() != batch.len() {
+            bail!("{} outs for {} requests", outs.len(), batch.len());
+        }
+        let total = batch.len() * s;
+        let mut stats: Vec<RequestStats> = batch.iter().map(|_| RequestStats::new(s)).collect();
+
+        // embed: token-id hash → hidden row (row-local)
+        self.hidden.clear();
+        self.hidden.reserve(total * h);
+        for row in batch {
+            if row.len() != s {
+                bail!("request row has {} tokens, model seq is {s}", row.len());
+            }
+            for (pos, tok) in row.iter().enumerate() {
+                let t = (*tok as usize % d.vocab) as u64;
+                for j in 0..h {
+                    self.hidden.push(0.5 * coeff(t.wrapping_add(3), pos as u64, j as u64));
+                }
+            }
+        }
+
+        self.next.clear();
+        self.next.resize(total * h, 0.0);
+        self.row.clear();
+        self.row.resize(h, 0.0);
+
+        for layer in 0..d.layers {
+            // glue: a bounded row-local mix (the attention/LN stand-in)
+            for t in 0..total {
+                let x = &self.hidden[t * h..(t + 1) * h];
+                let g = 0.1 * coeff(layer as u64, 7, 7);
+                for j in 0..h {
+                    self.next[t * h + j] = 0.7 * x[j] + 0.2 * x[(j + 1) % h] + g;
+                }
+            }
+            std::mem::swap(&mut self.hidden, &mut self.next);
+
+            if !self.is_moe_layer(layer) {
+                // dense FFN layer: "expert 0 for everyone", residual added
+                for t in 0..total {
+                    let x = &self.hidden[t * h..(t + 1) * h];
+                    Self::expert_ffn(&d, 0, layer, x, &mut self.row);
+                    for j in 0..h {
+                        self.next[t * h + j] = x[j] + self.row[j];
+                    }
+                }
+                std::mem::swap(&mut self.hidden, &mut self.next);
+                continue;
+            }
+
+            // MoE layer. Routing is PER REQUEST: logits over the request's
+            // own tokens, capacity over its own token count — a request's
+            // drops can never depend on its batch-mates (the bitwise
+            // batched==serial contract hinges on this).
+            let cap = d.capacity();
+            self.slab.clear();
+            self.slab.resize(total * k * h, 0.0);
+            let mut routings = Vec::with_capacity(batch.len());
+            for r in 0..batch.len() {
+                self.logits.clear();
+                for t in r * s..(r + 1) * s {
+                    let x = &self.hidden[t * h..(t + 1) * h];
+                    for e in 0..e_cnt {
+                        let mut l = 0.0f32;
+                        for j in 0..h {
+                            l += x[j] * coeff(e as u64, layer as u64, (j + 11) as u64);
+                        }
+                        self.logits.push(l);
+                    }
+                }
+                let rt = route_topk(&self.logits, e_cnt, cap, k, DropPolicy::Drop);
+                stats[r].absorb(rt.stats_for_tokens(0, s));
+                routings.push(rt);
+            }
+
+            match self.mode {
+                DispatchMode::IndexSlice => {
+                    // expert-major slab walk: every accepted assignment of
+                    // expert e across the whole batch, then the next
+                    // expert — zero wire bytes, one grouped pass per
+                    // expert (§3.3.3)
+                    for e in 0..e_cnt {
+                        for (r, rt) in routings.iter().enumerate() {
+                            for t in 0..s {
+                                for lvl in 0..k {
+                                    let i = t * k + lvl;
+                                    if rt.dropped[i] || rt.expert[i] as usize != e {
+                                        continue;
+                                    }
+                                    let tok = r * s + t;
+                                    let x = &self.hidden[tok * h..(tok + 1) * h];
+                                    Self::expert_ffn(&d, e, layer, x, &mut self.row);
+                                    let dst = (tok * k + lvl) * h;
+                                    self.slab[dst..dst + h].copy_from_slice(&self.row);
+                                }
+                            }
+                        }
+                    }
+                    // gate-weighted combine, level order (fixed addition
+                    // order == fixed bits)
+                    for (r, rt) in routings.iter().enumerate() {
+                        for t in 0..s {
+                            let tok = r * s + t;
+                            let x = &self.hidden[tok * h..(tok + 1) * h];
+                            let out = &mut self.next[tok * h..(tok + 1) * h];
+                            out.copy_from_slice(x);
+                            for lvl in 0..k {
+                                let i = t * k + lvl;
+                                if rt.dropped[i] {
+                                    continue;
+                                }
+                                let gate = rt.gate[i];
+                                let src = (tok * k + lvl) * h;
+                                for j in 0..h {
+                                    out[j] += gate * self.slab[src + j];
+                                }
+                            }
+                        }
+                    }
+                }
+                DispatchMode::Dense => {
+                    // token-major reference: same math, same level-order
+                    // combine, no expert grouping
+                    for (r, rt) in routings.iter().enumerate() {
+                        for t in 0..s {
+                            let tok = r * s + t;
+                            let x = &self.hidden[tok * h..(tok + 1) * h];
+                            let out = &mut self.next[tok * h..(tok + 1) * h];
+                            out.copy_from_slice(x);
+                            for lvl in 0..k {
+                                let i = t * k + lvl;
+                                if rt.dropped[i] {
+                                    continue;
+                                }
+                                Self::expert_ffn(
+                                    &d,
+                                    rt.expert[i] as usize,
+                                    layer,
+                                    x,
+                                    &mut self.row,
+                                );
+                                let gate = rt.gate[i];
+                                for j in 0..h {
+                                    out[j] += gate * self.row[j];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            std::mem::swap(&mut self.hidden, &mut self.next);
+        }
+
+        for (r, out) in outs.iter_mut().enumerate() {
+            out.clear();
+            out.extend_from_slice(&self.hidden[r * s * h..(r + 1) * s * h]);
+        }
+        Ok(stats)
+    }
+}
+
+/// One tp lane of one stage: its view, staged parameters, and per-segment
+/// forward executables.
+struct Lane {
+    view: TpStageView,
+    staged: Vec<xla::PjRtBuffer>,
+    fwd: Vec<Vec<Option<std::rc::Rc<Executable>>>>,
+}
+
+/// The live tier: artifact-backed forward over the trainer's uniform
+/// segment walk (Glue → Moe → … → LossTail), forward arms only.
+///
+/// Serving output is the final boundary activation — the hidden rows
+/// *entering* the loss tail. The AOT export fuses the LM head into the
+/// fused loss+backward tail artifact, so logits-on-the-wire need a
+/// dedicated head export (a follow-up; docs/serving.md §Limitations).
+/// Per-request routing stats are zero here: the routing decisions live
+/// inside the compiled HLO, not in host-visible buffers.
+pub struct ManifestForward {
+    // never read after open(), but it owns the PJRT client every staged
+    // buffer and executable in the lanes borrows from — it must live
+    // exactly as long as they do
+    #[allow(dead_code)]
+    rt: Runtime,
+    stages: Vec<Vec<Lane>>,
+    num_chunks: usize,
+    model: ModelInfo,
+}
+
+impl ManifestForward {
+    /// Open artifacts for serving at the given tp width. Fails fast with a
+    /// remediation hint when only the vendored data-movement stub is
+    /// present — callers fall back to [`StubForward`] (tests: self-skip).
+    pub fn open(dir: &std::path::Path, tp: usize) -> Result<ManifestForward> {
+        if !xla::backend_available() {
+            bail!(
+                "serving the live tier requires a real PJRT backend; the vendored \
+                 stub only moves data. Run the stub tier (no --artifacts) or \
+                 provide a backend (see docs/serving.md)"
+            );
+        }
+        let mut rt = Runtime::open(dir)?;
+        let model = rt.manifest.model.clone();
+        let tp = if tp == 0 { 1 } else { tp };
+        let mut stages = Vec::with_capacity(model.stages);
+        let mut num_chunks = 1;
+        for stage in 0..model.stages {
+            let mut lanes = Vec::with_capacity(tp);
+            for rank in 0..tp {
+                let view = rt.manifest.stage_view(stage, rank, tp)?;
+                num_chunks = num_chunks.max(view.chunks.len());
+                let params = rt.load_params_bin(&view.bin, &view.params, view.total_bytes)?;
+                let staged = rt.stage_buffers(&params)?;
+                let mut fwd = Vec::with_capacity(view.chunks.len());
+                for chunk in &view.chunks {
+                    let mut segs = Vec::with_capacity(chunk.len());
+                    for seg in chunk {
+                        segs.push(match &seg.fwd {
+                            Some(name) => Some(rt.load(name)?),
+                            None => None,
+                        });
+                    }
+                    fwd.push(segs);
+                }
+                lanes.push(Lane { view, staged, fwd });
+            }
+            stages.push(lanes);
+        }
+        Ok(ManifestForward { rt, stages, num_chunks, model })
+    }
+
+    /// The walk: chunk-major over stages (the interleaved virtual-stage
+    /// layer order; collapses to plain stage order at v = 1), returning
+    /// the final boundary activation.
+    fn walk(&self, ids: Vec<i32>) -> Result<Tensor> {
+        let b = self.model.micro_batch;
+        let mut cur: Vec<Tensor> = vec![Tensor::i32(ids, vec![b, self.model.seq])];
+        for c in 0..self.num_chunks {
+            for lanes in &self.stages {
+                let lead = &lanes[0];
+                if c >= lead.view.chunks.len() {
+                    continue;
+                }
+                for (k, seg) in lead.view.chunks[c].iter().enumerate() {
+                    match seg.kind {
+                        SegKind::Glue => {
+                            let exe = lead.fwd[c][k]
+                                .as_ref()
+                                .with_context(|| format!("glue c{c} s{k}: no fwd artifact"))?;
+                            let range = lead.view.seg_param_range(c, k);
+                            let mut out = exe.run_staged(&lead.staged[range], &cur)?;
+                            if seg.aux {
+                                out.pop(); // balance-loss scalar: training-only
+                            }
+                            cur = out;
+                        }
+                        SegKind::Moe => {
+                            let hgt = cur.pop().context("moe expects (x, hgt)")?;
+                            let x_res = cur.pop().context("moe expects (x, hgt)")?;
+                            let mut partials: Vec<Vec<f32>> = Vec::with_capacity(lanes.len());
+                            let mut shape = Vec::new();
+                            for lane in lanes {
+                                let exe = lane.fwd[c][k].as_ref().with_context(|| {
+                                    format!("moe c{c} s{k}: no fwd artifact")
+                                })?;
+                                let range = lane.view.seg_param_range(c, k);
+                                let out = exe
+                                    .run_staged(&lane.staged[range], std::slice::from_ref(&hgt))?;
+                                shape = out[0].shape.clone();
+                                partials.push(out[0].as_f32()?.to_vec());
+                            }
+                            let refs: Vec<&[f32]> =
+                                partials.iter().map(|p| p.as_slice()).collect();
+                            let y = crate::tp::rank_order_sum(&refs);
+                            cur = vec![x_res, Tensor::f32(y, shape)];
+                        }
+                        SegKind::LossTail => {
+                            // fused loss+bwd tail: serving stops here and
+                            // emits the activation entering it
+                            return cur.into_iter().next().context("losstail with no input");
+                        }
+                    }
+                }
+            }
+        }
+        cur.into_iter().next().context("walk produced no output")
+    }
+}
+
+impl ForwardModel for ManifestForward {
+    fn seq(&self) -> usize {
+        self.model.seq
+    }
+
+    fn out_elems(&self) -> usize {
+        self.model.seq * self.model.hidden
+    }
+
+    fn max_batch(&self) -> usize {
+        // the compiled microbatch is a hard shape: partial batches pad up
+        self.model.micro_batch
+    }
+
+    fn label(&self) -> &'static str {
+        "manifest/live"
+    }
+
+    fn forward(&mut self, batch: &[&[u32]], outs: &mut [Vec<f32>]) -> Result<Vec<RequestStats>> {
+        let m = &self.model;
+        if batch.len() > m.micro_batch {
+            bail!("batch {} exceeds compiled microbatch {}", batch.len(), m.micro_batch);
+        }
+        let mut ids = Vec::with_capacity(m.tokens_per_micro());
+        for row in batch {
+            if row.len() != m.seq {
+                bail!("request row has {} tokens, model seq is {}", row.len(), m.seq);
+            }
+            ids.extend(row.iter().map(|t| *t as i32));
+        }
+        ids.resize(m.tokens_per_micro(), 0); // pad rows with token 0
+        let act = self.walk(ids)?;
+        let vals = act.as_f32()?;
+        let per = self.out_elems();
+        for (r, out) in outs.iter_mut().enumerate() {
+            out.clear();
+            out.extend_from_slice(&vals[r * per..(r + 1) * per]);
+        }
+        // routing stats live inside the compiled HLO: none to report
+        Ok(batch.iter().map(|row| RequestStats::new(row.len())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(seed: u64, n: usize, seq: usize, vocab: usize) -> Vec<Vec<u32>> {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        (0..n)
+            .map(|_| (0..seq).map(|_| rng.below(vocab) as u32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn stub_forward_is_deterministic() {
+        let d = StubDims::tiny();
+        let reqs = rows(3, 3, d.seq, d.vocab);
+        let refs: Vec<&[u32]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let mut a = StubForward::new(d, DispatchMode::IndexSlice);
+        let mut outs1 = vec![Vec::new(); 3];
+        let mut outs2 = vec![Vec::new(); 3];
+        let s1 = a.forward(&refs, &mut outs1).unwrap();
+        let s2 = a.forward(&refs, &mut outs2).unwrap();
+        assert_eq!(outs1, outs2, "same inputs, same bits");
+        assert_eq!(s1, s2);
+        assert!(outs1.iter().all(|o| o.len() == d.seq * d.hidden));
+    }
+
+    #[test]
+    fn index_slice_and_dense_dispatch_agree_bitwise() {
+        // the serving A/B mirrors python/tests/test_tp_dispatch.py: two
+        // dispatch orders, one set of output bits
+        let d = StubDims::tiny();
+        let reqs = rows(11, 5, d.seq, d.vocab);
+        let refs: Vec<&[u32]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let mut slice = StubForward::new(d, DispatchMode::IndexSlice);
+        let mut dense = StubForward::new(d, DispatchMode::Dense);
+        let mut a = vec![Vec::new(); refs.len()];
+        let mut b = vec![Vec::new(); refs.len()];
+        let sa = slice.forward(&refs, &mut a).unwrap();
+        let sb = dense.forward(&refs, &mut b).unwrap();
+        assert_eq!(a, b, "dispatch order must not change output bits");
+        assert_eq!(sa, sb, "both paths see the same routing");
+    }
+
+    #[test]
+    fn stub_stats_see_real_drops_at_tight_capacity() {
+        let d = StubDims { capacity_factor: 0.5, ..StubDims::tiny() };
+        let reqs = rows(7, 4, d.seq, d.vocab);
+        let refs: Vec<&[u32]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let mut outs = vec![Vec::new(); refs.len()];
+        let stats = fm.forward(&refs, &mut outs).unwrap();
+        assert!(stats.iter().all(|s| s.moe_segments == d.layers / d.moe_every));
+        assert!(
+            stats.iter().any(|s| s.assignments_dropped > 0),
+            "cf=0.5 must drop: {stats:?}"
+        );
+        assert!(stats.iter().all(|s| s.experts_hit > 0 && s.gate_entropy > 0.0));
+    }
+
+    #[test]
+    fn manifest_tier_refuses_without_backend_with_hint() {
+        if xla::backend_available() {
+            return; // a real backend would make this the live tier's job
+        }
+        let err = ManifestForward::open(std::path::Path::new("artifacts-nonexistent"), 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("real PJRT backend"), "{err}");
+    }
+}

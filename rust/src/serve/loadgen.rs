@@ -1,0 +1,401 @@
+//! Closed-loop load generator and the `BENCH_serve.json` emitter.
+//!
+//! `ppmoe serve --loadgen` materializes a seeded arrival trace per mix
+//! (uniform / zipf / bursty, [`ArrivalKind::ALL`]), synthesizes token rows
+//! from the same seed, drives the engine over each trace, and reports
+//! per-mix latency percentiles (virtual µs), virtual throughput and batch
+//! fill. On top of the mix sweep it times the index-slice vs dense
+//! dispatch A/B on identical batches (asserting bitwise equality before
+//! timing — a bench over two paths that disagree would be measuring a
+//! bug) and prints the oracle wire-volume rows for the same batch shape
+//! via [`ParallelCfg::tp_combine_volume_fwd_tokens`] /
+//! [`ParallelCfg::dpmoe_a2a_volume_fwd_tokens`].
+//!
+//! Everything except the wall-clock ns in the A/B rows is a pure function
+//! of `(seed, knobs)` — the mix tables diff cleanly across machines.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::batcher::BatchPolicy;
+use super::engine::{run_trace, EngineCfg, ServeRun};
+use super::forward::{DispatchMode, ForwardModel, StubDims, StubForward};
+use super::queue::Request;
+use super::stats::percentile_us;
+use crate::config::{ModelDims, ParallelCfg, Scheme};
+use crate::sim::arrival::{arrival_trace, ArrivalKind, ServiceModel};
+use crate::util::bench::{bench_n, BenchResult};
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// Load-generator knobs (`serve --loadgen` flags map here 1:1).
+#[derive(Debug, Clone)]
+pub struct LoadgenCfg {
+    /// Requests per mix.
+    pub requests: usize,
+    /// Target mean inter-arrival gap, virtual µs.
+    pub mean_gap_us: u64,
+    /// Seed for both the arrival traces and the token rows.
+    pub seed: u64,
+    /// Batch assembly policy under test.
+    pub policy: BatchPolicy,
+    /// Where to write `BENCH_serve.json` (None = don't).
+    pub bench_out: Option<std::path::PathBuf>,
+    /// Which arrival mixes to sweep (`--arrival` narrows to one; default:
+    /// all three, in [`ArrivalKind::ALL`] order).
+    pub mixes: Vec<ArrivalKind>,
+}
+
+impl Default for LoadgenCfg {
+    fn default() -> Self {
+        LoadgenCfg {
+            requests: 256,
+            mean_gap_us: 400,
+            seed: 42,
+            policy: BatchPolicy { max_batch: 8, max_wait_us: 800 },
+            bench_out: Some(std::path::PathBuf::from("BENCH_serve.json")),
+            mixes: ArrivalKind::ALL.to_vec(),
+        }
+    }
+}
+
+/// One mix's closed-loop result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixReport {
+    /// Arrival mix label.
+    pub mix: &'static str,
+    /// Requests completed.
+    pub requests: usize,
+    /// Forward batches launched.
+    pub batches: u64,
+    /// Mean batch fill ∈ (0, 1].
+    pub mean_fill: f64,
+    /// Median latency, virtual µs.
+    pub p50_us: u64,
+    /// 99th-percentile latency, virtual µs.
+    pub p99_us: u64,
+    /// Mean latency, virtual µs.
+    pub mean_us: f64,
+    /// Virtual throughput, tokens/s.
+    pub tokens_per_sec: f64,
+    /// (token, level) assignments dropped at capacity, summed.
+    pub assignments_dropped: u64,
+}
+
+/// Synthesize the seeded request stream for one mix: arrival times from
+/// [`arrival_trace`], token rows from an independent stream of the same
+/// seed.
+pub fn synth_requests(
+    kind: ArrivalKind,
+    cfg: &LoadgenCfg,
+    seq: usize,
+    vocab: usize,
+) -> Vec<Request> {
+    let trace = arrival_trace(kind, cfg.requests, cfg.mean_gap_us, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0x7265_7173); // "reqs"
+    trace
+        .into_iter()
+        .enumerate()
+        .map(|(i, arrival_us)| Request {
+            id: i as u64,
+            arrival_us,
+            tokens: (0..seq).map(|_| rng.below(vocab.max(1)) as u32).collect(),
+        })
+        .collect()
+}
+
+fn report(mix: &'static str, run: &ServeRun, max_batch: usize) -> MixReport {
+    let mut lat: Vec<u64> = run.completions.iter().map(|c| c.latency_us()).collect();
+    lat.sort_unstable();
+    let mean_us = if lat.is_empty() {
+        0.0
+    } else {
+        lat.iter().sum::<u64>() as f64 / lat.len() as f64
+    };
+    MixReport {
+        mix,
+        requests: run.completions.len(),
+        batches: run.batches,
+        mean_fill: run.mean_fill(max_batch),
+        p50_us: percentile_us(&lat, 50.0),
+        p99_us: percentile_us(&lat, 99.0),
+        mean_us,
+        tokens_per_sec: run.tokens_per_sec(),
+        assignments_dropped: run
+            .completions
+            .iter()
+            .map(|c| c.stats.assignments_dropped as u64)
+            .sum(),
+    }
+}
+
+/// Drive `fm` over every configured arrival mix; returns one report per
+/// mix, in `cfg.mixes` order. Pure virtual-clock — deterministic.
+pub fn run_mixes(
+    fm: &mut dyn ForwardModel,
+    cfg: &LoadgenCfg,
+    vocab: usize,
+) -> Result<Vec<MixReport>> {
+    let engine_cfg = EngineCfg {
+        policy: cfg.policy,
+        service: ServiceModel::cpu_stub(),
+        keep_outputs: false, // closed loop: checksum + recycle
+    };
+    let mut reports = Vec::with_capacity(cfg.mixes.len());
+    for kind in cfg.mixes.iter().copied() {
+        let reqs = synth_requests(kind, cfg, fm.seq(), vocab);
+        let run = run_trace(fm, reqs, &engine_cfg)?;
+        reports.push(report(kind.label(), &run, cfg.policy.max_batch));
+    }
+    Ok(reports)
+}
+
+/// Time the index-slice vs dense dispatch paths on one identical batch,
+/// asserting bitwise equality first. Returns the two bench rows.
+pub fn dispatch_ab(dims: StubDims, batch: usize, seed: u64) -> Result<Vec<BenchResult>> {
+    let mut rng = Rng::new(seed ^ 0xAB);
+    let rows: Vec<Vec<u32>> = (0..batch.max(1))
+        .map(|_| (0..dims.seq).map(|_| rng.below(dims.vocab) as u32).collect())
+        .collect();
+    let refs: Vec<&[u32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let mut slice = StubForward::new(dims, DispatchMode::IndexSlice);
+    let mut dense = StubForward::new(dims, DispatchMode::Dense);
+    let mut a = vec![Vec::new(); refs.len()];
+    let mut b = vec![Vec::new(); refs.len()];
+    slice.forward(&refs, &mut a)?;
+    dense.forward(&refs, &mut b)?;
+    anyhow::ensure!(a == b, "dispatch A/B outputs diverged — refusing to bench a bug");
+    let mut out = Vec::with_capacity(2);
+    let mut sink = vec![Vec::new(); refs.len()];
+    out.push(bench_n(&format!("serve/dispatch/index_slice/b{batch}"), 40, || {
+        slice.forward(&refs, &mut sink).unwrap();
+    }));
+    out.push(bench_n(&format!("serve/dispatch/dense/b{batch}"), 40, || {
+        dense.forward(&refs, &mut sink).unwrap();
+    }));
+    Ok(out)
+}
+
+/// Oracle wire volumes for a serving batch of `tokens` tokens: the PPMoE
+/// index-slice combine (tp = 2 ring) vs the DPMoE all-to-all (ep =
+/// experts), forward-only — the serving-shape extension of the training
+/// accessors' pinned closed forms.
+pub fn oracle_volumes(dims: StubDims, tokens: usize) -> (f64, f64) {
+    let m = ModelDims {
+        name: "serve-oracle".to_string(),
+        hidden: dims.hidden,
+        ffn: 4 * dims.hidden,
+        layers: dims.layers,
+        heads: 1,
+        vocab: dims.vocab,
+        seq: dims.seq,
+        experts: dims.experts.max(1),
+        moe_every: dims.moe_every,
+        top_k: dims.top_k,
+    };
+    let pp = ParallelCfg { dp: 1, tp: 2, pp: 1, ep: 2, zero: false, scheme: Scheme::PpMoE };
+    let dp = ParallelCfg {
+        dp: m.experts,
+        tp: 1,
+        pp: 1,
+        ep: m.experts,
+        zero: false,
+        scheme: Scheme::DpMoE,
+    };
+    (
+        pp.tp_combine_volume_fwd_tokens(&m, tokens),
+        dp.dpmoe_a2a_volume_fwd_tokens(&m, tokens),
+    )
+}
+
+fn mix_json(r: &MixReport) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("requests".to_string(), Json::Num(r.requests as f64));
+    o.insert("batches".to_string(), Json::Num(r.batches as f64));
+    o.insert("mean_fill".to_string(), Json::Num(r.mean_fill));
+    o.insert("p50_us".to_string(), Json::Num(r.p50_us as f64));
+    o.insert("p99_us".to_string(), Json::Num(r.p99_us as f64));
+    o.insert("mean_us".to_string(), Json::Num(r.mean_us));
+    o.insert("tokens_per_sec".to_string(), Json::Num(r.tokens_per_sec));
+    o.insert(
+        "assignments_dropped".to_string(),
+        Json::Num(r.assignments_dropped as f64),
+    );
+    Json::Obj(o)
+}
+
+/// Emit `BENCH_serve.json`: per-mix closed-loop stats, dispatch A/B ns
+/// rows (hotpath schema: `components` -> ns/op stats), and the oracle
+/// volume pair.
+pub fn write_bench_json(
+    path: &Path,
+    reports: &[MixReport],
+    ab: &[BenchResult],
+    oracle: (f64, f64),
+    mean_batch_tokens: usize,
+) -> Result<()> {
+    let mut mixes = BTreeMap::new();
+    for r in reports {
+        mixes.insert(r.mix.to_string(), mix_json(r));
+    }
+    let mut components = BTreeMap::new();
+    for r in ab {
+        let mut stats = BTreeMap::new();
+        stats.insert("median_ns".to_string(), Json::Num(r.median_ns));
+        stats.insert("mean_ns".to_string(), Json::Num(r.mean_ns));
+        stats.insert("p10_ns".to_string(), Json::Num(r.p10_ns));
+        stats.insert("p90_ns".to_string(), Json::Num(r.p90_ns));
+        stats.insert("iters".to_string(), Json::Num(r.iters as f64));
+        components.insert(r.name.clone(), Json::Obj(stats));
+    }
+    let oracle_obj = Json::Obj(BTreeMap::from([
+        ("tokens".to_string(), Json::Num(mean_batch_tokens as f64)),
+        ("ppmoe_combine_bytes".to_string(), Json::Num(oracle.0)),
+        ("dpmoe_a2a_bytes".to_string(), Json::Num(oracle.1)),
+    ]));
+    let doc = Json::Obj(BTreeMap::from([
+        ("mixes".to_string(), Json::Obj(mixes)),
+        ("components".to_string(), Json::Obj(components)),
+        ("oracle".to_string(), oracle_obj),
+    ]));
+    std::fs::write(path, format!("{doc}\n"))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// The full `serve --loadgen` run: mix sweep on `fm`, dispatch A/B on the
+/// stub geometry, oracle volumes, console table, optional JSON. Returns
+/// the mix reports (main's exit path prints nothing further).
+pub fn run_loadgen(
+    fm: &mut dyn ForwardModel,
+    dims: StubDims,
+    cfg: &LoadgenCfg,
+) -> Result<Vec<MixReport>> {
+    println!(
+        "serve loadgen: model={} seq={} requests/mix={} mean-gap={}µs max-batch={} \
+         max-wait={}µs seed={}",
+        fm.label(),
+        fm.seq(),
+        cfg.requests,
+        cfg.mean_gap_us,
+        cfg.policy.max_batch,
+        cfg.policy.max_wait_us,
+        cfg.seed
+    );
+    let reports = run_mixes(fm, cfg, dims.vocab)?;
+    println!(
+        "{:<8} {:>8} {:>8} {:>6} {:>9} {:>9} {:>10} {:>12} {:>8}",
+        "mix", "reqs", "batches", "fill", "p50(µs)", "p99(µs)", "mean(µs)", "tokens/s", "drops"
+    );
+    for r in &reports {
+        println!(
+            "{:<8} {:>8} {:>8} {:>6.2} {:>9} {:>9} {:>10.1} {:>12.1} {:>8}",
+            r.mix,
+            r.requests,
+            r.batches,
+            r.mean_fill,
+            r.p50_us,
+            r.p99_us,
+            r.mean_us,
+            r.tokens_per_sec,
+            r.assignments_dropped
+        );
+    }
+
+    println!("\ndispatch A/B (bitwise-checked before timing):");
+    let ab = dispatch_ab(dims, cfg.policy.max_batch, cfg.seed)?;
+
+    // oracle wire volumes at the observed mean batch shape
+    let (batches, slots): (u64, u64) = reports.iter().fold((0, 0), |(b, s), r| {
+        (b + r.batches, s + r.requests as u64)
+    });
+    let mean_batch_tokens = if batches == 0 {
+        fm.seq()
+    } else {
+        (slots as usize * fm.seq()).div_ceil(batches as usize)
+    };
+    let (combine, a2a) = oracle_volumes(dims, mean_batch_tokens);
+    println!(
+        "\noracle volumes @ mean batch of {mean_batch_tokens} tokens: \
+         ppmoe index-slice combine {combine:.0} B vs dpmoe all-to-all {a2a:.0} B"
+    );
+
+    if let Some(path) = &cfg.bench_out {
+        write_bench_json(path, &reports, &ab, (combine, a2a), mean_batch_tokens)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: usize) -> LoadgenCfg {
+        LoadgenCfg {
+            requests: n,
+            mean_gap_us: 200,
+            seed: 17,
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 400 },
+            bench_out: None,
+            mixes: ArrivalKind::ALL.to_vec(),
+        }
+    }
+
+    #[test]
+    fn mix_reports_are_deterministic_and_complete() {
+        let d = StubDims::tiny();
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let a = run_mixes(&mut fm, &cfg(48), d.vocab).unwrap();
+        let b = run_mixes(&mut fm, &cfg(48), d.vocab).unwrap();
+        assert_eq!(a, b, "virtual-clock reports must be bit-stable");
+        assert_eq!(a.len(), ArrivalKind::ALL.len());
+        for r in &a {
+            assert_eq!(r.requests, 48, "{}: every request completes", r.mix);
+            assert!(r.p50_us <= r.p99_us);
+            assert!(r.tokens_per_sec > 0.0);
+            assert!(r.mean_fill > 0.0 && r.mean_fill <= 1.0);
+        }
+    }
+
+    #[test]
+    fn bursty_fills_batches_better_than_its_gaps_suggest() {
+        // burst trains arrive back-to-back, so continuous batching should
+        // find multi-request batches there (fill > 1/max_batch)
+        let d = StubDims::tiny();
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let reports = run_mixes(&mut fm, &cfg(96), d.vocab).unwrap();
+        let bursty = reports.iter().find(|r| r.mix == "bursty").unwrap();
+        assert!(bursty.mean_fill > 0.25, "bursty fill {:.2}", bursty.mean_fill);
+    }
+
+    #[test]
+    fn oracle_volumes_scale_linearly_in_tokens() {
+        let d = StubDims::tiny();
+        let (c1, a1) = oracle_volumes(d, 64);
+        let (c2, a2) = oracle_volumes(d, 128);
+        assert!(c1 > 0.0 && a1 > 0.0);
+        assert!((c2 / c1 - 2.0).abs() < 1e-9);
+        assert!((a2 / a1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_parser() {
+        let d = StubDims::tiny();
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let reports = run_mixes(&mut fm, &cfg(24), d.vocab).unwrap();
+        let dir = std::env::temp_dir().join(format!("ppmoe_serve_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let (c, a) = oracle_volumes(d, 32);
+        write_bench_json(&path, &reports, &[], (c, a), 32).unwrap();
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let mixes = doc.req("mixes").unwrap().as_obj().unwrap();
+        assert_eq!(mixes.len(), 3);
+        let uniform = mixes.get("uniform").unwrap();
+        assert!(uniform.req("p99_us").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(doc.req("oracle").unwrap().req("ppmoe_combine_bytes").is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

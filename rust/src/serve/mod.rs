@@ -1,0 +1,57 @@
+//! `ppmoe serve` — the forward-only batched inference engine.
+//!
+//! ROADMAP item 2 (the serving workload): the paper's index-slice dispatch
+//! + single inner-node all-reduce should shine *most* under skewed, bursty
+//! inference traffic, where DPMoE's two all-to-alls sit on every request's
+//! critical path. This subsystem reuses the training stack's uniform
+//! segment walk — `Manifest::stage_view` views, Glue/Moe/LossTail segments
+//! — with no backward pass and no optimizer, behind a request queue with
+//! **continuous batching**.
+//!
+//! Layers (docs/serving.md has the full architecture):
+//!
+//! * [`queue`] — arrival-ordered request queue ([`Request`]).
+//! * [`batcher`] — the batch-assembly policy: launch when `max_batch`
+//!   slots fill or the oldest request has waited `max_wait_us`, admitting
+//!   whatever has arrived as soon as the engine frees its slots.
+//! * [`forward`] — the [`forward::ForwardModel`] contract plus its two
+//!   implementations: the deterministic pure-Rust [`forward::StubForward`]
+//!   (contract tier, runs in today's CI) and the artifact-backed
+//!   [`forward::ManifestForward`] (live tier, needs the real PJRT
+//!   backend).
+//! * [`engine`] — the virtual-clock driver: admits arrivals, assembles
+//!   batches, runs the forward, stamps per-request latencies, recycles
+//!   output slabs through a [`crate::trainer::pool::LocalSlabPool`].
+//! * [`stats`] — per-request routing stats (experts hit, capacity drops,
+//!   top-k gate entropy), aggregated into [`crate::metrics::serving`].
+//! * [`loadgen`] — the seeded closed-loop load generator behind
+//!   `ppmoe serve --loadgen`: uniform/zipf/bursty arrival mixes
+//!   ([`crate::sim::arrival`]), p50/p99 latency + tokens/s, the
+//!   index-slice-vs-dense dispatch A/B, and the wire-volume oracle built
+//!   on [`crate::config::ParallelCfg::tp_combine_volume_fwd_tokens`] /
+//!   [`dpmoe_a2a_volume_fwd_tokens`](crate::config::ParallelCfg::dpmoe_a2a_volume_fwd_tokens)
+//!   — all written to `BENCH_serve.json`.
+//!
+//! **Determinism contract.** Under a fixed seed + arrival trace the engine
+//! is bit-reproducible: batch assembly runs on a *virtual* microsecond
+//! clock driven by the trace (never wall time), routing is per-request (a
+//! request's capacity drops depend only on its own tokens, not on who it
+//! shares a batch with), and every per-token transform is row-local. The
+//! consequence — proven property-style in rust/tests/serve_equivalence.rs
+//! — is that batched output rows are **bitwise equal** to the same
+//! requests run one-at-a-time through the serial reference, for any
+//! (max-batch, max-wait, arrival-trace) whatsoever.
+
+pub mod batcher;
+pub mod engine;
+pub mod forward;
+pub mod loadgen;
+pub mod queue;
+pub mod stats;
+
+pub use batcher::BatchPolicy;
+pub use engine::{Completion, EngineCfg, ServeRun};
+pub use forward::{ForwardModel, StubDims, StubForward};
+pub use loadgen::LoadgenCfg;
+pub use queue::Request;
+pub use stats::RequestStats;

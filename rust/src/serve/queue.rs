@@ -1,0 +1,91 @@
+//! Arrival-ordered request queue.
+//!
+//! The queue is deliberately dumb: FIFO in arrival order, no priorities,
+//! no reordering — the determinism contract (docs/serving.md) needs batch
+//! composition to be a pure function of the arrival trace and the policy
+//! knobs, and FIFO is the only order that can't smuggle in a tiebreak on
+//! anything else.
+
+use std::collections::VecDeque;
+
+/// One inference request: a fixed-length row of token ids (the serving
+/// analogue of one microbatch row) stamped with its virtual arrival time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Caller-assigned id, unique within a run; completions carry it back.
+    pub id: u64,
+    /// Arrival time on the virtual clock, µs.
+    pub arrival_us: u64,
+    /// Token ids, length = the model's sequence length.
+    pub tokens: Vec<u32>,
+}
+
+/// FIFO queue of admitted-but-not-yet-batched requests.
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    pending: VecDeque<Request>,
+}
+
+impl RequestQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of waiting requests.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether nothing is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Admit a request. Callers push in arrival order (the engine feeds
+    /// the queue from a sorted trace), which keeps FIFO == oldest-first.
+    pub fn push(&mut self, r: Request) {
+        debug_assert!(
+            self.pending.back().map(|b| b.arrival_us <= r.arrival_us).unwrap_or(true),
+            "requests must be admitted in arrival order"
+        );
+        self.pending.push_back(r);
+    }
+
+    /// Arrival time of the oldest waiting request (the batcher's deadline
+    /// anchor).
+    pub fn head_arrival(&self) -> Option<u64> {
+        self.pending.front().map(|r| r.arrival_us)
+    }
+
+    /// Remove and return up to `n` oldest requests.
+    pub fn pop_n(&mut self, n: usize) -> Vec<Request> {
+        let take = n.min(self.pending.len());
+        self.pending.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, at: u64) -> Request {
+        Request { id, arrival_us: at, tokens: vec![0; 4] }
+    }
+
+    #[test]
+    fn fifo_in_arrival_order() {
+        let mut q = RequestQueue::new();
+        assert!(q.is_empty() && q.head_arrival().is_none());
+        q.push(req(0, 10));
+        q.push(req(1, 20));
+        q.push(req(2, 20));
+        assert_eq!((q.len(), q.head_arrival()), (3, Some(10)));
+        let batch = q.pop_n(2);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.head_arrival(), Some(20));
+        // pop_n past the end drains what's there
+        assert_eq!(q.pop_n(10).len(), 1);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,108 @@
+//! Per-request routing statistics and small latency helpers.
+//!
+//! A continuous batch routes many requests' rows through shared MoE
+//! segments; each request's completion reports the stats of *its own*
+//! token slice ([`crate::moe::TopkRouting::stats_for_tokens`]), absorbed
+//! across the model's MoE segments here and aggregated process-wide into
+//! [`crate::metrics::serving`] by the engine.
+
+use crate::moe::RouteStats;
+
+/// Routing outcome of one request across every MoE segment it traversed.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RequestStats {
+    /// Tokens in the request.
+    pub tokens: usize,
+    /// MoE segments absorbed (0 for the live tier, whose routing is fused
+    /// into HLO — see `forward::ManifestForward`).
+    pub moe_segments: usize,
+    /// Distinct experts hit, summed over segments ("expert activations").
+    pub experts_hit: usize,
+    /// (token, level) assignments dropped at capacity, summed over
+    /// segments.
+    pub assignments_dropped: usize,
+    /// Mean per-token top-k gate entropy (nats), averaged over segments.
+    pub gate_entropy: f64,
+}
+
+impl RequestStats {
+    /// Fresh stats for a request of `tokens` rows.
+    pub fn new(tokens: usize) -> Self {
+        RequestStats { tokens, ..Default::default() }
+    }
+
+    /// Fold one MoE segment's slice stats into the running aggregate.
+    pub fn absorb(&mut self, rs: RouteStats) {
+        let n = self.moe_segments as f64;
+        self.gate_entropy = (self.gate_entropy * n + rs.gate_entropy) / (n + 1.0);
+        self.moe_segments += 1;
+        self.experts_hit += rs.experts_hit;
+        self.assignments_dropped += rs.assignments_dropped;
+    }
+}
+
+/// Nearest-rank percentile of a **sorted** latency slice (p in [0, 100]).
+pub fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Order-sensitive checksum of an output row — what the closed-loop bench
+/// keeps per request once the slab itself is recycled. Two rows are
+/// bitwise equal iff their payload bits (and order) match, so equal
+/// checksums across the batched/serial runs is the cheap proxy the bench
+/// asserts (the property test compares full rows).
+pub fn row_checksum(row: &[f32]) -> u64 {
+    let mut acc: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in row {
+        acc = acc.rotate_left(13) ^ (v.to_bits() as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_averages_entropy_and_sums_counts() {
+        let mut s = RequestStats::new(8);
+        s.absorb(RouteStats {
+            tokens: 8,
+            experts_hit: 3,
+            assignments_dropped: 2,
+            gate_entropy: 0.4,
+        });
+        s.absorb(RouteStats {
+            tokens: 8,
+            experts_hit: 1,
+            assignments_dropped: 0,
+            gate_entropy: 0.8,
+        });
+        assert_eq!((s.moe_segments, s.experts_hit, s.assignments_dropped), (2, 4, 2));
+        assert!((s.gate_entropy - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let lat: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&lat, 50.0), 50);
+        assert_eq!(percentile_us(&lat, 99.0), 99);
+        assert_eq!(percentile_us(&lat, 100.0), 100);
+        assert_eq!(percentile_us(&[7], 50.0), 7);
+        assert_eq!(percentile_us(&[], 99.0), 0);
+    }
+
+    #[test]
+    fn checksum_is_order_and_bit_sensitive() {
+        let a = row_checksum(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, row_checksum(&[1.0, 2.0, 3.0]));
+        assert_ne!(a, row_checksum(&[2.0, 1.0, 3.0]));
+        assert_ne!(a, row_checksum(&[1.0, 2.0]));
+        // -0.0 and 0.0 differ in bits, so they must differ in checksum
+        assert_ne!(row_checksum(&[0.0]), row_checksum(&[-0.0]));
+    }
+}

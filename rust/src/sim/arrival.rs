@@ -1,0 +1,189 @@
+//! Arrival processes and a service-time model for the serving tier.
+//!
+//! The serving engine (`serve/`) is deterministic under a *fixed arrival
+//! trace*: the load generator materializes the whole trace up-front from a
+//! seed (via [`arrival_trace`]) and the engine's batch assembly runs on a
+//! virtual microsecond clock over it — never on wall time — so the same
+//! (seed, mix, knobs) tuple reproduces the same batches, the same drops
+//! and the same output bits on every run and every machine. The three
+//! mixes map the regimes EPS-MoE (arxiv 2410.12247) identifies as the
+//! serving frontier: steady interactive load (uniform), heavy-tailed
+//! inter-arrival gaps (zipf), and on/off burst trains (bursty).
+//!
+//! [`ServiceModel`] is the virtual-clock cost of one forward batch in the
+//! no-backend tier — an affine launch + per-token model, the same shape as
+//! `sim::CostModel`'s GEMM side but deliberately tiny: it only has to
+//! order events plausibly, not predict hardware.
+
+use crate::util::prng::Rng;
+use anyhow::bail;
+
+/// Which inter-arrival distribution the load generator draws from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Gaps uniform in `[0, 2·mean)` — steady interactive load.
+    Uniform,
+    /// Zipf-like heavy tail (capped Pareto, α ≈ 1): mostly short gaps,
+    /// occasional very long ones.
+    Zipf,
+    /// On/off burst trains: runs of near-back-to-back requests separated
+    /// by long idle stretches.
+    Bursty,
+}
+
+impl ArrivalKind {
+    /// Parse a `--arrival` CLI value.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "uniform" => Ok(Self::Uniform),
+            "zipf" => Ok(Self::Zipf),
+            "bursty" => Ok(Self::Bursty),
+            other => bail!("unknown arrival mix '{other}' (uniform|zipf|bursty)"),
+        }
+    }
+
+    /// Stable label for bench rows and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Uniform => "uniform",
+            Self::Zipf => "zipf",
+            Self::Bursty => "bursty",
+        }
+    }
+
+    /// All mixes, in the order the serve bench sweeps them.
+    pub const ALL: [ArrivalKind; 3] = [Self::Uniform, Self::Zipf, Self::Bursty];
+}
+
+/// A seeded arrival trace: `n` monotone non-decreasing arrival times in
+/// virtual microseconds, mean inter-arrival gap ≈ `mean_gap_us`. The trace
+/// is the *entire* source of serving-side randomness — the engine itself
+/// draws nothing.
+pub fn arrival_trace(kind: ArrivalKind, n: usize, mean_gap_us: u64, seed: u64) -> Vec<u64> {
+    // per-kind salt: the three mixes at one seed are independent streams
+    let salt: u64 = match kind {
+        ArrivalKind::Uniform => 0x55,
+        ArrivalKind::Zipf => 0x5A,
+        ArrivalKind::Bursty => 0xB5,
+    };
+    let mut rng = Rng::new(seed ^ (salt << 32));
+    let mean = mean_gap_us.max(1) as f64;
+    let mut t = 0u64;
+    let mut out = Vec::with_capacity(n);
+    let mut burst_left = 0usize;
+    for _ in 0..n {
+        let gap = match kind {
+            ArrivalKind::Uniform => rng.f64() * 2.0 * mean,
+            ArrivalKind::Zipf => {
+                // capped Pareto with scale mean/4: median ≈ mean/2,
+                // tail up to 20× the mean
+                let u = rng.f64().min(1.0 - 1e-12);
+                (0.25 * mean / (1.0 - u)).min(20.0 * mean)
+            }
+            ArrivalKind::Bursty => {
+                if burst_left == 0 {
+                    // a new train: geometric-ish length 2..=16, preceded
+                    // by an idle stretch that keeps the overall mean near
+                    // `mean`
+                    burst_left = 2 + rng.below(15);
+                    burst_left as f64 * mean * 0.9
+                } else {
+                    burst_left -= 1;
+                    0.1 * mean
+                }
+            }
+        };
+        t += gap as u64;
+        out.push(t);
+    }
+    out
+}
+
+/// Virtual-clock service time of one forward batch: affine in the batch's
+/// token count. Used only by the no-backend tier to advance the engine's
+/// virtual clock (real runs measure wall time as well, but *batching
+/// decisions* always use the virtual clock so output bits never depend on
+/// machine speed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceModel {
+    /// Fixed per-launch cost (dispatch + readback overhead), µs.
+    pub us_per_launch: f64,
+    /// Marginal per-token cost, µs.
+    pub us_per_token: f64,
+}
+
+impl ServiceModel {
+    /// The default stub-tier model: launches dominate tiny batches, which
+    /// is what makes batching win and gives the policy knobs something to
+    /// trade off.
+    pub fn cpu_stub() -> Self {
+        ServiceModel { us_per_launch: 200.0, us_per_token: 4.0 }
+    }
+
+    /// Service time for a batch of `tokens` rows, µs (≥ 1 so the virtual
+    /// clock always advances).
+    pub fn service_us(&self, tokens: usize) -> u64 {
+        (self.us_per_launch + self.us_per_token * tokens as f64).max(1.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_seeded_monotone_and_mix_dependent() {
+        for kind in ArrivalKind::ALL {
+            let a = arrival_trace(kind, 256, 1000, 7);
+            let b = arrival_trace(kind, 256, 1000, 7);
+            assert_eq!(a, b, "{}: same seed, same trace", kind.label());
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "monotone");
+            let c = arrival_trace(kind, 256, 1000, 8);
+            assert_ne!(a, c, "{}: different seed, different trace", kind.label());
+        }
+        // the mixes are actually different processes
+        let u = arrival_trace(ArrivalKind::Uniform, 64, 1000, 3);
+        let z = arrival_trace(ArrivalKind::Zipf, 64, 1000, 3);
+        assert_ne!(u, z);
+    }
+
+    #[test]
+    fn mean_gaps_are_in_the_right_ballpark() {
+        for kind in ArrivalKind::ALL {
+            let n = 4096;
+            let trace = arrival_trace(kind, n, 1000, 11);
+            let mean = *trace.last().unwrap() as f64 / n as f64;
+            assert!(
+                mean > 250.0 && mean < 4000.0,
+                "{}: mean gap {mean} µs too far from 1000",
+                kind.label()
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_has_short_and_long_gaps() {
+        let trace = arrival_trace(ArrivalKind::Bursty, 512, 1000, 5);
+        let gaps: Vec<u64> = trace.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(gaps.iter().any(|g| *g <= 150), "burst-interior gaps");
+        assert!(gaps.iter().any(|g| *g >= 1800), "idle stretches");
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in ArrivalKind::ALL {
+            assert_eq!(ArrivalKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert!(ArrivalKind::parse("poisson").is_err());
+    }
+
+    #[test]
+    fn service_model_is_affine_and_positive() {
+        let sm = ServiceModel::cpu_stub();
+        let a = sm.service_us(0);
+        let b = sm.service_us(100);
+        let c = sm.service_us(200);
+        assert!(a >= 1);
+        assert_eq!(c - b, b - a, "affine in tokens");
+    }
+}

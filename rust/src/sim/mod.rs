@@ -13,6 +13,8 @@
 //! Absolute times will differ from the authors' testbed; the *shape*
 //! (who wins, component shares, crossovers) is the reproduction target.
 
+pub mod arrival;
+
 use crate::cluster::{Link, Mesh};
 use crate::comm::CostModel;
 use crate::config::{ClusterCfg, ModelDims, ParallelCfg, Scheme, TrainCfg};

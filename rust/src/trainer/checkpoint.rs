@@ -96,6 +96,32 @@ pub fn commit_staged(dir: &Path, steps: usize, dp: usize, tp: usize) -> Result<(
     Ok(())
 }
 
+/// Sorted UTF-8 file names in a checkpoint directory. Entries whose names
+/// are not valid UTF-8 are **skipped** (with a note on stderr) rather than
+/// panicked on: every file this module writes has an ASCII name, so a
+/// non-UTF8 entry is by construction foreign garbage, not checkpoint
+/// state. Before PR 8 the scan went through `into_string().unwrap()` and a
+/// single such entry — a stray editor artifact, an rsync temp file — took
+/// the whole process down.
+pub fn dir_file_names(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for e in
+        std::fs::read_dir(dir).with_context(|| format!("scanning {}", dir.display()))?
+    {
+        let e = e.with_context(|| format!("scanning {}", dir.display()))?;
+        match e.file_name().into_string() {
+            Ok(name) => names.push(name),
+            Err(os) => eprintln!(
+                "checkpoint scan: skipping non-UTF8 entry {:?} in {}",
+                os,
+                dir.display()
+            ),
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
 /// File name of one (stage, tp-rank)'s parameter checkpoint: tp = 1 keeps
 /// the historic `stage<i>.bin` (drop-in for `artifacts/params/`); under
 /// tensor parallelism every rank's expert-sharded vector is its own file.
@@ -932,10 +958,41 @@ mod tests {
         save_stage(&dir, 0, &m, &params).unwrap();
         save_optimizer(&dir, 0, &[ShardedAdam::new(0.05, &params, 0, 1)]).unwrap();
         save_train_state(&dir, 1, 1, 1).unwrap();
-        for e in std::fs::read_dir(&dir).unwrap() {
-            let name = e.unwrap().file_name().into_string().unwrap();
+        for name in dir_file_names(&dir).unwrap() {
             assert!(!name.ends_with(".tmp"), "leftover temp file {name}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Regression (PR 8): a non-UTF8 filename in a checkpoint directory
+    /// must not panic the scan — and must not break loading the real
+    /// checkpoint files next to it.
+    #[test]
+    #[cfg(unix)]
+    fn non_utf8_entries_are_skipped_not_fatal() {
+        use std::os::unix::ffi::OsStrExt;
+        let dir = std::env::temp_dir().join(format!("ppmoe_nonutf8_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let m = fake_manifest();
+        let params = vec![
+            Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]),
+            Tensor::f32(vec![5.0, 6.0], vec![2]),
+        ];
+        save_stage(&dir, 0, &m, &params).unwrap();
+        save_train_state(&dir, 1, 1, 1).unwrap();
+        // 0x80 0xFF is not valid UTF-8 in any position
+        let evil = std::ffi::OsStr::from_bytes(&[b'g', b'a', b'r', 0x80, 0xFF]);
+        std::fs::write(dir.join(evil), b"junk").unwrap();
+        let names = dir_file_names(&dir).unwrap();
+        assert!(
+            names.contains(&"stage0.bin".to_string())
+                && names.contains(&"train_state.json".to_string()),
+            "real checkpoint files must survive the scan: {names:?}"
+        );
+        assert_eq!(names.len(), 2, "the non-UTF8 entry is skipped: {names:?}");
+        // and the load path next to the junk entry still works
+        assert_eq!(load_stage(&dir, 0, &m).unwrap(), params);
+        assert_eq!(load_train_state(&dir).unwrap(), (1, 1, 1));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -2324,15 +2324,19 @@ fn stage_worker_inner(
     }
 
     // slab economy: after warmup every p2p payload should come from the
-    // reclaim channel, not the allocator
+    // reclaim channel, not the allocator. `*_slab_prefill` counts the
+    // bounded up-front seeds (wrap-edge double buffers) — total fresh
+    // allocations = miss + prefill, hits are recycled slabs only.
     for cio in &io.chunks {
         if let Some(pool) = &cio.act_pool {
             timers.add_count("act_slab_hit", pool.hits);
             timers.add_count("act_slab_miss", pool.misses);
+            timers.add_count("act_slab_prefill", pool.prefilled);
         }
         if let Some(pool) = &cio.grad_pool {
             timers.add_count("grad_slab_hit", pool.hits);
             timers.add_count("grad_slab_miss", pool.misses);
+            timers.add_count("grad_slab_prefill", pool.prefilled);
         }
     }
 

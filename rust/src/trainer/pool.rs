@@ -1,12 +1,32 @@
-//! Per-edge slab pools: activation/gradient payloads are recycled across
-//! microbatches instead of being freshly allocated for every mpsc send.
+//! Slab pools: activation/gradient/output payloads are recycled instead of
+//! being freshly allocated for every send.
 //!
-//! Each pipeline edge (the p2p link of §3.1.3) gets a back-channel
-//! carrying spent `Vec<f32>` storage from the consumer back to the
-//! producer. The producer reads the next payload *into* a reclaimed slab
-//! (`SlabPool::take`), the consumer uploads it to its device and returns
-//! the storage (`SlabReturn::put`). After the pipeline's warmup rounds the
-//! steady state sends zero fresh allocations over any edge.
+//! Two variants share the same counter semantics:
+//!
+//! - [`SlabPool`]/[`SlabReturn`] — the per-edge mpsc pair used by the
+//!   trainer. Each pipeline edge (the p2p link of §3.1.3) gets a
+//!   back-channel carrying spent `Vec<f32>` storage from the consumer back
+//!   to the producer. The producer reads the next payload *into* a
+//!   reclaimed slab ([`SlabPool::take`]), the consumer uploads it to its
+//!   device and returns the storage ([`SlabReturn::put`]).
+//! - [`LocalSlabPool`] — a same-thread free-list with identical accounting,
+//!   used by the forward-only serving engine (`serve/`) for request
+//!   activation and output payloads, where producer and consumer are the
+//!   same thread and a channel would be overhead.
+//!
+//! After warmup the steady state hands out zero fresh allocations; the
+//! counters exist to *certify* that. The invariant they certify is
+//!
+//! ```text
+//! total allocations == misses + prefilled
+//! ```
+//!
+//! `hits` counts only genuinely recycled storage. Pre-seeded slabs
+//! ([`SlabPool::prefill`]) are fresh allocations made up-front — they are
+//! tracked in the separate `prefilled` counter, not as hits (which would
+//! hide the allocation) nor as take-time misses (the allocation does not
+//! happen on the hot path). A steady state is zero-alloc iff `misses` stops
+//! growing and `prefilled` equals the fixed seed count.
 //!
 //! The channel pair is deliberately asymmetric: the pool (producer side)
 //! never blocks — if the consumer hasn't returned a slab yet (warmup, or a
@@ -20,11 +40,16 @@ pub struct SlabPool {
     reclaim: Receiver<Vec<f32>>,
     /// Producer-local pre-seeded slabs ([`SlabPool::prefill`]), consumed
     /// before the reclaim channel is consulted.
-    prefilled: Vec<Vec<f32>>,
-    /// Fresh allocations handed out (steady state: stops growing).
+    seeded: Vec<Vec<f32>>,
+    /// Fresh allocations handed out at take time (steady state: stops
+    /// growing).
     pub misses: u64,
-    /// Recycled slabs handed out.
+    /// Recycled slabs handed out (returned by the consumer and reused).
     pub hits: u64,
+    /// Fresh slabs allocated up-front by [`SlabPool::prefill`]. Counted
+    /// here — not as hits or misses — so `misses + prefilled` is the true
+    /// allocation count.
+    pub prefilled: u64,
 }
 
 /// Consumer side: returns spent payload storage to the producer.
@@ -37,7 +62,7 @@ pub struct SlabReturn {
 pub fn slab_pair() -> (SlabPool, SlabReturn) {
     let (tx, rx) = channel();
     (
-        SlabPool { reclaim: rx, prefilled: Vec::new(), misses: 0, hits: 0 },
+        SlabPool { reclaim: rx, seeded: Vec::new(), misses: 0, hits: 0, prefilled: 0 },
         SlabReturn { tx },
     )
 }
@@ -47,18 +72,21 @@ impl SlabPool {
     /// capacity, served before the reclaim channel. Wrap-around edges use
     /// `prefill(2, ..)` for **double buffering**: one slab can sit staged
     /// on the producer (d2h issued, send deferred) while the previous one
-    /// drains through the channel — with zero warmup misses.
+    /// drains through the channel — with zero warmup misses. The `count`
+    /// fresh allocations are recorded in [`SlabPool::prefilled`].
     pub fn prefill(&mut self, count: usize, len: usize) {
         for _ in 0..count {
-            self.prefilled.push(Vec::with_capacity(len));
+            self.seeded.push(Vec::with_capacity(len));
         }
+        self.prefilled += count as u64;
     }
 
-    /// A cleared buffer with capacity for `len` elements — recycled if the
-    /// consumer has returned one, freshly allocated otherwise.
+    /// A cleared buffer with capacity for `len` elements — pre-seeded or
+    /// recycled if available, freshly allocated (a miss) otherwise.
     pub fn take(&mut self, len: usize) -> Vec<f32> {
-        if let Some(mut v) = self.prefilled.pop() {
-            self.hits += 1;
+        if let Some(mut v) = self.seeded.pop() {
+            // Neither hit nor miss: the allocation was already counted in
+            // `prefilled` when the slab was seeded.
             v.clear();
             v.reserve(len);
             return v;
@@ -83,6 +111,59 @@ impl SlabReturn {
     /// order) is fine — the storage is simply dropped.
     pub fn put(&self, v: Vec<f32>) {
         self.tx.send(v).ok();
+    }
+}
+
+/// Same-thread slab pool: identical accounting to [`SlabPool`], but
+/// producer and consumer are one thread so recycling is a plain free-list
+/// push instead of an mpsc round-trip. The serving engine uses one of these
+/// for request activation/output payloads.
+#[derive(Default)]
+pub struct LocalSlabPool {
+    free: Vec<Vec<f32>>,
+    seeded: Vec<Vec<f32>>,
+    /// Fresh allocations handed out at take time.
+    pub misses: u64,
+    /// Recycled slabs handed out.
+    pub hits: u64,
+    /// Fresh slabs allocated up-front by [`LocalSlabPool::prefill`].
+    pub prefilled: u64,
+}
+
+impl LocalSlabPool {
+    /// An empty pool: every early `take` is a miss until slabs come back.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-seed `count` slabs of `len` capacity (counted in `prefilled`).
+    pub fn prefill(&mut self, count: usize, len: usize) {
+        for _ in 0..count {
+            self.seeded.push(Vec::with_capacity(len));
+        }
+        self.prefilled += count as u64;
+    }
+
+    /// A cleared buffer with capacity for `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        if let Some(mut v) = self.seeded.pop() {
+            v.clear();
+            v.reserve(len);
+            return v;
+        }
+        if let Some(mut v) = self.free.pop() {
+            self.hits += 1;
+            v.clear();
+            v.reserve(len);
+            return v;
+        }
+        self.misses += 1;
+        Vec::with_capacity(len)
+    }
+
+    /// Return spent storage for reuse.
+    pub fn put(&mut self, v: Vec<f32>) {
+        self.free.push(v);
     }
 }
 
@@ -121,21 +202,55 @@ mod tests {
         ret2.put(vec![1.0]); // no panic either
     }
 
+    /// Regression (PR 8): prefilled slabs are *fresh allocations*, not
+    /// hits. Counting them as hits hid real allocations from the
+    /// zero-alloc certificate — `prefill(2, ..)` + two takes used to
+    /// report (hits, misses) = (2, 0) as if storage had been recycled.
     #[test]
     fn prefill_serves_before_allocating() {
         let (mut pool, ret) = slab_pair();
         pool.prefill(2, 16);
+        assert_eq!(pool.prefilled, 2, "prefill allocations counted up-front");
         let a = pool.take(8);
         let b = pool.take(8);
-        assert_eq!((pool.hits, pool.misses), (2, 0), "prefilled slabs are hits");
+        assert_eq!(
+            (pool.hits, pool.misses, pool.prefilled),
+            (0, 0, 2),
+            "pre-seeded takes are neither hits nor misses"
+        );
         assert!(a.capacity() >= 16 && b.capacity() >= 16);
         // once drained, the pool falls back to reclaim-or-allocate
         ret.put(a);
         let c = pool.take(8);
-        assert_eq!((pool.hits, pool.misses), (3, 0));
+        assert_eq!(
+            (pool.hits, pool.misses, pool.prefilled),
+            (1, 0, 2),
+            "a recycled slab is the only kind of hit"
+        );
         drop(c);
         let _d = pool.take(8);
-        assert_eq!(pool.misses, 1);
+        assert_eq!((pool.hits, pool.misses, pool.prefilled), (1, 1, 2));
+    }
+
+    /// The certified invariant: every slab ever handed out is accounted as
+    /// exactly one of {hit, miss, prefilled-seed}.
+    #[test]
+    fn allocation_accounting_is_total() {
+        let (mut pool, ret) = slab_pair();
+        pool.prefill(1, 8);
+        let mut takes = 0u64;
+        let mut held = Vec::new();
+        for i in 0..10 {
+            held.push(pool.take(8));
+            takes += 1;
+            if i % 2 == 1 {
+                ret.put(held.remove(0));
+            }
+        }
+        // prefilled counts seeds (1), not takes served from seeds; the
+        // seed-served take is the gap between takes and hits+misses.
+        assert_eq!(pool.hits + pool.misses + pool.prefilled, takes);
+        assert_eq!(pool.prefilled, 1);
     }
 
     #[test]
@@ -145,5 +260,22 @@ mod tests {
         let v = pool.take(64);
         assert!(v.capacity() >= 64, "reserve must honor the larger request");
         assert_eq!(pool.hits, 1);
+    }
+
+    #[test]
+    fn local_pool_matches_channel_pool_accounting() {
+        let mut pool = LocalSlabPool::new();
+        pool.prefill(1, 16);
+        let a = pool.take(8);
+        assert_eq!((pool.hits, pool.misses, pool.prefilled), (0, 0, 1));
+        let b = pool.take(8);
+        assert_eq!((pool.hits, pool.misses, pool.prefilled), (0, 1, 1));
+        let ptr = a.as_ptr();
+        pool.put(a);
+        let c = pool.take(4);
+        assert_eq!((pool.hits, pool.misses, pool.prefilled), (1, 1, 1));
+        assert_eq!(c.as_ptr(), ptr, "free-list storage must be reused");
+        drop(b);
+        drop(c);
     }
 }

@@ -1,0 +1,207 @@
+//! Serving-tier equivalence suite.
+//!
+//! Two tiers, like the dp/tp/elastic suites:
+//!
+//! * **Contract tier** (always runs): property sweeps over the stub
+//!   forward proving the tentpole invariant — continuous batching at ANY
+//!   `(max-batch, max-wait, arrival-trace)` produces output rows
+//!   **bitwise equal** to the same requests run one-at-a-time through the
+//!   serial reference — plus engine determinism, the index-slice vs dense
+//!   dispatch A/B under the engine, and policy-cap discipline.
+//! * **Live tier** (needs a real PJRT backend + artifacts): the same
+//!   batched-vs-serial check over `ManifestForward` on the exported
+//!   manifest. Self-skips with a `SKIP:` line otherwise, like every other
+//!   live tier in this repo.
+
+mod common;
+
+use ppmoe::serve::engine::{run_serial, run_trace, EngineCfg, ServeRun};
+use ppmoe::serve::forward::{DispatchMode, ManifestForward};
+use ppmoe::serve::{BatchPolicy, ForwardModel, Request, StubDims, StubForward};
+use ppmoe::sim::arrival::{arrival_trace, ArrivalKind, ServiceModel};
+use ppmoe::util::prng::Rng;
+use ppmoe::util::prop::forall;
+
+/// A random-but-seeded request stream for one case.
+fn requests(seed: u64, n: usize, kind: ArrivalKind, seq: usize, vocab: usize) -> Vec<Request> {
+    let trace = arrival_trace(kind, n, 250, seed);
+    let mut rng = Rng::new(seed ^ 0x5eb);
+    trace
+        .into_iter()
+        .enumerate()
+        .map(|(i, arrival_us)| Request {
+            id: i as u64,
+            arrival_us,
+            tokens: (0..seq).map(|_| rng.below(vocab) as u32).collect(),
+        })
+        .collect()
+}
+
+fn engine_cfg(max_batch: usize, max_wait_us: u64) -> EngineCfg {
+    EngineCfg {
+        policy: BatchPolicy { max_batch, max_wait_us },
+        service: ServiceModel::cpu_stub(),
+        keep_outputs: true,
+    }
+}
+
+/// Outputs keyed by request id, for order-insensitive bitwise comparison.
+fn outputs_by_id(run: &ServeRun) -> Vec<(u64, Vec<f32>)> {
+    let mut v: Vec<(u64, Vec<f32>)> = run
+        .completions
+        .iter()
+        .map(|c| (c.id, c.output.clone().expect("keep_outputs run")))
+        .collect();
+    v.sort_by_key(|(id, _)| *id);
+    v
+}
+
+/// One random serving scenario.
+#[derive(Debug)]
+struct Case {
+    seed: u64,
+    n: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+    kind: ArrivalKind,
+    tight_capacity: bool,
+}
+
+fn gen_case(r: &mut Rng) -> Case {
+    Case {
+        seed: r.next_u64(),
+        n: r.range(1, 33),
+        max_batch: r.range(1, 9),
+        max_wait_us: [0u64, 50, 400, 2000][r.below(4)],
+        kind: ArrivalKind::ALL[r.below(3)],
+        // half the cases run at cf=0.5 so capacity drops are exercised
+        // inside the equivalence property, not just in unit tests
+        tight_capacity: r.below(2) == 1,
+    }
+}
+
+fn dims_for(case: &Case) -> StubDims {
+    if case.tight_capacity {
+        StubDims { capacity_factor: 0.5, ..StubDims::tiny() }
+    } else {
+        StubDims::tiny()
+    }
+}
+
+#[test]
+fn batched_equals_serial_bitwise_for_any_policy_and_trace() {
+    forall("serve/batched==serial", 0xC0FFEE, 60, gen_case, |case| {
+        let d = dims_for(case);
+        let reqs = requests(case.seed, case.n, case.kind, d.seq, d.vocab);
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let cfg = engine_cfg(case.max_batch, case.max_wait_us);
+        let batched = run_trace(&mut fm, reqs.clone(), &cfg).map_err(|e| e.to_string())?;
+        let mut fm2 = StubForward::new(d, DispatchMode::IndexSlice);
+        let serial =
+            run_serial(&mut fm2, reqs, ServiceModel::cpu_stub()).map_err(|e| e.to_string())?;
+        if batched.completions.len() != case.n {
+            return Err(format!("{} of {} completed", batched.completions.len(), case.n));
+        }
+        if outputs_by_id(&batched) != outputs_by_id(&serial) {
+            return Err("batched outputs differ from the serial reference".into());
+        }
+        // routing stats are per-request too, so they must match as well
+        let key = |run: &ServeRun| {
+            let mut v: Vec<_> = run.completions.iter().map(|c| (c.id, c.stats)).collect();
+            v.sort_by_key(|(id, _)| *id);
+            v
+        };
+        if key(&batched) != key(&serial) {
+            return Err("per-request routing stats differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_reruns_are_bitwise_identical() {
+    forall("serve/rerun==run", 0xD00D, 40, gen_case, |case| {
+        let d = dims_for(case);
+        let cfg = engine_cfg(case.max_batch, case.max_wait_us);
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let reqs = requests(case.seed, case.n, case.kind, d.seq, d.vocab);
+        let a = run_trace(&mut fm, reqs.clone(), &cfg).map_err(|e| e.to_string())?;
+        let b = run_trace(&mut fm, reqs, &cfg).map_err(|e| e.to_string())?;
+        if a.makespan_us != b.makespan_us || a.batches != b.batches {
+            return Err(format!(
+                "schedule drifted: {} vs {} µs, {} vs {} batches",
+                a.makespan_us, b.makespan_us, a.batches, b.batches
+            ));
+        }
+        if outputs_by_id(&a) != outputs_by_id(&b) {
+            return Err("same trace, different bits".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn index_slice_and_dense_dispatch_agree_under_the_engine() {
+    forall("serve/index_slice==dense", 0xAB, 40, gen_case, |case| {
+        let d = dims_for(case);
+        let cfg = engine_cfg(case.max_batch, case.max_wait_us);
+        let reqs = requests(case.seed, case.n, case.kind, d.seq, d.vocab);
+        let mut slice = StubForward::new(d, DispatchMode::IndexSlice);
+        let mut dense = StubForward::new(d, DispatchMode::Dense);
+        let a = run_trace(&mut slice, reqs.clone(), &cfg).map_err(|e| e.to_string())?;
+        let b = run_trace(&mut dense, reqs, &cfg).map_err(|e| e.to_string())?;
+        if outputs_by_id(&a) != outputs_by_id(&b) {
+            return Err("dispatch order changed output bits".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batches_respect_the_policy_cap_and_fifo_order() {
+    forall("serve/policy-cap", 0xF1F0, 40, gen_case, |case| {
+        let d = dims_for(case);
+        let reqs = requests(case.seed, case.n, case.kind, d.seq, d.vocab);
+        let mut fm = StubForward::new(d, DispatchMode::IndexSlice);
+        let run = run_trace(&mut fm, reqs, &engine_cfg(case.max_batch, case.max_wait_us))
+            .map_err(|e| e.to_string())?;
+        for c in &run.completions {
+            if c.batch_size > case.max_batch {
+                return Err(format!("batch of {} above cap {}", c.batch_size, case.max_batch));
+            }
+            if c.launch_us < c.arrival_us {
+                return Err(format!("request {} launched before it arrived", c.id));
+            }
+        }
+        // completion order is launch order, and launches are FIFO: ids
+        // within a run complete in arrival (= id) order per batch
+        let slots: u64 = run.completions.len() as u64;
+        if run.slots_filled != slots {
+            return Err(format!("{} slots for {} completions", run.slots_filled, slots));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn live_manifest_batched_equals_serial() {
+    if !common::live_backend() {
+        return; // SKIP line printed by the helper
+    }
+    let Some(dir) = common::artifacts_dir() else {
+        return;
+    };
+    let mut fm = match ManifestForward::open(&dir, 1) {
+        Ok(fm) => fm,
+        Err(e) => panic!("live backend present but serve open failed: {e:#}"),
+    };
+    let seq = fm.seq();
+    let reqs = requests(7, 6, ArrivalKind::Bursty, seq, 64);
+    let batched = run_trace(&mut fm, reqs.clone(), &engine_cfg(4, 500)).unwrap();
+    let serial = run_serial(&mut fm, reqs, ServiceModel::cpu_stub()).unwrap();
+    assert_eq!(
+        outputs_by_id(&batched),
+        outputs_by_id(&serial),
+        "live tier: batched rows must match the serial reference bitwise"
+    );
+}
