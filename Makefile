@@ -6,7 +6,7 @@ CARGO ?= cargo
 
 .PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 artifacts-tiny-k2 \
         artifacts-tiny-v4-k2 build test test-dp test-dp-py test-tp \
-        test-tp-py test-elastic test-serve bench bench-serve doc clean
+        test-tp-py test-elastic test-serve test-comm bench bench-serve doc clean
 
 all: artifacts build
 
@@ -102,6 +102,16 @@ test-elastic:
 test-serve:
 	$(CARGO) test --test serve_equivalence -q -- --nocapture
 
+# The hierarchical dp sync slice: live two-level reduce-scatter/all-gather
+# bitwise-equal to flat over (nodes, g) shapes × ragged lengths × both
+# forwarding modes, topology placement contracts, and the gated
+# `--dp 4 --nodes 2 --hier-comm` trainer equivalence
+# (rust/tests/hier_comm.rs; docs/hotpath.md §Hierarchical dp sync). The
+# property tier runs everywhere; the trainer tier self-skips without
+# artifacts/backend.
+test-comm:
+	$(CARGO) test --test hier_comm -q -- --nocapture
+
 # Closed-loop serving bench: `ppmoe serve --loadgen` sweeps the
 # uniform/zipf/bursty arrival mixes and writes BENCH_serve.json
 # (p50/p99 latency, tokens/s, batch fill, dispatch A/B ns rows, oracle
@@ -112,8 +122,10 @@ bench-serve:
 
 # Hot-path microbenches (writes BENCH_hotpath.json: incl. the
 # dp_sync/{serialized,overlapped} dp={2,4} A/B rows, the
-# optimizer/zero1-live r={1,2,4} zero-alloc rows and the tp_combine rows)
-# + the Table 2 sweep with its interleaved variant.
+# optimizer/zero1-live r={1,2,4} zero-alloc rows and the tp_combine rows;
+# plus BENCH_comm.json: the dp_sync/hierarchical nodes={1,2,4} flat vs
+# two-level vs chunk-pipelined rows) + the Table 2 sweep with its
+# interleaved variant.
 bench:
 	$(CARGO) bench --bench hotpath_micro
 	$(CARGO) bench --bench table2_throughput

@@ -13,7 +13,9 @@
 //! 4. DPMoE memory feasibility — why 143B needs TP (Table 2's footnote).
 //! 5. Top-1 vs top-2 gating throughput.
 
-use ppmoe::comm::hierarchical::{hierarchical_all_reduce, flat_all_reduce};
+use ppmoe::comm::hierarchical::{
+    flat_all_reduce, hierarchical_all_reduce, hierarchical_all_reduce_pipelined,
+};
 use ppmoe::comm::CostModel;
 use ppmoe::config::{
     moe_large_setting, moe_small_setting, v100_cluster, ModelDims, ParallelCfg,
@@ -98,18 +100,26 @@ fn hierarchical_ar() {
         let cm = CostModel::new(v100_cluster(nodes * 8));
         let flat = flat_all_reduce(&cm, nodes * 8, 1e9).seconds;
         let hier = hierarchical_all_reduce(&cm, nodes, 1e9).seconds;
+        let piped = hierarchical_all_reduce_pipelined(&cm, nodes, 1e9, 64).seconds;
         rows.push(vec![
             format!("{nodes} ({} GPUs)", nodes * 8),
             format!("{:.1}", flat * 1e3),
             format!("{:.1}", hier * 1e3),
-            format!("{:.2}x", flat / hier),
+            format!("{:.1}", piped * 1e3),
+            format!("{:.2}x", flat / piped),
         ]);
     }
     print!(
         "{}",
-        markdown_table(&["nodes", "flat (ms)", "hierarchical (ms)", "speedup"], &rows)
+        markdown_table(
+            &["nodes", "flat (ms)", "two-level (ms)", "pipelined C=64 (ms)", "speedup"],
+            &rows,
+        )
     );
-    println!("(the §4.4 'faster all-reduce' head-room)\n");
+    println!(
+        "(the §4.4 'faster all-reduce' head-room; examples/comm_ablation.rs \
+         breaks the topology split out further)\n"
+    );
 }
 
 /// 4. DPMoE device memory: the Table-2 feasibility constraint.

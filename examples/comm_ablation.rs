@@ -1,0 +1,104 @@
+//! Comm ablation: flat vs two-level vs chunk-pipelined all-reduce for the
+//! dp gradient sync, at the paper's V100 cluster constants.
+//!
+//! ```sh
+//! cargo run --release --example comm_ablation
+//! ```
+//!
+//! This is the honest replacement for the old "57–93x" head-room claim the
+//! first hierarchical cost stub carried in its test comments: with the
+//! inter-node stage modeled as the **order-preserving chain** the live
+//! [`ppmoe::comm::HierarchicalGroup`] actually runs (bitwise-equality with
+//! flat demands rank-order summation, which a rotated ring breaks), the
+//! *serial* two-level edge erodes as the chain deepens — it is the
+//! chunk-pipelined overlap of the NIC hop against the NVLink fold that
+//! recovers a large, slowly-declining speedup at deep spans.
+//!
+//! Two tables:
+//! 1. nodes ∈ {2, 4, 8, 16} at 1 GiB: flat ring (NIC-contended by all
+//!    `g` ranks per node) vs serial two-level vs chunk-pipelined (C = 64),
+//!    with both speedups.
+//! 2. the chunk-count sweep at nodes = 8: C = 1 collapses to the serial
+//!    schedule by construction; returns diminish once the per-chunk α
+//!    overhead meets the fill/drain balance.
+
+use ppmoe::comm::hierarchical::{
+    flat_all_reduce, hierarchical_all_reduce, hierarchical_all_reduce_pipelined,
+    hierarchical_speedup, pipelined_speedup,
+};
+use ppmoe::comm::CostModel;
+use ppmoe::config::v100_cluster;
+use ppmoe::metrics::markdown_table;
+
+const GIB: f64 = 1e9;
+const CHUNKS: usize = 64;
+
+fn main() {
+    topology_sweep();
+    chunk_sweep();
+}
+
+/// Table 1: the dp sync A/B the trainer's `--nodes`/`--hier-comm` selects,
+/// over node counts, at the paper's V100 constants (8 GPUs/node, NVLink
+/// inside, one NIC out).
+fn topology_sweep() {
+    println!("=== comm ablation 1: dp sync topology (1 GiB gradients) ===");
+    let mut rows = Vec::new();
+    for nodes in [2usize, 4, 8, 16] {
+        let cm = CostModel::new(v100_cluster(nodes * 8));
+        let flat = flat_all_reduce(&cm, nodes * 8, GIB).seconds;
+        let serial = hierarchical_all_reduce(&cm, nodes, GIB).seconds;
+        let piped = hierarchical_all_reduce_pipelined(&cm, nodes, GIB, CHUNKS).seconds;
+        rows.push(vec![
+            format!("{nodes} ({} GPUs)", nodes * 8),
+            format!("{:.1}", flat * 1e3),
+            format!("{:.1}", serial * 1e3),
+            format!("{:.2}x", hierarchical_speedup(&cm, nodes, GIB)),
+            format!("{:.1}", piped * 1e3),
+            format!("{:.2}x", pipelined_speedup(&cm, nodes, GIB, CHUNKS)),
+        ]);
+    }
+    print!(
+        "{}",
+        markdown_table(
+            &[
+                "nodes",
+                "flat (ms)",
+                "two-level (ms)",
+                "serial speedup",
+                "pipelined C=64 (ms)",
+                "pipelined speedup",
+            ],
+            &rows,
+        )
+    );
+    println!(
+        "The serial chain's edge over flat erodes with depth (its inter-node \
+         stage\nis linear in nodes); chunk-pipelining hides the NIC hop under \
+         the NVLink\nfold and keeps the speedup large at deep spans. Both \
+         schedules are bitwise-\nidentical to flat on the live path \
+         (rust/tests/hier_comm.rs).\n"
+    );
+}
+
+/// Table 2: what the chunk count buys at a fixed deep span.
+fn chunk_sweep() {
+    println!("=== comm ablation 2: chunk-count sweep (nodes = 8, 1 GiB) ===");
+    let cm = CostModel::new(v100_cluster(64));
+    let serial = hierarchical_all_reduce(&cm, 8, GIB).seconds;
+    let mut rows = Vec::new();
+    for chunks in [1usize, 4, 16, 64, 256] {
+        let piped = hierarchical_all_reduce_pipelined(&cm, 8, GIB, chunks).seconds;
+        rows.push(vec![
+            chunks.to_string(),
+            format!("{:.1}", piped * 1e3),
+            format!("{:.2}x", serial / piped),
+        ]);
+    }
+    print!("{}", markdown_table(&["chunks", "pipelined (ms)", "vs serial"], &rows));
+    println!(
+        "C = 1 is the serial schedule by construction (the equality the \
+         property\ntest in comm/cost.rs pins); past the fill/drain balance \
+         the per-chunk α\noverhead eats further gains.\n"
+    );
+}

@@ -19,12 +19,14 @@
 //! Besides the human-readable lines, results are written to
 //! `BENCH_hotpath.json` (component -> ns/op stats) so successive PRs can
 //! diff hot-path trajectories mechanically. Before/after pairs share a
-//! prefix: e.g. `all_reduce/legacy r=4` vs `all_reduce/chunked r=4`.
+//! prefix: e.g. `all_reduce/legacy r=4` vs `all_reduce/chunked r=4`. The
+//! `dp_sync/hierarchical` topology rows (flat vs two-level vs
+//! chunk-pipelined at nodes ∈ {1, 2, 4}) go to their own `BENCH_comm.json`.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use ppmoe::comm::{Algo, AllReduceGroup};
+use ppmoe::comm::{Algo, AllReduceGroup, DpSyncGroup, HierarchicalGroup};
 use ppmoe::moe::{route_top1, route_topk, synth_logits, DropPolicy};
 use ppmoe::pipeline::interleaved::{interleaved_bubble, simulate_interleaved};
 use ppmoe::pipeline::{analytic_bubble, simulate, Schedule, StageTiming};
@@ -242,6 +244,50 @@ fn main() {
         }));
     }
 
+    println!("\n=== dp sync topology (flat vs two-level vs chunk-pipelined) ===");
+    // the live `--nodes`/`--hier-comm` A/B: one reduce-scatter + all-gather
+    // round over nodes × g ranks through the flat ring vs the two-level
+    // group in both forwarding modes. nodes = 1 shows the two-level
+    // machinery's overhead floor (no chain); nodes > 1 adds the
+    // order-preserving inter-node chain the live dp sync runs. In shared
+    // memory every hop costs the same, so these rows measure coordination
+    // structure, not NIC-vs-NVLink bandwidth (the cost model and
+    // examples/comm_ablation.rs cover that split). Rows land in their own
+    // BENCH_comm.json so the comm trajectory diffs mechanically across PRs.
+    let mut comm_results: Vec<BenchResult> = Vec::new();
+    {
+        let elems = 65_536usize;
+        let g = 2usize;
+        for nodes in [1usize, 2, 4] {
+            // bitwise spot check before timing (the full property sweep
+            // lives in rust/tests/hier_comm.rs)
+            let want = dp_sync_hier_step(nodes, g, 257, None);
+            for pipelined in [false, true] {
+                let got = dp_sync_hier_step(nodes, g, 257, Some(pipelined));
+                assert_eq!(want.len(), got.len());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "hierarchical path diverged from flat at nodes={nodes}"
+                    );
+                }
+            }
+            comm_results.push(bench(
+                &format!("dp_sync/hierarchical/flat nodes={nodes} g={g}"),
+                || dp_sync_hier_step(nodes, g, elems, None)[0],
+            ));
+            comm_results.push(bench(
+                &format!("dp_sync/hierarchical/two_level nodes={nodes} g={g}"),
+                || dp_sync_hier_step(nodes, g, elems, Some(false))[0],
+            ));
+            comm_results.push(bench(
+                &format!("dp_sync/hierarchical/pipelined nodes={nodes} g={g}"),
+                || dp_sync_hier_step(nodes, g, elems, Some(true))[0],
+            ));
+        }
+    }
+
     println!("\n=== grad-clip + Adam (three passes vs fused sweep) ===");
     for numel in [65_536usize, 1_048_576] {
         let grads = vec![Tensor::f32(vec![0.01; numel], vec![numel])];
@@ -391,7 +437,36 @@ fn main() {
         println!("(artifacts/manifest.json missing — run `make artifacts`)");
     }
 
-    write_json(&results);
+    write_json("BENCH_hotpath.json", &results);
+    write_json("BENCH_comm.json", &comm_results);
+}
+
+/// One dp sync round over `nodes × g` ranks through the selected topology
+/// path: `None` = flat single-level ring, `Some(pipelined)` = two-level
+/// hierarchical group in the given forwarding mode. Every rank deposits a
+/// rank-varying payload (so summation order is observable), reduce-scatters,
+/// all-gathers, and rank 0's full gathered vector is returned for the
+/// bitwise spot check.
+fn dp_sync_hier_step(nodes: usize, g: usize, elems: usize, mode: Option<bool>) -> Vec<f32> {
+    let n = nodes * g;
+    let group = match mode {
+        None => DpSyncGroup::Flat(AllReduceGroup::with_algo(n, Algo::Chunked)),
+        Some(pipelined) => DpSyncGroup::Hier(HierarchicalGroup::with_mode(nodes, g, pipelined)),
+    };
+    let handles: Vec<_> = (0..n)
+        .map(|rank| {
+            let group = group.clone();
+            std::thread::spawn(move || {
+                let contrib: Vec<f32> =
+                    (0..elems).map(|i| ((rank * 97 + i) % 1013) as f32 * 1e-3).collect();
+                let mut seg = Vec::new();
+                group.reduce_scatter_into(rank, &contrib, &mut seg);
+                let full = group.all_gather_as(rank, &seg);
+                (rank == 0).then(|| full.as_ref().clone())
+            })
+        })
+        .collect();
+    handles.into_iter().filter_map(|h| h.join().unwrap()).next().unwrap()
 }
 
 /// One wrap-edge hop chain: a producer thread reads a device buffer back
@@ -561,8 +636,9 @@ fn scratch_fingerprint(s: &GroupStepScratch) -> (usize, usize, usize, usize, usi
     )
 }
 
-/// Emit `BENCH_hotpath.json`: component name -> ns/op stats.
-fn write_json(results: &[BenchResult]) {
+/// Emit a bench JSON (`BENCH_hotpath.json` / `BENCH_comm.json`): component
+/// name -> ns/op stats.
+fn write_json(path: &str, results: &[BenchResult]) {
     let mut components = BTreeMap::new();
     for r in results {
         let mut stats = BTreeMap::new();
@@ -577,7 +653,6 @@ fn write_json(results: &[BenchResult]) {
         "components".to_string(),
         Json::Obj(components),
     )]));
-    let path = "BENCH_hotpath.json";
     match std::fs::write(path, format!("{doc}\n")) {
         Ok(()) => println!("\nwrote {path} ({} components)", results.len()),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),

@@ -459,8 +459,9 @@ impl AllReduceGroup {
 }
 
 /// Pull a reusable buffer out of the retired list: any result every caller
-/// has dropped can be unwrapped and its allocation recycled.
-fn reclaim(retired: &mut Vec<Arc<Vec<f32>>>) -> Option<Vec<f32>> {
+/// has dropped can be unwrapped and its allocation recycled. Shared with the
+/// hierarchical group, which retires its gathered results the same way.
+pub(crate) fn reclaim(retired: &mut Vec<Arc<Vec<f32>>>) -> Option<Vec<f32>> {
     let idx = retired.iter().position(|a| Arc::strong_count(a) == 1)?;
     Arc::try_unwrap(retired.swap_remove(idx)).ok()
 }

@@ -31,14 +31,31 @@ impl CostModel {
         CostModel { cluster }
     }
 
-    /// Bandwidth for a group of `n` ranks spread over nodes of size
-    /// `gpus_per_node`: inter-node IB if the group spans nodes, else NVLink.
+    /// Bandwidth for a group of `n` ranks under the *compact-placement*
+    /// assumption (ranks fill nodes in order): inter-node IB if the group
+    /// spans nodes, else NVLink. Callers that know the real placement should
+    /// use [`Self::group_bw_at`] with a span from `Topology::nodes_spanned` —
+    /// a 4-rank group spread over 2 nodes is IB-bound even though
+    /// `4 <= gpus_per_node`.
     pub fn group_bw(&self, n: usize) -> f64 {
-        if n > self.cluster.gpus_per_node {
+        self.group_bw_at(n, self.compact_nodes_spanned(n))
+    }
+
+    /// Bandwidth for a group of `n` ranks known to span `nodes_spanned`
+    /// machines: inter-node IB when the group crosses a node boundary,
+    /// NVLink otherwise.
+    pub fn group_bw_at(&self, _n: usize, nodes_spanned: usize) -> f64 {
+        if nodes_spanned > 1 {
             self.inter_bw()
         } else {
             self.cluster.bw_inner
         }
+    }
+
+    /// Machines a compactly-placed group of `n` ranks occupies: ranks fill
+    /// nodes in order, so the span is `ceil(n / gpus_per_node)`.
+    pub fn compact_nodes_spanned(&self, n: usize) -> usize {
+        n.div_ceil(self.cluster.gpus_per_node).max(1)
     }
 
     /// Effective inter-node bandwidth (NIC line rate × collective efficiency).
@@ -96,22 +113,37 @@ impl CostModel {
         }
     }
 
-    /// Concurrent inter-node streams sharing one NIC: all GPUs of a node
-    /// participate in (their own copy of) the collective, so an inter-node
-    /// group sees 1/gpus_per_node of the NIC. Inner-node groups use NVLink
-    /// point-to-point lanes and do not contend.
+    /// Concurrent inter-node streams sharing one NIC under the
+    /// *compact-placement* assumption: a node-spanning group fills whole
+    /// nodes, so all `gpus_per_node` GPUs of a node push through its NIC at
+    /// once. Inner-node groups use NVLink point-to-point lanes and do not
+    /// contend. Placement-aware callers should use [`Self::nic_streams_at`].
     pub fn nic_streams(&self, n: usize) -> usize {
-        if n > self.cluster.gpus_per_node {
+        if self.compact_nodes_spanned(n) > 1 {
             self.cluster.gpus_per_node
         } else {
             1
         }
     }
 
+    /// NIC streams for a group of `n` ranks known to span `nodes_spanned`
+    /// machines: the ranks co-resident on one node (`ceil(n /
+    /// nodes_spanned)`, capped at the node width) share that node's NIC.
+    /// Span 1 means NVLink only — no NIC contention.
+    pub fn nic_streams_at(&self, n: usize, nodes_spanned: usize) -> usize {
+        if nodes_spanned <= 1 {
+            1
+        } else {
+            n.div_ceil(nodes_spanned).clamp(1, self.cluster.gpus_per_node)
+        }
+    }
+
     /// Point-to-point send of `bytes` (pipeline stage boundary, inter-node).
+    /// Charged at the *effective* NIC rate ([`Self::inter_bw`]) so p2p hops
+    /// and inter-node collectives see the same link model.
     pub fn p2p(&self, bytes: f64) -> CommCost {
         CommCost {
-            seconds: self.cluster.alpha + bytes / self.cluster.bw_inter,
+            seconds: self.cluster.alpha + bytes / self.inter_bw(),
             bytes_on_wire: bytes,
         }
     }
@@ -127,6 +159,100 @@ impl CostModel {
     /// All-gather (the other half).
     pub fn all_gather(&self, n: usize, bytes: f64) -> CommCost {
         self.reduce_scatter(n, bytes)
+    }
+
+    /// Half of a ring all-reduce over `n` ranks at bandwidth `bw` — the
+    /// building block for the per-link-class hierarchical costs below.
+    fn half_ring(&self, n: usize, bytes: f64, bw: f64) -> CommCost {
+        let mut c = self.all_reduce_bw(n, bytes, bw);
+        c.seconds /= 2.0;
+        c.bytes_on_wire /= 2.0;
+        c
+    }
+
+    /// Cost of one hop of the inter-node chain: the node's `g` lanes
+    /// together push the full `bytes` payload (each lane 1/g of it) through
+    /// the shared NIC at the effective rate.
+    fn chain_hops(&self, nodes: usize, bytes: f64) -> CommCost {
+        if nodes <= 1 {
+            return CommCost { seconds: 0.0, bytes_on_wire: 0.0 };
+        }
+        let hops = (nodes - 1) as f64;
+        CommCost {
+            seconds: hops * (self.cluster.alpha + bytes / self.inter_bw()),
+            bytes_on_wire: hops * bytes,
+        }
+    }
+
+    /// Two-level reduce-scatter over `nodes` machines of `g` ranks each:
+    /// an intra-node NVLink half-ring (each rank ends owning 1/g of the
+    /// node's partial sums) followed by `nodes - 1` order-preserving chain
+    /// hops over the NIC. The chain carries the *full* payload per hop
+    /// (`g` lanes × `bytes/g` each through one NIC), matching the live
+    /// `HierarchicalGroup`'s fixed rank-order summation.
+    pub fn hierarchical_reduce_scatter(&self, nodes: usize, g: usize, bytes: f64) -> CommCost {
+        let intra = self.half_ring(g, bytes, self.cluster.bw_inner);
+        let inter = self.chain_hops(nodes, bytes);
+        CommCost {
+            seconds: intra.seconds + inter.seconds,
+            bytes_on_wire: intra.bytes_on_wire + inter.bytes_on_wire,
+        }
+    }
+
+    /// Two-level all-gather — the mirror of
+    /// [`Self::hierarchical_reduce_scatter`]: chain hops redistribute the
+    /// finalized segments across nodes, then an intra-node NVLink half-ring
+    /// completes each rank's copy. Same link classes, same cost.
+    pub fn hierarchical_all_gather(&self, nodes: usize, g: usize, bytes: f64) -> CommCost {
+        self.hierarchical_reduce_scatter(nodes, g, bytes)
+    }
+
+    /// Two-level all-reduce: exactly the reduce-scatter plus the all-gather
+    /// (the identity the satellite property test pins).
+    pub fn hierarchical_all_reduce(&self, nodes: usize, g: usize, bytes: f64) -> CommCost {
+        let rs = self.hierarchical_reduce_scatter(nodes, g, bytes);
+        let ag = self.hierarchical_all_gather(nodes, g, bytes);
+        CommCost {
+            seconds: rs.seconds + ag.seconds,
+            bytes_on_wire: rs.bytes_on_wire + ag.bytes_on_wire,
+        }
+    }
+
+    /// Chunk-pipelined two-level all-reduce: the payload is cut into
+    /// `chunks` pieces and the stages (intra reduce-scatter, `nodes - 1`
+    /// forward chain hops, `nodes - 1` return hops, intra all-gather) stream
+    /// chunk k+1 while chunk k is in flight. The makespan of a linear
+    /// pipeline is the sum of one chunk's stage times plus `(chunks - 1)`
+    /// repeats of the *slowest* stage — max-of-stages instead of
+    /// sum-of-stages — so deep chains flatten from `O(nodes)` toward the
+    /// single-hop wire time. Never worse than the serial two-level cost;
+    /// exactly equal to it at `chunks <= 1`.
+    pub fn hierarchical_all_reduce_pipelined(
+        &self,
+        nodes: usize,
+        g: usize,
+        bytes: f64,
+        chunks: usize,
+    ) -> CommCost {
+        let serial = self.hierarchical_all_reduce(nodes, g, bytes);
+        if chunks <= 1 {
+            return serial;
+        }
+        let c = chunks as f64;
+        let per = bytes / c;
+        let intra = self.half_ring(g, per, self.cluster.bw_inner).seconds;
+        let hop = if nodes > 1 {
+            self.cluster.alpha + per / self.inter_bw()
+        } else {
+            0.0
+        };
+        let hops = 2.0 * (nodes.saturating_sub(1)) as f64;
+        let fill = 2.0 * intra + hops * hop;
+        let drain = (c - 1.0) * intra.max(hop);
+        CommCost {
+            seconds: (fill + drain).min(serial.seconds),
+            bytes_on_wire: serial.bytes_on_wire,
+        }
     }
 }
 
@@ -185,6 +311,26 @@ mod tests {
     }
 
     #[test]
+    fn span_query_fixes_spread_group_misclassification() {
+        use crate::comm::topology::Topology;
+        let m = model();
+        // A 4-rank dp group whose replicas live on 2 different nodes: the
+        // compact heuristic calls it NVLink, the span-aware query does not.
+        let topo = Topology::new(2, 4).unwrap();
+        let span = topo.nodes_spanned([0usize, 2, 4, 6]);
+        assert_eq!(span, 2);
+        assert_eq!(m.group_bw(4), 300e9); // old answer: misclassified
+        assert_eq!(m.group_bw_at(4, span), m.inter_bw());
+        assert_eq!(m.nic_streams(4), 1);
+        assert_eq!(m.nic_streams_at(4, span), 2); // 2 ranks share each NIC
+        // Compact callers are unchanged: span-1 groups stay NVLink with one
+        // stream, full-width node-spanning groups keep the old answers.
+        assert_eq!(m.group_bw_at(8, 1), 300e9);
+        assert_eq!(m.nic_streams(16), 8);
+        assert_eq!(m.nic_streams_at(16, 2), 8);
+    }
+
+    #[test]
     fn a2a_dominates_ffn_at_paper_scale() {
         // The core claim of §3.2: for E = 64, a2a >> FFN.
         let ratio = paper::a2a_over_ffn_bound(64.0);
@@ -210,7 +356,110 @@ mod tests {
     #[test]
     fn p2p_uses_inter_node_bw() {
         let m = model();
-        let c = m.p2p(12.5e9); // 1 second of IB
-        assert!((c.seconds - 1.0).abs() < 1e-3);
+        // 12.5 GB at 12.5 GB/s line rate × 0.5 efficiency = 2 seconds.
+        let c = m.p2p(12.5e9);
+        assert!((c.seconds - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn p2p_consistent_with_collective_link_rate() {
+        // Regression: p2p used to charge raw `bw_inter`, making pipeline
+        // hops ~2x too fast relative to every collective. Strip the latency
+        // terms and the per-byte rate must match what `all_reduce_bw` pays
+        // on the same inter-node link.
+        let m = model();
+        let bytes = 1e9;
+        let p2p_per_byte = (m.p2p(bytes).seconds - m.cluster.alpha) / bytes;
+        let ar = m.all_reduce_bw(2, bytes, m.inter_bw());
+        // n=2 ring moves exactly `bytes` on the wire in 2 steps.
+        let ar_per_byte = (ar.seconds - 2.0 * m.cluster.alpha) / ar.bytes_on_wire;
+        assert!(
+            (p2p_per_byte - ar_per_byte).abs() < 1e-18,
+            "p2p {p2p_per_byte} vs collective {ar_per_byte} per byte"
+        );
+    }
+
+    #[test]
+    fn hierarchical_ar_is_rs_plus_ag_everywhere() {
+        use crate::util::prop::forall;
+        let m = model();
+        forall(
+            "hier ar == rs + ag",
+            11,
+            200,
+            |r| {
+                let nodes = 1 + r.below(6);
+                let g = 1 + r.below(8);
+                let bytes = (1.0 + r.f64() * 4e9).floor();
+                (nodes, g, bytes)
+            },
+            |&(nodes, g, bytes)| {
+                let rs = m.hierarchical_reduce_scatter(nodes, g, bytes);
+                let ag = m.hierarchical_all_gather(nodes, g, bytes);
+                let ar = m.hierarchical_all_reduce(nodes, g, bytes);
+                if ar.seconds == rs.seconds + ag.seconds
+                    && ar.bytes_on_wire == rs.bytes_on_wire + ag.bytes_on_wire
+                {
+                    Ok(())
+                } else {
+                    Err(format!("ar {ar:?} != rs {rs:?} + ag {ag:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn pipelined_leq_serial_with_equality_at_one_chunk() {
+        use crate::util::prop::forall;
+        let m = model();
+        forall(
+            "pipelined <= serial",
+            12,
+            200,
+            |r| {
+                let nodes = 1 + r.below(6);
+                let g = 1 + r.below(8);
+                let bytes = (1.0 + r.f64() * 4e9).floor();
+                let chunks = 1 + r.below(64);
+                (nodes, g, bytes, chunks)
+            },
+            |&(nodes, g, bytes, chunks)| {
+                let serial = m.hierarchical_all_reduce(nodes, g, bytes);
+                let pipe = m.hierarchical_all_reduce_pipelined(nodes, g, bytes, chunks);
+                let one = m.hierarchical_all_reduce_pipelined(nodes, g, bytes, 1);
+                if pipe.seconds > serial.seconds {
+                    return Err(format!(
+                        "pipelined {} > serial {} at chunks {chunks}",
+                        pipe.seconds, serial.seconds
+                    ));
+                }
+                if pipe.bytes_on_wire != serial.bytes_on_wire {
+                    return Err("pipelining must not change wire volume".into());
+                }
+                if one.seconds != serial.seconds {
+                    return Err(format!(
+                        "1-chunk pipelined {} != serial {}",
+                        one.seconds, serial.seconds
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pipelining_flattens_deep_chains() {
+        // The serial chain grows linearly in nodes; streaming chunks hides
+        // all but the slowest stage, so at 8 nodes the pipelined cost must
+        // sit well under the serial one for bandwidth-bound payloads.
+        let m = model();
+        let serial = m.hierarchical_all_reduce(8, 8, 1e9);
+        let pipe = m.hierarchical_all_reduce_pipelined(8, 8, 1e9, 64);
+        assert!(
+            pipe.seconds < 0.5 * serial.seconds,
+            "pipe {} vs serial {}",
+            pipe.seconds,
+            serial.seconds
+        );
     }
 }

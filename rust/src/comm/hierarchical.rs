@@ -1,52 +1,550 @@
-//! Hierarchical (two-level) all-reduce: intra-node reduce-scatter/all-gather
-//! over NVLink + inter-node ring over IB on the sharded remainder.
+//! Hierarchical (two-level) collectives: intra-node reduce-scatter /
+//! all-gather over NVLink composed with an inter-node chain over the NIC,
+//! with the inter-node stage chunk-pipelined against the intra-node ones.
 //!
-//! This is the "faster all-reduce scheme" the paper's §4.4 closes with:
-//! "there is more room for further speeding up training if a faster
-//! all-reduce scheme is adopted" — the MoE AR + FFN AR together occupy
-//! ~40% of PPMoE's forward step. The cost model here quantifies how much a
-//! topology-aware all-reduce would recover; `bench analytic_ratios` and the
-//! ablation example print the comparison.
+//! This is the "faster all-reduce scheme" the paper's §4.4 closes with —
+//! the MoE AR + FFN AR together occupy ~40% of PPMoE's step — made
+//! network-traffic-aware in the MoNTA style: traffic inside a node rides
+//! NVLink, only the 1/g shard per lane crosses the NIC, and the NIC hop
+//! for segment k overlaps the NVLink work for segment k+1.
+//!
+//! Two halves live here:
+//!
+//! * [`HierarchicalGroup`] — the **live** two-level reduce-scatter /
+//!   all-gather used by the dp gradient sync when a [`super::Topology`]
+//!   says the group spans nodes. Bitwise-equal to the flat
+//!   [`AllReduceGroup`] path (see the summation-order contract below).
+//! * analytic costs ([`flat_all_reduce`], [`hierarchical_all_reduce`],
+//!   [`hierarchical_all_reduce_pipelined`]) — thin wrappers over
+//!   [`CostModel`]'s per-link-class α-β formulas, consumed by the
+//!   simulator and the `comm_ablation` example.
+//!
+//! # Bitwise rank-order contract
+//!
+//! The flat group reduces segment `[lo, hi)` as a left fold from `0.0`
+//! adding rank 0's slice, then rank 1's, … rank n-1's. The hierarchical
+//! path must reproduce that *exact* float summation order, which a rotated
+//! inter-node ring would not (fp addition is non-associative). So the
+//! inter-node stage is an **order-preserving chain**: node 0's lane folds
+//! its `g` ranks from `0.0`, node 1 seeds its accumulator with node 0's
+//! incoming prefix and folds its own `g` ranks on top, and so on — the
+//! element-wise additions happen in precisely rank order `0..n`. The chain
+//! serializes per *segment* across nodes but pipelines across segments:
+//! while segment k's partial crosses the NIC to node k+1, the lane is
+//! already folding segment k+1 over NVLink. The `pipelined` knob only
+//! changes *when* partials are forwarded (eager vs after the whole intra
+//! stage), never the arithmetic, so both modes are bitwise identical.
 
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::comm::collectives::{reclaim, segment, AllReduceGroup};
 use crate::comm::cost::{CommCost, CostModel};
 
+/// How long a lane waits on its inter-node channel before re-checking the
+/// poison flag (a dead upstream rank would otherwise hang the recv forever).
+const POISON_POLL: Duration = Duration::from_millis(25);
+
+/// One inter-node hop of a lane's chain: node k's lane sends its running
+/// prefix to node k+1's lane. The `mpsc` endpoints are mutex-wrapped so the
+/// group is `Sync`; each endpoint is only ever touched by its lane's thread,
+/// so the locks are uncontended.
+struct Link {
+    tx: Mutex<Sender<Vec<f32>>>,
+    rx: Mutex<Receiver<Vec<f32>>>,
+}
+
+/// Mutable round state, guarded by one mutex (same discipline as
+/// [`AllReduceGroup`]).
+struct HRound {
+    generation: u64,
+    /// Vector length of the current round (set by the first deposit).
+    len: usize,
+    /// Total deposits this round.
+    deposited: usize,
+    /// Deposits per node — a lane starts folding once its own node is full.
+    node_deposited: Vec<usize>,
+    /// Owner segments finalized by last-node lanes.
+    finalized: usize,
+    /// All-gather deposits this round.
+    reduced: usize,
+    /// Double-entry guard per rank.
+    taken: Vec<bool>,
+    poisoned: bool,
+    /// Published all-gather result of the previous round.
+    result: Arc<Vec<f32>>,
+    /// Retired result buffers available for reuse.
+    retired: Vec<Arc<Vec<f32>>>,
+}
+
+/// Live two-level reduce-scatter / all-gather over `nodes × g` ranks.
+///
+/// Ranks are placed node-major (rank `r` lives on node `r / g` as local
+/// lane `r % g`), matching [`super::Topology`]'s compact placement. Lane
+/// `i` of each node carries the global segments owned by ranks `j·g + i`
+/// for `j in 0..nodes`, so the `g` lanes of a node split the payload and
+/// the inter-node chain moves only `1/g` of it per lane.
+///
+/// Drop-in for [`AllReduceGroup`]'s split-phase API:
+/// [`Self::reduce_scatter_into`] then [`Self::all_gather_as`], with the
+/// same double-entry, shape, poison and round-reuse semantics, and
+/// bitwise-identical results (see the module docs for the contract).
+pub struct HierarchicalGroup {
+    nodes: usize,
+    g: usize,
+    pipelined: bool,
+    state: Mutex<HRound>,
+    cv: Condvar,
+    /// Full contribution staged per rank (same layout as the flat group).
+    stage: Vec<Mutex<Vec<f32>>>,
+    /// Finalized reduced segment per owner rank.
+    final_seg: Vec<Mutex<Vec<f32>>>,
+    /// All-gather deposit per rank.
+    outseg: Vec<Mutex<Vec<f32>>>,
+    /// `links[lane][k]`: chain hop node k → node k+1 for that lane.
+    links: Vec<Vec<Link>>,
+    /// Free-list of chain accumulator buffers (filled by last-node lanes,
+    /// drained by node-0 lanes) so steady-state rounds do not allocate.
+    spare: Mutex<Vec<Vec<f32>>>,
+}
+
+impl HierarchicalGroup {
+    /// Group over `nodes` machines of `gpus_per_node` ranks each, with the
+    /// inter-node chain pipelined against the intra-node fold (the default;
+    /// timing-only — see [`Self::with_mode`]).
+    pub fn new(nodes: usize, gpus_per_node: usize) -> Arc<HierarchicalGroup> {
+        HierarchicalGroup::with_mode(nodes, gpus_per_node, true)
+    }
+
+    /// Like [`Self::new`] with an explicit overlap mode: `pipelined`
+    /// forwards each segment's partial the moment it is folded; serial
+    /// buffers a node's outgoing partials until its whole intra stage is
+    /// done. Both modes are bitwise identical — the knob exists for the
+    /// `hotpath_micro` A/B rows.
+    pub fn with_mode(
+        nodes: usize,
+        gpus_per_node: usize,
+        pipelined: bool,
+    ) -> Arc<HierarchicalGroup> {
+        assert!(nodes > 0, "hierarchical group needs at least one node");
+        assert!(gpus_per_node > 0, "hierarchical group needs at least one rank per node");
+        let n = nodes * gpus_per_node;
+        let links = (0..gpus_per_node)
+            .map(|_| {
+                (0..nodes.saturating_sub(1))
+                    .map(|_| {
+                        let (tx, rx) = channel();
+                        Link { tx: Mutex::new(tx), rx: Mutex::new(rx) }
+                    })
+                    .collect()
+            })
+            .collect();
+        Arc::new(HierarchicalGroup {
+            nodes,
+            g: gpus_per_node,
+            pipelined,
+            state: Mutex::new(HRound {
+                generation: 0,
+                len: 0,
+                deposited: 0,
+                node_deposited: vec![0; nodes],
+                finalized: 0,
+                reduced: 0,
+                taken: vec![false; n],
+                poisoned: false,
+                result: Arc::new(Vec::new()),
+                retired: Vec::new(),
+            }),
+            cv: Condvar::new(),
+            stage: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            final_seg: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            outseg: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            links,
+            spare: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Total ranks (`nodes × gpus_per_node`).
+    pub fn ranks(&self) -> usize {
+        self.nodes * self.g
+    }
+
+    /// Machines in the group.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Ranks per machine.
+    pub fn gpus_per_node(&self) -> usize {
+        self.g
+    }
+
+    /// Whether the inter-node chain forwards partials eagerly.
+    pub fn pipelined(&self) -> bool {
+        self.pipelined
+    }
+
+    /// Mark the group dead and wake every waiter (including lanes parked on
+    /// a chain recv, which poll the flag). Same contract as
+    /// [`AllReduceGroup::poison`].
+    pub fn poison(&self) {
+        let mut st = self.lock_state();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, HRound> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn check_poison(st: &HRound) {
+        assert!(
+            !st.poisoned,
+            "collective group poisoned: a participating rank failed and will \
+             never complete this round"
+        );
+    }
+
+    /// Two-level reduce-scatter: on return `out` holds the fully reduced
+    /// segment owned by `rank` (same `segment` partition, same summation
+    /// order, bitwise-equal to the flat path). `out` is clear-and-filled,
+    /// so steady-state reuse performs no allocation.
+    pub fn reduce_scatter_into(&self, rank: usize, contribution: &[f32], out: &mut Vec<f32>) {
+        let n = self.ranks();
+        assert!(rank < n, "rank {rank} out of {n}");
+        let node = rank / self.g;
+        {
+            let mut st = self.lock_state();
+            Self::check_poison(&st);
+            assert!(
+                !st.taken[rank],
+                "rank {rank} entered a collective twice in one round"
+            );
+            st.taken[rank] = true;
+        }
+        {
+            let mut slot = self.stage[rank].lock().unwrap_or_else(|e| e.into_inner());
+            slot.clear();
+            slot.extend_from_slice(contribution);
+        }
+        // Publish the deposit, then wait for this *node* to fill — the lane
+        // can start folding before remote nodes have even arrived.
+        let len = {
+            let mut st = self.lock_state();
+            Self::check_poison(&st);
+            if st.deposited == 0 {
+                st.len = contribution.len();
+            } else {
+                assert_eq!(st.len, contribution.len(), "rank shape mismatch");
+            }
+            st.deposited += 1;
+            st.node_deposited[node] += 1;
+            if st.node_deposited[node] == self.g {
+                self.cv.notify_all();
+            }
+            while st.node_deposited[node] < self.g {
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                Self::check_poison(&st);
+            }
+            st.len
+        };
+        self.run_lane(node, rank % self.g, len);
+        // Wait until every owner segment is finalized, then copy ours out.
+        {
+            let mut st = self.lock_state();
+            while st.finalized < n {
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                Self::check_poison(&st);
+            }
+        }
+        let (lo, hi) = segment(rank, len, n);
+        let fin = self.final_seg[rank].lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert_eq!(fin.len(), hi - lo);
+        out.clear();
+        out.extend_from_slice(&fin);
+    }
+
+    /// The chain work of lane `(node, lane)`: for each owner segment of
+    /// this lane (ascending), seed the accumulator — zeros on node 0, the
+    /// upstream prefix otherwise — fold this node's `g` staged slices in
+    /// rank order, and pass the result on (next node, or `final_seg` on the
+    /// last). In pipelined mode each partial is forwarded as soon as it is
+    /// folded so the NIC hop of segment k overlaps the fold of segment
+    /// k+1; serial mode holds them until the node's whole intra stage is
+    /// done. The arithmetic is identical either way.
+    fn run_lane(&self, node: usize, lane: usize, len: usize) {
+        let n = self.ranks();
+        let last = self.nodes - 1;
+        let mut held: Vec<(usize, Vec<f32>)> = Vec::new();
+        for j in 0..self.nodes {
+            let owner = j * self.g + lane;
+            let (lo, hi) = segment(owner, len, n);
+            let mut acc = if node == 0 {
+                let mut buf = self.take_spare();
+                buf.clear();
+                buf.resize(hi - lo, 0.0);
+                buf
+            } else {
+                let buf = self.recv_prefix(lane, node - 1);
+                assert_eq!(
+                    buf.len(),
+                    hi - lo,
+                    "lane {lane} node {node}: chain prefix length {} vs segment {}",
+                    buf.len(),
+                    hi - lo
+                );
+                buf
+            };
+            if hi > lo {
+                for local in 0..self.g {
+                    let r = node * self.g + local;
+                    let slot = self.stage[r].lock().unwrap_or_else(|e| e.into_inner());
+                    for (o, x) in acc.iter_mut().zip(&slot[lo..hi]) {
+                        *o += x;
+                    }
+                }
+            }
+            if node == last {
+                self.finalize_segment(owner, acc);
+            } else if self.pipelined {
+                self.send_prefix(lane, node, acc);
+            } else {
+                held.push((node, acc));
+            }
+        }
+        for (hop, acc) in held {
+            self.send_prefix(lane, hop, acc);
+        }
+    }
+
+    /// Publish a fully reduced owner segment and recycle the chain buffer.
+    fn finalize_segment(&self, owner: usize, mut acc: Vec<f32>) {
+        {
+            let mut fin = self.final_seg[owner].lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::swap(&mut *fin, &mut acc);
+        }
+        self.put_spare(acc);
+        let mut st = self.lock_state();
+        st.finalized += 1;
+        if st.finalized == self.ranks() {
+            self.cv.notify_all();
+        }
+    }
+
+    fn send_prefix(&self, lane: usize, hop: usize, acc: Vec<f32>) {
+        let tx = self.links[lane][hop].tx.lock().unwrap_or_else(|e| e.into_inner());
+        // Receiver lives in `self`, so the channel can only be gone if the
+        // whole group is being torn down.
+        let _ = tx.send(acc);
+    }
+
+    /// Blocking chain receive that keeps an eye on the poison flag: a dead
+    /// upstream rank will never send, and the monitor's `poison()` must be
+    /// able to unwedge this lane.
+    fn recv_prefix(&self, lane: usize, hop: usize) -> Vec<f32> {
+        let rx = self.links[lane][hop].rx.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            match rx.recv_timeout(POISON_POLL) {
+                Ok(buf) => return buf,
+                Err(RecvTimeoutError::Timeout) => {
+                    let st = self.lock_state();
+                    Self::check_poison(&st);
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("hierarchical chain link dropped mid-round")
+                }
+            }
+        }
+    }
+
+    fn take_spare(&self) -> Vec<f32> {
+        self.spare
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn put_spare(&self, buf: Vec<f32>) {
+        let mut pool = self.spare.lock().unwrap_or_else(|e| e.into_inner());
+        if pool.len() < self.ranks() {
+            pool.push(buf);
+        }
+    }
+
+    /// Second phase: every rank deposits (typically updated) data for its
+    /// own segment; the full concatenation in slot order is returned to all.
+    /// Must follow a completed [`Self::reduce_scatter_into`] round — same
+    /// contract, shape checks and buffer recycling as the flat group's
+    /// [`AllReduceGroup::all_gather_as`], and bitwise-identical output. The
+    /// two-level structure collapses here because in shared memory both the
+    /// inter-node redistribution and the intra-node gather compose to one
+    /// slot-order concatenation.
+    pub fn all_gather_as(&self, rank: usize, segment_data: &[f32]) -> Arc<Vec<f32>> {
+        let n = self.ranks();
+        assert!(rank < n, "rank {rank} out of {n}");
+        {
+            let mut slot = self.outseg[rank].lock().unwrap_or_else(|e| e.into_inner());
+            slot.clear();
+            slot.extend_from_slice(segment_data);
+        }
+        let mut st = self.lock_state();
+        Self::check_poison(&st);
+        assert_eq!(
+            st.deposited, n,
+            "all_gather_as called outside a reduce-scatter round"
+        );
+        let (lo, hi) = segment(rank, st.len, n);
+        assert_eq!(
+            segment_data.len(),
+            hi - lo,
+            "rank {rank}: segment length {} vs expected {}",
+            segment_data.len(),
+            hi - lo
+        );
+        let my_gen = st.generation;
+        st.reduced += 1;
+        if st.reduced == n {
+            let mut full = reclaim(&mut st.retired).unwrap_or_default();
+            full.clear();
+            full.reserve(st.len);
+            for slot in &self.outseg {
+                let s = slot.lock().unwrap_or_else(|e| e.into_inner());
+                full.extend_from_slice(&s);
+            }
+            let result = Arc::new(full);
+            self.finish_round(&mut st, result.clone());
+            return result;
+        }
+        while st.generation == my_gen {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            Self::check_poison(&st);
+        }
+        st.result.clone()
+    }
+
+    /// Publish `result`, retire the previous round's storage for reuse,
+    /// reset counters and release every waiter.
+    fn finish_round(&self, st: &mut HRound, result: Arc<Vec<f32>>) {
+        let prev = std::mem::replace(&mut st.result, result);
+        if st.retired.len() < 4 {
+            st.retired.push(prev);
+        }
+        st.deposited = 0;
+        st.reduced = 0;
+        st.finalized = 0;
+        for c in &mut st.node_deposited {
+            *c = 0;
+        }
+        for t in &mut st.taken {
+            *t = false;
+        }
+        st.generation += 1;
+        self.cv.notify_all();
+    }
+}
+
+/// The dp sync group a trainer thread talks to: flat single-level or
+/// two-level hierarchical, chosen per (stage, tp) group from the
+/// [`super::Topology`]. Both arms share the split-phase API and are
+/// bitwise-identical, so everything downstream (ZeRO-1 gather, poison
+/// monitor, serialized fallback) is oblivious to the choice.
+#[derive(Clone)]
+pub enum DpSyncGroup {
+    /// Single-level ring over all ranks.
+    Flat(Arc<AllReduceGroup>),
+    /// Two-level NVLink + NIC-chain group.
+    Hier(Arc<HierarchicalGroup>),
+}
+
+impl DpSyncGroup {
+    /// Ranks in the group.
+    pub fn ranks(&self) -> usize {
+        match self {
+            DpSyncGroup::Flat(g) => g.ranks(),
+            DpSyncGroup::Hier(g) => g.ranks(),
+        }
+    }
+
+    /// Whether this group takes the two-level path.
+    pub fn is_hierarchical(&self) -> bool {
+        matches!(self, DpSyncGroup::Hier(_))
+    }
+
+    /// Split-phase reduce-scatter (see the arm types for semantics).
+    pub fn reduce_scatter_into(&self, rank: usize, contribution: &[f32], out: &mut Vec<f32>) {
+        match self {
+            DpSyncGroup::Flat(g) => g.reduce_scatter_into(rank, contribution, out),
+            DpSyncGroup::Hier(g) => g.reduce_scatter_into(rank, contribution, out),
+        }
+    }
+
+    /// Split-phase all-gather (see the arm types for semantics).
+    pub fn all_gather_as(&self, rank: usize, segment_data: &[f32]) -> Arc<Vec<f32>> {
+        match self {
+            DpSyncGroup::Flat(g) => g.all_gather_as(rank, segment_data),
+            DpSyncGroup::Hier(g) => g.all_gather_as(rank, segment_data),
+        }
+    }
+
+    /// Mark the group dead and wake every waiter.
+    pub fn poison(&self) {
+        match self {
+            DpSyncGroup::Flat(g) => g.poison(),
+            DpSyncGroup::Hier(g) => g.poison(),
+        }
+    }
+}
+
 /// Cost of a flat (topology-oblivious) ring all-reduce over `n` ranks that
-/// span nodes: the ring crosses the NIC on (almost) every hop.
+/// span nodes: the ring crosses the NIC on (almost) every hop and all
+/// `gpus_per_node` ranks of a node contend for it.
 pub fn flat_all_reduce(cm: &CostModel, n: usize, bytes: f64) -> CommCost {
     cm.all_reduce_bw(n, bytes, cm.inter_bw() / cm.cluster.gpus_per_node as f64)
 }
 
-/// Cost of the two-level scheme over `nodes × gpus_per_node` ranks:
-/// 1. intra-node reduce-scatter (NVLink): each GPU ends with bytes/g shard
-/// 2. inter-node ring all-reduce over the shards (one NIC stream per shard
-///    lane — the g lanes split the volume, not contend over it)
-/// 3. intra-node all-gather (NVLink)
+/// Cost of the serial two-level scheme over `nodes × gpus_per_node` ranks
+/// (delegates to [`CostModel::hierarchical_all_reduce`]): intra-node
+/// NVLink reduce-scatter, order-preserving NIC chain, intra-node NVLink
+/// all-gather, each stage finishing before the next starts.
 pub fn hierarchical_all_reduce(cm: &CostModel, nodes: usize, bytes: f64) -> CommCost {
-    let g = cm.cluster.gpus_per_node;
-    if nodes <= 1 {
-        return cm.all_reduce_bw(g, bytes, cm.cluster.bw_inner);
-    }
-    let intra_rs = cm.reduce_scatter(g, bytes);
-    let shard = bytes / g as f64;
-    let inter = cm.all_reduce_bw(nodes, shard, cm.inter_bw());
-    let intra_ag = cm.all_gather(g, bytes);
-    CommCost {
-        seconds: intra_rs.seconds + inter.seconds + intra_ag.seconds,
-        bytes_on_wire: intra_rs.bytes_on_wire + inter.bytes_on_wire + intra_ag.bytes_on_wire,
-    }
+    cm.hierarchical_all_reduce(nodes, cm.cluster.gpus_per_node, bytes)
 }
 
-/// Speedup of hierarchical over flat for a given span.
+/// Cost of the chunk-pipelined two-level scheme (delegates to
+/// [`CostModel::hierarchical_all_reduce_pipelined`]): chunk k crosses the
+/// NIC while chunk k+1 reduce-scatters over NVLink, so the makespan pays
+/// max-of-stages instead of sum-of-stages.
+pub fn hierarchical_all_reduce_pipelined(
+    cm: &CostModel,
+    nodes: usize,
+    bytes: f64,
+    chunks: usize,
+) -> CommCost {
+    cm.hierarchical_all_reduce_pipelined(nodes, cm.cluster.gpus_per_node, bytes, chunks)
+}
+
+/// Speedup of the serial two-level scheme over flat for a given span.
 pub fn hierarchical_speedup(cm: &CostModel, nodes: usize, bytes: f64) -> f64 {
     let n = nodes * cm.cluster.gpus_per_node;
     flat_all_reduce(cm, n, bytes).seconds
         / hierarchical_all_reduce(cm, nodes, bytes).seconds
 }
 
+/// Speedup of the chunk-pipelined two-level scheme over flat.
+pub fn pipelined_speedup(cm: &CostModel, nodes: usize, bytes: f64, chunks: usize) -> f64 {
+    let n = nodes * cm.cluster.gpus_per_node;
+    flat_all_reduce(cm, n, bytes).seconds
+        / hierarchical_all_reduce_pipelined(cm, nodes, bytes, chunks).seconds
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::collectives::Algo;
     use crate::config::v100_cluster;
+    use std::thread;
 
     fn cm(gpus: usize) -> CostModel {
         CostModel::new(v100_cluster(gpus))
@@ -61,24 +559,39 @@ mod tests {
     }
 
     #[test]
-    fn hierarchical_beats_flat_across_nodes() {
+    fn serial_chain_beats_flat_at_small_spans() {
         let m = cm(64);
-        for nodes in [2usize, 4, 8] {
+        for nodes in [2usize, 4] {
             let s = hierarchical_speedup(&m, nodes, 1e9);
             assert!(s > 1.5, "nodes={nodes}: speedup {s}");
+        }
+        // The chain is linear in nodes, so the *serial* edge erodes at
+        // deeper spans — that head-room is what pipelining recovers.
+        assert!(hierarchical_speedup(&m, 8, 1e9) > 1.0);
+    }
+
+    #[test]
+    fn pipelining_recovers_deep_span_speedup() {
+        let m = cm(64);
+        for nodes in [2usize, 4, 8] {
+            let serial = hierarchical_speedup(&m, nodes, 1e9);
+            let piped = pipelined_speedup(&m, nodes, 1e9, 64);
+            assert!(piped >= serial, "nodes={nodes}: {piped} < {serial}");
+            assert!(piped > 2.0, "nodes={nodes}: pipelined speedup {piped}");
         }
     }
 
     #[test]
-    fn speedup_shrinks_but_stays_large() {
-        // flat cost saturates in world size while hierarchical's inter-node
-        // stage grows with node count, so the *ratio* declines — yet stays
-        // well above 1 (57-93x in the ablation table).
+    fn pipelined_speedup_shrinks_but_stays_large() {
+        // Flat cost saturates in world size while the chain's drain term
+        // still grows slowly with span, so the ratio declines with node
+        // count yet stays well above 1 — the comm_ablation example prints
+        // the full table for the paper's V100 constants.
         let m = cm(256);
-        let s2 = hierarchical_speedup(&m, 2, 1e9);
-        let s16 = hierarchical_speedup(&m, 16, 1e9);
+        let s2 = pipelined_speedup(&m, 2, 1e9, 64);
+        let s16 = pipelined_speedup(&m, 16, 1e9, 64);
         assert!(s2 > s16, "s2={s2} s16={s16}");
-        assert!(s16 > 10.0, "s16={s16}");
+        assert!(s16 > 5.0, "s16={s16}");
     }
 
     #[test]
@@ -87,5 +600,64 @@ mod tests {
         let a = hierarchical_all_reduce(&m, 4, 1e8).seconds;
         let b = hierarchical_all_reduce(&m, 4, 2e8).seconds;
         assert!(b > a);
+    }
+
+    /// One round of the live group vs flat on a ragged length: the exact
+    /// bitwise sweep (shapes × lengths × dirty buffers × both modes) lives
+    /// in `rust/tests/hier_comm.rs`; this is the in-module smoke.
+    #[test]
+    fn live_group_matches_flat_smoke() {
+        let (nodes, g, len) = (2usize, 2usize, 7usize);
+        let n = nodes * g;
+        let flat = AllReduceGroup::with_algo(n, Algo::Chunked);
+        let hier = HierarchicalGroup::new(nodes, g);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let (flat, hier) = (flat.clone(), hier.clone());
+                thread::spawn(move || {
+                    let contrib: Vec<f32> =
+                        (0..len).map(|i| ((r * 31 + i * 7) as f32).sin()).collect();
+                    let mut sf = Vec::new();
+                    let mut sh = Vec::new();
+                    flat.reduce_scatter_into(r, &contrib, &mut sf);
+                    hier.reduce_scatter_into(r, &contrib, &mut sh);
+                    assert_eq!(sf.len(), sh.len());
+                    for (a, b) in sf.iter().zip(&sh) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                    let gf = flat.all_gather_as(r, &sf);
+                    let gh = hier.all_gather_as(r, &sh);
+                    for (a, b) in gf.iter().zip(gh.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn poison_unwedges_a_waiting_rank() {
+        let hier = HierarchicalGroup::new(1, 2);
+        let g = hier.clone();
+        let h = thread::spawn(move || {
+            let mut seg = Vec::new();
+            // Rank 1 never arrives; this blocks until the poison lands.
+            g.reduce_scatter_into(0, &[1.0f32, 2.0], &mut seg);
+        });
+        thread::sleep(Duration::from_millis(30));
+        hier.poison();
+        assert!(h.join().is_err(), "poisoned rank must panic, not hang");
+    }
+
+    #[test]
+    fn all_gather_outside_round_panics() {
+        let hier = HierarchicalGroup::new(1, 1);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            hier.all_gather_as(0, &[1.0f32]);
+        }));
+        assert!(res.is_err());
     }
 }

@@ -1,9 +1,14 @@
-//! Communication: α-β collective cost models (the paper's Eq. 2–5) and
-//! real in-process collectives used by the TP×EP executor and the trainer.
+//! Communication: α-β collective cost models (the paper's Eq. 2–5), real
+//! in-process collectives used by the TP×EP executor and the trainer, and
+//! the node topology + two-level hierarchical groups the dp sync path
+//! selects from it.
 
 pub mod collectives;
 pub mod cost;
 pub mod hierarchical;
+pub mod topology;
 
 pub use collectives::{Algo, AllReduceGroup, Barrier};
 pub use cost::{CommCost, CostModel};
+pub use hierarchical::{DpSyncGroup, HierarchicalGroup};
+pub use topology::Topology;

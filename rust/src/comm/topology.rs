@@ -1,0 +1,217 @@
+//! Physical placement of workers onto nodes.
+//!
+//! The trainer's worker grid is logical: `dp` replicas × `stages` pipeline
+//! stages × `tp_width` tensor ranks, flattened as
+//! `widx = replica · (stages · tp_width) + stage · tp_width + t` (the same
+//! formula the trainer uses to name threads and heartbeat slots). A
+//! [`Topology`] maps that flat index onto `nodes` machines of
+//! `gpus_per_node` slots each, in compact node-major order: worker `widx`
+//! lives on node `widx / gpus_per_node`.
+//!
+//! Two consumers:
+//!
+//! - the trainer asks [`Topology::dp_group_split`] whether a dp sync group
+//!   (fixed stage, fixed tp rank, varying replica) splits into equal
+//!   per-node blocks — the shape `HierarchicalGroup` needs;
+//! - the cost model asks [`Topology::nodes_spanned`] how many machines an
+//!   arbitrary rank set crosses, replacing the old "`n > gpus_per_node`"
+//!   guess that misclassified small-but-spread groups.
+
+use crate::config::ClusterCfg;
+use anyhow::{bail, ensure, Result};
+
+/// Compact node-major mapping of flat worker indices onto machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    nodes: usize,
+    gpus_per_node: usize,
+}
+
+impl Topology {
+    /// A topology of `nodes` machines with `gpus_per_node` worker slots each.
+    ///
+    /// Fails loudly on zero-sized dimensions rather than producing a mapping
+    /// that silently collapses every worker onto node 0.
+    pub fn new(nodes: usize, gpus_per_node: usize) -> Result<Topology> {
+        ensure!(nodes >= 1, "topology needs at least one node (got {nodes})");
+        ensure!(
+            gpus_per_node >= 1,
+            "topology needs at least one gpu per node (got {gpus_per_node})"
+        );
+        Ok(Topology { nodes, gpus_per_node })
+    }
+
+    /// Topology for a trainer grid of `dp · stages · tp_width` workers spread
+    /// evenly over `nodes` machines.
+    ///
+    /// The world size must divide evenly: a ragged last node would make the
+    /// compact placement ambiguous, so we refuse it loudly instead of
+    /// guessing.
+    pub fn for_grid(nodes: usize, dp: usize, stages: usize, tp_width: usize) -> Result<Topology> {
+        let world = dp * stages * tp_width;
+        ensure!(world >= 1, "topology needs a non-empty worker grid");
+        ensure!(nodes >= 1, "topology needs at least one node (got {nodes})");
+        if world % nodes != 0 {
+            bail!(
+                "--nodes {nodes} does not divide the worker grid evenly: \
+                 dp {dp} x stages {stages} x tp {tp_width} = {world} workers"
+            );
+        }
+        Topology::new(nodes, world / nodes)
+    }
+
+    /// Topology validated against a [`ClusterCfg`]: the node slots must cover
+    /// the cluster's GPU count, and the per-node slot width comes from the
+    /// cluster description.
+    pub fn from_cluster(cluster: &ClusterCfg, nodes: usize) -> Result<Topology> {
+        ensure!(nodes >= 1, "topology needs at least one node (got {nodes})");
+        let slots = nodes * cluster.gpus_per_node;
+        if slots < cluster.gpus {
+            bail!(
+                "--nodes {nodes} x {} gpus/node = {slots} slots cannot hold the \
+                 cluster's {} gpus",
+                cluster.gpus_per_node,
+                cluster.gpus
+            );
+        }
+        Topology::new(nodes, cluster.gpus_per_node)
+    }
+
+    /// Number of machines.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Worker slots per machine.
+    pub fn gpus_per_node(&self) -> usize {
+        self.gpus_per_node
+    }
+
+    /// Total worker slots (`nodes · gpus_per_node`).
+    pub fn slots(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Flat worker index of `(replica, stage, t)` in a `stages × tp_width`
+    /// grid — the trainer's thread-naming formula.
+    pub fn worker_index(
+        replica: usize,
+        stage: usize,
+        t: usize,
+        stages: usize,
+        tp_width: usize,
+    ) -> usize {
+        replica * (stages * tp_width) + stage * tp_width + t
+    }
+
+    /// Node housing flat worker `widx`.
+    pub fn node_of(&self, widx: usize) -> usize {
+        widx / self.gpus_per_node
+    }
+
+    /// How many distinct machines a set of flat worker indices crosses.
+    pub fn nodes_spanned(&self, widxs: impl IntoIterator<Item = usize>) -> usize {
+        let mut nodes: Vec<usize> = widxs.into_iter().map(|w| self.node_of(w)).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes.len()
+    }
+
+    /// Split shape of the dp sync group at `(stage, t)`: `Some((span,
+    /// per_node))` when the group's `dp` members occupy `span` machines in
+    /// equal contiguous blocks of `per_node = dp / span` ranks, `None` when
+    /// the placement is ragged (unequal or interleaved blocks), in which
+    /// case the caller must fall back to a flat group.
+    pub fn dp_group_split(
+        &self,
+        dp: usize,
+        stages: usize,
+        tp_width: usize,
+        stage: usize,
+        t: usize,
+    ) -> Option<(usize, usize)> {
+        if dp == 0 {
+            return None;
+        }
+        let homes: Vec<usize> = (0..dp)
+            .map(|r| self.node_of(Topology::worker_index(r, stage, t, stages, tp_width)))
+            .collect();
+        let mut distinct = homes.clone();
+        distinct.dedup();
+        // Blocks must be contiguous runs of strictly increasing node ids;
+        // a repeat after a change means replicas interleave across nodes.
+        if distinct.windows(2).any(|w| w[0] >= w[1]) {
+            return None;
+        }
+        let span = distinct.len();
+        if dp % span != 0 {
+            return None;
+        }
+        let per_node = dp / span;
+        let even = homes
+            .iter()
+            .enumerate()
+            .all(|(r, &node)| node == distinct[r / per_node]);
+        even.then_some((span, per_node))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::v100_cluster;
+
+    #[test]
+    fn rejects_zero_and_ragged_grids() {
+        assert!(Topology::new(0, 8).is_err());
+        assert!(Topology::new(2, 0).is_err());
+        // 2 x 3 x 1 = 6 workers do not split over 4 nodes.
+        assert!(Topology::for_grid(4, 2, 3, 1).is_err());
+        assert!(Topology::for_grid(2, 2, 3, 1).is_ok());
+    }
+
+    #[test]
+    fn cluster_validation_is_loud() {
+        let c = v100_cluster(32); // 8 gpus/node
+        assert!(Topology::from_cluster(&c, 4).is_ok());
+        let err = Topology::from_cluster(&c, 2).unwrap_err().to_string();
+        assert!(err.contains("cannot hold"), "got: {err}");
+    }
+
+    #[test]
+    fn node_of_is_compact_node_major() {
+        let t = Topology::new(2, 4).unwrap();
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.slots(), 8);
+        assert_eq!(t.nodes_spanned([0, 1, 2]), 1);
+        assert_eq!(t.nodes_spanned([2, 5]), 2);
+    }
+
+    #[test]
+    fn dp_split_even_cases() {
+        // dp 4, stages 2, tp 1: widx stride per replica is 2.
+        // 2 nodes x 4 slots: replicas {0,1} on node 0, {2,3} on node 1.
+        let t = Topology::new(2, 4).unwrap();
+        assert_eq!(t.dp_group_split(4, 2, 1, 0, 0), Some((2, 2)));
+        assert_eq!(t.dp_group_split(4, 2, 1, 1, 0), Some((2, 2)));
+        // One replica per node: stride 4 == gpus_per_node.
+        let t = Topology::new(4, 2).unwrap();
+        assert_eq!(t.dp_group_split(4, 2, 1, 0, 0), Some((4, 1)));
+        // Single node: span 1 — caller keeps the flat group.
+        let t = Topology::new(1, 8).unwrap();
+        assert_eq!(t.dp_group_split(4, 2, 1, 0, 0), Some((1, 4)));
+    }
+
+    #[test]
+    fn dp_split_ragged_cases_are_none() {
+        // dp 4, stages 3, tp 1 on 3 nodes x 4 slots: the replica stride is
+        // 3, so stage-0 homes are nodes 0,0,1,2 — unequal blocks, no
+        // hierarchical shape at any stage offset.
+        let t = Topology::new(3, 4).unwrap();
+        assert_eq!(t.dp_group_split(4, 3, 1, 0, 0), None);
+        assert_eq!(t.dp_group_split(4, 3, 1, 1, 0), None);
+        assert_eq!(t.dp_group_split(0, 3, 1, 0, 0), None);
+    }
+}

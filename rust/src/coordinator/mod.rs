@@ -36,6 +36,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "overlap-dp",
     "elastic",
     "loadgen",
+    "hier-comm",
 ];
 
 /// Flags every subcommand accepts (appended to each command's own list by

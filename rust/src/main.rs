@@ -55,6 +55,15 @@ COMMANDS:
                                   manifest)
                 --no-dp-overlap   serialize gradient sync to the step end
                                   (A/B timing; bitwise-identical losses)
+                --nodes N         spread the worker grid over N machines
+                                  (compact placement): dp sync groups that
+                                  split into equal per-node blocks take the
+                                  two-level hierarchical path automatically
+                                  (bitwise-identical to flat)
+                --hier-comm       require the hierarchical dp sync path;
+                                  error out instead of falling back to
+                                  flat when --nodes gives a group a
+                                  flat/ragged placement
                 --checkpoint DIR  write params + per-rank sharded
                                   optimizer state
                 --resume DIR      resume from a --checkpoint dir (bitwise
@@ -114,6 +123,11 @@ COMMANDS:
                                          when --tp > 1)
                          [--overlap-dp]  model the backward-overlapped
                                          dp gradient sync
+                         [--nodes N [--hier-comm]]  machines the grid is
+                                         spread over: prints the flat-vs-
+                                         hierarchical exposed-sync split;
+                                         --hier-comm makes the reported
+                                         step use the two-level cost
                          [--mttf SECS [--ckpt-every SECS]]  report the
                                          Young/Daly checkpoint-interval
                                          trade-off at that failure rate
@@ -184,8 +198,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             "checkpoint-every",
             "max-recoveries",
             "retry-backoff-ms",
+            "nodes",
         ],
-        &with_common(&["gpipe", "no-overlap", "no-dp-overlap", "elastic"]),
+        &with_common(&["gpipe", "no-overlap", "no-dp-overlap", "elastic", "hier-comm"]),
     )?;
     let cfg = TrainerCfg {
         artifacts: artifacts_dir(args),
@@ -218,6 +233,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         checkpoint_every: args.get_usize("checkpoint-every", 0)?,
         max_recoveries: args.get_usize("max-recoveries", 1)?,
         retry_backoff_ms: args.get_usize("retry-backoff-ms", 0)? as u64,
+        nodes: args.get_usize("nodes", 1)?,
+        hier_comm: args.has_flag("hier-comm"),
     };
     let report = if args.has_flag("elastic") {
         let sup = trainer::train_supervised(&cfg)?;
@@ -333,8 +350,8 @@ fn cmd_breakdown(args: &Args) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     args.validate_known(
         "simulate",
-        &["model", "top-k", "scheme", "dp", "tp", "pp", "gpus", "mttf", "ckpt-every"],
-        &with_common(&["zero", "overlap-dp"]),
+        &["model", "top-k", "scheme", "dp", "tp", "pp", "gpus", "mttf", "ckpt-every", "nodes"],
+        &with_common(&["zero", "overlap-dp", "hier-comm"]),
     )?;
     let mut model = config::model_preset(args.get("model").unwrap_or("moe-small"))?;
     let top_k = args.get_usize("top-k", 0)?;
@@ -364,8 +381,32 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     };
     let p = config::ParallelCfg { dp, tp, pp, ep, zero: args.has_flag("zero"), scheme };
     let overlap_dp = args.has_flag("overlap-dp");
+    let nodes = args.get_usize("nodes", 1)?;
+    let hier_comm = args.has_flag("hier-comm");
+    anyhow::ensure!(
+        !hier_comm || nodes > 1,
+        "--hier-comm needs --nodes >= 2 (got --nodes {nodes})"
+    );
+    let hier_split = if nodes > 1 {
+        ppmoe::comm::Topology::for_grid(nodes, dp, pp, tp)?
+            .dp_group_split(dp, pp, tp, 0, 0)
+            .filter(|&(span, _)| span > 1)
+    } else {
+        None
+    };
+    anyhow::ensure!(
+        !hier_comm || hier_split.is_some(),
+        "--hier-comm: the dp group does not split into equal per-node blocks \
+         under --nodes {nodes} (dp {dp} x pp {pp} x tp {tp} workers); adjust \
+         --nodes or drop --hier-comm to report flat sync"
+    );
     let sim = ppmoe::sim::Simulator::new(model.clone(), p, config::v100_cluster(gpus))?;
-    let r = sim.step_virtual_dp(tables::SWEEP_TC, 1, overlap_dp);
+    let r = sim.step_virtual_dp_at(
+        tables::SWEEP_TC,
+        1,
+        overlap_dp,
+        if hier_comm { hier_split } else { None },
+    );
     println!("model: {} ({:.1}B params)", model.name, model.total_params() as f64 / 1e9);
     println!("layout: dp={dp} tp={tp} pp={pp} scheme={scheme:?} on {gpus} GPUs");
     println!("step time:        {:.1} ms", r.step_seconds * 1e3);
@@ -409,6 +450,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         );
     } else {
         println!("dp grad sync:     {:.1} ms", r.dp_sync_seconds * 1e3);
+    }
+    if let Some((span, per_node)) = hier_split {
+        if dp > 1 {
+            let flat = sim.step_virtual_dp_at(tables::SWEEP_TC, 1, overlap_dp, None);
+            let hier =
+                sim.step_virtual_dp_at(tables::SWEEP_TC, 1, overlap_dp, Some((span, per_node)));
+            println!(
+                "dp sync topology: {span} nodes x {per_node} ranks/node — exposed \
+                 sync {:.1} ms flat vs {:.1} ms hierarchical (chunk-pipelined)",
+                flat.dp_sync_seconds * 1e3,
+                hier.dp_sync_seconds * 1e3
+            );
+        }
     }
     let mttf = args.get_f64("mttf", 0.0)?;
     if mttf > 0.0 {

@@ -337,6 +337,24 @@ impl Simulator {
     ///   sync volume exceeds the backward-drain window — exactly the
     ///   regime docs/hotpath.md §Data-parallel overlap describes.
     pub fn step_virtual_dp(&self, tc: TrainCfg, v: usize, overlap_dp: bool) -> StepResult {
+        self.step_virtual_dp_at(tc, v, overlap_dp, None)
+    }
+
+    /// [`Simulator::step_virtual_dp`] with an explicit dp-sync *topology*:
+    /// `hier = Some((nodes, per_node))` prices every dp collective with the
+    /// two-level chunk-pipelined cost
+    /// ([`crate::comm::CostModel::hierarchical_all_reduce_pipelined`],
+    /// chunked per inter-node owner segment like the live
+    /// `HierarchicalGroup` chain), `None` keeps the flat NIC-contended
+    /// ring. `simulate --dp --nodes` runs both and prints the
+    /// flat-vs-hierarchical exposed-sync split.
+    pub fn step_virtual_dp_at(
+        &self,
+        tc: TrainCfg,
+        v: usize,
+        overlap_dp: bool,
+        hier: Option<(usize, usize)>,
+    ) -> StepResult {
         let bt = Batch { b: tc.micro_batch, s: self.m.seq };
         let fwd_bd = self.stage_forward(bt);
         let stage_fwd = fwd_bd.total();
@@ -378,14 +396,20 @@ impl Simulator {
             // NIC contention divides the inter-node bandwidth
             let bw =
                 self.cost.inter_bw() / self.cost.cluster.gpus_per_node as f64;
-            let total = self.cost.all_reduce_bw(self.p.dp, grad_bytes, bw).seconds;
+            let sync_cost = |bytes: f64| -> f64 {
+                match hier {
+                    Some((nodes, per_node)) => self
+                        .cost
+                        .hierarchical_all_reduce_pipelined(nodes, per_node, bytes, nodes)
+                        .seconds,
+                    None => self.cost.all_reduce_bw(self.p.dp, bytes, bw).seconds,
+                }
+            };
+            let total = sync_cost(grad_bytes);
             if overlap_dp {
                 // per-(stage, chunk) buckets of 1/v the volume, draining
                 // through one comm channel per stage in grad-ready order
-                let bucket = self
-                    .cost
-                    .all_reduce_bw(self.p.dp, grad_bytes / v as f64, bw)
-                    .seconds;
+                let bucket = sync_cost(grad_bytes / v as f64);
                 let mut exposed: f64 = 0.0;
                 for done in &pipe.chunk_bwd_done {
                     let mut order: Vec<f64> = done.clone();

@@ -27,7 +27,7 @@ use anyhow::{ensure, Result};
 use std::sync::Arc;
 
 use crate::comm::collectives::segment;
-use crate::comm::AllReduceGroup;
+use crate::comm::{AllReduceGroup, DpSyncGroup};
 use crate::runtime::Tensor;
 
 /// Adam with bias correction (Kingma & Ba), β = (0.9, 0.95) like the paper.
@@ -540,7 +540,12 @@ pub fn sharded_group_step_with(
     );
     group.reduce_scatter_into(opt.rank(), &scratch.flat, &mut scratch.seg);
     opt.update_flat(params, &scratch.seg, gscale)?;
-    gather_updated_params(opt, group, params, &mut scratch.shard)
+    gather_updated_params(
+        opt,
+        &DpSyncGroup::Flat(group.clone()),
+        params,
+        &mut scratch.shard,
+    )
 }
 
 /// Flatten a ragged gradient list into `out` (cleared first, capacity
@@ -567,7 +572,7 @@ pub fn flatten_grads(grads: &[Tensor], out: &mut Vec<f32>) -> Result<()> {
 /// matching reduce-scatter phase.
 pub fn gather_updated_params(
     opt: &ShardedAdam,
-    group: &Arc<AllReduceGroup>,
+    group: &DpSyncGroup,
     params: &mut [Tensor],
     gather_buf: &mut Vec<f32>,
 ) -> Result<()> {

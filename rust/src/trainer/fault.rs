@@ -30,7 +30,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::comm::collectives::{AllReduceGroup, Barrier};
+use crate::comm::collectives::Barrier;
+use crate::comm::DpSyncGroup;
 
 /// How an injected fault kills its worker.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -310,7 +311,7 @@ impl Monitor {
     pub fn spawn(
         hb: Arc<Heartbeats>,
         timeout: Duration,
-        groups: Vec<Arc<AllReduceGroup>>,
+        groups: Vec<DpSyncGroup>,
         barrier: Arc<Barrier>,
         abort: Option<Arc<AtomicBool>>,
     ) -> Monitor {
@@ -378,6 +379,7 @@ impl Drop for Monitor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::collectives::AllReduceGroup;
 
     #[test]
     fn grammar_full_and_defaults() {
@@ -484,7 +486,7 @@ mod tests {
         let mon = Monitor::spawn(
             hb.clone(),
             Duration::from_millis(30),
-            vec![group.clone()],
+            vec![DpSyncGroup::Flat(group.clone())],
             barrier.clone(),
             Some(abort.clone()),
         );

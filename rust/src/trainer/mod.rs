@@ -139,7 +139,7 @@ use std::thread;
 use anyhow::{bail, Context, Result};
 
 use crate::comm::collectives::segment;
-use crate::comm::{Algo, AllReduceGroup, Barrier};
+use crate::comm::{Algo, AllReduceGroup, Barrier, DpSyncGroup, HierarchicalGroup, Topology};
 use crate::data::Corpus;
 use crate::metrics::Timers;
 use crate::pipeline::{
@@ -261,6 +261,16 @@ pub struct TrainerCfg {
     /// relaunch, multiplied by the attempt number. 0 relaunches instantly
     /// (tests); real deployments want a few seconds.
     pub retry_backoff_ms: u64,
+    /// Machines the worker grid is spread over (`--nodes`): workers map
+    /// onto nodes compactly via [`crate::comm::Topology`], and any dp sync
+    /// group whose replicas split into equal per-node blocks automatically
+    /// takes the two-level hierarchical path (bitwise-identical to flat).
+    /// 1 = everything co-resident, always flat.
+    pub nodes: usize,
+    /// Require the hierarchical dp sync path (`--hier-comm`): fail loudly
+    /// at startup if `--nodes` gives any dp group a flat/ragged placement
+    /// instead of silently falling back. Off = automatic per-group choice.
+    pub hier_comm: bool,
 }
 
 impl Default for TrainerCfg {
@@ -290,6 +300,8 @@ impl Default for TrainerCfg {
             checkpoint_every: 0,
             max_recoveries: 1,
             retry_backoff_ms: 0,
+            nodes: 1,
+            hier_comm: false,
         }
     }
 }
@@ -433,8 +445,9 @@ struct WorkerCtx {
     aux_coef: f32,
     start_step: usize,
     /// One gradient-sync group per chunk, shared by this tp lane's dp
-    /// replicas (unused at dp = 1).
-    sync_groups: Vec<Arc<AllReduceGroup>>,
+    /// replicas (unused at dp = 1) — flat or two-level hierarchical,
+    /// chosen per group from the `--nodes` topology.
+    sync_groups: Vec<DpSyncGroup>,
     /// Per-stage scalar group for the clip-norm partial exchange across
     /// the dp × tp lanes (None when dp·tpw = 1).
     norm_group: Option<Arc<AllReduceGroup>>,
@@ -718,13 +731,59 @@ pub fn train_capture(cfg: &TrainerCfg, failures_out: &mut Vec<WorkerFailure>) ->
         checkpoint::discard_staging(dir)?;
     }
 
+    // topology: with --nodes the workers map onto machines compactly, and
+    // any dp gradient group whose replicas split into equal per-node blocks
+    // takes the two-level hierarchical path (bitwise-identical to flat, so
+    // this is purely a performance decision). --hier-comm makes a fallback
+    // to flat a startup error instead of a silent choice.
+    if cfg.hier_comm && cfg.nodes <= 1 {
+        bail!("--hier-comm needs --nodes >= 2 (got --nodes {})", cfg.nodes);
+    }
+    if cfg.hier_comm && dp < 2 {
+        bail!("--hier-comm needs --dp >= 2 (got --dp {dp})");
+    }
+    let topo = if cfg.nodes > 1 {
+        Some(Topology::for_grid(cfg.nodes, dp, p, tpw)?)
+    } else {
+        None
+    };
+    let mut hier_shape: Vec<Vec<Option<(usize, usize)>>> = vec![vec![None; tpw]; p];
+    if let Some(topo) = &topo {
+        for (stage, per_tp) in hier_shape.iter_mut().enumerate() {
+            for (t, shape) in per_tp.iter_mut().enumerate() {
+                match topo.dp_group_split(dp, p, tpw, stage, t) {
+                    Some((span, per_node)) if span > 1 => *shape = Some((span, per_node)),
+                    _ if cfg.hier_comm => bail!(
+                        "--hier-comm: the dp group at (stage {stage}, tp {t}) does \
+                         not split into equal per-node blocks under --nodes {} \
+                         (dp {dp} x stages {p} x tp {tpw} workers); adjust --nodes \
+                         or drop --hier-comm to fall back to flat sync",
+                        cfg.nodes
+                    ),
+                    _ => {}
+                }
+            }
+        }
+    }
+
     // collectives: one dp gradient group per (stage, tp rank, chunk), one
     // scalar norm group per stage across the dp × tp lanes, and one tp
     // combine group per (replica, stage)
-    let sync_groups: Vec<Vec<Vec<Arc<AllReduceGroup>>>> = (0..p)
-        .map(|_| {
+    let sync_groups: Vec<Vec<Vec<DpSyncGroup>>> = (0..p)
+        .map(|stage| {
             (0..tpw)
-                .map(|_| (0..v).map(|_| AllReduceGroup::with_algo(dp, Algo::Chunked)).collect())
+                .map(|t| {
+                    (0..v)
+                        .map(|_| match hier_shape[stage][t] {
+                            Some((span, per_node)) => {
+                                DpSyncGroup::Hier(HierarchicalGroup::new(span, per_node))
+                            }
+                            None => {
+                                DpSyncGroup::Flat(AllReduceGroup::with_algo(dp, Algo::Chunked))
+                            }
+                        })
+                        .collect()
+                })
                 .collect()
         })
         .collect();
@@ -739,15 +798,15 @@ pub fn train_capture(cfg: &TrainerCfg, failures_out: &mut Vec<WorkerFailure>) ->
 
     // every collective in the run, flat — the set the stall monitor (and
     // the driver's own failure path) poisons to release blocked waiters
-    let mut all_groups: Vec<Arc<AllReduceGroup>> = Vec::new();
+    let mut all_groups: Vec<DpSyncGroup> = Vec::new();
     for per_tp in &sync_groups {
         for per_chunk in per_tp {
             all_groups.extend(per_chunk.iter().cloned());
         }
     }
-    all_groups.extend(norm_groups.iter().cloned());
+    all_groups.extend(norm_groups.iter().cloned().map(DpSyncGroup::Flat));
     for per_stage in &tp_groups {
-        all_groups.extend(per_stage.iter().cloned());
+        all_groups.extend(per_stage.iter().cloned().map(DpSyncGroup::Flat));
     }
     // heartbeat board: one cell per worker, beaten at every op boundary
     let hb = fault::Heartbeats::new(p * dp * tpw);
@@ -1319,7 +1378,7 @@ impl CtBuf {
 /// peers inside a collective, and the driver inside the step barrier,
 /// forever: unlike mpsc channels, those have no disconnection semantics).
 struct PoisonOnFailure {
-    groups: Vec<Arc<AllReduceGroup>>,
+    groups: Vec<DpSyncGroup>,
     barrier: Arc<Barrier>,
     armed: bool,
 }
@@ -1351,10 +1410,10 @@ fn stage_worker(
 ) -> Result<()> {
     let mut groups = ctx.sync_groups.clone();
     if let Some(g) = &ctx.norm_group {
-        groups.push(g.clone());
+        groups.push(DpSyncGroup::Flat(g.clone()));
     }
     if let Some(g) = &ctx.tp_group {
-        groups.push(g.clone());
+        groups.push(DpSyncGroup::Flat(g.clone()));
     }
     let mut guard = PoisonOnFailure { groups, barrier: barrier.clone(), armed: true };
     let result = stage_worker_inner(ctx, cfg, ops, io, barrier);
@@ -2079,6 +2138,9 @@ fn stage_worker_inner(
                                 )
                             })?;
                             timers.add_count("dp_bucket_staged", 1);
+                            if ctx.sync_groups[chunk].is_hierarchical() {
+                                timers.add_count("dp_hier_bucket", 1);
+                            }
                             lane.bucket_txs[chunk].send(bucket).ok();
                         }
                     }
@@ -2127,6 +2189,9 @@ fn stage_worker_inner(
                             &lane.grad_acc[0][chunk_ranges[c].clone()],
                             &mut bkt.flat,
                         )?;
+                        if ctx.sync_groups[c].is_hierarchical() {
+                            timers.add_count("dp_hier_bucket", 1);
+                        }
                         ctx.sync_groups[c].reduce_scatter_into(
                             replica,
                             &bkt.flat,

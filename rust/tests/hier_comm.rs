@@ -1,0 +1,238 @@
+//! Integration: the two-level hierarchical dp sync path must be **bitwise**
+//! equivalent to the flat single-level one.
+//!
+//! Two tiers:
+//!
+//! * An ungated property sweep driving the live [`HierarchicalGroup`]
+//!   against the flat [`AllReduceGroup`] over ragged vector lengths ×
+//!   (nodes, gpus-per-node) shapes × dirty reused output buffers × both
+//!   forwarding modes (chunk-pipelined and serial), two rounds per shape so
+//!   round-state reuse is exercised. The groups share the fixed rank-order
+//!   summation contract (docs/hotpath.md §Hierarchical dp sync), so every
+//!   reduce-scatter segment and all-gather result must match bit for bit.
+//! * A gated live-trainer tier (same gating as `dp_equivalence.rs`): a
+//!   `--dp 4 --nodes 2 --hier-comm` run must produce bitwise-identical
+//!   losses and final parameters to the flat run, on plain and interleaved
+//!   artifacts, and the `dp_hier_bucket` counter proves the hierarchical
+//!   groups really carried the sync.
+
+mod common;
+
+use std::path::PathBuf;
+use std::thread;
+
+use ppmoe::comm::collectives::Algo;
+use ppmoe::comm::{AllReduceGroup, HierarchicalGroup, Topology};
+use ppmoe::trainer::{checkpoint, train, TrainerCfg};
+use ppmoe::util::prop::forall;
+
+/// Deterministic per-(rank, element, round) payload with full mantissas, so
+/// a summation-order deviation cannot cancel out.
+fn payload(rank: usize, len: usize, round: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| ((rank * 131 + i * 17 + round * 1009) as f32 * 0.618).sin() * 3.7)
+        .collect()
+}
+
+/// Run `rounds` reduce-scatter + all-gather rounds on both groups from every
+/// rank (one thread per rank), with NaN-dirtied reused segment buffers, and
+/// bit-compare the segments and gathered results. The all-gather deposits
+/// *modified* segment data so phase two is checked on its own, not just as a
+/// replay of phase one.
+fn assert_bitwise_vs_flat(nodes: usize, g: usize, len: usize, pipelined: bool, rounds: usize) {
+    let n = nodes * g;
+    let flat = AllReduceGroup::with_algo(n, Algo::Chunked);
+    let hier = HierarchicalGroup::with_mode(nodes, g, pipelined);
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let (flat, hier) = (flat.clone(), hier.clone());
+            thread::spawn(move || {
+                // dirty, reused across rounds: reduce_scatter_into must
+                // clear-and-fill, never blend with stale contents
+                let mut sf = vec![f32::NAN; len];
+                let mut sh = vec![f32::NAN; len];
+                for round in 0..rounds {
+                    let contrib = payload(r, len, round);
+                    flat.reduce_scatter_into(r, &contrib, &mut sf);
+                    hier.reduce_scatter_into(r, &contrib, &mut sh);
+                    assert_eq!(
+                        sf.len(),
+                        sh.len(),
+                        "nodes={nodes} g={g} len={len} rank {r}: segment lengths"
+                    );
+                    for (i, (a, b)) in sf.iter().zip(&sh).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "nodes={nodes} g={g} len={len} pipelined={pipelined} \
+                             round {round} rank {r}: segment elem {i}: {a} vs {b}"
+                        );
+                    }
+                    // the optimizer hands back UPDATED data, not the reduced
+                    // gradients — mimic that so all-gather is tested per se
+                    let upd: Vec<f32> = sf.iter().map(|x| x * 0.5 - 1.0).collect();
+                    let gf = flat.all_gather_as(r, &upd);
+                    let gh = hier.all_gather_as(r, &upd);
+                    assert_eq!(gf.len(), len);
+                    assert_eq!(gh.len(), len);
+                    for (i, (a, b)) in gf.iter().zip(gh.iter()).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "nodes={nodes} g={g} len={len} pipelined={pipelined} \
+                             round {round} rank {r}: gathered elem {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn hierarchical_matches_flat_over_shapes_and_ragged_lengths() {
+    // lengths chosen so segments are ragged (len % n != 0), empty for some
+    // ranks (len < n), and multi-element; 2 rounds exercise buffer reuse
+    for &nodes in &[1usize, 2, 4] {
+        for &g in &[1usize, 2, 4] {
+            for &len in &[1usize, 7, 64, 97] {
+                for &pipelined in &[true, false] {
+                    assert_bitwise_vs_flat(nodes, g, len, pipelined, 2);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_matches_flat_on_random_shapes() {
+    forall(
+        "hier == flat bitwise",
+        23,
+        12,
+        |rng| {
+            let nodes = 1 + rng.below(4);
+            let g = 1 + rng.below(4);
+            (nodes, g, rng.range(1, 120), rng.below(2) == 0)
+        },
+        |&(nodes, g, len, pipelined)| {
+            assert_bitwise_vs_flat(nodes, g, len, pipelined, 2);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn topology_places_ranks_node_major() {
+    let topo = Topology::new(2, 4).unwrap();
+    assert_eq!(topo.slots(), 8);
+    assert_eq!(topo.node_of(0), 0);
+    assert_eq!(topo.node_of(3), 0);
+    assert_eq!(topo.node_of(4), 1);
+    // dp 4 × stages 2 × tp 1 over 2 nodes: every dp group splits 2 × 2
+    assert_eq!(topo.dp_group_split(4, 2, 1, 0, 0), Some((2, 2)));
+    assert_eq!(topo.dp_group_split(4, 2, 1, 1, 0), Some((2, 2)));
+    // a grid the node count does not divide is a loud error
+    assert!(Topology::for_grid(3, 4, 2, 1).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// gated live-trainer tier
+// ---------------------------------------------------------------------------
+
+fn cfg_for(artifacts: PathBuf, steps: usize, micro: usize) -> TrainerCfg {
+    TrainerCfg {
+        artifacts,
+        steps,
+        num_micro: micro,
+        lr: 3e-3,
+        seed: 13,
+        log_every: 0,
+        warmup_steps: 3,
+        ..Default::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ppmoe_hier_{tag}_{}", std::process::id()))
+}
+
+/// Flat `--dp 4` vs `--dp 4 --nodes 2 --hier-comm`: bitwise losses and final
+/// params, and the hier run must actually route buckets through the
+/// two-level groups (counter > 0) while the flat run never does.
+fn assert_hier_dp_equivalence(arts: PathBuf, micro: usize, steps: usize, tag: &str) {
+    let manifest = ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+
+    let ck_flat = tmp(&format!("{tag}_flat"));
+    let ck_hier = tmp(&format!("{tag}_hier"));
+
+    let mut cfg = cfg_for(arts.clone(), steps, micro);
+    cfg.dp = 4;
+    cfg.checkpoint_dir = Some(ck_flat.clone());
+    let flat = train(&cfg).unwrap();
+
+    let mut cfg = cfg_for(arts, steps, micro);
+    cfg.dp = 4;
+    cfg.nodes = 2;
+    cfg.hier_comm = true;
+    cfg.checkpoint_dir = Some(ck_hier.clone());
+    let hier = train(&cfg).unwrap();
+
+    for (f, h) in flat.steps.iter().zip(&hier.steps) {
+        assert_eq!(f.loss, h.loss, "{tag} step {}: hier loss diverged from flat", f.step);
+    }
+    for stage in 0..p {
+        let want = checkpoint::load_stage(&ck_flat, stage, &manifest).unwrap();
+        let got = checkpoint::load_stage(&ck_hier, stage, &manifest).unwrap();
+        assert_eq!(want, got, "{tag} stage {stage}: hier params diverged from flat");
+    }
+    let hier_buckets: u64 =
+        hier.stage_timers.iter().map(|t| t.count("dp_hier_bucket")).sum();
+    assert!(
+        hier_buckets > 0,
+        "{tag}: --hier-comm run never routed a bucket through a hierarchical group"
+    );
+    let flat_buckets: u64 =
+        flat.stage_timers.iter().map(|t| t.count("dp_hier_bucket")).sum();
+    assert_eq!(flat_buckets, 0, "{tag}: flat run touched the hierarchical path");
+
+    for d in [&ck_flat, &ck_hier] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn dp4_nodes2_hier_bitwise_matches_flat() {
+    let Some(arts) = common::live_artifacts_dir() else { return };
+    assert_hier_dp_equivalence(arts, 8, 4, "plain");
+}
+
+#[test]
+fn dp4_nodes2_hier_bitwise_on_interleaved_chunked_artifacts() {
+    let Some(arts) = common::live_chunked_artifacts_dir() else { return };
+    let manifest = ppmoe::runtime::Manifest::load(&arts.join("manifest.json")).unwrap();
+    let p = manifest.model.stages;
+    // per-replica micros must stay divisible by p: m = p · dp
+    assert_hier_dp_equivalence(arts, 4 * p, 3, "chunked");
+}
+
+#[test]
+fn hier_comm_misconfiguration_fails_loudly() {
+    let Some(arts) = common::live_artifacts_dir() else { return };
+    // --hier-comm without --nodes
+    let mut cfg = cfg_for(arts.clone(), 1, 4);
+    cfg.dp = 2;
+    cfg.hier_comm = true;
+    let err = train(&cfg).unwrap_err().to_string();
+    assert!(err.contains("--nodes"), "should point at --nodes: {err}");
+    // --hier-comm without dp
+    let mut cfg = cfg_for(arts, 1, 4);
+    cfg.nodes = 2;
+    cfg.hier_comm = true;
+    let err = train(&cfg).unwrap_err().to_string();
+    assert!(err.contains("--dp"), "should point at --dp: {err}");
+}
