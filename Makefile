@@ -6,7 +6,8 @@ CARGO ?= cargo
 
 .PHONY: all artifacts artifacts-tiny artifacts-tiny-v4 artifacts-tiny-k2 \
         artifacts-tiny-v4-k2 build test test-dp test-dp-py test-tp \
-        test-tp-py test-elastic test-serve test-comm bench bench-serve doc clean
+        test-tp-py test-elastic test-serve test-comm test-plan bench \
+        bench-serve bench-plan doc clean
 
 all: artifacts build
 
@@ -112,6 +113,15 @@ test-serve:
 test-comm:
 	$(CARGO) test --test hier_comm -q -- --nocapture
 
+# The planner slice: `ppmoe plan`'s search ranked exactly as an
+# independent exhaustive Simulator sweep, every emitted train command
+# re-passing the trainer's own validation, the memory-gate
+# never-over-budget property, and the golden single-candidate grid
+# (rust/tests/plan_contract.rs; docs/planner.md). Pure simulation — runs
+# everywhere, nothing self-skips.
+test-plan:
+	$(CARGO) test --test plan_contract -q -- --nocapture
+
 # Closed-loop serving bench: `ppmoe serve --loadgen` sweeps the
 # uniform/zipf/bursty arrival mixes and writes BENCH_serve.json
 # (p50/p99 latency, tokens/s, batch fill, dispatch A/B ns rows, oracle
@@ -119,6 +129,13 @@ test-comm:
 bench-serve:
 	$(CARGO) run --release -- serve --loadgen --requests 256 \
 	    --max-batch 8 --max-wait-us 800 --seed 42
+
+# Planner end-to-end on the paper's 32-GPU V100 setting: full grid
+# search, ranked table, paste-ready train command (self-validated against
+# the trainer's arg + geometry checks), BENCH_plan.json. Deterministic.
+bench-plan:
+	$(CARGO) run --release -- plan --model moe-small --gpus 32 \
+	    --gpus-per-node 8 --mem-gb 32 --global-batch 256 --emit-args
 
 # Hot-path microbenches (writes BENCH_hotpath.json: incl. the
 # dp_sync/{serialized,overlapped} dp={2,4} A/B rows, the

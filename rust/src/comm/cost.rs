@@ -254,6 +254,20 @@ impl CostModel {
             bytes_on_wire: serial.bytes_on_wire,
         }
     }
+
+    /// The per-link-class α-β lines every collective above derives from,
+    /// as `(label, alpha_seconds, bandwidth_bytes_per_sec)` rows: the
+    /// intra-node NVLink class and the *effective* inter-node class (NIC
+    /// line rate × collective efficiency, the same
+    /// [`Self::inter_bw`] figure the hierarchical chain hops and dp sync
+    /// pay). `ppmoe plan` echoes these rows so a plan is reproducible from
+    /// its own output without the cluster preset at hand.
+    pub fn link_classes(&self) -> Vec<(&'static str, f64, f64)> {
+        vec![
+            ("intra-node", self.cluster.alpha, self.cluster.bw_inner),
+            ("inter-node", self.cluster.alpha, self.inter_bw()),
+        ]
+    }
 }
 
 /// The paper's own closed-form ratios (§3.2). Kept verbatim so the
@@ -328,6 +342,20 @@ mod tests {
         assert_eq!(m.group_bw_at(8, 1), 300e9);
         assert_eq!(m.nic_streams(16), 8);
         assert_eq!(m.nic_streams_at(16, 2), 8);
+    }
+
+    #[test]
+    fn link_classes_echo_the_alpha_beta_constants() {
+        // the planner's cluster echo must quote the SAME lines the
+        // collectives price: raw NVLink intra-node, derated IB inter-node
+        let m = model();
+        let classes = m.link_classes();
+        assert_eq!(classes.len(), 2);
+        let (label, alpha, bw) = classes[0];
+        assert_eq!((label, alpha, bw), ("intra-node", m.cluster.alpha, m.cluster.bw_inner));
+        let (label, alpha, bw) = classes[1];
+        assert_eq!((label, alpha, bw), ("inter-node", m.cluster.alpha, m.inter_bw()));
+        assert!(bw < m.cluster.bw_inter, "inter-node line must be derated");
     }
 
     #[test]

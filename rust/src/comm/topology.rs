@@ -154,6 +154,34 @@ impl Topology {
             .all(|(r, &node)| node == distinct[r / per_node]);
         even.then_some((span, per_node))
     }
+
+    /// The dp-sync split shape shared by EVERY `(stage, t)` group of a
+    /// `dp × stages × tp_width` grid: `Some((span, per_node))` when all
+    /// `stages · tp_width` groups split into the same equal per-node
+    /// blocks — the only shape the planner can price with a single
+    /// [`crate::comm::CostModel::hierarchical_all_reduce_pipelined`] call
+    /// (and the shape under which `--hier-comm` is guaranteed to start,
+    /// since the trainer checks every group individually). `None` when any
+    /// group is ragged or the groups disagree.
+    pub fn uniform_dp_split(
+        &self,
+        dp: usize,
+        stages: usize,
+        tp_width: usize,
+    ) -> Option<(usize, usize)> {
+        let mut common: Option<(usize, usize)> = None;
+        for stage in 0..stages {
+            for t in 0..tp_width {
+                let shape = self.dp_group_split(dp, stages, tp_width, stage, t)?;
+                match common {
+                    None => common = Some(shape),
+                    Some(c) if c == shape => {}
+                    Some(_) => return None,
+                }
+            }
+        }
+        common
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +230,28 @@ mod tests {
         // Single node: span 1 — caller keeps the flat group.
         let t = Topology::new(1, 8).unwrap();
         assert_eq!(t.dp_group_split(4, 2, 1, 0, 0), Some((1, 4)));
+    }
+
+    #[test]
+    fn uniform_split_requires_every_group_to_agree() {
+        // dp 4, stages 2, tp 1 over 2 nodes x 4 slots: both stages split
+        // (2, 2) — the planner gets one shape for the whole grid.
+        let t = Topology::new(2, 4).unwrap();
+        assert_eq!(t.uniform_dp_split(4, 2, 1), Some((2, 2)));
+        // dp 4, stages 3, tp 1 over 3 nodes x 4 slots: every group is
+        // ragged (see dp_split_ragged_cases_are_none), so no uniform shape.
+        let t = Topology::new(3, 4).unwrap();
+        assert_eq!(t.uniform_dp_split(4, 3, 1), None);
+        // single node: span 1 everywhere — uniform, but the caller's
+        // `span > 1` filter keeps the flat group.
+        let t = Topology::new(1, 8).unwrap();
+        assert_eq!(t.uniform_dp_split(4, 2, 1), Some((1, 4)));
+        // the uniform answer can never contradict a per-group query
+        let t = Topology::new(4, 2).unwrap();
+        let uni = t.uniform_dp_split(4, 2, 1).unwrap();
+        for stage in 0..2 {
+            assert_eq!(t.dp_group_split(4, 2, 1, stage, 0), Some(uni));
+        }
     }
 
     #[test]

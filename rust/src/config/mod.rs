@@ -90,6 +90,27 @@ impl ModelDims {
     pub fn adam_state_bytes(&self) -> usize {
         12 * self.total_params()
     }
+
+    /// Activation bytes ONE microbatch leaves resident per transformer
+    /// layer on a `tp`-sharded rank, first order: per token, the block
+    /// keeps its input, the attention output, and the two residual-stream
+    /// copies unsharded (4h elements), while the attention projections and
+    /// the FFN/expert intermediate (4h + 2·ffn elements) shard `tp`-ways —
+    /// the same split the segment export applies. Dropout masks,
+    /// softmax scores and other O(s²) attention internals are deliberately
+    /// excluded (flash-style recomputation is assumed), so this is the
+    /// *floor* the planner's memory gate enforces, not a ceiling.
+    pub fn activation_bytes_per_layer(
+        &self,
+        micro_batch: usize,
+        tp: usize,
+        wire_bytes: usize,
+    ) -> f64 {
+        let tokens = (micro_batch * self.seq) as f64;
+        let unsharded = 4.0 * self.hidden as f64;
+        let sharded = (4.0 * self.hidden as f64 + 2.0 * self.ffn as f64) / tp.max(1) as f64;
+        tokens * (unsharded + sharded) * wire_bytes as f64
+    }
 }
 
 /// Parallel layout: the (DP, TP, PP, EP) tuple of Table 2, plus ZeRO.
@@ -236,6 +257,32 @@ impl ParallelCfg {
         let frac = (self.ep as f64 - 1.0) / self.ep as f64;
         // 2 a2a (dispatch out, combine back) × k copies/token
         2.0 * moe_here * frac * (tokens * m.hidden) as f64 * m.top_k as f64
+    }
+
+    /// First-order per-rank activation footprint of one training step
+    /// under 1F1B: a stage holds live activations for at most
+    /// `min(num_micro, pp)` in-flight microbatches (the 1F1B steady state —
+    /// stage 0 is the worst case), and interleaving `v` chunks adds up to
+    /// `(v−1)/v` of one more microbatch of warm chunks awaiting their
+    /// backward. Each in-flight microbatch pins
+    /// [`ModelDims::activation_bytes_per_layer`] for the `layers/pp`
+    /// resident layers. This is the activation term of `ppmoe plan`'s
+    /// memory gate, alongside [`Self::optimizer_bytes_per_rank`] and the
+    /// wire-format weight + gradient copies (docs/planner.md §Memory
+    /// model).
+    pub fn activation_bytes_per_rank(
+        &self,
+        m: &ModelDims,
+        tc: &TrainCfg,
+        v: usize,
+        wire_bytes: usize,
+    ) -> f64 {
+        let layers_here = (m.layers as f64 / self.pp.max(1) as f64).max(1.0);
+        let per_micro =
+            layers_here * m.activation_bytes_per_layer(tc.micro_batch, self.tp, wire_bytes);
+        let v = v.max(1) as f64;
+        let in_flight = tc.num_micro.min(self.pp).max(1) as f64 + (v - 1.0) / v;
+        in_flight * per_micro
     }
 
     /// Validate divisibility constraints against a model + cluster.
@@ -542,6 +589,40 @@ mod tests {
         // tp alone must not be attributed to the zero knob
         let tp1 = ParallelCfg { tp: 1, ..base }.optimizer_bytes_per_rank(&m);
         assert_eq!(tp1, 2 * replicated);
+    }
+
+    #[test]
+    fn activation_memory_math() {
+        let m = moe_small_setting();
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        let base = ParallelCfg {
+            dp: 1, tp: 1, pp: 4, ep: 1, zero: false, scheme: Scheme::PpMoE,
+        };
+        // per-layer closed form at tp = 1: tokens · (8h + 2·ffn) · wire
+        let per_layer = m.activation_bytes_per_layer(8, 1, 2);
+        let tokens = (8 * m.seq) as f64;
+        let expect = tokens * (8.0 * m.hidden as f64 + 2.0 * m.ffn as f64) * 2.0;
+        assert!((per_layer - expect).abs() < 1.0, "{per_layer} vs {expect}");
+        // tp shards only the sharded part: tp=4 sits strictly between the
+        // unsharded floor and the tp=1 total
+        let tp4 = m.activation_bytes_per_layer(8, 4, 2);
+        let floor = tokens * 4.0 * m.hidden as f64 * 2.0;
+        assert!(floor < tp4 && tp4 < per_layer);
+        // 1F1B in-flight cap: deep pipelines pin at most pp microbatches,
+        // so doubling num_micro beyond pp changes nothing...
+        let r = base.activation_bytes_per_rank(&m, &tc, 1, 2);
+        let tc2 = TrainCfg { micro_batch: 8, num_micro: 32 };
+        assert_eq!(r, base.activation_bytes_per_rank(&m, &tc2, 1, 2));
+        // ...while fewer microbatches than stages shrink the footprint
+        let tc_small = TrainCfg { micro_batch: 8, num_micro: 2 };
+        assert!(base.activation_bytes_per_rank(&m, &tc_small, 1, 2) < r);
+        // interleaving adds less than one extra microbatch equivalent
+        let v4 = base.activation_bytes_per_rank(&m, &tc, 4, 2);
+        let per_micro = r / 4.0; // in_flight was min(16, 4) = 4
+        assert!(v4 > r && v4 < r + per_micro, "{r} < {v4} < {}", r + per_micro);
+        // and the footprint matches layers_here · in_flight · per-layer
+        let expect_rank = 4.0 * (m.layers as f64 / 4.0) * per_layer;
+        assert!((r - expect_rank).abs() < 1.0, "{r} vs {expect_rank}");
     }
 
     #[test]

@@ -37,11 +37,59 @@ const KNOWN_FLAGS: &[&str] = &[
     "elastic",
     "loadgen",
     "hier-comm",
+    "emit-args",
 ];
 
 /// Flags every subcommand accepts (appended to each command's own list by
 /// [`Args::validate_known`] callers).
 pub const COMMON_FLAGS: &[&str] = &["verbose", "help"];
+
+/// The `ppmoe` binary's subcommands — the corpus [`Args::suggest`] checks
+/// a mistyped command against (`ppmoe pln` / `ppmoe paln` → "did you mean
+/// 'plan'?"). Keep in sync with the dispatch in `main.rs`.
+pub const COMMANDS: &[&str] = &[
+    "train",
+    "serve",
+    "plan",
+    "sweep",
+    "breakdown",
+    "simulate",
+    "verify-tp",
+    "info",
+    "help",
+];
+
+/// The `train` subcommand's value-taking knobs. Shared between `main.rs`
+/// (its [`Args::validate_known`] gate) and `ppmoe plan`, which
+/// re-validates every `--emit-args` command line against this exact set
+/// before printing it — an emitted config that would not launch is a
+/// planner bug, caught at emit time rather than paste time.
+pub const TRAIN_OPTIONS: &[&str] = &[
+    "artifacts",
+    "steps",
+    "micro",
+    "lr",
+    "seed",
+    "log-every",
+    "virtual",
+    "warmup",
+    "checkpoint",
+    "resume",
+    "dp",
+    "tp",
+    "top-k",
+    "fault",
+    "heartbeat-timeout-ms",
+    "checkpoint-every",
+    "max-recoveries",
+    "retry-backoff-ms",
+    "nodes",
+];
+
+/// The `train` subcommand's boolean switches (callers append
+/// [`COMMON_FLAGS`]); shared with `ppmoe plan` like [`TRAIN_OPTIONS`].
+pub const TRAIN_FLAGS: &[&str] =
+    &["gpipe", "no-overlap", "no-dp-overlap", "elastic", "hier-comm"];
 
 impl Args {
     /// Parse an argv iterator (without the program name).
@@ -152,26 +200,56 @@ impl Args {
         Ok(())
     }
 
-    /// A "did you mean" suffix when a known key is a near-miss of the
-    /// given one (case-insensitive match, or within edit distance 1 —
-    /// enough to catch `--top-K` and `--no-dp-overlaps`).
-    fn nearest_hint(key: &str, options: &[&str], flags: &[&str]) -> String {
+    /// The nearest candidate to a (possibly mistyped) key: a
+    /// case-insensitive exact match, or one within a single edit
+    /// ([`Args::edit1`] — insert, delete, substitute, or adjacent
+    /// transposition). First match in candidate order wins, so callers get
+    /// deterministic hints. Shared by the per-command `--key` validation
+    /// and `main.rs`'s unknown-subcommand path ([`COMMANDS`]).
+    pub fn suggest<'a>(key: &str, candidates: &[&'a str]) -> Option<&'a str> {
         let lower = key.to_ascii_lowercase();
-        for cand in options.iter().chain(flags.iter()) {
-            if cand.to_ascii_lowercase() == lower || Self::edit1(&lower, cand) {
-                return format!(" (did you mean --{cand}?)");
-            }
-        }
-        String::new()
+        candidates
+            .iter()
+            .find(|c| c.to_ascii_lowercase() == lower || Self::edit1(&lower, c))
+            .copied()
     }
 
-    /// Whether `a` and `b` differ by at most one edit (insert, delete, or
-    /// substitute a single character).
+    /// A "did you mean" suffix when a known key is a near-miss of the
+    /// given one — enough to catch `--top-K`, `--no-dp-overlaps` and the
+    /// transposed `--paln`.
+    fn nearest_hint(key: &str, options: &[&str], flags: &[&str]) -> String {
+        Self::suggest(key, options)
+            .or_else(|| Self::suggest(key, flags))
+            .map(|cand| format!(" (did you mean --{cand}?)"))
+            .unwrap_or_default()
+    }
+
+    /// Whether `a` and `b` differ by at most one edit: insert, delete,
+    /// substitute a single character, or swap two adjacent characters
+    /// (Damerau-style — `paln` is one transposition from `plan`, not two
+    /// substitutions).
     fn edit1(a: &str, b: &str) -> bool {
         let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
         let (short, long) = if a.len() <= b.len() { (&a, &b) } else { (&b, &a) };
         match long.len() - short.len() {
-            0 => short.iter().zip(long.iter()).filter(|(x, y)| x != y).count() <= 1,
+            0 => {
+                let diffs: Vec<usize> = short
+                    .iter()
+                    .zip(long.iter())
+                    .enumerate()
+                    .filter(|(_, (x, y))| x != y)
+                    .map(|(i, _)| i)
+                    .collect();
+                match diffs.len() {
+                    0 | 1 => true,
+                    2 => {
+                        diffs[1] == diffs[0] + 1
+                            && short[diffs[0]] == long[diffs[1]]
+                            && short[diffs[1]] == long[diffs[0]]
+                    }
+                    _ => false,
+                }
+            }
             1 => {
                 // one deletion from `long`
                 let mut i = 0;
@@ -295,8 +373,28 @@ mod tests {
         assert!(Args::edit1("topk", "top-k")); // one insert
         assert!(Args::edit1("stepss", "steps")); // one delete
         assert!(Args::edit1("sleps", "steps")); // one substitute
+        assert!(Args::edit1("paln", "plan")); // one adjacent transposition
         assert!(!Args::edit1("stps", "step-s")); // two edits
+        assert!(!Args::edit1("naps", "span")); // non-adjacent swaps stay out
+        assert!(!Args::edit1("abcd", "badc")); // two transpositions
         assert!(Args::edit1("x", "x"));
+    }
+
+    /// The PR-10 satellite: a typo'd *subcommand* gets the same
+    /// "did you mean" treatment a typo'd knob has had since PR 8 —
+    /// `ppmoe pln` (deletion) and `ppmoe paln` (transposition) must both
+    /// resolve to the planner.
+    #[test]
+    fn command_typos_suggest_plan() {
+        assert_eq!(Args::suggest("pln", COMMANDS), Some("plan"));
+        assert_eq!(Args::suggest("paln", COMMANDS), Some("plan"));
+        assert_eq!(Args::suggest("plan", COMMANDS), Some("plan"));
+        assert_eq!(Args::suggest("trian", COMMANDS), Some("train"));
+        assert_eq!(Args::suggest("serv", COMMANDS), Some("serve"));
+        assert_eq!(Args::suggest("totally-unknown", COMMANDS), None);
+        // the knob corpus keeps working through the same entry point
+        assert_eq!(Args::suggest("no-dp-overlaps", TRAIN_FLAGS), Some("no-dp-overlap"));
+        assert_eq!(Args::suggest("virtaul", TRAIN_OPTIONS), Some("virtual"));
     }
 
     #[test]

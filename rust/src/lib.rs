@@ -27,6 +27,7 @@ pub mod metrics;
 pub mod model;
 pub mod moe;
 pub mod pipeline;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train       real 1F1B pipeline training over the AOT artifacts
 //!   serve       forward-only batched inference (closed loop: --loadgen)
+//!   plan        offline layout search: best (dp, tp, v, micro, nodes,
+//!               sync) under a memory budget, via the step simulator
 //!   sweep       regenerate Table 2 (throughput, 13 configurations)
 //!   breakdown   regenerate Tables 1 & 3 (forward-time components)
 //!   simulate    simulate one (model, parallel) point
@@ -16,7 +18,8 @@
 use std::path::PathBuf;
 
 use ppmoe::config::{self, Scheme};
-use ppmoe::coordinator::{tables, Args, COMMON_FLAGS};
+use ppmoe::coordinator::{tables, Args, COMMANDS, COMMON_FLAGS, TRAIN_FLAGS, TRAIN_OPTIONS};
+use ppmoe::plan::{self, report as plan_report, PlanCfg};
 use ppmoe::pipeline::Schedule;
 use ppmoe::serve::forward::{DispatchMode, ManifestForward};
 use ppmoe::serve::{BatchPolicy, LoadgenCfg, StubDims, StubForward};
@@ -112,6 +115,32 @@ COMMANDS:
                 --bench-out PATH  where to write the bench JSON
                                   (default: BENCH_serve.json)
                 --tp N            live tier only: tp lanes per stage
+  plan        offline layout search: enumerate every legal
+              (dp, tp, virtual, microbatch, nodes, dp-overlap, hier-comm)
+              grid point at a fixed global batch, gate on a per-rank
+              memory budget, score each with the step simulator, and
+              print the best layouts + a paste-ready train command
+                --model NAME      preset to plan for (default: moe-small;
+                                  ignored when --artifacts has a manifest)
+                --artifacts DIR   derive the model from this export's
+                                  manifest instead of a preset
+                --gpus N          cluster size (default: 32)
+                --gpus-per-node N node width (default: 8)
+                --mem-gb G        per-rank memory budget (default: 32)
+                --global-batch N  sequences per step, constant across all
+                                  candidates (default: 256)
+                --micro-batch N   pin the microbatch size b
+                --dp N / --tp N / --virtual N / --nodes N
+                                  pin one search axis
+                --scheme S        dense|dpmoe|ppmoe (default: ppmoe)
+                --top-k K         gating fan-out override (prices the
+                                  combine/a2a wire volumes at this k)
+                --top N           table rows to print (default: 5)
+                --bench-out PATH  machine-readable plan
+                                  (default: BENCH_plan.json)
+                --emit-args       print the winning `ppmoe train` line,
+                                  re-validated against the trainer's own
+                                  argument and geometry checks
   sweep       print Table 2 (simulated throughput, 13 rows)
   breakdown   print Tables 1 and 3 (simulated forward breakdowns)
   simulate    one point: --model NAME --dp N --tp N --pp N
@@ -147,6 +176,7 @@ fn main() {
     let result = match cmd {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
         "breakdown" => cmd_breakdown(&args),
         "simulate" => cmd_simulate(&args),
@@ -157,7 +187,10 @@ fn main() {
             Ok(())
         }
         other => {
-            eprintln!("unknown command '{other}'\n{USAGE}");
+            let hint = Args::suggest(other, COMMANDS)
+                .map(|c| format!(" (did you mean '{c}'?)"))
+                .unwrap_or_default();
+            eprintln!("unknown command '{other}'{hint}\n{USAGE}");
             std::process::exit(2);
         }
     };
@@ -177,31 +210,9 @@ fn with_common(extra: &[&'static str]) -> Vec<&'static str> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    args.validate_known(
-        "train",
-        &[
-            "artifacts",
-            "steps",
-            "micro",
-            "lr",
-            "seed",
-            "log-every",
-            "virtual",
-            "warmup",
-            "checkpoint",
-            "resume",
-            "dp",
-            "tp",
-            "top-k",
-            "fault",
-            "heartbeat-timeout-ms",
-            "checkpoint-every",
-            "max-recoveries",
-            "retry-backoff-ms",
-            "nodes",
-        ],
-        &with_common(&["gpipe", "no-overlap", "no-dp-overlap", "elastic", "hier-comm"]),
-    )?;
+    // the option/flag tables live in the coordinator so `ppmoe plan` can
+    // re-validate every emitted command line against the same sets
+    args.validate_known("train", TRAIN_OPTIONS, &with_common(TRAIN_FLAGS))?;
     let cfg = TrainerCfg {
         artifacts: artifacts_dir(args),
         steps: args.get_usize("steps", 50)?,
@@ -335,6 +346,167 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     args.validate_known("sweep", &[], &with_common(&[]))?;
     println!("Table 2 — training throughput (simulated, paper constants)\n");
     print!("{}", tables::table2_markdown()?);
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    args.validate_known(
+        "plan",
+        &[
+            "model",
+            "artifacts",
+            "gpus",
+            "gpus-per-node",
+            "mem-gb",
+            "global-batch",
+            "micro-batch",
+            "dp",
+            "tp",
+            "virtual",
+            "nodes",
+            "scheme",
+            "top-k",
+            "top",
+            "bench-out",
+        ],
+        &with_common(&["emit-args"]),
+    )?;
+    // model source: an explicitly named export (or a present default one,
+    // absent --model) wins — plan for what you actually compiled
+    let manifest_path = artifacts_dir(args).join("manifest.json");
+    let use_manifest =
+        args.get("artifacts").is_some() || (args.get("model").is_none() && manifest_path.exists());
+    let mut model = if use_manifest {
+        let m = ppmoe::runtime::Manifest::load(&manifest_path)?;
+        println!("model from manifest: {}", manifest_path.display());
+        plan::model_from_manifest(&m.model)
+    } else {
+        config::model_preset(args.get("model").unwrap_or("moe-small"))?
+    };
+    let top_k = args.get_usize("top-k", 0)?;
+    if top_k > 0 {
+        anyhow::ensure!(
+            top_k <= model.experts,
+            "--top-k {top_k} exceeds the model's {} experts — a token \
+             cannot be routed to more experts than exist",
+            model.experts
+        );
+        model.top_k = top_k;
+    }
+    let scheme = match args.get("scheme").unwrap_or("ppmoe") {
+        "dense" => Scheme::Dense,
+        "dpmoe" => Scheme::DpMoE,
+        "ppmoe" => Scheme::PpMoE,
+        s => anyhow::bail!("unknown scheme '{s}'"),
+    };
+    let gpus = args.get_usize("gpus", 32)?;
+    let mut cluster = config::v100_cluster(gpus);
+    cluster.gpus_per_node = args.get_usize("gpus-per-node", cluster.gpus_per_node)?;
+    let mut cfg = PlanCfg::new(model, cluster, scheme);
+    cfg.mem_budget_bytes = args.get_f64("mem-gb", 32.0)? * 1e9;
+    cfg.global_batch = args.get_usize("global-batch", 256)?;
+    cfg.top = args.get_usize("top", 5)?;
+    let pin = |key: &str| -> anyhow::Result<Option<usize>> {
+        Ok(match args.get_usize(key, 0)? {
+            0 => None,
+            n => Some(n),
+        })
+    };
+    cfg.pin_dp = pin("dp")?;
+    cfg.pin_tp = pin("tp")?;
+    cfg.pin_virtual = pin("virtual")?;
+    cfg.pin_micro_batch = pin("micro-batch")?;
+    cfg.pin_nodes = pin("nodes")?;
+
+    let plan = plan::enumerate(&cfg)?;
+    println!(
+        "planning {} ({:.1}B params, top_k={}) on {}: {} GPUs x {} per node, \
+         {:.0} GB/rank, global batch {}",
+        cfg.model.name,
+        cfg.model.total_params() as f64 / 1e9,
+        cfg.model.top_k,
+        cfg.cluster.name,
+        cfg.cluster.gpus,
+        cfg.cluster.gpus_per_node,
+        cfg.mem_budget_bytes / 1e9,
+        cfg.global_batch
+    );
+    for (link, alpha, beta) in ppmoe::comm::CostModel::new(cfg.cluster.clone()).link_classes() {
+        println!(
+            "  {link}: alpha {:.1} us, {:.0} GB/s",
+            alpha * 1e6,
+            beta / 1e9
+        );
+    }
+    println!(
+        "searched {} sync variants: {} legal, {} shape-rejected, {} over the \
+         memory budget\n",
+        plan.searched, plan.candidates.len(), plan.shape_rejected, plan.mem_rejected
+    );
+    anyhow::ensure!(
+        !plan.candidates.is_empty(),
+        "no legal layout fits {:.0} GB/rank on {} GPUs — raise --mem-gb, \
+         add GPUs, or shrink --global-batch",
+        cfg.mem_budget_bytes / 1e9,
+        cfg.cluster.gpus
+    );
+    print!("{}", plan_report::render_table(&plan, &cfg));
+    let best = plan.best().expect("non-empty candidates have a best");
+    println!(
+        "\nbest: dp={} tp={} pp={} v={} b={} on {} node(s), {} sync — \
+         {:.1} ms/step, {:.0} tokens/s/GPU",
+        best.p.dp,
+        best.p.tp,
+        best.p.pp,
+        best.v,
+        best.tc.micro_batch,
+        best.nodes,
+        match (best.hier.is_some(), best.overlap_dp) {
+            (true, true) => "hierarchical overlapped",
+            (true, false) => "hierarchical serialized",
+            (false, true) => "flat overlapped",
+            (false, false) => "flat serialized",
+        },
+        best.result.step_seconds * 1e3,
+        best.result.tokens_per_sec_per_gpu
+    );
+    println!(
+        "memory/rank: {:.1} GB = {:.1} weights + {:.1} grads + {:.1} \
+         optimizer (ZeRO-1) + {:.1} activations",
+        best.mem.total() / 1e9,
+        best.mem.weight_bytes / 1e9,
+        best.mem.grad_bytes / 1e9,
+        best.mem.optimizer_bytes / 1e9,
+        best.mem.activation_bytes / 1e9
+    );
+    if let Some(f) = &plan.folded {
+        println!(
+            "folded estimate (NOT executable — per-segment layouts are a \
+             simulator stub): dense segments on dp={} tp={} would give \
+             {:.1} ms/step vs the winner's {:.1}",
+            f.glue.dp,
+            f.glue.tp,
+            f.result.step_seconds * 1e3,
+            best.result.step_seconds * 1e3
+        );
+    }
+    if args.has_flag("emit-args") {
+        println!(
+            "\n{}\n(artifacts must be exported with stages = {}{} — the \
+             stage count comes from the export config, see `compile.aot`'s \
+             CONFIGS table)",
+            plan_report::emit_train_command(best)?,
+            best.p.pp,
+            if best.v > 1 {
+                format!(" and --virtual {}", best.v)
+            } else {
+                String::new()
+            }
+        );
+    }
+    let bench_out = PathBuf::from(args.get("bench-out").unwrap_or("BENCH_plan.json"));
+    plan_report::write_bench(&bench_out, &plan, &cfg)?;
+    println!("\nwrote {}", bench_out.display());
     Ok(())
 }
 

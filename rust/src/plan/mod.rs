@@ -1,0 +1,563 @@
+//! Offline layout planner behind `ppmoe plan`.
+//!
+//! Given a cluster description (GPU counts, the α/β link constants the
+//! [`crate::comm::CostModel`] prices collectives with, a per-rank memory
+//! budget) and a model, enumerate every legal
+//! `(dp, tp, pp, virtual, micro_batch, nodes, dp-overlap, hier-comm)`
+//! layout at a FIXED global batch, score each with the discrete-event
+//! step simulator ([`Simulator::step_virtual_dp_at`]), and rank by
+//! predicted step time. The global batch is held constant across
+//! candidates, so tokens/step is identical everywhere and ranking by
+//! step seconds is exactly ranking by tokens/s/GPU.
+//!
+//! Legality is the trainer's own notion, not a parallel reimplementation:
+//! shape checks go through [`ParallelCfg::validate`] and
+//! [`crate::trainer::validate_launch_geometry`], node placement through
+//! [`Topology::for_grid`] + [`Topology::uniform_dp_split`] — the same
+//! calls `ppmoe train` makes at launch. rust/tests/plan_contract.rs pins
+//! the consequence: every emitted config passes trainer validation, and
+//! the planner's ranking matches an independent exhaustive sweep.
+//!
+//! The memory gate is an estimate (weights + grads + ZeRO-1 optimizer
+//! shard + peak in-flight activations, all in wire bytes), documented in
+//! docs/planner.md; candidates over budget are counted, not scored.
+
+use anyhow::{ensure, Result};
+
+use crate::comm::Topology;
+use crate::config::{ClusterCfg, ModelDims, ParallelCfg, Scheme, TrainCfg};
+use crate::model;
+use crate::runtime::manifest::ModelInfo;
+use crate::sim::{Simulator, StepResult};
+use crate::trainer;
+
+pub mod report;
+
+/// Inputs to the layout search: the model, the cluster, and the knobs
+/// that pin or bound the grid.
+#[derive(Debug, Clone)]
+pub struct PlanCfg {
+    /// Model being planned for (preset or manifest-derived).
+    pub model: ModelDims,
+    /// Cluster description: GPU count, per-node width, α/β link constants.
+    pub cluster: ClusterCfg,
+    /// MoE placement scheme every candidate uses.
+    pub scheme: Scheme,
+    /// Per-rank device memory budget in bytes; candidates whose
+    /// [`MemEstimate`] exceeds it are rejected unscored.
+    pub mem_budget_bytes: f64,
+    /// Global batch in sequences per step, held constant across every
+    /// candidate so step-time ranking equals throughput ranking.
+    pub global_batch: usize,
+    /// Pin the dp axis to one value (`None` = search it).
+    pub pin_dp: Option<usize>,
+    /// Pin the tp axis to one value (`None` = search it).
+    pub pin_tp: Option<usize>,
+    /// Pin the interleaving depth v (`None` = search {1, 2, 4, 8}).
+    pub pin_virtual: Option<usize>,
+    /// Pin the microbatch size b (`None` = search {1, 2, 4, 8}).
+    pub pin_micro_batch: Option<usize>,
+    /// Pin the node count (`None` = search the divisors of the world
+    /// size that fit the cluster's per-node width).
+    pub pin_nodes: Option<usize>,
+    /// How many top candidates reports show (the [`Plan`] keeps all).
+    pub top: usize,
+}
+
+impl PlanCfg {
+    /// A search over the full grid with the default budget (32 GB/rank),
+    /// global batch (256 sequences/step) and report width (top 5).
+    pub fn new(model: ModelDims, cluster: ClusterCfg, scheme: Scheme) -> PlanCfg {
+        PlanCfg {
+            model,
+            cluster,
+            scheme,
+            mem_budget_bytes: 32.0 * 1e9,
+            global_batch: 256,
+            pin_dp: None,
+            pin_tp: None,
+            pin_virtual: None,
+            pin_micro_batch: None,
+            pin_nodes: None,
+            top: 5,
+        }
+    }
+}
+
+/// Per-rank memory estimate for one candidate, wire bytes throughout.
+#[derive(Debug, Clone, Copy)]
+pub struct MemEstimate {
+    /// Parameter bytes this rank holds (dp-replicated, tp/pp-sharded).
+    pub weight_bytes: f64,
+    /// Gradient bytes — one wire-precision copy of the local parameters.
+    pub grad_bytes: f64,
+    /// ZeRO-1 optimizer shard, [`ParallelCfg::optimizer_bytes_per_rank`].
+    pub optimizer_bytes: f64,
+    /// Peak in-flight activations under the 1F1B schedule,
+    /// [`ParallelCfg::activation_bytes_per_rank`].
+    pub activation_bytes: f64,
+}
+
+impl MemEstimate {
+    /// Estimate for model `m` under layout `p` at microbatch/interleave
+    /// `(tc, v)`, all sized in `wire_bytes`-byte elements.
+    pub fn of(
+        m: &ModelDims,
+        p: &ParallelCfg,
+        tc: &TrainCfg,
+        v: usize,
+        wire_bytes: usize,
+    ) -> MemEstimate {
+        let params = model::params_per_device(m, p.dp, p.tp, p.pp, p.scheme == Scheme::DpMoE);
+        let weight_bytes = params * wire_bytes as f64;
+        MemEstimate {
+            weight_bytes,
+            grad_bytes: weight_bytes,
+            optimizer_bytes: p.optimizer_bytes_per_rank(m) as f64,
+            activation_bytes: p.activation_bytes_per_rank(m, tc, v, wire_bytes),
+        }
+    }
+
+    /// Total bytes the gate compares against the budget.
+    pub fn total(&self) -> f64 {
+        self.weight_bytes + self.grad_bytes + self.optimizer_bytes + self.activation_bytes
+    }
+}
+
+/// One legal, scored layout.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// The dp × tp × pp layout (world always equals the cluster's GPUs).
+    pub p: ParallelCfg,
+    /// Interleaving depth (virtual chunks per physical stage).
+    pub v: usize,
+    /// Microbatch size and PER-REPLICA microbatch count; the trainer's
+    /// global `--micro` is `tc.num_micro * p.dp`.
+    pub tc: TrainCfg,
+    /// Node count the grid is placed on (compact placement).
+    pub nodes: usize,
+    /// Whether dp gradient sync overlaps the backward pass.
+    pub overlap_dp: bool,
+    /// `Some((span, per_node))` when this candidate uses the two-level
+    /// hierarchical dp sync; `None` = flat.
+    pub hier: Option<(usize, usize)>,
+    /// Per-rank memory estimate that passed the gate.
+    pub mem: MemEstimate,
+    /// Simulator verdict.
+    pub result: StepResult,
+}
+
+impl Candidate {
+    /// Identity/tie-break key: two candidates are the same search point
+    /// iff their keys are equal, and equal-score candidates rank in key
+    /// order so the plan is deterministic.
+    pub fn key(&self) -> (usize, usize, usize, usize, usize, usize, bool, bool) {
+        (
+            self.p.dp,
+            self.p.tp,
+            self.p.pp,
+            self.v,
+            self.tc.micro_batch,
+            self.nodes,
+            self.overlap_dp,
+            self.hier.is_some(),
+        )
+    }
+
+    /// The `ppmoe train` arguments reproducing this layout. The stage
+    /// count is NOT an argument — `pp` comes from the export manifest, so
+    /// the artifacts must be compiled with `stages = p.pp` (and the
+    /// interleave with `virtual = v`); reports say so next to the command.
+    pub fn train_args(&self) -> Vec<String> {
+        let mut a = vec![
+            "--dp".to_string(),
+            self.p.dp.to_string(),
+            "--tp".to_string(),
+            self.p.tp.to_string(),
+            "--micro".to_string(),
+            (self.tc.num_micro * self.p.dp).to_string(),
+        ];
+        if self.v > 1 {
+            a.push("--virtual".to_string());
+            a.push(self.v.to_string());
+        }
+        if self.nodes > 1 {
+            a.push("--nodes".to_string());
+            a.push(self.nodes.to_string());
+        }
+        if self.hier.is_some() {
+            a.push("--hier-comm".to_string());
+        }
+        if !self.overlap_dp {
+            a.push("--no-dp-overlap".to_string());
+        }
+        a
+    }
+}
+
+/// A folded-layout estimate: per-segment heterogeneous `(tp, dp)` in the
+/// style of MoE Parallel Folding — dense segments re-laid onto the `glue`
+/// layout while MoE segments keep the primary one. Scored by
+/// [`Simulator::step_virtual_dp_folded`] but NOT executable: the trainer
+/// has no per-segment regrouping, so reports mark it as an estimate only.
+#[derive(Debug, Clone)]
+pub struct FoldedEstimate {
+    /// The dense-segment layout (same world and pp as the primary).
+    pub glue: ParallelCfg,
+    /// Simulator verdict for the mixed walk.
+    pub result: StepResult,
+}
+
+/// The search outcome: counters plus every scored candidate, best first.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Sync-variant grid points that reached the memory gate.
+    pub searched: usize,
+    /// Layouts rejected before scoring on shape/divisibility grounds.
+    pub shape_rejected: usize,
+    /// Grid points rejected by the memory gate.
+    pub mem_rejected: usize,
+    /// All scored candidates, sorted best (lowest step time) first with
+    /// the deterministic [`Candidate::key`] tie-break.
+    pub candidates: Vec<Candidate>,
+    /// Folded-layout estimate for the best candidate, when it has tp > 1
+    /// and the model has MoE layers.
+    pub folded: Option<FoldedEstimate>,
+}
+
+impl Plan {
+    /// The winning candidate, if any layout was legal under the budget.
+    pub fn best(&self) -> Option<&Candidate> {
+        self.candidates.first()
+    }
+}
+
+/// Positive divisors of `n`, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// Node counts a `world`-GPU grid can be compactly placed on: divisors
+/// of the world size whose per-node share fits the cluster's node width.
+fn node_counts(world: usize, gpus_per_node: usize) -> Vec<usize> {
+    divisors(world)
+        .into_iter()
+        .filter(|&n| world / n <= gpus_per_node.max(1))
+        .collect()
+}
+
+/// [`ModelDims`] from an export manifest. The manifest stores what the
+/// runtime needs, not the full dimension set, so the rest follows the
+/// export conventions: `ffn = 4·hidden`, one head per 64 hidden units,
+/// and MoE every other layer when the export has experts.
+pub fn model_from_manifest(info: &ModelInfo) -> ModelDims {
+    ModelDims {
+        name: info.config_name.clone(),
+        hidden: info.hidden,
+        ffn: 4 * info.hidden,
+        layers: info.layers,
+        heads: (info.hidden / 64).max(1),
+        vocab: info.vocab,
+        seq: info.seq,
+        experts: info.experts,
+        moe_every: if info.experts > 1 { 2 } else { 0 },
+        top_k: info.top_k.max(1),
+    }
+}
+
+fn rank(a: &Candidate, b: &Candidate) -> std::cmp::Ordering {
+    a.result
+        .step_seconds
+        .partial_cmp(&b.result.step_seconds)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then_with(|| a.key().cmp(&b.key()))
+}
+
+/// Enumerate, gate, score and rank the full legal grid.
+///
+/// The walk: `dp` over divisors of the GPU count, `tp` over divisors of
+/// the remainder, `pp` fixed by `world = gpus`; `v ∈ {1, 2, 4, 8}` where
+/// the per-stage layer count divides; `b ∈ {1, 2, 4, 8}` where the global
+/// batch splits evenly over `b · dp`; nodes over the compact placements;
+/// then per grid point, a flat-sync variant (node-count independent, so
+/// emitted once at the smallest legal node count) plus a hierarchical
+/// variant per node count whose dp groups split uniformly
+/// ([`Topology::uniform_dp_split`]), each with and without dp overlap.
+pub fn enumerate(cfg: &PlanCfg) -> Result<Plan> {
+    let m = &cfg.model;
+    let c = &cfg.cluster;
+    ensure!(c.gpus >= 1, "plan: cluster has no GPUs");
+    ensure!(cfg.global_batch >= 1, "plan: --global-batch must be at least 1");
+    let pinned = |pin: Option<usize>, x: usize| pin.map_or(true, |want| want == x);
+
+    let mut searched = 0usize;
+    let mut shape_rejected = 0usize;
+    let mut mem_rejected = 0usize;
+    let mut candidates: Vec<Candidate> = Vec::new();
+
+    for dp in divisors(c.gpus) {
+        if !pinned(cfg.pin_dp, dp) {
+            continue;
+        }
+        for tp in divisors(c.gpus / dp) {
+            if !pinned(cfg.pin_tp, tp) {
+                continue;
+            }
+            let pp = c.gpus / (dp * tp);
+            let ep = match cfg.scheme {
+                Scheme::DpMoE => dp.min(m.experts),
+                Scheme::PpMoE => tp,
+                Scheme::Dense => 1,
+            };
+            let p = ParallelCfg { dp, tp, pp, ep, zero: true, scheme: cfg.scheme };
+            if p.validate(m, c).is_err() {
+                shape_rejected += 1;
+                continue;
+            }
+            // the simulator re-validates; treat any constructor refusal
+            // as one more illegal shape rather than aborting the search
+            let sim = match Simulator::new(m.clone(), p, c.clone()) {
+                Ok(s) => s,
+                Err(_) => {
+                    shape_rejected += 1;
+                    continue;
+                }
+            };
+            for v in [1usize, 2, 4, 8] {
+                if !pinned(cfg.pin_virtual, v) {
+                    continue;
+                }
+                if v > 1 && (pp < 2 || (m.layers / pp) % v != 0) {
+                    shape_rejected += 1;
+                    continue;
+                }
+                for b in [1usize, 2, 4, 8] {
+                    if !pinned(cfg.pin_micro_batch, b) {
+                        continue;
+                    }
+                    if cfg.global_batch % (b * dp) != 0 {
+                        shape_rejected += 1;
+                        continue;
+                    }
+                    let num_local = cfg.global_batch / (b * dp);
+                    if trainer::validate_launch_geometry(dp, tp, num_local * dp, pp, v).is_err() {
+                        shape_rejected += 1;
+                        continue;
+                    }
+                    let tc = TrainCfg { micro_batch: b, num_micro: num_local };
+
+                    // sync variants: one flat entry (its cost does not
+                    // depend on the node count) + one hierarchical entry
+                    // per placement whose dp groups split uniformly
+                    let nodes_axis: Vec<usize> = node_counts(p.world(), c.gpus_per_node)
+                        .into_iter()
+                        .filter(|&n| pinned(cfg.pin_nodes, n))
+                        .collect();
+                    let mut variants: Vec<(usize, Option<(usize, usize)>)> = Vec::new();
+                    if let Some(&n0) = nodes_axis.first() {
+                        variants.push((n0, None));
+                    }
+                    for &n in &nodes_axis {
+                        if n > 1 && dp > 1 {
+                            let split = Topology::for_grid(n, dp, pp, tp)?
+                                .uniform_dp_split(dp, pp, tp)
+                                .filter(|&(span, _)| span > 1);
+                            if let Some(h) = split {
+                                variants.push((n, Some(h)));
+                            }
+                        }
+                    }
+                    let overlaps: &[bool] = if dp > 1 { &[false, true] } else { &[false] };
+
+                    for &(nodes, hier) in &variants {
+                        for &overlap_dp in overlaps {
+                            searched += 1;
+                            let mem = MemEstimate::of(m, &p, &tc, v, c.wire_bytes);
+                            if mem.total() > cfg.mem_budget_bytes {
+                                mem_rejected += 1;
+                                continue;
+                            }
+                            let result = sim.step_virtual_dp_at(tc, v, overlap_dp, hier);
+                            candidates.push(Candidate {
+                                p,
+                                v,
+                                tc,
+                                nodes,
+                                overlap_dp,
+                                hier,
+                                mem,
+                                result,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    candidates.sort_by(rank);
+    let folded = folded_estimate(cfg, &candidates)?;
+    Ok(Plan { searched, shape_rejected, mem_rejected, candidates, folded })
+}
+
+/// Folded stub for the winner: dense segments re-laid onto a tp = 1 glue
+/// layout of the same world and stage count, MoE segments kept on the
+/// primary. `None` when there is no winner, the winner already has
+/// tp = 1, or the model has no MoE layers.
+fn folded_estimate(cfg: &PlanCfg, candidates: &[Candidate]) -> Result<Option<FoldedEstimate>> {
+    let best = match candidates.first() {
+        Some(b) => b,
+        None => return Ok(None),
+    };
+    if best.p.tp <= 1 || cfg.model.moe_layers() == 0 {
+        return Ok(None);
+    }
+    let glue = ParallelCfg {
+        dp: best.p.dp * best.p.tp,
+        tp: 1,
+        pp: best.p.pp,
+        ep: 1,
+        zero: true,
+        scheme: cfg.scheme,
+    };
+    let sim = Simulator::new(cfg.model.clone(), best.p, cfg.cluster.clone())?;
+    let result = sim.step_virtual_dp_folded(best.tc, best.v, best.overlap_dp, best.hier, glue)?;
+    Ok(Some(FoldedEstimate { glue, result }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn small_cfg() -> PlanCfg {
+        let mut m = config::moe_small_setting();
+        m.layers = 8;
+        let mut cfg = PlanCfg::new(m, config::v100_cluster(16), Scheme::PpMoE);
+        cfg.mem_budget_bytes = f64::INFINITY;
+        cfg.global_batch = 64;
+        cfg
+    }
+
+    #[test]
+    fn enumerate_is_deterministic_and_sorted() {
+        let cfg = small_cfg();
+        let a = enumerate(&cfg).unwrap();
+        let b = enumerate(&cfg).unwrap();
+        assert!(!a.candidates.is_empty(), "small grid must have legal layouts");
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.key(), y.key());
+            assert_eq!(x.result.step_seconds.to_bits(), y.result.step_seconds.to_bits());
+        }
+        for w in a.candidates.windows(2) {
+            assert!(w[0].result.step_seconds <= w[1].result.step_seconds);
+        }
+        assert_eq!(a.searched, a.candidates.len() + a.mem_rejected);
+        assert_eq!(a.mem_rejected, 0, "infinite budget rejects nothing");
+        // every candidate fills the cluster and holds the global batch
+        for cand in &a.candidates {
+            assert_eq!(cand.p.world(), cfg.cluster.gpus);
+            assert_eq!(
+                cand.tc.micro_batch * cand.tc.num_micro * cand.p.dp,
+                cfg.global_batch
+            );
+        }
+    }
+
+    #[test]
+    fn memory_gate_prunes_everything_under_a_zero_budget() {
+        let mut cfg = small_cfg();
+        cfg.mem_budget_bytes = 1.0;
+        let plan = enumerate(&cfg).unwrap();
+        assert!(plan.candidates.is_empty());
+        assert_eq!(plan.mem_rejected, plan.searched);
+        assert!(plan.searched > 0);
+        assert!(plan.best().is_none());
+        assert!(plan.folded.is_none());
+    }
+
+    #[test]
+    fn pins_narrow_the_grid_to_matching_candidates() {
+        let mut cfg = small_cfg();
+        cfg.pin_dp = Some(2);
+        cfg.pin_tp = Some(4);
+        cfg.pin_virtual = Some(1);
+        let plan = enumerate(&cfg).unwrap();
+        assert!(!plan.candidates.is_empty());
+        for cand in &plan.candidates {
+            assert_eq!(cand.p.dp, 2);
+            assert_eq!(cand.p.tp, 4);
+            assert_eq!(cand.p.pp, 2);
+            assert_eq!(cand.v, 1);
+        }
+        // dp = 2 means both overlap variants exist for the flat sync
+        assert!(plan.candidates.iter().any(|c| c.overlap_dp));
+        assert!(plan.candidates.iter().any(|c| !c.overlap_dp));
+    }
+
+    #[test]
+    fn train_args_encode_the_layout_faithfully() {
+        let plan = enumerate(&small_cfg()).unwrap();
+        for cand in &plan.candidates {
+            let args = cand.train_args();
+            let micro_pos = args.iter().position(|a| a == "--micro").unwrap();
+            assert_eq!(
+                args[micro_pos + 1],
+                (cand.tc.num_micro * cand.p.dp).to_string(),
+                "--micro is the GLOBAL microbatch count"
+            );
+            assert_eq!(args.contains(&"--hier-comm".to_string()), cand.hier.is_some());
+            assert_eq!(args.contains(&"--no-dp-overlap".to_string()), !cand.overlap_dp);
+            if cand.hier.is_some() {
+                assert!(cand.nodes > 1, "hier sync needs a multi-node placement");
+                assert!(args.contains(&"--nodes".to_string()));
+            }
+        }
+    }
+
+    #[test]
+    fn folded_stub_appears_only_for_tp_winners_on_moe_models() {
+        let mut cfg = small_cfg();
+        cfg.pin_tp = Some(4);
+        let plan = enumerate(&cfg).unwrap();
+        let best = plan.best().unwrap();
+        assert_eq!(best.p.tp, 4);
+        let folded = plan.folded.as_ref().expect("tp>1 MoE winner gets a folded estimate");
+        assert_eq!(folded.glue.tp, 1);
+        assert_eq!(folded.glue.pp, best.p.pp);
+        assert_eq!(folded.glue.dp, best.p.dp * best.p.tp);
+        assert!(folded.result.step_seconds > 0.0);
+
+        cfg.pin_tp = Some(1);
+        let plan = enumerate(&cfg).unwrap();
+        assert!(plan.best().is_some());
+        assert!(plan.folded.is_none(), "tp = 1 winner has nothing to fold");
+    }
+
+    #[test]
+    fn manifest_dims_follow_the_export_conventions() {
+        let info = ModelInfo {
+            config_name: "test-moe".to_string(),
+            vocab: 1000,
+            hidden: 256,
+            layers: 8,
+            experts: 16,
+            seq: 128,
+            micro_batch: 4,
+            stages: 2,
+            virtual_stages: 1,
+            aux_coef: 0.01,
+            top_k: 2,
+            capacity_factor: 2.0,
+        };
+        let m = model_from_manifest(&info);
+        assert_eq!(m.ffn, 4 * 256);
+        assert_eq!(m.heads, 4);
+        assert_eq!(m.moe_every, 2);
+        assert_eq!(m.top_k, 2);
+        let dense = ModelInfo { experts: 1, ..info };
+        let m = model_from_manifest(&dense);
+        assert_eq!(m.moe_every, 0);
+        assert_eq!(m.moe_layers(), 0);
+    }
+}

@@ -1,0 +1,241 @@
+//! Reporting for `ppmoe plan`: the ranked human table, the ready-to-paste
+//! `ppmoe train` command (self-validated against the trainer's own arg
+//! and geometry checks before it is printed), and `BENCH_plan.json`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::{Args, COMMON_FLAGS, TRAIN_FLAGS, TRAIN_OPTIONS};
+use crate::trainer;
+use crate::util::json::Json;
+
+use super::{Candidate, Plan, PlanCfg};
+
+fn sync_label(c: &Candidate) -> String {
+    let base = if c.hier.is_some() { "hier" } else { "flat" };
+    if c.overlap_dp {
+        format!("{base}+ov")
+    } else {
+        base.to_string()
+    }
+}
+
+/// Markdown table of the top `cfg.top` candidates, best first.
+pub fn render_table(plan: &Plan, cfg: &PlanCfg) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "| # | dp | tp | pp | v | b | micro | nodes | sync | step ms | tok/s/GPU | bubble | mem GB |"
+    );
+    let _ = writeln!(
+        s,
+        "|---|----|----|----|---|---|-------|-------|------|---------|-----------|--------|--------|"
+    );
+    for (i, c) in plan.candidates.iter().take(cfg.top.max(1)).enumerate() {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {:.1} | {:.0} | {:.1}% | {:.1} |",
+            i + 1,
+            c.p.dp,
+            c.p.tp,
+            c.p.pp,
+            c.v,
+            c.tc.micro_batch,
+            c.tc.num_micro * c.p.dp,
+            c.nodes,
+            sync_label(c),
+            c.result.step_seconds * 1e3,
+            c.result.tokens_per_sec_per_gpu,
+            c.result.bubble_fraction * 100.0,
+            c.mem.total() / 1e9,
+        );
+    }
+    s
+}
+
+/// The paste-ready launch line for one candidate — but only after the
+/// emitted argv survives the trainer's OWN gauntlet: [`Args::parse`] +
+/// `validate_known` against the real train option/flag tables, then
+/// [`trainer::validate_launch_geometry`] and [`trainer::plan_hier_shape`]
+/// on the parsed values. A planner bug that emits an illegal line fails
+/// here, at plan time, instead of at launch time.
+pub fn emit_train_command(c: &Candidate) -> Result<String> {
+    let argv = c.train_args();
+    let parsed = Args::parse(argv.iter().cloned());
+    let mut flags: Vec<&str> = TRAIN_FLAGS.to_vec();
+    flags.extend_from_slice(COMMON_FLAGS);
+    parsed
+        .validate_known("train", TRAIN_OPTIONS, &flags)
+        .context("planner emitted an argument the trainer does not accept")?;
+    let dp = parsed.get_usize("dp", 1)?;
+    let tp = parsed.get_usize("tp", 1)?;
+    let micro = parsed.get_usize("micro", 0)?;
+    let v = parsed.get_usize("virtual", 1)?;
+    let nodes = parsed.get_usize("nodes", 1)?;
+    trainer::validate_launch_geometry(dp, tp, micro, c.p.pp, v)
+        .context("planner emitted a geometry the trainer would refuse")?;
+    trainer::plan_hier_shape(nodes, parsed.has_flag("hier-comm"), dp, c.p.pp, tp)
+        .context("planner emitted a placement the trainer would refuse")?;
+    Ok(format!("ppmoe train {}", argv.join(" ")))
+}
+
+fn candidate_obj(c: &Candidate) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("dp".to_string(), Json::Num(c.p.dp as f64));
+    o.insert("tp".to_string(), Json::Num(c.p.tp as f64));
+    o.insert("pp".to_string(), Json::Num(c.p.pp as f64));
+    o.insert("virtual".to_string(), Json::Num(c.v as f64));
+    o.insert("micro_batch".to_string(), Json::Num(c.tc.micro_batch as f64));
+    o.insert(
+        "num_micro".to_string(),
+        Json::Num((c.tc.num_micro * c.p.dp) as f64),
+    );
+    o.insert("nodes".to_string(), Json::Num(c.nodes as f64));
+    o.insert("overlap_dp".to_string(), Json::Bool(c.overlap_dp));
+    o.insert("hier_comm".to_string(), Json::Bool(c.hier.is_some()));
+    o.insert("step_ms".to_string(), Json::Num(c.result.step_seconds * 1e3));
+    o.insert(
+        "tokens_per_sec_per_gpu".to_string(),
+        Json::Num(c.result.tokens_per_sec_per_gpu),
+    );
+    o.insert("mem_gb".to_string(), Json::Num(c.mem.total() / 1e9));
+    Json::Obj(o)
+}
+
+/// The `BENCH_plan.json` document. Fails when the plan has no legal
+/// candidate — an empty bench artifact would read as "planner ran fine".
+pub fn bench_json(plan: &Plan, cfg: &PlanCfg) -> Result<Json> {
+    let best = plan
+        .best()
+        .map(candidate_obj)
+        .ok_or_else(|| anyhow::anyhow!("no legal candidate to report"))?;
+    ensure!(plan.searched > 0, "empty search grid");
+    let cluster = Json::Obj(BTreeMap::from([
+        ("name".to_string(), Json::Str(cfg.cluster.name.clone())),
+        ("gpus".to_string(), Json::Num(cfg.cluster.gpus as f64)),
+        (
+            "gpus_per_node".to_string(),
+            Json::Num(cfg.cluster.gpus_per_node as f64),
+        ),
+        ("mem_gb".to_string(), Json::Num(cfg.mem_budget_bytes / 1e9)),
+    ]));
+    let folded = match &plan.folded {
+        Some(f) => Json::Obj(BTreeMap::from([
+            ("glue_dp".to_string(), Json::Num(f.glue.dp as f64)),
+            ("glue_tp".to_string(), Json::Num(f.glue.tp as f64)),
+            ("step_ms".to_string(), Json::Num(f.result.step_seconds * 1e3)),
+            ("executable".to_string(), Json::Bool(false)),
+        ])),
+        None => Json::Null,
+    };
+    Ok(Json::Obj(BTreeMap::from([
+        ("cluster".to_string(), cluster),
+        ("model".to_string(), Json::Str(cfg.model.name.clone())),
+        ("global_batch".to_string(), Json::Num(cfg.global_batch as f64)),
+        ("searched".to_string(), Json::Num(plan.searched as f64)),
+        ("legal".to_string(), Json::Num(plan.candidates.len() as f64)),
+        (
+            "shape_rejected".to_string(),
+            Json::Num(plan.shape_rejected as f64),
+        ),
+        (
+            "mem_rejected".to_string(),
+            Json::Num(plan.mem_rejected as f64),
+        ),
+        ("best".to_string(), best),
+        (
+            "candidates".to_string(),
+            Json::Arr(
+                plan.candidates
+                    .iter()
+                    .take(cfg.top.max(1))
+                    .map(candidate_obj)
+                    .collect(),
+            ),
+        ),
+        ("folded".to_string(), folded),
+    ])))
+}
+
+/// Write [`bench_json`] to `path` (trailing newline, compact encoding —
+/// same convention as the other `BENCH_*.json` emitters).
+pub fn write_bench(path: &Path, plan: &Plan, cfg: &PlanCfg) -> Result<()> {
+    let doc = bench_json(plan, cfg)?;
+    std::fs::write(path, format!("{doc}\n"))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{self, Scheme};
+
+    fn small_plan() -> (Plan, PlanCfg) {
+        let mut m = config::moe_small_setting();
+        m.layers = 8;
+        let mut cfg = PlanCfg::new(m, config::v100_cluster(16), Scheme::PpMoE);
+        cfg.mem_budget_bytes = f64::INFINITY;
+        cfg.global_batch = 64;
+        let plan = super::super::enumerate(&cfg).unwrap();
+        (plan, cfg)
+    }
+
+    #[test]
+    fn table_lists_top_candidates_with_the_winner_first() {
+        let (plan, cfg) = small_plan();
+        let table = render_table(&plan, &cfg);
+        let best = plan.best().unwrap();
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 2 + cfg.top.min(plan.candidates.len()));
+        assert!(lines[2].starts_with(&format!("| 1 | {} | {} |", best.p.dp, best.p.tp)));
+    }
+
+    #[test]
+    fn emitted_command_survives_its_own_validation() {
+        let (plan, _) = small_plan();
+        for c in plan.candidates.iter().take(25) {
+            let line = emit_train_command(c).unwrap();
+            assert!(line.starts_with("ppmoe train --dp "));
+        }
+    }
+
+    #[test]
+    fn bench_json_round_trips_through_the_parser() {
+        let (plan, cfg) = small_plan();
+        let dir = std::env::temp_dir().join(format!("ppmoe_plan_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_plan.json");
+        write_bench(&path, &plan, &cfg).unwrap();
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let best = doc.req("best").unwrap();
+        assert_eq!(
+            best.req("dp").unwrap().as_usize().unwrap(),
+            plan.best().unwrap().p.dp
+        );
+        assert!(best.req("step_ms").unwrap().as_f64().unwrap() > 0.0);
+        let cands = doc.req("candidates").unwrap().as_arr().unwrap();
+        assert_eq!(cands.len(), cfg.top.min(plan.candidates.len()));
+        assert_eq!(
+            doc.req("legal").unwrap().as_usize().unwrap(),
+            plan.candidates.len()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_json_refuses_an_empty_plan() {
+        let (_, cfg) = small_plan();
+        let empty = Plan {
+            searched: 4,
+            shape_rejected: 0,
+            mem_rejected: 4,
+            candidates: Vec::new(),
+            folded: None,
+        };
+        assert!(bench_json(&empty, &cfg).is_err());
+    }
+}

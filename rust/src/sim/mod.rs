@@ -357,6 +357,66 @@ impl Simulator {
     ) -> StepResult {
         let bt = Batch { b: tc.micro_batch, s: self.m.seq };
         let fwd_bd = self.stage_forward(bt);
+        self.assemble_step(tc, v, overlap_dp, hier, &fwd_bd)
+    }
+
+    /// [`Simulator::step_virtual_dp_at`] with the MoE layers priced at
+    /// THIS simulator's layout and the dense glue layers priced at `glue`
+    /// — the MoE-Parallel-Folding estimate `ppmoe plan` annotates its best
+    /// config with. Only the per-stage forward breakdown is mixed; the
+    /// pipeline shape, p2p hops and dp gradient sync stay at the primary
+    /// layout (a first-order stub: a real folded execution would also
+    /// re-shard activations at every segment boundary, which the
+    /// `tp_exec` manifest can express but nothing executes yet — see
+    /// docs/planner.md §Folded layouts). `glue` must be a legal layout of
+    /// the same model, cluster and pipeline depth.
+    pub fn step_virtual_dp_folded(
+        &self,
+        tc: TrainCfg,
+        v: usize,
+        overlap_dp: bool,
+        hier: Option<(usize, usize)>,
+        glue: ParallelCfg,
+    ) -> anyhow::Result<StepResult> {
+        anyhow::ensure!(
+            glue.pp == self.p.pp,
+            "folded glue layout must keep the pipeline depth (pp {} vs {})",
+            glue.pp,
+            self.p.pp
+        );
+        let g = Simulator::new(self.m.clone(), glue, self.cost.cluster.clone())?;
+        let bt = Batch { b: tc.micro_batch, s: self.m.seq };
+        let layers_here = self.m.layers / self.p.pp;
+        let mut acc = Breakdown::default();
+        for l in 0..layers_here {
+            // stage-0 layer-index pattern, like stage_forward: MoE layers
+            // keep the expert-sharded layout, dense glue re-folds
+            let bd = if model::is_moe_layer(&self.m, l) {
+                self.block_forward(bt, l)
+            } else {
+                g.block_forward(bt, l)
+            };
+            for (c, t) in bd.items {
+                acc.add(c, t);
+            }
+        }
+        Ok(self.assemble_step(tc, v, overlap_dp, hier, &acc))
+    }
+
+    /// Shared back half of the step simulation: fold a per-stage forward
+    /// breakdown through the 1F1B/virtual pipeline event simulation and
+    /// the dp gradient-sync placement. Extracted so
+    /// [`Simulator::step_virtual_dp_folded`] can substitute a mixed-layout
+    /// breakdown without duplicating the schedule + sync model.
+    fn assemble_step(
+        &self,
+        tc: TrainCfg,
+        v: usize,
+        overlap_dp: bool,
+        hier: Option<(usize, usize)>,
+        fwd_bd: &Breakdown,
+    ) -> StepResult {
+        let bt = Batch { b: tc.micro_batch, s: self.m.seq };
         let stage_fwd = fwd_bd.total();
         // the tensor axis the stage timing already obeys, broken out for
         // reporting: per-microbatch tp-group collective time (the PPMoE
@@ -783,6 +843,27 @@ mod tests {
         assert!(flaky.waste_fraction <= 1.0);
         let hopeless = s.recovery_estimate(tc, 1.0, None);
         assert_eq!(hopeless.waste_fraction, 1.0);
+    }
+
+    #[test]
+    fn folded_step_degenerates_to_plain_and_stays_sane() {
+        let m = moe_small_setting();
+        let tc = TrainCfg { micro_batch: 8, num_micro: 16 };
+        let p = ParallelCfg { dp: 1, tp: 8, pp: 4, ep: 8, zero: false, scheme: Scheme::PpMoE };
+        let s = sim(m.clone(), p, 32);
+        // glue == primary layout: the fold is the identity
+        let plain = s.step_virtual_dp_at(tc, 1, false, None);
+        let same = s.step_virtual_dp_folded(tc, 1, false, None, p).unwrap();
+        assert_eq!(plain.step_seconds, same.step_seconds);
+        // a dense glue fold (tp -> dp for the non-MoE layers) is a
+        // different, positive estimate of the same token count
+        let glue = ParallelCfg { dp: 8, tp: 1, pp: 4, ep: 1, zero: false, scheme: Scheme::PpMoE };
+        let folded = s.step_virtual_dp_folded(tc, 1, false, None, glue).unwrap();
+        assert!(folded.step_seconds > 0.0);
+        assert_ne!(folded.step_seconds, plain.step_seconds);
+        // pipeline-depth mismatch is a loud error, not a silent mix
+        let bad = ParallelCfg { pp: 2, ..glue };
+        assert!(s.step_virtual_dp_folded(tc, 1, false, None, bad).is_err());
     }
 
     #[test]

@@ -599,6 +599,86 @@ fn recv_loss(rx: &Receiver<f32>, monitor: Option<&fault::Monitor>) -> Option<f32
     }
 }
 
+/// The manifest-free half of [`train_capture`]'s loud-misconfig gate,
+/// factored out so `ppmoe plan` can guarantee every emitted `ppmoe train`
+/// line passes the trainer's own validation (rust/tests/plan_contract.rs
+/// pins this): `--dp`/`--tp` at least 1, the GLOBAL `--micro` count a
+/// positive multiple of `--dp`, and — under an interleaved export
+/// (`virtual_stages > 1`) — the per-replica microbatch count divisible by
+/// the stage count. `stages`/`virtual_stages` come from the manifest at
+/// launch time and from the search axes at plan time.
+pub fn validate_launch_geometry(
+    dp: usize,
+    tp: usize,
+    micro: usize,
+    stages: usize,
+    virtual_stages: usize,
+) -> Result<()> {
+    if dp == 0 {
+        bail!("--dp must be at least 1");
+    }
+    if tp == 0 {
+        bail!("--tp must be at least 1");
+    }
+    if micro % dp != 0 || micro / dp == 0 {
+        bail!("--micro ({micro}) must be a positive multiple of --dp ({dp})");
+    }
+    let m_local = micro / dp;
+    if virtual_stages > 1 && m_local % stages != 0 {
+        bail!(
+            "interleaved schedules need per-replica microbatches \
+             (--micro / --dp = {m_local}) divisible by stages ({stages})"
+        );
+    }
+    Ok(())
+}
+
+/// The `--nodes`/`--hier-comm` placement decision, factored out of
+/// [`train_capture`] and shared with `ppmoe plan`: map the worker grid
+/// onto `nodes` machines and return the per-`(stage, t)` dp-sync split
+/// table — `Some((span, per_node))` entries take the two-level
+/// hierarchical path, `None` entries fall back to flat. With `hier_comm`
+/// a fallback is a startup error instead of a silent choice, so a planner
+/// candidate that emits `--hier-comm` is guaranteed to launch exactly
+/// when this function accepts its geometry.
+pub fn plan_hier_shape(
+    nodes: usize,
+    hier_comm: bool,
+    dp: usize,
+    stages: usize,
+    tpw: usize,
+) -> Result<Vec<Vec<Option<(usize, usize)>>>> {
+    if hier_comm && nodes <= 1 {
+        bail!("--hier-comm needs --nodes >= 2 (got --nodes {nodes})");
+    }
+    if hier_comm && dp < 2 {
+        bail!("--hier-comm needs --dp >= 2 (got --dp {dp})");
+    }
+    let topo = if nodes > 1 {
+        Some(Topology::for_grid(nodes, dp, stages, tpw)?)
+    } else {
+        None
+    };
+    let mut hier_shape: Vec<Vec<Option<(usize, usize)>>> = vec![vec![None; tpw]; stages];
+    if let Some(topo) = &topo {
+        for (stage, per_tp) in hier_shape.iter_mut().enumerate() {
+            for (t, shape) in per_tp.iter_mut().enumerate() {
+                match topo.dp_group_split(dp, stages, tpw, stage, t) {
+                    Some((span, per_node)) if span > 1 => *shape = Some((span, per_node)),
+                    _ if hier_comm => bail!(
+                        "--hier-comm: the dp group at (stage {stage}, tp {t}) does \
+                         not split into equal per-node blocks under --nodes {nodes} \
+                         (dp {dp} x stages {stages} x tp {tpw} workers); adjust \
+                         --nodes or drop --hier-comm to fall back to flat sync"
+                    ),
+                    _ => {}
+                }
+            }
+        }
+    }
+    Ok(hier_shape)
+}
+
 /// [`train`] plus structured failure capture: when the run dies,
 /// `failures_out` receives one [`WorkerFailure`] per dead worker (the
 /// vendored error type has no downcasting, so the supervisor gets its
@@ -622,22 +702,8 @@ pub fn train_capture(cfg: &TrainerCfg, failures_out: &mut Vec<WorkerFailure>) ->
     let aux_coef = manifest.model.aux_coef as f32;
     let m = cfg.num_micro;
     let dp = cfg.dp;
-    if dp == 0 {
-        bail!("--dp must be at least 1");
-    }
-    if cfg.tp == 0 {
-        bail!("--tp must be at least 1");
-    }
-    if m % dp != 0 || m / dp == 0 {
-        bail!("--micro ({m}) must be a positive multiple of --dp ({dp})");
-    }
+    validate_launch_geometry(dp, cfg.tp, m, p, v)?;
     let m_local = m / dp; // microbatches per replica per step
-    if v > 1 && m_local % p != 0 {
-        bail!(
-            "interleaved schedules need per-replica microbatches \
-             (--micro / --dp = {m_local}) divisible by stages ({p})"
-        );
-    }
     if cfg.emulate_dp > 1 {
         if dp != 1 {
             bail!("emulate_dp is a dp = 1 reference mode (got --dp {dp})");
@@ -736,35 +802,7 @@ pub fn train_capture(cfg: &TrainerCfg, failures_out: &mut Vec<WorkerFailure>) ->
     // takes the two-level hierarchical path (bitwise-identical to flat, so
     // this is purely a performance decision). --hier-comm makes a fallback
     // to flat a startup error instead of a silent choice.
-    if cfg.hier_comm && cfg.nodes <= 1 {
-        bail!("--hier-comm needs --nodes >= 2 (got --nodes {})", cfg.nodes);
-    }
-    if cfg.hier_comm && dp < 2 {
-        bail!("--hier-comm needs --dp >= 2 (got --dp {dp})");
-    }
-    let topo = if cfg.nodes > 1 {
-        Some(Topology::for_grid(cfg.nodes, dp, p, tpw)?)
-    } else {
-        None
-    };
-    let mut hier_shape: Vec<Vec<Option<(usize, usize)>>> = vec![vec![None; tpw]; p];
-    if let Some(topo) = &topo {
-        for (stage, per_tp) in hier_shape.iter_mut().enumerate() {
-            for (t, shape) in per_tp.iter_mut().enumerate() {
-                match topo.dp_group_split(dp, p, tpw, stage, t) {
-                    Some((span, per_node)) if span > 1 => *shape = Some((span, per_node)),
-                    _ if cfg.hier_comm => bail!(
-                        "--hier-comm: the dp group at (stage {stage}, tp {t}) does \
-                         not split into equal per-node blocks under --nodes {} \
-                         (dp {dp} x stages {p} x tp {tpw} workers); adjust --nodes \
-                         or drop --hier-comm to fall back to flat sync",
-                        cfg.nodes
-                    ),
-                    _ => {}
-                }
-            }
-        }
-    }
+    let hier_shape = plan_hier_shape(cfg.nodes, cfg.hier_comm, dp, p, tpw)?;
 
     // collectives: one dp gradient group per (stage, tp rank, chunk), one
     // scalar norm group per stage across the dp × tp lanes, and one tp

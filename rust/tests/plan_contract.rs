@@ -1,0 +1,259 @@
+//! Planner contract tests (ISSUE PR 10): the `ppmoe plan` search must
+//! (1) rank exactly as an independent exhaustive simulator sweep does,
+//! (2) only emit configs the trainer's own validation accepts,
+//! (3) never let a candidate through the memory gate over budget, and
+//! (4) stay deterministic down to the golden single-candidate grid.
+
+use std::collections::BTreeMap;
+
+use ppmoe::comm::Topology;
+use ppmoe::config::{self, ParallelCfg, Scheme, TrainCfg};
+use ppmoe::coordinator::{Args, COMMON_FLAGS, TRAIN_FLAGS, TRAIN_OPTIONS};
+use ppmoe::plan::{self, report, PlanCfg};
+use ppmoe::sim::Simulator;
+use ppmoe::trainer;
+use ppmoe::util::prop::forall;
+
+type Key = (usize, usize, usize, usize, usize, usize, bool, bool);
+
+fn small_cfg() -> PlanCfg {
+    let mut m = config::moe_small_setting();
+    m.layers = 8;
+    let mut cfg = PlanCfg::new(m, config::v100_cluster(16), Scheme::PpMoE);
+    cfg.mem_budget_bytes = f64::INFINITY;
+    cfg.global_batch = 64;
+    cfg
+}
+
+/// An independent, deliberately naive re-enumeration of the legal grid:
+/// raw loops and direct `Simulator` calls, no `plan::enumerate` internals.
+/// Returns `key -> (step_seconds, ParallelCfg, TrainCfg, v, hier)`.
+fn exhaustive_sweep(
+    cfg: &PlanCfg,
+) -> BTreeMap<Key, (f64, ParallelCfg, TrainCfg, usize, Option<(usize, usize)>)> {
+    let m = &cfg.model;
+    let c = &cfg.cluster;
+    let mut out = BTreeMap::new();
+    for dp in 1..=c.gpus {
+        if c.gpus % dp != 0 {
+            continue;
+        }
+        for tp in 1..=(c.gpus / dp) {
+            if (c.gpus / dp) % tp != 0 {
+                continue;
+            }
+            let pp = c.gpus / (dp * tp);
+            let p = ParallelCfg { dp, tp, pp, ep: tp, zero: true, scheme: Scheme::PpMoE };
+            if p.validate(m, c).is_err() {
+                continue;
+            }
+            let sim = match Simulator::new(m.clone(), p, c.clone()) {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            for v in [1usize, 2, 4, 8] {
+                if v > 1 && (pp < 2 || (m.layers / pp) % v != 0) {
+                    continue;
+                }
+                for b in [1usize, 2, 4, 8] {
+                    if cfg.global_batch % (b * dp) != 0 {
+                        continue;
+                    }
+                    let num_local = cfg.global_batch / (b * dp);
+                    if v > 1 && num_local % pp != 0 {
+                        continue;
+                    }
+                    let tc = TrainCfg { micro_batch: b, num_micro: num_local };
+                    let world = dp * tp * pp;
+                    let nodes_axis: Vec<usize> = (1..=world)
+                        .filter(|&n| world % n == 0 && world / n <= c.gpus_per_node)
+                        .collect();
+                    let mut variants: Vec<(usize, Option<(usize, usize)>)> = Vec::new();
+                    if let Some(&n0) = nodes_axis.first() {
+                        variants.push((n0, None));
+                    }
+                    for &n in &nodes_axis {
+                        if n > 1 && dp > 1 {
+                            if let Some(h) = Topology::for_grid(n, dp, pp, tp)
+                                .unwrap()
+                                .uniform_dp_split(dp, pp, tp)
+                                .filter(|&(span, _)| span > 1)
+                            {
+                                variants.push((n, Some(h)));
+                            }
+                        }
+                    }
+                    let overlaps: &[bool] = if dp > 1 { &[false, true] } else { &[false] };
+                    for &(nodes, hier) in &variants {
+                        for &overlap in overlaps {
+                            let r = sim.step_virtual_dp_at(tc, v, overlap, hier);
+                            let key = (dp, tp, pp, v, b, nodes, overlap, hier.is_some());
+                            out.insert(key, (r.step_seconds, p, tc, v, hier));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn ranking_matches_exhaustive_sim_sweep() {
+    let cfg = small_cfg();
+    let plan = plan::enumerate(&cfg).unwrap();
+    let sweep = exhaustive_sweep(&cfg);
+    assert!(!sweep.is_empty());
+    assert_eq!(
+        plan.candidates.len(),
+        sweep.len(),
+        "planner and exhaustive sweep disagree on the legal grid"
+    );
+    // same candidates, bitwise-identical scores
+    for cand in &plan.candidates {
+        let (step, ..) = sweep
+            .get(&cand.key())
+            .unwrap_or_else(|| panic!("planner invented candidate {:?}", cand.key()));
+        assert_eq!(
+            cand.result.step_seconds.to_bits(),
+            step.to_bits(),
+            "score mismatch at {:?}",
+            cand.key()
+        );
+    }
+    // the plan's winner is the sweep's argmin, and the whole ranking is
+    // the sweep sorted by (step, key)
+    let mut ranked: Vec<(f64, Key)> = sweep.iter().map(|(k, v)| (v.0, *k)).collect();
+    ranked.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
+    });
+    for (cand, (step, key)) in plan.candidates.iter().zip(&ranked) {
+        assert_eq!(cand.key(), *key);
+        assert_eq!(cand.result.step_seconds.to_bits(), step.to_bits());
+    }
+    assert_eq!(plan.best().unwrap().key(), ranked[0].1);
+}
+
+#[test]
+fn emitted_configs_pass_trainer_validation() {
+    let cfg = small_cfg();
+    let plan = plan::enumerate(&cfg).unwrap();
+    assert!(!plan.candidates.is_empty());
+    let mut flags: Vec<&str> = TRAIN_FLAGS.to_vec();
+    flags.extend_from_slice(COMMON_FLAGS);
+    for cand in &plan.candidates {
+        // the emitter's own gauntlet must pass...
+        let line = report::emit_train_command(cand)
+            .unwrap_or_else(|e| panic!("candidate {:?} failed emit: {e:#}", cand.key()));
+        assert!(line.starts_with("ppmoe train "));
+        // ...and so must a from-scratch replay of the trainer's checks on
+        // the parsed argv, independent of the emitter
+        let parsed = Args::parse(cand.train_args().into_iter());
+        parsed.validate_known("train", TRAIN_OPTIONS, &flags).unwrap();
+        let dp = parsed.get_usize("dp", 1).unwrap();
+        let tp = parsed.get_usize("tp", 1).unwrap();
+        let micro = parsed.get_usize("micro", 0).unwrap();
+        let v = parsed.get_usize("virtual", 1).unwrap();
+        let nodes = parsed.get_usize("nodes", 1).unwrap();
+        trainer::validate_launch_geometry(dp, tp, micro, cand.p.pp, v).unwrap();
+        trainer::plan_hier_shape(nodes, parsed.has_flag("hier-comm"), dp, cand.p.pp, tp)
+            .unwrap();
+        cand.p.validate(&cfg.model, &cfg.cluster).unwrap();
+        assert_eq!(dp, cand.p.dp);
+        assert_eq!(micro, cand.tc.num_micro * cand.p.dp);
+    }
+}
+
+#[test]
+fn memory_gate_never_exceeds_budget() {
+    let cfg = small_cfg();
+    let unlimited = plan::enumerate(&cfg).unwrap();
+    assert!(!unlimited.candidates.is_empty());
+    let totals: Vec<f64> = unlimited.candidates.iter().map(|c| c.mem.total()).collect();
+    let lo = totals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = totals.iter().cloned().fold(0.0, f64::max);
+    let by_key: BTreeMap<Key, f64> =
+        unlimited.candidates.iter().map(|c| (c.key(), c.mem.total())).collect();
+    forall(
+        "plan candidates respect the memory budget",
+        0xB10B,
+        20,
+        |rng| {
+            // budgets spanning below-the-cheapest to above-the-dearest
+            let t = rng.below(1200) as f64 / 1000.0;
+            lo * 0.9 + (hi * 1.1 - lo * 0.9) * t
+        },
+        |&budget| {
+            let mut gated = cfg.clone();
+            gated.mem_budget_bytes = budget;
+            let plan = plan::enumerate(&gated).map_err(|e| format!("{e:#}"))?;
+            if plan.searched != plan.candidates.len() + plan.mem_rejected {
+                return Err("searched != scored + mem_rejected".to_string());
+            }
+            for cand in &plan.candidates {
+                if cand.mem.total() > budget {
+                    return Err(format!(
+                        "candidate {:?} needs {:.2e} B over budget {budget:.2e}",
+                        cand.key(),
+                        cand.mem.total()
+                    ));
+                }
+            }
+            // the gate prunes exactly the over-budget keys, nothing else
+            let kept: Vec<Key> = plan.candidates.iter().map(|c| c.key()).collect();
+            for (key, total) in &by_key {
+                let included = kept.contains(key);
+                if included != (*total <= budget) {
+                    return Err(format!(
+                        "key {key:?} (total {total:.2e}) wrongly \
+                         {} under budget {budget:.2e}",
+                        if included { "kept" } else { "dropped" }
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn golden_single_candidate_grid() {
+    let mut m = config::moe_small_setting();
+    m.layers = 8;
+    let mut cluster = config::v100_cluster(4);
+    cluster.gpus_per_node = 4;
+    let mut cfg = PlanCfg::new(m, cluster, Scheme::PpMoE);
+    cfg.mem_budget_bytes = f64::INFINITY;
+    cfg.global_batch = 32;
+    cfg.pin_dp = Some(1);
+    cfg.pin_tp = Some(4);
+    cfg.pin_virtual = Some(1);
+    cfg.pin_micro_batch = Some(8);
+    cfg.pin_nodes = Some(1);
+    let a = plan::enumerate(&cfg).unwrap();
+    // dp=1 pins the overlap axis to serialized, nodes=1 pins sync to
+    // flat: exactly one grid point survives
+    assert_eq!(a.candidates.len(), 1, "golden grid must have one candidate");
+    let best = a.best().unwrap();
+    assert_eq!(best.key(), (1, 4, 1, 1, 8, 1, false, false));
+    assert_eq!(best.tc.num_micro, 4);
+    assert_eq!(
+        best.train_args(),
+        vec!["--dp", "1", "--tp", "4", "--micro", "4", "--no-dp-overlap"]
+    );
+    assert!(best.result.step_seconds > 0.0);
+    assert!(best.result.tokens_per_sec_per_gpu > 0.0);
+    // tp=4 winner on an MoE model carries the (unexecutable) folded stub
+    let folded = a.folded.as_ref().unwrap();
+    assert_eq!((folded.glue.dp, folded.glue.tp), (4, 1));
+    // byte-for-byte determinism, scores included
+    let b = plan::enumerate(&cfg).unwrap();
+    assert_eq!(
+        a.best().unwrap().result.step_seconds.to_bits(),
+        b.best().unwrap().result.step_seconds.to_bits()
+    );
+    assert_eq!(
+        report::bench_json(&a, &cfg).unwrap().to_string(),
+        report::bench_json(&b, &cfg).unwrap().to_string()
+    );
+}

@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Validate the BENCH_*.json artifacts and emit one combined summary table.
+
+Usage: ci_bench_summary.py BENCH_hotpath.json BENCH_comm.json \
+           BENCH_serve.json BENCH_plan.json
+
+Each file is schema-checked (chosen by basename) and the job summary gets
+a single bench | status | headline table. Any missing or malformed file
+fails the step: before this check, a bench that crashed after `tee` or
+emitted truncated JSON still uploaded a green artifact, and nothing
+downstream noticed until a human opened it.
+
+Stdlib only — the CI runner needs no extra packages for this step.
+"""
+
+import json
+import os
+import sys
+
+STAT_KEYS = ("median_ns", "mean_ns", "p10_ns", "p90_ns", "iters")
+MIX_KEYS = (
+    "requests",
+    "batches",
+    "mean_fill",
+    "p50_us",
+    "p99_us",
+    "mean_us",
+    "tokens_per_sec",
+    "assignments_dropped",
+)
+PLAN_BEST_KEYS = (
+    "dp",
+    "tp",
+    "pp",
+    "virtual",
+    "micro_batch",
+    "num_micro",
+    "nodes",
+    "step_ms",
+    "tokens_per_sec_per_gpu",
+    "mem_gb",
+)
+
+
+def _require(cond, msg):
+    if not cond:
+        raise ValueError(msg)
+
+
+def _check_components(doc, where):
+    comps = doc.get("components")
+    _require(isinstance(comps, dict) and comps, f"{where}: empty 'components'")
+    for name, stats in comps.items():
+        for k in STAT_KEYS:
+            _require(
+                isinstance(stats.get(k), (int, float)),
+                f"{where}: component '{name}' missing numeric '{k}'",
+            )
+    return f"{len(comps)} component rows"
+
+
+def check_hotpath(doc):
+    return _check_components(doc, "hotpath")
+
+
+def check_comm(doc):
+    return _check_components(doc, "comm")
+
+
+def check_serve(doc):
+    mixes = doc.get("mixes")
+    _require(isinstance(mixes, dict) and mixes, "serve: empty 'mixes'")
+    for mix, stats in mixes.items():
+        for k in MIX_KEYS:
+            _require(
+                isinstance(stats.get(k), (int, float)),
+                f"serve: mix '{mix}' missing numeric '{k}'",
+            )
+    _check_components(doc, "serve")
+    oracle = doc.get("oracle")
+    for k in ("tokens", "ppmoe_combine_bytes", "dpmoe_a2a_bytes"):
+        _require(
+            isinstance(oracle, dict) and isinstance(oracle.get(k), (int, float)),
+            f"serve: oracle missing numeric '{k}'",
+        )
+    tps = max(s["tokens_per_sec"] for s in mixes.values())
+    return f"{len(mixes)} mixes, best {tps:.0f} tok/s"
+
+
+def check_plan(doc):
+    cluster = doc.get("cluster")
+    for k in ("gpus", "gpus_per_node", "mem_gb"):
+        _require(
+            isinstance(cluster, dict) and isinstance(cluster.get(k), (int, float)),
+            f"plan: cluster missing numeric '{k}'",
+        )
+    best = doc.get("best")
+    _require(isinstance(best, dict), "plan: missing 'best'")
+    for k in PLAN_BEST_KEYS:
+        _require(
+            isinstance(best.get(k), (int, float)),
+            f"plan: best missing numeric '{k}'",
+        )
+    cands = doc.get("candidates")
+    _require(isinstance(cands, list) and cands, "plan: empty 'candidates'")
+    _require(
+        isinstance(doc.get("searched"), (int, float)) and doc["searched"] > 0,
+        "plan: missing positive 'searched'",
+    )
+    return (
+        f"best dp={best['dp']:.0f} tp={best['tp']:.0f} pp={best['pp']:.0f} "
+        f"at {best['step_ms']:.1f} ms/step ({doc['searched']:.0f} searched)"
+    )
+
+
+CHECKERS = {
+    "BENCH_hotpath.json": check_hotpath,
+    "BENCH_comm.json": check_comm,
+    "BENCH_serve.json": check_serve,
+    "BENCH_plan.json": check_plan,
+}
+
+
+def main(paths):
+    rows = []
+    failed = False
+    for path in paths:
+        name = os.path.basename(path)
+        checker = CHECKERS.get(name)
+        if checker is None:
+            rows.append((name, "FAIL", f"no schema registered for '{name}'"))
+            failed = True
+            continue
+        try:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+            headline = checker(doc)
+            rows.append((name, "ok", headline))
+        except FileNotFoundError:
+            rows.append((name, "FAIL", "file missing — bench did not emit"))
+            failed = True
+        except (ValueError, KeyError, TypeError) as e:
+            rows.append((name, "FAIL", str(e)))
+            failed = True
+
+    out_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    lines = ["## bench artifacts", "| bench | status | headline |", "|---|---|---|"]
+    lines += [f"| {n} | {s} | {h} |" for n, s, h in rows]
+    text = "\n".join(lines) + "\n"
+    if out_path:
+        with open(out_path, "a", encoding="utf-8") as f:
+            f.write(text)
+    print(text, end="")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        print("usage: ci_bench_summary.py BENCH_*.json...", file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# ci_tier_summary.sh <tier-name> <log-file> [seen-regex]
+#
+# Append one "executed vs skipped" block for a CI test tier to the job
+# summary (GITHUB_STEP_SUMMARY; stdout when unset, so it runs locally).
+# Before this script, ci.yml carried four near-identical inline copies of
+# this block — a drift magnet: the chaos copy already counted differently
+# from the other three and appended to the wrong log.
+#
+# Modes:
+#   - default: sum the libtest "N passed" totals in the log
+#     ("tests passed") — right for tiers that run a whole test binary.
+#   - with [seen-regex]: count lines matching the regex
+#     ("tests seen") — right for tiers grepped out of a shared log, like
+#     the chaos tier's fault/elastic test lines.
+#
+# Self-skips are the repo's `SKIP: ...` convention (rust/tests/common):
+# a tier that cannot run (no PJRT backend, no artifacts) prints SKIP
+# lines instead of silently passing; this block makes them visible.
+#
+# set -u only: grep -c exits 1 on zero matches, which is data here, not
+# an error.
+set -u
+
+if [ "$#" -lt 2 ]; then
+  echo "usage: $0 <tier-name> <log-file> [seen-regex]" >&2
+  exit 2
+fi
+
+tier="$1"
+log="$2"
+regex="${3:-}"
+out="${GITHUB_STEP_SUMMARY:-/dev/stdout}"
+
+{
+  echo "## ${tier} tier: executed vs skipped"
+  if [ ! -f "${log}" ]; then
+    echo "- log '${log}' missing — tier did not run"
+  else
+    if [ -n "${regex}" ]; then
+      ran=$(grep -cE "${regex}" "${log}" || true)
+      echo "- ${tier} tests seen: **${ran:-0}**"
+    else
+      ran=$(grep -oE '[0-9]+ passed' "${log}" | awk '{s+=$1} END {print s+0}')
+      echo "- ${tier} tests passed: **${ran:-0}**"
+    fi
+    skips=$(grep -c '^SKIP:' "${log}" || true)
+    echo "- self-skip events: **${skips:-0}**"
+    echo '```'
+    if grep -q '^SKIP:' "${log}"; then
+      grep '^SKIP:' "${log}" | sort | uniq -c
+    else
+      echo "(none)"
+    fi
+    echo '```'
+  fi
+} >> "${out}"
